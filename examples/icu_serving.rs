@@ -1,0 +1,83 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full three-layer system
+//! on a realistic ICU serving workload.
+//!
+//! * Layer 1/2: candidate scans run through the AOT JAX/Pallas kernels
+//!   (`artifacts/*.hlo.txt`) on the PJRT CPU client — Python is NOT
+//!   running; `make artifacts` must have been executed once.
+//! * Layer 3: Rust cluster (ν=2 nodes × p=4 cores) behind the
+//!   Root/Forwarder/Reducer orchestrator.
+//!
+//! Workload: 30k-point AHE-51-5c corpus, 200 sequential ICU queries
+//! (latency-oriented, one in flight). Reports per-query latency
+//! percentiles, comparisons vs PKNN, and prediction MCC vs the exhaustive
+//! baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example icu_serving
+//! ```
+
+use dslsh::coordinator::{build_cluster, ClusterConfig, EngineKind};
+use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
+use dslsh::data::WindowSpec;
+use dslsh::knn::predict::VoteConfig;
+use dslsh::metrics::Confusion;
+use dslsh::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let n = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(30_000);
+    let n_queries = std::env::var("QUERIES").ok().and_then(|v| v.parse().ok()).unwrap_or(600);
+    let (nu, p) = (2, 4);
+
+    println!("== DSLSH ICU serving driver (three-layer AOT path) ==");
+    println!("corpus: AHE-51-5c n={n}, {n_queries} queries; cluster: ν={nu} × p={p}; engine: XLA/PJRT");
+    let corpus = cached_corpus(&WindowSpec::ahe_51_5c(), n, n_queries, 42)?;
+
+    // ~10% MCC-loss operating point (paper's Table 3 configuration).
+    let params = outer_params(&corpus.data, 200, 96, 42, 10);
+    let t_build = std::time::Instant::now();
+    let cluster = build_cluster(
+        &corpus.data,
+        &params,
+        &ClusterConfig::new(nu, p).with_engine(EngineKind::Xla),
+    )?;
+    println!(
+        "cluster built in {:.1}s ({} tables over {} points/node)",
+        t_build.elapsed().as_secs_f64(),
+        params.outer.l,
+        corpus.data.len() / nu
+    );
+
+    // Serve the query stream.
+    let mut latencies_ms = Vec::with_capacity(n_queries);
+    let mut comparisons = Vec::with_capacity(n_queries);
+    let mut confusion = Confusion::new();
+    let t_serve = std::time::Instant::now();
+    for i in 0..corpus.queries.len() {
+        let r = cluster.query(corpus.queries.point(i));
+        latencies_ms.push(r.latency_s * 1e3);
+        comparisons.push(r.max_comparisons as f64);
+        confusion.push(r.prediction, corpus.queries.labels[i]);
+    }
+    let serve_s = t_serve.elapsed().as_secs_f64();
+
+    // Exhaustive baseline for prediction quality + comparison budget.
+    println!("running PKNN baseline...");
+    let pknn = eval_pknn(&corpus.data, &corpus.queries, 10, nu * p, &VoteConfig::default());
+
+    println!();
+    println!("latency  p50 {:.1} ms   p90 {:.1} ms   p99 {:.1} ms   mean {:.1} ms",
+        stats::percentile(&latencies_ms, 0.50),
+        stats::percentile(&latencies_ms, 0.90),
+        stats::percentile(&latencies_ms, 0.99),
+        stats::mean(&latencies_ms));
+    println!("throughput  {:.1} queries/s (sequential — ICU latency model)",
+        corpus.queries.len() as f64 / serve_s);
+    let med = stats::median(&comparisons);
+    let ci = stats::median_ci(&comparisons, 0.95);
+    println!("comparisons  median {med:.0} [{:.0}, {:.0}]  vs PKNN {}  => speedup {:.1}×",
+        ci.lo, ci.hi, pknn.comps_per_proc, pknn.comps_per_proc as f64 / med.max(1.0));
+    println!("prediction  DSLSH MCC {:.3}  vs PKNN MCC {:.3}  (loss {:.3})",
+        confusion.mcc(), pknn.mcc, pknn.mcc - confusion.mcc());
+    println!("confusion  {confusion:?}");
+    Ok(())
+}

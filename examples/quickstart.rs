@@ -1,0 +1,55 @@
+//! Quickstart: build a DSLSH cluster over a small synthetic ABP corpus
+//! and predict Acute Hypotensive Episodes for a handful of queries.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::experiments::outer_params;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: synthetic ABP waveforms -> beat validity -> rolling windows.
+    //    (Stand-in for MIMIC-III; same geometry as the paper's AHE-51-5c.)
+    println!("generating corpus (10k points, 20 out-of-sample queries)...");
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 10_000, 20, 42));
+    println!(
+        "  dataset: n={}  %non-AHE={:.1}%",
+        corpus.data.len(),
+        corpus.data.pct_negative() * 100.0
+    );
+
+    // 2. Index parameters: outer L1 bit-sampling LSH, K=10 weighted voting.
+    let params = outer_params(&corpus.data, 72, 24, 7, 10);
+
+    // 3. Cluster: nu=2 SLSH nodes x p=2 cores, orchestrated by
+    //    Root/Forwarder/Reducer threads.
+    let cluster = build_cluster(&corpus.data, &params, &ClusterConfig::new(2, 2))?;
+    println!(
+        "cluster up: {} nodes x {} cores",
+        cluster.num_nodes(),
+        cluster.node_infos()[0].cores
+    );
+
+    // 4. Queries.
+    let mut correct = 0;
+    for i in 0..corpus.queries.len() {
+        let truth = corpus.queries.labels[i];
+        let r = cluster.query(corpus.queries.point(i));
+        if r.prediction == truth {
+            correct += 1;
+        }
+        println!(
+            "query {i:2}: predicted {}  (truth {}, vote share {:.2}, {} comparisons vs {} exhaustive, {:.1} ms)",
+            if r.prediction { "AHE " } else { "no-AHE" },
+            if truth { "AHE " } else { "no-AHE" },
+            r.positive_share,
+            r.max_comparisons,
+            corpus.data.len() / cluster.total_processors(),
+            r.latency_s * 1e3,
+        );
+    }
+    println!("accuracy: {correct}/{} (class imbalance makes MCC the real metric — see the exp benches)", corpus.queries.len());
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Strong-scaling demo: watch the paper's speed metric (max comparisons
+//! per processor) fall as nodes are added, while predictions stay put.
+//!
+//! A miniature of Tables 2/3; run the `table2_scaling`/`table3_scaling`
+//! benches for the full reproduction.
+//!
+//! ```bash
+//! cargo run --release --example scaling_demo
+//! ```
+
+use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::data::WindowSpec;
+use dslsh::experiments::report::Table;
+use dslsh::experiments::{cached_corpus, eval_cluster, outer_params};
+
+fn main() -> anyhow::Result<()> {
+    let corpus = cached_corpus(&WindowSpec::ahe_51_5c(), 24_000, 80, 42)?;
+    let params = outer_params(&corpus.data, 100, 48, 9, 10);
+    let p = 4;
+
+    let mut table = Table::new(
+        format!("Strong scaling demo — n = {}, p = {p}", corpus.data.len()),
+        &["ν", "pν", "median max-comps", "S_base", "PKNN n/(pν)", "ratio", "MCC"],
+    );
+    let mut base: Option<f64> = None;
+    for nu in [1usize, 2, 3, 4, 5] {
+        let cluster = build_cluster(&corpus.data, &params, &ClusterConfig::new(nu, p))?;
+        let run = eval_cluster(&cluster, &corpus);
+        let procs = nu * p;
+        let pknn = (corpus.data.len() as f64 / procs as f64).ceil();
+        let s = match base {
+            None => {
+                base = Some(run.median_comps);
+                1.0
+            }
+            Some(b) => b / run.median_comps.max(1.0),
+        };
+        table.row(vec![
+            nu.to_string(),
+            procs.to_string(),
+            format!("{:.0}", run.median_comps),
+            format!("{s:.2}"),
+            format!("{pknn:.0}"),
+            format!("{:.1}", pknn / run.median_comps.max(1.0)),
+            format!("{:.3}", run.mcc),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(near-linear S_base and constant MCC = the paper's §4.2 claim)");
+    Ok(())
+}

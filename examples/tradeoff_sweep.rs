@@ -1,0 +1,55 @@
+//! Speed-vs-quality sweep (miniature Figure 3/4): how (m, L) and the
+//! stratified inner layer move the comparisons/MCC trade-off.
+//!
+//! ```bash
+//! cargo run --release --example tradeoff_sweep
+//! ```
+
+use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::data::WindowSpec;
+use dslsh::experiments::report::Table;
+use dslsh::experiments::{cached_corpus, eval_cluster, eval_pknn, outer_params};
+use dslsh::knn::predict::VoteConfig;
+use dslsh::slsh::InnerParams;
+
+fn main() -> anyhow::Result<()> {
+    let corpus = cached_corpus(&WindowSpec::ahe_301_30c(), 20_000, 80, 42)?;
+    let cfg = ClusterConfig::new(2, 2);
+    let pknn = eval_pknn(&corpus.data, &corpus.queries, 10, 4, &VoteConfig::default());
+    println!("PKNN: {} comparisons/processor, MCC = {:.3}\n", pknn.comps_per_proc, pknn.mcc);
+
+    let mut table = Table::new(
+        "Trade-off sweep (mini Fig 3/4)",
+        &["config", "median comps", "speedup", "MCC", "MCC loss"],
+    );
+    // Outer sweep: more bits (m) => fewer candidates, lower MCC;
+    // more tables (L) => the reverse.
+    for (m, l) in [(60usize, 24usize), (90, 24), (120, 24), (90, 48), (90, 96)] {
+        let params = outer_params(&corpus.data, m, l, 7, 10);
+        let cluster = build_cluster(&corpus.data, &params, &cfg)?;
+        let run = eval_cluster(&cluster, &corpus);
+        table.row(vec![
+            format!("LSH m={m} L={l}"),
+            format!("{:.0}", run.median_comps),
+            format!("{:.1}", pknn.comps_per_proc as f64 / run.median_comps.max(1.0)),
+            format!("{:.3}", run.mcc),
+            format!("{:.3}", pknn.mcc - run.mcc),
+        ]);
+    }
+    // Stratified inner layer on the coarsest outer point.
+    for (m_in, l_in) in [(40usize, 20usize), (90, 20)] {
+        let mut params = outer_params(&corpus.data, 60, 24, 7, 10);
+        params.inner = Some(InnerParams { m: m_in, l: l_in, alpha: 0.01, seed: 99 });
+        let cluster = build_cluster(&corpus.data, &params, &cfg)?;
+        let run = eval_cluster(&cluster, &corpus);
+        table.row(vec![
+            format!("SLSH m_in={m_in} L_in={l_in} (outer 60/24)"),
+            format!("{:.0}", run.median_comps),
+            format!("{:.1}", pknn.comps_per_proc as f64 / run.median_comps.max(1.0)),
+            format!("{:.3}", run.mcc),
+            format!("{:.3}", pknn.mcc - run.mcc),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

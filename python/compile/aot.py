@@ -1,0 +1,88 @@
+"""AOT lowering: JAX/Pallas graphs -> artifacts/*.hlo.txt + manifest.json.
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+`artifacts` target). Python runs ONCE here; the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default hash-artifact configuration: the paper's SLSH onset
+# (m_out = 125, L_out = 120). Other configs fall back to native hashing.
+ONSET_L, ONSET_M = 120, 125
+DIM = 30
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jitted function to XLA HLO text via stablehlo."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_catalog(dim=DIM, bq=1, ladder=model.BATCH_LADDER):
+    """All artifacts to emit: name -> (fn, example_args, meta)."""
+    catalog = {}
+    for bc in ladder:
+        fn, args = model.make_l1_scan(bq, bc, dim)
+        catalog[f"l1_scan_b{bc}"] = (fn, args, {"kind": "l1_scan", "bq": bq, "bc": bc, "d": dim})
+        fn, args = model.make_cosine_scan(bq, bc, dim)
+        catalog[f"cosine_scan_b{bc}"] = (
+            fn,
+            args,
+            {"kind": "cosine_scan", "bq": bq, "bc": bc, "d": dim},
+        )
+    fn, args = model.make_hash_outer(ONSET_L, ONSET_M, dim)
+    catalog[f"hash_outer_l{ONSET_L}_m{ONSET_M}"] = (
+        fn,
+        args,
+        {"kind": "hash_outer", "l": ONSET_L, "m": ONSET_M, "d": dim},
+    )
+    return catalog
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dim", type=int, default=DIM)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"dim": args.dim, "bq": 1, "artifacts": {}}
+    catalog = build_catalog(dim=args.dim)
+    for name, (fn, example_args, meta) in catalog.items():
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = f"{name}.hlo.txt"
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        meta["bytes"] = len(text)
+        manifest["artifacts"][name] = meta
+        print(f"  {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(catalog)} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

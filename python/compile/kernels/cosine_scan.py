@@ -1,0 +1,68 @@
+"""Pallas kernel: batched cosine-distance candidate scan.
+
+Companion to l1_scan.py for the inner (cosine) metric — same tiling
+scheme, but the per-tile math is a dot product against the resident query
+block plus row-norm normalization, i.e. an MXU-shaped (bq × d) @ (d × blk)
+contraction on real TPU hardware.
+
+Zero-norm rows (all-zero padding or degenerate points) are defined to be
+at distance 1, matching the Rust native engine and ref.py; the mask then
+overrides padding rows to PAD_DIST.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PAD_DIST
+
+BLOCK_C = 128
+_EPS = 1e-12
+
+
+def _cosine_kernel(q_ref, c_ref, mask_ref, o_ref):
+    q = q_ref[...]  # (bq, d)
+    c = c_ref[...]  # (blk, d)
+    mask = mask_ref[...]  # (blk,)
+    dot = q @ c.T  # (bq, blk) — MXU contraction on TPU
+    qn = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))  # (bq, 1)
+    cn = jnp.sqrt(jnp.sum(c * c, axis=-1))[None, :]  # (1, blk)
+    denom = qn * cn
+    cos = jnp.where(denom > _EPS, dot / jnp.maximum(denom, _EPS), 0.0)
+    dist = 1.0 - cos
+    o_ref[...] = dist * mask[None, :] + (1.0 - mask[None, :]) * PAD_DIST
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def cosine_scan(q, c, mask, *, block_c=BLOCK_C):
+    """Cosine distances (bq, bc); bc must be a multiple of block_c."""
+    bq, d = q.shape
+    bc, d2 = c.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert bc % block_c == 0, f"bc={bc} not a multiple of {block_c}"
+    grid = (bc // block_c,)
+    return pl.pallas_call(
+        _cosine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_c, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, block_c), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bq, bc), jnp.float32),
+        interpret=True,
+    )(q, c, mask)
+
+
+def cosine_scan_whole(q, c, mask):
+    """Single-tile variant for arbitrary shapes (hypothesis sweep)."""
+    bq, _ = q.shape
+    bc, _ = c.shape
+    return pl.pallas_call(
+        _cosine_kernel,
+        out_shape=jax.ShapeDtypeStruct((bq, bc), jnp.float32),
+        interpret=True,
+    )(q, c, mask)

@@ -1,0 +1,53 @@
+"""Pallas kernel: query hashing for all L outer tables in one shot.
+
+Bit-sampling (Gionis et al.) evaluates, for each of the L·m sampled
+(coordinate, threshold) pairs, the predicate x[coord] >= threshold. The
+kernel receives the point broadcast-gathered by coordinate (model.py does
+the gather with jnp.take inside the same jitted graph, so it fuses into
+this HLO module) and emits the L×m bit matrix; the Rust side packs bits
+into table keys.
+
+The tiny arithmetic intensity makes this VPU work; it exists to move the
+*entire* per-query hash computation into one AOT artifact so the request
+path stays Python-free while exercising a second kernel shape.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_kernel(gathered_ref, thr_ref, o_ref):
+    o_ref[...] = (gathered_ref[...] >= thr_ref[...]).astype(jnp.float32)
+
+
+def threshold_bits(gathered, thresholds):
+    """(L, m) bits = gathered >= thresholds, as float32 {0,1}."""
+    return pl.pallas_call(
+        _hash_kernel,
+        out_shape=jax.ShapeDtypeStruct(gathered.shape, jnp.float32),
+        interpret=True,
+    )(gathered, thresholds)
+
+
+def _proj_kernel(x_ref, dirs_ref, o_ref):
+    x = x_ref[...]  # (d,)
+    dirs = dirs_ref[...][0]  # block (1, m, d) -> (m, d): one table
+    dots = dirs @ x  # (m,)
+    o_ref[...] = (dots >= 0.0).astype(jnp.float32)[None, :]
+
+
+def projection_bits(x, dirs):
+    """(L, m) sign-projection bits; dirs is (L, m, d), gridded over L."""
+    l, m, d = dirs.shape
+    return pl.pallas_call(
+        _proj_kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, m, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m), jnp.float32),
+        interpret=True,
+    )(x, dirs)

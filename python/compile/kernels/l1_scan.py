@@ -1,0 +1,80 @@
+"""Pallas kernel: batched L1 candidate scan (the paper's hot spot).
+
+"For large datasets, the linear search over the candidates is the
+bottleneck for LSH" (paper §2) — this kernel is that linear search: L1
+distances from a (small) block of queries to a tile of gathered candidate
+rows, with a padding mask.
+
+TPU-style structure (DESIGN.md §Hardware-Adaptation):
+  * the query block (bq × d) stays resident in VMEM across the whole grid;
+  * candidates stream through VMEM in (BLOCK_C × d) tiles via BlockSpec —
+    the HBM→VMEM pipeline a CUDA implementation would express with
+    threadblocks;
+  * d is padded to 32 (= 4 VPU sublanes of 8) by the caller (model.py), so
+    the reduction axis vectorizes cleanly; padding coordinates are zero in
+    both operands and cancel in |q - c|;
+  * the mask is applied in-register — no separate pass over the output.
+
+MUST be lowered with ``interpret=True``: this image runs the CPU PJRT
+plugin, which cannot execute Mosaic custom-calls (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PAD_DIST
+
+# Candidate rows per VMEM tile. 128 rows × 32 f32 = 16 KiB per tile —
+# with double buffering and the output tile this stays ≪ 1 MiB of VMEM.
+BLOCK_C = 128
+
+
+def _l1_kernel(q_ref, c_ref, mask_ref, o_ref):
+    """One grid step: distances from all queries to one candidate tile."""
+    q = q_ref[...]  # (bq, d)   resident
+    c = c_ref[...]  # (blk, d)  streamed
+    mask = mask_ref[...]  # (blk,)
+    # |q - c| summed over d: (bq, 1, d) - (1, blk, d) -> (bq, blk).
+    dist = jnp.sum(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+    o_ref[...] = dist * mask[None, :] + (1.0 - mask[None, :]) * PAD_DIST
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def l1_scan(q, c, mask, *, block_c=BLOCK_C):
+    """L1 distances (bq, bc) between queries and masked candidates.
+
+    ``bc`` must be a multiple of ``block_c`` (model.py guarantees this by
+    construction of the artifact batch ladder).
+    """
+    bq, d = q.shape
+    bc, d2 = c.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert bc % block_c == 0, f"bc={bc} not a multiple of {block_c}"
+    grid = (bc // block_c,)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (0, 0)),  # query: resident
+            pl.BlockSpec((block_c, d), lambda i: (i, 0)),  # candidates: streamed
+            pl.BlockSpec((block_c,), lambda i: (i,)),  # mask
+        ],
+        out_specs=pl.BlockSpec((bq, block_c), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bq, bc), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, c, mask)
+
+
+def l1_scan_whole(q, c, mask):
+    """Single-tile variant (grid=1) accepting any (bq, bc, d) — used by the
+    hypothesis sweep to exercise odd shapes."""
+    bq, _ = q.shape
+    bc, _ = c.shape
+    return pl.pallas_call(
+        _l1_kernel,
+        out_shape=jax.ShapeDtypeStruct((bq, bc), jnp.float32),
+        interpret=True,
+    )(q, c, mask)

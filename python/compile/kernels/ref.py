@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis) and double as readable specifications. Padding semantics:
+``mask[i] == 0`` marks candidate row ``i`` as padding; its distance is
+forced to ``PAD_DIST`` so the Rust top-K reducer can never select it.
+"""
+
+import jax.numpy as jnp
+
+# Distance assigned to padding rows — far beyond any real L1 distance on
+# physiological data (max possible: 30 coords * ~160 mmHg = 4.8e3) and any
+# cosine distance (max 2).
+PAD_DIST = 1e9
+
+
+def l1_scan_ref(q, c, mask):
+    """L1 distances between each query row and each candidate row.
+
+    Args:
+      q: (bq, d) float32 queries.
+      c: (bc, d) float32 candidates.
+      mask: (bc,) float32, 1.0 = real candidate, 0.0 = padding.
+
+    Returns:
+      (bq, bc) float32 distances, PAD_DIST where mask == 0.
+    """
+    d = jnp.sum(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+    return d * mask[None, :] + (1.0 - mask[None, :]) * PAD_DIST
+
+
+def cosine_scan_ref(q, c, mask, eps=1e-12):
+    """Cosine distances (1 - cos) with zero-norm rows at distance 1."""
+    qn = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))  # (bq, 1)
+    cn = jnp.sqrt(jnp.sum(c * c, axis=-1, keepdims=True))  # (bc, 1)
+    dot = q @ c.T  # (bq, bc)
+    denom = qn * cn.T
+    cos = jnp.where(denom > eps, dot / jnp.maximum(denom, eps), 0.0)
+    dist = 1.0 - cos
+    return dist * mask[None, :] + (1.0 - mask[None, :]) * PAD_DIST
+
+
+def hash_bits_ref(x, coords, thresholds):
+    """Bit-sampling hash bits for the outer L1 layer.
+
+    Args:
+      x: (d,) float32 point.
+      coords: (L, m) int32 sampled coordinates.
+      thresholds: (L, m) float32 sampled thresholds.
+
+    Returns:
+      (L, m) float32 in {0, 1}: x[coords] >= thresholds.
+    """
+    gathered = jnp.take(x, coords, axis=0)
+    return (gathered >= thresholds).astype(jnp.float32)
+
+
+def projection_bits_ref(x, dirs):
+    """Sign-random-projection bits for the inner cosine layer.
+
+    Args:
+      x: (d,) float32 point.
+      dirs: (L, m, d) float32 Gaussian directions.
+
+    Returns:
+      (L, m) float32 in {0, 1}: sign(dirs @ x) >= 0.
+    """
+    dots = jnp.einsum("lmd,d->lm", dirs, x)
+    return (dots >= 0.0).astype(jnp.float32)

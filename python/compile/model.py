@@ -1,0 +1,85 @@
+"""Layer 2: the JAX compute graphs DSLSH ships as AOT artifacts.
+
+Each public ``make_*`` returns a jit-able function over fixed example
+shapes; aot.py lowers them once to HLO text which the Rust runtime loads
+via PJRT. Python never runs on the request path.
+
+Design notes:
+  * Points are d=30; graphs pad the feature axis to D_PAD=32 *inside* the
+    traced function (zero padding cancels in both metrics), so the wire
+    interface keeps the paper's natural shape.
+  * Candidate batches come in a fixed ladder of sizes (one compiled
+    executable per size); the Rust engine pads the last tile with
+    mask=0 rows which the kernels force to PAD_DIST.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cosine_scan import cosine_scan
+from .kernels.hash_bits import threshold_bits
+from .kernels.l1_scan import l1_scan
+
+# Feature padding target: 32 f32 = one 128-byte VPU-friendly row.
+D_PAD = 32
+
+# Candidate-batch ladder. Multiples of the kernels' BLOCK_C=128. Perf pass
+# (EXPERIMENTS.md §Perf): the original (256, 2048, 16384) ladder hit a
+# pathological 58 ms/call on the 16384-row executable (interpret-mode
+# Pallas grid overhead scales with tile count); capping at 2048 and
+# chunking larger scans cut large-batch cost ~20x.
+BATCH_LADDER = (256, 1024, 2048)
+
+
+def _pad_d(x):
+    """Zero-pad the trailing feature axis to D_PAD."""
+    d = x.shape[-1]
+    if d == D_PAD:
+        return x
+    assert d < D_PAD, f"d={d} exceeds D_PAD={D_PAD}"
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, D_PAD - d)]
+    return jnp.pad(x, widths)
+
+
+def make_l1_scan(bq, bc, d):
+    """(q (bq,d), c (bc,d), mask (bc,)) -> (bq, bc) L1 distances."""
+
+    def fn(q, c, mask):
+        return (l1_scan(_pad_d(q), _pad_d(c), mask),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((bq, d), jnp.float32),
+        jax.ShapeDtypeStruct((bc, d), jnp.float32),
+        jax.ShapeDtypeStruct((bc,), jnp.float32),
+    )
+
+
+def make_cosine_scan(bq, bc, d):
+    """(q (bq,d), c (bc,d), mask (bc,)) -> (bq, bc) cosine distances."""
+
+    def fn(q, c, mask):
+        return (cosine_scan(_pad_d(q), _pad_d(c), mask),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((bq, d), jnp.float32),
+        jax.ShapeDtypeStruct((bc, d), jnp.float32),
+        jax.ShapeDtypeStruct((bc,), jnp.float32),
+    )
+
+
+def make_hash_outer(l, m, d):
+    """(x (d,), coords (l,m) i32, thr (l,m)) -> (l, m) f32 bits.
+
+    The gather (jnp.take) fuses into the same HLO module as the Pallas
+    threshold kernel — one artifact per (L, m) configuration.
+    """
+
+    def fn(x, coords, thr):
+        gathered = jnp.take(x, coords, axis=0)  # (l, m)
+        return (threshold_bits(gathered, thr),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((l, m), jnp.int32),
+        jax.ShapeDtypeStruct((l, m), jnp.float32),
+    )

@@ -1,0 +1,162 @@
+"""Kernel-vs-oracle correctness: the CORE signal for Layer 1.
+
+Hypothesis sweeps shapes and values; every Pallas kernel (interpret mode)
+must match the pure-jnp reference to float32 tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.cosine_scan import cosine_scan, cosine_scan_whole
+from compile.kernels.hash_bits import projection_bits, threshold_bits
+from compile.kernels.l1_scan import l1_scan, l1_scan_whole
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# Shape/value sweeps (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bq=st.integers(1, 4),
+    bc=st.integers(1, 64),
+    d=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+    pad_frac=st.floats(0.0, 0.9),
+)
+def test_l1_whole_matches_ref(bq, bc, d, seed, pad_frac):
+    r = rng(seed)
+    q = r.uniform(20, 180, size=(bq, d)).astype(np.float32)
+    c = r.uniform(20, 180, size=(bc, d)).astype(np.float32)
+    mask = (r.uniform(size=bc) >= pad_frac).astype(np.float32)
+    got = np.asarray(l1_scan_whole(q, c, mask))
+    want = np.asarray(ref.l1_scan_ref(q, c, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@given(
+    bq=st.integers(1, 3),
+    bc=st.integers(1, 48),
+    d=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cosine_whole_matches_ref(bq, bc, d, seed):
+    r = rng(seed)
+    q = r.normal(size=(bq, d)).astype(np.float32)
+    c = r.normal(size=(bc, d)).astype(np.float32)
+    mask = np.ones(bc, dtype=np.float32)
+    got = np.asarray(cosine_scan_whole(q, c, mask))
+    want = np.asarray(ref.cosine_scan_ref(q, c, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    l=st.integers(1, 16),
+    m=st.integers(1, 64),
+    d=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hash_bits_match_ref(l, m, d, seed):
+    r = rng(seed)
+    x = r.uniform(0, 100, size=(d,)).astype(np.float32)
+    coords = r.integers(0, d, size=(l, m)).astype(np.int32)
+    thr = r.uniform(0, 100, size=(l, m)).astype(np.float32)
+    gathered = np.take(x, coords)
+    got = np.asarray(threshold_bits(gathered, thr))
+    want = np.asarray(ref.hash_bits_ref(x, coords, thr))
+    np.testing.assert_array_equal(got, want)
+    assert set(np.unique(got)).issubset({0.0, 1.0})
+
+
+@given(
+    l=st.integers(1, 6),
+    m=st.integers(1, 32),
+    d=st.integers(2, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_projection_bits_match_ref(l, m, d, seed):
+    r = rng(seed)
+    x = r.normal(size=(d,)).astype(np.float32)
+    dirs = r.normal(size=(l, m, d)).astype(np.float32)
+    got = np.asarray(projection_bits(x, dirs))
+    want = np.asarray(ref.projection_bits_ref(x, dirs))
+    # Sign boundaries can flip under f32 reassociation; allow a tiny
+    # disagreement rate only where |dot| is below tolerance.
+    dots = np.einsum("lmd,d->lm", dirs, x)
+    decided = np.abs(dots) > 1e-4
+    np.testing.assert_array_equal(got[decided], want[decided])
+
+
+# ---------------------------------------------------------------------------
+# Tiled (production BlockSpec) kernels vs whole-array variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bc", [128, 256, 512])
+@pytest.mark.parametrize("bq", [1, 4])
+def test_l1_tiled_equals_whole(bc, bq):
+    r = rng(bc * 7 + bq)
+    d = 32
+    q = r.uniform(20, 180, size=(bq, d)).astype(np.float32)
+    c = r.uniform(20, 180, size=(bc, d)).astype(np.float32)
+    mask = np.ones(bc, dtype=np.float32)
+    mask[-5:] = 0.0
+    tiled = np.asarray(l1_scan(q, c, mask))
+    whole = np.asarray(l1_scan_whole(q, c, mask))
+    np.testing.assert_allclose(tiled, whole, rtol=1e-6, atol=1e-3)
+
+
+@pytest.mark.parametrize("bc", [128, 384])
+def test_cosine_tiled_equals_whole(bc):
+    r = rng(bc)
+    d = 32
+    q = r.normal(size=(1, d)).astype(np.float32)
+    c = r.normal(size=(bc, d)).astype(np.float32)
+    mask = np.ones(bc, dtype=np.float32)
+    tiled = np.asarray(cosine_scan(q, c, mask))
+    whole = np.asarray(cosine_scan_whole(q, c, mask))
+    np.testing.assert_allclose(tiled, whole, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Semantics pinned by the Rust side
+# ---------------------------------------------------------------------------
+
+
+def test_padding_rows_get_pad_dist():
+    q = np.zeros((1, 30), dtype=np.float32)
+    c = np.zeros((4, 30), dtype=np.float32)
+    mask = np.array([1, 0, 1, 0], dtype=np.float32)
+    out = np.asarray(l1_scan_whole(q, c, mask))[0]
+    assert out[0] == 0.0 and out[2] == 0.0
+    assert out[1] == ref.PAD_DIST and out[3] == ref.PAD_DIST
+
+
+def test_cosine_zero_norm_is_distance_one():
+    q = np.ones((1, 8), dtype=np.float32)
+    c = np.zeros((2, 8), dtype=np.float32)
+    mask = np.ones(2, dtype=np.float32)
+    out = np.asarray(cosine_scan_whole(q, c, mask))[0]
+    np.testing.assert_allclose(out, [1.0, 1.0], atol=1e-6)
+
+
+def test_l1_identity_is_zero():
+    r = rng(1)
+    x = r.uniform(size=(1, 30)).astype(np.float32)
+    out = np.asarray(l1_scan_whole(x, x, np.ones(1, dtype=np.float32)))
+    np.testing.assert_allclose(out, [[0.0]], atol=1e-6)

@@ -1,0 +1,70 @@
+//! §Perf ablation: native Rust scan vs the AOT JAX/Pallas (XLA/PJRT)
+//! scan across candidate batch sizes — wall-clock per scan, per-candidate
+//! cost, and PJRT call overhead. This is the data behind the batch-ladder
+//! choice in python/compile/model.py.
+//!
+//! Not a paper table; recorded in EXPERIMENTS.md §Perf.
+
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{DistanceEngine, Metric};
+use dslsh::experiments::report::Table;
+use dslsh::knn::TopK;
+use dslsh::runtime::XlaService;
+use dslsh::util::rng::Xoshiro256;
+use dslsh::util::stats;
+
+fn bench_engine(
+    engine: &dyn DistanceEngine,
+    data: &[f32],
+    labels: &[bool],
+    q: &[f32],
+    ids: &[u32],
+    reps: usize,
+) -> (f64, f64) {
+    // Warmup.
+    let mut topk = TopK::new(10);
+    engine.scan(Metric::L1, q, data, 30, ids, labels, 0, &mut topk);
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let mut topk = TopK::new(10);
+        let t0 = std::time::Instant::now();
+        engine.scan(Metric::L1, q, data, 30, ids, labels, 0, &mut topk);
+        times.push(t0.elapsed().as_secs_f64() * 1e6); // µs
+    }
+    let med = stats::median(&times);
+    (med, med / ids.len() as f64 * 1e3) // (µs/scan, ns/candidate)
+}
+
+fn main() {
+    let n = 200_000;
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let data: Vec<f32> = (0..n * 30).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.05)).collect();
+    let q: Vec<f32> = (0..30).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+
+    let native = NativeEngine::new();
+    let xla_service = XlaService::start().expect("run `make artifacts` first");
+    let xla = xla_service.engine();
+
+    let mut table = Table::new(
+        "Engine ablation — candidate scan cost (median)",
+        &["batch", "native µs", "native ns/cand", "xla µs", "xla ns/cand", "xla/native"],
+    );
+    for &batch in &[64usize, 256, 1024, 2048, 8192, 16384, 50000] {
+        let ids: Vec<u32> = (0..batch).map(|_| rng.gen_below(n as u64) as u32).collect();
+        let reps = (200_000 / batch).clamp(5, 400);
+        let (nat_us, nat_ns) = bench_engine(&native, &data, &labels, &q, &ids, reps);
+        let (xla_us, xla_ns) = bench_engine(&xla, &data, &labels, &q, &ids, reps);
+        table.row(vec![
+            batch.to_string(),
+            format!("{nat_us:.1}"),
+            format!("{nat_ns:.2}"),
+            format!("{xla_us:.1}"),
+            format!("{xla_ns:.2}"),
+            format!("{:.1}x", xla_us / nat_us),
+        ]);
+    }
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "engine_ablation").expect("saving");
+    println!("[engine_ablation] -> results/engine_ablation.csv");
+}

@@ -1,0 +1,16 @@
+//! Regenerates **Figure 3** (speedup vs MCC loss, outer LSH grid
+//! m_out x L_out on AHE-301-30c, p=8 nu=2). DSLSH_BENCH_SCALE to resize.
+
+use dslsh::experiments::harness::{seed_from_env, Scale};
+use dslsh::experiments::tradeoff::{run_fig3, TradeoffOptions};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = TradeoffOptions::paper_defaults(Scale::from_env(), seed_from_env());
+    let r = run_fig3(&opts).expect("fig3 failed");
+    println!("{}", r.scatter);
+    println!("PKNN: {} comps/proc, MCC = {:.3}", r.pknn_comps, r.pknn_mcc);
+    println!("{}", r.table.render());
+    r.table.save(std::path::Path::new("results"), "fig3").expect("saving results");
+    println!("[fig3_tradeoff] done in {:.1}s -> results/fig3.csv", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Regenerates **Figure 4** (SLSH inner layer at the onset m_out=125,
+//! L_out=120: m_in x L_in grid, alpha=0.005). DSLSH_BENCH_SCALE to resize.
+
+use dslsh::experiments::harness::{seed_from_env, Scale};
+use dslsh::experiments::tradeoff::{run_fig4, TradeoffOptions};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = TradeoffOptions::paper_defaults(Scale::from_env(), seed_from_env());
+    let r = run_fig4(&opts).expect("fig4 failed");
+    println!("{}", r.scatter);
+    println!("PKNN: {} comps/proc, MCC = {:.3}", r.pknn_comps, r.pknn_mcc);
+    println!("{}", r.table.render());
+    r.table.save(std::path::Path::new("results"), "fig4").expect("saving results");
+    println!("[fig4_slsh] done in {:.1}s -> results/fig4.csv", t0.elapsed().as_secs_f64());
+}

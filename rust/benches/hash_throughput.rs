@@ -1,0 +1,62 @@
+//! §Perf: hashing throughput — the table-construction cost driver.
+//!
+//! Measures composed-hash evaluation (bit-sampling L1 and random-
+//! projection cosine) and end-to-end table build rates at the paper's
+//! parameters (m_out = 125, L_out = 120). Recorded in EXPERIMENTS.md §Perf.
+
+use dslsh::experiments::report::Table;
+use dslsh::lsh::family::{ComposedHash, LayerSpec};
+use dslsh::lsh::layer::{LshLayer, SliceView};
+use dslsh::util::rng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let dim = 30;
+    let n = 50_000;
+    let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let view = SliceView { data: &data, dim };
+
+    let mut table = Table::new(
+        "Hash throughput (m = bits/key)",
+        &["family", "m", "keys/s (M)", "bits/s (M)"],
+    );
+    for (name, spec) in [
+        ("bit-sampling L1", LayerSpec::outer_l1(dim, 125, 1, 20.0, 180.0, 1)),
+        ("bit-sampling L1", LayerSpec::outer_l1(dim, 200, 1, 20.0, 180.0, 1)),
+        ("random-proj cos", LayerSpec::inner_cosine(dim, 65, 1, 2)),
+        ("random-proj cos", LayerSpec::inner_cosine(dim, 115, 1, 2)),
+    ] {
+        let h = spec.instantiate(0);
+        // Warmup + measure.
+        let mut sink = 0u64;
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            sink ^= h.hash(&data[i * dim..(i + 1) * dim]).digest();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(sink);
+        table.row(vec![
+            name.to_string(),
+            spec.m.to_string(),
+            format!("{:.2}", n as f64 / dt / 1e6),
+            format!("{:.1}", (n * spec.m) as f64 / dt / 1e6),
+        ]);
+    }
+
+    // End-to-end single-table build rate at paper parameters.
+    let spec = LayerSpec::outer_l1(dim, 125, 120, 20.0, 180.0, 7);
+    let t0 = std::time::Instant::now();
+    let layer = LshLayer::build(&spec, &view, &[0, 1]);
+    let dt = t0.elapsed().as_secs_f64();
+    table.row(vec![
+        "table build (m=125)".into(),
+        "125".into(),
+        format!("{:.2}", (2 * n) as f64 / dt / 1e6),
+        format!("{:.1}", (2 * n * 125) as f64 / dt / 1e6),
+    ]);
+    std::hint::black_box(layer.num_entries());
+
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "hash_throughput").expect("saving");
+    println!("[hash_throughput] -> results/hash_throughput.csv");
+}

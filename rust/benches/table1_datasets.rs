@@ -1,0 +1,15 @@
+//! Regenerates **Table 1** (employed ABP datasets): dataset sizes and
+//! class imbalance from the rolling-window pipeline vs the paper's values.
+//! Scale via DSLSH_BENCH_SCALE=smoke|default|full.
+
+use dslsh::experiments::harness::{seed_from_env, Scale};
+use dslsh::experiments::table1::{run, Table1Options};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = run(&Table1Options { scale: Scale::from_env(), seed: seed_from_env() })
+        .expect("table1 failed");
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "table1").expect("saving results");
+    println!("[table1_datasets] done in {:.1}s -> results/table1.csv", t0.elapsed().as_secs_f64());
+}

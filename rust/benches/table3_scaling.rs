@@ -1,0 +1,15 @@
+//! Regenerates **Table 3** (strong scaling on AHE-51-5c, p=8,
+//! pv in {8..40}, ~10% tolerated MCC loss). DSLSH_BENCH_SCALE to resize.
+
+use dslsh::experiments::harness::{seed_from_env, Scale};
+use dslsh::experiments::scaling::{run, ScalingOptions, ScalingTable};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ScalingOptions::for_table(ScalingTable::Table3, Scale::from_env(), seed_from_env());
+    let r = run(ScalingTable::Table3, &opts).expect("table3 failed");
+    println!("PKNN MCC = {:.3}", r.pknn_mcc);
+    println!("{}", r.table.render());
+    r.table.save(std::path::Path::new("results"), "table3").expect("saving results");
+    println!("[table3_scaling] done in {:.1}s -> results/table3.csv", t0.elapsed().as_secs_f64());
+}

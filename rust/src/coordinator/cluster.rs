@@ -1,0 +1,192 @@
+//! Cluster assembly — the Root's construction duties (paper §3): assign
+//! each node its O(n/ν) shard of the dataset and broadcast the outer hash
+//! specification so every node uses the same hash-family instances.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::orchestrator::{NodeHandle, Orchestrator};
+use crate::data::Dataset;
+use crate::engine::native::NativeEngine;
+use crate::engine::DistanceEngine;
+use crate::knn::predict::VoteConfig;
+use crate::node::node::LocalNode;
+use crate::runtime::XlaService;
+use crate::slsh::SlshParams;
+use crate::util::threadpool::chunk_ranges;
+
+/// Which distance engine the cores use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Portable Rust scan.
+    Native,
+    /// AOT JAX/Pallas kernels through PJRT (requires `make artifacts`).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "xla" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Cluster topology + engine choice.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of SLSH nodes (ν).
+    pub nu: usize,
+    /// Cores per node (p).
+    pub p: usize,
+    pub engine: EngineKind,
+    pub vote: VoteConfig,
+}
+
+impl ClusterConfig {
+    pub fn new(nu: usize, p: usize) -> Self {
+        Self { nu, p, engine: EngineKind::Native, vote: VoteConfig::default() }
+    }
+
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+}
+
+/// A running DSLSH cluster: the Orchestrator plus the resources backing
+/// it (the XLA service thread when the XLA engine is selected).
+pub struct Cluster {
+    pub orchestrator: Orchestrator,
+    /// Keeps the PJRT service alive as long as the nodes using it.
+    _xla: Option<Arc<XlaService>>,
+}
+
+impl std::ops::Deref for Cluster {
+    type Target = Orchestrator;
+    fn deref(&self) -> &Orchestrator {
+        &self.orchestrator
+    }
+}
+
+/// Build and start a cluster over `data`.
+///
+/// Shards are contiguous equal ranges (the Root "assigns each node its
+/// share of the dataset"); global point ids are shard-offset so the
+/// Reducer's K-NN refers to positions in `data`.
+pub fn build_cluster(data: &Dataset, params: &SlshParams, cfg: &ClusterConfig) -> Result<Cluster> {
+    assert!(cfg.nu > 0 && cfg.p > 0);
+    let xla = match cfg.engine {
+        EngineKind::Xla => Some(Arc::new(XlaService::start()?)),
+        EngineKind::Native => None,
+    };
+    let make_engines = |p: usize| -> Vec<Box<dyn DistanceEngine>> {
+        (0..p)
+            .map(|_| match (&xla, cfg.engine) {
+                (Some(svc), EngineKind::Xla) => {
+                    Box::new(svc.engine()) as Box<dyn DistanceEngine>
+                }
+                _ => Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>,
+            })
+            .collect()
+    };
+    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::with_capacity(cfg.nu);
+    for (node_id, range) in chunk_ranges(data.len(), cfg.nu).into_iter().enumerate() {
+        let id_base = range.start as u64;
+        let shard = Arc::new(data.shard(range));
+        let node =
+            LocalNode::spawn(node_id, shard, id_base, params, cfg.p, make_engines(cfg.p));
+        nodes.push(Box::new(node));
+    }
+    let orchestrator = Orchestrator::start(nodes, params.k, cfg.vote.clone());
+    Ok(Cluster { orchestrator, _xla: xla })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{build_corpus, CorpusConfig, WindowSpec};
+    use crate::lsh::family::LayerSpec;
+
+    fn corpus() -> crate::data::Corpus {
+        build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 3000, 30, 21))
+    }
+
+    fn params(data: &Dataset) -> SlshParams {
+        let (lo, hi) = data.value_range();
+        SlshParams::lsh_only(LayerSpec::outer_l1(data.dim, 40, 12, lo, hi, 5), 10)
+    }
+
+    #[test]
+    fn cluster_answers_queries() {
+        let c = corpus();
+        let cluster = build_cluster(&c.data, &params(&c.data), &ClusterConfig::new(2, 2)).unwrap();
+        assert_eq!(cluster.num_nodes(), 2);
+        assert_eq!(cluster.total_processors(), 4);
+        let r = cluster.query(c.queries.point(0));
+        assert!(r.neighbors.len() <= 10);
+        assert_eq!(r.per_node_comparisons.len(), 2);
+        assert_eq!(r.per_node_comparisons[0].len(), 2);
+        assert!(r.latency_s > 0.0);
+    }
+
+    #[test]
+    fn global_ids_are_consistent_across_shards() {
+        let c = corpus();
+        let cluster = build_cluster(&c.data, &params(&c.data), &ClusterConfig::new(3, 1)).unwrap();
+        // Query with dataset point 2500 (lives in the last shard): its own
+        // global id must come back at distance 0.
+        let r = cluster.query(c.data.point(2500));
+        assert_eq!(r.neighbors[0].id, 2500);
+        assert_eq!(r.neighbors[0].dist, 0.0);
+        // Neighbor labels must match the dataset at the global id.
+        for n in &r.neighbors {
+            assert_eq!(n.label, c.data.labels[n.id as usize], "id {}", n.id);
+        }
+    }
+
+    #[test]
+    fn prediction_invariant_to_topology_lsh_mode() {
+        // LSH-only mode: identical outer spec on every node ⇒ the global
+        // candidate union (hence K-NN and prediction) is independent of
+        // (ν, p).
+        let c = corpus();
+        let p = params(&c.data);
+        let mut reference: Option<Vec<(bool, u64)>> = None;
+        for (nu, pc) in [(1usize, 1usize), (1, 4), (2, 2), (4, 1), (5, 3)] {
+            let cluster = build_cluster(&c.data, &p, &ClusterConfig::new(nu, pc)).unwrap();
+            let answers: Vec<(bool, u64)> = (0..15)
+                .map(|i| {
+                    let r = cluster.query(c.queries.point(i));
+                    (r.prediction, r.neighbors.first().map(|n| n.id).unwrap_or(u64::MAX))
+                })
+                .collect();
+            match &reference {
+                None => reference = Some(answers),
+                Some(rf) => assert_eq!(&answers, rf, "topology ({nu},{pc}) changed output"),
+            }
+        }
+    }
+
+    #[test]
+    fn max_comparisons_decreases_with_more_processors() {
+        let c = corpus();
+        let p = params(&c.data);
+        let mut meds = Vec::new();
+        for (nu, pc) in [(1usize, 2usize), (2, 2), (4, 2)] {
+            let cluster = build_cluster(&c.data, &p, &ClusterConfig::new(nu, pc)).unwrap();
+            let mut comps: Vec<f64> = (0..20)
+                .map(|i| cluster.query(c.queries.point(i)).max_comparisons as f64)
+                .collect();
+            comps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            meds.push(comps[comps.len() / 2]);
+        }
+        assert!(
+            meds[2] < meds[0],
+            "scaling failed: medians {meds:?} should decrease with pν"
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! The distributed coordination layer (paper Figure 1): the Orchestrator's
+//! Root / Forwarder / Reducer processes and cluster assembly.
+
+pub mod cluster;
+pub mod orchestrator;
+
+pub use cluster::{build_cluster, Cluster, ClusterConfig, EngineKind};
+pub use orchestrator::{NodeHandle, Orchestrator, QueryResult};

@@ -1,0 +1,252 @@
+//! The Orchestrator (paper Figure 1, §3): Root, Forwarder and Reducer
+//! processes coordinating ν SLSH nodes.
+//!
+//! * **Root** — the public API; coordinates query resolution (and, at
+//!   construction time, shard assignment + hash-spec broadcast, done in
+//!   [`crate::coordinator::cluster`]).
+//! * **Forwarder** — broadcasts each query to every node.
+//! * **Reducer** — gathers the ν node-local K-NN sets and keeps the K
+//!   closest (reduction), then the Root turns them into the prediction.
+//!
+//! All three are real threads connected by channels, mirroring the cloud
+//! deployment's processes; nodes are [`NodeHandle`]s so the same
+//! Orchestrator drives in-process thread-group nodes and remote TCP nodes.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::knn::heap::{Neighbor, TopK};
+use crate::knn::predict::{positive_share, VoteConfig};
+use crate::node::node::{NodeInfo, NodeReply};
+
+/// Abstraction over a node the Forwarder can reach (in-process thread
+/// group or TCP-remote process).
+pub trait NodeHandle: Send {
+    fn node_id(&self) -> usize;
+    fn info(&self) -> NodeInfo;
+    fn query(&mut self, q: &[f32]) -> NodeReply;
+}
+
+impl NodeHandle for crate::node::node::LocalNode {
+    fn node_id(&self) -> usize {
+        crate::node::node::LocalNode::node_id(self)
+    }
+    fn info(&self) -> NodeInfo {
+        crate::node::node::LocalNode::info(self).clone()
+    }
+    fn query(&mut self, q: &[f32]) -> NodeReply {
+        crate::node::node::LocalNode::query(self, q)
+    }
+}
+
+/// Final, reduced answer for one query.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub qid: u64,
+    /// Global K-NN across all nodes.
+    pub neighbors: Vec<Neighbor>,
+    /// Weighted-vote positive share and thresholded prediction.
+    pub positive_share: f64,
+    pub prediction: bool,
+    /// Max comparisons across ALL processors (the paper's speed metric).
+    pub max_comparisons: u64,
+    /// Per-node, per-core comparison counts.
+    pub per_node_comparisons: Vec<Vec<u64>>,
+    /// Wall-clock latency of the full round trip (seconds).
+    pub latency_s: f64,
+}
+
+struct Job {
+    qid: u64,
+    q: Arc<Vec<f32>>,
+}
+
+/// Orchestrator over ν nodes.
+pub struct Orchestrator {
+    root_tx: Sender<(Vec<f32>, Sender<QueryResult>)>,
+    threads: Vec<JoinHandle<()>>,
+    node_infos: Vec<NodeInfo>,
+    k: usize,
+    nu: usize,
+}
+
+impl Orchestrator {
+    /// Wire Root → Forwarder → node runners → Reducer → Root and start
+    /// all threads.
+    pub fn start(nodes: Vec<Box<dyn NodeHandle>>, k: usize, vote: VoteConfig) -> Orchestrator {
+        let nu = nodes.len();
+        assert!(nu > 0, "orchestrator needs at least one node");
+        let node_infos: Vec<NodeInfo> = nodes.iter().map(|n| n.info()).collect();
+        let mut threads = Vec::new();
+
+        // Channels.
+        let (root_tx, root_rx) = channel::<(Vec<f32>, Sender<QueryResult>)>();
+        let (fwd_tx, fwd_rx) = channel::<Job>();
+        let (reduce_tx, reduce_rx) = channel::<(u64, NodeReply, f64)>();
+        let (done_tx, done_rx) = channel::<ReducedQuery>();
+
+        // Node runners: one thread per node, each with its own inbox.
+        let mut node_tx: Vec<Sender<Job>> = Vec::with_capacity(nu);
+        for mut node in nodes {
+            let (tx, rx) = channel::<Job>();
+            node_tx.push(tx);
+            let reduce_tx = reduce_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("node-runner-{}", node.node_id()))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            let t0 = std::time::Instant::now();
+                            let reply = node.query(&job.q);
+                            let dt = t0.elapsed().as_secs_f64();
+                            if reduce_tx.send((job.qid, reply, dt)).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn node runner"),
+            );
+        }
+        drop(reduce_tx);
+
+        // Forwarder: broadcast each job to every node runner.
+        threads.push(
+            std::thread::Builder::new()
+                .name("forwarder".into())
+                .spawn(move || {
+                    while let Ok(job) = fwd_rx.recv() {
+                        for tx in &node_tx {
+                            if tx.send(Job { qid: job.qid, q: Arc::clone(&job.q) }).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn forwarder"),
+        );
+
+        // Reducer: fold ν node replies per qid into the global K-NN.
+        let k_red = k;
+        threads.push(
+            std::thread::Builder::new()
+                .name("reducer".into())
+                .spawn(move || {
+                    let mut pending: HashMap<u64, ReduceAcc> = HashMap::new();
+                    while let Ok((qid, reply, _dt)) = reduce_rx.recv() {
+                        let acc = pending.entry(qid).or_insert_with(|| ReduceAcc {
+                            topk: TopK::new(k_red),
+                            per_node: Vec::new(),
+                            received: 0,
+                        });
+                        for &n in &reply.neighbors {
+                            acc.topk.push_unique(n);
+                        }
+                        acc.per_node.push(reply.comparisons);
+                        acc.received += 1;
+                        if acc.received == nu {
+                            let acc = pending.remove(&qid).unwrap();
+                            let out = ReducedQuery {
+                                qid,
+                                neighbors: acc.topk.into_sorted(),
+                                per_node: acc.per_node,
+                            };
+                            if done_tx.send(out).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn reducer"),
+        );
+
+        // Root: sequence queries, join reduction results with callers.
+        threads.push(
+            std::thread::Builder::new()
+                .name("root".into())
+                .spawn(move || {
+                    let mut qid = 0u64;
+                    while let Ok((q, reply_to)) = root_rx.recv() {
+                        let t0 = std::time::Instant::now();
+                        if fwd_tx.send(Job { qid, q: Arc::new(q) }).is_err() {
+                            return;
+                        }
+                        // ICU latency model: one query in flight at a time.
+                        let Ok(red) = done_rx.recv() else { return };
+                        debug_assert_eq!(red.qid, qid);
+                        let share = positive_share(&red.neighbors, &vote);
+                        let max_comparisons = red
+                            .per_node
+                            .iter()
+                            .flat_map(|v| v.iter().copied())
+                            .max()
+                            .unwrap_or(0);
+                        let result = QueryResult {
+                            qid,
+                            neighbors: red.neighbors,
+                            positive_share: share,
+                            prediction: share >= vote.threshold as f64,
+                            max_comparisons,
+                            per_node_comparisons: red.per_node,
+                            latency_s: t0.elapsed().as_secs_f64(),
+                        };
+                        let _ = reply_to.send(result);
+                        qid += 1;
+                    }
+                })
+                .expect("spawn root"),
+        );
+
+        Orchestrator { root_tx, threads, node_infos, k, nu }
+    }
+
+    /// Resolve one query through the full Root → Forwarder → nodes →
+    /// Reducer → Root pipeline.
+    pub fn query(&self, q: &[f32]) -> QueryResult {
+        let (tx, rx) = channel();
+        self.root_tx.send((q.to_vec(), tx)).expect("root thread gone");
+        rx.recv().expect("root dropped reply")
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nu
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn node_infos(&self) -> &[NodeInfo] {
+        &self.node_infos
+    }
+
+    /// Total processors (pν) across the cluster.
+    pub fn total_processors(&self) -> usize {
+        self.node_infos.iter().map(|i| i.cores).sum()
+    }
+}
+
+impl Drop for Orchestrator {
+    fn drop(&mut self) {
+        // Closing root_tx cascades: root exits, forwarder inbox closes,
+        // node runners exit, reducer sees EOF.
+        let (dead_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.root_tx, dead_tx);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+struct ReduceAcc {
+    topk: TopK,
+    per_node: Vec<Vec<u64>>,
+    received: usize,
+}
+
+struct ReducedQuery {
+    qid: u64,
+    neighbors: Vec<Neighbor>,
+    per_node: Vec<Vec<u64>>,
+}

@@ -1,0 +1,272 @@
+//! Beat validity assessment — the beatDB v3 stand-in (Rivera 2017, [15] in
+//! the paper). The paper: "Beat validity is assessed by checking whether
+//! each beat respects a set of properties." We implement the standard
+//! per-beat plausibility battery used by beatDB-style pipelines for ABP:
+//! physiological ranges, pulse-pressure sanity, inter-beat interval limits,
+//! jump (delta) limits against the previous valid beat, and flatline runs.
+
+use crate::data::waveform::Beat;
+
+/// Reason a beat was rejected (first failing check wins, ordered roughly
+/// by severity). Kept as a dense enum so QC reports can histogram causes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BeatFlag {
+    Valid,
+    /// SBP outside [30, 250] mmHg or DBP outside [15, 200] mmHg.
+    PressureRange,
+    /// SBP − DBP outside [10, 120] mmHg.
+    PulsePressure,
+    /// Inter-beat interval outside [60/200, 60/25] seconds.
+    BeatInterval,
+    /// |ΔMAP| from the previous valid beat above 25 mmHg.
+    DeltaJump,
+    /// Part of a run of ≥ `FLATLINE_RUN` beats with identical pressures.
+    Flatline,
+}
+
+/// Validity thresholds. Defaults follow common ABP QC practice
+/// (e.g. Sun et al. 2006 / beatDB): they are deliberately permissive so
+/// genuine hypotension (MAP down to ~25 mmHg) is NOT rejected.
+#[derive(Debug, Clone)]
+pub struct ValidityConfig {
+    pub sbp_range: (f32, f32),
+    pub dbp_range: (f32, f32),
+    pub pulse_range: (f32, f32),
+    /// Allowed inter-beat interval in seconds (HR 25–200 bpm).
+    pub interval_range: (f64, f64),
+    /// Max |MAP(t) − MAP(prev valid)| in mmHg.
+    pub max_map_jump: f32,
+    /// Minimum identical-pressure run length flagged as flatline.
+    pub flatline_run: usize,
+}
+
+impl Default for ValidityConfig {
+    fn default() -> Self {
+        Self {
+            sbp_range: (30.0, 250.0),
+            dbp_range: (15.0, 200.0),
+            pulse_range: (10.0, 120.0),
+            interval_range: (60.0 / 200.0, 60.0 / 25.0),
+            max_map_jump: 25.0,
+            flatline_run: 5,
+        }
+    }
+}
+
+/// Classify every beat in a record. Returns one flag per beat.
+pub fn assess(beats: &[Beat], cfg: &ValidityConfig) -> Vec<BeatFlag> {
+    let mut flags = vec![BeatFlag::Valid; beats.len()];
+
+    // Pass 1: flatline runs (identical SBP & DBP repeated).
+    let mut run_start = 0;
+    for i in 1..=beats.len() {
+        let same = i < beats.len()
+            && beats[i].sbp == beats[run_start].sbp
+            && beats[i].dbp == beats[run_start].dbp;
+        if !same {
+            if i - run_start >= cfg.flatline_run {
+                for f in flags.iter_mut().take(i).skip(run_start) {
+                    *f = BeatFlag::Flatline;
+                }
+            }
+            run_start = i;
+        }
+    }
+
+    // Pass 2: per-beat checks + delta against last valid.
+    let mut last_valid_map: Option<f32> = None;
+    let mut last_t: Option<f64> = None;
+    for (i, b) in beats.iter().enumerate() {
+        if flags[i] == BeatFlag::Flatline {
+            last_t = Some(b.t);
+            continue;
+        }
+        let flag = check_one(b, last_valid_map, last_t, cfg);
+        flags[i] = flag;
+        if flag == BeatFlag::Valid {
+            last_valid_map = Some(b.map());
+        }
+        last_t = Some(b.t);
+    }
+    flags
+}
+
+fn check_one(
+    b: &Beat,
+    last_valid_map: Option<f32>,
+    last_t: Option<f64>,
+    cfg: &ValidityConfig,
+) -> BeatFlag {
+    if b.sbp < cfg.sbp_range.0
+        || b.sbp > cfg.sbp_range.1
+        || b.dbp < cfg.dbp_range.0
+        || b.dbp > cfg.dbp_range.1
+    {
+        return BeatFlag::PressureRange;
+    }
+    let pulse = b.sbp - b.dbp;
+    if pulse < cfg.pulse_range.0 || pulse > cfg.pulse_range.1 {
+        return BeatFlag::PulsePressure;
+    }
+    if let Some(prev_t) = last_t {
+        let dt = b.t - prev_t;
+        if dt < cfg.interval_range.0 || dt > cfg.interval_range.1 {
+            return BeatFlag::BeatInterval;
+        }
+    }
+    if let Some(prev_map) = last_valid_map {
+        if (b.map() - prev_map).abs() > cfg.max_map_jump {
+            return BeatFlag::DeltaJump;
+        }
+    }
+    BeatFlag::Valid
+}
+
+/// QC summary over a record: counts per rejection cause.
+#[derive(Debug, Clone, Default)]
+pub struct QcReport {
+    pub total: usize,
+    pub valid: usize,
+    pub pressure_range: usize,
+    pub pulse_pressure: usize,
+    pub beat_interval: usize,
+    pub delta_jump: usize,
+    pub flatline: usize,
+}
+
+impl QcReport {
+    pub fn from_flags(flags: &[BeatFlag]) -> Self {
+        let mut r = QcReport { total: flags.len(), ..Default::default() };
+        for f in flags {
+            match f {
+                BeatFlag::Valid => r.valid += 1,
+                BeatFlag::PressureRange => r.pressure_range += 1,
+                BeatFlag::PulsePressure => r.pulse_pressure += 1,
+                BeatFlag::BeatInterval => r.beat_interval += 1,
+                BeatFlag::DeltaJump => r.delta_jump += 1,
+                BeatFlag::Flatline => r.flatline += 1,
+            }
+        }
+        r
+    }
+
+    pub fn valid_fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.valid as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::waveform::{generate_record, WaveformConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn beat(t: f64, sbp: f32, dbp: f32) -> Beat {
+        Beat { t, sbp, dbp }
+    }
+
+    /// A plausible healthy run to embed anomalies into.
+    fn healthy(n: usize) -> Vec<Beat> {
+        (0..n)
+            .map(|i| beat(i as f64 * 0.8, 120.0 + (i % 3) as f32, 78.0 + (i % 2) as f32))
+            .collect()
+    }
+
+    #[test]
+    fn healthy_run_is_all_valid() {
+        let flags = assess(&healthy(50), &ValidityConfig::default());
+        assert!(flags.iter().all(|f| *f == BeatFlag::Valid), "{flags:?}");
+    }
+
+    #[test]
+    fn range_violations_flagged() {
+        let mut beats = healthy(10);
+        beats[4] = beat(beats[4].t, 300.0, 150.0); // spike
+        beats[7] = beat(beats[7].t, 10.0, 5.0); // dropout
+        let flags = assess(&beats, &ValidityConfig::default());
+        assert_eq!(flags[4], BeatFlag::PressureRange);
+        assert_eq!(flags[7], BeatFlag::PressureRange);
+        assert_eq!(flags[3], BeatFlag::Valid);
+    }
+
+    #[test]
+    fn pulse_pressure_check() {
+        let mut beats = healthy(10);
+        beats[5] = beat(beats[5].t, 100.0, 95.0); // pulse = 5 < 10
+        let flags = assess(&beats, &ValidityConfig::default());
+        assert_eq!(flags[5], BeatFlag::PulsePressure);
+    }
+
+    #[test]
+    fn interval_check() {
+        let mut beats = healthy(10);
+        // Insert a beat 0.05 s after the previous one (HR 1200 bpm).
+        beats[6].t = beats[5].t + 0.05;
+        let flags = assess(&beats, &ValidityConfig::default());
+        assert_eq!(flags[6], BeatFlag::BeatInterval);
+    }
+
+    #[test]
+    fn delta_jump_check_relative_to_last_valid() {
+        let mut beats = healthy(10);
+        // Sudden +40 mmHg jump in otherwise-plausible ranges.
+        beats[8] = beat(beats[8].t, 170.0, 120.0);
+        let flags = assess(&beats, &ValidityConfig::default());
+        assert_eq!(flags[8], BeatFlag::DeltaJump);
+        // And the next normal beat is judged against the last VALID map,
+        // so it stays valid.
+        assert_eq!(flags[9], BeatFlag::Valid);
+    }
+
+    #[test]
+    fn flatline_detection_exact_run() {
+        let mut beats = healthy(20);
+        for b in beats.iter_mut().skip(5).take(6) {
+            *b = beat(b.t, 90.0, 60.0);
+        }
+        let flags = assess(&beats, &ValidityConfig::default());
+        for (i, f) in flags.iter().enumerate().skip(5).take(6) {
+            assert_eq!(*f, BeatFlag::Flatline, "beat {i}");
+        }
+        // Runs shorter than the threshold survive.
+        let mut beats2 = healthy(20);
+        for b in beats2.iter_mut().skip(5).take(3) {
+            *b = beat(b.t, 90.0, 60.0);
+        }
+        let flags2 = assess(&beats2, &ValidityConfig::default());
+        assert!(flags2.iter().skip(5).take(3).all(|f| *f != BeatFlag::Flatline));
+    }
+
+    #[test]
+    fn hypotension_is_not_rejected() {
+        // Gradual decline to MAP ~40 must stay valid: rejecting it would
+        // destroy the prediction target.
+        let mut beats = Vec::new();
+        for i in 0..100 {
+            let decline = i as f32 * 0.5;
+            beats.push(beat(i as f64 * 0.8, 115.0 - decline, 72.0 - decline * 0.9));
+        }
+        let flags = assess(&beats, &ValidityConfig::default());
+        let invalid = flags.iter().filter(|f| **f != BeatFlag::Valid).count();
+        assert_eq!(invalid, 0, "{flags:?}");
+    }
+
+    #[test]
+    fn qc_report_on_synthetic_record() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let cfg = WaveformConfig { record_hours: (4.0, 4.0), ..Default::default() };
+        let beats = generate_record(&cfg, &mut rng);
+        let flags = assess(&beats, &ValidityConfig::default());
+        let report = QcReport::from_flags(&flags);
+        assert_eq!(report.total, beats.len());
+        // The generator's artifact rate is ~0.4% with flatline amplification;
+        // validity should be high but not perfect.
+        assert!(report.valid_fraction() > 0.90, "{report:?}");
+        assert!(report.valid_fraction() < 1.0, "{report:?}");
+        assert!(report.flatline > 0, "{report:?}");
+    }
+}

@@ -1,0 +1,328 @@
+//! Dataset container + corpus builder.
+//!
+//! A [`Dataset`] is a dense row-major `n × d` matrix of f32 time-series
+//! points plus binary AHE labels — the unit the distributed system shards
+//! across nodes. [`build_corpus`] drives the full substrate pipeline
+//! (waveform generator → beat validity → rolling windows) until a target
+//! number of points is reached, with held-out records providing an
+//! out-of-sample query set exactly as the paper's 2000-query test sets.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::beats::ValidityConfig;
+use crate::data::waveform::{generate_record, WaveformConfig};
+use crate::data::window::{extract_windows, SecondsSeries, WindowSpec};
+use crate::util::bytes::{self, CodecError};
+use crate::util::rng::Xoshiro256;
+
+const MAGIC: u64 = 0x4453_4C53_4853_4431; // "DSLSHSD1"
+const VERSION: u32 = 1;
+
+/// Dense labeled point set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub name: String,
+    /// Point dimensionality (`d`, 30 for the paper's datasets).
+    pub dim: usize,
+    /// Row-major `len × dim` values (mmHg).
+    pub points: Vec<f32>,
+    /// AHE-in-condition-window labels.
+    pub labels: Vec<bool>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, dim: usize) -> Self {
+        Self { name: name.into(), dim, points: Vec::new(), labels: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn push(&mut self, point: &[f32], label: bool) {
+        assert_eq!(point.len(), self.dim);
+        self.points.extend_from_slice(point);
+        self.labels.push(label);
+    }
+
+    /// Fraction of negative (no-AHE) points — Table 1's `%AHE̅` column.
+    pub fn pct_negative(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let neg = self.labels.iter().filter(|l| !**l).count();
+        neg as f64 / self.len() as f64
+    }
+
+    pub fn positives(&self) -> usize {
+        self.labels.iter().filter(|l| **l).count()
+    }
+
+    /// Contiguous shard `[range.start, range.end)` as an owned dataset —
+    /// what the Root sends each node at table-construction time.
+    pub fn shard(&self, range: std::ops::Range<usize>) -> Dataset {
+        Dataset {
+            name: format!("{}[{}..{}]", self.name, range.start, range.end),
+            dim: self.dim,
+            points: self.points[range.start * self.dim..range.end * self.dim].to_vec(),
+            labels: self.labels[range.clone()].to_vec(),
+        }
+    }
+
+    /// Min/max over every coordinate — the value range the L1 bit-sampling
+    /// family quantizes against.
+    pub fn value_range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.points {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo > hi {
+            (0.0, 1.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    // ---- binary persistence ---------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<(), CodecError> {
+        let file = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(file);
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), CodecError> {
+        bytes::write_u64(w, MAGIC)?;
+        bytes::write_u32(w, VERSION)?;
+        bytes::write_string(w, &self.name)?;
+        bytes::write_u64(w, self.dim as u64)?;
+        bytes::write_f32_vec(w, &self.points)?;
+        bytes::write_bitvec(w, &self.labels)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset, CodecError> {
+        let file = std::fs::File::open(path)?;
+        let mut r = BufReader::new(file);
+        Self::read_from(&mut r)
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Dataset, CodecError> {
+        let magic = bytes::read_u64(r)?;
+        if magic != MAGIC {
+            return Err(CodecError::BadMagic { expected: MAGIC, got: magic });
+        }
+        let version = bytes::read_u32(r)?;
+        if version != VERSION {
+            return Err(CodecError::BadVersion(version));
+        }
+        let name = bytes::read_string(r)?;
+        let dim = bytes::read_u64(r)? as usize;
+        let points = bytes::read_f32_vec(r)?;
+        let labels = bytes::read_bitvec(r)?;
+        Ok(Dataset { name, dim, points, labels })
+    }
+}
+
+/// A corpus: the searchable dataset plus an out-of-sample query set drawn
+/// from disjoint patient records (no leakage).
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub data: Dataset,
+    pub queries: Dataset,
+}
+
+/// Corpus builder configuration.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub spec: WindowSpec,
+    pub waveform: WaveformConfig,
+    pub validity: ValidityConfig,
+    /// Stop adding records once the dataset reaches this many points.
+    pub target_points: usize,
+    /// Out-of-sample query count.
+    pub target_queries: usize,
+    pub seed: u64,
+}
+
+impl CorpusConfig {
+    pub fn new(spec: WindowSpec, target_points: usize, target_queries: usize, seed: u64) -> Self {
+        Self {
+            spec,
+            waveform: WaveformConfig::default(),
+            validity: ValidityConfig::default(),
+            target_points,
+            target_queries,
+            seed,
+        }
+    }
+}
+
+/// Generate a reproducible corpus by streaming synthetic patient records
+/// through the windowing pipeline until the targets are met. Records are
+/// never split between data and queries.
+pub fn build_corpus(cfg: &CorpusConfig) -> Corpus {
+    let mut root = Xoshiro256::seed_from_u64(cfg.seed);
+    let mut data = Dataset::new(cfg.spec.name.clone(), cfg.spec.d);
+    let mut queries = Dataset::new(format!("{}-queries", cfg.spec.name), cfg.spec.d);
+    let mut record_idx = 0u64;
+    // Fill the query set first from dedicated records (held out by
+    // construction), then the dataset.
+    while queries.len() < cfg.target_queries || data.len() < cfg.target_points {
+        let mut rng = root.fork(record_idx);
+        record_idx += 1;
+        let beats = generate_record(&cfg.waveform, &mut rng);
+        let series = SecondsSeries::build(&beats, &cfg.validity, cfg.spec.ahe_thresh);
+        let pts = extract_windows(&series, &cfg.spec);
+        let fill_queries = queries.len() < cfg.target_queries;
+        let sink = if fill_queries { &mut queries } else { &mut data };
+        for p in pts {
+            sink.push(&p.series, p.label);
+            if fill_queries && sink.len() >= cfg.target_queries {
+                break;
+            }
+        }
+    }
+    data.points.truncate(cfg.target_points * data.dim);
+    data.labels.truncate(cfg.target_points);
+    queries.points.truncate(cfg.target_queries * queries.dim);
+    queries.labels.truncate(cfg.target_queries);
+    Corpus { data, queries }
+}
+
+/// Table 1 row for a built dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetStats {
+    pub name: String,
+    pub lag_min: f64,
+    pub sub_s: f64,
+    pub cond_min: f64,
+    pub n: usize,
+    pub pct_negative: f64,
+}
+
+pub fn stats(spec: &WindowSpec, data: &Dataset) -> DatasetStats {
+    DatasetStats {
+        name: spec.name.clone(),
+        lag_min: spec.lag_min,
+        sub_s: spec.subwindow_s(),
+        cond_min: spec.cond_min,
+        n: data.len(),
+        pct_negative: data.pct_negative(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_corpus(seed: u64) -> Corpus {
+        let cfg = CorpusConfig::new(WindowSpec::ahe_51_5c(), 3000, 200, seed);
+        build_corpus(&cfg)
+    }
+
+    #[test]
+    fn corpus_hits_targets_exactly() {
+        let c = tiny_corpus(1);
+        assert_eq!(c.data.len(), 3000);
+        assert_eq!(c.queries.len(), 200);
+        assert_eq!(c.data.points.len(), 3000 * 30);
+        assert_eq!(c.data.dim, 30);
+    }
+
+    #[test]
+    fn corpus_is_reproducible_and_seed_sensitive() {
+        let a = tiny_corpus(7);
+        let b = tiny_corpus(7);
+        let c = tiny_corpus(8);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.queries, b.queries);
+        assert_ne!(a.data.points, c.data.points);
+    }
+
+    #[test]
+    fn class_imbalance_matches_paper_band() {
+        let cfg = CorpusConfig::new(WindowSpec::ahe_51_5c(), 20_000, 100, 3);
+        let c = build_corpus(&cfg);
+        let neg = c.data.pct_negative();
+        // Paper: 96.04% for AHE-51-5c. Accept a generous band.
+        assert!((0.90..=0.999).contains(&neg), "pct_negative={neg}");
+        assert!(c.data.positives() > 0, "need some positive points");
+    }
+
+    #[test]
+    fn points_are_physiological() {
+        let c = tiny_corpus(4);
+        let (lo, hi) = c.data.value_range();
+        assert!(lo > 15.0 && hi < 185.0, "range=({lo}, {hi})");
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let c = tiny_corpus(5);
+        let s = c.data.shard(100..200);
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.point(0), c.data.point(100));
+        assert_eq!(s.labels[99], c.data.labels[199]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = tiny_corpus(6);
+        let dir = std::env::temp_dir().join("dslsh_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.dslsh");
+        c.data.save(&path).unwrap();
+        let loaded = Dataset::load(&path).unwrap();
+        assert_eq!(loaded, c.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let c = tiny_corpus(9);
+        let mut buf = Vec::new();
+        c.data.write_to(&mut buf).unwrap();
+        buf[0] ^= 0xFF; // clobber magic
+        assert!(matches!(
+            Dataset::read_from(&mut std::io::Cursor::new(buf)),
+            Err(CodecError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn stats_row_matches_spec() {
+        let c = tiny_corpus(10);
+        let spec = WindowSpec::ahe_51_5c();
+        let row = stats(&spec, &c.data);
+        assert_eq!(row.name, "AHE-51-5c");
+        assert!((row.sub_s - 10.0).abs() < 1e-9);
+        assert_eq!(row.n, 3000);
+    }
+
+    #[test]
+    fn queries_and_data_disjoint_by_construction() {
+        // Query points should not appear verbatim in the dataset (distinct
+        // records => distinct noise draws). Spot-check a few.
+        let c = tiny_corpus(11);
+        for qi in [0usize, 50, 199] {
+            let q = c.queries.point(qi);
+            let dup = (0..c.data.len()).any(|i| c.data.point(i) == q);
+            assert!(!dup, "query {qi} leaked into dataset");
+        }
+    }
+}

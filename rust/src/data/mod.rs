@@ -1,0 +1,11 @@
+//! Data substrate: synthetic ABP waveforms (MIMIC-III stand-in), beat
+//! validity (beatDB stand-in), rolling-window extraction, and the dense
+//! dataset container the distributed system shards.
+
+pub mod beats;
+pub mod dataset;
+pub mod waveform;
+pub mod window;
+
+pub use dataset::{build_corpus, Corpus, CorpusConfig, Dataset, DatasetStats};
+pub use window::WindowSpec;

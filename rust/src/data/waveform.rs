@@ -1,0 +1,424 @@
+//! Synthetic Arterial Blood Pressure (ABP) waveform generator.
+//!
+//! MIMIC-III stand-in (see DESIGN.md §Substitutions). The generator
+//! produces per-beat blood-pressure records with the properties that drive
+//! the paper's results:
+//!
+//! * **pre-hypotensive drift** — Acute Hypotensive Episodes (AHE) are
+//!   preceded by a gradual Mean Arterial Pressure (MAP) decline, so lag
+//!   windows immediately before an episode are geometrically close to each
+//!   other and far from healthy windows: this is what makes KNN/LSH
+//!   prediction work at all;
+//! * **heavy class imbalance** — episodes are rare (a few per day of
+//!   monitoring), matching the ≥96% negative rates of Table 1;
+//! * **realistic mess** — inter-patient baseline variability, slow
+//!   mean-reverting drift, respiratory/short-term oscillation, measurement
+//!   noise, and invalid-beat artifacts (spikes, dropouts, flatlines) that
+//!   the beat-validity layer (`data/beats.rs`, the beatDB stand-in) must
+//!   filter out.
+//!
+//! The model is a per-beat simulation: beat intervals from heart-rate
+//! dynamics; per-beat MAP = patient baseline + OU drift + episode profile +
+//! oscillation + noise; systolic/diastolic derived from MAP and pulse
+//! pressure so validity checks have real structure to verify.
+
+use crate::util::rng::Xoshiro256;
+
+/// One heart beat as produced by the ABP waveform layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Beat {
+    /// Beat onset time in seconds from record start.
+    pub t: f64,
+    /// Systolic blood pressure (mmHg).
+    pub sbp: f32,
+    /// Diastolic blood pressure (mmHg).
+    pub dbp: f32,
+}
+
+impl Beat {
+    /// Mean arterial pressure via the standard clinical estimate
+    /// MAP ≈ DBP + (SBP − DBP) / 3.
+    #[inline]
+    pub fn map(&self) -> f32 {
+        self.dbp + (self.sbp - self.dbp) / 3.0
+    }
+}
+
+/// Phases of a hypotensive episode overlaid on the baseline pressure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EpisodePhase {
+    None,
+    /// Gradual decline toward the episode (the predictive signal).
+    Ramp { remaining_s: f64, total_s: f64, depth: f32 },
+    /// MAP held below the hypotensive threshold.
+    Low { remaining_s: f64, depth: f32 },
+    /// Recovery back to baseline.
+    Recover { remaining_s: f64, total_s: f64, depth: f32 },
+}
+
+/// Generator parameters. Defaults are tuned so the rolling-window pipeline
+/// reproduces Table 1's class imbalance (96–98.5% negative).
+#[derive(Debug, Clone)]
+pub struct WaveformConfig {
+    /// Record length (hours) sampled uniformly in this range.
+    pub record_hours: (f64, f64),
+    /// Mean number of hypotensive episodes per 24h of monitoring.
+    pub episodes_per_day: f64,
+    /// Pre-episode decline duration (seconds), sampled uniformly.
+    pub ramp_s: (f64, f64),
+    /// Episode duration (seconds), sampled uniformly.
+    pub low_s: (f64, f64),
+    /// Recovery duration (seconds), sampled uniformly.
+    pub recover_s: (f64, f64),
+    /// Mean number of transient non-AHE hypotensive *dips* per 24h: brief
+    /// borderline drops (MAP ~58-68) that do NOT meet the AHE definition.
+    /// These are the clinically realistic confusers that give the
+    /// speed/quality trade-off teeth: aggressive LSH configurations lose
+    /// MCC by mistaking dip precursors for episode precursors.
+    pub dips_per_day: f64,
+    /// Dip duration (seconds), sampled uniformly.
+    pub dip_s: (f64, f64),
+    /// Probability that a beat is an artifact (spike/dropout).
+    pub artifact_prob: f64,
+    /// Probability that an artifact starts a flatline run.
+    pub flatline_prob: f64,
+    /// Per-beat measurement noise std (mmHg).
+    pub noise_std: f64,
+}
+
+impl Default for WaveformConfig {
+    fn default() -> Self {
+        Self {
+            record_hours: (12.0, 36.0),
+            episodes_per_day: 5.5,
+            ramp_s: (15.0 * 60.0, 40.0 * 60.0),
+            low_s: (30.0 * 60.0, 75.0 * 60.0),
+            recover_s: (10.0 * 60.0, 30.0 * 60.0),
+            dips_per_day: 10.0,
+            dip_s: (3.0 * 60.0, 10.0 * 60.0),
+            artifact_prob: 0.004,
+            flatline_prob: 0.12,
+            noise_std: 3.5,
+        }
+    }
+}
+
+/// Per-patient latent state sampled once per record.
+#[derive(Debug, Clone)]
+struct PatientState {
+    /// Resting MAP baseline (mmHg).
+    base_map: f64,
+    /// Pulse pressure (SBP − DBP) baseline (mmHg).
+    pulse: f64,
+    /// Heart rate baseline (bpm).
+    hr: f64,
+    /// Slow OU process (10–40 min reversion): hemodynamic level wander.
+    drift: f64,
+    drift_theta: f64,
+    drift_sigma: f64,
+    /// Fast OU process (1–4 min reversion): within-window *shape*
+    /// variation. Without it every lag window is a near-constant vector
+    /// at the patient's level and the point cloud degenerates to a line —
+    /// real ABP windows differ in trajectory, not just level.
+    fast: f64,
+    fast_theta: f64,
+    fast_sigma: f64,
+    /// Respiratory oscillation amplitude (mmHg) and frequency (Hz).
+    osc_amp: f64,
+    osc_freq: f64,
+}
+
+impl PatientState {
+    fn sample(rng: &mut Xoshiro256) -> Self {
+        Self {
+            base_map: (rng.gen_normal(88.0, 9.0)).clamp(72.0, 108.0),
+            pulse: (rng.gen_normal(42.0, 7.0)).clamp(25.0, 65.0),
+            hr: (rng.gen_normal(80.0, 12.0)).clamp(50.0, 120.0),
+            drift: 0.0,
+            drift_theta: 1.0 / rng.gen_f64(600.0, 2400.0), // mean-reversion over 10–40 min
+            drift_sigma: rng.gen_f64(0.05, 0.20),
+            fast: 0.0,
+            fast_theta: 1.0 / rng.gen_f64(60.0, 240.0),
+            fast_sigma: rng.gen_f64(0.25, 0.70),
+            osc_amp: rng.gen_f64(0.8, 2.5),
+            osc_freq: rng.gen_f64(0.15, 0.35), // respiratory band
+        }
+    }
+}
+
+/// Generate one patient record of per-beat ABP values.
+///
+/// Deterministic given `rng` state; fork the rng per record for
+/// reproducible corpora.
+pub fn generate_record(cfg: &WaveformConfig, rng: &mut Xoshiro256) -> Vec<Beat> {
+    let hours = rng.gen_f64(cfg.record_hours.0, cfg.record_hours.1);
+    let total_s = hours * 3600.0;
+    let mut patient = PatientState::sample(rng);
+    let mut beats = Vec::with_capacity((total_s * patient.hr / 60.0) as usize + 16);
+
+    let mut t = 0.0f64;
+    let mut phase = EpisodePhase::None;
+    // Exponential inter-arrival of episode *ramps*.
+    let episode_rate = cfg.episodes_per_day / 86_400.0; // per second
+    let mut next_episode_in = sample_exp(rng, episode_rate);
+    // Transient dips: ramp down and back over a few minutes, bottoming
+    // just ABOVE (or briefly at) the AHE threshold.
+    let dip_rate = (cfg.dips_per_day / 86_400.0).max(1e-12);
+    let mut next_dip_in = sample_exp(rng, dip_rate);
+    let mut dip_left = 0.0f64;
+    let mut dip_total = 0.0f64;
+    let mut dip_depth = 0.0f64;
+    let mut flatline_left = 0usize;
+    let mut flatline_value = 0.0f32;
+
+    while t < total_s {
+        // --- heart rate / beat interval -----------------------------------
+        let hr_jitter = rng.gen_normal(0.0, 2.0);
+        let hr = (patient.hr + hr_jitter).clamp(35.0, 180.0);
+        let dt = 60.0 / hr;
+
+        // --- episode phase machine -----------------------------------------
+        next_episode_in -= dt;
+        phase = step_phase(phase, dt);
+        if matches!(phase, EpisodePhase::None) && next_episode_in <= 0.0 {
+            let ramp = rng.gen_f64(cfg.ramp_s.0, cfg.ramp_s.1);
+            // Depth targets an absolute hypotensive MAP level (well below
+            // the 60 mmHg AHE threshold) regardless of patient baseline.
+            let target_map = rng.gen_f64(44.0, 54.0);
+            let depth = (patient.base_map - target_map).max(15.0) as f32;
+            phase = EpisodePhase::Ramp { remaining_s: ramp, total_s: ramp, depth };
+            next_episode_in = sample_exp(rng, episode_rate)
+                + ramp
+                + cfg.low_s.1
+                + cfg.recover_s.1; // no overlapping episodes
+        }
+        // Transition Ramp → Low → Recover as phases elapse.
+        phase = match phase {
+            EpisodePhase::Ramp { remaining_s, .. } if remaining_s <= 0.0 => {
+                let low = rng.gen_f64(cfg.low_s.0, cfg.low_s.1);
+                let depth = match phase {
+                    EpisodePhase::Ramp { depth, .. } => depth,
+                    _ => unreachable!(),
+                };
+                EpisodePhase::Low { remaining_s: low, depth }
+            }
+            EpisodePhase::Low { remaining_s, depth } if remaining_s <= 0.0 => {
+                let _ = remaining_s;
+                let rec = rng.gen_f64(cfg.recover_s.0, cfg.recover_s.1);
+                EpisodePhase::Recover { remaining_s: rec, total_s: rec, depth }
+            }
+            EpisodePhase::Recover { remaining_s, .. } if remaining_s <= 0.0 => EpisodePhase::None,
+            p => p,
+        };
+
+        // --- MAP composition -------------------------------------------------
+        // Slow OU drift: dX = -theta X dt + sigma dW (level wander).
+        patient.drift += -patient.drift_theta * patient.drift * dt
+            + patient.drift_sigma * dt.sqrt() * rng.next_normal();
+        patient.drift = patient.drift.clamp(-8.0, 8.0);
+        // Fast OU: minute-scale trajectory shape inside lag windows.
+        patient.fast += -patient.fast_theta * patient.fast * dt
+            + patient.fast_sigma * dt.sqrt() * rng.next_normal();
+        patient.fast = patient.fast.clamp(-6.0, 6.0);
+
+        // --- transient dips (only outside real episodes) -------------------
+        next_dip_in -= dt;
+        if dip_left > 0.0 {
+            dip_left -= dt;
+        } else if next_dip_in <= 0.0 && matches!(phase, EpisodePhase::None) {
+            dip_total = rng.gen_f64(cfg.dip_s.0, cfg.dip_s.1);
+            dip_left = dip_total;
+            // Bottom lands at MAP ~58-68: borderline, not a sustained AHE.
+            let dip_target = rng.gen_f64(58.0, 68.0);
+            dip_depth = (patient.base_map - dip_target).max(4.0);
+            next_dip_in = sample_exp(rng, dip_rate) + dip_total;
+        }
+        let dip_offset = if dip_left > 0.0 && dip_total > 0.0 {
+            // Smooth down-and-up bump over the dip duration.
+            let progress = (1.0 - dip_left / dip_total).clamp(0.0, 1.0);
+            dip_depth * (std::f64::consts::PI * progress).sin()
+        } else {
+            0.0
+        };
+
+        let episode_offset = episode_offset(&phase) as f64 + dip_offset;
+        let osc = patient.osc_amp
+            * (2.0 * std::f64::consts::PI * patient.osc_freq * t).sin();
+        let noise = rng.gen_normal(0.0, cfg.noise_std);
+        let map = (patient.base_map + patient.drift + patient.fast + osc + noise
+            - episode_offset)
+            .clamp(20.0, 180.0);
+
+        // --- derive SBP/DBP ---------------------------------------------------
+        let pulse = (patient.pulse + rng.gen_normal(0.0, 2.0)).clamp(15.0, 80.0);
+        // MAP = DBP + pulse/3  =>  DBP = MAP - pulse/3, SBP = DBP + pulse.
+        let dbp = map - pulse / 3.0;
+        let sbp = dbp + pulse;
+
+        // --- artifacts ---------------------------------------------------------
+        let beat = if flatline_left > 0 {
+            flatline_left -= 1;
+            Beat { t, sbp: flatline_value, dbp: flatline_value }
+        } else if rng.gen_bool(cfg.artifact_prob) {
+            if rng.gen_bool(cfg.flatline_prob) {
+                flatline_left = rng.gen_range(8, 40) as usize;
+                flatline_value = rng.gen_f64(30.0, 120.0) as f32;
+                Beat { t, sbp: flatline_value, dbp: flatline_value }
+            } else if rng.gen_bool(0.5) {
+                // pressure-bag flush / motion spike
+                Beat { t, sbp: rng.gen_f64(230.0, 320.0) as f32, dbp: rng.gen_f64(120.0, 200.0) as f32 }
+            } else {
+                // transducer dropout
+                Beat { t, sbp: rng.gen_f64(0.0, 18.0) as f32, dbp: rng.gen_f64(0.0, 9.0) as f32 }
+            }
+        } else {
+            Beat { t, sbp: sbp as f32, dbp: dbp as f32 }
+        };
+        beats.push(beat);
+        t += dt;
+    }
+    beats
+}
+
+fn step_phase(phase: EpisodePhase, dt: f64) -> EpisodePhase {
+    match phase {
+        EpisodePhase::None => EpisodePhase::None,
+        EpisodePhase::Ramp { remaining_s, total_s, depth } => {
+            EpisodePhase::Ramp { remaining_s: remaining_s - dt, total_s, depth }
+        }
+        EpisodePhase::Low { remaining_s, depth } => {
+            EpisodePhase::Low { remaining_s: remaining_s - dt, depth }
+        }
+        EpisodePhase::Recover { remaining_s, total_s, depth } => {
+            EpisodePhase::Recover { remaining_s: remaining_s - dt, total_s, depth }
+        }
+    }
+}
+
+/// MAP depression (mmHg) contributed by the episode phase machine.
+fn episode_offset(phase: &EpisodePhase) -> f32 {
+    match *phase {
+        EpisodePhase::None => 0.0,
+        // Smooth cosine ramp from 0 to depth — gradual, learnable decline.
+        EpisodePhase::Ramp { remaining_s, total_s, depth } => {
+            let progress = (1.0 - remaining_s / total_s).clamp(0.0, 1.0);
+            let smooth = 0.5 - 0.5 * (std::f64::consts::PI * progress).cos();
+            depth * smooth as f32
+        }
+        EpisodePhase::Low { depth, .. } => depth,
+        EpisodePhase::Recover { remaining_s, total_s, depth } => {
+            let progress = (1.0 - remaining_s / total_s).clamp(0.0, 1.0);
+            let smooth = 0.5 + 0.5 * (std::f64::consts::PI * progress).cos();
+            depth * smooth as f32
+        }
+    }
+}
+
+fn sample_exp(rng: &mut Xoshiro256, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(seed: u64) -> Vec<Beat> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let cfg = WaveformConfig { record_hours: (2.0, 2.0), ..Default::default() };
+        generate_record(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn record_is_deterministic() {
+        let a = gen(11);
+        let b = gen(11);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[100], b[100]);
+        assert_eq!(a[a.len() - 1], b[b.len() - 1]);
+    }
+
+    #[test]
+    fn beat_count_matches_heart_rate_band() {
+        let beats = gen(12);
+        // 2 hours at 35–180 bpm.
+        let lo = 2.0 * 60.0 * 35.0;
+        let hi = 2.0 * 60.0 * 180.0;
+        assert!((beats.len() as f64) > lo && (beats.len() as f64) < hi);
+    }
+
+    #[test]
+    fn timestamps_strictly_increase() {
+        let beats = gen(13);
+        for w in beats.windows(2) {
+            assert!(w[1].t > w[0].t);
+        }
+    }
+
+    #[test]
+    fn map_between_dbp_and_sbp_for_normal_beats() {
+        let beats = gen(14);
+        let mut normal = 0;
+        for b in &beats {
+            if b.sbp > b.dbp && b.dbp > 20.0 && b.sbp < 220.0 {
+                let m = b.map();
+                assert!(m > b.dbp && m < b.sbp, "MAP outside [DBP, SBP]: {b:?}");
+                normal += 1;
+            }
+        }
+        assert!(normal as f64 > beats.len() as f64 * 0.95);
+    }
+
+    #[test]
+    fn episodes_actually_depress_map() {
+        // Long record with high episode rate must contain sub-60 stretches.
+        let mut rng = Xoshiro256::seed_from_u64(15);
+        let cfg = WaveformConfig {
+            record_hours: (24.0, 24.0),
+            episodes_per_day: 5.5,
+            ..Default::default()
+        };
+        let beats = generate_record(&cfg, &mut rng);
+        let low = beats.iter().filter(|b| b.map() < 60.0 && b.map() > 25.0).count();
+        assert!(
+            low as f64 > beats.len() as f64 * 0.02,
+            "expected hypotensive stretches, got {low}/{}",
+            beats.len()
+        );
+    }
+
+    #[test]
+    fn zero_episode_rate_keeps_map_healthy() {
+        let mut rng = Xoshiro256::seed_from_u64(16);
+        let cfg = WaveformConfig {
+            record_hours: (6.0, 6.0),
+            episodes_per_day: 1e-9,
+            dips_per_day: 1e-9,
+            artifact_prob: 0.0,
+            ..Default::default()
+        };
+        let beats = generate_record(&cfg, &mut rng);
+        let low = beats.iter().filter(|b| b.map() < 60.0).count();
+        assert!(
+            (low as f64) < beats.len() as f64 * 0.01,
+            "healthy record has {low} hypotensive beats"
+        );
+    }
+
+    #[test]
+    fn artifacts_present_at_configured_rate() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let cfg = WaveformConfig {
+            record_hours: (8.0, 8.0),
+            artifact_prob: 0.01,
+            ..Default::default()
+        };
+        let beats = generate_record(&cfg, &mut rng);
+        let weird = beats
+            .iter()
+            .filter(|b| b.sbp <= b.dbp || b.sbp > 220.0 || b.dbp < 10.0)
+            .count();
+        // Flatlines amplify the rate; expect at least the base rate.
+        assert!(weird as f64 > beats.len() as f64 * 0.005, "weird={weird}");
+    }
+}

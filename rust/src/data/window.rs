@@ -1,0 +1,430 @@
+//! Rolling-window dataset extraction (paper §4, first paragraph).
+//!
+//! A datapoint is a time series spanning a *lag window* of length `l`
+//! minutes, divided into `d = 30` subwindows; each sample is the mean MAP
+//! of the **valid** heart beats in that subwindow. The point is labeled
+//! positive iff an Acute Hypotensive Episode (AHE) occurs in the
+//! *condition window* of length `c` minutes immediately following the lag
+//! window, where AHE = "a c-minute interval in which at least 90% of the
+//! per-beat MAP values are below 60 mmHg".
+//!
+//! The rolling algorithm moves the window by 10% of the total window size
+//! `(l + c)` when no AHE is present, and jumps immediately past the
+//! previous window when an AHE is present — reproducing the class balance
+//! of Table 1.
+//!
+//! For efficiency the record is first aggregated to a per-second series
+//! with prefix sums, making every window O(d) regardless of record length.
+
+use crate::data::beats::{assess, BeatFlag, ValidityConfig};
+use crate::data::waveform::Beat;
+
+/// Specification of a windowed AHE-prediction dataset (Table 1 row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowSpec {
+    /// Human-readable name, e.g. "AHE-301-30c".
+    pub name: String,
+    /// Lag window length in minutes (`l`).
+    pub lag_min: f64,
+    /// Number of subwindows (`d`); each sample covers `l/d` minutes.
+    pub d: usize,
+    /// Condition window length in minutes (`c`).
+    pub cond_min: f64,
+    /// Stride as a fraction of `(l + c)` when no AHE is found.
+    pub stride_frac: f64,
+    /// AHE definition: fraction of per-beat MAPs that must be low.
+    pub ahe_low_frac: f64,
+    /// AHE definition: hypotension threshold (mmHg).
+    pub ahe_thresh: f32,
+    /// Minimum fraction of subwindows that must contain at least one valid
+    /// beat for the window to be usable (gap tolerance).
+    pub min_covered_frac: f64,
+}
+
+impl WindowSpec {
+    /// Paper dataset AHE-301-30c: l = 30 min, l/d = 1 min, c = 30 min.
+    pub fn ahe_301_30c() -> Self {
+        Self {
+            name: "AHE-301-30c".into(),
+            lag_min: 30.0,
+            d: 30,
+            cond_min: 30.0,
+            stride_frac: 0.1,
+            ahe_low_frac: 0.9,
+            ahe_thresh: 60.0,
+            min_covered_frac: 0.8,
+        }
+    }
+
+    /// Paper dataset AHE-51-5c: l = 5 min, l/d = 10 s, c = 5 min.
+    pub fn ahe_51_5c() -> Self {
+        Self {
+            name: "AHE-51-5c".into(),
+            lag_min: 5.0,
+            d: 30,
+            cond_min: 5.0,
+            stride_frac: 0.1,
+            ahe_low_frac: 0.9,
+            ahe_thresh: 60.0,
+            min_covered_frac: 0.8,
+        }
+    }
+
+    /// Kim et al. [10, 11] configuration (for the Table 1 reference row).
+    pub fn kim_2016() -> Self {
+        Self {
+            name: "Kim-301-30c".into(),
+            lag_min: 300.0,
+            d: 300,
+            cond_min: 30.0,
+            stride_frac: 0.1,
+            ahe_low_frac: 0.9,
+            ahe_thresh: 60.0,
+            min_covered_frac: 0.8,
+        }
+    }
+
+    pub fn lag_s(&self) -> f64 {
+        self.lag_min * 60.0
+    }
+    pub fn cond_s(&self) -> f64 {
+        self.cond_min * 60.0
+    }
+    pub fn total_s(&self) -> f64 {
+        self.lag_s() + self.cond_s()
+    }
+    pub fn stride_s(&self) -> f64 {
+        (self.total_s() * self.stride_frac).max(1.0)
+    }
+    pub fn subwindow_s(&self) -> f64 {
+        self.lag_s() / self.d as f64
+    }
+}
+
+/// Per-second aggregation of a record's valid beats, with prefix sums for
+/// O(1) range queries.
+#[derive(Debug, Clone)]
+pub struct SecondsSeries {
+    /// prefix_map[i] = Σ MAP of valid beats in seconds [0, i).
+    prefix_map: Vec<f64>,
+    /// prefix_valid[i] = # valid beats in seconds [0, i).
+    prefix_valid: Vec<u32>,
+    /// prefix_low[i] = # valid beats with MAP < thresh in seconds [0, i).
+    prefix_low: Vec<u32>,
+    /// Hypotension threshold the low counter was built with.
+    pub thresh: f32,
+}
+
+impl SecondsSeries {
+    /// Aggregate a record: validity per beat, then per-second sums.
+    pub fn build(beats: &[Beat], validity: &ValidityConfig, thresh: f32) -> Self {
+        let total_s = beats.last().map(|b| b.t as usize + 1).unwrap_or(0);
+        let flags = assess(beats, validity);
+        let mut map_sum = vec![0f64; total_s];
+        let mut valid = vec![0u32; total_s];
+        let mut low = vec![0u32; total_s];
+        for (b, f) in beats.iter().zip(&flags) {
+            if *f != BeatFlag::Valid {
+                continue;
+            }
+            let s = b.t as usize;
+            let m = b.map();
+            map_sum[s] += m as f64;
+            valid[s] += 1;
+            if m < thresh {
+                low[s] += 1;
+            }
+        }
+        // Prefix sums (length total_s + 1).
+        let mut prefix_map = vec![0f64; total_s + 1];
+        let mut prefix_valid = vec![0u32; total_s + 1];
+        let mut prefix_low = vec![0u32; total_s + 1];
+        for i in 0..total_s {
+            prefix_map[i + 1] = prefix_map[i] + map_sum[i];
+            prefix_valid[i + 1] = prefix_valid[i] + valid[i];
+            prefix_low[i + 1] = prefix_low[i] + low[i];
+        }
+        Self { prefix_map, prefix_valid, prefix_low, thresh }
+    }
+
+    /// Record length in whole seconds.
+    pub fn len_s(&self) -> usize {
+        self.prefix_map.len() - 1
+    }
+
+    /// (sum of MAPs, count of valid beats) in seconds `[a, b)`, clamped.
+    fn range(&self, a: usize, b: usize) -> (f64, u32) {
+        let b = b.min(self.len_s());
+        let a = a.min(b);
+        (
+            self.prefix_map[b] - self.prefix_map[a],
+            self.prefix_valid[b] - self.prefix_valid[a],
+        )
+    }
+
+    fn range_low(&self, a: usize, b: usize) -> (u32, u32) {
+        let b = b.min(self.len_s());
+        let a = a.min(b);
+        (
+            self.prefix_low[b] - self.prefix_low[a],
+            self.prefix_valid[b] - self.prefix_valid[a],
+        )
+    }
+
+    /// Mean MAP of valid beats in `[a, b)` seconds, or None if empty.
+    pub fn mean_map(&self, a: usize, b: usize) -> Option<f32> {
+        let (sum, count) = self.range(a, b);
+        if count == 0 {
+            None
+        } else {
+            Some((sum / count as f64) as f32)
+        }
+    }
+
+    /// AHE test over `[a, b)` seconds: at least `low_frac` of the valid
+    /// per-beat MAPs below the threshold (and a sane minimum beat count so
+    /// empty stretches don't count as episodes).
+    pub fn is_ahe(&self, a: usize, b: usize, low_frac: f64) -> bool {
+        let (low, total) = self.range_low(a, b);
+        let span = b.saturating_sub(a).max(1);
+        // Require ≥ 0.2 valid beats/second on average (HR ≥ 12 bpm) —
+        // guards against labeling signal-loss gaps as hypotension.
+        if (total as f64) < span as f64 * 0.2 {
+            return false;
+        }
+        low as f64 >= low_frac * total as f64
+    }
+}
+
+/// One extracted datapoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowPoint {
+    /// `d` subwindow mean-MAP samples.
+    pub series: Vec<f32>,
+    /// AHE occurred in the condition window.
+    pub label: bool,
+    /// Lag-window start time (seconds) — kept for traceability.
+    pub t_start: f64,
+}
+
+/// Apply the rolling-window algorithm to one record.
+pub fn extract_windows(series: &SecondsSeries, spec: &WindowSpec) -> Vec<WindowPoint> {
+    let lag = spec.lag_s() as usize;
+    let cond = spec.cond_s() as usize;
+    let total = lag + cond;
+    let stride = spec.stride_s() as usize;
+    let sub = spec.subwindow_s();
+    let mut out = Vec::new();
+    if series.len_s() < total {
+        return out;
+    }
+    let mut start = 0usize;
+    while start + total <= series.len_s() {
+        // Subwindow means over the lag window.
+        let mut samples = Vec::with_capacity(spec.d);
+        let mut covered = 0usize;
+        for k in 0..spec.d {
+            let a = start + (k as f64 * sub) as usize;
+            let b = start + (((k + 1) as f64) * sub) as usize;
+            match series.mean_map(a, b.max(a + 1)) {
+                Some(m) => {
+                    samples.push(m);
+                    covered += 1;
+                }
+                None => samples.push(f32::NAN), // filled below if tolerable
+            }
+        }
+        let usable = covered as f64 >= spec.min_covered_frac * spec.d as f64;
+        let label = series.is_ahe(start + lag, start + total, spec.ahe_low_frac);
+        if usable {
+            // Fill gaps by nearest previous (then next) valid sample so
+            // points are dense vectors — LSH needs complete coordinates.
+            fill_gaps(&mut samples);
+            out.push(WindowPoint { series: samples, label, t_start: start as f64 });
+        }
+        // Rolling rule from the paper.
+        start += if label { total } else { stride };
+    }
+    out
+}
+
+/// Replace NaNs with the nearest valid neighbor (forward fill, then
+/// backward fill for a leading gap).
+fn fill_gaps(xs: &mut [f32]) {
+    let mut last: Option<f32> = None;
+    for x in xs.iter_mut() {
+        if x.is_nan() {
+            if let Some(v) = last {
+                *x = v;
+            }
+        } else {
+            last = Some(*x);
+        }
+    }
+    let mut next: Option<f32> = None;
+    for x in xs.iter_mut().rev() {
+        if x.is_nan() {
+            if let Some(v) = next {
+                *x = v;
+            }
+        } else {
+            next = Some(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::waveform::{generate_record, WaveformConfig};
+    use crate::util::rng::Xoshiro256;
+
+    /// Deterministic sub-mmHg jitter so synthetic beats are not rejected
+    /// by the (correct) flatline detector.
+    fn jitter(s: usize) -> f32 {
+        ((s * 7919) % 13) as f32 * 0.01 - 0.06
+    }
+
+    /// Near-constant-MAP synthetic seconds series without the beat model.
+    fn flat_series(len_s: usize, map: f32) -> SecondsSeries {
+        let beats: Vec<Beat> = (0..len_s)
+            .map(|s| {
+                let m = map + jitter(s);
+                Beat { t: s as f64 + 0.1, sbp: m + 14.0, dbp: m - 7.0 }
+            })
+            .collect();
+        SecondsSeries::build(&beats, &ValidityConfig::default(), 60.0)
+    }
+
+    /// Series that is healthy then hypotensive from `drop_at` seconds on.
+    fn dropping_series(len_s: usize, drop_at: usize) -> SecondsSeries {
+        let beats: Vec<Beat> = (0..len_s)
+            .map(|s| {
+                // Gradual 60-second transition to avoid DeltaJump flags.
+                let frac = ((s as f64 - drop_at as f64) / 60.0).clamp(0.0, 1.0) as f32;
+                let map = 90.0 - frac * 45.0 + jitter(s); // 90 → 45 mmHg
+                Beat { t: s as f64 + 0.1, sbp: map + 14.0, dbp: map - 7.0 }
+            })
+            .collect();
+        SecondsSeries::build(&beats, &ValidityConfig::default(), 60.0)
+    }
+
+    #[test]
+    fn seconds_series_prefix_sums() {
+        let s = flat_series(100, 90.0);
+        assert_eq!(s.len_s(), 100);
+        let m = s.mean_map(10, 20).unwrap();
+        assert!((m - 90.0).abs() < 0.1, "m={m}");
+        assert!(s.mean_map(100, 110).is_none());
+        assert!(!s.is_ahe(0, 100, 0.9));
+    }
+
+    #[test]
+    fn ahe_detection_on_dropping_series() {
+        let s = dropping_series(600, 100);
+        // After 160 s everything is at MAP 45 < 60.
+        assert!(s.is_ahe(200, 500, 0.9));
+        assert!(!s.is_ahe(0, 90, 0.9));
+    }
+
+    #[test]
+    fn empty_interval_is_not_ahe() {
+        // Sparse beats (one per 10 s => 0.1 beats/s < 0.2 floor).
+        let beats: Vec<Beat> = (0..60)
+            .map(|i| Beat { t: i as f64 * 10.0, sbp: 55.0, dbp: 40.0 })
+            .collect();
+        let s = SecondsSeries::build(&beats, &ValidityConfig::default(), 60.0);
+        assert!(!s.is_ahe(0, 600, 0.9), "sparse data must not label AHE");
+    }
+
+    #[test]
+    fn window_extraction_counts_and_labels() {
+        let spec = WindowSpec::ahe_51_5c();
+        // 2 hours healthy: every window negative, strided by 1 min.
+        let s = flat_series(7200, 90.0);
+        let pts = extract_windows(&s, &spec);
+        // (7200 - 600) / 60 + 1 = 111 windows.
+        assert_eq!(pts.len(), 111);
+        assert!(pts.iter().all(|p| !p.label));
+        assert!(pts.iter().all(|p| p.series.len() == 30));
+        assert!(pts
+            .iter()
+            .all(|p| p.series.iter().all(|x| (x - 90.0).abs() < 0.5)));
+    }
+
+    #[test]
+    fn positive_windows_jump_past() {
+        let spec = WindowSpec::ahe_51_5c();
+        // Hypotensive from t=1000s to end of a 4000 s record.
+        let s = dropping_series(4000, 1000);
+        let pts = extract_windows(&s, &spec);
+        let positives: Vec<&WindowPoint> = pts.iter().filter(|p| p.label).collect();
+        assert!(!positives.is_empty(), "expected positive windows");
+        // After each positive, next start is at least total window later.
+        for w in pts.windows(2) {
+            if w[0].label {
+                assert!(
+                    w[1].t_start - w[0].t_start >= spec.total_s() - 1.0,
+                    "jump rule violated: {} -> {}",
+                    w[0].t_start,
+                    w[1].t_start
+                );
+            }
+        }
+        // Positive windows' lag series must show the decline (low tail).
+        for p in positives {
+            let tail = p.series[29];
+            let head = p.series[0];
+            assert!(
+                tail <= head + 0.2,
+                "expected non-increasing MAP in pre-AHE window (head={head}, tail={tail})"
+            );
+        }
+    }
+
+    #[test]
+    fn stride_is_10pct_of_total() {
+        let spec = WindowSpec::ahe_301_30c();
+        assert!((spec.stride_s() - 360.0).abs() < 1e-9);
+        let spec2 = WindowSpec::ahe_51_5c();
+        assert!((spec2.stride_s() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gap_fill_produces_dense_vectors() {
+        let mut xs = vec![f32::NAN, 2.0, f32::NAN, f32::NAN, 5.0, f32::NAN];
+        fill_gaps(&mut xs);
+        assert_eq!(xs, vec![2.0, 2.0, 2.0, 2.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn short_record_yields_nothing() {
+        let spec = WindowSpec::ahe_301_30c();
+        let s = flat_series(600, 90.0); // 10 min < 60 min total
+        assert!(extract_windows(&s, &spec).is_empty());
+    }
+
+    #[test]
+    fn end_to_end_on_generated_record() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let cfg = WaveformConfig {
+            record_hours: (12.0, 12.0),
+            episodes_per_day: 6.0,
+            ..Default::default()
+        };
+        let beats = generate_record(&cfg, &mut rng);
+        let series = SecondsSeries::build(&beats, &ValidityConfig::default(), 60.0);
+        let spec = WindowSpec::ahe_51_5c();
+        let pts = extract_windows(&series, &spec);
+        assert!(pts.len() > 200, "got {}", pts.len());
+        let pos = pts.iter().filter(|p| p.label).count();
+        // Episodes at 3/day over 10h: expect a few positives, massively
+        // outnumbered by negatives.
+        assert!(pos > 0, "no positive windows generated");
+        assert!((pos as f64) < pts.len() as f64 * 0.35, "pos={pos}/{}", pts.len());
+        // All points dense and in physiological range.
+        for p in &pts {
+            assert!(p.series.iter().all(|x| x.is_finite() && *x > 15.0 && *x < 185.0));
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Shared experiment machinery: corpus caching, cluster evaluation, the
+//! PKNN baseline, and the speed/quality measurements every table and
+//! figure of the paper is built from.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{build_cluster, Cluster, ClusterConfig};
+use crate::data::{build_corpus, Corpus, CorpusConfig, Dataset, WindowSpec};
+use crate::engine::native::NativeEngine;
+use crate::engine::Metric;
+use crate::knn::exhaustive::pknn_query;
+use crate::knn::predict::{positive_share, VoteConfig};
+use crate::metrics::Confusion;
+use crate::slsh::SlshParams;
+use crate::util::stats::{self, Interval};
+
+/// Scale presets. The paper's datasets are 0.8M / 1.37M points; defaults
+/// run at 1/8 scale so the full suite finishes in minutes on one core
+/// (`--full` for paper scale — see DESIGN.md §Substitutions).
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub n_301: usize,
+    pub n_51: usize,
+    pub queries: usize,
+}
+
+impl Scale {
+    pub fn default_scale() -> Self {
+        Self { n_301: 100_000, n_51: 171_000, queries: 1000 }
+    }
+
+    pub fn full() -> Self {
+        // Paper: n = 801,725 / 1,371,479, 2000 out-of-sample queries.
+        Self { n_301: 801_725, n_51: 1_371_479, queries: 2000 }
+    }
+
+    pub fn smoke() -> Self {
+        Self { n_301: 12_000, n_51: 16_000, queries: 150 }
+    }
+
+    /// Scale selection for the bench binaries: `DSLSH_BENCH_SCALE` ∈
+    /// {smoke, default, full} (default: default).
+    pub fn from_env() -> Self {
+        match std::env::var("DSLSH_BENCH_SCALE").as_deref() {
+            Ok("full") => Scale::full(),
+            Ok("smoke") => Scale::smoke(),
+            _ => Scale::default_scale(),
+        }
+    }
+}
+
+/// Seed for the bench binaries: `DSLSH_SEED` (default 42).
+pub fn seed_from_env() -> u64 {
+    std::env::var("DSLSH_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+/// Disk-cached corpus generation (dataset builds are the most expensive
+/// part of the suite; every experiment shares the same cached corpora).
+pub fn cached_corpus(spec: &WindowSpec, n: usize, nq: usize, seed: u64) -> Result<Corpus> {
+    let dir = cache_dir();
+    std::fs::create_dir_all(&dir).context("creating cache dir")?;
+    let stem = format!("{}-g6-n{}-q{}-s{}", spec.name, n, nq, seed);
+    let data_path = dir.join(format!("{stem}.data"));
+    let query_path = dir.join(format!("{stem}.queries"));
+    if data_path.exists() && query_path.exists() {
+        let data = Dataset::load(&data_path)?;
+        let queries = Dataset::load(&query_path)?;
+        if data.len() == n && queries.len() == nq {
+            return Ok(Corpus { data, queries });
+        }
+    }
+    crate::log_info!("harness", "generating corpus {stem} (not cached)");
+    let corpus = build_corpus(&CorpusConfig::new(spec.clone(), n, nq, seed));
+    corpus.data.save(&data_path)?;
+    corpus.queries.save(&query_path)?;
+    Ok(corpus)
+}
+
+fn cache_dir() -> PathBuf {
+    std::env::var("DSLSH_CACHE").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("data_cache"))
+}
+
+/// Measurements from running the query set through a cluster.
+#[derive(Debug, Clone)]
+pub struct EvalRun {
+    /// Max comparisons across processors, one entry per query.
+    pub comps: Vec<f64>,
+    pub confusion: Confusion,
+    pub mcc: f64,
+    pub median_comps: f64,
+    pub ci: Interval,
+    /// Mean end-to-end latency per query (seconds).
+    pub mean_latency_s: f64,
+}
+
+/// Drive every query through the Orchestrator and collect the paper's
+/// measurements.
+pub fn eval_cluster(cluster: &Cluster, corpus: &Corpus) -> EvalRun {
+    let mut comps = Vec::with_capacity(corpus.queries.len());
+    let mut confusion = Confusion::new();
+    let mut lat = 0.0;
+    for i in 0..corpus.queries.len() {
+        let r = cluster.query(corpus.queries.point(i));
+        comps.push(r.max_comparisons as f64);
+        confusion.push(r.prediction, corpus.queries.labels[i]);
+        lat += r.latency_s;
+    }
+    let median_comps = stats::median(&comps);
+    let ci = stats::median_ci(&comps, 0.95);
+    EvalRun {
+        mcc: confusion.mcc(),
+        median_comps,
+        ci,
+        confusion,
+        mean_latency_s: lat / corpus.queries.len().max(1) as f64,
+        comps,
+    }
+}
+
+/// PKNN baseline over the same query set: exact K-NN prediction quality
+/// and the (deterministic) n/(pν) per-processor comparison count.
+pub struct PknnRun {
+    pub comps_per_proc: u64,
+    pub confusion: Confusion,
+    pub mcc: f64,
+}
+
+pub fn eval_pknn(data: &Dataset, queries: &Dataset, k: usize, procs: usize, vote: &VoteConfig) -> PknnRun {
+    let engine = NativeEngine::new();
+    let mut confusion = Confusion::new();
+    let mut comps_per_proc = 0u64;
+    for i in 0..queries.len() {
+        let r = pknn_query(
+            &engine,
+            Metric::L1,
+            queries.point(i),
+            &data.points,
+            data.dim,
+            &data.labels,
+            k,
+            procs,
+        );
+        comps_per_proc = *r.comparisons.iter().max().unwrap();
+        let share = positive_share(&r.neighbors, vote);
+        confusion.push(share >= vote.threshold as f64, queries.labels[i]);
+    }
+    PknnRun { comps_per_proc, mcc: confusion.mcc(), confusion }
+}
+
+/// One evaluated configuration (a point in Figure 3/4, a row in a table).
+#[derive(Debug, Clone)]
+pub struct ConfigPoint {
+    pub label: String,
+    pub m: usize,
+    pub l: usize,
+    pub inner: Option<(usize, usize)>,
+    pub median_comps: f64,
+    pub ci: Interval,
+    pub mcc: f64,
+    pub mcc_loss: f64,
+    /// Speedup of median max-comparisons vs PKNN's per-processor share.
+    pub speedup: f64,
+}
+
+/// Build a cluster for `params`, evaluate it, and relate it to a PKNN
+/// reference that was computed once by the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_config(
+    corpus: &Corpus,
+    params: &SlshParams,
+    cluster_cfg: &ClusterConfig,
+    pknn: &PknnRun,
+    label: String,
+) -> Result<ConfigPoint> {
+    let cluster = build_cluster(&corpus.data, params, cluster_cfg)?;
+    let run = eval_cluster(&cluster, corpus);
+    Ok(ConfigPoint {
+        label,
+        m: params.outer.m,
+        l: params.outer.l,
+        inner: params.inner.as_ref().map(|i| (i.m, i.l)),
+        speedup: pknn.comps_per_proc as f64 / run.median_comps.max(1.0),
+        median_comps: run.median_comps,
+        ci: run.ci,
+        mcc: run.mcc,
+        mcc_loss: pknn.mcc - run.mcc,
+    })
+}
+
+/// Outer spec helper: the experiment grids always hash over the corpus's
+/// global value range with a shared seed (the Root's broadcast).
+pub fn outer_params(data: &Dataset, m: usize, l: usize, seed: u64, k: usize) -> SlshParams {
+    let (lo, hi) = data.value_range();
+    SlshParams::lsh_only(crate::lsh::family::LayerSpec::outer_l1(data.dim, m, l, lo, hi, seed), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_cache_roundtrip() {
+        let dir = std::env::temp_dir().join("dslsh_harness_cache");
+        std::env::set_var("DSLSH_CACHE", &dir);
+        let spec = WindowSpec::ahe_51_5c();
+        let a = cached_corpus(&spec, 1500, 30, 9).unwrap();
+        let b = cached_corpus(&spec, 1500, 30, 9).unwrap(); // from disk
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.queries, b.queries);
+        std::env::remove_var("DSLSH_CACHE");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pknn_eval_reports_equal_shares() {
+        let spec = WindowSpec::ahe_51_5c();
+        let corpus = build_corpus(&CorpusConfig::new(spec, 2000, 20, 3));
+        let vote = VoteConfig::default();
+        let run = eval_pknn(&corpus.data, &corpus.queries, 10, 8, &vote);
+        assert_eq!(run.comps_per_proc, 250);
+        assert!(run.mcc >= -1.0 && run.mcc <= 1.0);
+    }
+
+    #[test]
+    fn eval_config_end_to_end_smoke() {
+        let spec = WindowSpec::ahe_51_5c();
+        let corpus = build_corpus(&CorpusConfig::new(spec, 3000, 25, 4));
+        let vote = VoteConfig::default();
+        let pknn = eval_pknn(&corpus.data, &corpus.queries, 10, 4, &vote);
+        let params = outer_params(&corpus.data, 48, 12, 7, 10);
+        let point = eval_config(
+            &corpus,
+            &params,
+            &ClusterConfig::new(2, 2),
+            &pknn,
+            "smoke".into(),
+        )
+        .unwrap();
+        assert!(point.median_comps > 0.0);
+        assert!(point.ci.lo <= point.median_comps && point.median_comps <= point.ci.hi);
+        assert!(point.speedup > 0.0);
+        assert!(point.mcc_loss.abs() <= 2.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§4): Table 1 (datasets), Figures 3–4 (speed vs MCC trade-off),
+//! Tables 2–3 (strong scaling), plus the shared harness and reporting.
+
+pub mod harness;
+pub mod report;
+pub mod scaling;
+pub mod table1;
+pub mod tradeoff;
+
+pub use harness::{cached_corpus, eval_cluster, eval_pknn, outer_params, EvalRun, Scale};
+pub use report::Table;
+pub use scaling::{ScalingOptions, ScalingTable};
+pub use tradeoff::TradeoffOptions;

@@ -1,0 +1,165 @@
+//! Result rendering: aligned ASCII tables (what the benches print), CSV
+//! files, and JSON records for EXPERIMENTS.md bookkeeping.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{Json, JsonObj};
+
+/// A printable results table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect();
+        out.push_str(&header.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}", w = w)).collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let escaped: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            out.push_str(&escaped.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `<stem>.csv` and `<stem>.json` under `dir`.
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir).context("creating results dir")?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        let mut obj = JsonObj::new();
+        obj.insert("title", Json::Str(self.title.clone()));
+        obj.insert(
+            "columns",
+            Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        obj.insert(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        std::fs::write(dir.join(format!("{stem}.json")), Json::Obj(obj).to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Format helpers shared by the experiment binaries.
+pub fn fmt_k(x: f64) -> String {
+    format!("{:.2}", x / 1e3)
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Demo", &["pν", "DSLSH", "ratio"]);
+        t.row(vec!["8".into(), "9.58".into(), "10.46".into()]);
+        t.row(vec!["16".into(), "5.60".into(), "8.94".into()]);
+        t
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let r = sample().render();
+        assert!(r.contains("== Demo =="));
+        // title, header, separator, two data rows.
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // All data lines have equal display width (alignment); compare
+        // char counts, not bytes — headers contain non-ASCII ("pν").
+        assert_eq!(lines[3].chars().count(), lines[4].chars().count());
+        assert_eq!(lines[1].chars().count(), lines[3].chars().count());
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1,5".into(), "say \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"1,5\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn save_writes_csv_and_json() {
+        let dir = std::env::temp_dir().join("dslsh_report_test");
+        sample().save(&dir, "demo").unwrap();
+        let csv = std::fs::read_to_string(dir.join("demo.csv")).unwrap();
+        assert!(csv.starts_with("pν,DSLSH,ratio"));
+        let json = std::fs::read_to_string(dir.join("demo.json")).unwrap();
+        assert!(Json::parse(&json).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

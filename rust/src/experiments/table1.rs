@@ -1,0 +1,75 @@
+//! Table 1: employed ABP datasets for AHE prediction — dataset sizes and
+//! class imbalance produced by the rolling-window pipeline, alongside the
+//! paper's reported values.
+
+use anyhow::Result;
+
+use crate::data::WindowSpec;
+use crate::experiments::harness::{cached_corpus, Scale};
+use crate::experiments::report::Table;
+
+/// Paper-reported reference values (name, n, %non-AHE).
+pub const PAPER_ROWS: [(&str, f64, f64); 2] =
+    [("AHE-301-30c", 8.037e5, 98.45), ("AHE-51-5c", 1.373e6, 96.04)];
+
+pub struct Table1Options {
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+pub fn run(opts: &Table1Options) -> Result<Table> {
+    let mut table = Table::new(
+        "Table 1 — employed ABP datasets (ours vs paper)",
+        &["name", "l", "l/d", "c", "n points", "%non-AHE", "paper n", "paper %non-AHE"],
+    );
+    let configs = [
+        (WindowSpec::ahe_301_30c(), opts.scale.n_301, PAPER_ROWS[0]),
+        (WindowSpec::ahe_51_5c(), opts.scale.n_51, PAPER_ROWS[1]),
+    ];
+    for (spec, n, (paper_name, paper_n, paper_neg)) in configs {
+        let corpus = cached_corpus(&spec, n, opts.scale.queries, opts.seed)?;
+        let stats = crate::data::dataset::stats(&spec, &corpus.data);
+        assert_eq!(spec.name, paper_name);
+        table.row(vec![
+            stats.name.clone(),
+            format!("{} min", stats.lag_min),
+            if stats.sub_s >= 60.0 {
+                format!("{} min", stats.sub_s / 60.0)
+            } else {
+                format!("{} s", stats.sub_s)
+            },
+            format!("{} min", stats.cond_min),
+            format!("{}", stats.n),
+            format!("{:.2}%", stats.pct_negative * 100.0),
+            format!("{paper_n:.3e}"),
+            format!("{paper_neg:.2}%"),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke_produces_both_rows() {
+        let dir = std::env::temp_dir().join("dslsh_table1_cache");
+        std::env::set_var("DSLSH_CACHE", &dir);
+        let t = run(&Table1Options {
+            scale: Scale { n_301: 2000, n_51: 2500, queries: 10 },
+            seed: 5,
+        })
+        .unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "AHE-301-30c");
+        assert_eq!(t.rows[1][0], "AHE-51-5c");
+        // Class imbalance must be heavy (paper: >= 96%).
+        for row in &t.rows {
+            let pct: f64 = row[5].trim_end_matches('%').parse().unwrap();
+            assert!(pct > 85.0, "imbalance too weak: {pct}");
+        }
+        std::env::remove_var("DSLSH_CACHE");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

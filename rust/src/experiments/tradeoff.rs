@@ -1,0 +1,204 @@
+//! Figures 3 and 4: speed vs MCC trade-off on AHE-301-30c with p = 8,
+//! ν = 2 (paper §4.1).
+//!
+//! Figure 3: outer layer only (LSH), m_out ∈ {100..200} × L_out ∈
+//! {72, 96, 120}. Figure 4: zoom-in plus the inner layer (SLSH) applied at
+//! the *onset* (the best ≤10%-MCC-loss outer point, m_out = 125,
+//! L_out = 120): m_in ∈ {40, 65, 90, 115} × L_in ∈ {20, 60}, α = 0.005.
+//!
+//! Output: one ConfigPoint per grid entry (median speedup over PKNN, 95%
+//! CI, MCC and MCC loss) — the data behind the paper's scatter plots —
+//! rendered as a table plus an ASCII scatter.
+
+use anyhow::Result;
+
+use crate::coordinator::{ClusterConfig, EngineKind};
+use crate::data::WindowSpec;
+use crate::experiments::harness::{
+    cached_corpus, eval_config, eval_pknn, outer_params, ConfigPoint, Scale,
+};
+use crate::experiments::report::{fmt_f, Table};
+use crate::knn::predict::VoteConfig;
+use crate::slsh::params::{fig3_outer_grid, fig4_inner_grid};
+use crate::slsh::InnerParams;
+
+pub struct TradeoffOptions {
+    pub scale: Scale,
+    pub seed: u64,
+    pub engine: EngineKind,
+    /// ν = 2, p = 8 in the paper.
+    pub nu: usize,
+    pub p: usize,
+    pub k: usize,
+    /// Restrict the grid (smoke runs); None = the paper's full grid.
+    pub max_configs: Option<usize>,
+}
+
+impl TradeoffOptions {
+    pub fn paper_defaults(scale: Scale, seed: u64) -> Self {
+        Self { scale, seed, engine: EngineKind::Native, nu: 2, p: 8, k: 10, max_configs: None }
+    }
+}
+
+pub struct TradeoffResult {
+    pub points: Vec<ConfigPoint>,
+    pub pknn_mcc: f64,
+    pub pknn_comps: u64,
+    pub table: Table,
+    pub scatter: String,
+}
+
+/// Figure 3: the outer (LSH-only) grid.
+pub fn run_fig3(opts: &TradeoffOptions) -> Result<TradeoffResult> {
+    let spec = WindowSpec::ahe_301_30c();
+    let corpus = cached_corpus(&spec, opts.scale.n_301, opts.scale.queries, opts.seed)?;
+    let vote = VoteConfig::default();
+    let procs = opts.nu * opts.p;
+    let pknn = eval_pknn(&corpus.data, &corpus.queries, opts.k, procs, &vote);
+    let mut grid = fig3_outer_grid();
+    if let Some(maxc) = opts.max_configs {
+        grid.truncate(maxc);
+    }
+    let cfg = ClusterConfig::new(opts.nu, opts.p).with_engine(opts.engine);
+    let mut points = Vec::new();
+    for (m, l) in grid {
+        let params = outer_params(&corpus.data, m, l, opts.seed ^ 0xF16_3, opts.k);
+        let label = format!("LSH m={m} L={l}");
+        crate::log_info!("fig3", "evaluating {label}");
+        points.push(eval_config(&corpus, &params, &cfg, &pknn, label)?);
+    }
+    Ok(render(points, &pknn, "Figure 3 — speedup vs MCC loss (outer LSH grid)"))
+}
+
+/// Figure 4: the SLSH inner grid at the onset configuration.
+pub fn run_fig4(opts: &TradeoffOptions) -> Result<TradeoffResult> {
+    let spec = WindowSpec::ahe_301_30c();
+    let corpus = cached_corpus(&spec, opts.scale.n_301, opts.scale.queries, opts.seed)?;
+    let vote = VoteConfig::default();
+    let procs = opts.nu * opts.p;
+    let pknn = eval_pknn(&corpus.data, &corpus.queries, opts.k, procs, &vote);
+    let cfg = ClusterConfig::new(opts.nu, opts.p).with_engine(opts.engine);
+    let (m_out, l_out) = (125, 120);
+    let mut points = Vec::new();
+    // The SLSH onset itself (LSH-only reference point).
+    let onset = outer_params(&corpus.data, m_out, l_out, opts.seed ^ 0xF16_4, opts.k);
+    points.push(eval_config(&corpus, &onset, &cfg, &pknn, "SLSH onset (LSH only)".into())?);
+    let mut grid = fig4_inner_grid();
+    if let Some(maxc) = opts.max_configs {
+        grid.truncate(maxc.saturating_sub(1));
+    }
+    for (m_in, l_in) in grid {
+        let mut params = onset.clone();
+        params.inner = Some(InnerParams {
+            m: m_in,
+            l: l_in,
+            alpha: 0.005,
+            seed: opts.seed ^ 0x5157,
+        });
+        let label = format!("SLSH m_in={m_in} L_in={l_in}");
+        crate::log_info!("fig4", "evaluating {label}");
+        points.push(eval_config(&corpus, &params, &cfg, &pknn, label)?);
+    }
+    Ok(render(points, &pknn, "Figure 4 — SLSH inner layer at the onset (m_out=125, L_out=120)"))
+}
+
+fn render(
+    points: Vec<ConfigPoint>,
+    pknn: &crate::experiments::harness::PknnRun,
+    title: &str,
+) -> TradeoffResult {
+    let mut table = Table::new(
+        title,
+        &["config", "median comps", "CI", "speedup", "MCC", "MCC loss"],
+    );
+    for p in &points {
+        table.row(vec![
+            p.label.clone(),
+            fmt_f(p.median_comps, 0),
+            format!("[{:.0}, {:.0}]", p.ci.lo, p.ci.hi),
+            fmt_f(p.speedup, 2),
+            fmt_f(p.mcc, 3),
+            fmt_f(p.mcc_loss, 3),
+        ]);
+    }
+    let scatter = ascii_scatter(&points);
+    TradeoffResult { pknn_mcc: pknn.mcc, pknn_comps: pknn.comps_per_proc, points, table, scatter }
+}
+
+/// Minimal ASCII rendering of the speedup (x, log-ish) vs MCC-loss (y)
+/// scatter so the trade-off front is visible in terminal output.
+pub fn ascii_scatter(points: &[ConfigPoint]) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    let (w, h) = (64usize, 16usize);
+    let max_speed = points.iter().map(|p| p.speedup).fold(1.0f64, f64::max);
+    let max_loss = points.iter().map(|p| p.mcc_loss).fold(0.05f64, f64::max);
+    let min_loss = points.iter().map(|p| p.mcc_loss).fold(0.0f64, f64::min);
+    let mut grid = vec![vec![' '; w]; h];
+    for (i, p) in points.iter().enumerate() {
+        let x = ((p.speedup.ln() / max_speed.ln()).clamp(0.0, 1.0) * (w - 1) as f64) as usize;
+        let yf = ((p.mcc_loss - min_loss) / (max_loss - min_loss).max(1e-9)).clamp(0.0, 1.0);
+        let y = (yf * (h - 1) as f64) as usize;
+        let ch = char::from_digit((i % 36) as u32, 36).unwrap_or('*');
+        grid[h - 1 - y][x] = ch;
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "MCC loss (top={max_loss:.3}) vs speedup (right={max_speed:.1}x, log scale)\n"
+    ));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_opts() -> TradeoffOptions {
+        TradeoffOptions {
+            scale: Scale { n_301: 4000, n_51: 4000, queries: 40 },
+            seed: 11,
+            engine: EngineKind::Native,
+            nu: 2,
+            p: 2,
+            k: 10,
+            max_configs: Some(3),
+        }
+    }
+
+    #[test]
+    fn fig3_smoke_produces_points_with_cis() {
+        let dir = std::env::temp_dir().join("dslsh_fig3_cache");
+        std::env::set_var("DSLSH_CACHE", &dir);
+        let r = run_fig3(&smoke_opts()).unwrap();
+        assert_eq!(r.points.len(), 3);
+        for p in &r.points {
+            assert!(p.ci.lo <= p.median_comps && p.median_comps <= p.ci.hi);
+            assert!(p.speedup > 0.0);
+        }
+        assert!(r.table.render().contains("Figure 3"));
+        assert!(!r.scatter.is_empty());
+        std::env::remove_var("DSLSH_CACHE");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig4_smoke_includes_onset_and_inner_points() {
+        let dir = std::env::temp_dir().join("dslsh_fig4_cache");
+        std::env::set_var("DSLSH_CACHE", &dir);
+        let r = run_fig4(&smoke_opts()).unwrap();
+        assert!(r.points.len() >= 3);
+        assert!(r.points[0].inner.is_none(), "first point is the LSH onset");
+        assert!(r.points[1].inner.is_some());
+        std::env::remove_var("DSLSH_CACHE");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,113 @@
+//! Exhaustive K-NN — the paper's PKNN baseline.
+//!
+//! Data-parallel exhaustive search "assigns equal shares of the points to
+//! all the processors in all the nodes, resulting in n/(pν) comparisons
+//! per processor" (paper §4.1). [`pknn_query`] simulates exactly that:
+//! the shard is split into `procs` equal ranges, each scanned into a
+//! partial top-K, and the partials reduced — returning both the answer
+//! and the per-processor comparison counts the tables report.
+
+use crate::engine::{DistanceEngine, Metric};
+use crate::knn::heap::{Neighbor, TopK};
+use crate::util::threadpool::chunk_ranges;
+
+/// Result of one exhaustive query.
+#[derive(Debug, Clone)]
+pub struct PknnResult {
+    pub neighbors: Vec<Neighbor>,
+    /// Comparisons performed by each (simulated) processor.
+    pub comparisons: Vec<u64>,
+}
+
+/// Exhaustive K-NN over `data` split across `procs` equal shares.
+#[allow(clippy::too_many_arguments)]
+pub fn pknn_query(
+    engine: &dyn DistanceEngine,
+    metric: Metric,
+    q: &[f32],
+    data: &[f32],
+    dim: usize,
+    labels: &[bool],
+    k: usize,
+    procs: usize,
+) -> PknnResult {
+    let n = labels.len();
+    debug_assert_eq!(data.len(), n * dim);
+    let mut comparisons = Vec::with_capacity(procs);
+    let mut global = TopK::new(k);
+    for range in chunk_ranges(n, procs) {
+        let mut partial = TopK::new(k);
+        let c = engine.scan_range(
+            metric,
+            q,
+            data,
+            dim,
+            range.start as u32..range.end as u32,
+            labels,
+            0,
+            &mut partial,
+        );
+        comparisons.push(c);
+        global.merge(&partial);
+    }
+    PknnResult { neighbors: global.into_sorted(), comparisons }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+    use crate::engine::l1_dist;
+    use crate::util::rng::Xoshiro256;
+
+    fn fixture(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<bool>, Vec<f32>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data = (0..n * dim).map(|_| rng.gen_f64(0.0, 100.0) as f32).collect();
+        let labels = (0..n).map(|_| rng.gen_bool(0.1)).collect();
+        let q = (0..dim).map(|_| rng.gen_f64(0.0, 100.0) as f32).collect();
+        (data, labels, q)
+    }
+
+    #[test]
+    fn comparisons_are_equal_shares() {
+        let (data, labels, q) = fixture(1000, 30, 1);
+        let engine = NativeEngine::new();
+        for procs in [1usize, 3, 8, 40] {
+            let r = pknn_query(&engine, Metric::L1, &q, &data, 30, &labels, 10, procs);
+            assert_eq!(r.comparisons.len(), procs);
+            assert_eq!(r.comparisons.iter().sum::<u64>(), 1000);
+            let max = *r.comparisons.iter().max().unwrap();
+            let min = *r.comparisons.iter().min().unwrap();
+            assert!(max - min <= 1, "shares not equal: {:?}", r.comparisons);
+            assert_eq!(max, (1000usize.div_ceil(procs)) as u64);
+        }
+    }
+
+    #[test]
+    fn result_invariant_to_processor_count() {
+        let (data, labels, q) = fixture(500, 30, 2);
+        let engine = NativeEngine::new();
+        let base = pknn_query(&engine, Metric::L1, &q, &data, 30, &labels, 7, 1);
+        for procs in [2usize, 5, 16] {
+            let r = pknn_query(&engine, Metric::L1, &q, &data, 30, &labels, 7, procs);
+            assert_eq!(r.neighbors, base.neighbors, "procs={procs}");
+        }
+    }
+
+    #[test]
+    fn finds_true_nearest() {
+        let (mut data, labels, q) = fixture(300, 30, 3);
+        // Plant an exact duplicate of the query at row 123.
+        data[123 * 30..124 * 30].copy_from_slice(&q);
+        let engine = NativeEngine::new();
+        let r = pknn_query(&engine, Metric::L1, &q, &data, 30, &labels, 3, 4);
+        assert_eq!(r.neighbors[0].id, 123);
+        assert_eq!(r.neighbors[0].dist, 0.0);
+        // Full-sort cross-check for rank 2.
+        let mut all: Vec<(f32, u64)> = (0..300)
+            .map(|i| (l1_dist(&q, &data[i * 30..(i + 1) * 30]), i as u64))
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(r.neighbors[1].id, all[1].1);
+    }
+}

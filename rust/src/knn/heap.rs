@@ -1,0 +1,246 @@
+//! Bounded top-K accumulator — the per-core partial K-NN set.
+//!
+//! A fixed-capacity binary max-heap on (distance, id): the root is the
+//! current worst of the best-K, so each candidate costs one compare in
+//! the common reject case. Ties break on the smaller global id, making
+//! every reduction in the system deterministic and partition-invariant.
+
+/// One retrieved neighbor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Global point id.
+    pub id: u64,
+    /// Distance to the query (metric chosen by the caller).
+    pub dist: f32,
+    /// The neighbor's AHE label (carried so the Orchestrator's Reducer can
+    /// vote without a second round-trip to the nodes).
+    pub label: bool,
+}
+
+impl Neighbor {
+    /// Total order: by distance, then id. NaN distances sort last (and are
+    /// rejected on push).
+    #[inline]
+    pub fn before(&self, other: &Neighbor) -> bool {
+        match self.dist.partial_cmp(&other.dist) {
+            Some(std::cmp::Ordering::Less) => true,
+            Some(std::cmp::Ordering::Greater) => false,
+            _ => self.id < other.id,
+        }
+    }
+}
+
+/// Fixed-capacity top-K max-heap.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    heap: Vec<Neighbor>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "TopK with k == 0");
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current worst retained distance (∞ while under capacity).
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].dist
+        }
+    }
+
+    /// Offer a candidate; keeps the K best.
+    #[inline]
+    pub fn push(&mut self, n: Neighbor) {
+        if n.dist.is_nan() {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(n);
+            self.sift_up(self.heap.len() - 1);
+        } else if n.before(&self.heap[0]) {
+            self.heap[0] = n;
+            self.sift_down(0);
+        }
+    }
+
+    /// Insert with id-deduplication — REQUIRED when merging partial
+    /// results whose candidate sets may overlap (the same point probed by
+    /// several cores): a K-NN set holds distinct points. O(K) id scan;
+    /// K = 10 in the paper, so this stays cheap. The raw [`push`] skips
+    /// the scan and is reserved for per-core candidate scans, where the
+    /// stamped visited-set already guarantees distinct ids.
+    ///
+    /// [`push`]: TopK::push
+    #[inline]
+    pub fn push_unique(&mut self, n: Neighbor) {
+        if self.heap.iter().any(|m| m.id == n.id) {
+            return; // same point, same distance — nothing to improve
+        }
+        self.push(n);
+    }
+
+    /// Merge another partial result in (the Reducer's operation).
+    /// Deduplicates by id: partials from different cores/nodes may contain
+    /// the same point.
+    pub fn merge(&mut self, other: &TopK) {
+        for &n in &other.heap {
+            self.push_unique(n);
+        }
+    }
+
+    /// Extract neighbors sorted ascending by (dist, id).
+    pub fn into_sorted(mut self) -> Vec<Neighbor> {
+        self.heap
+            .sort_by(|a, b| if a.before(b) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater });
+        self.heap
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            // Max-heap on `before`: parent must NOT be before child.
+            if self.heap[parent].before(&self.heap[i]) {
+                self.heap.swap(parent, i);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.heap.len() && self.heap[largest].before(&self.heap[l]) {
+                largest = l;
+            }
+            if r < self.heap.len() && self.heap[largest].before(&self.heap[r]) {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn nb(id: u64, dist: f32) -> Neighbor {
+        Neighbor { id, dist, label: id % 2 == 0 }
+    }
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (id, d) in [(0, 5.0), (1, 1.0), (2, 4.0), (3, 2.0), (4, 3.0), (5, 0.5)] {
+            t.push(nb(id, d));
+        }
+        let out = t.into_sorted();
+        let ids: Vec<u64> = out.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![5, 1, 3]);
+        assert!(out.windows(2).all(|w| w[0].dist <= w[1].dist));
+    }
+
+    #[test]
+    fn matches_full_sort_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for k in [1usize, 5, 10, 64] {
+            let candidates: Vec<Neighbor> =
+                (0..500).map(|id| nb(id, (rng.gen_below(100)) as f32)).collect();
+            let mut topk = TopK::new(k);
+            for &c in &candidates {
+                topk.push(c);
+            }
+            let mut reference = candidates.clone();
+            reference.sort_by(|a, b| {
+                if a.before(b) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater }
+            });
+            reference.truncate(k);
+            assert_eq!(topk.into_sorted(), reference, "k={k}");
+        }
+    }
+
+    #[test]
+    fn tie_break_on_id_is_deterministic() {
+        let mut t = TopK::new(2);
+        for id in [9u64, 4, 7, 1] {
+            t.push(nb(id, 3.0));
+        }
+        let ids: Vec<u64> = t.into_sorted().iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1, 4]);
+    }
+
+    #[test]
+    fn merge_equals_pushing_union() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let all: Vec<Neighbor> =
+            (0..200).map(|id| nb(id, rng.next_f32() * 10.0)).collect();
+        // Split into 4 "cores", each building a partial top-10.
+        let mut partials: Vec<TopK> = (0..4).map(|_| TopK::new(10)).collect();
+        for (i, &c) in all.iter().enumerate() {
+            partials[i % 4].push(c);
+        }
+        let mut merged = TopK::new(10);
+        for p in &partials {
+            merged.merge(p);
+        }
+        let mut direct = TopK::new(10);
+        for &c in &all {
+            direct.push(c);
+        }
+        assert_eq!(merged.into_sorted(), direct.into_sorted());
+    }
+
+    #[test]
+    fn threshold_enables_early_reject() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(nb(0, 1.0));
+        t.push(nb(1, 2.0));
+        assert_eq!(t.threshold(), 2.0);
+        t.push(nb(2, 1.5));
+        assert_eq!(t.threshold(), 1.5);
+    }
+
+    #[test]
+    fn nan_rejected_under_capacity() {
+        let mut t = TopK::new(3);
+        t.push(nb(0, f32::NAN));
+        t.push(nb(1, 1.0));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fewer_candidates_than_k() {
+        let mut t = TopK::new(10);
+        t.push(nb(1, 2.0));
+        t.push(nb(0, 1.0));
+        let out = t.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 0);
+    }
+}

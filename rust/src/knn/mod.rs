@@ -1,0 +1,12 @@
+//! K-nearest-neighbor machinery: bounded top-K, the PKNN exhaustive
+//! baseline, weighted-voting prediction, and partial-result reduction.
+
+pub mod exhaustive;
+pub mod heap;
+pub mod predict;
+pub mod reduce;
+
+pub use exhaustive::{pknn_query, PknnResult};
+pub use heap::{Neighbor, TopK};
+pub use predict::{positive_share, predict, VoteConfig};
+pub use reduce::{fold_partial, reduce_partials};

@@ -1,0 +1,103 @@
+//! Prediction from a K-NN set: inverse-distance weighted voting with
+//! K = 10, as in the paper (§4.1 "using weighted voting with K = 10
+//! nearest neighbors for prediction").
+
+use crate::knn::heap::Neighbor;
+
+/// Weighted-voting predictor configuration.
+#[derive(Debug, Clone)]
+pub struct VoteConfig {
+    /// Additive smoothing in the weight 1/(dist + eps); also what an exact
+    /// duplicate (dist = 0) weighs against.
+    pub eps: f32,
+    /// Positive-class decision threshold on the weighted vote share.
+    pub threshold: f32,
+}
+
+impl Default for VoteConfig {
+    fn default() -> Self {
+        Self { eps: 1e-3, threshold: 0.5 }
+    }
+}
+
+/// Weighted vote share of the positive class in `[0, 1]`.
+/// Empty neighbor sets abstain with 0 (predict negative — the majority
+/// class under the paper's ≥96% imbalance).
+pub fn positive_share(neighbors: &[Neighbor], cfg: &VoteConfig) -> f64 {
+    if neighbors.is_empty() {
+        return 0.0;
+    }
+    let mut pos = 0.0f64;
+    let mut total = 0.0f64;
+    for n in neighbors {
+        let w = 1.0 / (n.dist as f64 + cfg.eps as f64);
+        total += w;
+        if n.label {
+            pos += w;
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        pos / total
+    }
+}
+
+/// Binary prediction by thresholded weighted vote.
+pub fn predict(neighbors: &[Neighbor], cfg: &VoteConfig) -> bool {
+    positive_share(neighbors, cfg) >= cfg.threshold as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nb(dist: f32, label: bool) -> Neighbor {
+        Neighbor { id: 0, dist, label }
+    }
+
+    #[test]
+    fn unanimous_votes() {
+        let cfg = VoteConfig::default();
+        let pos = vec![nb(1.0, true), nb(2.0, true)];
+        let neg = vec![nb(1.0, false), nb(2.0, false)];
+        assert!(predict(&pos, &cfg));
+        assert!(!predict(&neg, &cfg));
+        assert_eq!(positive_share(&pos, &cfg), 1.0);
+        assert_eq!(positive_share(&neg, &cfg), 0.0);
+    }
+
+    #[test]
+    fn closer_neighbors_dominate() {
+        let cfg = VoteConfig::default();
+        // One very close positive vs three distant negatives.
+        let mixed = vec![nb(0.1, true), nb(10.0, false), nb(10.0, false), nb(10.0, false)];
+        assert!(predict(&mixed, &cfg), "share={}", positive_share(&mixed, &cfg));
+        // Inverted distances flip the call.
+        let mixed2 = vec![nb(10.0, true), nb(0.1, false), nb(0.2, false), nb(0.3, false)];
+        assert!(!predict(&mixed2, &cfg));
+    }
+
+    #[test]
+    fn exact_duplicate_handled() {
+        let cfg = VoteConfig::default();
+        let v = vec![nb(0.0, true), nb(0.5, false)];
+        let s = positive_share(&v, &cfg);
+        assert!(s > 0.9, "duplicate should dominate: {s}");
+    }
+
+    #[test]
+    fn empty_predicts_negative() {
+        let cfg = VoteConfig::default();
+        assert!(!predict(&[], &cfg));
+    }
+
+    #[test]
+    fn threshold_is_respected() {
+        let strict = VoteConfig { threshold: 0.9, ..Default::default() };
+        let v = vec![nb(1.0, true), nb(1.0, false)]; // share = 0.5
+        assert!(!predict(&v, &strict));
+        let lax = VoteConfig { threshold: 0.4, ..Default::default() };
+        assert!(predict(&v, &lax));
+    }
+}

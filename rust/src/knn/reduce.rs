@@ -1,0 +1,114 @@
+//! K-NN reduction — the Reducer's merge of per-node partial results and
+//! the node Master's merge of per-core partials (paper §3): "These local
+//! outputs are gathered at the Reducer, which yields the global K-NN set
+//! by keeping the K closest candidates to the query."
+
+use crate::knn::heap::{Neighbor, TopK};
+
+/// Reduce partial K-NN lists to the global K best.
+///
+/// Invariant (tested): for any partition of a candidate multiset into
+/// partial top-K lists, the reduction equals the top-K of the full set —
+/// this is what makes predictions independent of (ν, p).
+pub fn reduce_partials(partials: &[Vec<Neighbor>], k: usize) -> Vec<Neighbor> {
+    let mut topk = TopK::new(k);
+    for partial in partials {
+        for &n in partial {
+            topk.push_unique(n);
+        }
+    }
+    topk.into_sorted()
+}
+
+/// Streaming variant used by the Reducer process: fold one node's partial
+/// into an accumulator without materializing all partials first.
+pub fn fold_partial(acc: &mut TopK, partial: &[Neighbor]) {
+    for &n in partial {
+        acc.push_unique(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_neighbors(n: usize, seed: u64) -> Vec<Neighbor> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n as u64)
+            .map(|id| Neighbor { id, dist: rng.next_f32() * 50.0, label: rng.gen_bool(0.2) })
+            .collect()
+    }
+
+    fn topk_of(all: &[Neighbor], k: usize) -> Vec<Neighbor> {
+        let mut t = TopK::new(k);
+        for &n in all {
+            t.push(n);
+        }
+        t.into_sorted()
+    }
+
+    #[test]
+    fn reduction_equals_global_topk_for_any_partition() {
+        let all = random_neighbors(1000, 1);
+        let global = topk_of(&all, 10);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for parts in [1usize, 2, 5, 40] {
+            // Random assignment of candidates to parts, each part keeps
+            // its own top-10 (as cores/nodes do).
+            let mut buckets: Vec<Vec<Neighbor>> = vec![Vec::new(); parts];
+            for &n in &all {
+                buckets[rng.gen_index(parts)].push(n);
+            }
+            let partials: Vec<Vec<Neighbor>> =
+                buckets.iter().map(|b| topk_of(b, 10)).collect();
+            assert_eq!(reduce_partials(&partials, 10), global, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn fold_matches_batch_reduce() {
+        let partials: Vec<Vec<Neighbor>> =
+            (0..6).map(|s| topk_of(&random_neighbors(100, s), 5)).collect();
+        let batch = reduce_partials(&partials, 5);
+        let mut acc = TopK::new(5);
+        for p in &partials {
+            fold_partial(&mut acc, p);
+        }
+        assert_eq!(acc.into_sorted(), batch);
+    }
+
+    #[test]
+    fn reduce_with_fewer_than_k() {
+        // Disjoint id ranges (distinct global points).
+        let mut a = random_neighbors(2, 3);
+        let mut b = random_neighbors(1, 4);
+        for n in &mut b {
+            n.id += 100;
+        }
+        a.truncate(2);
+        let partials = vec![a, b];
+        let out = reduce_partials(&partials, 10);
+        assert_eq!(out.len(), 3);
+        assert!(out.windows(2).all(|w| w[0].before(&w[1])));
+    }
+
+    #[test]
+    fn duplicate_ids_across_partials_dedup() {
+        // The same global point found by two cores must appear once.
+        let shared = Neighbor { id: 7, dist: 1.5, label: true };
+        let partials = vec![
+            vec![shared, Neighbor { id: 1, dist: 3.0, label: false }],
+            vec![shared, Neighbor { id: 2, dist: 2.0, label: false }],
+        ];
+        let out = reduce_partials(&partials, 10);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.iter().filter(|n| n.id == 7).count(), 1);
+    }
+
+    #[test]
+    fn empty_reduction() {
+        assert!(reduce_partials(&[], 5).is_empty());
+        assert!(reduce_partials(&[vec![], vec![]], 5).is_empty());
+    }
+}

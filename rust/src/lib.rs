@@ -1,0 +1,31 @@
+//! # DSLSH — Distributed Stratified Locality Sensitive Hashing
+//!
+//! Production-quality reproduction of *"Distributed Stratified Locality
+//! Sensitive Hashing for Critical Event Prediction in the Cloud"*
+//! (De Palma, Hemberg & O'Reilly, 2017): a latency-oriented distributed
+//! system for approximate K-NN prediction on large medical time-series
+//! repositories, evaluated on Acute Hypotensive Episode prediction from
+//! Arterial Blood Pressure waveforms.
+//!
+//! Architecture (see DESIGN.md):
+//! * [`data`] — synthetic ABP corpus substrate (MIMIC-III stand-in);
+//! * [`lsh`] / [`slsh`] — hash families, tables, stratified index;
+//! * [`knn`] / [`metrics`] — top-K, PKNN baseline, voting, MCC;
+//! * [`engine`] — pluggable distance scan (native Rust or AOT XLA/PJRT);
+//! * [`node`] / [`coordinator`] — the distributed runtime (ν nodes × p
+//!   cores, Orchestrator with Root/Forwarder/Reducer);
+//! * [`runtime`] — PJRT artifact loading for the JAX/Pallas hot path;
+//! * [`experiments`] — regeneration of every table and figure.
+
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod knn;
+pub mod lsh;
+pub mod metrics;
+pub mod net;
+pub mod node;
+pub mod runtime;
+pub mod slsh;
+pub mod util;

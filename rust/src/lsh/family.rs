@@ -1,0 +1,305 @@
+//! Locality-sensitive hash families (paper §2).
+//!
+//! * [`BitSamplingL1`] — the bit-sampling family for the `l1` norm
+//!   (Gionis, Indyk & Motwani 1999 [5]). Classically one embeds points
+//!   into the Hamming cube via unary coding of quantized coordinates and
+//!   samples bits; sampling bit `(j, t)` of the unary code is exactly the
+//!   predicate `x_j ≥ t` for a coordinate `j` and a threshold `t` uniform
+//!   over the value range — we implement that continuous equivalent
+//!   directly. Collision probability of a single bit is
+//!   `1 − E_j |x_j − y_j| / (hi − lo)`, monotone decreasing in ‖x−y‖₁.
+//!
+//! * [`RandomProjection`] — the sign-random-projection family for the
+//!   cosine distance (Charikar 2002 [2]): bit = sign(r·x), r ~ N(0, I).
+//!   P[h(x) = h(y)] = 1 − θ(x, y)/π.
+//!
+//! A *composed* function `g ∈ H' = H^m` concatenates `m` independent bits
+//! into a [`PackedKey`]. Families are **specified** by `(seed, params)` so
+//! the Root can broadcast a compact [`OuterSpec`] and every node
+//! reconstructs bit-identical instances — the paper's "the same hash
+//! family instances need to be used" requirement without shipping the
+//! function tables.
+
+use crate::lsh::key::{KeyBuilder, PackedKey, MAX_BITS};
+use crate::util::rng::Xoshiro256;
+
+/// A composed LSH function: point → m-bit key.
+pub trait ComposedHash: Send + Sync {
+    /// Number of bits (`m`).
+    fn bits(&self) -> usize;
+    /// Hash a point.
+    fn hash(&self, x: &[f32]) -> PackedKey;
+}
+
+/// Bit-sampling family instance for the l1 norm: `m` (coordinate,
+/// threshold) pairs.
+#[derive(Debug, Clone)]
+pub struct BitSamplingL1 {
+    coords: Vec<u16>,
+    thresholds: Vec<f32>,
+}
+
+impl BitSamplingL1 {
+    /// Draw a fresh instance: coords uniform over `[0, dim)`, thresholds
+    /// uniform over `[lo, hi)` (the dataset's global value range).
+    pub fn sample(dim: usize, m: usize, lo: f32, hi: f32, rng: &mut Xoshiro256) -> Self {
+        assert!(m <= MAX_BITS, "m={m} exceeds {MAX_BITS}");
+        assert!(dim > 0 && hi > lo, "invalid bit-sampling parameters");
+        let mut coords = Vec::with_capacity(m);
+        let mut thresholds = Vec::with_capacity(m);
+        for _ in 0..m {
+            coords.push(rng.gen_below(dim as u64) as u16);
+            thresholds.push(rng.gen_f64(lo as f64, hi as f64) as f32);
+        }
+        Self { coords, thresholds }
+    }
+}
+
+impl ComposedHash for BitSamplingL1 {
+    fn bits(&self) -> usize {
+        self.coords.len()
+    }
+
+    #[inline]
+    fn hash(&self, x: &[f32]) -> PackedKey {
+        let mut kb = KeyBuilder::new();
+        for (&c, &t) in self.coords.iter().zip(&self.thresholds) {
+            kb.push(x[c as usize] >= t);
+        }
+        kb.finish()
+    }
+}
+
+/// Sign-random-projection family instance for cosine distance: `m`
+/// Gaussian directions, row-major `m × dim`.
+#[derive(Debug, Clone)]
+pub struct RandomProjection {
+    dirs: Vec<f32>,
+    dim: usize,
+    m: usize,
+}
+
+impl RandomProjection {
+    pub fn sample(dim: usize, m: usize, rng: &mut Xoshiro256) -> Self {
+        assert!(m <= MAX_BITS, "m={m} exceeds {MAX_BITS}");
+        let dirs = (0..m * dim).map(|_| rng.next_normal() as f32).collect();
+        Self { dirs, dim, m }
+    }
+}
+
+impl ComposedHash for RandomProjection {
+    fn bits(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    fn hash(&self, x: &[f32]) -> PackedKey {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut kb = KeyBuilder::new();
+        for row in self.dirs.chunks_exact(self.dim) {
+            let mut dot = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                dot += a * b;
+            }
+            kb.push(dot >= 0.0);
+        }
+        kb.finish()
+    }
+}
+
+/// Which family a layer uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// l1 norm with bit sampling (outer layer).
+    L1,
+    /// Cosine distance with random projections (inner layer).
+    Cosine,
+}
+
+impl Metric {
+    pub fn tag(self) -> u8 {
+        match self {
+            Metric::L1 => 0,
+            Metric::Cosine => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<Metric> {
+        match t {
+            0 => Some(Metric::L1),
+            1 => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+}
+
+/// Compact, broadcastable specification of one LSH layer's family draws.
+/// Instance for table `t` is reconstructed as
+/// `sample(dim, m, …, &mut Xoshiro256::seed_from_u64(seed).fork(t))` —
+/// bit-identical on every node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    pub metric: Metric,
+    pub dim: usize,
+    pub m: usize,
+    pub l: usize,
+    /// Value range for bit-sampling thresholds (ignored for Cosine).
+    pub lo: f32,
+    pub hi: f32,
+    pub seed: u64,
+}
+
+impl LayerSpec {
+    pub fn outer_l1(dim: usize, m: usize, l: usize, lo: f32, hi: f32, seed: u64) -> Self {
+        Self { metric: Metric::L1, dim, m, l, lo, hi, seed }
+    }
+
+    pub fn inner_cosine(dim: usize, m: usize, l: usize, seed: u64) -> Self {
+        Self { metric: Metric::Cosine, dim, m, l, lo: 0.0, hi: 1.0, seed }
+    }
+
+    /// Materialize the composed hash for table index `t ∈ [0, l)`.
+    pub fn instantiate(&self, t: usize) -> Box<dyn ComposedHash> {
+        assert!(t < self.l, "table index {t} out of range (l={})", self.l);
+        let mut rng = Xoshiro256::seed_from_u64(self.seed).fork(t as u64);
+        match self.metric {
+            Metric::L1 => Box::new(BitSamplingL1::sample(self.dim, self.m, self.lo, self.hi, &mut rng)),
+            Metric::Cosine => Box::new(RandomProjection::sample(self.dim, self.m, &mut rng)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_point(rng: &mut Xoshiro256, dim: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..dim).map(|_| rng.gen_f64(lo as f64, hi as f64) as f32).collect()
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let x = rand_point(&mut rng, 30, 40.0, 140.0);
+        let bs = BitSamplingL1::sample(30, 125, 40.0, 140.0, &mut rng);
+        let rp = RandomProjection::sample(30, 64, &mut rng);
+        assert_eq!(bs.hash(&x), bs.hash(&x));
+        assert_eq!(rp.hash(&x), rp.hash(&x));
+    }
+
+    #[test]
+    fn bit_sampling_single_bit_collision_matches_theory() {
+        // For one bit, P[h(x)=h(y)] = 1 - |x_j - y_j|/(hi-lo) in expectation
+        // over (j, t). Check empirically for a fixed pair.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let dim = 30;
+        let (lo, hi) = (0.0f32, 100.0f32);
+        let x = vec![50.0f32; dim];
+        let mut y = x.clone();
+        for v in y.iter_mut().take(10) {
+            *v += 20.0; // ‖x−y‖₁ = 200 ⇒ expected collision 1 − 200/(30·100) = 0.9333
+        }
+        let trials = 40_000;
+        let mut coll = 0;
+        for _ in 0..trials {
+            let h = BitSamplingL1::sample(dim, 1, lo, hi, &mut rng);
+            if h.hash(&x) == h.hash(&y) {
+                coll += 1;
+            }
+        }
+        let p = coll as f64 / trials as f64;
+        assert!((p - 0.9333).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn bit_sampling_is_monotone_in_l1_distance() {
+        // Closer pairs must collide (on full m-bit keys) at least as often.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let dim = 30;
+        let x = vec![80.0f32; dim];
+        let mut near = x.clone();
+        let mut far = x.clone();
+        for i in 0..dim {
+            near[i] += 1.0;
+            far[i] += 8.0;
+        }
+        let (mut c_near, mut c_far) = (0, 0);
+        for _ in 0..3000 {
+            let h = BitSamplingL1::sample(dim, 16, 20.0, 180.0, &mut rng);
+            if h.hash(&x) == h.hash(&near) {
+                c_near += 1;
+            }
+            if h.hash(&x) == h.hash(&far) {
+                c_far += 1;
+            }
+        }
+        assert!(c_near > c_far * 2, "near={c_near} far={c_far}");
+    }
+
+    #[test]
+    fn random_projection_collision_matches_angle() {
+        // P[bit match] = 1 − θ/π. Take orthogonal-ish vectors: θ = π/2 ⇒ 0.5.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x = {
+            let mut v = vec![0.0f32; 30];
+            v[0] = 1.0;
+            v
+        };
+        let y = {
+            let mut v = vec![0.0f32; 30];
+            v[1] = 1.0;
+            v
+        };
+        let trials = 40_000;
+        let mut coll = 0;
+        for _ in 0..trials {
+            let h = RandomProjection::sample(30, 1, &mut rng);
+            if h.hash(&x) == h.hash(&y) {
+                coll += 1;
+            }
+        }
+        let p = coll as f64 / trials as f64;
+        assert!((p - 0.5).abs() < 0.02, "p={p}");
+    }
+
+    #[test]
+    fn random_projection_scale_invariant() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let x = rand_point(&mut rng, 30, -1.0, 1.0);
+        let x2: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
+        let h = RandomProjection::sample(30, 100, &mut rng);
+        assert_eq!(h.hash(&x), h.hash(&x2), "cosine hashes must ignore scale");
+    }
+
+    #[test]
+    fn layer_spec_reconstructs_identical_instances() {
+        // Two "nodes" instantiate from the same spec: identical hashes.
+        let spec = LayerSpec::outer_l1(30, 125, 8, 20.0, 180.0, 99);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let x = rand_point(&mut rng, 30, 20.0, 180.0);
+        for t in 0..spec.l {
+            let node_a = spec.instantiate(t);
+            let node_b = spec.instantiate(t);
+            assert_eq!(node_a.hash(&x), node_b.hash(&x), "table {t}");
+        }
+        // Different tables give different functions.
+        let h0 = spec.instantiate(0);
+        let h1 = spec.instantiate(1);
+        let diff = (0..50)
+            .filter(|_| {
+                let p = rand_point(&mut rng, 30, 20.0, 180.0);
+                h0.hash(&p) != h1.hash(&p)
+            })
+            .count();
+        assert!(diff > 40, "tables insufficiently independent: {diff}/50");
+    }
+
+    #[test]
+    fn key_bit_count_matches_m() {
+        let spec = LayerSpec::inner_cosine(30, 65, 4, 42);
+        let h = spec.instantiate(2);
+        assert_eq!(h.bits(), 65);
+        let spec2 = LayerSpec::outer_l1(30, 200, 4, 0.0, 1.0, 42);
+        assert_eq!(spec2.instantiate(0).bits(), 200);
+    }
+}

@@ -1,0 +1,186 @@
+//! Packed hash keys.
+//!
+//! A composed hash function `g ∈ H' = H^m` maps a point to `m` bits
+//! (`m ≤ 256` covers the paper's grids: m_out ≤ 200, m_in ≤ 115). Keys are
+//! packed into four `u64` words with a precomputed 64-bit digest so bucket
+//! lookup costs one integer compare in the common case and an exact 256-bit
+//! compare only on digest collision.
+
+/// Maximum number of bits a composed hash key can carry.
+pub const MAX_BITS: usize = 256;
+
+/// A packed ≤256-bit hash key with cached digest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedKey {
+    pub words: [u64; 4],
+    digest: u64,
+}
+
+impl PackedKey {
+    /// Build from a bit iterator (LSB-first within words).
+    pub fn from_bits<I: IntoIterator<Item = bool>>(bits: I) -> PackedKey {
+        let mut words = [0u64; 4];
+        let mut count = 0usize;
+        for (i, b) in bits.into_iter().enumerate() {
+            assert!(i < MAX_BITS, "key exceeds {MAX_BITS} bits");
+            if b {
+                words[i / 64] |= 1u64 << (i % 64);
+            }
+            count = i + 1;
+        }
+        let _ = count;
+        PackedKey { words, digest: digest(&words) }
+    }
+
+    #[inline]
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Bit at position `i`.
+    #[inline]
+    pub fn bit(&self, i: usize) -> bool {
+        debug_assert!(i < MAX_BITS);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Hamming distance to another key (used by multi-probe extensions).
+    pub fn hamming(&self, other: &PackedKey) -> u32 {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum()
+    }
+}
+
+/// Incremental key builder used on the hashing hot path — avoids the
+/// iterator overhead of [`PackedKey::from_bits`].
+#[derive(Debug, Clone)]
+pub struct KeyBuilder {
+    words: [u64; 4],
+    len: usize,
+}
+
+impl KeyBuilder {
+    #[inline]
+    pub fn new() -> Self {
+        Self { words: [0; 4], len: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, bit: bool) {
+        debug_assert!(self.len < MAX_BITS);
+        if bit {
+            self.words[self.len / 64] |= 1u64 << (self.len % 64);
+        }
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn finish(&self) -> PackedKey {
+        PackedKey { words: self.words, digest: digest(&self.words) }
+    }
+}
+
+impl Default for KeyBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// 64-bit digest of the four key words — a round of xxh3-style avalanche
+/// mixing per word, then a final finalizer. Fast, and empirically
+/// collision-free at the table sizes we build (≤ a few million keys).
+#[inline]
+pub fn digest(words: &[u64; 4]) -> u64 {
+    const P1: u64 = 0x9E37_79B1_85EB_CA87;
+    const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    const P3: u64 = 0x1656_67B1_9E37_79F9;
+    let mut acc = P3;
+    for (i, &w) in words.iter().enumerate() {
+        let lane = w.wrapping_mul(P1).rotate_left(31).wrapping_mul(P2);
+        acc = (acc ^ lane).rotate_left(27).wrapping_mul(P1).wrapping_add(P2 ^ i as u64);
+    }
+    // xxh64-style avalanche.
+    acc ^= acc >> 33;
+    acc = acc.wrapping_mul(P2);
+    acc ^= acc >> 29;
+    acc = acc.wrapping_mul(P3);
+    acc ^ (acc >> 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn pack_roundtrip_bits() {
+        let pattern: Vec<bool> = (0..200).map(|i| (i * 31) % 7 < 3).collect();
+        let key = PackedKey::from_bits(pattern.iter().copied());
+        for (i, &b) in pattern.iter().enumerate() {
+            assert_eq!(key.bit(i), b, "bit {i}");
+        }
+        // Unset tail stays zero.
+        for i in 200..256 {
+            assert!(!key.bit(i));
+        }
+    }
+
+    #[test]
+    fn builder_matches_from_bits() {
+        let pattern: Vec<bool> = (0..125).map(|i| i % 3 == 0).collect();
+        let a = PackedKey::from_bits(pattern.iter().copied());
+        let mut kb = KeyBuilder::new();
+        for &b in &pattern {
+            kb.push(b);
+        }
+        assert_eq!(kb.finish(), a);
+        assert_eq!(kb.finish().digest(), a.digest());
+    }
+
+    #[test]
+    fn equality_is_exact_bits() {
+        let a = PackedKey::from_bits((0..100).map(|i| i % 2 == 0));
+        let mut almost: Vec<bool> = (0..100).map(|i| i % 2 == 0).collect();
+        almost[99] = !almost[99];
+        let b = PackedKey::from_bits(almost.iter().copied());
+        assert_ne!(a, b);
+        assert_eq!(a.hamming(&b), 1);
+    }
+
+    #[test]
+    fn digest_distributes() {
+        // Keys differing in one bit must avalanche: ~32 output bits flip.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut total_flips = 0u32;
+        let trials = 500;
+        for _ in 0..trials {
+            let words = [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()];
+            let mut words2 = words;
+            let bit = rng.gen_below(256) as usize;
+            words2[bit / 64] ^= 1 << (bit % 64);
+            total_flips += (digest(&words) ^ digest(&words2)).count_ones();
+        }
+        let avg = total_flips as f64 / trials as f64;
+        assert!((24.0..40.0).contains(&avg), "avalanche avg={avg}");
+    }
+
+    #[test]
+    fn digest_collision_free_on_structured_keys() {
+        // Keys from a dense structured family (worst case for weak hashes).
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..100_000u64 {
+            let key = PackedKey::from_bits((0..64).map(|b| (i >> b) & 1 == 1));
+            assert!(seen.insert(key.digest()), "digest collision at {i}");
+        }
+    }
+
+    #[test]
+    fn zero_key_valid() {
+        let k = PackedKey::from_bits(std::iter::empty());
+        assert_eq!(k.words, [0; 4]);
+        assert_eq!(k.hamming(&k), 0);
+    }
+}

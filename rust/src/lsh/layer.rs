@@ -1,0 +1,225 @@
+//! One LSH layer: `L` tables indexed by independent composed hashes
+//! `g_1..g_L ∈ H' = H^m` (paper §2). A layer can be built over *any*
+//! subset of tables — the intra-node parallelization unit: core `P_i`
+//! owns tables `{t : t ≡ i (mod p)}`, each built entirely independently
+//! ("no overlap in the computations for any pair of hashes").
+
+use crate::lsh::family::{ComposedHash, LayerSpec};
+use crate::lsh::table::{Table, TableBuilder};
+
+/// Read-only view of a point set (row-major dense f32).
+pub trait Points: Sync {
+    fn dim(&self) -> usize;
+    fn len(&self) -> usize;
+    fn point(&self, i: usize) -> &[f32];
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Points for crate::data::Dataset {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+    fn point(&self, i: usize) -> &[f32] {
+        crate::data::Dataset::point(self, i)
+    }
+}
+
+/// A borrowed row-major matrix as a point set (used for bucket
+/// sub-populations and test fixtures).
+pub struct SliceView<'a> {
+    pub data: &'a [f32],
+    pub dim: usize,
+}
+
+impl<'a> Points for SliceView<'a> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+    fn point(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// One built table together with its (global) table index and hash.
+pub struct LayerTable {
+    /// Global table index `t ∈ [0, L)` — determines the hash instance.
+    pub t: usize,
+    pub hash: Box<dyn ComposedHash>,
+    pub table: Table,
+}
+
+/// A set of built LSH tables belonging to one layer (possibly a subset of
+/// the layer's `L` tables, when sharded across cores).
+pub struct LshLayer {
+    pub spec: LayerSpec,
+    pub tables: Vec<LayerTable>,
+}
+
+impl LshLayer {
+    /// Build tables `table_indices` of the layer over `points`, whose ids
+    /// are `0..points.len()` (local ids; callers map to global ids).
+    pub fn build<P: Points + ?Sized>(spec: &LayerSpec, points: &P, table_indices: &[usize]) -> Self {
+        let tables = table_indices
+            .iter()
+            .map(|&t| {
+                let hash = spec.instantiate(t);
+                let mut builder = TableBuilder::with_capacity(points.len());
+                for i in 0..points.len() {
+                    builder.insert(hash.hash(points.point(i)), i as u32);
+                }
+                LayerTable { t, hash, table: builder.freeze() }
+            })
+            .collect();
+        Self { spec: spec.clone(), tables }
+    }
+
+    /// Build all `L` tables.
+    pub fn build_full<P: Points + ?Sized>(spec: &LayerSpec, points: &P) -> Self {
+        let all: Vec<usize> = (0..spec.l).collect();
+        Self::build(spec, points, &all)
+    }
+
+    /// Probe every owned table with `q`, invoking `visit` with each
+    /// colliding bucket (a slice of local point ids).
+    pub fn probe_each<'s>(&'s self, q: &[f32], mut visit: impl FnMut(usize, &'s [u32])) {
+        for lt in &self.tables {
+            let key = lt.hash.hash(q);
+            let ids = lt.table.probe(&key);
+            if !ids.is_empty() {
+                visit(lt.t, ids);
+            }
+        }
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.tables.iter().map(|t| t.table.num_entries()).sum()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.tables.iter().map(|t| t.table.mem_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::family::LayerSpec;
+    use crate::util::rng::Xoshiro256;
+
+    /// Clustered fixture: `clusters` centers with `per` near-copies each.
+    fn clustered(clusters: usize, per: usize, dim: usize, seed: u64) -> (Vec<f32>, usize) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(clusters * per * dim);
+        for _ in 0..clusters {
+            let center: Vec<f32> =
+                (0..dim).map(|_| rng.gen_f64(30.0, 150.0) as f32).collect();
+            for _ in 0..per {
+                for &c in &center {
+                    data.push(c + rng.gen_normal(0.0, 0.4) as f32);
+                }
+            }
+        }
+        (data, dim)
+    }
+
+    #[test]
+    fn build_covers_all_points_in_every_table() {
+        let (data, dim) = clustered(10, 20, 30, 1);
+        let view = SliceView { data: &data, dim };
+        let spec = LayerSpec::outer_l1(dim, 32, 6, 20.0, 180.0, 7);
+        let layer = LshLayer::build_full(&spec, &view);
+        assert_eq!(layer.tables.len(), 6);
+        for lt in &layer.tables {
+            assert_eq!(lt.table.num_entries(), view.len(), "table {}", lt.t);
+        }
+    }
+
+    #[test]
+    fn probe_finds_near_duplicates() {
+        let (data, dim) = clustered(8, 25, 30, 2);
+        let view = SliceView { data: &data, dim };
+        let spec = LayerSpec::outer_l1(dim, 24, 12, 20.0, 180.0, 3);
+        let layer = LshLayer::build_full(&spec, &view);
+        // Query = point 0 itself: must find itself in every table, and
+        // mostly its cluster-mates across tables.
+        let q = view.point(0).to_vec();
+        let mut self_hits = 0;
+        let mut mates = std::collections::HashSet::new();
+        layer.probe_each(&q, |_t, ids| {
+            if ids.contains(&0) {
+                self_hits += 1;
+            }
+            for &id in ids {
+                mates.insert(id);
+            }
+        });
+        assert_eq!(self_hits, 12, "a point must collide with itself in all tables");
+        let cluster0 = (0..25u32).collect::<std::collections::HashSet<_>>();
+        let recall = mates.intersection(&cluster0).count();
+        assert!(recall > 12, "recall of own cluster too low: {recall}/25");
+    }
+
+    #[test]
+    fn sharded_build_equals_full_build() {
+        // Union of per-core table subsets ≡ full build (same instances).
+        let (data, dim) = clustered(5, 10, 30, 4);
+        let view = SliceView { data: &data, dim };
+        let spec = LayerSpec::outer_l1(dim, 16, 8, 20.0, 180.0, 9);
+        let full = LshLayer::build_full(&spec, &view);
+        let p = 3;
+        let shards: Vec<LshLayer> = (0..p)
+            .map(|core| {
+                let mine: Vec<usize> = (0..spec.l).filter(|t| t % p == core).collect();
+                LshLayer::build(&spec, &view, &mine)
+            })
+            .collect();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+            let mut from_full: Vec<(usize, Vec<u32>)> = Vec::new();
+            full.probe_each(&q, |t, ids| from_full.push((t, ids.to_vec())));
+            let mut from_shards: Vec<(usize, Vec<u32>)> = Vec::new();
+            for s in &shards {
+                s.probe_each(&q, |t, ids| from_shards.push((t, ids.to_vec())));
+            }
+            from_full.sort();
+            from_shards.sort();
+            assert_eq!(from_full, from_shards);
+        }
+    }
+
+    #[test]
+    fn cosine_layer_builds_and_probes() {
+        let (data, dim) = clustered(6, 15, 30, 6);
+        let view = SliceView { data: &data, dim };
+        let spec = LayerSpec::inner_cosine(dim, 20, 5, 11);
+        let layer = LshLayer::build_full(&spec, &view);
+        let q = view.point(3).to_vec();
+        let mut found_self = false;
+        layer.probe_each(&q, |_t, ids| {
+            if ids.contains(&3) {
+                found_self = true;
+            }
+        });
+        assert!(found_self);
+    }
+
+    #[test]
+    fn empty_points_build() {
+        let view = SliceView { data: &[], dim: 30 };
+        let spec = LayerSpec::outer_l1(30, 8, 4, 0.0, 1.0, 1);
+        let layer = LshLayer::build_full(&spec, &view);
+        let q = vec![0.5f32; 30];
+        let mut called = false;
+        layer.probe_each(&q, |_, _| called = true);
+        assert!(!called);
+    }
+}

@@ -1,0 +1,11 @@
+//! Locality Sensitive Hashing substrate: hash families, packed keys,
+//! bucket tables, and multi-table layers (paper §2).
+
+pub mod family;
+pub mod key;
+pub mod layer;
+pub mod table;
+
+pub use family::{BitSamplingL1, ComposedHash, LayerSpec, Metric, RandomProjection};
+pub use key::PackedKey;
+pub use layer::{LshLayer, Points, SliceView};

@@ -1,0 +1,266 @@
+//! Bucketed hash table for LSH — built from scratch (no `hashbrown`
+//! offline, and `std::HashMap<PackedKey, Vec<u32>>` wastes an allocation
+//! per bucket).
+//!
+//! Two-phase design tuned for the LSH access pattern:
+//!
+//! 1. **Build**: insert `(key, id)` pairs (ids are local point indices);
+//!    open-addressing slots store `(digest, key, head)` with bucket
+//!    membership as an intrusive linked list threaded through a single
+//!    `next[]` array — zero per-bucket allocations.
+//! 2. **Freeze**: rewrite membership into a CSR layout (`bucket_off` /
+//!    `bucket_ids`) so probing returns a contiguous `&[u32]` slice — the
+//!    layout the scan kernels and the XLA engine want.
+
+use crate::lsh::key::PackedKey;
+
+const EMPTY: u32 = u32::MAX;
+
+/// Mutable build-phase table.
+pub struct TableBuilder {
+    /// Open-addressing slot → bucket index + key (for exact match).
+    slot_key: Vec<Option<PackedKey>>,
+    slot_bucket: Vec<u32>,
+    mask: usize,
+    /// Per-inserted-id linked list: next[i] = previous id in same bucket.
+    next: Vec<u32>,
+    ids: Vec<u32>,
+    /// Per-bucket list head (index into `ids`/`next`) and size.
+    head: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl TableBuilder {
+    /// `expected` = number of inserts (the shard size); capacity is the
+    /// next power of two ≥ 2 × expected for a ≤0.5 load factor.
+    pub fn with_capacity(expected: usize) -> Self {
+        let cap = (expected.max(8) * 2).next_power_of_two();
+        Self {
+            slot_key: vec![None; cap],
+            slot_bucket: vec![EMPTY; cap],
+            mask: cap - 1,
+            next: Vec::with_capacity(expected),
+            ids: Vec::with_capacity(expected),
+            head: Vec::new(),
+            size: Vec::new(),
+        }
+    }
+
+    /// Insert a point id under its key.
+    pub fn insert(&mut self, key: PackedKey, id: u32) {
+        let mut slot = (key.digest() as usize) & self.mask;
+        loop {
+            match &self.slot_key[slot] {
+                None => {
+                    // New bucket.
+                    let b = self.head.len() as u32;
+                    self.slot_key[slot] = Some(key);
+                    self.slot_bucket[slot] = b;
+                    let entry = self.insert_entry(id, EMPTY);
+                    self.head.push(entry);
+                    self.size.push(1);
+                    return;
+                }
+                Some(k) if *k == key => {
+                    let b = self.slot_bucket[slot] as usize;
+                    let entry = self.insert_entry(id, self.head[b]);
+                    self.head[b] = entry;
+                    self.size[b] += 1;
+                    return;
+                }
+                Some(_) => {
+                    slot = (slot + 1) & self.mask;
+                }
+            }
+        }
+    }
+
+    fn insert_entry(&mut self, id: u32, prev_head: u32) -> u32 {
+        let idx = self.ids.len() as u32;
+        self.ids.push(id);
+        self.next.push(prev_head);
+        idx
+    }
+
+    /// Finalize into an immutable probe-optimized table.
+    pub fn freeze(self) -> Table {
+        let nbuckets = self.head.len();
+        let mut bucket_off = Vec::with_capacity(nbuckets + 1);
+        let mut bucket_ids = Vec::with_capacity(self.ids.len());
+        bucket_off.push(0u32);
+        for b in 0..nbuckets {
+            let mut cur = self.head[b];
+            let start = bucket_ids.len();
+            while cur != EMPTY {
+                bucket_ids.push(self.ids[cur as usize]);
+                cur = self.next[cur as usize];
+            }
+            // The intrusive list reverses insertion order; restore it so
+            // bucket contents are deterministic in id order of insertion.
+            bucket_ids[start..].reverse();
+            bucket_off.push(bucket_ids.len() as u32);
+        }
+        Table {
+            slot_key: self.slot_key,
+            slot_bucket: self.slot_bucket,
+            mask: self.mask,
+            bucket_off,
+            bucket_ids,
+        }
+    }
+}
+
+/// Immutable frozen table: key → contiguous id slice.
+pub struct Table {
+    slot_key: Vec<Option<PackedKey>>,
+    slot_bucket: Vec<u32>,
+    mask: usize,
+    bucket_off: Vec<u32>,
+    bucket_ids: Vec<u32>,
+}
+
+impl Table {
+    /// Probe: ids colliding with `key`, or empty slice.
+    #[inline]
+    pub fn probe(&self, key: &PackedKey) -> &[u32] {
+        match self.find_bucket(key) {
+            Some(b) => self.bucket(b),
+            None => &[],
+        }
+    }
+
+    /// Bucket index for a key, if present.
+    #[inline]
+    pub fn find_bucket(&self, key: &PackedKey) -> Option<usize> {
+        let mut slot = (key.digest() as usize) & self.mask;
+        loop {
+            match &self.slot_key[slot] {
+                None => return None,
+                Some(k) if *k == *key => return Some(self.slot_bucket[slot] as usize),
+                Some(_) => slot = (slot + 1) & self.mask,
+            }
+        }
+    }
+
+    /// Contents of bucket `b`.
+    #[inline]
+    pub fn bucket(&self, b: usize) -> &[u32] {
+        let lo = self.bucket_off[b] as usize;
+        let hi = self.bucket_off[b + 1] as usize;
+        &self.bucket_ids[lo..hi]
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.bucket_off.len() - 1
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.bucket_ids.len()
+    }
+
+    /// Iterate `(bucket_index, ids)` — used to find populous buckets for
+    /// the inner SLSH layer.
+    pub fn buckets(&self) -> impl Iterator<Item = (usize, &[u32])> {
+        (0..self.num_buckets()).map(move |b| (b, self.bucket(b)))
+    }
+
+    /// Largest bucket size (diagnostics / occupancy reports).
+    pub fn max_bucket(&self) -> usize {
+        self.buckets().map(|(_, ids)| ids.len()).max().unwrap_or(0)
+    }
+
+    /// Approximate heap footprint in bytes (capacity planning).
+    pub fn mem_bytes(&self) -> usize {
+        self.slot_key.len() * std::mem::size_of::<Option<PackedKey>>()
+            + self.slot_bucket.len() * 4
+            + self.bucket_off.len() * 4
+            + self.bucket_ids.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use std::collections::BTreeMap;
+
+    fn key_of(v: u64) -> PackedKey {
+        PackedKey::from_bits((0..64).map(|b| (v >> b) & 1 == 1))
+    }
+
+    #[test]
+    fn grouping_matches_btreemap_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 20_000;
+        let mut builder = TableBuilder::with_capacity(n);
+        let mut reference: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for id in 0..n as u32 {
+            let v = rng.gen_below(500); // force heavy bucket collisions
+            builder.insert(key_of(v), id);
+            reference.entry(v).or_default().push(id);
+        }
+        let table = builder.freeze();
+        assert_eq!(table.num_entries(), n);
+        assert_eq!(table.num_buckets(), reference.len());
+        for (&v, ids) in &reference {
+            let got = table.probe(&key_of(v));
+            assert_eq!(got, ids.as_slice(), "bucket for {v}");
+        }
+    }
+
+    #[test]
+    fn missing_key_probes_empty() {
+        let mut b = TableBuilder::with_capacity(4);
+        b.insert(key_of(1), 0);
+        let t = b.freeze();
+        assert!(t.probe(&key_of(2)).is_empty());
+        assert_eq!(t.probe(&key_of(1)), &[0]);
+    }
+
+    #[test]
+    fn bucket_order_is_insertion_order() {
+        let mut b = TableBuilder::with_capacity(8);
+        for id in [5u32, 3, 9, 1] {
+            b.insert(key_of(7), id);
+        }
+        let t = b.freeze();
+        assert_eq!(t.probe(&key_of(7)), &[5, 3, 9, 1]);
+    }
+
+    #[test]
+    fn handles_many_distinct_keys_beyond_initial_estimate() {
+        // Estimate is exact-n; distinct keys ≈ n (singleton buckets).
+        let n = 5000;
+        let mut b = TableBuilder::with_capacity(n);
+        for id in 0..n as u32 {
+            b.insert(key_of(id as u64 * 2654435761), id);
+        }
+        let t = b.freeze();
+        assert_eq!(t.num_buckets(), n);
+        for id in 0..n as u32 {
+            assert_eq!(t.probe(&key_of(id as u64 * 2654435761)), &[id]);
+        }
+    }
+
+    #[test]
+    fn buckets_iterator_covers_all_entries() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut b = TableBuilder::with_capacity(1000);
+        for id in 0..1000u32 {
+            b.insert(key_of(rng.gen_below(37)), id);
+        }
+        let t = b.freeze();
+        let mut seen: Vec<u32> = t.buckets().flat_map(|(_, ids)| ids.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..1000).collect::<Vec<_>>());
+        assert!(t.max_bucket() >= 1000 / 37);
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = TableBuilder::with_capacity(0).freeze();
+        assert_eq!(t.num_buckets(), 0);
+        assert_eq!(t.num_entries(), 0);
+        assert!(t.probe(&key_of(0)).is_empty());
+    }
+}

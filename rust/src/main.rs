@@ -1,0 +1,296 @@
+//! DSLSH command-line interface — the system launcher.
+//!
+//! ```text
+//! dslsh gen-data   --dataset ahe-51-5c --n 100000 --queries 250 --out corpus
+//! dslsh exp        table1|fig3|fig4|table2|table3 [--full|--smoke] [--engine xla]
+//! dslsh query      --dataset <file> --queries <file> [--m 125 --l 120 ...]
+//! dslsh serve-node --listen 0.0.0.0:7001
+//! dslsh orchestrate --nodes host1:7001,host2:7001 --dataset <file> ...
+//! dslsh selfcheck
+//! ```
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
+use dslsh::coordinator::{build_cluster, ClusterConfig, EngineKind};
+use dslsh::data::{Dataset, WindowSpec};
+use dslsh::experiments::scaling::{self, ScalingOptions, ScalingTable};
+use dslsh::experiments::table1::{self, Table1Options};
+use dslsh::experiments::tradeoff::{self, TradeoffOptions};
+use dslsh::experiments::{cached_corpus, Scale};
+use dslsh::knn::predict::VoteConfig;
+use dslsh::net::{serve_node, RemoteNode};
+use dslsh::slsh::{InnerParams, SlshParams};
+use dslsh::util::cli::Args;
+use dslsh::util::threadpool::chunk_ranges;
+
+const VALUED: &[&str] = &[
+    "dataset", "n", "queries", "seed", "out", "engine", "m", "l", "m-in", "l-in", "alpha", "k",
+    "nu", "p", "listen", "nodes", "max-configs", "results",
+];
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let args = Args::parse_from(argv.into_iter().skip(1), VALUED);
+    let result = match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "exp" => cmd_exp(&args),
+        "query" => cmd_query(&args),
+        "serve-node" => cmd_serve_node(&args),
+        "orchestrate" => cmd_orchestrate(&args),
+        "selfcheck" => cmd_selfcheck(),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "DSLSH — Distributed Stratified LSH for critical event prediction
+commands:
+  gen-data     generate a synthetic ABP corpus (--dataset ahe-301-30c|ahe-51-5c --n N --queries Q --seed S --out STEM)
+  exp          reproduce a paper experiment: table1 | fig3 | fig4 | table2 | table3
+               [--full | --smoke] [--n N] [--queries Q] [--seed S] [--engine native|xla]
+               [--nu V] [--p P] [--max-configs K] [--results DIR]
+  query        one-shot queries (--dataset FILE --queries FILE [--m M --l L --m-in MI --l-in LI --alpha A --k K --nu V --p P --engine E])
+  serve-node   run a TCP SLSH node (--listen ADDR)
+  orchestrate  drive remote nodes (--nodes A1,A2,... --dataset FILE --queries FILE [--m --l --p ...])
+  selfcheck    verify the PJRT runtime + artifacts"
+        .to_string()
+}
+
+fn dataset_spec(name: &str) -> Result<WindowSpec> {
+    match name {
+        "ahe-301-30c" => Ok(WindowSpec::ahe_301_30c()),
+        "ahe-51-5c" => Ok(WindowSpec::ahe_51_5c()),
+        other => bail!("unknown dataset '{other}' (ahe-301-30c | ahe-51-5c)"),
+    }
+}
+
+fn scale_from(args: &Args) -> Result<Scale> {
+    let mut scale = if args.has_flag("full") {
+        Scale::full()
+    } else if args.has_flag("smoke") {
+        Scale::smoke()
+    } else {
+        Scale::default_scale()
+    };
+    if let Some(n) = args.get_usize("n")? {
+        scale.n_301 = n;
+        scale.n_51 = n;
+    }
+    if let Some(q) = args.get_usize("queries")? {
+        scale.queries = q;
+    }
+    Ok(scale)
+}
+
+fn engine_from(args: &Args) -> Result<EngineKind> {
+    let name = args.str_or("engine", "native");
+    EngineKind::parse(name).ok_or_else(|| anyhow!("unknown engine '{name}' (native|xla)"))
+}
+
+fn params_from(args: &Args, data: &Dataset) -> Result<SlshParams> {
+    let m = args.usize_or("m", 125)?;
+    let l = args.usize_or("l", 120)?;
+    let k = args.usize_or("k", 10)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut params = dslsh::experiments::outer_params(data, m, l, seed, k);
+    if let Some(m_in) = args.get_usize("m-in")? {
+        params.inner = Some(InnerParams {
+            m: m_in,
+            l: args.usize_or("l-in", 20)?,
+            alpha: args.f64_or("alpha", 0.005)?,
+            seed: seed ^ 0x5157,
+        });
+    }
+    Ok(params)
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let spec = dataset_spec(args.str_or("dataset", "ahe-51-5c"))?;
+    let n = args.usize_or("n", 100_000)?;
+    let q = args.usize_or("queries", 250)?;
+    let seed = args.u64_or("seed", 42)?;
+    let corpus = cached_corpus(&spec, n, q, seed)?;
+    let stats = dslsh::data::dataset::stats(&spec, &corpus.data);
+    println!(
+        "{}: n={} (%non-AHE {:.2}%), queries={} (%non-AHE {:.2}%)",
+        stats.name,
+        stats.n,
+        stats.pct_negative * 100.0,
+        corpus.queries.len(),
+        corpus.queries.pct_negative() * 100.0
+    );
+    if let Some(out) = args.get_str("out") {
+        corpus.data.save(std::path::Path::new(&format!("{out}.data")))?;
+        corpus.queries.save(std::path::Path::new(&format!("{out}.queries")))?;
+        println!("wrote {out}.data and {out}.queries");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("exp needs a target: table1|fig3|fig4|table2|table3"))?;
+    let scale = scale_from(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let engine = engine_from(args)?;
+    let results_dir = std::path::PathBuf::from(args.str_or("results", "results"));
+
+    let table = match which {
+        "table1" => table1::run(&Table1Options { scale, seed })?,
+        "fig3" | "fig4" => {
+            let mut opts = TradeoffOptions::paper_defaults(scale, seed);
+            opts.engine = engine;
+            opts.nu = args.usize_or("nu", opts.nu)?;
+            opts.p = args.usize_or("p", opts.p)?;
+            opts.max_configs = args.get_usize("max-configs")?;
+            let r = if which == "fig3" {
+                tradeoff::run_fig3(&opts)?
+            } else {
+                tradeoff::run_fig4(&opts)?
+            };
+            println!("{}", r.scatter);
+            println!(
+                "PKNN reference: {} comparisons/processor, MCC = {:.3}",
+                r.pknn_comps, r.pknn_mcc
+            );
+            r.table
+        }
+        "table2" | "table3" => {
+            let which =
+                if which == "table2" { ScalingTable::Table2 } else { ScalingTable::Table3 };
+            let mut opts = ScalingOptions::for_table(which, scale, seed);
+            opts.engine = engine;
+            opts.p = args.usize_or("p", opts.p)?;
+            opts.m = args.usize_or("m", opts.m)?;
+            opts.l = args.usize_or("l", opts.l)?;
+            if let Some(nus) = args.usize_list("nu")? {
+                opts.nus = nus;
+            }
+            let r = scaling::run(which, &opts)?;
+            println!("PKNN MCC = {:.3} (topology-independent)", r.pknn_mcc);
+            r.table
+        }
+        other => bail!("unknown experiment '{other}'"),
+    };
+    println!("{}", table.render());
+    table.save(&results_dir, which)?;
+    println!("saved {}/{which}.csv and .json", results_dir.display());
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let data = Dataset::load(std::path::Path::new(args.require_str("dataset")?))
+        .context("loading dataset")?;
+    let queries = Dataset::load(std::path::Path::new(args.require_str("queries")?))
+        .context("loading queries")?;
+    let params = params_from(args, &data)?;
+    let cfg = ClusterConfig::new(args.usize_or("nu", 2)?, args.usize_or("p", 4)?)
+        .with_engine(engine_from(args)?);
+    let cluster = build_cluster(&data, &params, &cfg)?;
+    let mut confusion = dslsh::metrics::Confusion::new();
+    for i in 0..queries.len() {
+        let r = cluster.query(queries.point(i));
+        confusion.push(r.prediction, queries.labels[i]);
+        println!(
+            "q{i}: pred={} share={:.3} max_comps={} latency={:.2}ms nn={:?}",
+            r.prediction as u8,
+            r.positive_share,
+            r.max_comparisons,
+            r.latency_s * 1e3,
+            r.neighbors.iter().take(3).map(|n| n.id).collect::<Vec<_>>()
+        );
+    }
+    println!("MCC = {:.4}  ({:?})", confusion.mcc(), confusion);
+    Ok(())
+}
+
+fn cmd_serve_node(args: &Args) -> Result<()> {
+    let addr = args.str_or("listen", "0.0.0.0:7001");
+    let listener = std::net::TcpListener::bind(addr).context("binding listener")?;
+    println!("dslsh node listening on {}", listener.local_addr()?);
+    loop {
+        let served = serve_node(&listener, None)?;
+        println!("connection done after {served} queries; awaiting next orchestrator");
+    }
+}
+
+fn cmd_orchestrate(args: &Args) -> Result<()> {
+    let node_addrs: Vec<&str> = args.require_str("nodes")?.split(',').collect();
+    let data = Dataset::load(std::path::Path::new(args.require_str("dataset")?))?;
+    let queries = Dataset::load(std::path::Path::new(args.require_str("queries")?))?;
+    let params = params_from(args, &data)?;
+    let p = args.usize_or("p", 8)?;
+    let nu = node_addrs.len();
+    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::with_capacity(nu);
+    for (node_id, range) in chunk_ranges(data.len(), nu).into_iter().enumerate() {
+        let shard = data.shard(range.clone());
+        println!("shipping shard {node_id} ({} points) to {}", shard.len(), node_addrs[node_id]);
+        nodes.push(Box::new(RemoteNode::connect(
+            node_addrs[node_id],
+            node_id,
+            shard,
+            range.start as u64,
+            &params,
+            p,
+        )?));
+    }
+    let orch = Orchestrator::start(nodes, params.k, VoteConfig::default());
+    let mut confusion = dslsh::metrics::Confusion::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..queries.len() {
+        let r = orch.query(queries.point(i));
+        confusion.push(r.prediction, queries.labels[i]);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} queries in {:.2}s ({:.1} q/s), MCC = {:.4}",
+        queries.len(),
+        dt,
+        queries.len() as f64 / dt,
+        confusion.mcc()
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck() -> Result<()> {
+    print!("artifacts: ");
+    let manifest = dslsh::runtime::Manifest::discover()?;
+    println!("{} kernels at {:?}", manifest.artifacts.len(), manifest.dir);
+    print!("pjrt: ");
+    let service = dslsh::runtime::XlaService::start()?;
+    let engine = service.engine();
+    use dslsh::engine::{DistanceEngine, Metric};
+    let q = vec![1.0f32; 30];
+    let data: Vec<f32> = (0..30 * 4).map(|i| i as f32).collect();
+    let labels = vec![false; 4];
+    let mut topk = dslsh::knn::TopK::new(2);
+    let c = engine.scan(Metric::L1, &q, &data, 30, &[0, 1, 2, 3], &labels, 0, &mut topk);
+    anyhow::ensure!(c == 4, "scan count mismatch");
+    let best = topk.into_sorted();
+    anyhow::ensure!(best[0].id == 0, "unexpected nearest row");
+    println!("ok (l1 scan through JAX/Pallas artifact verified)");
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Prediction-quality metrics: confusion matrix, MCC (the paper's quality
+//! measure — "a robust measure in cases of severe class imbalance"),
+//! plus the standard derived rates for completeness.
+
+/// Binary confusion matrix.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub tn: u64,
+    pub fp: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate one (prediction, truth) pair.
+    pub fn push(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (false, false) => self.tn += 1,
+            (true, false) => self.fp += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    pub fn from_pairs(pairs: impl IntoIterator<Item = (bool, bool)>) -> Self {
+        let mut c = Self::new();
+        for (p, a) in pairs {
+            c.push(p, a);
+        }
+        c
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.tn + self.fp + self.fn_
+    }
+
+    /// Matthews Correlation Coefficient in [−1, 1]. Degenerate
+    /// denominators (a row or column of zeros) return 0, the standard
+    /// convention.
+    pub fn mcc(&self) -> f64 {
+        let (tp, tn, fp, fn_) = (self.tp as f64, self.tn as f64, self.fp as f64, self.fn_ as f64);
+        let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        (tp * tn - fp * fn_) / denom
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+
+    /// Recall / sensitivity / TPR.
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+
+    pub fn specificity(&self) -> f64 {
+        if self.tn + self.fp == 0 {
+            return 0.0;
+        }
+        self.tn as f64 / (self.tn + self.fp) as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            return 0.0;
+        }
+        2.0 * p * r / (p + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn perfect_and_inverted_predictors() {
+        let perfect = Confusion { tp: 10, tn: 90, fp: 0, fn_: 0 };
+        assert!((perfect.mcc() - 1.0).abs() < 1e-12);
+        let inverted = Confusion { tp: 0, tn: 0, fp: 90, fn_: 10 };
+        assert!((inverted.mcc() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_value_cross_check() {
+        // sklearn: matthews_corrcoef for tp=6, tn=3, fp=1, fn=2 = 0.47809...
+        let c = Confusion { tp: 6, tn: 3, fp: 1, fn_: 2 };
+        assert!((c.mcc() - 0.478_091).abs() < 1e-5, "mcc={}", c.mcc());
+    }
+
+    #[test]
+    fn degenerate_cases_are_zero() {
+        assert_eq!(Confusion { tp: 0, tn: 100, fp: 0, fn_: 0 }.mcc(), 0.0);
+        assert_eq!(Confusion::new().mcc(), 0.0);
+        assert_eq!(Confusion { tp: 5, tn: 0, fp: 0, fn_: 0 }.mcc(), 0.0);
+    }
+
+    #[test]
+    fn random_predictor_mcc_near_zero_under_imbalance() {
+        // 97% negative base rate, predictions independent of truth.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let pairs = (0..200_000).map(|_| (rng.gen_bool(0.03), rng.gen_bool(0.03)));
+        let c = Confusion::from_pairs(pairs);
+        assert!(c.mcc().abs() < 0.02, "mcc={}", c.mcc());
+        // Accuracy is deceptively high — exactly why the paper uses MCC.
+        assert!(c.accuracy() > 0.9);
+    }
+
+    #[test]
+    fn mcc_bounded() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..2000 {
+            let c = Confusion {
+                tp: rng.gen_below(50),
+                tn: rng.gen_below(50),
+                fp: rng.gen_below(50),
+                fn_: rng.gen_below(50),
+            };
+            let m = c.mcc();
+            assert!((-1.0..=1.0).contains(&m), "{c:?} -> {m}");
+        }
+    }
+
+    #[test]
+    fn derived_rates() {
+        let c = Confusion { tp: 8, tn: 80, fp: 2, fn_: 10 };
+        assert!((c.precision() - 0.8).abs() < 1e-12);
+        assert!((c.recall() - 8.0 / 18.0).abs() < 1e-12);
+        assert!((c.specificity() - 80.0 / 82.0).abs() < 1e-12);
+        assert!((c.accuracy() - 0.88).abs() < 1e-12);
+        let f1 = c.f1();
+        assert!((f1 - (2.0 * 0.8 * (8.0 / 18.0)) / (0.8 + 8.0 / 18.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_and_from_pairs_agree() {
+        let pairs = [(true, true), (false, true), (true, false), (false, false)];
+        let a = Confusion::from_pairs(pairs.iter().copied());
+        let mut b = Confusion::new();
+        for (p, t) in pairs {
+            b.push(p, t);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.total(), 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! TCP transport — the cloud-deployment path.
+//!
+//! In the paper's deployment the Orchestrator and the ν SLSH nodes are
+//! separate cloud VMs. This module provides that wire path: a
+//! length-prefixed binary protocol ([`wire`]), a node server
+//! ([`serve_node`]) run by `dslsh serve-node`, and a [`RemoteNode`] client
+//! implementing [`NodeHandle`](crate::coordinator::NodeHandle) so the
+//! Orchestrator drives remote processes exactly like in-process nodes.
+
+pub mod tcp;
+pub mod wire;
+
+pub use tcp::{serve_node, RemoteNode};
+pub use wire::Message;

@@ -1,0 +1,165 @@
+//! TCP node server + remote-node client.
+//!
+//! `dslsh serve-node --listen <addr>` runs [`serve_node`]: it waits for
+//! the Orchestrator's `Build`, spawns a [`LocalNode`] thread group over
+//! the received shard, then serves `Query` frames until `Shutdown`/EOF.
+//!
+//! [`RemoteNode`] is the Orchestrator-side counterpart: it ships the shard
+//! and hash spec over the socket and then satisfies the
+//! [`NodeHandle`](crate::coordinator::NodeHandle) contract with one
+//! request/response round trip per query — the paper's low-QPS ICU
+//! latency model needs no pipelining.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::orchestrator::NodeHandle;
+use crate::engine::native::NativeEngine;
+use crate::engine::DistanceEngine;
+use crate::node::node::{LocalNode, NodeInfo, NodeReply};
+use crate::net::wire::Message;
+use crate::slsh::SlshParams;
+
+/// Engine factory for served nodes (native by default; the XLA service
+/// cannot cross processes, each node process may start its own).
+pub type EngineFactory = dyn Fn(usize) -> Vec<Box<dyn DistanceEngine>> + Send;
+
+fn native_factory(p: usize) -> Vec<Box<dyn DistanceEngine>> {
+    (0..p).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect()
+}
+
+/// Serve exactly one Orchestrator connection on `listener`, blocking until
+/// the peer shuts down. Returns the number of queries served.
+pub fn serve_node(listener: &TcpListener, engines: Option<&EngineFactory>) -> Result<u64> {
+    let (stream, peer) = listener.accept().context("accept")?;
+    crate::log_info!("node-server", "orchestrator connected from {peer}");
+    serve_connection(stream, engines)
+}
+
+/// Protocol loop over an accepted stream.
+pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> Result<u64> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut writer = BufWriter::new(stream);
+
+    // Phase 1: Build.
+    let build = Message::read_frame(&mut reader)
+        .map_err(|e| anyhow!("reading build frame: {e}"))?
+        .ok_or_else(|| anyhow!("peer closed before Build"))?;
+    let Message::Build { node_id, id_base, p, params, shard } = build else {
+        bail!("expected Build, got {build:?}");
+    };
+    let shard = Arc::new(shard);
+    let engine_vec = match engines {
+        Some(f) => f(p as usize),
+        None => native_factory(p as usize),
+    };
+    let mut node =
+        LocalNode::spawn(node_id as usize, Arc::clone(&shard), id_base, &params, p as usize, engine_vec);
+    Message::BuildDone {
+        node_id,
+        shard_len: shard.len() as u64,
+        build_ms: node.info().build_ms,
+    }
+    .write_frame(&mut writer)?;
+
+    // Phase 2: queries.
+    let mut served = 0u64;
+    loop {
+        match Message::read_frame(&mut reader).map_err(|e| anyhow!("reading frame: {e}"))? {
+            None | Some(Message::Shutdown) => break,
+            Some(Message::Query { qid, q }) => {
+                let reply = node.query(&q);
+                Message::Reply {
+                    qid,
+                    neighbors: reply.neighbors,
+                    comparisons: reply.comparisons,
+                    inner_probes: reply.inner_probes,
+                }
+                .write_frame(&mut writer)?;
+                served += 1;
+            }
+            Some(other) => bail!("unexpected message {other:?}"),
+        }
+    }
+    crate::log_info!("node-server", "served {served} queries, shutting down");
+    Ok(served)
+}
+
+/// Orchestrator-side handle to a TCP node.
+pub struct RemoteNode {
+    node_id: usize,
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    info: NodeInfo,
+    next_qid: u64,
+}
+
+impl RemoteNode {
+    /// Connect, ship the shard + hash spec, wait for BuildDone.
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        node_id: usize,
+        shard: crate::data::Dataset,
+        id_base: u64,
+        params: &SlshParams,
+        p: usize,
+    ) -> Result<RemoteNode> {
+        let stream = TcpStream::connect(addr).context("connecting to node")?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        let shard_len = shard.len();
+        Message::Build {
+            node_id: node_id as u32,
+            id_base,
+            p: p as u32,
+            params: params.clone(),
+            shard,
+        }
+        .write_frame(&mut writer)?;
+        let done = Message::read_frame(&mut reader)
+            .map_err(|e| anyhow!("reading BuildDone: {e}"))?
+            .ok_or_else(|| anyhow!("node closed during build"))?;
+        let Message::BuildDone { build_ms, .. } = done else {
+            bail!("expected BuildDone, got {done:?}");
+        };
+        let info = NodeInfo { node_id, shard_len, cores: p, build_ms };
+        Ok(RemoteNode { node_id, reader, writer, info, next_qid: 0 })
+    }
+}
+
+impl NodeHandle for RemoteNode {
+    fn node_id(&self) -> usize {
+        self.node_id
+    }
+
+    fn info(&self) -> NodeInfo {
+        self.info.clone()
+    }
+
+    fn query(&mut self, q: &[f32]) -> NodeReply {
+        let qid = self.next_qid;
+        self.next_qid += 1;
+        Message::Query { qid, q: q.to_vec() }
+            .write_frame(&mut self.writer)
+            .expect("remote node write failed");
+        let reply = Message::read_frame(&mut self.reader)
+            .expect("remote node read failed")
+            .expect("remote node closed mid-query");
+        let Message::Reply { qid: rqid, neighbors, comparisons, inner_probes } = reply else {
+            panic!("expected Reply, got {reply:?}");
+        };
+        assert_eq!(rqid, qid, "out-of-order reply");
+        NodeReply { qid, neighbors, comparisons, inner_probes }
+    }
+}
+
+impl Drop for RemoteNode {
+    fn drop(&mut self) {
+        let _ = Message::Shutdown.write_frame(&mut self.writer);
+    }
+}

@@ -1,0 +1,240 @@
+//! Wire protocol: length-prefixed frames carrying bytes-encoded messages.
+//!
+//! Frame = `u32` payload length (LE) + payload. Payload = `u8` tag +
+//! fields via [`crate::util::bytes`]. The protocol is strictly
+//! request/response per node connection; the Root broadcasts hash
+//! *specifications* (seed + params), not function tables — nodes
+//! reconstruct bit-identical instances locally.
+
+use std::io::{Read, Write};
+
+use crate::data::Dataset;
+use crate::knn::heap::Neighbor;
+use crate::slsh::SlshParams;
+use crate::util::bytes::{self, CodecError};
+use crate::util::json::Json;
+
+/// Maximum frame payload (guards against hostile/corrupt peers).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Root → node: build tables over the shard.
+    Build {
+        node_id: u32,
+        id_base: u64,
+        p: u32,
+        /// SLSH parameters (JSON — the broadcastable hash spec).
+        params: SlshParams,
+        shard: Dataset,
+    },
+    /// Node → root: construction finished.
+    BuildDone { node_id: u32, shard_len: u64, build_ms: f64 },
+    /// Root → node: resolve a query.
+    Query { qid: u64, q: Vec<f32> },
+    /// Node → root: node-local K-NN + per-core comparison counts.
+    Reply { qid: u64, neighbors: Vec<Neighbor>, comparisons: Vec<u64>, inner_probes: u64 },
+    /// Root → node: drain and exit.
+    Shutdown,
+}
+
+const TAG_BUILD: u8 = 1;
+const TAG_BUILD_DONE: u8 = 2;
+const TAG_QUERY: u8 = 3;
+const TAG_REPLY: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Message::Build { node_id, id_base, p, params, shard } => {
+                bytes::write_u8(&mut out, TAG_BUILD).unwrap();
+                bytes::write_u32(&mut out, *node_id).unwrap();
+                bytes::write_u64(&mut out, *id_base).unwrap();
+                bytes::write_u32(&mut out, *p).unwrap();
+                bytes::write_string(&mut out, &params.to_json().to_string_compact()).unwrap();
+                shard.write_to(&mut out).unwrap();
+            }
+            Message::BuildDone { node_id, shard_len, build_ms } => {
+                bytes::write_u8(&mut out, TAG_BUILD_DONE).unwrap();
+                bytes::write_u32(&mut out, *node_id).unwrap();
+                bytes::write_u64(&mut out, *shard_len).unwrap();
+                bytes::write_f64(&mut out, *build_ms).unwrap();
+            }
+            Message::Query { qid, q } => {
+                bytes::write_u8(&mut out, TAG_QUERY).unwrap();
+                bytes::write_u64(&mut out, *qid).unwrap();
+                bytes::write_f32_vec(&mut out, q).unwrap();
+            }
+            Message::Reply { qid, neighbors, comparisons, inner_probes } => {
+                bytes::write_u8(&mut out, TAG_REPLY).unwrap();
+                bytes::write_u64(&mut out, *qid).unwrap();
+                bytes::write_u64(&mut out, neighbors.len() as u64).unwrap();
+                for n in neighbors {
+                    bytes::write_u64(&mut out, n.id).unwrap();
+                    bytes::write_f32(&mut out, n.dist).unwrap();
+                    bytes::write_u8(&mut out, n.label as u8).unwrap();
+                }
+                bytes::write_u64_vec(&mut out, comparisons).unwrap();
+                bytes::write_u64(&mut out, *inner_probes).unwrap();
+            }
+            Message::Shutdown => {
+                bytes::write_u8(&mut out, TAG_SHUTDOWN).unwrap();
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
+        let mut r = std::io::Cursor::new(buf);
+        let tag = bytes::read_u8(&mut r)?;
+        match tag {
+            TAG_BUILD => {
+                let node_id = bytes::read_u32(&mut r)?;
+                let id_base = bytes::read_u64(&mut r)?;
+                let p = bytes::read_u32(&mut r)?;
+                let params_json = bytes::read_string(&mut r)?;
+                let params = Json::parse(&params_json)
+                    .ok()
+                    .as_ref()
+                    .and_then(SlshParams::from_json)
+                    .ok_or(CodecError::BadTag(0, "SlshParams"))?;
+                let shard = Dataset::read_from(&mut r)?;
+                Ok(Message::Build { node_id, id_base, p, params, shard })
+            }
+            TAG_BUILD_DONE => Ok(Message::BuildDone {
+                node_id: bytes::read_u32(&mut r)?,
+                shard_len: bytes::read_u64(&mut r)?,
+                build_ms: bytes::read_f64(&mut r)?,
+            }),
+            TAG_QUERY => Ok(Message::Query {
+                qid: bytes::read_u64(&mut r)?,
+                q: bytes::read_f32_vec(&mut r)?,
+            }),
+            TAG_REPLY => {
+                let qid = bytes::read_u64(&mut r)?;
+                let n = bytes::read_u64(&mut r)? as usize;
+                if n > 1 << 20 {
+                    return Err(CodecError::TooLong(n as u64, 1 << 20));
+                }
+                let mut neighbors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    neighbors.push(Neighbor {
+                        id: bytes::read_u64(&mut r)?,
+                        dist: bytes::read_f32(&mut r)?,
+                        label: bytes::read_u8(&mut r)? != 0,
+                    });
+                }
+                let comparisons = bytes::read_u64_vec(&mut r)?;
+                let inner_probes = bytes::read_u64(&mut r)?;
+                Ok(Message::Reply { qid, neighbors, comparisons, inner_probes })
+            }
+            TAG_SHUTDOWN => Ok(Message::Shutdown),
+            t => Err(CodecError::BadTag(t as u32, "Message")),
+        }
+    }
+
+    /// Write as a length-prefixed frame.
+    pub fn write_frame<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let payload = self.encode();
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(&payload)?;
+        w.flush()
+    }
+
+    /// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+    pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Message>, CodecError> {
+        let mut len_buf = [0u8; 4];
+        match r.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_le_bytes(len_buf);
+        if len > MAX_FRAME {
+            return Err(CodecError::TooLong(len as u64, MAX_FRAME as u64));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        Ok(Some(Message::decode(&payload)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::family::LayerSpec;
+
+    fn sample_dataset() -> Dataset {
+        let mut d = Dataset::new("wire-test", 3);
+        d.push(&[1.0, 2.0, 3.0], false);
+        d.push(&[4.0, 5.0, 6.0], true);
+        d
+    }
+
+    fn roundtrip(m: &Message) -> Message {
+        let mut buf = Vec::new();
+        m.write_frame(&mut buf).unwrap();
+        let got = Message::read_frame(&mut std::io::Cursor::new(buf)).unwrap().unwrap();
+        got
+    }
+
+    #[test]
+    fn build_roundtrip() {
+        let m = Message::Build {
+            node_id: 3,
+            id_base: 1000,
+            p: 8,
+            params: SlshParams::paper_onset(30, 20.0, 180.0, 42),
+            shard: sample_dataset(),
+        };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn query_reply_roundtrip() {
+        let q = Message::Query { qid: 9, q: vec![1.5, -2.0, 0.0] };
+        assert_eq!(roundtrip(&q), q);
+        let r = Message::Reply {
+            qid: 9,
+            neighbors: vec![
+                Neighbor { id: 5, dist: 1.25, label: true },
+                Neighbor { id: 11, dist: 3.5, label: false },
+            ],
+            comparisons: vec![10, 20, 30],
+            inner_probes: 4,
+        };
+        assert_eq!(roundtrip(&r), r);
+    }
+
+    #[test]
+    fn lifecycle_messages_roundtrip() {
+        let d = Message::BuildDone { node_id: 1, shard_len: 500, build_ms: 12.5 };
+        assert_eq!(roundtrip(&d), d);
+        assert_eq!(roundtrip(&Message::Shutdown), Message::Shutdown);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let empty: &[u8] = &[];
+        assert!(Message::read_frame(&mut std::io::Cursor::new(empty)).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let mut buf = Vec::new();
+        Message::Shutdown.write_frame(&mut buf).unwrap();
+        buf.truncate(buf.len() - 1); // valid length prefix, short payload
+        let mut long = Vec::new();
+        Message::Query { qid: 1, q: vec![1.0; 64] }.write_frame(&mut long).unwrap();
+        long.truncate(20);
+        assert!(Message::read_frame(&mut std::io::Cursor::new(long)).is_err());
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(matches!(Message::decode(&[99]), Err(CodecError::BadTag(99, _))));
+    }
+}

@@ -1,0 +1,7 @@
+//! SLSH node runtime (paper Figure 2): per-core workers owning table
+//! shards over a shared-memory dataset slice, gathered by a node Master.
+
+pub mod node;
+pub mod worker;
+
+pub use node::{LocalNode, NodeInfo, NodeReply};

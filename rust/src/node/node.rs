@@ -1,0 +1,256 @@
+//! An SLSH node (paper Figure 2): `p` core-workers over a shared-memory
+//! shard, with a Master gather/reduce. In the cloud deployment a node is
+//! one VM; here it is a thread group (comparisons — the paper's speed
+//! metric — are partitioning-determined, so the simulation reproduces the
+//! tables exactly; see DESIGN.md §Substitutions).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::data::Dataset;
+use crate::engine::DistanceEngine;
+use crate::knn::heap::{Neighbor, TopK};
+use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReply};
+use crate::slsh::SlshParams;
+
+/// A node's answer to one query — what travels back to the Orchestrator.
+#[derive(Debug, Clone)]
+pub struct NodeReply {
+    pub qid: u64,
+    /// The node-local K-NN (already reduced across its cores).
+    pub neighbors: Vec<Neighbor>,
+    /// Comparisons per core for this query (the paper reports the max
+    /// across all processors of all nodes).
+    pub comparisons: Vec<u64>,
+    /// Inner-layer probes per core (diagnostics).
+    pub inner_probes: u64,
+}
+
+/// Construction-time information reported by a node.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub node_id: usize,
+    pub shard_len: usize,
+    pub cores: usize,
+    pub build_ms: f64,
+}
+
+/// One in-process SLSH node: `p` worker threads + shared shard.
+pub struct LocalNode {
+    node_id: usize,
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    reply_rx: Receiver<WorkerReply>,
+    handles: Vec<JoinHandle<()>>,
+    k: usize,
+    p: usize,
+    info: NodeInfo,
+    next_qid: u64,
+}
+
+impl LocalNode {
+    /// Spawn the node: builds all owned tables in parallel across `p`
+    /// worker threads (each core constructs its tables independently).
+    ///
+    /// `engines` supplies one distance engine per core (native or XLA
+    /// handles — they may differ, e.g. for ablation).
+    pub fn spawn(
+        node_id: usize,
+        shard: Arc<Dataset>,
+        id_base: u64,
+        params: &SlshParams,
+        p: usize,
+        mut engines: Vec<Box<dyn DistanceEngine>>,
+    ) -> LocalNode {
+        assert_eq!(engines.len(), p, "need one engine per core");
+        let t0 = std::time::Instant::now();
+        let (reply_tx, reply_rx) = channel::<WorkerReply>();
+        let (ready_tx, ready_rx) = channel::<usize>();
+        let mut worker_tx = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for core in 0..p {
+            let (tx, rx) = channel::<WorkerMsg>();
+            worker_tx.push(tx);
+            let shard_c = Arc::clone(&shard);
+            let params_c = params.clone();
+            let tables = owned_tables(params.outer.l, p, core);
+            let engine = engines.remove(0);
+            let reply_tx_c = reply_tx.clone();
+            let ready_c = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("node{node_id}-core{core}"))
+                .spawn(move || {
+                    run_worker(
+                        core, shard_c, id_base, params_c, tables, engine, rx, reply_tx_c,
+                        ready_c,
+                    )
+                })
+                .expect("spawning worker");
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        // Wait until every core finished building its tables.
+        let mut built = 0;
+        while built < p {
+            ready_rx.recv().expect("worker died during build");
+            built += 1;
+        }
+        let info = NodeInfo {
+            node_id,
+            shard_len: shard.len(),
+            cores: p,
+            build_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        LocalNode { node_id, worker_tx, reply_rx, handles, k: params.k, p, info, next_qid: 0 }
+    }
+
+    pub fn info(&self) -> &NodeInfo {
+        &self.info
+    }
+
+    pub fn node_id(&self) -> usize {
+        self.node_id
+    }
+
+    /// Resolve one query: the Master broadcasts to all cores, gathers the
+    /// `p` partial K-NN sets, and reduces them to the node-local K-NN.
+    pub fn query(&mut self, q: &[f32]) -> NodeReply {
+        let qid = self.next_qid;
+        self.next_qid += 1;
+        let q = Arc::new(q.to_vec());
+        for tx in &self.worker_tx {
+            tx.send(WorkerMsg::Query { qid, q: Arc::clone(&q) })
+                .expect("worker channel closed");
+        }
+        let mut topk = TopK::new(self.k);
+        let mut comparisons = vec![0u64; self.p];
+        let mut inner_probes = 0u64;
+        let mut received = 0;
+        while received < self.p {
+            let reply = self.reply_rx.recv().expect("worker died");
+            // Replies for stale qids are impossible: queries are strictly
+            // sequential per node (ICU latency model — one query in flight).
+            debug_assert_eq!(reply.qid, qid);
+            comparisons[reply.core] = reply.stats.comparisons;
+            inner_probes += reply.stats.inner_probes;
+            for n in reply.partial {
+                topk.push_unique(n);
+            }
+            received += 1;
+        }
+        NodeReply { qid, neighbors: topk.into_sorted(), comparisons, inner_probes }
+    }
+}
+
+impl Drop for LocalNode {
+    fn drop(&mut self) {
+        for tx in &self.worker_tx {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{build_corpus, CorpusConfig, WindowSpec};
+    use crate::engine::native::NativeEngine;
+    use crate::engine::Metric;
+    use crate::knn::exhaustive::pknn_query;
+    use crate::lsh::family::LayerSpec;
+
+    fn small_corpus() -> crate::data::Corpus {
+        build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 4000, 50, 42))
+    }
+
+    fn params(data: &Dataset, m: usize, l: usize) -> SlshParams {
+        let (lo, hi) = data.value_range();
+        SlshParams::lsh_only(LayerSpec::outer_l1(data.dim, m, l, lo, hi, 7), 10)
+    }
+
+    fn native_engines(p: usize) -> Vec<Box<dyn DistanceEngine>> {
+        (0..p).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect()
+    }
+
+    #[test]
+    fn node_query_reduces_cores_and_counts() {
+        let corpus = small_corpus();
+        let shard = Arc::new(corpus.data.clone());
+        let params = params(&corpus.data, 40, 16);
+        let mut node = LocalNode::spawn(0, Arc::clone(&shard), 0, &params, 4, native_engines(4));
+        assert_eq!(node.info().cores, 4);
+        let q = corpus.queries.point(0);
+        let reply = node.query(q);
+        assert_eq!(reply.comparisons.len(), 4);
+        assert!(!reply.neighbors.is_empty());
+        assert!(reply.neighbors.windows(2).all(|w| w[0].dist <= w[1].dist));
+        assert!(reply.neighbors.len() <= 10);
+    }
+
+    #[test]
+    fn node_result_invariant_to_core_count() {
+        // Partitioning tables across p cores must not change the node's
+        // K-NN output (paper: parallelism does not influence prediction).
+        let corpus = small_corpus();
+        let shard = Arc::new(corpus.data.clone());
+        let params = params(&corpus.data, 40, 12);
+        let mut reference: Option<Vec<Vec<Neighbor>>> = None;
+        for p in [1usize, 3, 4] {
+            let mut node =
+                LocalNode::spawn(0, Arc::clone(&shard), 0, &params, p, native_engines(p));
+            let answers: Vec<Vec<Neighbor>> =
+                (0..10).map(|i| node.query(corpus.queries.point(i)).neighbors).collect();
+            match &reference {
+                None => reference = Some(answers),
+                Some(r) => assert_eq!(&answers, r, "p={p} changed results"),
+            }
+        }
+    }
+
+    #[test]
+    fn node_neighbors_match_exhaustive_truth_on_hits() {
+        // Every neighbor a node returns must carry the true L1 distance
+        // (consistency between index candidates and scan).
+        let corpus = small_corpus();
+        let shard = Arc::new(corpus.data.clone());
+        let params = params(&corpus.data, 30, 16);
+        let mut node = LocalNode::spawn(0, Arc::clone(&shard), 0, &params, 2, native_engines(2));
+        let engine = NativeEngine::new();
+        for i in 0..5 {
+            let q = corpus.queries.point(i);
+            let reply = node.query(q);
+            let truth = pknn_query(
+                &engine,
+                Metric::L1,
+                q,
+                &corpus.data.points,
+                corpus.data.dim,
+                &corpus.data.labels,
+                10,
+                1,
+            );
+            let truth_dist: std::collections::HashMap<u64, f32> =
+                truth.neighbors.iter().map(|n| (n.id, n.dist)).collect();
+            for n in &reply.neighbors {
+                if let Some(&d) = truth_dist.get(&n.id) {
+                    assert!((n.dist - d).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn id_base_offsets_ids() {
+        let corpus = small_corpus();
+        let shard = Arc::new(corpus.data.shard(0..1000));
+        let params = params(&corpus.data, 30, 8);
+        let mut node =
+            LocalNode::spawn(1, Arc::clone(&shard), 5000, &params, 2, native_engines(2));
+        let reply = node.query(shard.point(3));
+        assert!(reply.neighbors.iter().any(|n| n.id == 5003), "{:?}", reply.neighbors);
+        assert!(reply.neighbors.iter().all(|n| (5000..6000).contains(&n.id)));
+    }
+}

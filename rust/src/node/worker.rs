@@ -1,0 +1,107 @@
+//! Per-core worker (paper Figure 2): one long-lived thread per simulated
+//! core `P_i`, owning `O(L_out / p)` outer tables (and their inner
+//! indices), a stamped visited set, and a comparison counter. The shard's
+//! points live in shared memory (`Arc<Dataset>`); buckets hold local ids
+//! into it.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::engine::DistanceEngine;
+use crate::knn::heap::Neighbor;
+use crate::slsh::{QueryStats, SlshIndex, SlshParams};
+use crate::util::stamp::StampSet;
+
+/// Messages a worker accepts.
+pub enum WorkerMsg {
+    /// Resolve a query; reply through the node's gather channel.
+    Query { qid: u64, q: Arc<Vec<f32>> },
+    /// Drain and exit.
+    Shutdown,
+}
+
+/// One worker's partial answer.
+pub struct WorkerReply {
+    pub core: usize,
+    pub qid: u64,
+    pub partial: Vec<Neighbor>,
+    pub stats: QueryStats,
+}
+
+/// Table indices owned by core `i` of `p`: `{t : t ≡ i (mod p)}` — the
+/// paper's O(L/p)-tables-per-processor round-robin split.
+pub fn owned_tables(l: usize, p: usize, core: usize) -> Vec<usize> {
+    (0..l).filter(|t| t % p == core).collect()
+}
+
+/// Worker main loop: build the owned tables, then serve queries.
+///
+/// `ready` fires once construction finishes (the node master waits for all
+/// cores before declaring the node built — table construction is entirely
+/// parallel, per the paper).
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker(
+    core: usize,
+    shard: Arc<Dataset>,
+    id_base: u64,
+    params: SlshParams,
+    tables: Vec<usize>,
+    engine: Box<dyn DistanceEngine>,
+    rx: Receiver<WorkerMsg>,
+    reply_tx: Sender<WorkerReply>,
+    ready: Sender<usize>,
+) {
+    let index = SlshIndex::build(&params, &*shard, &tables);
+    let mut visited = StampSet::new(shard.len().max(1));
+    let mut scratch: Vec<u32> = Vec::new();
+    let _ = ready.send(core);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Query { qid, q } => {
+                let out = index.query(
+                    engine.as_ref(),
+                    &q,
+                    &shard.points,
+                    &shard.labels,
+                    id_base,
+                    &mut visited,
+                    &mut scratch,
+                );
+                let reply = WorkerReply {
+                    core,
+                    qid,
+                    partial: out.topk.into_sorted(),
+                    stats: out.stats,
+                };
+                if reply_tx.send(reply).is_err() {
+                    break; // node gone
+                }
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_tables_partition_exactly() {
+        for (l, p) in [(120usize, 8usize), (12, 5), (7, 7), (3, 8)] {
+            let mut seen = vec![false; l];
+            for core in 0..p {
+                for t in owned_tables(l, p, core) {
+                    assert!(!seen[t], "table {t} owned twice");
+                    seen[t] = true;
+                }
+            }
+            assert!(seen.iter().all(|s| *s), "unowned tables for l={l} p={p}");
+            // Balance: sizes differ by at most 1.
+            let sizes: Vec<usize> = (0..p).map(|c| owned_tables(l, p, c).len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+}

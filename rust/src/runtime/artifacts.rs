@@ -1,0 +1,164 @@
+//! AOT artifact catalog: locate `artifacts/`, parse `manifest.json`
+//! (written by `python -m compile.aot`), and resolve kernel names to
+//! HLO-text files.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Metadata for one lowered kernel.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    /// Candidate batch size (scan kernels).
+    pub bc: Option<usize>,
+    /// Query batch size (scan kernels).
+    pub bq: Option<usize>,
+    pub dim: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dim: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("artifacts directory not found (tried {0:?}); run `make artifacts` first")]
+    NotFound(Vec<PathBuf>),
+    #[error("failed reading {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+}
+
+/// Locate the artifacts directory: `$DSLSH_ARTIFACTS`, `./artifacts`, or
+/// next to the executable.
+pub fn locate() -> Result<PathBuf, ArtifactError> {
+    let mut tried = Vec::new();
+    if let Ok(dir) = std::env::var("DSLSH_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+        tried.push(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return Ok(cwd);
+    }
+    tried.push(cwd);
+    if let Ok(exe) = std::env::current_exe() {
+        // target/release/dslsh -> repo root/artifacts
+        for ancestor in exe.ancestors().skip(1).take(4) {
+            let p = ancestor.join("artifacts");
+            if p.join("manifest.json").exists() {
+                return Ok(p);
+            }
+            tried.push(p);
+        }
+    }
+    Err(ArtifactError::NotFound(tried))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ArtifactError> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ArtifactError::Io(path.clone(), e))?;
+        let json = Json::parse(&text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let dim = json
+            .get("dim")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ArtifactError::Parse("missing dim".into()))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| ArtifactError::Parse("missing artifacts".into()))?;
+        let mut artifacts = Vec::new();
+        for (name, meta) in arts.iter() {
+            let kind = meta
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ArtifactError::Parse(format!("{name}: missing kind")))?;
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ArtifactError::Parse(format!("{name}: missing file")))?;
+            artifacts.push(ArtifactMeta {
+                name: name.clone(),
+                kind: kind.to_string(),
+                file: dir.join(file),
+                bc: meta.get("bc").and_then(Json::as_usize),
+                bq: meta.get("bq").and_then(Json::as_usize),
+                dim: meta.get("d").and_then(Json::as_usize).unwrap_or(dim),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), dim, artifacts })
+    }
+
+    /// Discover + load in one step.
+    pub fn discover() -> Result<Manifest, ArtifactError> {
+        Manifest::load(&locate()?)
+    }
+
+    /// Scan kernels of a kind, sorted ascending by batch size.
+    pub fn scan_ladder(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.kind == kind && a.bc.is_some()).collect();
+        v.sort_by_key(|a| a.bc.unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_sorts_ladder() {
+        let dir = std::env::temp_dir().join("dslsh_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"dim": 30, "bq": 1, "artifacts": {
+                "l1_scan_b2048": {"kind": "l1_scan", "bq": 1, "bc": 2048, "d": 30, "file": "a.hlo.txt"},
+                "l1_scan_b256": {"kind": "l1_scan", "bq": 1, "bc": 256, "d": 30, "file": "b.hlo.txt"},
+                "hash_outer_l120_m125": {"kind": "hash_outer", "l": 120, "m": 125, "d": 30, "file": "c.hlo.txt"}
+            }}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dim, 30);
+        assert_eq!(m.artifacts.len(), 3);
+        let ladder = m.scan_ladder("l1_scan");
+        assert_eq!(ladder.len(), 2);
+        assert_eq!(ladder[0].bc, Some(256));
+        assert_eq!(ladder[1].bc, Some(2048));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_manifest() {
+        let dir = std::env::temp_dir().join("dslsh_manifest_bad");
+        write_manifest(&dir, r#"{"artifacts": {}}"#);
+        assert!(matches!(Manifest::load(&dir), Err(ArtifactError::Parse(_))));
+        write_manifest(&dir, "not json");
+        assert!(matches!(Manifest::load(&dir), Err(ArtifactError::Parse(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_error_lists_candidates() {
+        let m = Manifest::load(Path::new("/nonexistent/dslsh"));
+        assert!(matches!(m, Err(ArtifactError::Io(..))));
+    }
+}

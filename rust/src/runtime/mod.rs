@@ -1,0 +1,11 @@
+//! AOT runtime: artifact catalog, PJRT execution, and the thread-safe
+//! XLA distance-engine service. Python authors + lowers the kernels once
+//! (`make artifacts`); this module is everything the request path needs.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod service;
+
+pub use artifacts::{locate, ArtifactError, Manifest};
+pub use pjrt::{XlaRuntime, PAD_DIST};
+pub use service::{XlaEngine, XlaService};

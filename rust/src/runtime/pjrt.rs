@@ -1,0 +1,143 @@
+//! PJRT execution of the AOT artifacts (single-threaded core).
+//!
+//! Wraps the `xla` crate: CPU client → `HloModuleProto::from_text_file` →
+//! compile → execute. `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), so this type must live on one thread;
+//! [`crate::runtime::service`] provides the thread-safe façade the worker
+//! pool uses.
+
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::lsh::family::Metric;
+use crate::runtime::artifacts::Manifest;
+
+/// Distance value the kernels assign to padding rows (ref.py PAD_DIST).
+pub const PAD_DIST: f32 = 1e9;
+
+/// One compiled scan executable.
+struct ScanExe {
+    bc: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Single-threaded PJRT runtime holding compiled scan kernels.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// Ascending-bc ladders per metric.
+    l1: Vec<ScanExe>,
+    cosine: Vec<ScanExe>,
+    pub dim: usize,
+    /// Cumulative executions (diagnostics).
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl XlaRuntime {
+    /// Compile every scan artifact in the manifest on a fresh CPU client.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut l1 = Vec::new();
+        let mut cosine = Vec::new();
+        for kind in ["l1_scan", "cosine_scan"] {
+            for meta in manifest.scan_ladder(kind) {
+                let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                    .map_err(|e| anyhow!("loading {:?}: {e:?}", meta.file))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+                let entry = ScanExe { bc: meta.bc.unwrap(), exe };
+                if kind == "l1_scan" {
+                    l1.push(entry);
+                } else {
+                    cosine.push(entry);
+                }
+            }
+        }
+        if l1.is_empty() {
+            bail!("manifest has no l1_scan artifacts");
+        }
+        Ok(Self { client, l1, cosine, dim: manifest.dim, calls: std::cell::Cell::new(0) })
+    }
+
+    /// Convenience: discover artifacts and build.
+    pub fn discover() -> Result<Self> {
+        let manifest = Manifest::discover()?;
+        Self::from_manifest(&manifest)
+    }
+
+    fn ladder(&self, metric: Metric) -> &[ScanExe] {
+        match metric {
+            Metric::L1 => &self.l1,
+            Metric::Cosine => &self.cosine,
+        }
+    }
+
+    /// Largest compiled batch for a metric.
+    pub fn max_batch(&self, metric: Metric) -> usize {
+        self.ladder(metric).last().map(|e| e.bc).unwrap_or(0)
+    }
+
+    /// Smallest compiled batch that fits `n` rows (or the max batch, used
+    /// with chunking).
+    fn pick(&self, metric: Metric, n: usize) -> &ScanExe {
+        let ladder = self.ladder(metric);
+        ladder.iter().find(|e| e.bc >= n).unwrap_or_else(|| ladder.last().unwrap())
+    }
+
+    /// Distances from `q` to `rows` (row-major `n × dim`, n arbitrary —
+    /// chunked over the ladder). Output length == n, in row order.
+    pub fn scan_rows(&self, metric: Metric, q: &[f32], rows: &[f32], n: usize) -> Result<Vec<f32>> {
+        assert_eq!(q.len(), self.dim);
+        assert_eq!(rows.len(), n * self.dim);
+        if self.ladder(metric).is_empty() {
+            bail!("no {metric:?} artifacts compiled");
+        }
+        let mut out = Vec::with_capacity(n);
+        let max = self.max_batch(metric);
+        let mut off = 0usize;
+        while off < n {
+            let take = (n - off).min(max);
+            let exe = self.pick(metric, take);
+            let dists = self.execute_one(exe, q, &rows[off * self.dim..(off + take) * self.dim], take)?;
+            out.extend_from_slice(&dists[..take]);
+            off += take;
+        }
+        Ok(out)
+    }
+
+    /// Run one padded batch through a compiled executable.
+    fn execute_one(&self, exe: &ScanExe, q: &[f32], rows: &[f32], n_real: usize) -> Result<Vec<f32>> {
+        let bc = exe.bc;
+        debug_assert!(n_real <= bc);
+        // Pad candidates with zero rows, mask marks them invalid.
+        let mut c = vec![0f32; bc * self.dim];
+        c[..n_real * self.dim].copy_from_slice(rows);
+        let mut mask = vec![0f32; bc];
+        for m in mask.iter_mut().take(n_real) {
+            *m = 1.0;
+        }
+        let q_lit = xla::Literal::vec1(q)
+            .reshape(&[1, self.dim as i64])
+            .map_err(|e| anyhow!("reshape q: {e:?}"))?;
+        let c_lit = xla::Literal::vec1(&c)
+            .reshape(&[bc as i64, self.dim as i64])
+            .map_err(|e| anyhow!("reshape c: {e:?}"))?;
+        let m_lit = xla::Literal::vec1(&mask);
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[q_lit, c_lit, m_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        self.calls.set(self.calls.get() + 1);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let tuple = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        let values: Vec<f32> = tuple.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if values.len() != bc {
+            bail!("expected {bc} distances, got {}", values.len());
+        }
+        Ok(values)
+    }
+}

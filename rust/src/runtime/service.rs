@@ -1,0 +1,134 @@
+//! Thread-safe façade over the PJRT runtime.
+//!
+//! `PjRtClient` cannot leave its thread, so [`XlaService`] parks an
+//! [`XlaRuntime`](crate::runtime::pjrt::XlaRuntime) on a dedicated service
+//! thread; workers hold cloneable [`XlaEngine`] handles that gather
+//! candidate rows, round-trip them through a channel, and feed the
+//! returned distances into their top-K — implementing [`DistanceEngine`]
+//! so the SLSH hot path is engine-agnostic.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::engine::{push_scored, DistanceEngine, Metric};
+use crate::knn::heap::TopK;
+use crate::runtime::pjrt::XlaRuntime;
+
+enum Request {
+    Scan {
+        metric: Metric,
+        q: Vec<f32>,
+        rows: Vec<f32>,
+        n: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Owns the service thread. Dropping shuts the thread down.
+pub struct XlaService {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaService {
+    /// Spawn the service thread; fails fast if artifacts are missing or
+    /// do not compile.
+    pub fn start() -> Result<XlaService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let runtime = match XlaRuntime::discover() {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Scan { metric, q, rows, n, reply } => {
+                            let _ = reply.send(runtime.scan_rows(metric, &q, &rows, n));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning xla-service thread");
+        ready_rx.recv().expect("xla-service died during startup")?;
+        Ok(XlaService { tx, join: Some(join) })
+    }
+
+    /// A new engine handle for a worker thread.
+    pub fn engine(&self) -> XlaEngine {
+        XlaEngine { tx: Mutex::new(self.tx.clone()) }
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Cloneable, `Send + Sync` scan handle implementing [`DistanceEngine`].
+pub struct XlaEngine {
+    tx: Mutex<mpsc::Sender<Request>>,
+}
+
+impl XlaEngine {
+    fn scan_remote(&self, metric: Metric, q: &[f32], rows: Vec<f32>, n: usize) -> Vec<f32> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request::Scan { metric, q: q.to_vec(), rows, n, reply: reply_tx })
+                .expect("xla-service gone");
+        }
+        reply_rx
+            .recv()
+            .expect("xla-service dropped reply")
+            .expect("xla scan failed")
+    }
+}
+
+impl DistanceEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn scan(
+        &self,
+        metric: Metric,
+        q: &[f32],
+        data: &[f32],
+        dim: usize,
+        ids: &[u32],
+        labels: &[bool],
+        id_base: u64,
+        topk: &mut TopK,
+    ) -> u64 {
+        if ids.is_empty() {
+            return 0;
+        }
+        // Gather candidate rows into a dense buffer for the device.
+        let mut rows = Vec::with_capacity(ids.len() * dim);
+        for &id in ids {
+            rows.extend_from_slice(&data[id as usize * dim..(id as usize + 1) * dim]);
+        }
+        let dists = self.scan_remote(metric, q, rows, ids.len());
+        for (&id, &d) in ids.iter().zip(&dists) {
+            push_scored(topk, id_base, id, d, labels);
+        }
+        ids.len() as u64
+    }
+}

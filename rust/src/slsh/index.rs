@@ -1,0 +1,418 @@
+//! The SLSH index owned by one (simulated) core: a subset of the outer
+//! layer's tables plus inner cosine indices inside populous buckets, and
+//! the query-resolution path with comparison counting.
+
+use std::collections::HashMap;
+
+use crate::engine::{DistanceEngine, Metric};
+use crate::knn::heap::TopK;
+use crate::lsh::family::LayerSpec;
+use crate::lsh::layer::{LshLayer, Points, SliceView};
+use crate::slsh::params::SlshParams;
+use crate::util::rng::mix64;
+use crate::util::stamp::StampSet;
+
+/// Inner index over one populous outer bucket.
+struct InnerIndex {
+    /// Local ids of the bucket population (positions are the inner layer's
+    /// point ids).
+    members: Vec<u32>,
+    layer: LshLayer,
+}
+
+/// Per-(owned table) map: outer bucket index → inner index.
+type InnerMap = HashMap<usize, InnerIndex>;
+
+/// SLSH index over a shard, for a subset of the outer tables.
+pub struct SlshIndex {
+    pub params: SlshParams,
+    outer: LshLayer,
+    inners: Vec<InnerMap>,
+    /// Number of points in the local shard.
+    n_local: usize,
+    /// How many inner indices were built (diagnostics).
+    pub inner_count: usize,
+}
+
+/// Per-query resolution statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Deduplicated candidates scanned — equals distance comparisons.
+    pub comparisons: u64,
+    /// Outer buckets that hit an inner index.
+    pub inner_probes: u64,
+    /// Outer buckets that were taken whole.
+    pub direct_buckets: u64,
+}
+
+/// K-NN output of one core for one query.
+#[derive(Debug, Clone)]
+pub struct QueryOutput {
+    pub topk: TopK,
+    pub stats: QueryStats,
+}
+
+impl SlshIndex {
+    /// Build the index for the owned `table_indices` of the outer layer
+    /// over the shard `points` (local ids `0..n`).
+    ///
+    /// Inner indices are built "sequentially where the population is
+    /// larger than nα" (paper §3) — n here is the *local* shard size, so
+    /// stratification behaves identically at every node count.
+    pub fn build<P: Points + ?Sized>(
+        params: &SlshParams,
+        points: &P,
+        table_indices: &[usize],
+    ) -> Self {
+        let outer = LshLayer::build(&params.outer, points, table_indices);
+        let n_local = points.len();
+        let mut inners: Vec<InnerMap> = Vec::with_capacity(outer.tables.len());
+        let mut inner_count = 0usize;
+        if let Some(ip) = &params.inner {
+            let threshold = (ip.alpha * n_local as f64).max(1.0) as usize;
+            for lt in &outer.tables {
+                let mut map = InnerMap::new();
+                for (b, ids) in lt.table.buckets() {
+                    if ids.len() <= threshold {
+                        continue;
+                    }
+                    // Gather the bucket population into a dense matrix for
+                    // the inner build.
+                    let dim = points.dim();
+                    let mut sub = Vec::with_capacity(ids.len() * dim);
+                    for &id in ids {
+                        sub.extend_from_slice(points.point(id as usize));
+                    }
+                    let view = SliceView { data: &sub, dim };
+                    // Inner seed: deterministic in (inner seed, global table
+                    // index, bucket id) — invariant to core partitioning.
+                    let seed = mix64(ip.seed ^ mix64(lt.t as u64) ^ (b as u64));
+                    let spec = LayerSpec::inner_cosine(dim, ip.m, ip.l, seed);
+                    let layer = LshLayer::build_full(&spec, &view);
+                    map.insert(b, InnerIndex { members: ids.to_vec(), layer });
+                    inner_count += 1;
+                }
+                inners.push(map);
+            }
+        } else {
+            inners.resize_with(outer.tables.len(), InnerMap::new);
+        }
+        Self { params: params.clone(), outer, inners, n_local, inner_count }
+    }
+
+    /// Convenience: build all tables (single-core index).
+    pub fn build_full<P: Points + ?Sized>(params: &SlshParams, points: &P) -> Self {
+        let all: Vec<usize> = (0..params.outer.l).collect();
+        Self::build(params, points, &all)
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.n_local
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.outer.tables.len()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.outer.mem_bytes()
+            + self
+                .inners
+                .iter()
+                .flat_map(|m| m.values())
+                .map(|i| i.layer.mem_bytes() + i.members.len() * 4)
+                .sum::<usize>()
+    }
+
+    /// Gather the deduplicated candidate set for `q` across the owned
+    /// tables ("the union of the datapoints which collide with the query",
+    /// narrowed through inner layers where present).
+    pub fn candidates(&self, q: &[f32], visited: &mut StampSet, out: &mut Vec<u32>) -> QueryStats {
+        debug_assert!(visited.capacity() >= self.n_local);
+        let mut stats = QueryStats::default();
+        out.clear();
+        visited.clear();
+        for (pos, lt) in self.outer.tables.iter().enumerate() {
+            let key = lt.hash.hash(q);
+            let Some(bucket_idx) = lt.table.find_bucket(&key) else { continue };
+            let ids = lt.table.bucket(bucket_idx);
+            if ids.is_empty() {
+                continue;
+            }
+            if let Some(inner) = self.inners[pos].get(&bucket_idx) {
+                stats.inner_probes += 1;
+                inner.layer.probe_each(q, |_t, positions| {
+                    for &p in positions {
+                        let id = inner.members[p as usize];
+                        if visited.insert(id) {
+                            out.push(id);
+                        }
+                    }
+                });
+            } else {
+                stats.direct_buckets += 1;
+                for &id in ids {
+                    if visited.insert(id) {
+                        out.push(id);
+                    }
+                }
+            }
+        }
+        stats.comparisons = out.len() as u64;
+        stats
+    }
+
+    /// Resolve a query on this core: gather candidates, scan them with the
+    /// engine (final ranking metric is the outer layer's l1, matching the
+    /// PKNN baseline), return the partial top-K and stats.
+    pub fn query(
+        &self,
+        engine: &dyn DistanceEngine,
+        q: &[f32],
+        data: &[f32],
+        labels: &[bool],
+        id_base: u64,
+        visited: &mut StampSet,
+        scratch: &mut Vec<u32>,
+    ) -> QueryOutput {
+        let stats = self.candidates(q, visited, scratch);
+        let mut topk = TopK::new(self.params.k);
+        let scanned = engine.scan(
+            Metric::L1,
+            q,
+            data,
+            self.params.outer.dim,
+            scratch,
+            labels,
+            id_base,
+            &mut topk,
+        );
+        debug_assert_eq!(scanned, stats.comparisons);
+        QueryOutput { topk, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+    use crate::knn::exhaustive::pknn_query;
+    use crate::lsh::family::LayerSpec;
+    use crate::slsh::params::InnerParams;
+    use crate::util::rng::Xoshiro256;
+
+    /// Clustered fixture shaped like the ABP windows: tight clusters with
+    /// a handful of large "stable patient" clusters that dominate buckets.
+    struct Fixture {
+        data: Vec<f32>,
+        labels: Vec<bool>,
+        dim: usize,
+    }
+
+    impl Fixture {
+        fn new(seed: u64) -> Self {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let dim = 30;
+            let mut data = Vec::new();
+            let mut labels = Vec::new();
+            // 3 big clusters (60% of points) + 40 small ones.
+            let mut add_cluster = |rng: &mut Xoshiro256, count: usize, positive: bool| {
+                let center: Vec<f32> =
+                    (0..dim).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+                for _ in 0..count {
+                    for &c in &center {
+                        data.push(c + rng.gen_normal(0.0, 0.5) as f32);
+                    }
+                    labels.push(positive);
+                }
+            };
+            for _ in 0..3 {
+                add_cluster(&mut rng, 400, false);
+            }
+            for i in 0..40 {
+                add_cluster(&mut rng, 20, i % 8 == 0);
+            }
+            Self { data, labels, dim }
+        }
+
+        fn view(&self) -> SliceView<'_> {
+            SliceView { data: &self.data, dim: self.dim }
+        }
+
+        fn n(&self) -> usize {
+            self.labels.len()
+        }
+    }
+
+    fn lsh_params(m: usize, l: usize, seed: u64) -> SlshParams {
+        SlshParams::lsh_only(LayerSpec::outer_l1(30, m, l, 20.0, 180.0, seed), 10)
+    }
+
+    fn slsh_params(m: usize, l: usize, alpha: f64, seed: u64) -> SlshParams {
+        SlshParams {
+            outer: LayerSpec::outer_l1(30, m, l, 20.0, 180.0, seed),
+            inner: Some(InnerParams { m: 24, l: 8, alpha, seed: seed ^ 0xABCD }),
+            k: 10,
+        }
+    }
+
+    #[test]
+    fn alpha_one_reduces_to_plain_lsh() {
+        let fx = Fixture::new(1);
+        // alpha = 1.0 ⇒ no bucket exceeds the threshold ⇒ SLSH ≡ LSH.
+        let lsh = SlshIndex::build_full(&lsh_params(24, 12, 7), &fx.view());
+        let slsh = SlshIndex::build_full(&slsh_params(24, 12, 1.0, 7), &fx.view());
+        assert_eq!(slsh.inner_count, 0);
+        let mut visited = StampSet::new(fx.n());
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..30 {
+            let q: Vec<f32> = (0..30).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+            lsh.candidates(&q, &mut visited, &mut a);
+            slsh.candidates(&q, &mut visited, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn candidates_are_deduplicated_and_within_shard() {
+        let fx = Fixture::new(3);
+        let idx = SlshIndex::build_full(&lsh_params(20, 16, 11), &fx.view());
+        let mut visited = StampSet::new(fx.n());
+        let mut out = Vec::new();
+        let q = fx.view().point(10).to_vec();
+        let stats = idx.candidates(&q, &mut visited, &mut out);
+        assert_eq!(stats.comparisons as usize, out.len());
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        let before = sorted.len();
+        sorted.dedup();
+        assert_eq!(sorted.len(), before, "duplicate candidates returned");
+        assert!(out.iter().all(|&id| (id as usize) < fx.n()));
+        // A point must be its own candidate.
+        assert!(out.contains(&10));
+    }
+
+    #[test]
+    fn inner_layer_builds_on_populous_buckets_and_cuts_candidates() {
+        let fx = Fixture::new(4);
+        // Coarse outer hash (small m) ⇒ the 400-point clusters form huge
+        // buckets; alpha = 0.05 ⇒ threshold = 90 points.
+        let lsh = SlshIndex::build_full(&lsh_params(12, 8, 13), &fx.view());
+        let slsh = SlshIndex::build_full(&slsh_params(12, 8, 0.05, 13), &fx.view());
+        assert!(slsh.inner_count > 0, "no inner indices built");
+        let mut visited = StampSet::new(fx.n());
+        let mut out = Vec::new();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (mut total_lsh, mut total_slsh, mut inner_hits) = (0u64, 0u64, 0u64);
+        for _ in 0..50 {
+            // Queries near big-cluster members.
+            let base = rng.gen_index(1200);
+            let mut q = fx.view().point(base).to_vec();
+            for v in q.iter_mut() {
+                *v += rng.gen_normal(0.0, 0.3) as f32;
+            }
+            total_lsh += lsh.candidates(&q, &mut visited, &mut out).comparisons;
+            let s = slsh.candidates(&q, &mut visited, &mut out);
+            total_slsh += s.comparisons;
+            inner_hits += s.inner_probes;
+        }
+        assert!(inner_hits > 0, "inner layer never probed");
+        assert!(
+            total_slsh < total_lsh,
+            "stratification must reduce comparisons: slsh={total_slsh} lsh={total_lsh}"
+        );
+    }
+
+    #[test]
+    fn sharded_union_equals_full_index_candidates() {
+        let fx = Fixture::new(6);
+        let params = slsh_params(20, 12, 0.05, 17);
+        let full = SlshIndex::build_full(&params, &fx.view());
+        let p = 4;
+        let shards: Vec<SlshIndex> = (0..p)
+            .map(|core| {
+                let mine: Vec<usize> = (0..12).filter(|t| t % p == core).collect();
+                SlshIndex::build(&params, &fx.view(), &mine)
+            })
+            .collect();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut visited = StampSet::new(fx.n());
+        let mut buf = Vec::new();
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..30).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+            full.candidates(&q, &mut visited, &mut buf);
+            let mut full_set: Vec<u32> = buf.clone();
+            full_set.sort_unstable();
+            let mut union: Vec<u32> = Vec::new();
+            for s in &shards {
+                s.candidates(&q, &mut visited, &mut buf);
+                union.extend_from_slice(&buf);
+            }
+            union.sort_unstable();
+            union.dedup();
+            assert_eq!(union, full_set);
+        }
+    }
+
+    #[test]
+    fn query_ranks_by_l1_and_counts_comparisons() {
+        let fx = Fixture::new(8);
+        let idx = SlshIndex::build_full(&lsh_params(20, 16, 19), &fx.view());
+        let engine = NativeEngine::new();
+        let mut visited = StampSet::new(fx.n());
+        let mut scratch = Vec::new();
+        let q = fx.view().point(42).to_vec();
+        let out = idx.query(&engine, &q, &fx.data, &fx.labels, 5000, &mut visited, &mut scratch);
+        let nbs = out.topk.into_sorted();
+        assert!(!nbs.is_empty());
+        assert_eq!(nbs[0].id, 5042, "self must be nearest (id_base applied)");
+        assert_eq!(nbs[0].dist, 0.0);
+        assert!(nbs.windows(2).all(|w| w[0].dist <= w[1].dist));
+        assert!(out.stats.comparisons > 0);
+        assert!(out.stats.comparisons < fx.n() as u64, "must beat exhaustive");
+    }
+
+    #[test]
+    fn recall_against_exhaustive_on_clustered_data() {
+        let fx = Fixture::new(9);
+        let idx = SlshIndex::build_full(&lsh_params(28, 24, 23), &fx.view());
+        let engine = NativeEngine::new();
+        let mut visited = StampSet::new(fx.n());
+        let mut scratch = Vec::new();
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..40 {
+            let base = rng.gen_index(fx.n());
+            let mut q = fx.view().point(base).to_vec();
+            for v in q.iter_mut() {
+                *v += rng.gen_normal(0.0, 0.2) as f32;
+            }
+            let truth = pknn_query(&engine, Metric::L1, &q, &fx.data, 30, &fx.labels, 10, 1);
+            let approx = idx
+                .query(&engine, &q, &fx.data, &fx.labels, 0, &mut visited, &mut scratch)
+                .topk
+                .into_sorted();
+            let truth_ids: std::collections::HashSet<u64> =
+                truth.neighbors.iter().map(|n| n.id).collect();
+            hits += approx.iter().filter(|n| truth_ids.contains(&n.id)).count();
+            total += truth.neighbors.len();
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.6, "recall too low: {recall}");
+    }
+
+    #[test]
+    fn stats_bucket_kind_accounting() {
+        let fx = Fixture::new(12);
+        let slsh = SlshIndex::build_full(&slsh_params(12, 8, 0.05, 29), &fx.view());
+        let mut visited = StampSet::new(fx.n());
+        let mut out = Vec::new();
+        let q = fx.view().point(0).to_vec(); // big-cluster member
+        let stats = slsh.candidates(&q, &mut visited, &mut out);
+        assert_eq!(stats.inner_probes + stats.direct_buckets as u64 > 0, true);
+        assert!(stats.inner_probes + stats.direct_buckets <= 8);
+    }
+}

@@ -1,0 +1,14 @@
+//! Stratified Locality Sensitive Hashing (paper §2, Kim et al. [10]).
+//!
+//! SLSH layers a second, different-metric LSH **inside** the most populous
+//! buckets of the outer layer: buckets holding more than `α·n` points get
+//! an inner cosine-LSH index over their population, so a query landing in
+//! a huge bucket is narrowed by a second notion of similarity instead of
+//! linearly scanning the whole bucket. This both cuts candidate counts
+//! (the LSH bottleneck) and injects a second metric's semantics.
+
+pub mod index;
+pub mod params;
+
+pub use index::{QueryOutput, QueryStats, SlshIndex};
+pub use params::{InnerParams, SlshParams};

@@ -1,0 +1,155 @@
+//! SLSH parameter sets, their JSON round-trip (configs, wire protocol) and
+//! the paper's experiment grids.
+
+use crate::lsh::family::LayerSpec;
+use crate::util::json::{Json, JsonObj};
+
+/// Inner-layer (stratification) parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InnerParams {
+    /// Bits per inner composed hash (`m_in`).
+    pub m: usize,
+    /// Inner tables per stratified bucket (`L_in`).
+    pub l: usize,
+    /// Population threshold: buckets with more than `alpha · n_local`
+    /// points get an inner index (`α`, paper uses 0.005).
+    pub alpha: f64,
+    /// Seed stream for inner family draws.
+    pub seed: u64,
+}
+
+/// Full SLSH configuration: outer L1 layer + optional inner cosine layer +
+/// K for K-NN.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlshParams {
+    pub outer: LayerSpec,
+    pub inner: Option<InnerParams>,
+    /// Neighbors retrieved per query (paper: K = 10).
+    pub k: usize,
+}
+
+impl SlshParams {
+    /// LSH-only configuration (Figure 3 sweeps).
+    pub fn lsh_only(outer: LayerSpec, k: usize) -> Self {
+        Self { outer, inner: None, k }
+    }
+
+    /// The paper's *SLSH onset*: the outer configuration on which the
+    /// inner layer is applied (m_out = 125, L_out = 120, α = 0.005).
+    pub fn paper_onset(dim: usize, lo: f32, hi: f32, seed: u64) -> Self {
+        Self {
+            outer: LayerSpec::outer_l1(dim, 125, 120, lo, hi, seed),
+            inner: Some(InnerParams { m: 65, l: 20, alpha: 0.005, seed: seed ^ 0x1111_2222 }),
+            k: 10,
+        }
+    }
+
+    // ---- JSON round-trip --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        let mut outer = JsonObj::new();
+        outer.insert("dim", Json::Num(self.outer.dim as f64));
+        outer.insert("m", Json::Num(self.outer.m as f64));
+        outer.insert("l", Json::Num(self.outer.l as f64));
+        outer.insert("lo", Json::Num(self.outer.lo as f64));
+        outer.insert("hi", Json::Num(self.outer.hi as f64));
+        outer.insert("seed", Json::Num(self.outer.seed as f64));
+        o.insert("outer", Json::Obj(outer));
+        if let Some(inner) = &self.inner {
+            let mut i = JsonObj::new();
+            i.insert("m", Json::Num(inner.m as f64));
+            i.insert("l", Json::Num(inner.l as f64));
+            i.insert("alpha", Json::Num(inner.alpha));
+            i.insert("seed", Json::Num(inner.seed as f64));
+            o.insert("inner", Json::Obj(i));
+        }
+        o.insert("k", Json::Num(self.k as f64));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let outer = v.get("outer")?;
+        let spec = LayerSpec::outer_l1(
+            outer.get("dim")?.as_usize()?,
+            outer.get("m")?.as_usize()?,
+            outer.get("l")?.as_usize()?,
+            outer.get("lo")?.as_f64()? as f32,
+            outer.get("hi")?.as_f64()? as f32,
+            outer.get("seed")?.as_u64()?,
+        );
+        let inner = match v.get("inner") {
+            Some(i) => Some(InnerParams {
+                m: i.get("m")?.as_usize()?,
+                l: i.get("l")?.as_usize()?,
+                alpha: i.get("alpha")?.as_f64()?,
+                seed: i.get("seed")?.as_u64()?,
+            }),
+            None => None,
+        };
+        Some(Self { outer: spec, inner, k: v.get("k")?.as_usize()? })
+    }
+}
+
+/// The paper's Figure 3 outer grid:
+/// m_out ∈ {100, 125, 150, 175, 200} × L_out ∈ {72, 96, 120}.
+pub fn fig3_outer_grid() -> Vec<(usize, usize)> {
+    let ms = [100, 125, 150, 175, 200];
+    let ls = [72, 96, 120];
+    let mut grid = Vec::new();
+    for &m in &ms {
+        for &l in &ls {
+            grid.push((m, l));
+        }
+    }
+    grid
+}
+
+/// The paper's Figure 4 inner grid at the SLSH onset:
+/// m_in ∈ {40, 65, 90, 115} × L_in ∈ {20, 60}, α = 0.005.
+pub fn fig4_inner_grid() -> Vec<(usize, usize)> {
+    let ms = [40, 65, 90, 115];
+    let ls = [20, 60];
+    let mut grid = Vec::new();
+    for &m in &ms {
+        for &l in &ls {
+            grid.push((m, l));
+        }
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_with_inner() {
+        let p = SlshParams::paper_onset(30, 20.0, 180.0, 99);
+        let j = p.to_json();
+        let back = SlshParams::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn json_roundtrip_lsh_only() {
+        let p = SlshParams::lsh_only(LayerSpec::outer_l1(30, 150, 96, 25.0, 170.0, 3), 10);
+        let back = SlshParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert!(back.inner.is_none());
+    }
+
+    #[test]
+    fn grids_match_paper() {
+        assert_eq!(fig3_outer_grid().len(), 15);
+        assert!(fig3_outer_grid().contains(&(125, 120))); // the SLSH onset
+        assert_eq!(fig4_inner_grid().len(), 8);
+        assert!(fig4_inner_grid().contains(&(65, 20)));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let v = Json::parse(r#"{"outer": {"dim": 30}, "k": 10}"#).unwrap();
+        assert!(SlshParams::from_json(&v).is_none());
+    }
+}

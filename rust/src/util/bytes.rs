@@ -1,0 +1,278 @@
+//! Little-endian binary encoding helpers for dataset files and the TCP
+//! wire protocol (no `serde`/`bincode` offline). All multi-byte values are
+//! little-endian; collections are length-prefixed with `u64`.
+
+use std::io::{self, Read, Write};
+
+#[derive(Debug, thiserror::Error)]
+pub enum CodecError {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad magic: expected {expected:#x}, got {got:#x}")]
+    BadMagic { expected: u64, got: u64 },
+    #[error("unsupported version {0}")]
+    BadVersion(u32),
+    #[error("length {0} exceeds sanity limit {1}")]
+    TooLong(u64, u64),
+    #[error("invalid utf-8 in string field")]
+    BadUtf8,
+    #[error("invalid enum tag {0} for {1}")]
+    BadTag(u32, &'static str),
+}
+
+/// Sanity cap on decoded collection lengths (guards against corrupt files
+/// / hostile peers allocating unbounded memory).
+pub const MAX_LEN: u64 = 1 << 33; // 8 Gi elements
+
+pub fn write_u8<W: Write>(w: &mut W, v: u8) -> io::Result<()> {
+    w.write_all(&[v])
+}
+
+pub fn write_u32<W: Write>(w: &mut W, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn write_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn write_f32<W: Write>(w: &mut W, v: f32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn write_f64<W: Write>(w: &mut W, v: f64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn read_u8<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn read_f32<R: Read>(r: &mut R) -> io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub fn read_f64<R: Read>(r: &mut R) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn checked_len<R: Read>(r: &mut R) -> Result<usize, CodecError> {
+    let n = read_u64(r)?;
+    if n > MAX_LEN {
+        return Err(CodecError::TooLong(n, MAX_LEN));
+    }
+    Ok(n as usize)
+}
+
+pub fn write_string<W: Write>(w: &mut W, s: &str) -> io::Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())
+}
+
+pub fn read_string<R: Read>(r: &mut R) -> Result<String, CodecError> {
+    let n = checked_len(r)?;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| CodecError::BadUtf8)
+}
+
+/// Bulk f32 vector: length prefix + raw LE payload (single write).
+pub fn write_f32_vec<W: Write>(w: &mut W, xs: &[f32]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    // Byte-swap-free on LE targets; portable via per-element fallback on BE.
+    #[cfg(target_endian = "little")]
+    {
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        w.write_all(bytes)
+    }
+    #[cfg(target_endian = "big")]
+    {
+        for &x in xs {
+            write_f32(w, x)?;
+        }
+        Ok(())
+    }
+}
+
+pub fn read_f32_vec<R: Read>(r: &mut R) -> Result<Vec<f32>, CodecError> {
+    let n = checked_len(r)?;
+    let mut out = vec![0f32; n];
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n * 4)
+        };
+        r.read_exact(bytes)?;
+    }
+    #[cfg(target_endian = "big")]
+    {
+        for slot in out.iter_mut() {
+            *slot = read_f32(r)?;
+        }
+    }
+    Ok(out)
+}
+
+pub fn write_u32_vec<W: Write>(w: &mut W, xs: &[u32]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        write_u32(w, x)?;
+    }
+    Ok(())
+}
+
+pub fn read_u32_vec<R: Read>(r: &mut R) -> Result<Vec<u32>, CodecError> {
+    let n = checked_len(r)?;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(read_u32(r)?);
+    }
+    Ok(out)
+}
+
+pub fn write_u64_vec<W: Write>(w: &mut W, xs: &[u64]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        write_u64(w, x)?;
+    }
+    Ok(())
+}
+
+pub fn read_u64_vec<R: Read>(r: &mut R) -> Result<Vec<u64>, CodecError> {
+    let n = checked_len(r)?;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(read_u64(r)?);
+    }
+    Ok(out)
+}
+
+/// Bit vector packed into u64 words: length-in-bits prefix + words.
+pub fn write_bitvec<W: Write>(w: &mut W, bits: &[bool]) -> io::Result<()> {
+    write_u64(w, bits.len() as u64)?;
+    let words = bits.len().div_ceil(64);
+    for wi in 0..words {
+        let mut word = 0u64;
+        for bi in 0..64 {
+            let idx = wi * 64 + bi;
+            if idx < bits.len() && bits[idx] {
+                word |= 1 << bi;
+            }
+        }
+        write_u64(w, word)?;
+    }
+    Ok(())
+}
+
+pub fn read_bitvec<R: Read>(r: &mut R) -> Result<Vec<bool>, CodecError> {
+    let nbits = checked_len(r)?;
+    let words = nbits.div_ceil(64);
+    let mut out = Vec::with_capacity(nbits);
+    for _ in 0..words {
+        let word = read_u64(r)?;
+        for bi in 0..64 {
+            if out.len() < nbits {
+                out.push(word & (1 << bi) != 0);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn scalar_roundtrips() {
+        let mut buf = Vec::new();
+        write_u8(&mut buf, 7).unwrap();
+        write_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_u64(&mut buf, u64::MAX - 3).unwrap();
+        write_f32(&mut buf, -1.5).unwrap();
+        write_f64(&mut buf, std::f64::consts::PI).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_u8(&mut c).unwrap(), 7);
+        assert_eq!(read_u32(&mut c).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64(&mut c).unwrap(), u64::MAX - 3);
+        assert_eq!(read_f32(&mut c).unwrap(), -1.5);
+        assert_eq!(read_f64(&mut c).unwrap(), std::f64::consts::PI);
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let mut buf = Vec::new();
+        write_string(&mut buf, "AHE-301-30c é").unwrap();
+        let s = read_string(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(s, "AHE-301-30c é");
+    }
+
+    #[test]
+    fn f32_vec_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let mut buf = Vec::new();
+        write_f32_vec(&mut buf, &xs).unwrap();
+        let ys = read_f32_vec(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn int_vec_roundtrips() {
+        let a: Vec<u32> = (0..257).collect();
+        let b: Vec<u64> = (0..77).map(|i| i * 12345).collect();
+        let mut buf = Vec::new();
+        write_u32_vec(&mut buf, &a).unwrap();
+        write_u64_vec(&mut buf, &b).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_u32_vec(&mut c).unwrap(), a);
+        assert_eq!(read_u64_vec(&mut c).unwrap(), b);
+    }
+
+    #[test]
+    fn bitvec_roundtrip_odd_lengths() {
+        for n in [0usize, 1, 63, 64, 65, 130, 1000] {
+            let bits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let mut buf = Vec::new();
+            write_bitvec(&mut buf, &bits).unwrap();
+            assert_eq!(read_bitvec(&mut Cursor::new(buf)).unwrap(), bits);
+        }
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut buf = Vec::new();
+        write_f32_vec(&mut buf, &[1.0, 2.0, 3.0]).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_f32_vec(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn hostile_length_rejected() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX).unwrap();
+        assert!(matches!(
+            read_string(&mut Cursor::new(buf)),
+            Err(CodecError::TooLong(..))
+        ));
+    }
+}

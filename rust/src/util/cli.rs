@@ -1,0 +1,188 @@
+//! Hand-rolled command-line parsing (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated keys,
+//! and positional arguments. Typed getters return an error naming the
+//! offending flag so CLI mistakes fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("missing required flag --{0}")]
+    Missing(String),
+    #[error("flag --{0}: expected {1}, got '{2}'")]
+    BadValue(String, &'static str, String),
+}
+
+/// Parsed arguments: positionals in order, plus key→values multimap.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. `valued` lists flags that consume
+    /// a following token when used in `--key value` form.
+    pub fn parse_from<I, S>(tokens: I, valued: &[&'static str]) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if valued.contains(&rest) {
+                    match it.next() {
+                        Some(v) => args.options.entry(rest.to_string()).or_default().push(v),
+                        None => args.flags.push(rest.to_string()), // error at typed access
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse process args after the program name (and optional subcommand
+    /// tokens already consumed by the caller).
+    pub fn parse_env(skip: usize, valued: &[&'static str]) -> Args {
+        Args::parse_from(std::env::args().skip(1 + skip), valued)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options.get(name).map(|v| v.iter().map(String::as_str).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get_str(name).unwrap_or(default)
+    }
+
+    pub fn require_str(&self, name: &str) -> Result<&str, CliError> {
+        self.get_str(name).ok_or_else(|| CliError::Missing(name.to_string()))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), "integer", s.into())),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_usize(name)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), "integer", s.into())),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_u64(name)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), "number", s.into())),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_f64(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list of usizes, e.g. `--pv 8,16,24`.
+    pub fn usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, CliError> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|_| CliError::BadValue(name.into(), "integer list", s.into()))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse_from(tokens.iter().copied(), &["n", "seed", "out", "pv", "alpha"])
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["table2", "--full", "--n", "1000"]);
+        assert_eq!(a.positional, vec!["table2"]);
+        assert!(a.has_flag("full"));
+        assert!(!a.has_flag("absent"));
+        assert_eq!(a.get_usize("n").unwrap(), Some(1000));
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = parse(&["--n=5", "--n", "7", "--out=/tmp/x"]);
+        assert_eq!(a.get_usize("n").unwrap(), Some(7)); // last wins
+        assert_eq!(a.get_all("n"), vec!["5", "7"]);
+        assert_eq!(a.get_str("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--n", "xyz"]);
+        assert!(a.get_usize("n").is_err());
+        assert!(a.require_str("missing").is_err());
+        assert_eq!(a.usize_or("absent", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn float_and_lists() {
+        let a = parse(&["--alpha", "0.005", "--pv", "8,16,24"]);
+        assert_eq!(a.get_f64("alpha").unwrap(), Some(0.005));
+        assert_eq!(a.usize_list("pv").unwrap().unwrap(), vec![8, 16, 24]);
+        assert!(parse(&["--pv", "8,x"]).usize_list("pv").is_err());
+    }
+
+    #[test]
+    fn boolean_flag_without_value() {
+        let a = parse(&["--verbose", "pos1", "pos2"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny leveled logger (the `log` facade is in the vendored set but a
+//! backend is not, so we carry our own). Controlled by `DSLSH_LOG`
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INIT: Lazy<()> = Lazy::new(|| {
+    if let Ok(v) = std::env::var("DSLSH_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            LEVEL.store(l as u8, Ordering::Relaxed);
+        }
+    }
+    Lazy::force(&START);
+});
+
+/// Set the level programmatically (overrides `DSLSH_LOG`).
+pub fn set_level(level: Level) {
+    Lazy::force(&INIT);
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    Lazy::force(&INIT);
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Core emit function used by the macros; writes a single line to stderr
+/// with elapsed seconds, level and component tag.
+pub fn emit(level: Level, component: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:10.3}s {} {component}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Error, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Warn, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Info, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Debug, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Trace, $comp, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

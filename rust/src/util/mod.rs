@@ -1,0 +1,12 @@
+//! Infrastructure substrates built from scratch for the offline
+//! environment: PRNG, JSON, statistics, structured parallelism, logging,
+//! CLI parsing and binary codecs.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stamp;
+pub mod stats;
+pub mod threadpool;

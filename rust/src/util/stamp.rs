@@ -1,0 +1,97 @@
+//! Stamped visited-set: O(1) insert/test, O(1) clear between queries.
+//!
+//! The candidate-union step must deduplicate ids across `L` tables for
+//! every query; a `HashSet` would allocate and hash on the hot path, a
+//! `Vec<bool>` would need an O(n) clear per query. A stamp array does
+//! both in O(1): clearing is a single epoch increment.
+
+#[derive(Debug, Clone)]
+pub struct StampSet {
+    stamps: Vec<u32>,
+    epoch: u32,
+}
+
+impl StampSet {
+    pub fn new(capacity: usize) -> Self {
+        Self { stamps: vec![0; capacity], epoch: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// Start a new query: invalidates all marks in O(1) (with a rare O(n)
+    /// reset when the 32-bit epoch wraps).
+    pub fn clear(&mut self) {
+        if self.epoch == u32::MAX {
+            self.stamps.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Mark `id`; returns true iff it was NOT already marked this epoch.
+    #[inline]
+    pub fn insert(&mut self, id: u32) -> bool {
+        let slot = &mut self.stamps[id as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.stamps[id as usize] == self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_dedup() {
+        let mut s = StampSet::new(10);
+        s.clear();
+        assert!(s.insert(3));
+        assert!(!s.insert(3));
+        assert!(s.contains(3));
+        assert!(!s.contains(4));
+    }
+
+    #[test]
+    fn clear_invalidates_previous_epoch() {
+        let mut s = StampSet::new(5);
+        s.clear();
+        s.insert(1);
+        s.insert(2);
+        s.clear();
+        assert!(!s.contains(1));
+        assert!(!s.contains(2));
+        assert!(s.insert(1));
+    }
+
+    #[test]
+    fn fresh_set_marks_nothing() {
+        let mut s = StampSet::new(4);
+        s.clear();
+        for i in 0..4 {
+            assert!(!s.contains(i));
+        }
+    }
+
+    #[test]
+    fn epoch_wrap_resets_correctly() {
+        let mut s = StampSet::new(3);
+        s.epoch = u32::MAX - 1;
+        s.clear(); // -> MAX
+        s.insert(0);
+        assert!(s.contains(0));
+        s.clear(); // wrap: full reset then epoch 1
+        assert!(!s.contains(0));
+        assert!(s.insert(0));
+    }
+}

@@ -1,0 +1,289 @@
+//! Descriptive statistics used by the experiment harness: medians,
+//! percentiles, and the 95% confidence interval **of the median** that the
+//! paper reports for its comparison counts (Tables 2–3, Figures 3–4).
+//!
+//! The median CI uses the standard distribution-free order-statistic
+//! construction: for a sample of size `n`, the interval
+//! `[x_(l), x_(u)]` with `l, u` chosen from the Binomial(n, 1/2)
+//! distribution covers the population median with ≥95% probability.
+//! A bootstrap alternative is provided as a cross-check.
+
+use crate::util::rng::Xoshiro256;
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (0 for n < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Sorted copy helper.
+fn sorted(xs: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in stats input"));
+    v
+}
+
+/// Median (average of the two central order statistics for even n).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let v = sorted(xs);
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Linear-interpolation percentile, `q` in [0, 1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let v = sorted(xs);
+    if v.len() == 1 {
+        return v[0];
+    }
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+/// A two-sided interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn contains(&self, x: f64) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// ln(n!) via Stirling series for large n, table for small n.
+fn ln_factorial(n: u64) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    if n < 32 {
+        let mut acc = 0.0;
+        for k in 2..=n {
+            acc += (k as f64).ln();
+        }
+        return acc;
+    }
+    // Stirling with 1/(12n) and 1/(360n^3) corrections — plenty for CI math.
+    let nf = n as f64;
+    nf * nf.ln() - nf + 0.5 * (2.0 * std::f64::consts::PI * nf).ln() + 1.0 / (12.0 * nf)
+        - 1.0 / (360.0 * nf * nf * nf)
+}
+
+/// Binomial(n, 1/2) PMF at k, computed in log space to avoid overflow.
+fn binom_half_pmf(n: u64, k: u64) -> f64 {
+    let ln = ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+        + (n as f64) * 0.5f64.ln();
+    ln.exp()
+}
+
+/// Distribution-free CI for the **median** via binomial order statistics.
+///
+/// Returns the narrowest symmetric-in-rank interval `[x_(l+1), x_(u)]`
+/// (1-based order statistics) whose Binomial(n, 1/2) coverage is at least
+/// `conf`. For tiny n where no interval achieves the coverage, returns the
+/// full sample range.
+pub fn median_ci(xs: &[f64], conf: f64) -> Interval {
+    assert!(!xs.is_empty());
+    let v = sorted(xs);
+    let n = v.len() as u64;
+    if n < 6 {
+        return Interval { lo: v[0], hi: v[v.len() - 1] };
+    }
+    // Find the largest l such that P[l < X <= n-l] >= conf, where
+    // X ~ Binomial(n, 1/2). Coverage of [x_(l+1), x_(n-l)] is
+    // P[l <= X <= n-l-1]... we use the classic symmetric construction:
+    // coverage(l) = sum_{k=l}^{n-l} C(n,k)/2^n  (interval [x_(l+1), x_(n-l)]
+    // in 1-based ranks covers the median with that probability).
+    let mut best_l = 0u64;
+    let mut l = n / 2;
+    loop {
+        // coverage for this l
+        let mut cov = 0.0;
+        for k in l..=(n - l) {
+            cov += binom_half_pmf(n, k);
+        }
+        if cov >= conf {
+            best_l = l;
+            break;
+        }
+        if l == 0 {
+            break;
+        }
+        l -= 1;
+    }
+    if best_l == 0 {
+        return Interval { lo: v[0], hi: v[v.len() - 1] };
+    }
+    Interval {
+        lo: v[(best_l) as usize],        // x_(l+1) in 1-based = index l
+        hi: v[(n - best_l - 1) as usize], // x_(n-l) in 1-based = index n-l-1
+    }
+}
+
+/// Bootstrap percentile CI for the median — used in tests to cross-check
+/// [`median_ci`], and available to the harness via `--ci bootstrap`.
+pub fn median_ci_bootstrap(xs: &[f64], conf: f64, reps: usize, seed: u64) -> Interval {
+    assert!(!xs.is_empty());
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut meds = Vec::with_capacity(reps);
+    let mut resample = vec![0.0; xs.len()];
+    for _ in 0..reps {
+        for slot in resample.iter_mut() {
+            *slot = xs[rng.gen_index(xs.len())];
+        }
+        meds.push(median(&resample));
+    }
+    let alpha = 1.0 - conf;
+    Interval {
+        lo: percentile(&meds, alpha / 2.0),
+        hi: percentile(&meds, 1.0 - alpha / 2.0),
+    }
+}
+
+/// Online accumulator for min/max/mean — used by latency tracking in the
+/// serving path where storing every sample would be wasteful.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 1.0), 40.0);
+        assert!((percentile(&xs, 0.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let direct: f64 = (2..=40).map(|k| (k as f64).ln()).sum();
+        assert!((ln_factorial(40) - direct).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binom_pmf_sums_to_one() {
+        for n in [10u64, 100, 2000] {
+            let total: f64 = (0..=n).map(|k| binom_half_pmf(n, k)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "n={n} total={total}");
+        }
+    }
+
+    #[test]
+    fn median_ci_contains_median_and_shrinks() {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let small: Vec<f64> = (0..50).map(|_| rng.gen_normal(10.0, 2.0)).collect();
+        let large: Vec<f64> = (0..2000).map(|_| rng.gen_normal(10.0, 2.0)).collect();
+        let ci_s = median_ci(&small, 0.95);
+        let ci_l = median_ci(&large, 0.95);
+        assert!(ci_s.contains(median(&small)));
+        assert!(ci_l.contains(median(&large)));
+        assert!(ci_l.width() < ci_s.width(), "CI must shrink with n");
+    }
+
+    #[test]
+    fn median_ci_coverage_simulation() {
+        // Empirical coverage of the 95% CI over repeated draws from a
+        // known-median distribution should be >= ~92%.
+        let mut rng = Xoshiro256::seed_from_u64(123);
+        let mut covered = 0;
+        let reps = 400;
+        for _ in 0..reps {
+            let xs: Vec<f64> = (0..101).map(|_| rng.gen_normal(0.0, 1.0)).collect();
+            if median_ci(&xs, 0.95).contains(0.0) {
+                covered += 1;
+            }
+        }
+        let rate = covered as f64 / reps as f64;
+        assert!(rate > 0.90, "coverage={rate}");
+    }
+
+    #[test]
+    fn bootstrap_agrees_with_order_statistics() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let xs: Vec<f64> = (0..500).map(|_| rng.gen_normal(50.0, 5.0)).collect();
+        let a = median_ci(&xs, 0.95);
+        let b = median_ci_bootstrap(&xs, 0.95, 2000, 11);
+        // The two constructions should roughly agree in location.
+        assert!((a.lo - b.lo).abs() < 1.0, "a={a:?} b={b:?}");
+        assert!((a.hi - b.hi).abs() < 1.0, "a={a:?} b={b:?}");
+    }
+
+    #[test]
+    fn running_accumulator() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0] {
+            r.push(x);
+        }
+        assert_eq!(r.n, 3);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 3.0);
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+    }
+}

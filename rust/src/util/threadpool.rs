@@ -1,0 +1,140 @@
+//! Structured parallelism helpers.
+//!
+//! No `rayon`/`tokio` in the offline environment, so DSLSH provides two
+//! primitives built on `std::thread::scope`:
+//!
+//! * [`parallel_for`] — run a closure over index chunks on `t` threads;
+//!   used for table construction and PKNN scans.
+//! * [`parallel_map`] — map a closure over items, preserving order.
+//!
+//! The distributed runtime (`node/`, `coordinator/`) uses long-lived
+//! threads with channels instead; these helpers cover the data-parallel
+//! build phase where structure, not liveness, is needed.
+
+/// Split `[0, len)` into `parts` contiguous ranges of near-equal size.
+/// The first `len % parts` ranges get one extra element, matching the
+/// paper's equal-shares data-parallel partitioning.
+pub fn chunk_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(parts > 0, "chunk_ranges: parts == 0");
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Run `f(thread_idx, range)` for each of `threads` contiguous chunks of
+/// `[0, len)`, in parallel. Degenerates to an inline call for 1 thread.
+pub fn parallel_for<F>(len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    let ranges = chunk_ranges(len, threads);
+    if threads == 1 {
+        f(0, ranges.into_iter().next().unwrap());
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, r) in ranges.into_iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, r));
+        }
+    });
+}
+
+/// Parallel map over `items` on up to `threads` threads; output order
+/// matches input order.
+pub fn parallel_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    // Hand out items with their index through a locked iterator so uneven
+    // work (e.g. LSH builds with different L) balances dynamically.
+    let queue = std::sync::Mutex::new(items.into_iter().enumerate());
+    let slots_ptr = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let queue = &queue;
+            let slots_ptr = &slots_ptr;
+            let f = &f;
+            scope.spawn(move || loop {
+                let next = { queue.lock().unwrap().next() };
+                match next {
+                    Some((i, item)) => {
+                        let out = f(item);
+                        slots_ptr.lock().unwrap()[i] = Some(out);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for (len, parts) in [(10, 3), (0, 4), (7, 7), (7, 10), (100, 1)] {
+            let ranges = chunk_ranges(len, parts);
+            assert_eq!(ranges.len(), parts);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, len);
+            // Contiguous and ordered.
+            let mut pos = 0;
+            for r in &ranges {
+                assert_eq!(r.start, pos);
+                pos = r.end;
+            }
+            // Near-equal: sizes differ by at most 1.
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn parallel_for_touches_every_index_once() {
+        let n = 10_000;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 4, |_t, range| {
+            for i in range {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(items, 8, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_and_empty() {
+        assert_eq!(parallel_map(vec![1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
+        assert_eq!(parallel_map(Vec::<i32>::new(), 4, |x| x), Vec::<i32>::new());
+    }
+}

@@ -1,0 +1,51 @@
+//! End-to-end: full three-layer stack (synthetic data -> SLSH cluster ->
+//! XLA/PJRT hot path -> prediction) and its parity with the native path.
+//! Requires `make artifacts`.
+
+use dslsh::coordinator::{build_cluster, ClusterConfig, EngineKind};
+use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::experiments::{eval_cluster, eval_pknn, outer_params};
+use dslsh::knn::predict::VoteConfig;
+
+#[test]
+fn xla_cluster_matches_native_cluster_end_to_end() {
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 6000, 40, 55));
+    let params = outer_params(&corpus.data, 72, 16, 3, 10);
+    let native = build_cluster(&corpus.data, &params, &ClusterConfig::new(2, 2)).unwrap();
+    let xla = build_cluster(
+        &corpus.data,
+        &params,
+        &ClusterConfig::new(2, 2).with_engine(EngineKind::Xla),
+    )
+    .expect("run `make artifacts` first");
+    for i in 0..corpus.queries.len() {
+        let q = corpus.queries.point(i);
+        let a = native.query(q);
+        let b = xla.query(q);
+        assert_eq!(a.prediction, b.prediction, "query {i}");
+        assert_eq!(a.max_comparisons, b.max_comparisons, "query {i}");
+        assert_eq!(
+            a.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {i}"
+        );
+    }
+}
+
+#[test]
+fn full_pipeline_beats_pknn_with_bounded_mcc_loss() {
+    // The paper's core claim at miniature scale: an order of magnitude
+    // fewer comparisons with bounded prediction-quality loss.
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 24_000, 800, 77));
+    let params = outer_params(&corpus.data, 150, 48, 11, 10);
+    let cluster = build_cluster(&corpus.data, &params, &ClusterConfig::new(2, 4)).unwrap();
+    let run = eval_cluster(&cluster, &corpus);
+    let pknn = eval_pknn(&corpus.data, &corpus.queries, 10, 8, &VoteConfig::default());
+    let speedup = pknn.comps_per_proc as f64 / run.median_comps.max(1.0);
+    assert!(speedup > 2.0, "speedup {speedup:.2} too low");
+    // PKNN itself must be predictive on this corpus...
+    assert!(pknn.mcc > 0.15, "baseline MCC {:.3} — corpus not learnable", pknn.mcc);
+    // ...and DSLSH must stay within a generous quality budget.
+    let loss = pknn.mcc - run.mcc;
+    assert!(loss < 0.5, "MCC loss {loss:.3} too high (pknn {:.3}, dslsh {:.3})", pknn.mcc, run.mcc);
+}

@@ -1,0 +1,69 @@
+//! Integration: the AOT JAX/Pallas artifacts executed via PJRT must agree
+//! with the native Rust engine on the same candidate scans. Requires
+//! `make artifacts` (the Makefile test target guarantees it).
+
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{DistanceEngine, Metric};
+use dslsh::knn::TopK;
+use dslsh::runtime::XlaService;
+use dslsh::util::rng::Xoshiro256;
+
+fn fixture(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<bool>, Vec<f32>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let data = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels = (0..n).map(|_| rng.gen_bool(0.1)).collect();
+    let q = (0..dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    (data, labels, q)
+}
+
+#[test]
+fn xla_engine_matches_native_engine() {
+    let service = XlaService::start().expect("run `make artifacts` first");
+    let xla = service.engine();
+    let native = NativeEngine::new();
+    let (data, labels, q) = fixture(5000, 30, 1);
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    for metric in [Metric::L1, Metric::Cosine] {
+        // Candidate counts spanning the batch ladder, incl. padding edges
+        // and chunking beyond the largest compiled batch.
+        for &count in &[1usize, 7, 255, 256, 257, 2048, 4999] {
+            let ids: Vec<u32> = (0..count).map(|_| rng.gen_below(5000) as u32).collect();
+            let mut t_native = TopK::new(10);
+            let mut t_xla = TopK::new(10);
+            let c1 = native.scan(metric, &q, &data, 30, &ids, &labels, 0, &mut t_native);
+            let c2 = xla.scan(metric, &q, &data, 30, &ids, &labels, 0, &mut t_xla);
+            assert_eq!(c1, c2);
+            let a = t_native.into_sorted();
+            let b = t_xla.into_sorted();
+            assert_eq!(a.len(), b.len(), "metric={metric:?} count={count}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id, "metric={metric:?} count={count}");
+                assert!((x.dist - y.dist).abs() < 1e-2, "{} vs {}", x.dist, y.dist);
+                assert_eq!(x.label, y.label);
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_engine_is_usable_from_multiple_threads() {
+    let service = XlaService::start().expect("run `make artifacts` first");
+    let (data, labels, q) = fixture(2000, 30, 3);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let engine = service.engine();
+            let (data, labels, q) = (&data, &labels, &q);
+            s.spawn(move || {
+                let mut rng = Xoshiro256::seed_from_u64(100 + t);
+                for _ in 0..5 {
+                    let ids: Vec<u32> =
+                        (0..300).map(|_| rng.gen_below(2000) as u32).collect();
+                    let mut topk = TopK::new(5);
+                    let c = engine.scan(Metric::L1, q, data, 30, &ids, labels, 0, &mut topk);
+                    assert_eq!(c, 300);
+                    assert_eq!(topk.len(), 5);
+                }
+            });
+        }
+    });
+}
