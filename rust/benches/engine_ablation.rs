@@ -43,8 +43,13 @@ fn main() {
     let q: Vec<f32> = (0..30).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
 
     let native = NativeEngine::new();
-    let xla_service = XlaService::start().expect("run `make artifacts` first");
-    let xla = xla_service.engine();
+    let xla_service = match XlaService::start() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("XLA runtime unavailable ({e:#}); benchmarking the native engine only");
+            None
+        }
+    };
 
     let mut table = Table::new(
         "Engine ablation — candidate scan cost (median)",
@@ -54,14 +59,24 @@ fn main() {
         let ids: Vec<u32> = (0..batch).map(|_| rng.gen_below(n as u64) as u32).collect();
         let reps = (200_000 / batch).clamp(5, 400);
         let (nat_us, nat_ns) = bench_engine(&native, &data, &labels, &q, &ids, reps);
-        let (xla_us, xla_ns) = bench_engine(&xla, &data, &labels, &q, &ids, reps);
+        let (xla_cells, ratio) = match &xla_service {
+            Some(svc) => {
+                let xla = svc.engine();
+                let (xla_us, xla_ns) = bench_engine(&xla, &data, &labels, &q, &ids, reps);
+                (
+                    (format!("{xla_us:.1}"), format!("{xla_ns:.2}")),
+                    format!("{:.1}x", xla_us / nat_us),
+                )
+            }
+            None => (("-".into(), "-".into()), "-".into()),
+        };
         table.row(vec![
             batch.to_string(),
             format!("{nat_us:.1}"),
             format!("{nat_ns:.2}"),
-            format!("{xla_us:.1}"),
-            format!("{xla_ns:.2}"),
-            format!("{:.1}x", xla_us / nat_us),
+            xla_cells.0,
+            xla_cells.1,
+            ratio,
         ]);
     }
     println!("{}", table.render());

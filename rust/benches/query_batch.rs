@@ -1,0 +1,156 @@
+//! §Perf: batched candidate-scan throughput — single-query vs the
+//! register-blocked multi-query tile kernel, plus end-to-end batched SLSH
+//! resolution (batched hashing + scratch arena reuse).
+//!
+//! A fixed stream of queries is resolved at admission batch sizes
+//! 1/4/16/64; every configuration performs the SAME comparisons, so the
+//! queries/s and ns/comparison columns isolate the memory-traffic
+//! amortization (each data row fetched once per query tile instead of
+//! once per query). Recorded in CHANGES.md / EXPERIMENTS.md §Perf.
+
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{DistanceEngine, Metric};
+use dslsh::experiments::report::Table;
+use dslsh::knn::TopK;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::slsh::{BatchOutput, QueryScratch, SlshIndex, SlshParams};
+use dslsh::util::rng::Xoshiro256;
+use dslsh::util::stats;
+
+const DIM: usize = 30;
+const QUERIES: usize = 64;
+const REPS: usize = 7;
+
+/// Median-of-reps wall-clock (seconds) for resolving the whole query
+/// stream at one admission batch size through the engine scan.
+fn bench_scan(
+    engine: &NativeEngine,
+    qs: &[f32],
+    data: &[f32],
+    labels: &[bool],
+    ids: &[u32],
+    batch: usize,
+) -> f64 {
+    let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(10)).collect();
+    let mut times = Vec::with_capacity(REPS);
+    for rep in 0..=REPS {
+        let t0 = std::time::Instant::now();
+        let mut start = 0usize;
+        while start < QUERIES {
+            let end = (start + batch).min(QUERIES);
+            let nq = end - start;
+            for t in topks[..nq].iter_mut() {
+                t.reset(10);
+            }
+            let c = engine.scan_batch(
+                Metric::L1,
+                &qs[start * DIM..end * DIM],
+                data,
+                DIM,
+                ids,
+                labels,
+                0,
+                &mut topks[..nq],
+            );
+            std::hint::black_box(c);
+            start = end;
+        }
+        if rep > 0 {
+            times.push(t0.elapsed().as_secs_f64()); // rep 0 = warmup
+        }
+    }
+    stats::median(&times)
+}
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    // Shard large enough that candidate rows do not live in cache.
+    let n = 200_000;
+    let data: Vec<f32> = (0..n * DIM).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.05)).collect();
+    let qs: Vec<f32> = (0..QUERIES * DIM).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    // A scattered candidate list shaped like an LSH union (20k of 200k).
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(20_000);
+    ids.sort_unstable();
+
+    let engine = NativeEngine::new();
+    let mut table = Table::new(
+        "Batched candidate scan — single-thread, 64 queries x 20k candidates, d=30",
+        &["batch", "queries/s", "ns/comparison", "speedup vs b=1"],
+    );
+    let mut base_qps = 0.0f64;
+    for &batch in &[1usize, 4, 16, 64] {
+        let secs = bench_scan(&engine, &qs, &data, &labels, &ids, batch);
+        let qps = QUERIES as f64 / secs;
+        let ns_per_cmp = secs * 1e9 / (QUERIES * ids.len()) as f64;
+        if batch == 1 {
+            base_qps = qps;
+        }
+        table.row(vec![
+            batch.to_string(),
+            format!("{qps:.1}"),
+            format!("{ns_per_cmp:.2}"),
+            format!("{:.2}x", qps / base_qps),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // End-to-end SLSH resolution: batched hashing + candidate gathering +
+    // scan through the reused scratch arena, vs the per-query path.
+    let n_idx = 50_000;
+    let idx_data: Vec<f32> =
+        (0..n_idx * DIM).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let idx_labels: Vec<bool> = (0..n_idx).map(|_| rng.gen_bool(0.05)).collect();
+    let params =
+        SlshParams::lsh_only(LayerSpec::outer_l1(DIM, 60, 24, 20.0, 180.0, 7), 10);
+    let view = dslsh::lsh::layer::SliceView { data: &idx_data, dim: DIM };
+    let idx = SlshIndex::build_full(&params, &view);
+    let mut scratch = QueryScratch::new(n_idx);
+    let mut out = BatchOutput::new();
+
+    let mut table2 = Table::new(
+        "Batched SLSH resolution — 64 queries, m=60 L=24 over 50k points",
+        &["batch", "queries/s", "speedup vs b=1"],
+    );
+    let mut base2 = 0.0f64;
+    for &batch in &[1usize, 4, 16, 64] {
+        let mut times = Vec::with_capacity(REPS);
+        for rep in 0..=REPS {
+            let t0 = std::time::Instant::now();
+            let mut start = 0usize;
+            while start < QUERIES {
+                let end = (start + batch).min(QUERIES);
+                idx.query_batch(
+                    &engine,
+                    &qs[start * DIM..end * DIM],
+                    &idx_data,
+                    &idx_labels,
+                    0,
+                    &mut scratch,
+                    &mut out,
+                );
+                std::hint::black_box(out.len());
+                start = end;
+            }
+            if rep > 0 {
+                times.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        let qps = QUERIES as f64 / stats::median(&times);
+        if batch == 1 {
+            base2 = qps;
+        }
+        table2.row(vec![
+            batch.to_string(),
+            format!("{qps:.1}"),
+            format!("{:.2}x", qps / base2),
+        ]);
+    }
+    println!("{}", table2.render());
+
+    table.save(std::path::Path::new("results"), "query_batch_scan").expect("saving");
+    table2.save(std::path::Path::new("results"), "query_batch_slsh").expect("saving");
+    println!("[query_batch] -> results/query_batch_scan.csv, results/query_batch_slsh.csv");
+}

@@ -27,6 +27,21 @@ pub trait NodeHandle: Send {
     fn node_id(&self) -> usize;
     fn info(&self) -> NodeInfo;
     fn query(&mut self, q: &[f32]) -> NodeReply;
+
+    /// Resolve a block of `nq` queries (`qs` row-major `nq × dim` — one
+    /// shared flat buffer end to end, so batching adds no per-query or
+    /// per-node allocations). The default falls back to per-query round
+    /// trips; in-process and TCP nodes override it to ship the whole
+    /// block at once and ride the cores' batched resolution path
+    /// (batched hashing + reused scratch arena).
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+        if nq == 0 {
+            return Vec::new();
+        }
+        debug_assert_eq!(qs.len() % nq, 0);
+        let dim = qs.len() / nq;
+        qs.chunks_exact(dim).map(|q| self.query(q)).collect()
+    }
 }
 
 impl NodeHandle for crate::node::node::LocalNode {
@@ -38,6 +53,9 @@ impl NodeHandle for crate::node::node::LocalNode {
     }
     fn query(&mut self, q: &[f32]) -> NodeReply {
         crate::node::node::LocalNode::query(self, q)
+    }
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+        crate::node::node::LocalNode::query_batch(self, qs, nq)
     }
 }
 
@@ -52,20 +70,29 @@ pub struct QueryResult {
     pub prediction: bool,
     /// Max comparisons across ALL processors (the paper's speed metric).
     pub max_comparisons: u64,
-    /// Per-node, per-core comparison counts.
+    /// Per-node, per-core comparison counts, in ascending node-id order
+    /// (deterministic regardless of reply arrival order).
     pub per_node_comparisons: Vec<Vec<u64>>,
     /// Wall-clock latency of the full round trip (seconds).
     pub latency_s: f64,
 }
 
-struct Job {
-    qid: u64,
-    q: Arc<Vec<f32>>,
+#[derive(Clone)]
+enum Job {
+    Single { qid: u64, q: Arc<Vec<f32>> },
+    /// Flat row-major `nq × dim` block; query `i` has id `qid0 + i`.
+    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize },
+}
+
+enum RootRequest {
+    Single(Vec<f32>, Sender<QueryResult>),
+    /// Flat row-major `nq × dim` block.
+    Batch { qs: Vec<f32>, nq: usize, reply_to: Sender<Vec<QueryResult>> },
 }
 
 /// Orchestrator over ν nodes.
 pub struct Orchestrator {
-    root_tx: Sender<(Vec<f32>, Sender<QueryResult>)>,
+    root_tx: Sender<RootRequest>,
     threads: Vec<JoinHandle<()>>,
     node_infos: Vec<NodeInfo>,
     k: usize,
@@ -81,10 +108,12 @@ impl Orchestrator {
         let node_infos: Vec<NodeInfo> = nodes.iter().map(|n| n.info()).collect();
         let mut threads = Vec::new();
 
-        // Channels.
-        let (root_tx, root_rx) = channel::<(Vec<f32>, Sender<QueryResult>)>();
+        // Channels. The reduce channel carries the node id so the Reducer
+        // can order per-node data deterministically (reply arrival order
+        // is scheduler-dependent).
+        let (root_tx, root_rx) = channel::<RootRequest>();
         let (fwd_tx, fwd_rx) = channel::<Job>();
-        let (reduce_tx, reduce_rx) = channel::<(u64, NodeReply, f64)>();
+        let (reduce_tx, reduce_rx) = channel::<(u64, usize, NodeReply, f64)>();
         let (done_tx, done_rx) = channel::<ReducedQuery>();
 
         // Node runners: one thread per node, each with its own inbox.
@@ -93,16 +122,40 @@ impl Orchestrator {
             let (tx, rx) = channel::<Job>();
             node_tx.push(tx);
             let reduce_tx = reduce_tx.clone();
+            let node_id = node.node_id();
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("node-runner-{}", node.node_id()))
+                    .name(format!("node-runner-{node_id}"))
                     .spawn(move || {
                         while let Ok(job) = rx.recv() {
-                            let t0 = std::time::Instant::now();
-                            let reply = node.query(&job.q);
-                            let dt = t0.elapsed().as_secs_f64();
-                            if reduce_tx.send((job.qid, reply, dt)).is_err() {
-                                break;
+                            match job {
+                                Job::Single { qid, q } => {
+                                    let t0 = std::time::Instant::now();
+                                    let reply = node.query(&q);
+                                    let dt = t0.elapsed().as_secs_f64();
+                                    if reduce_tx.send((qid, node_id, reply, dt)).is_err() {
+                                        break;
+                                    }
+                                }
+                                Job::Batch { qid0, qs, nq } => {
+                                    let t0 = std::time::Instant::now();
+                                    let replies = node.query_batch(qs, nq);
+                                    let dt = t0.elapsed().as_secs_f64();
+                                    debug_assert_eq!(replies.len(), nq);
+                                    let mut dead = false;
+                                    for (i, reply) in replies.into_iter().enumerate() {
+                                        if reduce_tx
+                                            .send((qid0 + i as u64, node_id, reply, dt))
+                                            .is_err()
+                                        {
+                                            dead = true;
+                                            break;
+                                        }
+                                    }
+                                    if dead {
+                                        break;
+                                    }
+                                }
                             }
                         }
                     })
@@ -118,7 +171,7 @@ impl Orchestrator {
                 .spawn(move || {
                     while let Ok(job) = fwd_rx.recv() {
                         for tx in &node_tx {
-                            if tx.send(Job { qid: job.qid, q: Arc::clone(&job.q) }).is_err() {
+                            if tx.send(job.clone()).is_err() {
                                 return;
                             }
                         }
@@ -134,7 +187,7 @@ impl Orchestrator {
                 .name("reducer".into())
                 .spawn(move || {
                     let mut pending: HashMap<u64, ReduceAcc> = HashMap::new();
-                    while let Ok((qid, reply, _dt)) = reduce_rx.recv() {
+                    while let Ok((qid, node_id, reply, _dt)) = reduce_rx.recv() {
                         let acc = pending.entry(qid).or_insert_with(|| ReduceAcc {
                             topk: TopK::new(k_red),
                             per_node: Vec::new(),
@@ -143,14 +196,17 @@ impl Orchestrator {
                         for &n in &reply.neighbors {
                             acc.topk.push_unique(n);
                         }
-                        acc.per_node.push(reply.comparisons);
+                        acc.per_node.push((node_id, reply.comparisons));
                         acc.received += 1;
                         if acc.received == nu {
-                            let acc = pending.remove(&qid).unwrap();
+                            let mut acc = pending.remove(&qid).unwrap();
+                            // Deterministic per-node order regardless of
+                            // reply arrival order.
+                            acc.per_node.sort_by_key(|(id, _)| *id);
                             let out = ReducedQuery {
                                 qid,
                                 neighbors: acc.topk.into_sorted(),
-                                per_node: acc.per_node,
+                                per_node: acc.per_node.into_iter().map(|(_, c)| c).collect(),
                             };
                             if done_tx.send(out).is_err() {
                                 return;
@@ -166,33 +222,70 @@ impl Orchestrator {
             std::thread::Builder::new()
                 .name("root".into())
                 .spawn(move || {
-                    let mut qid = 0u64;
-                    while let Ok((q, reply_to)) = root_rx.recv() {
-                        let t0 = std::time::Instant::now();
-                        if fwd_tx.send(Job { qid, q: Arc::new(q) }).is_err() {
-                            return;
-                        }
-                        // ICU latency model: one query in flight at a time.
-                        let Ok(red) = done_rx.recv() else { return };
-                        debug_assert_eq!(red.qid, qid);
-                        let share = positive_share(&red.neighbors, &vote);
+                    let finish = |red: ReducedQuery, vote: &VoteConfig, latency_s: f64| {
+                        let share = positive_share(&red.neighbors, vote);
                         let max_comparisons = red
                             .per_node
                             .iter()
                             .flat_map(|v| v.iter().copied())
                             .max()
                             .unwrap_or(0);
-                        let result = QueryResult {
-                            qid,
+                        QueryResult {
+                            qid: red.qid,
                             neighbors: red.neighbors,
                             positive_share: share,
                             prediction: share >= vote.threshold as f64,
                             max_comparisons,
                             per_node_comparisons: red.per_node,
-                            latency_s: t0.elapsed().as_secs_f64(),
-                        };
-                        let _ = reply_to.send(result);
-                        qid += 1;
+                            latency_s,
+                        }
+                    };
+                    let mut qid = 0u64;
+                    while let Ok(req) = root_rx.recv() {
+                        match req {
+                            RootRequest::Single(q, reply_to) => {
+                                let t0 = std::time::Instant::now();
+                                if fwd_tx.send(Job::Single { qid, q: Arc::new(q) }).is_err() {
+                                    return;
+                                }
+                                // ICU latency model: one query in flight.
+                                let Ok(red) = done_rx.recv() else { return };
+                                debug_assert_eq!(red.qid, qid);
+                                let result =
+                                    finish(red, &vote, t0.elapsed().as_secs_f64());
+                                let _ = reply_to.send(result);
+                                qid += 1;
+                            }
+                            RootRequest::Batch { qs, nq, reply_to } => {
+                                let n = nq;
+                                if n == 0 {
+                                    let _ = reply_to.send(Vec::new());
+                                    continue;
+                                }
+                                let t0 = std::time::Instant::now();
+                                if fwd_tx
+                                    .send(Job::Batch { qid0: qid, qs: Arc::new(qs), nq })
+                                    .is_err()
+                                {
+                                    return;
+                                }
+                                // Per-qid completion is monotone: every
+                                // node replies to qid i before i + 1, so
+                                // the reducer finishes them in order.
+                                let mut results = Vec::with_capacity(n);
+                                for i in 0..n {
+                                    let Ok(red) = done_rx.recv() else { return };
+                                    debug_assert_eq!(red.qid, qid + i as u64);
+                                    results.push(finish(
+                                        red,
+                                        &vote,
+                                        t0.elapsed().as_secs_f64(),
+                                    ));
+                                }
+                                qid += n as u64;
+                                let _ = reply_to.send(results);
+                            }
+                        }
                     }
                 })
                 .expect("spawn root"),
@@ -205,7 +298,35 @@ impl Orchestrator {
     /// Reducer → Root pipeline.
     pub fn query(&self, q: &[f32]) -> QueryResult {
         let (tx, rx) = channel();
-        self.root_tx.send((q.to_vec(), tx)).expect("root thread gone");
+        self.root_tx.send(RootRequest::Single(q.to_vec(), tx)).expect("root thread gone");
+        rx.recv().expect("root dropped reply")
+    }
+
+    /// Resolve a block of queries in one admission: the whole block is
+    /// flattened once and broadcast to every node, nodes resolve it on
+    /// their batched core path, and the Reducer folds replies per query.
+    /// Results (neighbors, prediction, comparison counts) are identical
+    /// to calling [`query`] per element; `latency_s` of result `i` is
+    /// the wall-clock from batch admission to that query's reduction.
+    ///
+    /// [`query`]: Orchestrator::query
+    pub fn query_batch(&self, qs: &[&[f32]]) -> Vec<QueryResult> {
+        let nq = qs.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        let dim = qs[0].len();
+        let mut flat = Vec::with_capacity(nq * dim);
+        for q in qs {
+            // Hard check: a ragged batch flattened as-if-rectangular would
+            // silently scan byte-shifted garbage for every later query.
+            assert_eq!(q.len(), dim, "ragged query batch");
+            flat.extend_from_slice(q);
+        }
+        let (tx, rx) = channel();
+        self.root_tx
+            .send(RootRequest::Batch { qs: flat, nq, reply_to: tx })
+            .expect("root thread gone");
         rx.recv().expect("root dropped reply")
     }
 
@@ -241,7 +362,8 @@ impl Drop for Orchestrator {
 
 struct ReduceAcc {
     topk: TopK,
-    per_node: Vec<Vec<u64>>,
+    /// `(node_id, per-core comparisons)` — sorted by node id on completion.
+    per_node: Vec<(usize, Vec<u64>)>,
     received: usize,
 }
 

@@ -68,9 +68,10 @@ pub trait DistanceEngine: Send + Sync {
         topk: &mut TopK,
     ) -> u64;
 
-    /// Scan a contiguous row range (the PKNN exhaustive path). Default
-    /// implementation defers to `scan` over an id buffer; engines can
-    /// specialize to avoid materializing ids.
+    /// Scan a contiguous row range (the PKNN exhaustive path). The default
+    /// implementation walks the range through a small stack id buffer —
+    /// no heap allocation per call; engines can specialize further to skip
+    /// ids entirely.
     fn scan_range(
         &self,
         metric: Metric,
@@ -82,10 +83,74 @@ pub trait DistanceEngine: Send + Sync {
         id_base: u64,
         topk: &mut TopK,
     ) -> u64 {
-        let ids: Vec<u32> = range.collect();
-        self.scan(metric, q, data, dim, &ids, labels, id_base, topk)
+        let mut buf = [0u32; RANGE_CHUNK];
+        let mut total = 0u64;
+        let mut next = range.start;
+        while next < range.end {
+            let n = ((range.end - next) as usize).min(RANGE_CHUNK);
+            for (i, slot) in buf[..n].iter_mut().enumerate() {
+                *slot = next + i as u32;
+            }
+            total += self.scan(metric, q, data, dim, &buf[..n], labels, id_base, topk);
+            next += n as u32;
+        }
+        total
+    }
+
+    /// Scan the SAME candidate id list for a block of queries (`qs` is
+    /// row-major `topks.len() × dim`; `topks[i]` receives query `i`'s
+    /// results). This is the register-blocking entry point: engines that
+    /// override it amortize each data-row load across the whole query
+    /// block. Results MUST be bit-identical to calling [`scan`] once per
+    /// query; the default implementation does exactly that. Returns total
+    /// distance computations (`topks.len() * ids.len()`).
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch(
+        &self,
+        metric: Metric,
+        qs: &[f32],
+        data: &[f32],
+        dim: usize,
+        ids: &[u32],
+        labels: &[bool],
+        id_base: u64,
+        topks: &mut [TopK],
+    ) -> u64 {
+        debug_assert_eq!(qs.len(), topks.len() * dim);
+        let mut total = 0u64;
+        for (qi, topk) in topks.iter_mut().enumerate() {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            total += self.scan(metric, q, data, dim, ids, labels, id_base, topk);
+        }
+        total
+    }
+
+    /// Range variant of [`scan_batch`] (the batched PKNN path). Same
+    /// bit-identity contract against per-query [`scan_range`].
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_range(
+        &self,
+        metric: Metric,
+        qs: &[f32],
+        data: &[f32],
+        dim: usize,
+        range: std::ops::Range<u32>,
+        labels: &[bool],
+        id_base: u64,
+        topks: &mut [TopK],
+    ) -> u64 {
+        debug_assert_eq!(qs.len(), topks.len() * dim);
+        let mut total = 0u64;
+        for (qi, topk) in topks.iter_mut().enumerate() {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            total += self.scan_range(metric, q, data, dim, range.clone(), labels, id_base, topk);
+        }
+        total
     }
 }
+
+/// Stack-buffer chunk size for the default `scan_range` implementation.
+const RANGE_CHUNK: usize = 256;
 
 /// Push one scored candidate — shared by engine implementations.
 #[inline]

@@ -8,7 +8,10 @@ pub mod scaling;
 pub mod table1;
 pub mod tradeoff;
 
-pub use harness::{cached_corpus, eval_cluster, eval_pknn, outer_params, EvalRun, Scale};
+pub use harness::{
+    cached_corpus, eval_cluster, eval_cluster_batched, eval_pknn, outer_params, EvalRun, Scale,
+    EVAL_BATCH,
+};
 pub use report::Table;
 pub use scaling::{ScalingOptions, ScalingTable};
 pub use tradeoff::TradeoffOptions;

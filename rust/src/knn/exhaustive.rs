@@ -53,6 +53,59 @@ pub fn pknn_query(
     PknnResult { neighbors: global.into_sorted(), comparisons }
 }
 
+/// Batched exhaustive K-NN: resolve a block of queries (`qs` row-major
+/// `nq × dim`) against the same `procs`-way partitioning. Rides the
+/// engine's register-blocked [`scan_batch_range`] so every data row is
+/// fetched once per query tile instead of once per query — results are
+/// bit-identical to calling [`pknn_query`] once per row.
+///
+/// [`scan_batch_range`]: crate::engine::DistanceEngine::scan_batch_range
+#[allow(clippy::too_many_arguments)]
+pub fn pknn_query_batch(
+    engine: &dyn DistanceEngine,
+    metric: Metric,
+    qs: &[f32],
+    data: &[f32],
+    dim: usize,
+    labels: &[bool],
+    k: usize,
+    procs: usize,
+) -> Vec<PknnResult> {
+    assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+    let nq = qs.len() / dim;
+    let n = labels.len();
+    debug_assert_eq!(data.len(), n * dim);
+    let mut globals: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+    let mut comparisons: Vec<Vec<u64>> = (0..nq).map(|_| Vec::with_capacity(procs)).collect();
+    let mut partials: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+    for range in chunk_ranges(n, procs) {
+        for p in partials.iter_mut() {
+            p.reset(k);
+        }
+        let share = range.len() as u64;
+        let total = engine.scan_batch_range(
+            metric,
+            qs,
+            data,
+            dim,
+            range.start as u32..range.end as u32,
+            labels,
+            0,
+            &mut partials,
+        );
+        debug_assert_eq!(total, share * nq as u64);
+        for qi in 0..nq {
+            comparisons[qi].push(share);
+            globals[qi].merge(&partials[qi]);
+        }
+    }
+    globals
+        .into_iter()
+        .zip(comparisons)
+        .map(|(g, c)| PknnResult { neighbors: g.into_sorted(), comparisons: c })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +144,39 @@ mod tests {
         for procs in [2usize, 5, 16] {
             let r = pknn_query(&engine, Metric::L1, &q, &data, 30, &labels, 7, procs);
             assert_eq!(r.neighbors, base.neighbors, "procs={procs}");
+        }
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_sequential() {
+        let dim = 30;
+        let (data, labels, _) = fixture(700, dim, 5);
+        let engine = NativeEngine::new();
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for metric in [Metric::L1, Metric::Cosine] {
+            for procs in [1usize, 3, 8] {
+                for nq in [1usize, 4, 6] {
+                    let qs: Vec<f32> =
+                        (0..nq * dim).map(|_| rng.gen_f64(0.0, 100.0) as f32).collect();
+                    let batch =
+                        pknn_query_batch(&engine, metric, &qs, &data, dim, &labels, 10, procs);
+                    assert_eq!(batch.len(), nq);
+                    for qi in 0..nq {
+                        let seq = pknn_query(
+                            &engine,
+                            metric,
+                            &qs[qi * dim..(qi + 1) * dim],
+                            &data,
+                            dim,
+                            &labels,
+                            10,
+                            procs,
+                        );
+                        assert_eq!(batch[qi].neighbors, seq.neighbors, "{metric:?} procs={procs} qi={qi}");
+                        assert_eq!(batch[qi].comparisons, seq.comparisons);
+                    }
+                }
+            }
         }
     }
 

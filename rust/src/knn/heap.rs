@@ -107,9 +107,31 @@ impl TopK {
 
     /// Extract neighbors sorted ascending by (dist, id).
     pub fn into_sorted(mut self) -> Vec<Neighbor> {
-        self.heap
-            .sort_by(|a, b| if a.before(b) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater });
-        self.heap
+        let mut out = Vec::with_capacity(self.heap.len());
+        self.drain_sorted_into(&mut out);
+        out
+    }
+
+    /// Reset for reuse with capacity kept — the batched query path pools
+    /// `TopK`s in a scratch arena so the steady state allocates nothing.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0, "TopK with k == 0");
+        self.k = k;
+        self.heap.clear();
+    }
+
+    /// Append the retained neighbors to `out` in ascending (dist, id)
+    /// order, then clear, keeping the heap's capacity for the next query.
+    /// [`into_sorted`] is implemented on top of this, so the two can
+    /// never diverge in ordering.
+    ///
+    /// [`into_sorted`]: TopK::into_sorted
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Neighbor>) {
+        self.heap.sort_by(|a, b| {
+            if a.before(b) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater }
+        });
+        out.extend_from_slice(&self.heap);
+        self.heap.clear();
     }
 
     fn sift_up(&mut self, mut i: usize) {
@@ -232,6 +254,28 @@ mod tests {
         t.push(nb(0, f32::NAN));
         t.push(nb(1, 1.0));
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn drain_sorted_matches_into_sorted_and_reuses() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut pooled = TopK::new(4);
+        let mut flat: Vec<Neighbor> = Vec::new();
+        for round in 0..3 {
+            pooled.reset(4);
+            let candidates: Vec<Neighbor> =
+                (0..50).map(|id| nb(id + round * 100, rng.next_f32() * 9.0)).collect();
+            let mut fresh = TopK::new(4);
+            for &c in &candidates {
+                pooled.push(c);
+                fresh.push(c);
+            }
+            let start = flat.len();
+            pooled.drain_sorted_into(&mut flat);
+            assert_eq!(&flat[start..], fresh.into_sorted().as_slice(), "round {round}");
+            assert!(pooled.is_empty());
+        }
+        assert_eq!(flat.len(), 12);
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod heap;
 pub mod predict;
 pub mod reduce;
 
-pub use exhaustive::{pknn_query, PknnResult};
+pub use exhaustive::{pknn_query, pknn_query_batch, PknnResult};
 pub use heap::{Neighbor, TopK};
 pub use predict::{positive_share, predict, VoteConfig};
 pub use reduce::{fold_partial, reduce_partials};

@@ -23,12 +23,31 @@
 use crate::lsh::key::{KeyBuilder, PackedKey, MAX_BITS};
 use crate::util::rng::Xoshiro256;
 
+/// Queries hashed per pass of the batched hashers: small enough for the
+/// key builders to live in registers/stack, large enough to amortize one
+/// walk of the projection/threshold arrays over the whole tile.
+pub const HASH_TILE: usize = 8;
+
 /// A composed LSH function: point → m-bit key.
 pub trait ComposedHash: Send + Sync {
     /// Number of bits (`m`).
     fn bits(&self) -> usize;
     /// Hash a point.
     fn hash(&self, x: &[f32]) -> PackedKey;
+
+    /// Hash a block of points (row-major `nq × dim`), appending one key
+    /// per point to `out`. Keys MUST be identical to calling [`hash`] per
+    /// point — the default does exactly that; families override it to
+    /// walk their parameter arrays once per tile instead of once per
+    /// point.
+    ///
+    /// [`hash`]: ComposedHash::hash
+    fn hash_batch(&self, xs: &[f32], dim: usize, out: &mut Vec<PackedKey>) {
+        debug_assert!(dim > 0 && xs.len() % dim == 0);
+        for x in xs.chunks_exact(dim) {
+            out.push(self.hash(x));
+        }
+    }
 }
 
 /// Bit-sampling family instance for the l1 norm: `m` (coordinate,
@@ -68,6 +87,28 @@ impl ComposedHash for BitSamplingL1 {
         }
         kb.finish()
     }
+
+    /// Batched: the (coord, threshold) arrays are walked ONCE per tile of
+    /// [`HASH_TILE`] queries instead of once per query, so the bit-sampling
+    /// parameters stay in cache while every query consumes them.
+    fn hash_batch(&self, xs: &[f32], dim: usize, out: &mut Vec<PackedKey>) {
+        debug_assert!(dim > 0 && xs.len() % dim == 0);
+        let nq = xs.len() / dim;
+        let mut qi = 0usize;
+        while qi < nq {
+            let tile = (nq - qi).min(HASH_TILE);
+            let mut kbs: [KeyBuilder; HASH_TILE] = std::array::from_fn(|_| KeyBuilder::new());
+            for (&c, &t) in self.coords.iter().zip(&self.thresholds) {
+                for (ti, kb) in kbs[..tile].iter_mut().enumerate() {
+                    kb.push(xs[(qi + ti) * dim + c as usize] >= t);
+                }
+            }
+            for kb in &kbs[..tile] {
+                out.push(kb.finish());
+            }
+            qi += tile;
+        }
+    }
 }
 
 /// Sign-random-projection family instance for cosine distance: `m`
@@ -104,6 +145,37 @@ impl ComposedHash for RandomProjection {
             kb.push(dot >= 0.0);
         }
         kb.finish()
+    }
+
+    /// Batched: each Gaussian direction row is loaded once per tile of
+    /// [`HASH_TILE`] queries (an `m × dim` matrix re-walked per query is
+    /// the hashing cost driver at m ≥ 100). Dot products use the same
+    /// accumulation order as [`hash`], so keys are identical.
+    ///
+    /// [`hash`]: ComposedHash::hash
+    fn hash_batch(&self, xs: &[f32], dim: usize, out: &mut Vec<PackedKey>) {
+        debug_assert_eq!(dim, self.dim);
+        debug_assert!(dim > 0 && xs.len() % dim == 0);
+        let nq = xs.len() / dim;
+        let mut qi = 0usize;
+        while qi < nq {
+            let tile = (nq - qi).min(HASH_TILE);
+            let mut kbs: [KeyBuilder; HASH_TILE] = std::array::from_fn(|_| KeyBuilder::new());
+            for row in self.dirs.chunks_exact(self.dim) {
+                for (ti, kb) in kbs[..tile].iter_mut().enumerate() {
+                    let x = &xs[(qi + ti) * dim..(qi + ti) * dim + dim];
+                    let mut dot = 0.0f32;
+                    for (a, b) in row.iter().zip(x) {
+                        dot += a * b;
+                    }
+                    kb.push(dot >= 0.0);
+                }
+            }
+            for kb in &kbs[..tile] {
+                out.push(kb.finish());
+            }
+            qi += tile;
+        }
     }
 }
 
@@ -269,6 +341,30 @@ mod tests {
         let x2: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
         let h = RandomProjection::sample(30, 100, &mut rng);
         assert_eq!(h.hash(&x), h.hash(&x2), "cosine hashes must ignore scale");
+    }
+
+    #[test]
+    fn hash_batch_equals_per_point_hash() {
+        // Both families, batch sizes around the tile width (1, exact
+        // multiples, and stragglers) — keys must match exactly.
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let dim = 30;
+        let bs = BitSamplingL1::sample(dim, 125, 20.0, 180.0, &mut rng);
+        let rp = RandomProjection::sample(dim, 65, &mut rng);
+        for nq in [1usize, 3, 8, 9, 16, 23] {
+            let xs: Vec<f32> =
+                (0..nq * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+            for hash in [&bs as &dyn ComposedHash, &rp as &dyn ComposedHash] {
+                let mut batched = Vec::new();
+                hash.hash_batch(&xs, dim, &mut batched);
+                assert_eq!(batched.len(), nq);
+                for (qi, key) in batched.iter().enumerate() {
+                    let single = hash.hash(&xs[qi * dim..(qi + 1) * dim]);
+                    assert_eq!(*key, single, "nq={nq} qi={qi}");
+                    assert_eq!(key.digest(), single.digest());
+                }
+            }
+        }
     }
 
     #[test]

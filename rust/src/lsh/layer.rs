@@ -5,6 +5,7 @@
 //! ("no overlap in the computations for any pair of hashes").
 
 use crate::lsh::family::{ComposedHash, LayerSpec};
+use crate::lsh::key::PackedKey;
 use crate::lsh::table::{Table, TableBuilder};
 
 /// Read-only view of a point set (row-major dense f32).
@@ -96,6 +97,17 @@ impl LshLayer {
             if !ids.is_empty() {
                 visit(lt.t, ids);
             }
+        }
+    }
+
+    /// Hash a block of queries (row-major `nq × dim`) against every owned
+    /// table in one pass, filling `keys` with the layout
+    /// `keys[table_pos * nq + query]`. `keys` is cleared first and reused
+    /// across batches — the batched request path's hashing stage.
+    pub fn hash_batch(&self, qs: &[f32], dim: usize, keys: &mut Vec<PackedKey>) {
+        keys.clear();
+        for lt in &self.tables {
+            lt.hash.hash_batch(qs, dim, keys);
         }
     }
 
@@ -193,6 +205,35 @@ mod tests {
             from_full.sort();
             from_shards.sort();
             assert_eq!(from_full, from_shards);
+        }
+    }
+
+    #[test]
+    fn hash_batch_layout_matches_sequential_hashes() {
+        // keys[table_pos * nq + qi] must equal hashing query qi with
+        // table pos's instance — the layout contract the batched SLSH
+        // resolution path relies on.
+        let (data, dim) = clustered(8, 20, 30, 7);
+        let view = SliceView { data: &data, dim };
+        for spec in [
+            LayerSpec::outer_l1(dim, 24, 10, 20.0, 180.0, 5),
+            LayerSpec::inner_cosine(dim, 20, 6, 8),
+        ] {
+            let layer = LshLayer::build_full(&spec, &view);
+            let mut rng = Xoshiro256::seed_from_u64(6);
+            let mut keys = Vec::new();
+            for nq in [1usize, 5, 8, 11] {
+                let qs: Vec<f32> =
+                    (0..nq * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+                layer.hash_batch(&qs, dim, &mut keys);
+                assert_eq!(keys.len(), layer.tables.len() * nq);
+                for (pos, lt) in layer.tables.iter().enumerate() {
+                    for qi in 0..nq {
+                        let single = lt.hash.hash(&qs[qi * dim..(qi + 1) * dim]);
+                        assert_eq!(keys[pos * nq + qi], single, "pos={pos} qi={qi} nq={nq}");
+                    }
+                }
+            }
         }
     }
 

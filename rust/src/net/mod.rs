@@ -11,4 +11,4 @@ pub mod tcp;
 pub mod wire;
 
 pub use tcp::{serve_node, RemoteNode};
-pub use wire::Message;
+pub use wire::{BatchReplyItem, Message};

@@ -20,7 +20,7 @@ use crate::coordinator::orchestrator::NodeHandle;
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
 use crate::node::node::{LocalNode, NodeInfo, NodeReply};
-use crate::net::wire::Message;
+use crate::net::wire::{BatchReplyItem, Message};
 use crate::slsh::SlshParams;
 
 /// Engine factory for served nodes (native by default; the XLA service
@@ -66,12 +66,18 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
     }
     .write_frame(&mut writer)?;
 
-    // Phase 2: queries.
+    // Phase 2: queries (single or batched frames, freely interleaved).
+    let dim = shard.dim;
     let mut served = 0u64;
     loop {
         match Message::read_frame(&mut reader).map_err(|e| anyhow!("reading frame: {e}"))? {
             None | Some(Message::Shutdown) => break,
             Some(Message::Query { qid, q }) => {
+                // Same hostile-input hardening as the batch arm: a
+                // wrong-dimension query would panic a worker mid-hash.
+                if q.len() != dim {
+                    bail!("bad query geometry: {} floats for dim {dim}", q.len());
+                }
                 let reply = node.query(&q);
                 Message::Reply {
                     qid,
@@ -81,6 +87,26 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 }
                 .write_frame(&mut writer)?;
                 served += 1;
+            }
+            Some(Message::QueryBatch { qid0, nq, qs }) => {
+                let nq = nq as usize;
+                // `nq` is peer-controlled: reject on overflow instead of
+                // wrapping (the wire layer is hostile-input hardened).
+                let expected = nq.checked_mul(dim);
+                if dim == 0 || expected != Some(qs.len()) {
+                    bail!("bad batch geometry: {} floats for {nq} queries of dim {dim}", qs.len());
+                }
+                let replies = node.query_batch(Arc::new(qs), nq);
+                let items: Vec<BatchReplyItem> = replies
+                    .into_iter()
+                    .map(|r| BatchReplyItem {
+                        neighbors: r.neighbors,
+                        comparisons: r.comparisons,
+                        inner_probes: r.inner_probes,
+                    })
+                    .collect();
+                Message::ReplyBatch { qid0, replies: items }.write_frame(&mut writer)?;
+                served += nq as u64;
             }
             Some(other) => bail!("unexpected message {other:?}"),
         }
@@ -155,6 +181,39 @@ impl NodeHandle for RemoteNode {
         };
         assert_eq!(rqid, qid, "out-of-order reply");
         NodeReply { qid, neighbors, comparisons, inner_probes }
+    }
+
+    /// One frame per batch instead of one round trip per query — the
+    /// remote node resolves the block on its batched core path. (The
+    /// wire message needs an owned buffer, so this copies once.)
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+        if nq == 0 {
+            return Vec::new();
+        }
+        debug_assert_eq!(qs.len() % nq, 0);
+        let qid0 = self.next_qid;
+        self.next_qid += nq as u64;
+        Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
+            .write_frame(&mut self.writer)
+            .expect("remote node write failed");
+        let reply = Message::read_frame(&mut self.reader)
+            .expect("remote node read failed")
+            .expect("remote node closed mid-batch");
+        let Message::ReplyBatch { qid0: rqid0, replies } = reply else {
+            panic!("expected ReplyBatch, got {reply:?}");
+        };
+        assert_eq!(rqid0, qid0, "out-of-order batch reply");
+        assert_eq!(replies.len(), nq, "batch reply arity mismatch");
+        replies
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| NodeReply {
+                qid: qid0 + i as u64,
+                neighbors: item.neighbors,
+                comparisons: item.comparisons,
+                inner_probes: item.inner_probes,
+            })
+            .collect()
     }
 }
 

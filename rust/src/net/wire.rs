@@ -35,8 +35,22 @@ pub enum Message {
     Query { qid: u64, q: Vec<f32> },
     /// Node → root: node-local K-NN + per-core comparison counts.
     Reply { qid: u64, neighbors: Vec<Neighbor>, comparisons: Vec<u64>, inner_probes: u64 },
+    /// Root → node: resolve a block of `nq` queries (`qs` row-major
+    /// `nq × dim`; query `i` has id `qid0 + i`). One frame per batch
+    /// amortizes the round trip the per-query protocol pays.
+    QueryBatch { qid0: u64, nq: u64, qs: Vec<f32> },
+    /// Node → root: per-query answers for one batch, in qid order.
+    ReplyBatch { qid0: u64, replies: Vec<BatchReplyItem> },
     /// Root → node: drain and exit.
     Shutdown,
+}
+
+/// One query's answer inside a [`Message::ReplyBatch`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchReplyItem {
+    pub neighbors: Vec<Neighbor>,
+    pub comparisons: Vec<u64>,
+    pub inner_probes: u64,
 }
 
 const TAG_BUILD: u8 = 1;
@@ -44,6 +58,36 @@ const TAG_BUILD_DONE: u8 = 2;
 const TAG_QUERY: u8 = 3;
 const TAG_REPLY: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_QUERY_BATCH: u8 = 6;
+const TAG_REPLY_BATCH: u8 = 7;
+
+/// Sanity cap on per-message collection sizes (hostile/corrupt peers).
+const MAX_ITEMS: usize = 1 << 20;
+
+fn write_neighbors(out: &mut Vec<u8>, neighbors: &[Neighbor]) {
+    bytes::write_u64(out, neighbors.len() as u64).unwrap();
+    for n in neighbors {
+        bytes::write_u64(out, n.id).unwrap();
+        bytes::write_f32(out, n.dist).unwrap();
+        bytes::write_u8(out, n.label as u8).unwrap();
+    }
+}
+
+fn read_neighbors(r: &mut std::io::Cursor<&[u8]>) -> Result<Vec<Neighbor>, CodecError> {
+    let n = bytes::read_u64(r)? as usize;
+    if n > MAX_ITEMS {
+        return Err(CodecError::TooLong(n as u64, MAX_ITEMS as u64));
+    }
+    let mut neighbors = Vec::with_capacity(n);
+    for _ in 0..n {
+        neighbors.push(Neighbor {
+            id: bytes::read_u64(r)?,
+            dist: bytes::read_f32(r)?,
+            label: bytes::read_u8(r)? != 0,
+        });
+    }
+    Ok(neighbors)
+}
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -71,14 +115,25 @@ impl Message {
             Message::Reply { qid, neighbors, comparisons, inner_probes } => {
                 bytes::write_u8(&mut out, TAG_REPLY).unwrap();
                 bytes::write_u64(&mut out, *qid).unwrap();
-                bytes::write_u64(&mut out, neighbors.len() as u64).unwrap();
-                for n in neighbors {
-                    bytes::write_u64(&mut out, n.id).unwrap();
-                    bytes::write_f32(&mut out, n.dist).unwrap();
-                    bytes::write_u8(&mut out, n.label as u8).unwrap();
-                }
+                write_neighbors(&mut out, neighbors);
                 bytes::write_u64_vec(&mut out, comparisons).unwrap();
                 bytes::write_u64(&mut out, *inner_probes).unwrap();
+            }
+            Message::QueryBatch { qid0, nq, qs } => {
+                bytes::write_u8(&mut out, TAG_QUERY_BATCH).unwrap();
+                bytes::write_u64(&mut out, *qid0).unwrap();
+                bytes::write_u64(&mut out, *nq).unwrap();
+                bytes::write_f32_vec(&mut out, qs).unwrap();
+            }
+            Message::ReplyBatch { qid0, replies } => {
+                bytes::write_u8(&mut out, TAG_REPLY_BATCH).unwrap();
+                bytes::write_u64(&mut out, *qid0).unwrap();
+                bytes::write_u64(&mut out, replies.len() as u64).unwrap();
+                for item in replies {
+                    write_neighbors(&mut out, &item.neighbors);
+                    bytes::write_u64_vec(&mut out, &item.comparisons).unwrap();
+                    bytes::write_u64(&mut out, item.inner_probes).unwrap();
+                }
             }
             Message::Shutdown => {
                 bytes::write_u8(&mut out, TAG_SHUTDOWN).unwrap();
@@ -115,21 +170,31 @@ impl Message {
             }),
             TAG_REPLY => {
                 let qid = bytes::read_u64(&mut r)?;
-                let n = bytes::read_u64(&mut r)? as usize;
-                if n > 1 << 20 {
-                    return Err(CodecError::TooLong(n as u64, 1 << 20));
-                }
-                let mut neighbors = Vec::with_capacity(n);
-                for _ in 0..n {
-                    neighbors.push(Neighbor {
-                        id: bytes::read_u64(&mut r)?,
-                        dist: bytes::read_f32(&mut r)?,
-                        label: bytes::read_u8(&mut r)? != 0,
-                    });
-                }
+                let neighbors = read_neighbors(&mut r)?;
                 let comparisons = bytes::read_u64_vec(&mut r)?;
                 let inner_probes = bytes::read_u64(&mut r)?;
                 Ok(Message::Reply { qid, neighbors, comparisons, inner_probes })
+            }
+            TAG_QUERY_BATCH => Ok(Message::QueryBatch {
+                qid0: bytes::read_u64(&mut r)?,
+                nq: bytes::read_u64(&mut r)?,
+                qs: bytes::read_f32_vec(&mut r)?,
+            }),
+            TAG_REPLY_BATCH => {
+                let qid0 = bytes::read_u64(&mut r)?;
+                let count = bytes::read_u64(&mut r)? as usize;
+                if count > MAX_ITEMS {
+                    return Err(CodecError::TooLong(count as u64, MAX_ITEMS as u64));
+                }
+                let mut replies = Vec::with_capacity(count);
+                for _ in 0..count {
+                    replies.push(BatchReplyItem {
+                        neighbors: read_neighbors(&mut r)?,
+                        comparisons: bytes::read_u64_vec(&mut r)?,
+                        inner_probes: bytes::read_u64(&mut r)?,
+                    });
+                }
+                Ok(Message::ReplyBatch { qid0, replies })
             }
             TAG_SHUTDOWN => Ok(Message::Shutdown),
             t => Err(CodecError::BadTag(t as u32, "Message")),
@@ -205,6 +270,24 @@ mod tests {
             ],
             comparisons: vec![10, 20, 30],
             inner_probes: 4,
+        };
+        assert_eq!(roundtrip(&r), r);
+    }
+
+    #[test]
+    fn batch_messages_roundtrip() {
+        let q = Message::QueryBatch { qid0: 40, nq: 2, qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        assert_eq!(roundtrip(&q), q);
+        let r = Message::ReplyBatch {
+            qid0: 40,
+            replies: vec![
+                BatchReplyItem {
+                    neighbors: vec![Neighbor { id: 5, dist: 1.25, label: true }],
+                    comparisons: vec![10, 20],
+                    inner_probes: 1,
+                },
+                BatchReplyItem { neighbors: vec![], comparisons: vec![0, 0], inner_probes: 0 },
+            ],
         };
         assert_eq!(roundtrip(&r), r);
     }

@@ -11,7 +11,7 @@ use std::thread::JoinHandle;
 use crate::data::Dataset;
 use crate::engine::DistanceEngine;
 use crate::knn::heap::{Neighbor, TopK};
-use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReply};
+use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReplyMsg};
 use crate::slsh::SlshParams;
 
 /// A node's answer to one query — what travels back to the Orchestrator.
@@ -40,7 +40,7 @@ pub struct NodeInfo {
 pub struct LocalNode {
     node_id: usize,
     worker_tx: Vec<Sender<WorkerMsg>>,
-    reply_rx: Receiver<WorkerReply>,
+    reply_rx: Receiver<WorkerReplyMsg>,
     handles: Vec<JoinHandle<()>>,
     k: usize,
     p: usize,
@@ -64,7 +64,7 @@ impl LocalNode {
     ) -> LocalNode {
         assert_eq!(engines.len(), p, "need one engine per core");
         let t0 = std::time::Instant::now();
-        let (reply_tx, reply_rx) = channel::<WorkerReply>();
+        let (reply_tx, reply_rx) = channel::<WorkerReplyMsg>();
         let (ready_tx, ready_rx) = channel::<usize>();
         let mut worker_tx = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
@@ -127,7 +127,10 @@ impl LocalNode {
         let mut inner_probes = 0u64;
         let mut received = 0;
         while received < self.p {
-            let reply = self.reply_rx.recv().expect("worker died");
+            let WorkerReplyMsg::Single(reply) = self.reply_rx.recv().expect("worker died")
+            else {
+                unreachable!("batch reply during single query");
+            };
             // Replies for stale qids are impossible: queries are strictly
             // sequential per node (ICU latency model — one query in flight).
             debug_assert_eq!(reply.qid, qid);
@@ -139,6 +142,62 @@ impl LocalNode {
             received += 1;
         }
         NodeReply { qid, neighbors: topk.into_sorted(), comparisons, inner_probes }
+    }
+
+    /// Resolve a block of `nq` queries (row-major `nq × dim`, shared
+    /// flat buffer) in one Master round trip: the block is broadcast to
+    /// all cores without copying, every core rides
+    /// [`SlshIndex::query_batch`](crate::slsh::SlshIndex::query_batch)
+    /// over its reused scratch arena, and the `p` flat batch replies are
+    /// reduced per query. Per-query results are identical to calling
+    /// [`query`] once per row (reduction is order-invariant).
+    ///
+    /// [`query`]: LocalNode::query
+    pub fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+        if nq == 0 {
+            return Vec::new();
+        }
+        assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
+        let qid0 = self.next_qid;
+        self.next_qid += nq as u64;
+        for tx in &self.worker_tx {
+            tx.send(WorkerMsg::QueryBatch { qid0, qs: Arc::clone(&qs), nq })
+                .expect("worker channel closed");
+        }
+        let mut topks: Vec<TopK> = (0..nq).map(|_| TopK::new(self.k)).collect();
+        let mut comparisons: Vec<Vec<u64>> = (0..nq).map(|_| vec![0u64; self.p]).collect();
+        let mut inner_probes = vec![0u64; nq];
+        let mut received = 0;
+        while received < self.p {
+            let WorkerReplyMsg::Batch(reply) = self.reply_rx.recv().expect("worker died")
+            else {
+                unreachable!("single reply during batch query");
+            };
+            debug_assert_eq!(reply.qid0, qid0);
+            debug_assert_eq!(reply.stats.len(), nq);
+            for qi in 0..nq {
+                let lo = reply.offsets[qi] as usize;
+                let hi = reply.offsets[qi + 1] as usize;
+                for n in &reply.neighbors[lo..hi] {
+                    topks[qi].push_unique(*n);
+                }
+                comparisons[qi][reply.core] = reply.stats[qi].comparisons;
+                inner_probes[qi] += reply.stats[qi].inner_probes;
+            }
+            received += 1;
+        }
+        topks
+            .into_iter()
+            .zip(comparisons)
+            .zip(inner_probes)
+            .enumerate()
+            .map(|(qi, ((topk, comps), probes))| NodeReply {
+                qid: qid0 + qi as u64,
+                neighbors: topk.into_sorted(),
+                comparisons: comps,
+                inner_probes: probes,
+            })
+            .collect()
     }
 }
 
@@ -238,6 +297,38 @@ mod tests {
                 if let Some(&d) = truth_dist.get(&n.id) {
                     assert!((n.dist - d).abs() < 1e-3);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn query_batch_matches_sequential_queries_across_core_counts() {
+        let corpus = small_corpus();
+        let shard = Arc::new(corpus.data.clone());
+        let params = params(&corpus.data, 40, 12);
+        for p in [1usize, 3] {
+            // Sequential reference on one node, batched on a fresh node
+            // (same spec ⇒ same tables), across batch sizes incl. 1 and
+            // non-multiples of the scan/hash tiles.
+            let mut seq_node =
+                LocalNode::spawn(0, Arc::clone(&shard), 0, &params, p, native_engines(p));
+            let mut batch_node =
+                LocalNode::spawn(0, Arc::clone(&shard), 0, &params, p, native_engines(p));
+            let mut qi = 0usize;
+            for nq in [1usize, 3, 7] {
+                let mut flat = Vec::new();
+                for i in qi..qi + nq {
+                    flat.extend_from_slice(corpus.queries.point(i));
+                }
+                let batched = batch_node.query_batch(Arc::new(flat), nq);
+                assert_eq!(batched.len(), nq);
+                for j in 0..nq {
+                    let seq = seq_node.query(corpus.queries.point(qi + j));
+                    assert_eq!(batched[j].neighbors, seq.neighbors, "p={p} nq={nq} j={j}");
+                    assert_eq!(batched[j].comparisons, seq.comparisons);
+                    assert_eq!(batched[j].inner_probes, seq.inner_probes);
+                }
+                qi += nq;
             }
         }
     }

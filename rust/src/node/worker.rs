@@ -1,8 +1,14 @@
 //! Per-core worker (paper Figure 2): one long-lived thread per simulated
 //! core `P_i`, owning `O(L_out / p)` outer tables (and their inner
-//! indices), a stamped visited set, and a comparison counter. The shard's
-//! points live in shared memory (`Arc<Dataset>`); buckets hold local ids
-//! into it.
+//! indices), a reusable query-scratch arena, and a comparison counter.
+//! The shard's points live in shared memory (`Arc<Dataset>`); buckets
+//! hold local ids into it.
+//!
+//! Workers serve both single queries (the ICU one-in-flight latency
+//! model) and query batches: a batch is resolved through
+//! [`SlshIndex::query_batch`] — batched hashing + pooled scratch — and
+//! answered with ONE flat [`WorkerBatchReply`] per batch, so the reply
+//! path allocates per batch, not per query.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -10,23 +16,41 @@ use std::sync::Arc;
 use crate::data::Dataset;
 use crate::engine::DistanceEngine;
 use crate::knn::heap::Neighbor;
-use crate::slsh::{QueryStats, SlshIndex, SlshParams};
-use crate::util::stamp::StampSet;
+use crate::slsh::{BatchOutput, QueryScratch, QueryStats, SlshIndex, SlshParams};
 
 /// Messages a worker accepts.
 pub enum WorkerMsg {
     /// Resolve a query; reply through the node's gather channel.
     Query { qid: u64, q: Arc<Vec<f32>> },
+    /// Resolve a block of queries (`qs` row-major `nq × dim`, query `i`
+    /// has id `qid0 + i`).
+    QueryBatch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize },
     /// Drain and exit.
     Shutdown,
 }
 
-/// One worker's partial answer.
+/// One worker's partial answer to a single query.
 pub struct WorkerReply {
     pub core: usize,
     pub qid: u64,
     pub partial: Vec<Neighbor>,
     pub stats: QueryStats,
+}
+
+/// One worker's partial answers to a whole batch, CSR-flat: query `i`'s
+/// neighbors are `neighbors[offsets[i] as usize..offsets[i + 1] as usize]`.
+pub struct WorkerBatchReply {
+    pub core: usize,
+    pub qid0: u64,
+    pub neighbors: Vec<Neighbor>,
+    pub offsets: Vec<u32>,
+    pub stats: Vec<QueryStats>,
+}
+
+/// What flows back over the node's gather channel.
+pub enum WorkerReplyMsg {
+    Single(WorkerReply),
+    Batch(WorkerBatchReply),
 }
 
 /// Table indices owned by core `i` of `p`: `{t : t ≡ i (mod p)}` — the
@@ -49,33 +73,56 @@ pub fn run_worker(
     tables: Vec<usize>,
     engine: Box<dyn DistanceEngine>,
     rx: Receiver<WorkerMsg>,
-    reply_tx: Sender<WorkerReply>,
+    reply_tx: Sender<WorkerReplyMsg>,
     ready: Sender<usize>,
 ) {
     let index = SlshIndex::build(&params, &*shard, &tables);
-    let mut visited = StampSet::new(shard.len().max(1));
-    let mut scratch: Vec<u32> = Vec::new();
+    let mut scratch = QueryScratch::new(shard.len().max(1));
+    let mut batch_out = BatchOutput::new();
     let _ = ready.send(core);
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Query { qid, q } => {
-                let out = index.query(
+                index.query_batch(
                     engine.as_ref(),
                     &q,
                     &shard.points,
                     &shard.labels,
                     id_base,
-                    &mut visited,
                     &mut scratch,
+                    &mut batch_out,
                 );
                 let reply = WorkerReply {
                     core,
                     qid,
-                    partial: out.topk.into_sorted(),
-                    stats: out.stats,
+                    partial: batch_out.neighbors(0).to_vec(),
+                    stats: batch_out.stats(0),
                 };
-                if reply_tx.send(reply).is_err() {
+                if reply_tx.send(WorkerReplyMsg::Single(reply)).is_err() {
                     break; // node gone
+                }
+            }
+            WorkerMsg::QueryBatch { qid0, qs, nq } => {
+                index.query_batch(
+                    engine.as_ref(),
+                    &qs,
+                    &shard.points,
+                    &shard.labels,
+                    id_base,
+                    &mut scratch,
+                    &mut batch_out,
+                );
+                debug_assert_eq!(batch_out.len(), nq);
+                let (neighbors, offsets, stats) = batch_out.flat();
+                let reply = WorkerBatchReply {
+                    core,
+                    qid0,
+                    neighbors: neighbors.to_vec(),
+                    offsets: offsets.to_vec(),
+                    stats: stats.to_vec(),
+                };
+                if reply_tx.send(WorkerReplyMsg::Batch(reply)).is_err() {
+                    break;
                 }
             }
             WorkerMsg::Shutdown => break,

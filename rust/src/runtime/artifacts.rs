@@ -27,14 +27,32 @@ pub struct Manifest {
     pub artifacts: Vec<ArtifactMeta>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("artifacts directory not found (tried {0:?}); run `make artifacts` first")]
     NotFound(Vec<PathBuf>),
-    #[error("failed reading {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("manifest parse error: {0}")]
     Parse(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::NotFound(tried) => {
+                write!(f, "artifacts directory not found (tried {tried:?}); run `make artifacts` first")
+            }
+            ArtifactError::Io(path, e) => write!(f, "failed reading {}: {e}", path.display()),
+            ArtifactError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(_, e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 /// Locate the artifacts directory: `$DSLSH_ARTIFACTS`, `./artifacts`, or

@@ -131,4 +131,31 @@ impl DistanceEngine for XlaEngine {
         }
         ids.len() as u64
     }
+
+    /// Contiguous ranges need no id materialization OR gather: the rows
+    /// are sliced straight out of the shard and shipped in ONE service
+    /// round trip (the chunked trait default would cost one lock/channel/
+    /// dispatch cycle per 256 ids).
+    fn scan_range(
+        &self,
+        metric: Metric,
+        q: &[f32],
+        data: &[f32],
+        dim: usize,
+        range: std::ops::Range<u32>,
+        labels: &[bool],
+        id_base: u64,
+        topk: &mut TopK,
+    ) -> u64 {
+        let n = (range.end - range.start) as usize;
+        if n == 0 {
+            return 0;
+        }
+        let rows = data[range.start as usize * dim..range.end as usize * dim].to_vec();
+        let dists = self.scan_remote(metric, q, rows, n);
+        for (i, &d) in dists.iter().enumerate() {
+            push_scored(topk, id_base, range.start + i as u32, d, labels);
+        }
+        n as u64
+    }
 }

@@ -5,8 +5,9 @@
 use std::collections::HashMap;
 
 use crate::engine::{DistanceEngine, Metric};
-use crate::knn::heap::TopK;
+use crate::knn::heap::{Neighbor, TopK};
 use crate::lsh::family::LayerSpec;
+use crate::lsh::key::PackedKey;
 use crate::lsh::layer::{LshLayer, Points, SliceView};
 use crate::slsh::params::SlshParams;
 use crate::util::rng::mix64;
@@ -50,6 +51,94 @@ pub struct QueryStats {
 pub struct QueryOutput {
     pub topk: TopK,
     pub stats: QueryStats,
+}
+
+/// Reusable per-core scratch for query resolution — the arena the batched
+/// path recycles so steady-state serving performs no per-query heap
+/// allocations: the visited stamps, candidate buffer, packed hash keys
+/// and pooled top-K heaps all keep their capacity across batches.
+pub struct QueryScratch {
+    pub(crate) visited: StampSet,
+    pub(crate) cand: Vec<u32>,
+    pub(crate) keys: Vec<PackedKey>,
+    pub(crate) topks: Vec<TopK>,
+}
+
+impl QueryScratch {
+    /// `n_local` is the shard size the visited set must cover (it grows
+    /// on demand if the index is larger).
+    pub fn new(n_local: usize) -> Self {
+        Self {
+            visited: StampSet::new(n_local.max(1)),
+            cand: Vec::new(),
+            keys: Vec::new(),
+            topks: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, n_local: usize, nq: usize, k: usize) {
+        self.visited.ensure_capacity(n_local);
+        if self.topks.len() < nq {
+            let grow = nq - self.topks.len();
+            self.topks.extend((0..grow).map(|_| TopK::new(k)));
+        }
+    }
+}
+
+/// Flat, reusable results of one resolved batch: per-query neighbor
+/// slices (CSR layout) plus stats. Cleared and refilled in place so the
+/// batched path allocates nothing per query once warmed up.
+#[derive(Debug, Clone, Default)]
+pub struct BatchOutput {
+    neighbors: Vec<Neighbor>,
+    /// `offsets.len() == len() + 1`, leading 0.
+    offsets: Vec<u32>,
+    stats: Vec<QueryStats>,
+}
+
+impl BatchOutput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of resolved queries.
+    pub fn len(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stats.is_empty()
+    }
+
+    /// Sorted neighbors of query `qi` (ascending (dist, id) — exactly
+    /// what the sequential path's `topk.into_sorted()` yields).
+    pub fn neighbors(&self, qi: usize) -> &[Neighbor] {
+        let lo = self.offsets[qi] as usize;
+        let hi = self.offsets[qi + 1] as usize;
+        &self.neighbors[lo..hi]
+    }
+
+    pub fn stats(&self, qi: usize) -> QueryStats {
+        self.stats[qi]
+    }
+
+    /// Flat CSR views, for shipping a whole batch in one message.
+    pub fn flat(&self) -> (&[Neighbor], &[u32], &[QueryStats]) {
+        (&self.neighbors, &self.offsets, &self.stats)
+    }
+
+    fn clear(&mut self) {
+        self.neighbors.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.stats.clear();
+    }
+
+    fn push_query(&mut self, topk: &mut TopK, stats: QueryStats) {
+        topk.drain_sorted_into(&mut self.neighbors);
+        self.offsets.push(self.neighbors.len() as u32);
+        self.stats.push(stats);
+    }
 }
 
 impl SlshIndex {
@@ -129,11 +218,28 @@ impl SlshIndex {
     /// narrowed through inner layers where present).
     pub fn candidates(&self, q: &[f32], visited: &mut StampSet, out: &mut Vec<u32>) -> QueryStats {
         debug_assert!(visited.capacity() >= self.n_local);
+        self.gather_with_keys(q, |pos| self.outer.tables[pos].hash.hash(q), visited, out)
+    }
+
+    /// Shared candidate-gathering body: `key_at(pos)` supplies table
+    /// `pos`'s key for `q` — hashed on the spot by [`candidates`], read
+    /// from the batch-hashed key block by [`query_batch`]. Keeping one
+    /// body is what makes the two paths bit-identical by construction.
+    ///
+    /// [`candidates`]: SlshIndex::candidates
+    /// [`query_batch`]: SlshIndex::query_batch
+    fn gather_with_keys(
+        &self,
+        q: &[f32],
+        mut key_at: impl FnMut(usize) -> PackedKey,
+        visited: &mut StampSet,
+        out: &mut Vec<u32>,
+    ) -> QueryStats {
         let mut stats = QueryStats::default();
         out.clear();
         visited.clear();
         for (pos, lt) in self.outer.tables.iter().enumerate() {
-            let key = lt.hash.hash(q);
+            let key = key_at(pos);
             let Some(bucket_idx) = lt.table.find_bucket(&key) else { continue };
             let ids = lt.table.bucket(bucket_idx);
             if ids.is_empty() {
@@ -189,6 +295,49 @@ impl SlshIndex {
         );
         debug_assert_eq!(scanned, stats.comparisons);
         QueryOutput { topk, stats }
+    }
+
+    /// Resolve a block of queries (`qs` row-major `nq × dim`) — the
+    /// batched request path. Bit-identical to calling [`query`] once per
+    /// row: hashing runs batched across all owned tables (one walk of
+    /// each family's parameter arrays per tile), candidate gathering and
+    /// the scan then reuse `scratch`'s visited set / candidate buffer /
+    /// pooled top-Ks, and `out` is refilled in place. Steady state
+    /// allocates nothing per query.
+    ///
+    /// [`query`]: SlshIndex::query
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_batch(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        data: &[f32],
+        labels: &[bool],
+        id_base: u64,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+    ) {
+        let dim = self.params.outer.dim;
+        assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+        let nq = qs.len() / dim;
+        scratch.ensure(self.n_local, nq, self.params.k);
+        out.clear();
+        // Stage 1 — batched hashing: every owned outer table hashes the
+        // whole block in one pass ([table_pos * nq + query] layout).
+        self.outer.hash_batch(qs, dim, &mut scratch.keys);
+        // Stage 2 — per query: gather candidates through the same body
+        // the sequential path uses (keys read from the batch block) and
+        // scan them into a pooled top-K.
+        let QueryScratch { visited, cand, keys, topks } = scratch;
+        for qi in 0..nq {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            let stats = self.gather_with_keys(q, |pos| keys[pos * nq + qi], visited, cand);
+            let topk = &mut topks[qi];
+            topk.reset(self.params.k);
+            let scanned = engine.scan(Metric::L1, q, data, dim, cand, labels, id_base, topk);
+            debug_assert_eq!(scanned, stats.comparisons);
+            out.push_query(topk, stats);
+        }
     }
 }
 
@@ -402,6 +551,43 @@ mod tests {
         }
         let recall = hits as f64 / total as f64;
         assert!(recall > 0.6, "recall too low: {recall}");
+    }
+
+    #[test]
+    fn query_batch_is_bit_identical_to_sequential_queries() {
+        let fx = Fixture::new(14);
+        let engine = NativeEngine::new();
+        // LSH-only and stratified indices, batch sizes incl. 1 and
+        // non-multiples of the hash/scan tiles.
+        for params in [lsh_params(20, 16, 31), slsh_params(12, 8, 0.05, 31)] {
+            let idx = SlshIndex::build_full(&params, &fx.view());
+            let mut scratch = QueryScratch::new(fx.n());
+            let mut out = BatchOutput::new();
+            let mut visited = StampSet::new(fx.n());
+            let mut cand = Vec::new();
+            let mut rng = Xoshiro256::seed_from_u64(15);
+            for nq in [1usize, 3, 5, 9] {
+                let qs: Vec<f32> =
+                    (0..nq * 30).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+                idx.query_batch(&engine, &qs, &fx.data, &fx.labels, 700, &mut scratch, &mut out);
+                assert_eq!(out.len(), nq);
+                for qi in 0..nq {
+                    let seq = idx.query(
+                        &engine,
+                        &qs[qi * 30..(qi + 1) * 30],
+                        &fx.data,
+                        &fx.labels,
+                        700,
+                        &mut visited,
+                        &mut cand,
+                    );
+                    assert_eq!(out.stats(qi), seq.stats, "nq={nq} qi={qi}");
+                    // Bit-identical neighbors (Neighbor: PartialEq compares
+                    // the f32 distance exactly).
+                    assert_eq!(out.neighbors(qi), seq.topk.into_sorted().as_slice());
+                }
+            }
+        }
     }
 
     #[test]

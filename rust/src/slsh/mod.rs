@@ -10,5 +10,5 @@
 pub mod index;
 pub mod params;
 
-pub use index::{QueryOutput, QueryStats, SlshIndex};
+pub use index::{BatchOutput, QueryOutput, QueryScratch, QueryStats, SlshIndex};
 pub use params::{InnerParams, SlshParams};

@@ -4,20 +4,44 @@
 
 use std::io::{self, Read, Write};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodecError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("bad magic: expected {expected:#x}, got {got:#x}")]
+    Io(io::Error),
     BadMagic { expected: u64, got: u64 },
-    #[error("unsupported version {0}")]
     BadVersion(u32),
-    #[error("length {0} exceeds sanity limit {1}")]
     TooLong(u64, u64),
-    #[error("invalid utf-8 in string field")]
     BadUtf8,
-    #[error("invalid enum tag {0} for {1}")]
     BadTag(u32, &'static str),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Io(e) => write!(f, "io: {e}"),
+            CodecError::BadMagic { expected, got } => {
+                write!(f, "bad magic: expected {expected:#x}, got {got:#x}")
+            }
+            CodecError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            CodecError::TooLong(n, cap) => write!(f, "length {n} exceeds sanity limit {cap}"),
+            CodecError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+            CodecError::BadTag(t, what) => write!(f, "invalid enum tag {t} for {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CodecError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for CodecError {
+    fn from(e: io::Error) -> CodecError {
+        CodecError::Io(e)
+    }
 }
 
 /// Sanity cap on decoded collection lengths (guards against corrupt files

@@ -6,15 +6,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("missing required flag --{0}")]
     Missing(String),
-    #[error("flag --{0}: expected {1}, got '{2}'")]
     BadValue(String, &'static str, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(name) => write!(f, "unknown flag --{name}"),
+            CliError::Missing(name) => write!(f, "missing required flag --{name}"),
+            CliError::BadValue(name, want, got) => {
+                write!(f, "flag --{name}: expected {want}, got '{got}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Parsed arguments: positionals in order, plus key→values multimap.
 #[derive(Debug, Clone, Default)]

@@ -1,12 +1,11 @@
-//! Tiny leveled logger (the `log` facade is in the vendored set but a
-//! backend is not, so we carry our own). Controlled by `DSLSH_LOG`
+//! Tiny leveled logger (no `log` facade or backend in the offline
+//! environment, so we carry our own). Controlled by `DSLSH_LOG`
 //! (`error|warn|info|debug|trace`, default `info`).
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -42,24 +41,28 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static INIT: Lazy<()> = Lazy::new(|| {
-    if let Ok(v) = std::env::var("DSLSH_LOG") {
-        if let Some(l) = Level::parse(&v) {
-            LEVEL.store(l as u8, Ordering::Relaxed);
+static START: OnceLock<Instant> = OnceLock::new();
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn init() {
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("DSLSH_LOG") {
+            if let Some(l) = Level::parse(&v) {
+                LEVEL.store(l as u8, Ordering::Relaxed);
+            }
         }
-    }
-    Lazy::force(&START);
-});
+        START.get_or_init(Instant::now);
+    });
+}
 
 /// Set the level programmatically (overrides `DSLSH_LOG`).
 pub fn set_level(level: Level) {
-    Lazy::force(&INIT);
+    init();
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
 pub fn enabled(level: Level) -> bool {
-    Lazy::force(&INIT);
+    init();
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
@@ -69,7 +72,7 @@ pub fn emit(level: Level, component: &str, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "[{t:10.3}s {} {component}] {args}", level.tag());
 }

@@ -20,6 +20,17 @@ impl StampSet {
         self.stamps.len()
     }
 
+    /// Grow to at least `capacity` slots (no-op when already large
+    /// enough). New slots carry stamp 0, which is never a live epoch
+    /// after [`clear`] has run, so existing marks stay valid.
+    ///
+    /// [`clear`]: StampSet::clear
+    pub fn ensure_capacity(&mut self, capacity: usize) {
+        if self.stamps.len() < capacity {
+            self.stamps.resize(capacity, 0);
+        }
+    }
+
     /// Start a new query: invalidates all marks in O(1) (with a rare O(n)
     /// reset when the 32-bit epoch wraps).
     pub fn clear(&mut self) {
@@ -81,6 +92,20 @@ mod tests {
         for i in 0..4 {
             assert!(!s.contains(i));
         }
+    }
+
+    #[test]
+    fn ensure_capacity_grows_and_keeps_marks() {
+        let mut s = StampSet::new(4);
+        s.clear();
+        s.insert(3);
+        s.ensure_capacity(10);
+        assert_eq!(s.capacity(), 10);
+        assert!(s.contains(3), "existing marks survive growth");
+        assert!(!s.contains(9));
+        assert!(s.insert(9));
+        s.ensure_capacity(2); // never shrinks
+        assert_eq!(s.capacity(), 10);
     }
 
     #[test]

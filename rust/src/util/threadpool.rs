@@ -65,9 +65,12 @@ where
     let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
     // Hand out items with their index through a locked iterator so uneven
-    // work (e.g. LSH builds with different L) balances dynamically.
+    // work (e.g. LSH builds with different L) balances dynamically. The
+    // queue lock hands each index to exactly one worker, so result writes
+    // are disjoint by construction — workers write their slot through a
+    // shared raw pointer instead of serializing behind a results mutex.
     let queue = std::sync::Mutex::new(items.into_iter().enumerate());
-    let slots_ptr = std::sync::Mutex::new(&mut slots);
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let queue = &queue;
@@ -78,7 +81,13 @@ where
                 match next {
                     Some((i, item)) => {
                         let out = f(item);
-                        slots_ptr.lock().unwrap()[i] = Some(out);
+                        // SAFETY: i < n (enumerate over n items), each i is
+                        // yielded once under the queue lock, and the scope
+                        // joins all workers before `slots` is read again —
+                        // no aliasing writes, no use-after-free. The old
+                        // value is always `None`, so skipping its drop via
+                        // `write` leaks nothing.
+                        unsafe { slots_ptr.0.add(i).write(Some(out)) };
                     }
                     None => break,
                 }
@@ -87,6 +96,13 @@ where
     });
     slots.into_iter().map(|s| s.expect("worker died")).collect()
 }
+
+/// Raw-pointer wrapper that asserts cross-thread shareability; sound here
+/// because `parallel_map` guarantees disjoint writes and join-before-read.
+struct SendPtr<U>(*mut U);
+
+unsafe impl<U: Send> Send for SendPtr<U> {}
+unsafe impl<U: Send> Sync for SendPtr<U> {}
 
 #[cfg(test)]
 mod tests {
@@ -130,6 +146,25 @@ mod tests {
         let items: Vec<usize> = (0..1000).collect();
         let out = parallel_map(items, 8, |x| x * 2);
         assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_disjoint_writes_with_owned_results() {
+        // Heap-owning results + uneven per-item work: exercises the
+        // raw-pointer disjoint-write path under real contention.
+        let items: Vec<usize> = (0..500).collect();
+        let out = parallel_map(items, 8, |x| {
+            let mut s = String::new();
+            for i in 0..(x % 17) {
+                s.push_str(&i.to_string());
+            }
+            (x, s)
+        });
+        for (i, (x, s)) in out.iter().enumerate() {
+            assert_eq!(*x, i);
+            let expect: String = (0..(i % 17)).map(|v| v.to_string()).collect();
+            assert_eq!(*s, expect);
+        }
     }
 
     #[test]

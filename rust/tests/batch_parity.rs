@@ -1,0 +1,174 @@
+//! Batched-pipeline parity: every batched entry point must return
+//! results IDENTICAL (bit-for-bit on distances) to its sequential
+//! counterpart, across metrics, batch sizes (including 1 and
+//! non-multiples of the kernel tiles), and shard/core partitionings.
+//!
+//! The batched path is a pure performance lever — these tests are the
+//! contract that it never changes an answer.
+
+use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{DistanceEngine, Metric};
+use dslsh::knn::exhaustive::{pknn_query, pknn_query_batch};
+use dslsh::knn::TopK;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::slsh::{BatchOutput, QueryScratch, SlshIndex, SlshParams};
+use dslsh::util::rng::Xoshiro256;
+use dslsh::util::stamp::StampSet;
+
+fn corpus() -> Corpus {
+    build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 4000, 60, 91))
+}
+
+/// Engine-level: scan_batch over an arbitrary id list == per-query scan,
+/// exactly, for both metrics and a sweep of batch sizes.
+#[test]
+fn engine_scan_batch_parity_sweep() {
+    let dim = 30;
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let n = 2000;
+    let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.1)).collect();
+    let engine = NativeEngine::new();
+    let ids: Vec<u32> = (0..n as u32).filter(|i| i % 3 != 0).collect();
+    for metric in [Metric::L1, Metric::Cosine] {
+        for nq in [1usize, 2, 3, 4, 5, 8, 13, 32] {
+            let qs: Vec<f32> =
+                (0..nq * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+            let mut batched: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+            let total = engine.scan_batch(metric, &qs, &data, dim, &ids, &labels, 0, &mut batched);
+            assert_eq!(total, (nq * ids.len()) as u64);
+            for qi in 0..nq {
+                let mut seq = TopK::new(10);
+                let c = engine.scan(
+                    metric,
+                    &qs[qi * dim..(qi + 1) * dim],
+                    &data,
+                    dim,
+                    &ids,
+                    &labels,
+                    0,
+                    &mut seq,
+                );
+                assert_eq!(c, ids.len() as u64);
+                assert_eq!(
+                    batched[qi].clone().into_sorted(),
+                    seq.into_sorted(),
+                    "metric={metric:?} nq={nq} qi={qi}"
+                );
+            }
+        }
+    }
+}
+
+/// PKNN: batched exhaustive results equal sequential for every metric,
+/// batch size and processor partitioning.
+#[test]
+fn pknn_batch_parity_across_partitionings() {
+    let c = corpus();
+    let engine = NativeEngine::new();
+    let dim = c.data.dim;
+    for metric in [Metric::L1, Metric::Cosine] {
+        for procs in [1usize, 3, 8, 13] {
+            for nq in [1usize, 4, 7] {
+                let block = &c.queries.points[..nq * dim];
+                let batch = pknn_query_batch(
+                    &engine, metric, block, &c.data.points, dim, &c.data.labels, 10, procs,
+                );
+                for qi in 0..nq {
+                    let seq = pknn_query(
+                        &engine,
+                        metric,
+                        c.queries.point(qi),
+                        &c.data.points,
+                        dim,
+                        &c.data.labels,
+                        10,
+                        procs,
+                    );
+                    assert_eq!(
+                        batch[qi].neighbors, seq.neighbors,
+                        "metric={metric:?} procs={procs} nq={nq} qi={qi}"
+                    );
+                    assert_eq!(batch[qi].comparisons, seq.comparisons);
+                }
+            }
+        }
+    }
+}
+
+/// Index-level: query_batch == query across LSH-only and stratified
+/// parameterizations AND across table partitionings (each core's table
+/// subset resolves batches identically to its sequential path).
+#[test]
+fn slsh_index_batch_parity_across_table_shards() {
+    let c = corpus();
+    let (lo, hi) = c.data.value_range();
+    let params = SlshParams::lsh_only(LayerSpec::outer_l1(c.data.dim, 36, 12, lo, hi, 3), 10);
+    let engine = NativeEngine::new();
+    for p in [1usize, 4] {
+        for core in 0..p {
+            let mine: Vec<usize> = (0..12).filter(|t| t % p == core).collect();
+            let idx = SlshIndex::build(&params, &c.data, &mine);
+            let mut scratch = QueryScratch::new(c.data.len());
+            let mut out = BatchOutput::new();
+            let mut visited = StampSet::new(c.data.len());
+            let mut cand = Vec::new();
+            for nq in [1usize, 5, 6] {
+                let block = &c.queries.points[..nq * c.data.dim];
+                idx.query_batch(
+                    &engine,
+                    block,
+                    &c.data.points,
+                    &c.data.labels,
+                    0,
+                    &mut scratch,
+                    &mut out,
+                );
+                for qi in 0..nq {
+                    let seq = idx.query(
+                        &engine,
+                        c.queries.point(qi),
+                        &c.data.points,
+                        &c.data.labels,
+                        0,
+                        &mut visited,
+                        &mut cand,
+                    );
+                    assert_eq!(out.stats(qi), seq.stats, "p={p} core={core} qi={qi}");
+                    assert_eq!(out.neighbors(qi), seq.topk.into_sorted().as_slice());
+                }
+            }
+        }
+    }
+}
+
+/// Cluster-level: the Orchestrator's batched admission returns the same
+/// neighbors, predictions and comparison counts as sequential queries,
+/// across (ν, p) topologies.
+#[test]
+fn cluster_query_batch_parity_across_topologies() {
+    let c = corpus();
+    let (lo, hi) = c.data.value_range();
+    let params = SlshParams::lsh_only(LayerSpec::outer_l1(c.data.dim, 40, 16, lo, hi, 13), 10);
+    for (nu, p) in [(1usize, 1usize), (2, 2), (3, 1)] {
+        let cluster = build_cluster(&c.data, &params, &ClusterConfig::new(nu, p)).unwrap();
+        // Sequential reference.
+        let sequential: Vec<_> = (0..24).map(|i| cluster.query(c.queries.point(i))).collect();
+        // Batched, in blocks of 1 / 7 / 16 (stragglers included).
+        let mut batched = Vec::new();
+        for block in [(0usize, 1usize), (1, 8), (8, 24)] {
+            let qs: Vec<&[f32]> = (block.0..block.1).map(|i| c.queries.point(i)).collect();
+            batched.extend(cluster.query_batch(&qs));
+        }
+        assert_eq!(batched.len(), sequential.len());
+        for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+            assert_eq!(b.neighbors, s.neighbors, "nu={nu} p={p} query {i}");
+            assert_eq!(b.prediction, s.prediction);
+            assert!((b.positive_share - s.positive_share).abs() < 1e-12);
+            assert_eq!(b.max_comparisons, s.max_comparisons);
+            assert_eq!(b.per_node_comparisons, s.per_node_comparisons);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so DSLSH vendors the
+//! subset of `anyhow` it actually uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics follow the real crate where DSLSH depends on them:
+//!
+//! * `{e}` displays the outermost context (or the root message);
+//! * `{e:#}` displays the whole chain, outermost first, `": "`-separated;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error with a stack of human-readable context frames.
+pub struct Error {
+    root: Box<dyn StdError + Send + Sync + 'static>,
+    /// Context frames, innermost first (index 0 was attached first).
+    context: Vec<String>,
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Wrap a displayable message as an error.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { root: Box::new(MessageError(message.to_string())), context: Vec::new() }
+    }
+
+    /// Wrap a concrete error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { root: Box::new(error), context: Vec::new() }
+    }
+
+    /// Attach a context frame (becomes the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.context.push(ctx.to_string());
+        self
+    }
+
+    /// The root cause, for downcasting-free inspection.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        &*self.root
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for ctx in self.context.iter().rev() {
+                write!(f, "{ctx}: ")?;
+            }
+            write!(f, "{}", self.root)
+        } else {
+            match self.context.last() {
+                Some(ctx) => write!(f, "{ctx}"),
+                None => write!(f, "{}", self.root),
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")?;
+        if !self.context.is_empty() {
+            write!(f, "\n\nCaused by:\n    {}", self.root)?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chain_formats_like_anyhow() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("reading config").unwrap_err().context("starting up");
+        assert_eq!(format!("{e}"), "starting up");
+        assert_eq!(format!("{e:#}"), "starting up: reading config: missing file");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let v = ok.with_context(|| -> String { unreachable!("must not evaluate") });
+        assert_eq!(v.unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+}

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + full test suite (see ROADMAP.md).
+# Usage: scripts/tier1.sh  (run from the repository root; CI entry point)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
