@@ -7,16 +7,29 @@
 //! * Layer 3: Rust cluster (ν=2 nodes × p=4 cores) behind the
 //!   Root/Forwarder/Reducer orchestrator.
 //!
-//! Workload: 30k-point AHE-51-5c corpus, 200 sequential ICU queries
+//! Workload: 30k-point AHE-51-5c corpus, 600 sequential ICU queries
 //! (latency-oriented, one in flight). Reports per-query latency
 //! percentiles, comparisons vs PKNN, and prediction MCC vs the exhaustive
-//! baseline.
+//! baseline, then batched-admission throughput, then a **mixed
+//! ICU/analytics workload** through the deadline-aware admission queue:
+//! several low-latency monitor threads (tight budgets, one query in
+//! flight each) share the cluster with bulk analytics submitters (loose
+//! budgets, deep bursts). The admission cutter coalesces both classes
+//! into shared cuts — a batch dispatches when it fills or when the most
+//! urgent pending deadline expires, so analytics ride along with monitor
+//! traffic instead of head-of-line blocking it (one batch is in flight
+//! at a time, so a monitor can still wait out at most one in-flight
+//! batch beyond its budget — see the admission module docs). The tail prints
+//! per-class latency percentiles and the cut-reason mix (fill vs
+//! deadline), the primary health signal for a latency-bound cluster.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example icu_serving
 //! ```
 
-use dslsh::coordinator::{build_cluster, ClusterConfig, EngineKind};
+use std::time::{Duration, Instant};
+
+use dslsh::coordinator::{build_cluster, AdmissionConfig, ClusterConfig, EngineKind};
 use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
 use dslsh::data::WindowSpec;
 use dslsh::knn::predict::VoteConfig;
@@ -35,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     // ~10% MCC-loss operating point (paper's Table 3 configuration).
     let params = outer_params(&corpus.data, 200, 96, 42, 10);
     let t_build = std::time::Instant::now();
-    let cluster = match build_cluster(
+    let mut cluster = match build_cluster(
         &corpus.data,
         &params,
         &ClusterConfig::new(nu, p).with_engine(EngineKind::Xla),
@@ -114,5 +127,95 @@ fn main() -> anyhow::Result<()> {
             (served as f64 / dt) / (corpus.queries.len() as f64 / serve_s)
         );
     }
+
+    // Mixed ICU/analytics admission: independent callers share one
+    // cluster through the deadline-aware admission queue. Monitors
+    // submit one query at a time under a tight budget; analytics bursts
+    // ride the same cuts under a loose one. Results are bit-identical to
+    // sequential queries (see rust/tests/admission_parity.rs) — what
+    // moves is who waits for whom.
+    println!();
+    println!("== mixed ICU/analytics admission (max_batch=16) ==");
+    let monitors = 4usize;
+    let analysts = 2usize;
+    let budget_monitor = Duration::from_millis(2);
+    let budget_analytics = Duration::from_millis(50);
+    let q_total = corpus.queries.len();
+    let per_monitor = (q_total / 2 / monitors).max(1);
+    let per_analyst = (q_total / 2 / analysts).max(1);
+    cluster
+        .orchestrator
+        .enable_admission(AdmissionConfig::new(corpus.data.dim, 16).with_queue_cap(256));
+    let orch = &cluster.orchestrator;
+    let (monitor_lat, analytics_lat): (Vec<f64>, Vec<f64>) = std::thread::scope(|s| {
+        let monitor_handles: Vec<_> = (0..monitors)
+            .map(|t| {
+                let corpus = &corpus;
+                s.spawn(move || {
+                    // Closed loop: a bedside monitor has one window in
+                    // flight at a time.
+                    let mut lat = Vec::with_capacity(per_monitor);
+                    for j in 0..per_monitor {
+                        let qi = (t * per_monitor + j) % q_total;
+                        let ts = Instant::now();
+                        let ticket =
+                            orch.submit(corpus.queries.point(qi), budget_monitor).unwrap();
+                        let _ = ticket.wait().unwrap();
+                        lat.push(ts.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        let analytics_handles: Vec<_> = (0..analysts)
+            .map(|t| {
+                let corpus = &corpus;
+                s.spawn(move || {
+                    // Open-loop bursts of 16: bulk re-scoring tolerates
+                    // latency, so it queues deep and waits later.
+                    let mut lat = Vec::with_capacity(per_analyst);
+                    let mut j = 0;
+                    while j < per_analyst {
+                        let burst = (per_analyst - j).min(16);
+                        let ts = Instant::now();
+                        let tickets: Vec<_> = (0..burst)
+                            .map(|b| {
+                                let qi = (q_total / 2 + t * per_analyst + j + b) % q_total;
+                                orch.submit(corpus.queries.point(qi), budget_analytics)
+                                    .unwrap()
+                            })
+                            .collect();
+                        for ticket in tickets {
+                            let _ = ticket.wait().unwrap();
+                        }
+                        lat.push(ts.elapsed().as_secs_f64() * 1e3 / burst as f64);
+                        j += burst;
+                    }
+                    lat
+                })
+            })
+            .collect();
+        (
+            monitor_handles.into_iter().flat_map(|h| h.join().unwrap()).collect(),
+            analytics_handles.into_iter().flat_map(|h| h.join().unwrap()).collect(),
+        )
+    });
+    println!(
+        "monitors   ({monitors} threads, budget {:>3}ms)  p50 {:.2} ms   p99 {:.2} ms",
+        budget_monitor.as_millis(),
+        stats::percentile(&monitor_lat, 0.50),
+        stats::percentile(&monitor_lat, 0.99)
+    );
+    println!(
+        "analytics  ({analysts} threads, budget {:>3}ms)  p50 {:.2} ms   p99 {:.2} ms  (per query, amortized over bursts)",
+        budget_analytics.as_millis(),
+        stats::percentile(&analytics_lat, 0.50),
+        stats::percentile(&analytics_lat, 0.99)
+    );
+    let ad = orch.admission().unwrap().stats();
+    println!(
+        "admission  {} submitted, cuts: {} fill / {} deadline, queue depth high-water {}",
+        ad.submitted, ad.cuts_fill, ad.cuts_deadline, ad.high_water
+    );
     Ok(())
 }

@@ -1,0 +1,130 @@
+//! §Perf: admission-queue latency under offered load — p50/p99 caller
+//! latency and the cut-reason mix (fill vs deadline) at arrival rates
+//! spanning under- and over-subscription of the cluster.
+//!
+//! Each submitter thread paces a closed loop to a target inter-arrival
+//! interval (submit → wait → spin until the next arrival slot): at long
+//! intervals the cluster idles and lone requests ride deadline cuts; at
+//! short intervals requests pile up and fill cuts dominate while latency
+//! climbs toward the service rate. Saves results/admission_latency.csv.
+//!
+//! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and load and
+//! asserts a non-empty CSV was produced — artifact plumbing, not timing
+//! quality.
+
+use std::time::{Duration, Instant};
+
+use dslsh::coordinator::{build_cluster, AdmissionConfig, AdmissionStats, ClusterConfig};
+use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::experiments::report::Table;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::slsh::SlshParams;
+use dslsh::util::stats;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (corpus size, submitter threads, requests per thread per load,
+    //  inter-arrival intervals in µs — ∞-ish down to oversubscribed)
+    let (n, submitters, per_thread, intervals_us): (usize, usize, usize, Vec<u64>) = if smoke {
+        (4_000, 2, 20, vec![500])
+    } else {
+        (20_000, 8, 150, vec![2_000, 500, 100])
+    };
+    let max_batch = 16;
+    let budget = Duration::from_millis(5);
+
+    println!("== admission latency bench ({} mode) ==", if smoke { "smoke" } else { "full" });
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), n, 200, 42));
+    let (lo, hi) = corpus.data.value_range();
+    let params =
+        SlshParams::lsh_only(LayerSpec::outer_l1(corpus.data.dim, 60, 24, lo, hi, 7), 10);
+    let mut cluster =
+        build_cluster(&corpus.data, &params, &ClusterConfig::new(2, 2)).expect("cluster");
+
+    let mut table = Table::new(
+        format!(
+            "Admission latency vs offered load — nu=2 x p=2, max_batch={max_batch}, \
+             budget {}ms, {submitters} submitters",
+            budget.as_millis()
+        ),
+        &[
+            "interval_us",
+            "offered q/s",
+            "achieved q/s",
+            "p50 ms",
+            "p99 ms",
+            "cuts fill",
+            "cuts deadline",
+            "depth hw",
+        ],
+    );
+
+    for &interval_us in &intervals_us {
+        // Fresh queue per load point: counters (including the depth
+        // high-water gauge, which never resets) describe THIS load only.
+        cluster.orchestrator.enable_admission(
+            AdmissionConfig::new(corpus.data.dim, max_batch).with_queue_cap(4096),
+        );
+        let orch = &cluster.orchestrator;
+        let interval = Duration::from_micros(interval_us);
+        let t0 = Instant::now();
+        let latencies_ms: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..submitters)
+                .map(|t| {
+                    let corpus = &corpus;
+                    s.spawn(move || {
+                        let mut lat = Vec::with_capacity(per_thread);
+                        for j in 0..per_thread {
+                            // Closed loop with pacing: hold the offered
+                            // rate while the cluster keeps up; degrade to
+                            // saturation beyond it.
+                            let due = t0 + interval * j as u32;
+                            while Instant::now() < due {
+                                std::hint::spin_loop();
+                            }
+                            let qi = (t * per_thread + j) % corpus.queries.len();
+                            let ts = Instant::now();
+                            let ticket = orch
+                                .submit(corpus.queries.point(qi), budget)
+                                .expect("admission rejected");
+                            let r = ticket.wait().expect("ticket canceled");
+                            lat.push(ts.elapsed().as_secs_f64() * 1e3);
+                            std::hint::black_box(r.max_comparisons);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        let snap: AdmissionStats = orch.admission().unwrap().stats();
+        let offered = submitters as f64 * 1e6 / interval_us as f64;
+        table.row(vec![
+            interval_us.to_string(),
+            format!("{offered:.0}"),
+            format!("{:.0}", latencies_ms.len() as f64 / elapsed),
+            format!("{:.2}", stats::percentile(&latencies_ms, 0.50)),
+            format!("{:.2}", stats::percentile(&latencies_ms, 0.99)),
+            snap.cuts_fill.to_string(),
+            snap.cuts_deadline.to_string(),
+            snap.high_water.to_string(),
+        ]);
+    }
+
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "admission_latency").expect("saving csv");
+
+    // The bench's contract with CI: it produced a CSV with at least one
+    // data row (timing numbers are machine-dependent and NOT asserted).
+    let csv = std::fs::read_to_string("results/admission_latency.csv")
+        .expect("results/admission_latency.csv must exist");
+    assert!(
+        csv.lines().count() >= 2,
+        "admission_latency.csv must contain a header and at least one data row"
+    );
+    println!(
+        "[admission_latency] -> results/admission_latency.csv{}",
+        if smoke { " (smoke: CSV verified non-empty)" } else { "" }
+    );
+}

@@ -1,0 +1,932 @@
+//! Deadline-aware async admission queue for the batched query path.
+//!
+//! The paper's ICU use case prioritizes latency over throughput, but after
+//! the batched pipeline landed, the cluster only saw a batch when a single
+//! caller handed [`Orchestrator::query_batch`] a pre-formed block —
+//! concurrent ICU monitors each paid the full per-dispatch cost and never
+//! shared a scan. This module is the admission layer that coalesces
+//! *independent* callers into batches under a latency budget:
+//!
+//! * Callers [`submit`](AdmissionQueue::submit) one query plus a latency
+//!   budget and get a [`Ticket`] back; [`Ticket::wait`] blocks on a
+//!   per-request one-shot completion slot ([`completion_slot`]) — the
+//!   reply path is lock-free (atomic state + `thread::park`, no mutex).
+//! * A dedicated **cutter** thread watches the bounded FIFO and dispatches
+//!   a batch when it reaches `max_batch` ([`CutReason::Fill`]) **or** the
+//!   earliest pending deadline expires ([`CutReason::Deadline`]) —
+//!   whichever comes first. A deadline cut always takes *every* pending
+//!   request (pending < `max_batch`, else it would have fill-cut), so the
+//!   most urgent request is always in the batch it triggers.
+//! * The queue is bounded: when `queue_cap` requests are pending,
+//!   [`submit`](AdmissionQueue::submit) blocks and
+//!   [`try_submit`](AdmissionQueue::try_submit) returns
+//!   [`AdmissionError::QueueFull`] — backpressure, never silent drops.
+//! * Shutdown (dropping the queue) drains: every in-flight request is
+//!   dispatched in [`CutReason::Drain`] cuts before the cutter exits, so
+//!   no ticket is ever left hanging.
+//!
+//! Dispatch rides [`Orchestrator::query_batch`]'s flat-block path, so a
+//! coalesced batch reuses the per-core `QueryScratch`/`BatchOutput` arenas
+//! downstream exactly like a caller-formed block, and the remaining budget
+//! of the most urgent request travels with the cut (the TCP wire ships it
+//! in a `QueryBatchBudget` frame so remote nodes can honor the same cut).
+//!
+//! **Determinism.** The cutter never reads the wall clock directly: it
+//! takes a [`Clock`] (real [`SystemClock`] or test [`MockClock`]), and the
+//! optional per-request deadline jitter (used to de-synchronize fleets of
+//! periodic monitors) draws from an RNG seeded by
+//! [`AdmissionConfig::seed`] — every batching decision is a pure function
+//! of (submission order, clock readings, seed), reproducible in tests
+//! with no sleeps. Observability is shared with the rest of the serving
+//! stack: queue depth through [`QueueStats`] and the cut-reason mix
+//! through [`CutCounters`], both defined in
+//! [`crate::runtime::service`].
+//!
+//! **Known limit: one batch in flight.** The cutter dispatches
+//! synchronously (the Root resolves one batch at a time anyway), so a
+//! deadline falling due *while a batch is on the cluster* fires only
+//! when the dispatch returns — under sustained load a tight budget can
+//! be overrun by up to one batch service time, and the overrun is not
+//! distinguished in the counters (the cut is still recorded as
+//! `Deadline`). Budgets are therefore targets the cutter never
+//! *undershoots*, not hard guarantees; pipelined dispatch / priority
+//! lanes are the follow-up that tightens this (see ROADMAP).
+//!
+//! This queue is the architectural seam all later scheduling work
+//! (priority classes, NUMA pinning) plugs into: those features change
+//! *which* requests a cut takes, not how callers submit or wait.
+//!
+//! [`Orchestrator::query_batch`]: crate::coordinator::Orchestrator::query_batch
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::orchestrator::QueryResult;
+use crate::runtime::service::{CutCounters, QueueStats};
+use crate::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// Monotonic time source for batching decisions. Injecting it is what
+/// makes every cutter decision reproducible in tests.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since an arbitrary fixed origin. Must be monotone.
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: monotonic nanoseconds since construction.
+#[derive(Debug)]
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { origin: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> SystemClock {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// Test clock: time only moves when the test says so.
+#[derive(Debug, Default)]
+pub struct MockClock {
+    ns: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new(start_ns: u64) -> MockClock {
+        MockClock { ns: AtomicU64::new(start_ns) }
+    }
+
+    pub fn set_ns(&self, t: u64) {
+        self.ns.store(t, Ordering::SeqCst);
+    }
+
+    pub fn advance_ns(&self, d: u64) {
+        self.ns.fetch_add(d, Ordering::SeqCst);
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.advance_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One-shot completion slot (the lock-free reply path)
+// ---------------------------------------------------------------------------
+
+const SLOT_EMPTY: u8 = 0;
+const SLOT_WAITING: u8 = 1;
+const SLOT_FULL: u8 = 2;
+const SLOT_CLOSED: u8 = 3;
+
+struct OneShot<T> {
+    state: AtomicU8,
+    value: UnsafeCell<Option<T>>,
+    waiter: UnsafeCell<Option<std::thread::Thread>>,
+}
+
+// SAFETY: the cells are only touched under the state-machine protocol
+// below — `value` is written by the single writer before the Release
+// transition to FULL and read by the single reader after an Acquire load
+// of FULL; `waiter` is written by the single reader before its Release
+// CAS to WAITING and read by the single writer only after an Acquire
+// observation of WAITING. `SlotWriter`/`SlotReader` are not Clone and
+// their operations consume `self`, so single-writer/single-reader holds
+// in safe code.
+unsafe impl<T: Send> Send for OneShot<T> {}
+unsafe impl<T: Send> Sync for OneShot<T> {}
+
+/// Producer half of a one-shot completion slot.
+pub struct SlotWriter<T>(Arc<OneShot<T>>);
+
+/// Consumer half of a one-shot completion slot.
+pub struct SlotReader<T>(Arc<OneShot<T>>);
+
+/// A single-producer single-consumer, one-shot, lock-free handoff cell:
+/// `fulfill` publishes a value with one atomic swap; `wait` parks the
+/// calling thread until the value (or a writer-dropped signal) arrives.
+/// This is the admission queue's reply path — no mutex is ever taken
+/// between the cutter finishing a batch and a caller waking up.
+pub fn completion_slot<T: Send>() -> (SlotWriter<T>, SlotReader<T>) {
+    let shared = Arc::new(OneShot {
+        state: AtomicU8::new(SLOT_EMPTY),
+        value: UnsafeCell::new(None),
+        waiter: UnsafeCell::new(None),
+    });
+    (SlotWriter(Arc::clone(&shared)), SlotReader(shared))
+}
+
+impl<T: Send> SlotWriter<T> {
+    /// Publish the value and wake the reader (if it is already parked).
+    pub fn fulfill(self, v: T) {
+        let s = &self.0;
+        // SAFETY: single writer, and the reader cannot touch `value`
+        // until it observes FULL (published by the swap below).
+        unsafe { *s.value.get() = Some(v) };
+        let prev = s.state.swap(SLOT_FULL, Ordering::AcqRel);
+        debug_assert!(prev == SLOT_EMPTY || prev == SLOT_WAITING, "one-shot fulfilled twice");
+        if prev == SLOT_WAITING {
+            // SAFETY: the reader wrote `waiter` before its Release CAS to
+            // WAITING, which we just Acquire-observed; it will not write
+            // again.
+            if let Some(t) = unsafe { (*s.waiter.get()).take() } {
+                t.unpark();
+            }
+        }
+        // Drop of `self` sees FULL and leaves the cell alone.
+    }
+}
+
+impl<T> Drop for SlotWriter<T> {
+    fn drop(&mut self) {
+        // Writer going away without fulfilling: close the slot so the
+        // reader unblocks with `None` instead of hanging forever.
+        let s = &self.0;
+        let mut cur = s.state.load(Ordering::Acquire);
+        loop {
+            if cur == SLOT_FULL || cur == SLOT_CLOSED {
+                return;
+            }
+            match s.state.compare_exchange(cur, SLOT_CLOSED, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => {
+                    if cur == SLOT_WAITING {
+                        // SAFETY: same visibility argument as in `fulfill`.
+                        if let Some(t) = unsafe { (*s.waiter.get()).take() } {
+                            t.unpark();
+                        }
+                    }
+                    return;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl<T: Send> SlotReader<T> {
+    /// Block until the writer fulfills the slot (`Some`) or drops without
+    /// fulfilling it (`None`).
+    pub fn wait(self) -> Option<T> {
+        let s = &self.0;
+        let mut cur = s.state.load(Ordering::Acquire);
+        if cur == SLOT_EMPTY {
+            // Register for wakeup, then re-check: the writer may have
+            // raced past between the load and the CAS.
+            // SAFETY: single reader; the writer only reads `waiter` after
+            // observing WAITING, which this CAS publishes.
+            unsafe { *s.waiter.get() = Some(std::thread::current()) };
+            match s.state.compare_exchange(
+                SLOT_EMPTY,
+                SLOT_WAITING,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => loop {
+                    cur = s.state.load(Ordering::Acquire);
+                    if cur == SLOT_FULL || cur == SLOT_CLOSED {
+                        break;
+                    }
+                    std::thread::park();
+                },
+                Err(actual) => cur = actual,
+            }
+        }
+        match cur {
+            // SAFETY: FULL was published after the writer's value store.
+            SLOT_FULL => unsafe { (*s.value.get()).take() },
+            SLOT_CLOSED => None,
+            _ => unreachable!("one-shot left in transient state"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission queue
+// ---------------------------------------------------------------------------
+
+/// Admission-layer configuration.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Query dimensionality (every submission is checked against it —
+    /// a ragged batch flattened as-if-rectangular would scan garbage).
+    pub dim: usize,
+    /// Cut a batch as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// Bounded-queue capacity; beyond it, `submit` blocks (backpressure).
+    pub queue_cap: usize,
+    /// Optional deadline jitter as a fraction of the budget (e.g. `0.1`
+    /// spreads each deadline ±10%) — de-synchronizes fleets of periodic
+    /// monitors so their cuts don't stampede. `0.0` disables it.
+    pub budget_jitter: f64,
+    /// Seed for the jitter RNG; batching decisions are reproducible from
+    /// (submission order, clock, seed).
+    pub seed: u64,
+}
+
+impl AdmissionConfig {
+    pub fn new(dim: usize, max_batch: usize) -> AdmissionConfig {
+        AdmissionConfig { dim, max_batch, queue_cap: 1024, budget_jitter: 0.0, seed: 0 }
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> AdmissionConfig {
+        self.queue_cap = cap;
+        self
+    }
+
+    pub fn with_jitter(mut self, frac: f64, seed: u64) -> AdmissionConfig {
+        self.budget_jitter = frac;
+        self.seed = seed;
+        self
+    }
+}
+
+/// Admission-layer errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// Bounded queue at capacity (only from [`AdmissionQueue::try_submit`];
+    /// the blocking [`AdmissionQueue::submit`] waits instead).
+    QueueFull,
+    /// The queue is shutting down; the request was not admitted.
+    ShuttingDown,
+    /// The request was admitted but the dispatcher died before resolving
+    /// it (only during teardown of the underlying cluster).
+    Canceled,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull => write!(f, "admission queue full"),
+            AdmissionError::ShuttingDown => write!(f, "admission queue shutting down"),
+            AdmissionError::Canceled => write!(f, "request canceled during teardown"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Why the cutter dispatched a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CutReason {
+    /// `max_batch` requests were pending.
+    Fill,
+    /// The earliest pending deadline expired.
+    Deadline,
+    /// Shutdown drained the residue.
+    Drain,
+}
+
+/// A caller's handle to one submitted query.
+#[must_use = "dropping a Ticket discards the query result"]
+pub struct Ticket {
+    reader: SlotReader<Result<QueryResult, AdmissionError>>,
+}
+
+impl Ticket {
+    /// Block until the batch containing this request has been resolved.
+    pub fn wait(self) -> Result<QueryResult, AdmissionError> {
+        self.reader.wait().unwrap_or(Err(AdmissionError::Canceled))
+    }
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Ticket(..)")
+    }
+}
+
+/// Counter snapshot (see [`AdmissionQueue::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Requests currently pending (admitted, not yet cut).
+    pub depth: usize,
+    /// Maximum pending depth ever observed.
+    pub high_water: usize,
+    /// Total requests admitted.
+    pub submitted: u64,
+    /// Total requests taken into a dispatched batch.
+    pub completed: u64,
+    /// `try_submit` rejections due to a full queue.
+    pub rejected_full: u64,
+    pub cuts_fill: u64,
+    pub cuts_deadline: u64,
+    pub cuts_drain: u64,
+}
+
+struct Pending {
+    q: Vec<f32>,
+    deadline_ns: u64,
+    slot: SlotWriter<Result<QueryResult, AdmissionError>>,
+}
+
+struct State {
+    pending: VecDeque<Pending>,
+    shutdown: bool,
+    jitter_rng: Xoshiro256,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes the cutter: new submission or shutdown.
+    cutter_wake: Condvar,
+    /// Wakes blocked submitters: a cut freed queue space (or shutdown).
+    space_free: Condvar,
+    clock: Arc<dyn Clock>,
+    queue: Arc<QueueStats>,
+    cuts: Arc<CutCounters>,
+    cfg: AdmissionConfig,
+}
+
+/// The admission queue: bounded submission FIFO + deadline-aware cutter
+/// thread. See the [module docs](self) for the full contract.
+pub struct AdmissionQueue {
+    shared: Arc<Shared>,
+    cutter: Option<JoinHandle<()>>,
+}
+
+/// Effective budget in nanoseconds after jitter. Pure so tests can prove
+/// reproducibility: the same seed yields the same deadline stream.
+fn jittered_budget_ns(budget: Duration, jitter_frac: f64, rng: &mut Xoshiro256) -> u64 {
+    let base = budget.as_nanos().min(u64::MAX as u128) as u64;
+    if jitter_frac <= 0.0 {
+        return base;
+    }
+    let f = rng.gen_f64(-jitter_frac, jitter_frac);
+    let delta = (base as f64 * f) as i64;
+    if delta >= 0 {
+        base.saturating_add(delta as u64)
+    } else {
+        base.saturating_sub(delta.unsigned_abs())
+    }
+}
+
+/// The cut decision — a pure function of (queue state, `max_batch`, now).
+/// `None` means keep waiting. A deadline cut fires on the *earliest*
+/// deadline among pending requests (not merely the FIFO front: a tight
+/// budget submitted behind a loose one must still be honored); since
+/// `pending < max_batch` whenever a deadline cut fires, it takes the
+/// whole queue and the urgent request always rides the cut it triggered.
+fn take_cut(st: &mut State, max_batch: usize, now_ns: u64) -> Option<(Vec<Pending>, CutReason)> {
+    if st.pending.is_empty() {
+        return None;
+    }
+    // The deadline scan is only paid on the not-full path, where
+    // `pending < max_batch` bounds it; a fill cut never reads deadlines.
+    let reason = if st.pending.len() >= max_batch {
+        CutReason::Fill
+    } else if st.shutdown {
+        CutReason::Drain
+    } else if st.pending.iter().map(|p| p.deadline_ns).min().unwrap() <= now_ns {
+        CutReason::Deadline
+    } else {
+        return None;
+    };
+    let n = st.pending.len().min(max_batch);
+    Some((st.pending.drain(..n).collect(), reason))
+}
+
+impl AdmissionQueue {
+    /// Start the queue with the production clock. `dispatch` resolves one
+    /// flat row-major block (`nq × dim` floats, plus the remaining budget
+    /// in µs of the batch's most urgent request, saturating to 0 once the
+    /// deadline has passed) and returns exactly `nq` results in order.
+    pub fn start<D>(cfg: AdmissionConfig, dispatch: D) -> AdmissionQueue
+    where
+        D: FnMut(Vec<f32>, usize, u64) -> Vec<QueryResult> + Send + 'static,
+    {
+        AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(SystemClock::new()))
+    }
+
+    /// Start with an injected [`Clock`] (tests use [`MockClock`]).
+    pub fn start_with_clock<D>(
+        cfg: AdmissionConfig,
+        mut dispatch: D,
+        clock: Arc<dyn Clock>,
+    ) -> AdmissionQueue
+    where
+        D: FnMut(Vec<f32>, usize, u64) -> Vec<QueryResult> + Send + 'static,
+    {
+        assert!(cfg.dim > 0, "admission dim must be positive");
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        assert!(cfg.queue_cap > 0, "queue_cap must be positive");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                pending: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
+                shutdown: false,
+                jitter_rng: Xoshiro256::seed_from_u64(cfg.seed),
+            }),
+            cutter_wake: Condvar::new(),
+            space_free: Condvar::new(),
+            clock,
+            queue: Arc::new(QueueStats::new()),
+            cuts: Arc::new(CutCounters::new()),
+            cfg,
+        });
+        let shared_c = Arc::clone(&shared);
+        let cutter = std::thread::Builder::new()
+            .name("admission-cutter".into())
+            .spawn(move || {
+                let shared = shared_c;
+                let max_batch = shared.cfg.max_batch;
+                loop {
+                    // Phase 1 (locked): wait for a cut to become due.
+                    let cut = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            let now = shared.clock.now_ns();
+                            if let Some(c) = take_cut(&mut st, max_batch, now) {
+                                break Some((c, now));
+                            }
+                            if st.shutdown {
+                                // take_cut drains any residue before this
+                                // arm can be reached.
+                                debug_assert!(st.pending.is_empty());
+                                break None;
+                            }
+                            match st.pending.iter().map(|p| p.deadline_ns).min() {
+                                None => st = shared.cutter_wake.wait(st).unwrap(),
+                                Some(dl) => {
+                                    // dl > now, else take_cut would have
+                                    // deadline-cut above.
+                                    let wait = Duration::from_nanos(dl - now);
+                                    let (g, _) =
+                                        shared.cutter_wake.wait_timeout(st, wait).unwrap();
+                                    st = g;
+                                }
+                            }
+                        }
+                    };
+                    let Some(((batch, reason), now)) = cut else { return };
+                    shared.queue.on_dequeue(batch.len());
+                    shared.space_free.notify_all();
+                    match reason {
+                        CutReason::Fill => shared.cuts.record_fill(),
+                        CutReason::Deadline => shared.cuts.record_deadline(),
+                        CutReason::Drain => shared.cuts.record_drain(),
+                    }
+
+                    // Phase 2 (unlocked): flatten, dispatch, fulfill.
+                    let nq = batch.len();
+                    let budget_us = batch
+                        .iter()
+                        .map(|p| p.deadline_ns)
+                        .min()
+                        .map(|dl| dl.saturating_sub(now) / 1_000)
+                        .unwrap_or(0);
+                    let mut flat = Vec::with_capacity(nq * shared.cfg.dim);
+                    for p in &batch {
+                        flat.extend_from_slice(&p.q);
+                    }
+                    let results = dispatch(flat, nq, budget_us);
+                    if results.len() == nq {
+                        for (p, r) in batch.into_iter().zip(results) {
+                            p.slot.fulfill(Ok(r));
+                        }
+                    } else {
+                        // Dispatcher died (cluster teardown): fail the
+                        // whole batch rather than misalign replies.
+                        for p in batch {
+                            p.slot.fulfill(Err(AdmissionError::Canceled));
+                        }
+                    }
+                }
+            })
+            .expect("spawn admission cutter");
+        AdmissionQueue { shared, cutter: Some(cutter) }
+    }
+
+    /// Admit one query with a latency budget, blocking while the queue is
+    /// at capacity. The deadline is `now + budget` (± configured jitter).
+    pub fn submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
+        self.submit_inner(q, budget, true)
+    }
+
+    /// Non-blocking admission: `Err(QueueFull)` instead of waiting.
+    pub fn try_submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
+        self.submit_inner(q, budget, false)
+    }
+
+    fn submit_inner(
+        &self,
+        q: &[f32],
+        budget: Duration,
+        block: bool,
+    ) -> Result<Ticket, AdmissionError> {
+        assert_eq!(q.len(), self.shared.cfg.dim, "query dimension mismatch");
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return Err(AdmissionError::ShuttingDown);
+            }
+            if st.pending.len() < self.shared.cfg.queue_cap {
+                break;
+            }
+            if !block {
+                self.shared.queue.on_reject();
+                return Err(AdmissionError::QueueFull);
+            }
+            st = self.shared.space_free.wait(st).unwrap();
+        }
+        let now = self.shared.clock.now_ns();
+        let eff = jittered_budget_ns(budget, self.shared.cfg.budget_jitter, &mut st.jitter_rng);
+        let deadline_ns = now.saturating_add(eff);
+        let (writer, reader) = completion_slot();
+        st.pending.push_back(Pending { q: q.to_vec(), deadline_ns, slot: writer });
+        self.shared.queue.on_enqueue(1);
+        drop(st);
+        self.shared.cutter_wake.notify_one();
+        Ok(Ticket { reader })
+    }
+
+    /// Counter snapshot: queue depth + cut-reason mix.
+    pub fn stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            depth: self.shared.queue.depth(),
+            high_water: self.shared.queue.high_water(),
+            submitted: self.shared.queue.enqueued(),
+            completed: self.shared.queue.dequeued(),
+            rejected_full: self.shared.queue.rejected(),
+            cuts_fill: self.shared.cuts.fill(),
+            cuts_deadline: self.shared.cuts.deadline(),
+            cuts_drain: self.shared.cuts.drain(),
+        }
+    }
+
+    /// Live queue gauges (shared handle; survives the queue, so tests and
+    /// dashboards can inspect the final state after shutdown).
+    pub fn queue_stats(&self) -> Arc<QueueStats> {
+        Arc::clone(&self.shared.queue)
+    }
+
+    /// Live cut-reason counters (shared handle, see [`queue_stats`]).
+    ///
+    /// [`queue_stats`]: AdmissionQueue::queue_stats
+    pub fn cut_counters(&self) -> Arc<CutCounters> {
+        Arc::clone(&self.shared.cuts)
+    }
+}
+
+impl Drop for AdmissionQueue {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        // Wake everyone: the cutter to drain, blocked submitters to bail.
+        self.shared.cutter_wake.notify_all();
+        self.shared.space_free.notify_all();
+        if let Some(j) = self.cutter.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Build the dispatcher closure that ships a cut to an Orchestrator root
+/// channel and waits for the reduced results (one reply per query, in
+/// order). Lives here so [`Orchestrator::enable_admission`] stays a
+/// two-liner.
+///
+/// [`Orchestrator::enable_admission`]: crate::coordinator::Orchestrator::enable_admission
+pub(crate) fn root_dispatcher(
+    root_tx: Sender<crate::coordinator::orchestrator::RootRequest>,
+) -> impl FnMut(Vec<f32>, usize, u64) -> Vec<QueryResult> + Send + 'static {
+    use crate::coordinator::orchestrator::RootRequest;
+    move |qs: Vec<f32>, nq: usize, budget_us: u64| -> Vec<QueryResult> {
+        let (tx, rx) = channel();
+        if root_tx.send(RootRequest::Batch { qs, nq, budget_us, reply_to: tx }).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(deadline_ns: u64) -> Pending {
+        let (writer, _reader) = completion_slot();
+        Pending { q: vec![0.0], deadline_ns, slot: writer }
+    }
+
+    fn state(deadlines: &[u64], shutdown: bool) -> State {
+        State {
+            pending: deadlines.iter().map(|&d| pending(d)).collect(),
+            shutdown,
+            jitter_rng: Xoshiro256::seed_from_u64(0),
+        }
+    }
+
+    /// Fake dispatcher that echoes each query's first coordinate back in
+    /// `positive_share` — proves result↔caller alignment end to end.
+    fn echo(flat: Vec<f32>, nq: usize, _budget_us: u64) -> Vec<QueryResult> {
+        let dim = if nq == 0 { 0 } else { flat.len() / nq };
+        (0..nq)
+            .map(|i| QueryResult {
+                qid: i as u64,
+                neighbors: Vec::new(),
+                positive_share: flat[i * dim] as f64,
+                prediction: false,
+                max_comparisons: 0,
+                per_node_comparisons: Vec::new(),
+                latency_s: 0.0,
+            })
+            .collect()
+    }
+
+    // -- table-driven cut decisions (pure, MockClock-style time values) --
+
+    #[test]
+    fn cut_decision_table() {
+        // (deadlines, shutdown, max_batch, now) -> expected (len, reason).
+        let cases: &[(&[u64], bool, usize, u64, Option<(usize, CutReason)>)] = &[
+            // Empty queue never cuts, even under shutdown.
+            (&[], false, 4, 0, None),
+            (&[], true, 4, 0, None),
+            // (a) A full batch cuts immediately, no matter the deadlines.
+            (&[1000, 1000, 1000, 1000], false, 4, 0, Some((4, CutReason::Fill))),
+            // Overfull queue cuts max_batch, leaving the rest.
+            (&[1000; 6], false, 4, 0, Some((4, CutReason::Fill))),
+            // Fill wins over an expired deadline (it is the cheaper cut
+            // and the expired request rides it anyway).
+            (&[0, 1000, 1000, 1000], false, 4, 500, Some((4, CutReason::Fill))),
+            // (b) A lone request cuts exactly at its deadline: one tick
+            // before -> wait; at the deadline -> cut.
+            (&[1000], false, 4, 999, None),
+            (&[1000], false, 4, 1000, Some((1, CutReason::Deadline))),
+            (&[1000], false, 4, 1001, Some((1, CutReason::Deadline))),
+            // The EARLIEST deadline fires the cut, not the FIFO front:
+            // a tight budget submitted behind a loose one is honored.
+            (&[5000, 1000], false, 4, 1000, Some((2, CutReason::Deadline))),
+            (&[5000, 1000], false, 4, 999, None),
+            // (d) Shutdown drains a short batch without waiting for the
+            // deadline.
+            (&[1_000_000], true, 4, 0, Some((1, CutReason::Drain))),
+            (&[1_000_000; 3], true, 4, 0, Some((3, CutReason::Drain))),
+            // Shutdown with a full queue still counts as a fill cut.
+            (&[1_000_000; 4], true, 4, 0, Some((4, CutReason::Fill))),
+        ];
+        for (i, (deadlines, shutdown, max_batch, now, want)) in cases.iter().enumerate() {
+            let mut st = state(deadlines, *shutdown);
+            let got = take_cut(&mut st, *max_batch, *now);
+            match (got, want) {
+                (None, None) => {}
+                (Some((batch, reason)), Some((want_len, want_reason))) => {
+                    assert_eq!(batch.len(), *want_len, "case {i}: cut size");
+                    assert_eq!(reason, *want_reason, "case {i}: cut reason");
+                    // FIFO order is preserved within the cut.
+                    assert_eq!(
+                        st.pending.len(),
+                        deadlines.len() - want_len,
+                        "case {i}: residue"
+                    );
+                }
+                (got, want) => panic!("case {i}: got {got:?} want {want:?}", got = got.map(|(b, r)| (b.len(), r)), want = want),
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_cut_is_exact_over_mock_time_sweep() {
+        // (b) again, as a sweep: walking MockClock time one nanosecond at
+        // a time across the deadline flips the decision exactly once.
+        let clock = MockClock::new(0);
+        let deadline = 4242u64;
+        for t in deadline.saturating_sub(3)..deadline + 3 {
+            clock.set_ns(t);
+            let mut st = state(&[deadline], false);
+            let cut = take_cut(&mut st, 16, clock.now_ns());
+            assert_eq!(cut.is_some(), t >= deadline, "t={t}");
+        }
+    }
+
+    #[test]
+    fn jittered_deadlines_are_reproducible_from_seed() {
+        let budget = Duration::from_millis(10);
+        let mut a = Xoshiro256::seed_from_u64(99);
+        let mut b = Xoshiro256::seed_from_u64(99);
+        let sa: Vec<u64> = (0..32).map(|_| jittered_budget_ns(budget, 0.25, &mut a)).collect();
+        let sb: Vec<u64> = (0..32).map(|_| jittered_budget_ns(budget, 0.25, &mut b)).collect();
+        assert_eq!(sa, sb, "same seed must give the same deadline stream");
+        let base = budget.as_nanos() as u64;
+        assert!(sa.iter().any(|&x| x != base), "jitter must actually perturb");
+        for &x in &sa {
+            let lo = (base as f64 * 0.75) as u64;
+            let hi = (base as f64 * 1.25) as u64;
+            assert!((lo..=hi).contains(&x), "jitter out of band: {x}");
+        }
+        // Zero jitter is the identity.
+        let mut c = Xoshiro256::seed_from_u64(99);
+        assert_eq!(jittered_budget_ns(budget, 0.0, &mut c), base);
+    }
+
+    // -- threaded queue behavior (MockClock frozen: no timing assumptions) --
+
+    /// Budgets far enough out that a frozen MockClock can never expire
+    /// them — every observable cut in these tests is Fill or Drain.
+    const FAR: Duration = Duration::from_secs(3600);
+
+    #[test]
+    fn backpressure_blocks_instead_of_dropping() {
+        // (c): cap 2, max_batch 2, dispatcher gated so the queue refills
+        // while the cutter is stuck. All synchronization is via channel
+        // handshakes — no sleeps.
+        let (evt_tx, evt_rx) = channel::<usize>();
+        let (gate_tx, gate_rx) = channel::<()>();
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: u64| {
+            evt_tx.send(nq).unwrap();
+            gate_rx.recv().unwrap();
+            echo(flat, nq, b)
+        };
+        let cfg = AdmissionConfig::new(1, 2).with_queue_cap(2);
+        let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
+
+        let t1 = q.submit(&[1.0], FAR).unwrap();
+        let t2 = q.submit(&[2.0], FAR).unwrap();
+        // The cutter fill-cuts {1,2} and blocks inside the dispatcher.
+        assert_eq!(evt_rx.recv().unwrap(), 2);
+        let t3 = q.submit(&[3.0], FAR).unwrap();
+        let t4 = q.submit(&[4.0], FAR).unwrap();
+        // Queue at capacity and the cutter is gated: non-blocking
+        // admission must report backpressure, not drop.
+        assert!(matches!(q.try_submit(&[5.0], FAR), Err(AdmissionError::QueueFull)));
+        assert_eq!(q.stats().rejected_full, 1);
+
+        // A blocking submit parks until a cut frees a slot.
+        let q_ref = &q;
+        let t5 = std::thread::scope(|s| {
+            let blocked = s.spawn(move || q_ref.submit(&[5.0], FAR).unwrap());
+            gate_tx.send(()).unwrap(); // release {1,2}
+            assert_eq!(evt_rx.recv().unwrap(), 2); // cutter took {3,4}
+            gate_tx.send(()).unwrap(); // release {3,4}
+            let t5 = blocked.join().unwrap();
+            gate_tx.send(()).unwrap(); // pre-arm the gate for the drain cut
+            t5
+        });
+        drop(q); // drains {5}
+
+        // Every admitted request resolved, in alignment with its payload.
+        for (t, want) in [(t1, 1.0), (t2, 2.0), (t3, 3.0), (t4, 4.0), (t5, 5.0)] {
+            assert_eq!(t.wait().unwrap().positive_share, want);
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        // (d): frozen clock + far deadlines + short queue means nothing
+        // can cut before shutdown; dropping the queue must still resolve
+        // every ticket via drain cuts.
+        let cfg = AdmissionConfig::new(1, 100).with_queue_cap(100);
+        let q = AdmissionQueue::start_with_clock(cfg, echo, Arc::new(MockClock::new(0)));
+        let queue_stats = q.queue_stats();
+        let cut_counters = q.cut_counters();
+        let tickets: Vec<Ticket> =
+            (0..5).map(|i| q.submit(&[i as f32], FAR).unwrap()).collect();
+        drop(q);
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap().positive_share, i as f64, "drain order");
+        }
+        assert_eq!(queue_stats.enqueued(), 5);
+        assert_eq!(queue_stats.dequeued(), 5);
+        assert_eq!(queue_stats.depth(), 0);
+        assert!(cut_counters.drain() >= 1, "drain cut must be recorded");
+        assert_eq!(cut_counters.deadline(), 0, "frozen clock cannot deadline-cut");
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let cfg = AdmissionConfig::new(1, 4);
+        let q = AdmissionQueue::start_with_clock(cfg, echo, Arc::new(MockClock::new(0)));
+        // Force the shutdown flag the way Drop does, then observe submit.
+        q.shared.state.lock().unwrap().shutdown = true;
+        q.shared.cutter_wake.notify_all();
+        assert_eq!(q.submit(&[0.0], FAR).unwrap_err(), AdmissionError::ShuttingDown);
+        assert_eq!(q.try_submit(&[0.0], FAR).unwrap_err(), AdmissionError::ShuttingDown);
+    }
+
+    #[test]
+    fn zero_budget_requests_all_complete_with_deadline_cuts() {
+        // Real clock, budget 0: every request's deadline is already due,
+        // so each cut is a deadline cut (max_batch too large to fill).
+        // Assertions are about values and counters, never about timing.
+        let cfg = AdmissionConfig::new(2, 64);
+        let q = AdmissionQueue::start(cfg, echo);
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|i| q.submit(&[i as f32, 0.5], Duration::ZERO).unwrap())
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap().positive_share, i as f64);
+        }
+        let st = q.stats();
+        assert_eq!(st.submitted, 8);
+        assert_eq!(st.completed, 8);
+        assert_eq!(st.cuts_fill, 0, "64-wide batches cannot fill with 8 requests");
+        assert!(st.cuts_deadline >= 1);
+    }
+
+    // -- completion slot --
+
+    #[test]
+    fn completion_slot_basic_paths() {
+        // Fulfill before wait.
+        let (w, r) = completion_slot();
+        w.fulfill(7u32);
+        assert_eq!(r.wait(), Some(7));
+        // Drop before wait.
+        let (w, r) = completion_slot::<u32>();
+        drop(w);
+        assert_eq!(r.wait(), None);
+        // Drop the reader first: fulfilling must not panic or leak waiters.
+        let (w, r) = completion_slot();
+        drop(r);
+        w.fulfill(9u32);
+    }
+
+    #[test]
+    fn completion_slot_handoff_stress() {
+        // 100 iterations of a racing producer/consumer pair (loom-style
+        // schedule exploration with plain threads): whichever side wins
+        // the race, the value must arrive exactly once.
+        for round in 0..100u64 {
+            let (w, r) = completion_slot();
+            let producer = std::thread::spawn(move || w.fulfill(round * 7 + 1));
+            let consumer = std::thread::spawn(move || r.wait());
+            producer.join().unwrap();
+            assert_eq!(consumer.join().unwrap(), Some(round * 7 + 1), "round {round}");
+        }
+        // Same race against a writer that drops instead of fulfilling.
+        for round in 0..100u64 {
+            let (w, r) = completion_slot::<u64>();
+            let consumer = std::thread::spawn(move || r.wait());
+            let producer = std::thread::spawn(move || drop(w));
+            producer.join().unwrap();
+            assert_eq!(consumer.join().unwrap(), None, "round {round}");
+        }
+    }
+}

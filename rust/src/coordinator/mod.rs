@@ -1,8 +1,14 @@
 //! The distributed coordination layer (paper Figure 1): the Orchestrator's
-//! Root / Forwarder / Reducer processes and cluster assembly.
+//! Root / Forwarder / Reducer processes, the deadline-aware admission
+//! queue in front of them, and cluster assembly.
 
+pub mod admission;
 pub mod cluster;
 pub mod orchestrator;
 
+pub use admission::{
+    completion_slot, AdmissionConfig, AdmissionError, AdmissionQueue, AdmissionStats, Clock,
+    CutReason, MockClock, SystemClock, Ticket,
+};
 pub use cluster::{build_cluster, Cluster, ClusterConfig, EngineKind};
-pub use orchestrator::{NodeHandle, Orchestrator, QueryResult};
+pub use orchestrator::{NodeHandle, Orchestrator, QueryResult, NO_BUDGET};

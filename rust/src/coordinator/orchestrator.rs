@@ -11,15 +11,31 @@
 //! All three are real threads connected by channels, mirroring the cloud
 //! deployment's processes; nodes are [`NodeHandle`]s so the same
 //! Orchestrator drives in-process thread-group nodes and remote TCP nodes.
+//!
+//! Queries enter through three doors: [`Orchestrator::query`] (one query,
+//! the paper's ICU latency model), [`Orchestrator::query_batch`] (a
+//! caller-formed block), and — once
+//! [`Orchestrator::enable_admission`] has installed the deadline-aware
+//! admission layer — [`Orchestrator::submit`], which coalesces
+//! *independent* callers into shared cuts under per-request latency
+//! budgets (see [`crate::coordinator::admission`]).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::coordinator::admission::{
+    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Ticket,
+};
 use crate::knn::heap::{Neighbor, TopK};
 use crate::knn::predict::{positive_share, VoteConfig};
 use crate::node::node::{NodeInfo, NodeReply};
+
+/// Sentinel budget for batches that carry no latency deadline (direct
+/// [`Orchestrator::query_batch`] calls, as opposed to admission cuts).
+pub const NO_BUDGET: u64 = u64::MAX;
 
 /// Abstraction over a node the Forwarder can reach (in-process thread
 /// group or TCP-remote process).
@@ -42,6 +58,21 @@ pub trait NodeHandle: Send {
         let dim = qs.len() / nq;
         qs.chunks_exact(dim).map(|q| self.query(q)).collect()
     }
+
+    /// Batch resolution carrying the admission cut's remaining latency
+    /// budget (µs until the batch's most urgent deadline; [`NO_BUDGET`]
+    /// when the batch has none). The default ignores the budget — the
+    /// orchestrator-side cutter already made the cut — but transports
+    /// (TCP) override this to ship the budget with the frame so the far
+    /// side can honor the same deadline in its own scheduling.
+    fn query_batch_budget(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        _budget_us: u64,
+    ) -> Vec<NodeReply> {
+        self.query_batch(qs, nq)
+    }
 }
 
 impl NodeHandle for crate::node::node::LocalNode {
@@ -56,6 +87,14 @@ impl NodeHandle for crate::node::node::LocalNode {
     }
     fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
         crate::node::node::LocalNode::query_batch(self, qs, nq)
+    }
+    fn query_batch_budget(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget_us: u64,
+    ) -> Vec<NodeReply> {
+        crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget_us)
     }
 }
 
@@ -81,18 +120,22 @@ pub struct QueryResult {
 enum Job {
     Single { qid: u64, q: Arc<Vec<f32>> },
     /// Flat row-major `nq × dim` block; query `i` has id `qid0 + i`.
-    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize },
+    /// `budget_us` is the admission cut's remaining latency budget
+    /// ([`NO_BUDGET`] for caller-formed blocks).
+    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget_us: u64 },
 }
 
-enum RootRequest {
+pub(crate) enum RootRequest {
     Single(Vec<f32>, Sender<QueryResult>),
     /// Flat row-major `nq × dim` block.
-    Batch { qs: Vec<f32>, nq: usize, reply_to: Sender<Vec<QueryResult>> },
+    Batch { qs: Vec<f32>, nq: usize, budget_us: u64, reply_to: Sender<Vec<QueryResult>> },
 }
 
 /// Orchestrator over ν nodes.
 pub struct Orchestrator {
     root_tx: Sender<RootRequest>,
+    /// Deadline-aware admission layer (see [`Orchestrator::enable_admission`]).
+    admission: Option<AdmissionQueue>,
     threads: Vec<JoinHandle<()>>,
     node_infos: Vec<NodeInfo>,
     k: usize,
@@ -137,9 +180,9 @@ impl Orchestrator {
                                         break;
                                     }
                                 }
-                                Job::Batch { qid0, qs, nq } => {
+                                Job::Batch { qid0, qs, nq, budget_us } => {
                                     let t0 = std::time::Instant::now();
-                                    let replies = node.query_batch(qs, nq);
+                                    let replies = node.query_batch_budget(qs, nq, budget_us);
                                     let dt = t0.elapsed().as_secs_f64();
                                     debug_assert_eq!(replies.len(), nq);
                                     let mut dead = false;
@@ -256,7 +299,7 @@ impl Orchestrator {
                                 let _ = reply_to.send(result);
                                 qid += 1;
                             }
-                            RootRequest::Batch { qs, nq, reply_to } => {
+                            RootRequest::Batch { qs, nq, budget_us, reply_to } => {
                                 let n = nq;
                                 if n == 0 {
                                     let _ = reply_to.send(Vec::new());
@@ -264,7 +307,12 @@ impl Orchestrator {
                                 }
                                 let t0 = std::time::Instant::now();
                                 if fwd_tx
-                                    .send(Job::Batch { qid0: qid, qs: Arc::new(qs), nq })
+                                    .send(Job::Batch {
+                                        qid0: qid,
+                                        qs: Arc::new(qs),
+                                        nq,
+                                        budget_us,
+                                    })
                                     .is_err()
                                 {
                                     return;
@@ -291,7 +339,7 @@ impl Orchestrator {
                 .expect("spawn root"),
         );
 
-        Orchestrator { root_tx, threads, node_infos, k, nu }
+        Orchestrator { root_tx, admission: None, threads, node_infos, k, nu }
     }
 
     /// Resolve one query through the full Root → Forwarder → nodes →
@@ -323,11 +371,59 @@ impl Orchestrator {
             assert_eq!(q.len(), dim, "ragged query batch");
             flat.extend_from_slice(q);
         }
+        self.query_batch_flat(flat, nq, NO_BUDGET)
+    }
+
+    /// Flat-buffer variant of [`query_batch`]: the block is already
+    /// row-major `nq × dim` (the admission cutter's native shape), and
+    /// `budget_us` carries the cut's remaining latency budget to the
+    /// nodes ([`NO_BUDGET`] when there is none).
+    ///
+    /// [`query_batch`]: Orchestrator::query_batch
+    pub fn query_batch_flat(&self, qs: Vec<f32>, nq: usize, budget_us: u64) -> Vec<QueryResult> {
+        if nq == 0 {
+            return Vec::new();
+        }
+        assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
         let (tx, rx) = channel();
         self.root_tx
-            .send(RootRequest::Batch { qs: flat, nq, reply_to: tx })
+            .send(RootRequest::Batch { qs, nq, budget_us, reply_to: tx })
             .expect("root thread gone");
         rx.recv().expect("root dropped reply")
+    }
+
+    /// Install the deadline-aware admission layer (see
+    /// [`crate::coordinator::admission`]): independent callers
+    /// [`submit`](Orchestrator::submit) single queries with latency
+    /// budgets and a cutter thread coalesces them into
+    /// [`query_batch`](Orchestrator::query_batch)-shaped blocks, cutting
+    /// on fill or on the earliest deadline. Replaces (and drains) any
+    /// previously installed queue.
+    pub fn enable_admission(&mut self, cfg: AdmissionConfig) {
+        // Drain the old queue before the new one starts competing for
+        // the root channel.
+        self.admission = None;
+        let dispatch = root_dispatcher(self.root_tx.clone());
+        self.admission = Some(AdmissionQueue::start(cfg, dispatch));
+    }
+
+    /// Admit one query with a latency budget; returns a [`Ticket`] whose
+    /// [`wait`](Ticket::wait) yields the same result [`query`] would
+    /// (bit-identical reduction — the admission layer only changes *when*
+    /// work is dispatched, never what it computes). Requires
+    /// [`enable_admission`](Orchestrator::enable_admission).
+    ///
+    /// [`query`]: Orchestrator::query
+    pub fn submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
+        self.admission
+            .as_ref()
+            .expect("call enable_admission before submit")
+            .submit(q, budget)
+    }
+
+    /// The installed admission queue, if any (stats, `try_submit`).
+    pub fn admission(&self) -> Option<&AdmissionQueue> {
+        self.admission.as_ref()
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -350,6 +446,9 @@ impl Orchestrator {
 
 impl Drop for Orchestrator {
     fn drop(&mut self) {
+        // The admission cutter holds a root_tx clone, so it must drain
+        // and exit FIRST or the root thread would never see EOF.
+        self.admission = None;
         // Closing root_tx cascades: root exits, forwarder inbox closes,
         // node runners exit, reducer sees EOF.
         let (dead_tx, _) = channel();

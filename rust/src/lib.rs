@@ -13,7 +13,9 @@
 //! * [`knn`] / [`metrics`] — top-K, PKNN baseline, voting, MCC;
 //! * [`engine`] — pluggable distance scan (native Rust or AOT XLA/PJRT);
 //! * [`node`] / [`coordinator`] — the distributed runtime (ν nodes × p
-//!   cores, Orchestrator with Root/Forwarder/Reducer);
+//!   cores, Orchestrator with Root/Forwarder/Reducer, and the
+//!   deadline-aware admission queue coalescing independent callers into
+//!   shared batch cuts);
 //! * [`runtime`] — PJRT artifact loading for the JAX/Pallas hot path;
 //! * [`experiments`] — regeneration of every table and figure.
 

@@ -16,11 +16,11 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::orchestrator::NodeHandle;
+use crate::coordinator::orchestrator::{NodeHandle, NO_BUDGET};
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
 use crate::node::node::{LocalNode, NodeInfo, NodeReply};
-use crate::net::wire::{BatchReplyItem, Message};
+use crate::net::wire::{validate_batch_geometry, BatchReplyItem, Message};
 use crate::slsh::SlshParams;
 
 /// Engine factory for served nodes (native by default; the XLA service
@@ -29,6 +29,24 @@ pub type EngineFactory = dyn Fn(usize) -> Vec<Box<dyn DistanceEngine>> + Send;
 
 fn native_factory(p: usize) -> Vec<Box<dyn DistanceEngine>> {
     (0..p).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect()
+}
+
+/// Ship a node's batch answers back as one `ReplyBatch` frame.
+fn reply_batch<W: std::io::Write>(
+    writer: &mut W,
+    qid0: u64,
+    replies: Vec<NodeReply>,
+) -> Result<()> {
+    let items: Vec<BatchReplyItem> = replies
+        .into_iter()
+        .map(|r| BatchReplyItem {
+            neighbors: r.neighbors,
+            comparisons: r.comparisons,
+            inner_probes: r.inner_probes,
+        })
+        .collect();
+    Message::ReplyBatch { qid0, replies: items }.write_frame(writer)?;
+    Ok(())
 }
 
 /// Serve exactly one Orchestrator connection on `listener`, blocking until
@@ -89,23 +107,32 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 served += 1;
             }
             Some(Message::QueryBatch { qid0, nq, qs }) => {
-                let nq = nq as usize;
-                // `nq` is peer-controlled: reject on overflow instead of
-                // wrapping (the wire layer is hostile-input hardened).
-                let expected = nq.checked_mul(dim);
-                if dim == 0 || expected != Some(qs.len()) {
-                    bail!("bad batch geometry: {} floats for {nq} queries of dim {dim}", qs.len());
-                }
+                // `nq` is peer-controlled: reject on mismatch/overflow
+                // instead of wrapping (hostile-input hardening shared
+                // with the budget arm below).
+                let nq = validate_batch_geometry(nq, qs.len(), dim)
+                    .map_err(|e| anyhow!("{e}"))?;
                 let replies = node.query_batch(Arc::new(qs), nq);
-                let items: Vec<BatchReplyItem> = replies
-                    .into_iter()
-                    .map(|r| BatchReplyItem {
-                        neighbors: r.neighbors,
-                        comparisons: r.comparisons,
-                        inner_probes: r.inner_probes,
-                    })
-                    .collect();
-                Message::ReplyBatch { qid0, replies: items }.write_frame(&mut writer)?;
+                reply_batch(&mut writer, qid0, replies)?;
+                served += nq as u64;
+            }
+            Some(Message::QueryBatchBudget { qid0, nq, budget_us, qs }) => {
+                let nq = validate_batch_geometry(nq, qs.len(), dim)
+                    .map_err(|e| anyhow!("{e}"))?;
+                let t0 = std::time::Instant::now();
+                let replies = node.query_batch_budget(Arc::new(qs), nq, budget_us);
+                // Budget-overrun accounting: the node cannot un-spend the
+                // time, but a serving deployment needs to SEE misses.
+                if budget_us != NO_BUDGET {
+                    let spent_us = t0.elapsed().as_micros() as u64;
+                    if spent_us > budget_us {
+                        crate::log_info!(
+                            "node-server",
+                            "budget overrun: {spent_us}us > {budget_us}us for {nq} queries"
+                        );
+                    }
+                }
+                reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
             Some(other) => bail!("unexpected message {other:?}"),
@@ -187,15 +214,37 @@ impl NodeHandle for RemoteNode {
     /// remote node resolves the block on its batched core path. (The
     /// wire message needs an owned buffer, so this copies once.)
     fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+        self.batch_roundtrip(qs, nq, NO_BUDGET)
+    }
+
+    /// Admission cuts ship their remaining budget with the frame
+    /// (`QueryBatchBudget`) so the remote node can honor the same cut;
+    /// caller-formed blocks ([`NO_BUDGET`]) stay on the plain
+    /// `QueryBatch` frame for protocol compatibility.
+    fn query_batch_budget(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget_us: u64,
+    ) -> Vec<NodeReply> {
+        self.batch_roundtrip(qs, nq, budget_us)
+    }
+}
+
+impl RemoteNode {
+    fn batch_roundtrip(&mut self, qs: Arc<Vec<f32>>, nq: usize, budget_us: u64) -> Vec<NodeReply> {
         if nq == 0 {
             return Vec::new();
         }
         debug_assert_eq!(qs.len() % nq, 0);
         let qid0 = self.next_qid;
         self.next_qid += nq as u64;
-        Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
-            .write_frame(&mut self.writer)
-            .expect("remote node write failed");
+        let frame = if budget_us == NO_BUDGET {
+            Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
+        } else {
+            Message::QueryBatchBudget { qid0, nq: nq as u64, budget_us, qs: qs.as_ref().clone() }
+        };
+        frame.write_frame(&mut self.writer).expect("remote node write failed");
         let reply = Message::read_frame(&mut self.reader)
             .expect("remote node read failed")
             .expect("remote node closed mid-batch");

@@ -199,6 +199,23 @@ impl LocalNode {
             })
             .collect()
     }
+
+    /// Budget-aware batch entry point, mirroring the wire protocol's
+    /// batch-with-budget frame: `budget_us` is the admission cut's
+    /// remaining latency budget. An in-process node receives the cut the
+    /// orchestrator's cutter already made, so no further enforcement
+    /// happens here — the parameter exists for [`NodeHandle`] parity and
+    /// as the hook for future node-side shedding/priority scheduling.
+    ///
+    /// [`NodeHandle`]: crate::coordinator::NodeHandle
+    pub fn query_batch_budget(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        _budget_us: u64,
+    ) -> Vec<NodeReply> {
+        self.query_batch(qs, nq)
+    }
 }
 
 impl Drop for LocalNode {

@@ -1,4 +1,5 @@
-//! Thread-safe façade over the PJRT runtime.
+//! Thread-safe façade over the PJRT runtime, plus the shared serving
+//! observability primitives.
 //!
 //! `PjRtClient` cannot leave its thread, so [`XlaService`] parks an
 //! [`XlaRuntime`](crate::runtime::pjrt::XlaRuntime) on a dedicated service
@@ -6,15 +7,143 @@
 //! candidate rows, round-trip them through a channel, and feed the
 //! returned distances into their top-K — implementing [`DistanceEngine`]
 //! so the SLSH hot path is engine-agnostic.
+//!
+//! Every queue on the serving path reports through the same lock-free
+//! counters defined here: [`QueueStats`] (depth, high-water, throughput,
+//! rejections) instruments both this service's request channel and the
+//! coordinator's [admission queue](crate::coordinator::admission), and
+//! [`CutCounters`] records *why* the admission cutter dispatched each
+//! batch (fill vs deadline vs shutdown drain) — the paper's
+//! latency-over-throughput stance makes that mix the primary health
+//! signal for a serving cluster.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::engine::{push_scored, DistanceEngine, Metric};
 use crate::knn::heap::TopK;
 use crate::runtime::pjrt::XlaRuntime;
+
+/// Lock-free gauges + counters for one bounded serving queue. All fields
+/// are monotone or a depth gauge, updated with relaxed atomics — readers
+/// get a consistent-enough snapshot for dashboards, never a lock on the
+/// hot path.
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    depth: AtomicUsize,
+    high_water: AtomicUsize,
+    enqueued: AtomicU64,
+    dequeued: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl QueueStats {
+    pub fn new() -> QueueStats {
+        QueueStats::default()
+    }
+
+    /// Record `n` requests entering the queue; returns the new depth.
+    pub fn on_enqueue(&self, n: usize) -> usize {
+        self.enqueued.fetch_add(n as u64, Ordering::Relaxed);
+        let d = self.depth.fetch_add(n, Ordering::Relaxed) + n;
+        let mut hw = self.high_water.load(Ordering::Relaxed);
+        while d > hw {
+            match self.high_water.compare_exchange_weak(
+                hw,
+                d,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(cur) => hw = cur,
+            }
+        }
+        d
+    }
+
+    /// Record `n` requests leaving the queue (taken into a batch).
+    pub fn on_dequeue(&self, n: usize) {
+        self.dequeued.fetch_add(n as u64, Ordering::Relaxed);
+        self.depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Record one request turned away at admission (backpressure).
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently queued.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Maximum depth ever observed.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Total requests ever admitted.
+    pub fn enqueued(&self) -> u64 {
+        self.enqueued.load(Ordering::Relaxed)
+    }
+
+    /// Total requests ever taken into a batch.
+    pub fn dequeued(&self) -> u64 {
+        self.dequeued.load(Ordering::Relaxed)
+    }
+
+    /// Total requests rejected with queue-full backpressure.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// Why the admission cutter dispatched each batch. A healthy
+/// latency-bound cluster shows a mix: mostly fill cuts under load
+/// (batching is amortizing work) and deadline cuts when traffic is
+/// sparse (lone requests still meet their budget).
+#[derive(Debug, Default)]
+pub struct CutCounters {
+    fill: AtomicU64,
+    deadline: AtomicU64,
+    drain: AtomicU64,
+}
+
+impl CutCounters {
+    pub fn new() -> CutCounters {
+        CutCounters::default()
+    }
+
+    /// Batch reached `max_batch` before any deadline expired.
+    pub fn record_fill(&self) {
+        self.fill.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The earliest pending deadline expired with the batch short.
+    pub fn record_deadline(&self) {
+        self.deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shutdown drained the residue.
+    pub fn record_drain(&self) {
+        self.drain.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn fill(&self) -> u64 {
+        self.fill.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline(&self) -> u64 {
+        self.deadline.load(Ordering::Relaxed)
+    }
+
+    pub fn drain(&self) -> u64 {
+        self.drain.load(Ordering::Relaxed)
+    }
+}
 
 enum Request {
     Scan {
@@ -30,6 +159,7 @@ enum Request {
 /// Owns the service thread. Dropping shuts the thread down.
 pub struct XlaService {
     tx: mpsc::Sender<Request>,
+    stats: Arc<QueueStats>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -39,6 +169,8 @@ impl XlaService {
     pub fn start() -> Result<XlaService> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(QueueStats::new());
+        let stats_svc = Arc::clone(&stats);
         let join = std::thread::Builder::new()
             .name("xla-service".into())
             .spawn(move || {
@@ -55,6 +187,7 @@ impl XlaService {
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Scan { metric, q, rows, n, reply } => {
+                            stats_svc.on_dequeue(1);
                             let _ = reply.send(runtime.scan_rows(metric, &q, &rows, n));
                         }
                         Request::Shutdown => break,
@@ -63,12 +196,17 @@ impl XlaService {
             })
             .expect("spawning xla-service thread");
         ready_rx.recv().expect("xla-service died during startup")?;
-        Ok(XlaService { tx, join: Some(join) })
+        Ok(XlaService { tx, stats, join: Some(join) })
     }
 
     /// A new engine handle for a worker thread.
     pub fn engine(&self) -> XlaEngine {
-        XlaEngine { tx: Mutex::new(self.tx.clone()) }
+        XlaEngine { tx: Mutex::new(self.tx.clone()), stats: Arc::clone(&self.stats) }
+    }
+
+    /// Live depth/throughput counters for the service request channel.
+    pub fn queue_stats(&self) -> Arc<QueueStats> {
+        Arc::clone(&self.stats)
     }
 }
 
@@ -84,6 +222,7 @@ impl Drop for XlaService {
 /// Cloneable, `Send + Sync` scan handle implementing [`DistanceEngine`].
 pub struct XlaEngine {
     tx: Mutex<mpsc::Sender<Request>>,
+    stats: Arc<QueueStats>,
 }
 
 impl XlaEngine {
@@ -91,6 +230,7 @@ impl XlaEngine {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
             let tx = self.tx.lock().unwrap();
+            self.stats.on_enqueue(1);
             tx.send(Request::Scan { metric, q: q.to_vec(), rows, n, reply: reply_tx })
                 .expect("xla-service gone");
         }

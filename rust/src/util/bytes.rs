@@ -12,6 +12,9 @@ pub enum CodecError {
     TooLong(u64, u64),
     BadUtf8,
     BadTag(u32, &'static str),
+    /// A batch frame whose item count × dimensionality does not match the
+    /// shipped payload (hostile/corrupt peer).
+    BadGeometry { items: u64, len: u64, dim: u64 },
 }
 
 impl std::fmt::Display for CodecError {
@@ -25,6 +28,9 @@ impl std::fmt::Display for CodecError {
             CodecError::TooLong(n, cap) => write!(f, "length {n} exceeds sanity limit {cap}"),
             CodecError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
             CodecError::BadTag(t, what) => write!(f, "invalid enum tag {t} for {what}"),
+            CodecError::BadGeometry { items, len, dim } => {
+                write!(f, "bad batch geometry: {items} items x dim {dim} != {len} values")
+            }
         }
     }
 }

@@ -1,0 +1,141 @@
+//! Admission-queue parity: queries coalesced into shared cuts by the
+//! deadline-aware admission layer must resolve bit-identically to
+//! sequential `Orchestrator::query` — across batch caps, latency budgets,
+//! and cluster sizes, with genuinely concurrent submitters.
+//!
+//! The batch compositions the cutter produces are scheduler-dependent
+//! (that is the point of the test: whatever cuts happen, results must not
+//! change); all assertions are value assertions, never timing assertions.
+
+use std::time::Duration;
+
+use dslsh::coordinator::{build_cluster, AdmissionConfig, ClusterConfig, QueryResult, Ticket};
+use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
+use dslsh::lsh::family::LayerSpec;
+use dslsh::slsh::SlshParams;
+
+const SUBMITTERS: usize = 4;
+
+fn corpus() -> Corpus {
+    build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 2500, 24, 99))
+}
+
+fn params(data: &dslsh::data::Dataset) -> SlshParams {
+    let (lo, hi) = data.value_range();
+    SlshParams::lsh_only(LayerSpec::outer_l1(data.dim, 40, 12, lo, hi, 13), 10)
+}
+
+/// Everything in a `QueryResult` that is workload-determined. `qid` is
+/// arrival-order (scheduler-dependent through the queue) and `latency_s`
+/// is wall-clock; both are excluded by construction.
+fn assert_bit_identical(got: &QueryResult, want: &QueryResult, ctx: &str) {
+    assert_eq!(got.neighbors, want.neighbors, "{ctx}: neighbors");
+    assert!(
+        got.positive_share == want.positive_share,
+        "{ctx}: positive_share {} != {}",
+        got.positive_share,
+        want.positive_share
+    );
+    assert_eq!(got.prediction, want.prediction, "{ctx}: prediction");
+    assert_eq!(got.max_comparisons, want.max_comparisons, "{ctx}: max_comparisons");
+    assert_eq!(
+        got.per_node_comparisons, want.per_node_comparisons,
+        "{ctx}: per_node_comparisons"
+    );
+}
+
+#[test]
+fn admission_matches_sequential_across_configs() {
+    let c = corpus();
+    let p = params(&c.data);
+    let nq = c.queries.len();
+
+    for nodes in [1usize, 2, 4] {
+        // Reference: sequential queries on one cluster. Same params + same
+        // topology on a fresh cluster reproduce the exact same tables, so
+        // a second cluster serves the admission side without the two
+        // streams perturbing each other's qid sequences.
+        let reference = build_cluster(&c.data, &p, &ClusterConfig::new(nodes, 2)).unwrap();
+        let seq: Vec<QueryResult> = (0..nq).map(|i| reference.query(c.queries.point(i))).collect();
+        let mut under_test = build_cluster(&c.data, &p, &ClusterConfig::new(nodes, 2)).unwrap();
+
+        for max_batch in [1usize, 4, 16] {
+            for budget_ms in [0u64, 1, 10] {
+                under_test
+                    .orchestrator
+                    .enable_admission(AdmissionConfig::new(c.data.dim, max_batch).with_queue_cap(64));
+                let orch = &under_test.orchestrator;
+                let budget = Duration::from_millis(budget_ms);
+                let ctx = format!("nodes={nodes} max_batch={max_batch} budget={budget_ms}ms");
+
+                // Concurrent submitters, striped over the query stream.
+                // Each thread bursts all its submissions first (letting
+                // fill cuts coalesce across threads), then waits.
+                let results: Vec<(usize, QueryResult)> = std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..SUBMITTERS)
+                        .map(|t| {
+                            let c = &c;
+                            s.spawn(move || {
+                                let tickets: Vec<(usize, Ticket)> = (t..nq)
+                                    .step_by(SUBMITTERS)
+                                    .map(|i| {
+                                        (i, orch.submit(c.queries.point(i), budget).unwrap())
+                                    })
+                                    .collect();
+                                tickets
+                                    .into_iter()
+                                    .map(|(i, ticket)| (i, ticket.wait().unwrap()))
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+                });
+
+                assert_eq!(results.len(), nq, "{ctx}: every submission must resolve");
+                for (i, got) in &results {
+                    assert_bit_identical(got, &seq[*i], &format!("{ctx} q={i}"));
+                }
+
+                let st = orch.admission().unwrap().stats();
+                assert_eq!(st.submitted, nq as u64, "{ctx}: admitted count");
+                assert_eq!(st.completed, nq as u64, "{ctx}: completed count");
+                assert_eq!(st.depth, 0, "{ctx}: queue drained");
+                if max_batch == 1 {
+                    // Every cut is a singleton fill cut by construction.
+                    assert_eq!(st.cuts_fill, nq as u64, "{ctx}: singleton fills");
+                    assert_eq!(st.cuts_deadline, 0, "{ctx}: no deadline cuts at cap 1");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn resubmission_after_queue_replacement_still_matches() {
+    // enable_admission drains and replaces the previous queue; results
+    // must stay identical across the swap (the seam later scheduling
+    // work will exercise constantly).
+    let c = corpus();
+    let p = params(&c.data);
+    let reference = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
+    let want: Vec<QueryResult> = (0..6).map(|i| reference.query(c.queries.point(i))).collect();
+
+    let mut cluster = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
+    for round in 0..3 {
+        cluster
+            .orchestrator
+            .enable_admission(AdmissionConfig::new(c.data.dim, 4).with_queue_cap(16));
+        let tickets: Vec<_> = (0..6)
+            .map(|i| {
+                cluster
+                    .orchestrator
+                    .submit(c.queries.point(i), Duration::from_millis(1))
+                    .unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_bit_identical(&t.wait().unwrap(), &want[i], &format!("round={round} q={i}"));
+        }
+    }
+}

@@ -1,11 +1,17 @@
 //! Distributed-runtime integration tests: in-process cluster vs TCP
 //! loopback cluster vs single-node ground truth.
+//!
+//! Every listener here binds port 0 and propagates the kernel-chosen
+//! port to the client side, so the suite is parallel-safe (tier-1 runs
+//! tests concurrently; a fixed port would flake on collision).
 
 use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
+use dslsh::coordinator::admission::completion_slot;
 use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
-use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::coordinator::{build_cluster, AdmissionConfig, ClusterConfig};
 use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
 use dslsh::engine::native::NativeEngine;
 use dslsh::engine::{DistanceEngine, Metric};
@@ -81,6 +87,112 @@ fn tcp_cluster_matches_local_cluster() {
     for s in servers {
         let served = s.join().unwrap();
         assert_eq!(served, 25);
+    }
+}
+
+#[test]
+fn tcp_admission_with_budget_frames_matches_local_sequential() {
+    // End-to-end over the wire: concurrent submitters -> admission cutter
+    // -> `QueryBatchBudget` frames -> remote nodes -> reduction. Results
+    // must be identical to sequential queries on an in-process cluster
+    // with the same spec, and the servers must account every query.
+    let c = corpus();
+    let p = params(&c.data);
+    let nu = 2;
+    let cores = 2;
+    let n_queries = 16usize;
+
+    let local = build_cluster(&c.data, &p, &ClusterConfig::new(nu, cores)).unwrap();
+
+    let mut listeners = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..nu {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(l.local_addr().unwrap());
+        listeners.push(l);
+    }
+    let servers: Vec<_> = listeners
+        .into_iter()
+        .map(|l| std::thread::spawn(move || serve_node(&l, None).unwrap()))
+        .collect();
+
+    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::new();
+    for (node_id, range) in chunk_ranges(c.data.len(), nu).into_iter().enumerate() {
+        let shard = c.data.shard(range.clone());
+        let remote =
+            RemoteNode::connect(addrs[node_id], node_id, shard, range.start as u64, &p, cores)
+                .unwrap();
+        nodes.push(Box::new(remote));
+    }
+    let mut tcp = Orchestrator::start(nodes, p.k, VoteConfig::default());
+    tcp.enable_admission(AdmissionConfig::new(c.data.dim, 4).with_queue_cap(32));
+    let orch = &tcp;
+
+    // Two concurrent submitters with a finite budget: every cut travels
+    // as a QueryBatchBudget frame (budget != NO_BUDGET).
+    let results: Vec<(usize, dslsh::coordinator::QueryResult)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                let c = &c;
+                s.spawn(move || {
+                    (t..n_queries)
+                        .step_by(2)
+                        .map(|i| {
+                            let ticket = orch
+                                .submit(c.queries.point(i), Duration::from_millis(1))
+                                .unwrap();
+                            (i, ticket.wait().unwrap())
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(results.len(), n_queries);
+    for (i, b) in &results {
+        let a = local.query(c.queries.point(*i));
+        assert_eq!(a.prediction, b.prediction, "query {i}");
+        assert_eq!(a.max_comparisons, b.max_comparisons, "query {i}");
+        assert_eq!(
+            a.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {i}"
+        );
+    }
+    drop(tcp);
+    for s in servers {
+        let served = s.join().unwrap();
+        assert_eq!(served, n_queries as u64, "server must account every budget-batch query");
+    }
+}
+
+#[test]
+fn completion_slot_handoff_stress_across_threads() {
+    // Loom-style schedule exploration with plain threads: 100 iterations
+    // of the one-shot reply-path handoff under three racing schedules —
+    // producer-first, consumer-first (forced park), and a genuine race.
+    for round in 0..100u32 {
+        // Producer wins: value is published before the reader looks.
+        let (w, r) = completion_slot();
+        w.fulfill(round);
+        assert_eq!(r.wait(), Some(round));
+
+        // Consumer parks first (it spawns, the producer yields to give it
+        // a chance to register its waiter), then the value arrives.
+        let (w, r) = completion_slot();
+        let consumer = std::thread::spawn(move || r.wait());
+        std::thread::yield_now();
+        w.fulfill(round + 1000);
+        assert_eq!(consumer.join().unwrap(), Some(round + 1000));
+
+        // Free-for-all: both sides race from a standing start.
+        let (w, r) = completion_slot();
+        let producer = std::thread::spawn(move || w.fulfill(round + 2000));
+        let consumer = std::thread::spawn(move || r.wait());
+        producer.join().unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(round + 2000));
     }
 }
 

@@ -6,3 +6,12 @@ cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+
+# Admission layer, explicitly: the scheduling seam every later feature
+# (priority classes, NUMA pinning) plugs into — fail loudly on its own.
+cargo test -q --test admission_parity
+cargo test -q --lib coordinator::admission
+
+# Bench smoke: asserts the admission-latency bench produces a non-empty
+# CSV (artifact plumbing, not timing quality).
+cargo bench --bench admission_latency -- --smoke
