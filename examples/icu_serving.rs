@@ -11,17 +11,18 @@
 //! (latency-oriented, one in flight). Reports per-query latency
 //! percentiles, comparisons vs PKNN, and prediction MCC vs the exhaustive
 //! baseline, then batched-admission throughput, then a **mixed
-//! ICU/analytics workload** through the deadline-aware admission queue:
-//! several low-latency monitor threads (tight budgets, one query in
-//! flight each) share the cluster with bulk analytics submitters (loose
-//! budgets, deep bursts). The admission cutter coalesces both classes
-//! into shared cuts — a batch dispatches when it fills or when the most
-//! urgent pending deadline expires, so analytics ride along with monitor
-//! traffic instead of head-of-line blocking it (one batch is in flight
-//! at a time, so a monitor can still wait out at most one in-flight
-//! batch beyond its budget — see the admission module docs). The tail prints
-//! per-class latency percentiles and the cut-reason mix (fill vs
-//! deadline), the primary health signal for a latency-bound cluster.
+//! ICU/analytics workload** through the deadline-aware admission queue's
+//! priority lanes: several low-latency monitor threads (tight budgets,
+//! one query in flight each, `Class::Monitor`) share the cluster with
+//! bulk analytics submitters (loose budgets, deep bursts,
+//! `Class::Analytics`). The cutter pops monitors first (deadline-ordered)
+//! and dispatches through a pipelined window, so a monitor arriving while
+//! an analytics batch is on the cluster is still cut at its deadline;
+//! analytics ride leftover batch slots, protected from starvation by the
+//! aging bound (see the admission module docs). The tail prints
+//! per-class latency percentiles split by lane, the per-lane dispatch mix
+//! (fill/deadline/aged) with budget overruns, and the cut-reason mix —
+//! the primary health signals for a latency-bound cluster.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example icu_serving
@@ -29,7 +30,7 @@
 
 use std::time::{Duration, Instant};
 
-use dslsh::coordinator::{build_cluster, AdmissionConfig, ClusterConfig, EngineKind};
+use dslsh::coordinator::{build_cluster, AdmissionConfig, Class, ClusterConfig, EngineKind};
 use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
 use dslsh::data::WindowSpec;
 use dslsh::knn::predict::VoteConfig;
@@ -129,13 +130,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Mixed ICU/analytics admission: independent callers share one
-    // cluster through the deadline-aware admission queue. Monitors
-    // submit one query at a time under a tight budget; analytics bursts
-    // ride the same cuts under a loose one. Results are bit-identical to
-    // sequential queries (see rust/tests/admission_parity.rs) — what
-    // moves is who waits for whom.
+    // cluster through the deadline-aware admission queue's priority
+    // lanes. Monitors submit one query at a time under a tight budget in
+    // the strict-priority lane; analytics bursts queue deep in the aged
+    // lane under a loose one. Results are bit-identical to sequential
+    // queries (see rust/tests/admission_parity.rs) — what moves is who
+    // waits for whom.
     println!();
-    println!("== mixed ICU/analytics admission (max_batch=16) ==");
+    println!("== mixed ICU/analytics admission (max_batch=16, priority lanes) ==");
     let monitors = 4usize;
     let analysts = 2usize;
     let budget_monitor = Duration::from_millis(2);
@@ -143,9 +145,11 @@ fn main() -> anyhow::Result<()> {
     let q_total = corpus.queries.len();
     let per_monitor = (q_total / 2 / monitors).max(1);
     let per_analyst = (q_total / 2 / analysts).max(1);
-    cluster
-        .orchestrator
-        .enable_admission(AdmissionConfig::new(corpus.data.dim, 16).with_queue_cap(256));
+    cluster.orchestrator.enable_admission(
+        AdmissionConfig::new(corpus.data.dim, 16)
+            .with_queue_cap(256)
+            .with_age_bound(Duration::from_millis(20)),
+    );
     let orch = &cluster.orchestrator;
     let (monitor_lat, analytics_lat): (Vec<f64>, Vec<f64>) = std::thread::scope(|s| {
         let monitor_handles: Vec<_> = (0..monitors)
@@ -158,8 +162,9 @@ fn main() -> anyhow::Result<()> {
                     for j in 0..per_monitor {
                         let qi = (t * per_monitor + j) % q_total;
                         let ts = Instant::now();
-                        let ticket =
-                            orch.submit(corpus.queries.point(qi), budget_monitor).unwrap();
+                        let ticket = orch
+                            .submit_class(corpus.queries.point(qi), budget_monitor, Class::Monitor)
+                            .unwrap();
                         let _ = ticket.wait().unwrap();
                         lat.push(ts.elapsed().as_secs_f64() * 1e3);
                     }
@@ -181,8 +186,12 @@ fn main() -> anyhow::Result<()> {
                         let tickets: Vec<_> = (0..burst)
                             .map(|b| {
                                 let qi = (q_total / 2 + t * per_analyst + j + b) % q_total;
-                                orch.submit(corpus.queries.point(qi), budget_analytics)
-                                    .unwrap()
+                                orch.submit_class(
+                                    corpus.queries.point(qi),
+                                    budget_analytics,
+                                    Class::Analytics,
+                                )
+                                .unwrap()
                             })
                             .collect();
                         for ticket in tickets {
@@ -214,8 +223,20 @@ fn main() -> anyhow::Result<()> {
     );
     let ad = orch.admission().unwrap().stats();
     println!(
-        "admission  {} submitted, cuts: {} fill / {} deadline, queue depth high-water {}",
-        ad.submitted, ad.cuts_fill, ad.cuts_deadline, ad.high_water
+        "admission  {} submitted, cuts: {} fill / {} deadline / {} aged, queue depth high-water {}",
+        ad.submitted, ad.cuts_fill, ad.cuts_deadline, ad.cuts_aged, ad.high_water
     );
+    for (name, lane) in [("monitor  ", ad.monitor), ("analytics", ad.analytics)] {
+        println!(
+            "  lane {name}  {} submitted, dispatched {} fill / {} deadline / {} aged, \
+             {} overruns, depth high-water {}",
+            lane.submitted,
+            lane.dispatched_fill,
+            lane.dispatched_deadline,
+            lane.dispatched_aged,
+            lane.overruns,
+            lane.high_water
+        );
+    }
     Ok(())
 }

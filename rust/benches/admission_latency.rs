@@ -8,13 +8,19 @@
 //! short intervals requests pile up and fill cuts dominate while latency
 //! climbs toward the service rate. Saves results/admission_latency.csv.
 //!
+//! A second section exercises the **priority lanes**: closed-loop
+//! monitors under a tight budget share the cluster with open-loop
+//! analytics bursts; per-class p50/p99, the per-lane dispatch mix
+//! (fill/deadline/aged) and budget overruns go to
+//! results/admission_priority.csv.
+//!
 //! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and load and
-//! asserts a non-empty CSV was produced — artifact plumbing, not timing
-//! quality.
+//! asserts non-empty CSVs were produced for BOTH sections — artifact
+//! plumbing (and both scheduling lanes) exercised, not timing quality.
 
 use std::time::{Duration, Instant};
 
-use dslsh::coordinator::{build_cluster, AdmissionConfig, AdmissionStats, ClusterConfig};
+use dslsh::coordinator::{build_cluster, AdmissionConfig, AdmissionStats, Class, ClusterConfig};
 use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
 use dslsh::experiments::report::Table;
 use dslsh::lsh::family::LayerSpec;
@@ -115,16 +121,129 @@ fn main() {
     println!("{}", table.render());
     table.save(std::path::Path::new("results"), "admission_latency").expect("saving csv");
 
-    // The bench's contract with CI: it produced a CSV with at least one
-    // data row (timing numbers are machine-dependent and NOT asserted).
-    let csv = std::fs::read_to_string("results/admission_latency.csv")
-        .expect("results/admission_latency.csv must exist");
-    assert!(
-        csv.lines().count() >= 2,
-        "admission_latency.csv must contain a header and at least one data row"
+    // -- Priority lanes: monitors vs an analytics burst on one cluster --
+    //
+    // Closed-loop monitors (one query in flight each, tight budget) share
+    // the admission queue with open-loop analytics bursts (deep queues,
+    // loose budget). With strict-priority lanes + pipelined dispatch the
+    // monitor tail must stay near its budget while analytics ride
+    // leftover slots, bounded by the aging bound instead of starving.
+    let (monitors, analysts, per_monitor, per_analyst) =
+        if smoke { (2usize, 1usize, 20usize, 32usize) } else { (4, 2, 150, 256) };
+    let budget_monitor = Duration::from_millis(2);
+    let budget_analytics = Duration::from_millis(50);
+    cluster.orchestrator.enable_admission(
+        AdmissionConfig::new(corpus.data.dim, max_batch)
+            .with_queue_cap(4096)
+            .with_age_bound(Duration::from_millis(20)),
     );
-    println!(
-        "[admission_latency] -> results/admission_latency.csv{}",
-        if smoke { " (smoke: CSV verified non-empty)" } else { "" }
+    let orch = &cluster.orchestrator;
+    let nq = corpus.queries.len();
+    let (monitor_lat, analytics_lat): (Vec<f64>, Vec<f64>) = std::thread::scope(|s| {
+        let monitor_handles: Vec<_> = (0..monitors)
+            .map(|t| {
+                let corpus = &corpus;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(per_monitor);
+                    for j in 0..per_monitor {
+                        let qi = (t * per_monitor + j) % nq;
+                        let ts = Instant::now();
+                        let ticket = orch
+                            .submit_class(corpus.queries.point(qi), budget_monitor, Class::Monitor)
+                            .expect("monitor admission rejected");
+                        let r = ticket.wait().expect("monitor ticket canceled");
+                        lat.push(ts.elapsed().as_secs_f64() * 1e3);
+                        std::hint::black_box(r.max_comparisons);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        let analytics_handles: Vec<_> = (0..analysts)
+            .map(|t| {
+                let corpus = &corpus;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(per_analyst);
+                    let mut j = 0;
+                    while j < per_analyst {
+                        let burst = (per_analyst - j).min(16);
+                        let ts = Instant::now();
+                        let tickets: Vec<_> = (0..burst)
+                            .map(|b| {
+                                let qi = (nq / 2 + t * per_analyst + j + b) % nq;
+                                orch.submit_class(
+                                    corpus.queries.point(qi),
+                                    budget_analytics,
+                                    Class::Analytics,
+                                )
+                                .expect("analytics admission rejected")
+                            })
+                            .collect();
+                        for ticket in tickets {
+                            ticket.wait().expect("analytics ticket canceled");
+                        }
+                        lat.push(ts.elapsed().as_secs_f64() * 1e3 / burst as f64);
+                        j += burst;
+                    }
+                    lat
+                })
+            })
+            .collect();
+        (
+            monitor_handles.into_iter().flat_map(|h| h.join().unwrap()).collect(),
+            analytics_handles.into_iter().flat_map(|h| h.join().unwrap()).collect(),
+        )
+    });
+    let snap = orch.admission().unwrap().stats();
+    let mut ptable = Table::new(
+        format!(
+            "Admission priority lanes — nu=2 x p=2, max_batch={max_batch}, \
+             monitor budget {}ms x{monitors}, analytics budget {}ms x{analysts}",
+            budget_monitor.as_millis(),
+            budget_analytics.as_millis()
+        ),
+        &[
+            "class",
+            "requests",
+            "p50 ms",
+            "p99 ms",
+            "disp fill",
+            "disp deadline",
+            "disp aged",
+            "overruns",
+        ],
     );
+    for (name, lat, lane) in [
+        ("monitor", &monitor_lat, snap.monitor),
+        ("analytics", &analytics_lat, snap.analytics),
+    ] {
+        ptable.row(vec![
+            name.to_string(),
+            lane.submitted.to_string(),
+            format!("{:.2}", stats::percentile(lat, 0.50)),
+            format!("{:.2}", stats::percentile(lat, 0.99)),
+            lane.dispatched_fill.to_string(),
+            lane.dispatched_deadline.to_string(),
+            lane.dispatched_aged.to_string(),
+            lane.overruns.to_string(),
+        ]);
+    }
+    println!("{}", ptable.render());
+    ptable.save(std::path::Path::new("results"), "admission_priority").expect("saving csv");
+
+    // The bench's contract with CI: both sections produced a CSV with at
+    // least one data row (timing numbers are machine-dependent and NOT
+    // asserted).
+    for name in ["admission_latency", "admission_priority"] {
+        let path = format!("results/{name}.csv");
+        let csv = std::fs::read_to_string(&path).unwrap_or_else(|_| panic!("{path} must exist"));
+        assert!(
+            csv.lines().count() >= 2,
+            "{path} must contain a header and at least one data row"
+        );
+        println!(
+            "[admission_latency] -> {path}{}",
+            if smoke { " (smoke: CSV verified non-empty)" } else { "" }
+        );
+    }
 }

@@ -8,15 +8,36 @@
 //! *independent* callers into batches under a latency budget:
 //!
 //! * Callers [`submit`](AdmissionQueue::submit) one query plus a latency
-//!   budget and get a [`Ticket`] back; [`Ticket::wait`] blocks on a
-//!   per-request one-shot completion slot ([`completion_slot`]) — the
-//!   reply path is lock-free (atomic state + `thread::park`, no mutex).
-//! * A dedicated **cutter** thread watches the bounded FIFO and dispatches
-//!   a batch when it reaches `max_batch` ([`CutReason::Fill`]) **or** the
-//!   earliest pending deadline expires ([`CutReason::Deadline`]) —
-//!   whichever comes first. A deadline cut always takes *every* pending
-//!   request (pending < `max_batch`, else it would have fill-cut), so the
-//!   most urgent request is always in the batch it triggers.
+//!   budget (and a scheduling [`Class`], via
+//!   [`submit_class`](AdmissionQueue::submit_class)) and get a [`Ticket`]
+//!   back; [`Ticket::wait`] blocks on a per-request one-shot completion
+//!   slot ([`completion_slot`]) — the reply path is lock-free (atomic
+//!   state + `thread::park`, no mutex).
+//! * Pending requests live in **two scheduling lanes**:
+//!   [`Class::Monitor`] (strict priority, deadline-ordered — the paper's
+//!   bedside monitors) and [`Class::Analytics`] (FIFO behind monitors).
+//!   A cut takes due-or-aged analytics first, then monitors by earliest
+//!   deadline, then fresh analytics; an analytics request that has waited
+//!   [`AdmissionConfig::age_bound`] is *promoted* — it rides the very next
+//!   cut ([`CutReason::Aged`]) — so sustained monitor traffic can delay
+//!   analytics by at most the aging bound, never starve it.
+//! * A dedicated **cutter** thread watches the lanes and cuts a batch
+//!   when `max_batch` requests are pending ([`CutReason::Fill`]) **or**
+//!   the earliest pending effective deadline expires
+//!   ([`CutReason::Deadline`] / [`CutReason::Aged`]) — whichever comes
+//!   first. A deadline cut always takes *every* pending request (pending
+//!   < `max_batch`, else it would have fill-cut), so the most urgent
+//!   request is always in the batch it triggers.
+//! * **Pipelined dispatch**: the cutter never runs a dispatch itself. It
+//!   hands each cut to a dispatcher thread over a bounded channel sized
+//!   by [`AdmissionConfig::pipeline`] (default 2 batches in flight), so
+//!   cut N+1 is *formed* while cut N is still in the reducer — a tight
+//!   deadline arriving mid-dispatch is cut at its deadline, not up to one
+//!   batch service time late (the PR 2 failure mode this replaces). When
+//!   the window is already full the cutter parks at the handoff, so
+//!   under *saturation* a newly due cut can still wait for a pipeline
+//!   slot — bounded by the window, where the PR 2 design added the same
+//!   delay on every in-flight batch even when idle slots existed.
 //! * The queue is bounded: when `queue_cap` requests are pending,
 //!   [`submit`](AdmissionQueue::submit) blocks and
 //!   [`try_submit`](AdmissionQueue::try_submit) returns
@@ -28,47 +49,131 @@
 //! Dispatch rides [`Orchestrator::query_batch`]'s flat-block path, so a
 //! coalesced batch reuses the per-core `QueryScratch`/`BatchOutput` arenas
 //! downstream exactly like a caller-formed block, and the remaining budget
-//! of the most urgent request travels with the cut (the TCP wire ships it
-//! in a `QueryBatchBudget` frame so remote nodes can honor the same cut).
+//! of the most urgent request travels with the cut together with the
+//! batch's class (the TCP wire ships both in a `QueryBatchBudget` frame so
+//! remote nodes can honor the same cut and attribute overruns per class).
 //!
 //! **Determinism.** The cutter never reads the wall clock directly: it
 //! takes a [`Clock`] (real [`SystemClock`] or test [`MockClock`]), and the
 //! optional per-request deadline jitter (used to de-synchronize fleets of
 //! periodic monitors) draws from an RNG seeded by
 //! [`AdmissionConfig::seed`] — every batching decision is a pure function
-//! of (submission order, clock readings, seed), reproducible in tests
-//! with no sleeps. Observability is shared with the rest of the serving
-//! stack: queue depth through [`QueueStats`] and the cut-reason mix
-//! through [`CutCounters`], both defined in
+//! of (submission order, classes, clock readings, seed), reproducible in
+//! tests with no sleeps. Observability is shared with the rest of the
+//! serving stack: queue depth through [`QueueStats`] (aggregate and per
+//! lane), the cut-reason mix through [`CutCounters`], and per-class
+//! dispatch/overrun attribution through [`LaneCounters`], all defined in
 //! [`crate::runtime::service`].
 //!
-//! **Known limit: one batch in flight.** The cutter dispatches
-//! synchronously (the Root resolves one batch at a time anyway), so a
-//! deadline falling due *while a batch is on the cluster* fires only
-//! when the dispatch returns — under sustained load a tight budget can
-//! be overrun by up to one batch service time, and the overrun is not
-//! distinguished in the counters (the cut is still recorded as
-//! `Deadline`). Budgets are therefore targets the cutter never
-//! *undershoots*, not hard guarantees; pipelined dispatch / priority
-//! lanes are the follow-up that tightens this (see ROADMAP).
+//! **Budgets are scheduling targets, not hard real-time guarantees.**
+//! With a free pipeline slot, a request is *cut* no later than its
+//! effective deadline (plus scheduler wakeup); under saturation the cut
+//! additionally waits for a slot (see above), and the cluster may take
+//! longer than the remaining budget to resolve the batch. Those misses
+//! are first-class signals: the dispatcher counts every request that
+//! resolves past its deadline, per class
+//! ([`LaneCounters::overruns`]), and node-side accounting
+//! ([`note_batch_overrun`]) logs them identically for in-process and
+//! remote nodes.
 //!
 //! This queue is the architectural seam all later scheduling work
-//! (priority classes, NUMA pinning) plugs into: those features change
-//! *which* requests a cut takes, not how callers submit or wait.
+//! (node-side shedding, NUMA pinning) plugs into: those features change
+//! *which* requests a cut takes or where a cut runs, not how callers
+//! submit or wait.
 //!
 //! [`Orchestrator::query_batch`]: crate::coordinator::Orchestrator::query_batch
 
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, sync_channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::orchestrator::QueryResult;
-use crate::runtime::service::{CutCounters, QueueStats};
+use crate::runtime::service::{CutCounters, LaneCounters, QueueStats};
 use crate::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// Scheduling class
+// ---------------------------------------------------------------------------
+
+/// Scheduling class of an admitted query — which lane it waits in.
+///
+/// The paper's ICU deployment is latency-first: a bedside monitor's
+/// similarity verdict must land inside its budget even while bulk
+/// analytics share the cluster. [`Class::Monitor`] requests are cut with
+/// strict priority (deadline-ordered); [`Class::Analytics`] requests ride
+/// leftover batch slots FIFO, protected from starvation by
+/// [`AdmissionConfig::age_bound`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    /// Latency-critical, one-query-in-flight callers (ICU monitors).
+    Monitor,
+    /// Bulk, throughput-oriented callers (re-scoring, backfills).
+    Analytics,
+}
+
+impl Class {
+    /// Wire encoding (stable: `QueryBatchBudget` frames carry it).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Class::Monitor => 0,
+            Class::Analytics => 1,
+        }
+    }
+
+    /// Inverse of [`as_u8`](Class::as_u8); `None` for unknown bytes
+    /// (hostile/corrupt peers).
+    pub fn from_u8(v: u8) -> Option<Class> {
+        match v {
+            0 => Some(Class::Monitor),
+            1 => Some(Class::Analytics),
+            _ => None,
+        }
+    }
+
+    fn idx(self) -> usize {
+        self.as_u8() as usize
+    }
+}
+
+impl std::fmt::Display for Class {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Class::Monitor => f.write_str("monitor"),
+            Class::Analytics => f.write_str("analytics"),
+        }
+    }
+}
+
+/// Shared node-side budget-overrun accounting: the node cannot un-spend
+/// the time, but a serving deployment needs to SEE misses, attributed to
+/// the class that suffered them. Used by `LocalNode::query_batch_budget`,
+/// which serves both the in-process path and the TCP server path — so
+/// local and remote nodes report overruns identically. Returns whether
+/// the batch overran its budget.
+pub fn note_batch_overrun(
+    node_id: usize,
+    class: Class,
+    budget_us: u64,
+    spent: Duration,
+    nq: usize,
+) -> bool {
+    if budget_us == crate::coordinator::orchestrator::NO_BUDGET {
+        return false;
+    }
+    let spent_us = spent.as_micros().min(u64::MAX as u128) as u64;
+    if spent_us <= budget_us {
+        return false;
+    }
+    crate::log_info!(
+        "node",
+        "budget overrun [{class}]: node {node_id} spent {spent_us}us > {budget_us}us for {nq} queries"
+    );
+    true
+}
 
 // ---------------------------------------------------------------------------
 // Clock
@@ -287,11 +392,32 @@ pub struct AdmissionConfig {
     /// Seed for the jitter RNG; batching decisions are reproducible from
     /// (submission order, clock, seed).
     pub seed: u64,
+    /// Anti-starvation bound for the analytics lane: an analytics request
+    /// that has been pending this long is promoted into the very next cut
+    /// ahead of monitors, and fires an [`CutReason::Aged`] cut of its own
+    /// if no other trigger arrives first. Under sustained monitor load,
+    /// analytics dispatch latency is therefore bounded by `age_bound`
+    /// plus one pipeline slot, never unbounded.
+    pub age_bound: Duration,
+    /// Dispatch pipeline depth: how many cuts may be in flight downstream
+    /// of the cutter (the one being dispatched plus those queued for the
+    /// dispatcher). With `pipeline >= 2` the cutter forms cut N+1 while
+    /// cut N is still in the reducer; `1` degenerates to a rendezvous
+    /// handoff (the cutter still never blocks *inside* a dispatch).
+    pub pipeline: usize,
 }
 
 impl AdmissionConfig {
     pub fn new(dim: usize, max_batch: usize) -> AdmissionConfig {
-        AdmissionConfig { dim, max_batch, queue_cap: 1024, budget_jitter: 0.0, seed: 0 }
+        AdmissionConfig {
+            dim,
+            max_batch,
+            queue_cap: 1024,
+            budget_jitter: 0.0,
+            seed: 0,
+            age_bound: Duration::from_millis(25),
+            pipeline: 2,
+        }
     }
 
     pub fn with_queue_cap(mut self, cap: usize) -> AdmissionConfig {
@@ -302,6 +428,16 @@ impl AdmissionConfig {
     pub fn with_jitter(mut self, frac: f64, seed: u64) -> AdmissionConfig {
         self.budget_jitter = frac;
         self.seed = seed;
+        self
+    }
+
+    pub fn with_age_bound(mut self, bound: Duration) -> AdmissionConfig {
+        self.age_bound = bound;
+        self
+    }
+
+    pub fn with_pipeline(mut self, depth: usize) -> AdmissionConfig {
+        self.pipeline = depth;
         self
     }
 }
@@ -338,6 +474,9 @@ pub enum CutReason {
     Fill,
     /// The earliest pending deadline expired.
     Deadline,
+    /// An analytics request hit the anti-starvation aging bound before
+    /// any real deadline or fill trigger.
+    Aged,
     /// Shutdown drained the residue.
     Drain,
 }
@@ -361,12 +500,35 @@ impl std::fmt::Debug for Ticket {
     }
 }
 
+/// Per-lane counter snapshot (see [`AdmissionQueue::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LaneStats {
+    /// Requests of this class currently pending.
+    pub depth: usize,
+    /// Maximum pending depth ever observed for this class.
+    pub high_water: usize,
+    /// Total requests of this class admitted.
+    pub submitted: u64,
+    /// Requests of this class dispatched via fill cuts.
+    pub dispatched_fill: u64,
+    /// Requests of this class dispatched via deadline cuts.
+    pub dispatched_deadline: u64,
+    /// Requests of this class dispatched via aged (anti-starvation) cuts.
+    pub dispatched_aged: u64,
+    /// Requests of this class dispatched via shutdown drain cuts.
+    pub dispatched_drain: u64,
+    /// Requests of this class whose batch resolved after their deadline.
+    pub overruns: u64,
+    /// `try_submit` rejections of this class due to a full queue.
+    pub rejected_full: u64,
+}
+
 /// Counter snapshot (see [`AdmissionQueue::stats`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AdmissionStats {
-    /// Requests currently pending (admitted, not yet cut).
+    /// Requests currently pending (admitted, not yet cut), both lanes.
     pub depth: usize,
-    /// Maximum pending depth ever observed.
+    /// Maximum pending depth ever observed (both lanes combined).
     pub high_water: usize,
     /// Total requests admitted.
     pub submitted: u64,
@@ -376,19 +538,40 @@ pub struct AdmissionStats {
     pub rejected_full: u64,
     pub cuts_fill: u64,
     pub cuts_deadline: u64,
+    pub cuts_aged: u64,
     pub cuts_drain: u64,
+    /// Monitor-lane breakdown.
+    pub monitor: LaneStats,
+    /// Analytics-lane breakdown.
+    pub analytics: LaneStats,
 }
 
 struct Pending {
     q: Vec<f32>,
+    class: Class,
+    /// When the request was admitted (clock ns) — the aging origin.
+    enqueue_ns: u64,
     deadline_ns: u64,
     slot: SlotWriter<Result<QueryResult, AdmissionError>>,
 }
 
 struct State {
-    pending: VecDeque<Pending>,
+    /// Strict-priority lane, cut in deadline order.
+    monitors: VecDeque<Pending>,
+    /// Best-effort lane, FIFO, promoted after `age_bound`.
+    analytics: VecDeque<Pending>,
     shutdown: bool,
     jitter_rng: Xoshiro256,
+}
+
+impl State {
+    fn len(&self) -> usize {
+        self.monitors.len() + self.analytics.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.monitors.is_empty() && self.analytics.is_empty()
+    }
 }
 
 struct Shared {
@@ -400,14 +583,25 @@ struct Shared {
     clock: Arc<dyn Clock>,
     queue: Arc<QueueStats>,
     cuts: Arc<CutCounters>,
+    /// Per-class depth gauges, indexed by `Class::idx()`.
+    lane_queue: [Arc<QueueStats>; 2],
+    /// Per-class dispatch/overrun counters, indexed by `Class::idx()`.
+    lane_counters: [Arc<LaneCounters>; 2],
     cfg: AdmissionConfig,
 }
 
-/// The admission queue: bounded submission FIFO + deadline-aware cutter
-/// thread. See the [module docs](self) for the full contract.
+/// One cut on its way from the cutter to the dispatcher.
+struct CutJob {
+    batch: Vec<Pending>,
+}
+
+/// The admission queue: two bounded scheduling lanes + deadline-aware
+/// cutter thread + pipelined dispatcher thread. See the
+/// [module docs](self) for the full contract.
 pub struct AdmissionQueue {
     shared: Arc<Shared>,
     cutter: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
 }
 
 /// Effective budget in nanoseconds after jitter. Pure so tests can prove
@@ -426,39 +620,153 @@ fn jittered_budget_ns(budget: Duration, jitter_frac: f64, rng: &mut Xoshiro256) 
     }
 }
 
-/// The cut decision — a pure function of (queue state, `max_batch`, now).
-/// `None` means keep waiting. A deadline cut fires on the *earliest*
-/// deadline among pending requests (not merely the FIFO front: a tight
-/// budget submitted behind a loose one must still be honored); since
-/// `pending < max_batch` whenever a deadline cut fires, it takes the
-/// whole queue and the urgent request always rides the cut it triggered.
-fn take_cut(st: &mut State, max_batch: usize, now_ns: u64) -> Option<(Vec<Pending>, CutReason)> {
-    if st.pending.is_empty() {
+/// A pending request's *effective* deadline: the instant at which the
+/// cutter must ship it. For monitors that is the real budget deadline;
+/// for analytics it is the earlier of the budget deadline and the
+/// anti-starvation promotion instant (`enqueue + age_bound`). The bool
+/// is `true` when the promotion instant is the binding one — that is
+/// what makes a triggered cut [`CutReason::Aged`] vs
+/// [`CutReason::Deadline`].
+fn effective_deadline_ns(p: &Pending, age_bound_ns: u64) -> (u64, bool) {
+    match p.class {
+        Class::Monitor => (p.deadline_ns, false),
+        Class::Analytics => {
+            let promo = p.enqueue_ns.saturating_add(age_bound_ns);
+            if promo < p.deadline_ns {
+                (promo, true)
+            } else {
+                (p.deadline_ns, false)
+            }
+        }
+    }
+}
+
+/// Earliest effective deadline across both lanes — what the cutter
+/// sleeps toward.
+fn earliest_effective_ns(st: &State, age_bound_ns: u64) -> Option<u64> {
+    st.monitors
+        .iter()
+        .chain(st.analytics.iter())
+        .map(|p| effective_deadline_ns(p, age_bound_ns).0)
+        .min()
+}
+
+/// The cut decision — a pure function of (lane state, `max_batch`,
+/// `age_bound`, now). `None` means keep waiting.
+///
+/// **Trigger.** Fill when both lanes together hold `max_batch`; drain
+/// under shutdown; otherwise the *earliest effective deadline* across
+/// both lanes (not merely a lane front: a tight budget submitted behind
+/// a loose one must still be honored). Since `pending < max_batch`
+/// whenever a deadline/aged cut fires, it takes the whole queue and the
+/// urgent request always rides the cut it triggered. A cut whose trigger
+/// was an analytics promotion is reported as [`CutReason::Aged`]; ties
+/// with a real deadline report [`CutReason::Deadline`].
+///
+/// **Composition** (matters only when `pending > max_batch`): ONE slot
+/// goes to the oldest due-or-aged analytics request, if any (the
+/// anti-starvation bound must hold even under fill pressure, but it is
+/// capped at one slot per cut so an aged-analytics *backlog* drains one
+/// per cut instead of inverting priority and starving monitors); the
+/// rest go to monitors by earliest deadline (stable: equal deadlines
+/// keep arrival order), then to fresh analytics FIFO. Batch composition
+/// never changes per-query results (reduction is order-invariant; see
+/// `rust/tests/admission_parity.rs`) — it changes only who waits.
+fn take_cut(
+    st: &mut State,
+    max_batch: usize,
+    age_bound_ns: u64,
+    now_ns: u64,
+) -> Option<(Vec<Pending>, CutReason)> {
+    let total = st.len();
+    if total == 0 {
         return None;
     }
-    // The deadline scan is only paid on the not-full path, where
-    // `pending < max_batch` bounds it; a fill cut never reads deadlines.
-    let reason = if st.pending.len() >= max_batch {
+    // The full deadline scan is only paid on the not-full path, where
+    // `pending < max_batch` bounds it; a fill cut reads at most one
+    // effective deadline (the analytics front, in composition step 1).
+    let reason = if total >= max_batch {
         CutReason::Fill
     } else if st.shutdown {
         CutReason::Drain
-    } else if st.pending.iter().map(|p| p.deadline_ns).min().unwrap() <= now_ns {
-        CutReason::Deadline
     } else {
-        return None;
+        let mut min_dl = u64::MAX;
+        let mut min_promoted = false;
+        for p in st.monitors.iter().chain(st.analytics.iter()) {
+            let (d, promoted) = effective_deadline_ns(p, age_bound_ns);
+            if d < min_dl {
+                min_dl = d;
+                min_promoted = promoted;
+            } else if d == min_dl && !promoted {
+                min_promoted = false;
+            }
+        }
+        if min_dl > now_ns {
+            return None;
+        }
+        if min_promoted {
+            CutReason::Aged
+        } else {
+            CutReason::Deadline
+        }
     };
-    let n = st.pending.len().min(max_batch);
-    Some((st.pending.drain(..n).collect(), reason))
+
+    let n = total.min(max_batch);
+    let mut batch: Vec<Pending> = Vec::with_capacity(n);
+
+    // Whole-queue cut (every deadline/aged/drain cut, and an exactly-full
+    // fill cut): composition cannot change membership, so skip the
+    // selection machinery — this is the common case and it runs under the
+    // state mutex. Order within a batch is cosmetic (results are zipped
+    // back by index; the budget is a min over the batch).
+    if n == total {
+        batch.extend(st.monitors.drain(..));
+        batch.extend(st.analytics.drain(..));
+        return Some((batch, reason));
+    }
+
+    // (1) The oldest due-or-aged analytics request, if any: the
+    // starvation bound holds even when monitors could fill the whole
+    // batch, but only ONE promoted slot per cut — a deep aged backlog
+    // drains one per cut rather than shutting monitors out entirely.
+    // FIFO admission means the front of the lane is the oldest, so a
+    // front check suffices (no lane scan on the fill path).
+    if let Some(front) = st.analytics.front() {
+        if effective_deadline_ns(front, age_bound_ns).0 <= now_ns {
+            batch.push(st.analytics.pop_front().unwrap());
+        }
+    }
+
+    // (2) Monitors, earliest deadline first (stable on ties).
+    if batch.len() < n && !st.monitors.is_empty() {
+        let take = (n - batch.len()).min(st.monitors.len());
+        let mut all: Vec<(usize, Pending)> = st.monitors.drain(..).enumerate().collect();
+        all.sort_by_key(|(i, p)| (p.deadline_ns, *i));
+        let mut rest = all.split_off(take);
+        batch.extend(all.into_iter().map(|(_, p)| p));
+        // Put the leftovers back in arrival order.
+        rest.sort_by_key(|(i, _)| *i);
+        st.monitors.extend(rest.into_iter().map(|(_, p)| p));
+    }
+
+    // (3) Fresh analytics, FIFO, into the remaining slots.
+    while batch.len() < n {
+        batch.push(st.analytics.pop_front().expect("slot accounting: n <= total"));
+    }
+
+    Some((batch, reason))
 }
 
 impl AdmissionQueue {
     /// Start the queue with the production clock. `dispatch` resolves one
     /// flat row-major block (`nq × dim` floats, plus the remaining budget
-    /// in µs of the batch's most urgent request, saturating to 0 once the
-    /// deadline has passed) and returns exactly `nq` results in order.
+    /// in µs of the batch's most urgent request — saturating to 0 once
+    /// the deadline has passed — and the batch's scheduling class:
+    /// [`Class::Monitor`] if any monitor rides the cut) and returns
+    /// exactly `nq` results in order.
     pub fn start<D>(cfg: AdmissionConfig, dispatch: D) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, u64) -> Vec<QueryResult> + Send + 'static,
+        D: FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static,
     {
         AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(SystemClock::new()))
     }
@@ -470,14 +778,16 @@ impl AdmissionQueue {
         clock: Arc<dyn Clock>,
     ) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, u64) -> Vec<QueryResult> + Send + 'static,
+        D: FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static,
     {
         assert!(cfg.dim > 0, "admission dim must be positive");
         assert!(cfg.max_batch > 0, "max_batch must be positive");
         assert!(cfg.queue_cap > 0, "queue_cap must be positive");
+        assert!(cfg.pipeline > 0, "pipeline depth must be positive");
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
-                pending: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
+                monitors: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
+                analytics: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
                 shutdown: false,
                 jitter_rng: Xoshiro256::seed_from_u64(cfg.seed),
             }),
@@ -486,30 +796,98 @@ impl AdmissionQueue {
             clock,
             queue: Arc::new(QueueStats::new()),
             cuts: Arc::new(CutCounters::new()),
+            lane_queue: [Arc::new(QueueStats::new()), Arc::new(QueueStats::new())],
+            lane_counters: [Arc::new(LaneCounters::new()), Arc::new(LaneCounters::new())],
             cfg,
         });
+
+        // Pipelined dispatch: the cutter feeds cuts into a bounded
+        // channel (`pipeline` batches in flight: one being dispatched
+        // plus `pipeline - 1` queued) and keeps cutting — a deadline
+        // falling due while a batch is on the cluster fires on time
+        // instead of waiting out the dispatch.
+        let (cut_tx, cut_rx) = sync_channel::<CutJob>(shared.cfg.pipeline - 1);
+
+        let shared_d = Arc::clone(&shared);
+        let dispatcher = std::thread::Builder::new()
+            .name("admission-dispatch".into())
+            .spawn(move || {
+                let shared = shared_d;
+                while let Ok(CutJob { batch }) = cut_rx.recv() {
+                    let nq = batch.len();
+                    let start_ns = shared.clock.now_ns();
+                    // Remaining budget of the batch's most urgent request
+                    // — time spent queued behind the pipeline counts
+                    // against it.
+                    let budget_us = batch
+                        .iter()
+                        .map(|p| p.deadline_ns)
+                        .min()
+                        .map(|dl| dl.saturating_sub(start_ns) / 1_000)
+                        .unwrap_or(0);
+                    let class = if batch.iter().any(|p| p.class == Class::Monitor) {
+                        Class::Monitor
+                    } else {
+                        Class::Analytics
+                    };
+                    let mut flat = Vec::with_capacity(nq * shared.cfg.dim);
+                    for p in &batch {
+                        flat.extend_from_slice(&p.q);
+                    }
+                    let results = dispatch(flat, nq, budget_us, class);
+                    // Per-class overrun attribution: every request whose
+                    // deadline passed before its batch resolved is a miss
+                    // the lane counters must surface.
+                    let end_ns = shared.clock.now_ns();
+                    let mut overruns = [0u64; 2];
+                    for p in &batch {
+                        if end_ns > p.deadline_ns {
+                            overruns[p.class.idx()] += 1;
+                        }
+                    }
+                    for (idx, n) in overruns.into_iter().enumerate() {
+                        if n > 0 {
+                            shared.lane_counters[idx].record_overruns(n);
+                        }
+                    }
+                    if results.len() == nq {
+                        for (p, r) in batch.into_iter().zip(results) {
+                            p.slot.fulfill(Ok(r));
+                        }
+                    } else {
+                        // Downstream died (cluster teardown): fail the
+                        // whole batch rather than misalign replies.
+                        for p in batch {
+                            p.slot.fulfill(Err(AdmissionError::Canceled));
+                        }
+                    }
+                }
+            })
+            .expect("spawn admission dispatcher");
+
         let shared_c = Arc::clone(&shared);
         let cutter = std::thread::Builder::new()
             .name("admission-cutter".into())
             .spawn(move || {
                 let shared = shared_c;
                 let max_batch = shared.cfg.max_batch;
+                let age_bound_ns = shared.cfg.age_bound.as_nanos().min(u64::MAX as u128) as u64;
                 loop {
                     // Phase 1 (locked): wait for a cut to become due.
                     let cut = {
                         let mut st = shared.state.lock().unwrap();
                         loop {
                             let now = shared.clock.now_ns();
-                            if let Some(c) = take_cut(&mut st, max_batch, now) {
-                                break Some((c, now));
+                            if let Some(c) = take_cut(&mut st, max_batch, age_bound_ns, now) {
+                                break Some(c);
                             }
                             if st.shutdown {
                                 // take_cut drains any residue before this
                                 // arm can be reached.
-                                debug_assert!(st.pending.is_empty());
+                                debug_assert!(st.is_empty());
                                 break None;
                             }
-                            match st.pending.iter().map(|p| p.deadline_ns).min() {
+                            match earliest_effective_ns(&st, age_bound_ns) {
                                 None => st = shared.cutter_wake.wait(st).unwrap(),
                                 Some(dl) => {
                                     // dl > now, else take_cut would have
@@ -522,60 +900,107 @@ impl AdmissionQueue {
                             }
                         }
                     };
-                    let Some(((batch, reason), now)) = cut else { return };
+                    let Some((batch, reason)) = cut else { break };
+
+                    // Phase 2 (unlocked): account the cut, then hand it
+                    // to the dispatcher. Counters are recorded *before*
+                    // the (possibly blocking) pipeline send so tests and
+                    // dashboards observe a cut the moment it is decided.
                     shared.queue.on_dequeue(batch.len());
+                    let mut per_class = [0u64; 2];
+                    for p in &batch {
+                        per_class[p.class.idx()] += 1;
+                    }
+                    for (idx, n) in per_class.into_iter().enumerate() {
+                        if n > 0 {
+                            shared.lane_queue[idx].on_dequeue(n as usize);
+                            match reason {
+                                CutReason::Fill => shared.lane_counters[idx].record_fill(n),
+                                CutReason::Deadline => {
+                                    shared.lane_counters[idx].record_deadline(n)
+                                }
+                                CutReason::Aged => shared.lane_counters[idx].record_aged(n),
+                                CutReason::Drain => shared.lane_counters[idx].record_drain(n),
+                            }
+                        }
+                    }
                     shared.space_free.notify_all();
                     match reason {
                         CutReason::Fill => shared.cuts.record_fill(),
                         CutReason::Deadline => shared.cuts.record_deadline(),
+                        CutReason::Aged => shared.cuts.record_aged(),
                         CutReason::Drain => shared.cuts.record_drain(),
                     }
-
-                    // Phase 2 (unlocked): flatten, dispatch, fulfill.
-                    let nq = batch.len();
-                    let budget_us = batch
-                        .iter()
-                        .map(|p| p.deadline_ns)
-                        .min()
-                        .map(|dl| dl.saturating_sub(now) / 1_000)
-                        .unwrap_or(0);
-                    let mut flat = Vec::with_capacity(nq * shared.cfg.dim);
-                    for p in &batch {
-                        flat.extend_from_slice(&p.q);
-                    }
-                    let results = dispatch(flat, nq, budget_us);
-                    if results.len() == nq {
-                        for (p, r) in batch.into_iter().zip(results) {
-                            p.slot.fulfill(Ok(r));
-                        }
-                    } else {
-                        // Dispatcher died (cluster teardown): fail the
-                        // whole batch rather than misalign replies.
-                        for p in batch {
+                    if let Err(std::sync::mpsc::SendError(job)) = cut_tx.send(CutJob { batch }) {
+                        // Dispatcher died (a user dispatch closure
+                        // panicked): fail this cut AND everything still
+                        // queued, and close the queue — otherwise pending
+                        // tickets would park forever and later submits
+                        // would be admitted into a dead queue.
+                        for p in job.batch {
                             p.slot.fulfill(Err(AdmissionError::Canceled));
                         }
+                        let mut st = shared.state.lock().unwrap();
+                        st.shutdown = true;
+                        let stranded: Vec<Pending> =
+                            st.monitors.drain(..).chain(st.analytics.drain(..)).collect();
+                        drop(st);
+                        shared.queue.on_dequeue(stranded.len());
+                        shared.space_free.notify_all();
+                        for p in stranded {
+                            shared.lane_queue[p.class.idx()].on_dequeue(1);
+                            p.slot.fulfill(Err(AdmissionError::Canceled));
+                        }
+                        break;
                     }
                 }
+                // Cutter exit drops `cut_tx`; the dispatcher drains the
+                // remaining pipeline and exits.
             })
             .expect("spawn admission cutter");
-        AdmissionQueue { shared, cutter: Some(cutter) }
+        AdmissionQueue { shared, cutter: Some(cutter), dispatcher: Some(dispatcher) }
     }
 
-    /// Admit one query with a latency budget, blocking while the queue is
-    /// at capacity. The deadline is `now + budget` (± configured jitter).
+    /// Admit one [`Class::Monitor`] query with a latency budget, blocking
+    /// while the queue is at capacity. The deadline is `now + budget`
+    /// (± configured jitter). Monitor is the default class because single
+    /// submissions model the paper's latency-first ICU callers; bulk
+    /// callers opt into the analytics lane via
+    /// [`submit_class`](AdmissionQueue::submit_class).
     pub fn submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
-        self.submit_inner(q, budget, true)
+        self.submit_inner(q, budget, Class::Monitor, true)
+    }
+
+    /// Admit one query into an explicit scheduling lane.
+    pub fn submit_class(
+        &self,
+        q: &[f32],
+        budget: Duration,
+        class: Class,
+    ) -> Result<Ticket, AdmissionError> {
+        self.submit_inner(q, budget, class, true)
     }
 
     /// Non-blocking admission: `Err(QueueFull)` instead of waiting.
     pub fn try_submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
-        self.submit_inner(q, budget, false)
+        self.submit_inner(q, budget, Class::Monitor, false)
+    }
+
+    /// Non-blocking admission into an explicit scheduling lane.
+    pub fn try_submit_class(
+        &self,
+        q: &[f32],
+        budget: Duration,
+        class: Class,
+    ) -> Result<Ticket, AdmissionError> {
+        self.submit_inner(q, budget, class, false)
     }
 
     fn submit_inner(
         &self,
         q: &[f32],
         budget: Duration,
+        class: Class,
         block: bool,
     ) -> Result<Ticket, AdmissionError> {
         assert_eq!(q.len(), self.shared.cfg.dim, "query dimension mismatch");
@@ -584,11 +1009,12 @@ impl AdmissionQueue {
             if st.shutdown {
                 return Err(AdmissionError::ShuttingDown);
             }
-            if st.pending.len() < self.shared.cfg.queue_cap {
+            if st.len() < self.shared.cfg.queue_cap {
                 break;
             }
             if !block {
                 self.shared.queue.on_reject();
+                self.shared.lane_queue[class.idx()].on_reject();
                 return Err(AdmissionError::QueueFull);
             }
             st = self.shared.space_free.wait(st).unwrap();
@@ -597,14 +1023,35 @@ impl AdmissionQueue {
         let eff = jittered_budget_ns(budget, self.shared.cfg.budget_jitter, &mut st.jitter_rng);
         let deadline_ns = now.saturating_add(eff);
         let (writer, reader) = completion_slot();
-        st.pending.push_back(Pending { q: q.to_vec(), deadline_ns, slot: writer });
+        let pending = Pending { q: q.to_vec(), class, enqueue_ns: now, deadline_ns, slot: writer };
+        match class {
+            Class::Monitor => st.monitors.push_back(pending),
+            Class::Analytics => st.analytics.push_back(pending),
+        }
         self.shared.queue.on_enqueue(1);
+        self.shared.lane_queue[class.idx()].on_enqueue(1);
         drop(st);
         self.shared.cutter_wake.notify_one();
         Ok(Ticket { reader })
     }
 
-    /// Counter snapshot: queue depth + cut-reason mix.
+    fn lane_stats(&self, class: Class) -> LaneStats {
+        let q = &self.shared.lane_queue[class.idx()];
+        let c = &self.shared.lane_counters[class.idx()];
+        LaneStats {
+            depth: q.depth(),
+            high_water: q.high_water(),
+            submitted: q.enqueued(),
+            dispatched_fill: c.fill(),
+            dispatched_deadline: c.deadline(),
+            dispatched_aged: c.aged(),
+            dispatched_drain: c.drain(),
+            overruns: c.overruns(),
+            rejected_full: q.rejected(),
+        }
+    }
+
+    /// Counter snapshot: queue depth + cut-reason mix + per-lane split.
     pub fn stats(&self) -> AdmissionStats {
         AdmissionStats {
             depth: self.shared.queue.depth(),
@@ -614,7 +1061,10 @@ impl AdmissionQueue {
             rejected_full: self.shared.queue.rejected(),
             cuts_fill: self.shared.cuts.fill(),
             cuts_deadline: self.shared.cuts.deadline(),
+            cuts_aged: self.shared.cuts.aged(),
             cuts_drain: self.shared.cuts.drain(),
+            monitor: self.lane_stats(Class::Monitor),
+            analytics: self.lane_stats(Class::Analytics),
         }
     }
 
@@ -630,6 +1080,14 @@ impl AdmissionQueue {
     pub fn cut_counters(&self) -> Arc<CutCounters> {
         Arc::clone(&self.shared.cuts)
     }
+
+    /// Live per-lane dispatch/overrun counters (shared handle, see
+    /// [`queue_stats`]).
+    ///
+    /// [`queue_stats`]: AdmissionQueue::queue_stats
+    pub fn lane_counters(&self, class: Class) -> Arc<LaneCounters> {
+        Arc::clone(&self.shared.lane_counters[class.idx()])
+    }
 }
 
 impl Drop for AdmissionQueue {
@@ -641,7 +1099,13 @@ impl Drop for AdmissionQueue {
         // Wake everyone: the cutter to drain, blocked submitters to bail.
         self.shared.cutter_wake.notify_all();
         self.shared.space_free.notify_all();
+        // Join order matters: the cutter drains the lanes into the
+        // pipeline and drops its sender; only then does the dispatcher's
+        // receive loop end.
         if let Some(j) = self.cutter.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.dispatcher.take() {
             let _ = j.join();
         }
     }
@@ -655,11 +1119,11 @@ impl Drop for AdmissionQueue {
 /// [`Orchestrator::enable_admission`]: crate::coordinator::Orchestrator::enable_admission
 pub(crate) fn root_dispatcher(
     root_tx: Sender<crate::coordinator::orchestrator::RootRequest>,
-) -> impl FnMut(Vec<f32>, usize, u64) -> Vec<QueryResult> + Send + 'static {
+) -> impl FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static {
     use crate::coordinator::orchestrator::RootRequest;
-    move |qs: Vec<f32>, nq: usize, budget_us: u64| -> Vec<QueryResult> {
+    move |qs: Vec<f32>, nq: usize, budget_us: u64, class: Class| -> Vec<QueryResult> {
         let (tx, rx) = channel();
-        if root_tx.send(RootRequest::Batch { qs, nq, budget_us, reply_to: tx }).is_err() {
+        if root_tx.send(RootRequest::Batch { qs, nq, budget_us, class, reply_to: tx }).is_err() {
             return Vec::new();
         }
         rx.recv().unwrap_or_default()
@@ -670,22 +1134,44 @@ pub(crate) fn root_dispatcher(
 mod tests {
     use super::*;
 
-    fn pending(deadline_ns: u64) -> Pending {
+    /// Far enough out that MockClock tests never promote it (the default
+    /// 25ms age bound is in play unless a test overrides it).
+    const NEVER: u64 = u64::MAX / 2;
+
+    fn pending(class: Class, enqueue_ns: u64, deadline_ns: u64) -> Pending {
         let (writer, _reader) = completion_slot();
-        Pending { q: vec![0.0], deadline_ns, slot: writer }
+        Pending { q: vec![0.0], class, enqueue_ns, deadline_ns, slot: writer }
     }
 
-    fn state(deadlines: &[u64], shutdown: bool) -> State {
-        State {
-            pending: deadlines.iter().map(|&d| pending(d)).collect(),
+    /// Build a two-lane state from `(class, enqueue_ns, deadline_ns)`
+    /// rows (lane order within each class follows row order).
+    fn state(items: &[(Class, u64, u64)], shutdown: bool) -> State {
+        let mut st = State {
+            monitors: VecDeque::new(),
+            analytics: VecDeque::new(),
             shutdown,
             jitter_rng: Xoshiro256::seed_from_u64(0),
+        };
+        for &(class, enq, dl) in items {
+            let p = pending(class, enq, dl);
+            match class {
+                Class::Monitor => st.monitors.push_back(p),
+                Class::Analytics => st.analytics.push_back(p),
+            }
         }
+        st
+    }
+
+    /// All-monitor shorthand for the legacy single-lane cases.
+    fn monitors(deadlines: &[u64], shutdown: bool) -> State {
+        let rows: Vec<(Class, u64, u64)> =
+            deadlines.iter().map(|&d| (Class::Monitor, 0, d)).collect();
+        state(&rows, shutdown)
     }
 
     /// Fake dispatcher that echoes each query's first coordinate back in
     /// `positive_share` — proves result↔caller alignment end to end.
-    fn echo(flat: Vec<f32>, nq: usize, _budget_us: u64) -> Vec<QueryResult> {
+    fn echo(flat: Vec<f32>, nq: usize, _budget_us: u64, _class: Class) -> Vec<QueryResult> {
         let dim = if nq == 0 { 0 } else { flat.len() / nq };
         (0..nq)
             .map(|i| QueryResult {
@@ -702,9 +1188,13 @@ mod tests {
 
     // -- table-driven cut decisions (pure, MockClock-style time values) --
 
+    const AGE: u64 = 10_000; // aging bound used by the decision tables
+
     #[test]
-    fn cut_decision_table() {
-        // (deadlines, shutdown, max_batch, now) -> expected (len, reason).
+    fn cut_decision_table_single_lane() {
+        // All-monitor cases — the PR 2 contract must survive the lane
+        // split unchanged. (deadlines, shutdown, max_batch, now) ->
+        // expected (len, reason).
         let cases: &[(&[u64], bool, usize, u64, Option<(usize, CutReason)>)] = &[
             // Empty queue never cuts, even under shutdown.
             (&[], false, 4, 0, None),
@@ -733,23 +1223,147 @@ mod tests {
             (&[1_000_000; 4], true, 4, 0, Some((4, CutReason::Fill))),
         ];
         for (i, (deadlines, shutdown, max_batch, now, want)) in cases.iter().enumerate() {
-            let mut st = state(deadlines, *shutdown);
-            let got = take_cut(&mut st, *max_batch, *now);
+            let mut st = monitors(deadlines, *shutdown);
+            let got = take_cut(&mut st, *max_batch, AGE, *now);
             match (got, want) {
                 (None, None) => {}
                 (Some((batch, reason)), Some((want_len, want_reason))) => {
                     assert_eq!(batch.len(), *want_len, "case {i}: cut size");
                     assert_eq!(reason, *want_reason, "case {i}: cut reason");
-                    // FIFO order is preserved within the cut.
-                    assert_eq!(
-                        st.pending.len(),
-                        deadlines.len() - want_len,
-                        "case {i}: residue"
-                    );
+                    assert_eq!(st.len(), deadlines.len() - want_len, "case {i}: residue");
                 }
-                (got, want) => panic!("case {i}: got {got:?} want {want:?}", got = got.map(|(b, r)| (b.len(), r)), want = want),
+                (got, want) => panic!(
+                    "case {i}: got {got:?} want {want:?}",
+                    got = got.map(|(b, r)| (b.len(), r)),
+                    want = want
+                ),
             }
         }
+    }
+
+    #[test]
+    fn cut_decision_table_two_lanes() {
+        use Class::{Analytics as A, Monitor as M};
+        use CutReason::{Aged, Deadline, Fill};
+        // (rows, max_batch, now) -> expected (len, reason). Aging bound
+        // is AGE; all states are live (no shutdown).
+        let cases: &[(&[(Class, u64, u64)], usize, u64, Option<(usize, CutReason)>)] = &[
+            // Both lanes count toward the fill trigger.
+            (&[(M, 0, NEVER), (A, 0, NEVER), (M, 0, NEVER), (A, 0, NEVER)], 4, 0, Some((4, Fill))),
+            // An analytics *real* deadline triggers a Deadline cut even
+            // though it sits behind the monitor lane.
+            (&[(M, 0, NEVER), (A, 0, 1000)], 4, 1000, Some((2, Deadline))),
+            (&[(M, 0, NEVER), (A, 0, 1000)], 4, 999, None),
+            // An analytics request whose age hits the bound fires an
+            // Aged cut at enqueue + AGE, long before its real deadline.
+            (&[(A, 0, NEVER)], 4, AGE - 1, None),
+            (&[(A, 0, NEVER)], 4, AGE, Some((1, Aged))),
+            // ... and monitors pending alongside ride the same cut.
+            (&[(M, 0, NEVER), (A, 0, NEVER)], 4, AGE, Some((2, Aged))),
+            // A monitor deadline tying with a promotion reports Deadline.
+            (&[(M, 0, AGE), (A, 0, NEVER)], 4, AGE, Some((2, Deadline))),
+            // A monitor deadline earlier than any promotion: Deadline.
+            (&[(M, 0, 500), (A, 0, NEVER)], 4, 500, Some((2, Deadline))),
+            // Analytics whose real deadline is earlier than its promotion
+            // (budget tighter than the aging bound) reports Deadline.
+            (&[(A, 0, 500)], 4, 500, Some((1, Deadline))),
+        ];
+        for (i, (rows, max_batch, now, want)) in cases.iter().enumerate() {
+            let mut st = state(rows, false);
+            let got = take_cut(&mut st, *max_batch, AGE, *now);
+            match (got, want) {
+                (None, None) => {}
+                (Some((batch, reason)), Some((want_len, want_reason))) => {
+                    assert_eq!(batch.len(), *want_len, "case {i}: cut size");
+                    assert_eq!(reason, *want_reason, "case {i}: cut reason");
+                    assert_eq!(st.len(), rows.len() - want_len, "case {i}: residue");
+                }
+                (got, want) => panic!(
+                    "case {i}: got {got:?} want {want:?}",
+                    got = got.map(|(b, r)| (b.len(), r)),
+                    want = want
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn fill_cut_takes_monitors_before_fresh_analytics() {
+        use Class::{Analytics as A, Monitor as M};
+        // 2 slots, analytics submitted FIRST but not yet aged: monitors
+        // win the batch; the analytics request stays pending.
+        let mut st = state(&[(A, 0, NEVER), (M, 0, 5000), (M, 0, 3000)], false);
+        let (batch, reason) = take_cut(&mut st, 2, AGE, 0).unwrap();
+        assert_eq!(reason, CutReason::Fill);
+        assert_eq!(batch.iter().map(|p| p.class).collect::<Vec<_>>(), vec![M, M]);
+        // ... and monitors come out deadline-ordered, not arrival-ordered.
+        assert_eq!(batch.iter().map(|p| p.deadline_ns).collect::<Vec<_>>(), vec![3000, 5000]);
+        assert_eq!(st.analytics.len(), 1);
+        assert_eq!(st.monitors.len(), 0);
+    }
+
+    #[test]
+    fn aged_analytics_preempts_monitors_in_fill_cut() {
+        use Class::{Analytics as A, Monitor as M};
+        // The anti-starvation bound under sustained fill pressure: once
+        // the analytics request is past its age bound it takes a slot
+        // ahead of the (far-deadline) monitors.
+        let mut st = state(&[(A, 0, NEVER), (M, 0, NEVER), (M, 0, NEVER), (M, 0, NEVER)], false);
+        let (batch, reason) = take_cut(&mut st, 2, AGE, AGE).unwrap();
+        assert_eq!(reason, CutReason::Fill);
+        assert_eq!(batch[0].class, A, "aged analytics must ride the next cut");
+        assert_eq!(batch[1].class, M);
+        assert_eq!(st.monitors.len(), 2);
+        assert_eq!(st.analytics.len(), 0);
+    }
+
+    #[test]
+    fn aged_analytics_backlog_drains_one_slot_per_fill_cut() {
+        use Class::{Analytics as A, Monitor as M};
+        // The promotion is capped at one slot per cut: a deep aged
+        // backlog must not invert priority and shut monitors out — it
+        // drains FIFO, one request per cut, while monitors keep the
+        // remaining slots.
+        let mut st = state(
+            &[(A, 0, NEVER), (A, 0, NEVER), (A, 0, NEVER), (M, 0, 500), (M, 0, 600)],
+            false,
+        );
+        let (batch, reason) = take_cut(&mut st, 2, AGE, AGE).unwrap();
+        assert_eq!(reason, CutReason::Fill);
+        assert_eq!(batch.iter().map(|p| p.class).collect::<Vec<_>>(), vec![A, M]);
+        assert_eq!(batch[1].deadline_ns, 500, "tightest monitor keeps its slot");
+        assert_eq!(st.analytics.len(), 2, "backlog drains one per cut");
+        assert_eq!(st.monitors.len(), 1);
+        // Next cut: the next aged request plus the next monitor.
+        let (batch, _) = take_cut(&mut st, 2, AGE, AGE).unwrap();
+        assert_eq!(batch.iter().map(|p| p.class).collect::<Vec<_>>(), vec![A, M]);
+        assert_eq!(st.analytics.len(), 1);
+        assert_eq!(st.monitors.len(), 0);
+    }
+
+    #[test]
+    fn monitor_residue_keeps_arrival_order() {
+        use Class::Monitor as M;
+        // Overfull monitor lane: the cut takes the two earliest
+        // deadlines; the leftovers go back in arrival order.
+        let mut st = state(&[(M, 0, 400), (M, 0, 100), (M, 0, 300), (M, 0, 200)], false);
+        let (batch, _) = take_cut(&mut st, 2, AGE, 0).unwrap();
+        assert_eq!(batch.iter().map(|p| p.deadline_ns).collect::<Vec<_>>(), vec![100, 200]);
+        assert_eq!(
+            st.monitors.iter().map(|p| p.deadline_ns).collect::<Vec<_>>(),
+            vec![400, 300],
+            "residue must preserve arrival order"
+        );
+    }
+
+    #[test]
+    fn deadline_cut_takes_whole_queue_across_lanes() {
+        use Class::{Analytics as A, Monitor as M};
+        let mut st = state(&[(A, 0, NEVER), (M, 0, 1000), (A, 0, NEVER)], false);
+        let (batch, reason) = take_cut(&mut st, 16, AGE, 1000).unwrap();
+        assert_eq!(reason, CutReason::Deadline);
+        assert_eq!(batch.len(), 3, "a deadline cut takes every pending request");
+        assert_eq!(st.len(), 0);
     }
 
     #[test]
@@ -760,9 +1374,26 @@ mod tests {
         let deadline = 4242u64;
         for t in deadline.saturating_sub(3)..deadline + 3 {
             clock.set_ns(t);
-            let mut st = state(&[deadline], false);
-            let cut = take_cut(&mut st, 16, clock.now_ns());
+            let mut st = monitors(&[deadline], false);
+            let cut = take_cut(&mut st, 16, AGE, clock.now_ns());
             assert_eq!(cut.is_some(), t >= deadline, "t={t}");
+        }
+    }
+
+    #[test]
+    fn analytics_promotion_is_exact_over_mock_time_sweep() {
+        // The aging bound is as exact as a deadline: one tick before
+        // enqueue + age_bound -> wait, at it -> Aged cut.
+        let clock = MockClock::new(0);
+        let enq = 1234u64;
+        for t in (enq + AGE - 3)..(enq + AGE + 3) {
+            clock.set_ns(t);
+            let mut st = state(&[(Class::Analytics, enq, NEVER)], false);
+            let cut = take_cut(&mut st, 16, AGE, clock.now_ns());
+            assert_eq!(cut.is_some(), t >= enq + AGE, "t={t}");
+            if let Some((_, reason)) = cut {
+                assert_eq!(reason, CutReason::Aged);
+            }
         }
     }
 
@@ -792,47 +1423,72 @@ mod tests {
     /// them — every observable cut in these tests is Fill or Drain.
     const FAR: Duration = Duration::from_secs(3600);
 
+    /// Spin (bounded by real time) until a counter condition holds — the
+    /// cutter thread needs a moment to act on a notify; the *outcome* is
+    /// deterministic, only its arrival time is scheduler-dependent.
+    fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+            std::thread::yield_now();
+        }
+    }
+
     #[test]
     fn backpressure_blocks_instead_of_dropping() {
-        // (c): cap 2, max_batch 2, dispatcher gated so the queue refills
-        // while the cutter is stuck. All synchronization is via channel
-        // handshakes — no sleeps.
+        // (c): cap 2, max_batch 2, pipeline 1 (rendezvous handoff), and a
+        // gated dispatcher. With pipelined dispatch the cutter keeps
+        // cutting while a batch is gated, so filling the system takes one
+        // extra batch: {1,2} gated in the dispatcher, {3,4} parked at the
+        // rendezvous, {5,6} pending at capacity. Synchronization is via
+        // channel handshakes + counter waits — no sleeps.
         let (evt_tx, evt_rx) = channel::<usize>();
         let (gate_tx, gate_rx) = channel::<()>();
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: u64| {
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: u64, c: Class| {
             evt_tx.send(nq).unwrap();
             gate_rx.recv().unwrap();
-            echo(flat, nq, b)
+            echo(flat, nq, b, c)
         };
-        let cfg = AdmissionConfig::new(1, 2).with_queue_cap(2);
+        let cfg = AdmissionConfig::new(1, 2).with_queue_cap(2).with_pipeline(1);
         let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
 
         let t1 = q.submit(&[1.0], FAR).unwrap();
         let t2 = q.submit(&[2.0], FAR).unwrap();
-        // The cutter fill-cuts {1,2} and blocks inside the dispatcher.
+        // The cutter fill-cuts {1,2}; the dispatcher picks it up and
+        // blocks on the gate.
         assert_eq!(evt_rx.recv().unwrap(), 2);
         let t3 = q.submit(&[3.0], FAR).unwrap();
         let t4 = q.submit(&[4.0], FAR).unwrap();
-        // Queue at capacity and the cutter is gated: non-blocking
-        // admission must report backpressure, not drop.
-        assert!(matches!(q.try_submit(&[5.0], FAR), Err(AdmissionError::QueueFull)));
+        // {3,4} is cut (freeing the submission queue) but parks at the
+        // rendezvous because the dispatcher is gated.
+        wait_until(|| q.stats().completed == 4, "cutter to form the parked batch");
+        let t5 = q.submit(&[5.0], FAR).unwrap();
+        let t6 = q.submit(&[6.0], FAR).unwrap();
+        // Now {5,6} cannot be cut (the cutter is blocked handing {3,4}
+        // over) and the queue is at capacity: non-blocking admission must
+        // report backpressure, not drop.
+        assert!(matches!(q.try_submit(&[7.0], FAR), Err(AdmissionError::QueueFull)));
         assert_eq!(q.stats().rejected_full, 1);
 
         // A blocking submit parks until a cut frees a slot.
         let q_ref = &q;
-        let t5 = std::thread::scope(|s| {
-            let blocked = s.spawn(move || q_ref.submit(&[5.0], FAR).unwrap());
+        let t7 = std::thread::scope(|s| {
+            let blocked = s.spawn(move || q_ref.submit(&[7.0], FAR).unwrap());
             gate_tx.send(()).unwrap(); // release {1,2}
-            assert_eq!(evt_rx.recv().unwrap(), 2); // cutter took {3,4}
+            assert_eq!(evt_rx.recv().unwrap(), 2); // dispatcher took {3,4}
             gate_tx.send(()).unwrap(); // release {3,4}
-            let t5 = blocked.join().unwrap();
+            assert_eq!(evt_rx.recv().unwrap(), 2); // dispatcher took {5,6}
+            gate_tx.send(()).unwrap(); // release {5,6}
+            let t7 = blocked.join().unwrap();
             gate_tx.send(()).unwrap(); // pre-arm the gate for the drain cut
-            t5
+            t7
         });
-        drop(q); // drains {5}
+        drop(q); // drains {7}
 
         // Every admitted request resolved, in alignment with its payload.
-        for (t, want) in [(t1, 1.0), (t2, 2.0), (t3, 3.0), (t4, 4.0), (t5, 5.0)] {
+        for (t, want) in
+            [(t1, 1.0), (t2, 2.0), (t3, 3.0), (t4, 4.0), (t5, 5.0), (t6, 6.0), (t7, 7.0)]
+        {
             assert_eq!(t.wait().unwrap().positive_share, want);
         }
     }

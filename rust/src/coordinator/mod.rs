@@ -7,8 +7,8 @@ pub mod cluster;
 pub mod orchestrator;
 
 pub use admission::{
-    completion_slot, AdmissionConfig, AdmissionError, AdmissionQueue, AdmissionStats, Clock,
-    CutReason, MockClock, SystemClock, Ticket,
+    completion_slot, note_batch_overrun, AdmissionConfig, AdmissionError, AdmissionQueue,
+    AdmissionStats, Class, Clock, CutReason, LaneStats, MockClock, SystemClock, Ticket,
 };
 pub use cluster::{build_cluster, Cluster, ClusterConfig, EngineKind};
 pub use orchestrator::{NodeHandle, Orchestrator, QueryResult, NO_BUDGET};

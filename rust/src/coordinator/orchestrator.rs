@@ -27,7 +27,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::admission::{
-    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Ticket,
+    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Class, Ticket,
 };
 use crate::knn::heap::{Neighbor, TopK};
 use crate::knn::predict::{positive_share, VoteConfig};
@@ -61,15 +61,18 @@ pub trait NodeHandle: Send {
 
     /// Batch resolution carrying the admission cut's remaining latency
     /// budget (µs until the batch's most urgent deadline; [`NO_BUDGET`]
-    /// when the batch has none). The default ignores the budget — the
-    /// orchestrator-side cutter already made the cut — but transports
-    /// (TCP) override this to ship the budget with the frame so the far
-    /// side can honor the same deadline in its own scheduling.
+    /// when the batch has none) and the cut's scheduling class
+    /// ([`Class::Monitor`] if any monitor rides it). The default ignores
+    /// both — the orchestrator-side cutter already made the cut — but
+    /// transports (TCP) override this to ship budget + class with the
+    /// frame so the far side can honor the same deadline and attribute
+    /// overruns to the right lane.
     fn query_batch_budget(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
         _budget_us: u64,
+        _class: Class,
     ) -> Vec<NodeReply> {
         self.query_batch(qs, nq)
     }
@@ -93,8 +96,9 @@ impl NodeHandle for crate::node::node::LocalNode {
         qs: Arc<Vec<f32>>,
         nq: usize,
         budget_us: u64,
+        class: Class,
     ) -> Vec<NodeReply> {
-        crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget_us)
+        crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget_us, class)
     }
 }
 
@@ -121,14 +125,21 @@ enum Job {
     Single { qid: u64, q: Arc<Vec<f32>> },
     /// Flat row-major `nq × dim` block; query `i` has id `qid0 + i`.
     /// `budget_us` is the admission cut's remaining latency budget
-    /// ([`NO_BUDGET`] for caller-formed blocks).
-    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget_us: u64 },
+    /// ([`NO_BUDGET`] for caller-formed blocks); `class` is the cut's
+    /// scheduling class (monitor if any monitor rides it).
+    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget_us: u64, class: Class },
 }
 
 pub(crate) enum RootRequest {
     Single(Vec<f32>, Sender<QueryResult>),
     /// Flat row-major `nq × dim` block.
-    Batch { qs: Vec<f32>, nq: usize, budget_us: u64, reply_to: Sender<Vec<QueryResult>> },
+    Batch {
+        qs: Vec<f32>,
+        nq: usize,
+        budget_us: u64,
+        class: Class,
+        reply_to: Sender<Vec<QueryResult>>,
+    },
 }
 
 /// Orchestrator over ν nodes.
@@ -180,9 +191,10 @@ impl Orchestrator {
                                         break;
                                     }
                                 }
-                                Job::Batch { qid0, qs, nq, budget_us } => {
+                                Job::Batch { qid0, qs, nq, budget_us, class } => {
                                     let t0 = std::time::Instant::now();
-                                    let replies = node.query_batch_budget(qs, nq, budget_us);
+                                    let replies =
+                                        node.query_batch_budget(qs, nq, budget_us, class);
                                     let dt = t0.elapsed().as_secs_f64();
                                     debug_assert_eq!(replies.len(), nq);
                                     let mut dead = false;
@@ -299,7 +311,7 @@ impl Orchestrator {
                                 let _ = reply_to.send(result);
                                 qid += 1;
                             }
-                            RootRequest::Batch { qs, nq, budget_us, reply_to } => {
+                            RootRequest::Batch { qs, nq, budget_us, class, reply_to } => {
                                 let n = nq;
                                 if n == 0 {
                                     let _ = reply_to.send(Vec::new());
@@ -312,6 +324,7 @@ impl Orchestrator {
                                         qs: Arc::new(qs),
                                         nq,
                                         budget_us,
+                                        class,
                                     })
                                     .is_err()
                                 {
@@ -371,23 +384,32 @@ impl Orchestrator {
             assert_eq!(q.len(), dim, "ragged query batch");
             flat.extend_from_slice(q);
         }
-        self.query_batch_flat(flat, nq, NO_BUDGET)
+        // Caller-formed bulk blocks are analytics by nature: no latency
+        // budget, throughput-oriented.
+        self.query_batch_flat(flat, nq, NO_BUDGET, Class::Analytics)
     }
 
     /// Flat-buffer variant of [`query_batch`]: the block is already
-    /// row-major `nq × dim` (the admission cutter's native shape), and
+    /// row-major `nq × dim` (the admission cutter's native shape),
     /// `budget_us` carries the cut's remaining latency budget to the
-    /// nodes ([`NO_BUDGET`] when there is none).
+    /// nodes ([`NO_BUDGET`] when there is none), and `class` the cut's
+    /// scheduling class for node-side overrun attribution.
     ///
     /// [`query_batch`]: Orchestrator::query_batch
-    pub fn query_batch_flat(&self, qs: Vec<f32>, nq: usize, budget_us: u64) -> Vec<QueryResult> {
+    pub fn query_batch_flat(
+        &self,
+        qs: Vec<f32>,
+        nq: usize,
+        budget_us: u64,
+        class: Class,
+    ) -> Vec<QueryResult> {
         if nq == 0 {
             return Vec::new();
         }
         assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
         let (tx, rx) = channel();
         self.root_tx
-            .send(RootRequest::Batch { qs, nq, budget_us, reply_to: tx })
+            .send(RootRequest::Batch { qs, nq, budget_us, class, reply_to: tx })
             .expect("root thread gone");
         rx.recv().expect("root dropped reply")
     }
@@ -407,18 +429,34 @@ impl Orchestrator {
         self.admission = Some(AdmissionQueue::start(cfg, dispatch));
     }
 
-    /// Admit one query with a latency budget; returns a [`Ticket`] whose
-    /// [`wait`](Ticket::wait) yields the same result [`query`] would
-    /// (bit-identical reduction — the admission layer only changes *when*
-    /// work is dispatched, never what it computes). Requires
-    /// [`enable_admission`](Orchestrator::enable_admission).
+    /// Admit one [`Class::Monitor`] query with a latency budget; returns
+    /// a [`Ticket`] whose [`wait`](Ticket::wait) yields the same result
+    /// [`query`] would (bit-identical reduction — the admission layer
+    /// only changes *when* work is dispatched, never what it computes).
+    /// Requires [`enable_admission`](Orchestrator::enable_admission).
+    /// Bulk callers should use
+    /// [`submit_class`](Orchestrator::submit_class) with
+    /// [`Class::Analytics`] so they never delay a monitor past its
+    /// budget.
     ///
     /// [`query`]: Orchestrator::query
     pub fn submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
+        self.submit_class(q, budget, Class::Monitor)
+    }
+
+    /// Admit one query into an explicit scheduling lane (see
+    /// [`Class`]); same bit-identical-result contract as
+    /// [`submit`](Orchestrator::submit).
+    pub fn submit_class(
+        &self,
+        q: &[f32],
+        budget: Duration,
+        class: Class,
+    ) -> Result<Ticket, AdmissionError> {
         self.admission
             .as_ref()
             .expect("call enable_admission before submit")
-            .submit(q, budget)
+            .submit_class(q, budget, class)
     }
 
     /// The installed admission queue, if any (stats, `try_submit`).

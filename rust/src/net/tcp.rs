@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::admission::Class;
 use crate::coordinator::orchestrator::{NodeHandle, NO_BUDGET};
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
@@ -116,22 +117,14 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
-            Some(Message::QueryBatchBudget { qid0, nq, budget_us, qs }) => {
+            Some(Message::QueryBatchBudget { qid0, nq, budget_us, class, qs }) => {
                 let nq = validate_batch_geometry(nq, qs.len(), dim)
                     .map_err(|e| anyhow!("{e}"))?;
-                let t0 = std::time::Instant::now();
-                let replies = node.query_batch_budget(Arc::new(qs), nq, budget_us);
-                // Budget-overrun accounting: the node cannot un-spend the
-                // time, but a serving deployment needs to SEE misses.
-                if budget_us != NO_BUDGET {
-                    let spent_us = t0.elapsed().as_micros() as u64;
-                    if spent_us > budget_us {
-                        crate::log_info!(
-                            "node-server",
-                            "budget overrun: {spent_us}us > {budget_us}us for {nq} queries"
-                        );
-                    }
-                }
+                // Budget-overrun accounting lives inside
+                // `LocalNode::query_batch_budget` (shared with the
+                // in-process path via `note_batch_overrun`), so local and
+                // remote nodes report per-class overruns identically.
+                let replies = node.query_batch_budget(Arc::new(qs), nq, budget_us, class);
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
@@ -214,25 +207,33 @@ impl NodeHandle for RemoteNode {
     /// remote node resolves the block on its batched core path. (The
     /// wire message needs an owned buffer, so this copies once.)
     fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
-        self.batch_roundtrip(qs, nq, NO_BUDGET)
+        self.batch_roundtrip(qs, nq, NO_BUDGET, Class::Analytics)
     }
 
-    /// Admission cuts ship their remaining budget with the frame
-    /// (`QueryBatchBudget`) so the remote node can honor the same cut;
-    /// caller-formed blocks ([`NO_BUDGET`]) stay on the plain
-    /// `QueryBatch` frame for protocol compatibility.
+    /// Admission cuts ship their remaining budget and class with the
+    /// frame (`QueryBatchBudget`) so the remote node can honor the same
+    /// cut and attribute overruns per lane; caller-formed blocks
+    /// ([`NO_BUDGET`]) stay on the plain `QueryBatch` frame for protocol
+    /// compatibility.
     fn query_batch_budget(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
         budget_us: u64,
+        class: Class,
     ) -> Vec<NodeReply> {
-        self.batch_roundtrip(qs, nq, budget_us)
+        self.batch_roundtrip(qs, nq, budget_us, class)
     }
 }
 
 impl RemoteNode {
-    fn batch_roundtrip(&mut self, qs: Arc<Vec<f32>>, nq: usize, budget_us: u64) -> Vec<NodeReply> {
+    fn batch_roundtrip(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget_us: u64,
+        class: Class,
+    ) -> Vec<NodeReply> {
         if nq == 0 {
             return Vec::new();
         }
@@ -242,7 +243,13 @@ impl RemoteNode {
         let frame = if budget_us == NO_BUDGET {
             Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
         } else {
-            Message::QueryBatchBudget { qid0, nq: nq as u64, budget_us, qs: qs.as_ref().clone() }
+            Message::QueryBatchBudget {
+                qid0,
+                nq: nq as u64,
+                budget_us,
+                class,
+                qs: qs.as_ref().clone(),
+            }
         };
         frame.write_frame(&mut self.writer).expect("remote node write failed");
         let reply = Message::read_frame(&mut self.reader)

@@ -8,6 +8,7 @@
 
 use std::io::{Read, Write};
 
+use crate::coordinator::admission::Class;
 use crate::data::Dataset;
 use crate::knn::heap::Neighbor;
 use crate::slsh::SlshParams;
@@ -41,11 +42,12 @@ pub enum Message {
     QueryBatch { qid0: u64, nq: u64, qs: Vec<f32> },
     /// Root → node: a [`QueryBatch`](Message::QueryBatch) that carries
     /// the admission cut's remaining latency budget (µs until the batch's
-    /// most urgent deadline; `u64::MAX` = no budget). Remote nodes honor
-    /// the same cut the orchestrator-side cutter made — today that means
-    /// budget-overrun accounting, and it is the hook for node-side
-    /// shedding/priority scheduling.
-    QueryBatchBudget { qid0: u64, nq: u64, budget_us: u64, qs: Vec<f32> },
+    /// most urgent deadline; `u64::MAX` = no budget) and the cut's
+    /// scheduling class (monitor if any monitor rides it). Remote nodes
+    /// honor the same cut the orchestrator-side cutter made — today that
+    /// means per-class budget-overrun accounting, and it is the hook for
+    /// node-side shedding/priority scheduling.
+    QueryBatchBudget { qid0: u64, nq: u64, budget_us: u64, class: Class, qs: Vec<f32> },
     /// Node → root: per-query answers for one batch, in qid order.
     ReplyBatch { qid0: u64, replies: Vec<BatchReplyItem> },
     /// Root → node: drain and exit.
@@ -154,11 +156,12 @@ impl Message {
                 bytes::write_u64(&mut out, *nq).unwrap();
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
-            Message::QueryBatchBudget { qid0, nq, budget_us, qs } => {
+            Message::QueryBatchBudget { qid0, nq, budget_us, class, qs } => {
                 bytes::write_u8(&mut out, TAG_QUERY_BATCH_BUDGET).unwrap();
                 bytes::write_u64(&mut out, *qid0).unwrap();
                 bytes::write_u64(&mut out, *nq).unwrap();
                 bytes::write_u64(&mut out, *budget_us).unwrap();
+                bytes::write_u8(&mut out, class.as_u8()).unwrap();
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
             Message::ReplyBatch { qid0, replies } => {
@@ -216,12 +219,19 @@ impl Message {
                 nq: bytes::read_u64(&mut r)?,
                 qs: bytes::read_f32_vec(&mut r)?,
             }),
-            TAG_QUERY_BATCH_BUDGET => Ok(Message::QueryBatchBudget {
-                qid0: bytes::read_u64(&mut r)?,
-                nq: bytes::read_u64(&mut r)?,
-                budget_us: bytes::read_u64(&mut r)?,
-                qs: bytes::read_f32_vec(&mut r)?,
-            }),
+            TAG_QUERY_BATCH_BUDGET => {
+                let qid0 = bytes::read_u64(&mut r)?;
+                let nq = bytes::read_u64(&mut r)?;
+                let budget_us = bytes::read_u64(&mut r)?;
+                // Peer-controlled class byte: reject unknown lanes rather
+                // than defaulting (a corrupt byte must not silently move
+                // traffic between scheduling classes).
+                let class_b = bytes::read_u8(&mut r)?;
+                let class = Class::from_u8(class_b)
+                    .ok_or(CodecError::BadTag(class_b as u32, "Class"))?;
+                let qs = bytes::read_f32_vec(&mut r)?;
+                Ok(Message::QueryBatchBudget { qid0, nq, budget_us, class, qs })
+            }
             TAG_REPLY_BATCH => {
                 let qid0 = bytes::read_u64(&mut r)?;
                 let count = bytes::read_u64(&mut r)? as usize;
@@ -272,7 +282,6 @@ impl Message {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lsh::family::LayerSpec;
 
     fn sample_dataset() -> Dataset {
         let mut d = Dataset::new("wire-test", 3);
@@ -336,12 +345,22 @@ mod tests {
 
     #[test]
     fn budget_batch_roundtrip() {
-        // A real admission cut (finite remaining budget)...
+        // A real admission cut (finite remaining budget, monitor lane)...
         let m = Message::QueryBatchBudget {
             qid0: 77,
             nq: 2,
             budget_us: 1500,
+            class: Class::Monitor,
             qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        assert_eq!(roundtrip(&m), m);
+        // ...an analytics-only cut...
+        let m = Message::QueryBatchBudget {
+            qid0: 78,
+            nq: 1,
+            budget_us: 50_000,
+            class: Class::Analytics,
+            qs: vec![1.0, 2.0, 3.0],
         };
         assert_eq!(roundtrip(&m), m);
         // ...and the no-budget sentinel used by caller-formed blocks.
@@ -349,6 +368,7 @@ mod tests {
             qid0: 0,
             nq: 1,
             budget_us: u64::MAX,
+            class: Class::Analytics,
             qs: vec![9.0, 8.0, 7.0],
         };
         assert_eq!(roundtrip(&m), m);
@@ -357,12 +377,41 @@ mod tests {
     #[test]
     fn truncated_budget_batch_is_error() {
         let mut buf = Vec::new();
-        Message::QueryBatchBudget { qid0: 3, nq: 4, budget_us: 250, qs: vec![0.5; 120] }
-            .write_frame(&mut buf)
-            .unwrap();
+        Message::QueryBatchBudget {
+            qid0: 3,
+            nq: 4,
+            budget_us: 250,
+            class: Class::Monitor,
+            qs: vec![0.5; 120],
+        }
+        .write_frame(&mut buf)
+        .unwrap();
         // Valid length prefix, payload cut mid-floats.
         buf.truncate(buf.len() / 2);
         assert!(Message::read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn bad_class_byte_is_rejected() {
+        let m = Message::QueryBatchBudget {
+            qid0: 1,
+            nq: 1,
+            budget_us: 100,
+            class: Class::Monitor,
+            qs: vec![1.0, 2.0],
+        };
+        let mut payload = m.encode();
+        // Payload layout: tag(1) + qid0(8) + nq(8) + budget_us(8) +
+        // class(1) + floats. Flip the class byte to an unknown lane.
+        assert_eq!(payload[25], Class::Monitor.as_u8());
+        payload[25] = 7;
+        assert!(matches!(Message::decode(&payload), Err(CodecError::BadTag(7, _))));
+        // Round-tripping the class codec itself: both lanes survive,
+        // unknown bytes do not.
+        for class in [Class::Monitor, Class::Analytics] {
+            assert_eq!(Class::from_u8(class.as_u8()), Some(class));
+        }
+        assert_eq!(Class::from_u8(2), None);
     }
 
     #[test]

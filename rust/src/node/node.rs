@@ -8,6 +8,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::coordinator::admission::{note_batch_overrun, Class};
+use crate::coordinator::orchestrator::NO_BUDGET;
 use crate::data::Dataset;
 use crate::engine::DistanceEngine;
 use crate::knn::heap::{Neighbor, TopK};
@@ -202,19 +204,27 @@ impl LocalNode {
 
     /// Budget-aware batch entry point, mirroring the wire protocol's
     /// batch-with-budget frame: `budget_us` is the admission cut's
-    /// remaining latency budget. An in-process node receives the cut the
-    /// orchestrator's cutter already made, so no further enforcement
-    /// happens here — the parameter exists for [`NodeHandle`] parity and
-    /// as the hook for future node-side shedding/priority scheduling.
-    ///
-    /// [`NodeHandle`]: crate::coordinator::NodeHandle
+    /// remaining latency budget and `class` its scheduling class. The
+    /// node receives a cut the orchestrator's cutter already made, so no
+    /// scheduling happens here — but it owns the shared budget-overrun
+    /// accounting ([`note_batch_overrun`]): both the in-process path and
+    /// the TCP server path resolve budget batches through this method, so
+    /// local and remote nodes report overruns identically. This is also
+    /// the hook for future node-side shedding/early-exit scans.
     pub fn query_batch_budget(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
-        _budget_us: u64,
+        budget_us: u64,
+        class: Class,
     ) -> Vec<NodeReply> {
-        self.query_batch(qs, nq)
+        if budget_us == NO_BUDGET {
+            return self.query_batch(qs, nq);
+        }
+        let t0 = std::time::Instant::now();
+        let replies = self.query_batch(qs, nq);
+        note_batch_overrun(self.node_id, class, budget_us, t0.elapsed(), nq);
+        replies
     }
 }
 

@@ -11,9 +11,11 @@
 //! Every queue on the serving path reports through the same lock-free
 //! counters defined here: [`QueueStats`] (depth, high-water, throughput,
 //! rejections) instruments both this service's request channel and the
-//! coordinator's [admission queue](crate::coordinator::admission), and
+//! coordinator's [admission queue](crate::coordinator::admission),
 //! [`CutCounters`] records *why* the admission cutter dispatched each
-//! batch (fill vs deadline vs shutdown drain) — the paper's
+//! batch (fill vs deadline vs aged vs shutdown drain), and
+//! [`LaneCounters`] attributes dispatches and budget overruns to each
+//! scheduling class (monitor vs analytics) — the paper's
 //! latency-over-throughput stance makes that mix the primary health
 //! signal for a serving cluster.
 
@@ -103,12 +105,15 @@ impl QueueStats {
 
 /// Why the admission cutter dispatched each batch. A healthy
 /// latency-bound cluster shows a mix: mostly fill cuts under load
-/// (batching is amortizing work) and deadline cuts when traffic is
-/// sparse (lone requests still meet their budget).
+/// (batching is amortizing work), deadline cuts when traffic is sparse
+/// (lone requests still meet their budget), and the occasional aged cut
+/// when sustained monitor traffic would otherwise starve the analytics
+/// lane (the anti-starvation bound firing).
 #[derive(Debug, Default)]
 pub struct CutCounters {
     fill: AtomicU64,
     deadline: AtomicU64,
+    aged: AtomicU64,
     drain: AtomicU64,
 }
 
@@ -127,6 +132,11 @@ impl CutCounters {
         self.deadline.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// An analytics request hit the anti-starvation aging bound.
+    pub fn record_aged(&self) {
+        self.aged.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Shutdown drained the residue.
     pub fn record_drain(&self) {
         self.drain.fetch_add(1, Ordering::Relaxed);
@@ -140,8 +150,83 @@ impl CutCounters {
         self.deadline.load(Ordering::Relaxed)
     }
 
+    pub fn aged(&self) -> u64 {
+        self.aged.load(Ordering::Relaxed)
+    }
+
     pub fn drain(&self) -> u64 {
         self.drain.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-scheduling-lane dispatch accounting for the admission queue: how
+/// many requests of one class left through each cut reason, and how many
+/// were resolved only after their deadline had already passed (overruns —
+/// the tail-latency failures the priority lanes exist to prevent). One
+/// instance per [`Class`](crate::coordinator::admission::Class); all
+/// counters are monotone relaxed atomics, never a lock on the hot path.
+#[derive(Debug, Default)]
+pub struct LaneCounters {
+    fill: AtomicU64,
+    deadline: AtomicU64,
+    aged: AtomicU64,
+    drain: AtomicU64,
+    overruns: AtomicU64,
+}
+
+impl LaneCounters {
+    pub fn new() -> LaneCounters {
+        LaneCounters::default()
+    }
+
+    /// `n` requests of this class dispatched in a fill cut.
+    pub fn record_fill(&self, n: u64) {
+        self.fill.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests of this class dispatched in a deadline cut.
+    pub fn record_deadline(&self, n: u64) {
+        self.deadline.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests of this class dispatched in an aged cut.
+    pub fn record_aged(&self, n: u64) {
+        self.aged.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests of this class dispatched in a shutdown drain cut.
+    pub fn record_drain(&self, n: u64) {
+        self.drain.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests of this class resolved after their deadline passed.
+    pub fn record_overruns(&self, n: u64) {
+        self.overruns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn fill(&self) -> u64 {
+        self.fill.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline(&self) -> u64 {
+        self.deadline.load(Ordering::Relaxed)
+    }
+
+    pub fn aged(&self) -> u64 {
+        self.aged.load(Ordering::Relaxed)
+    }
+
+    pub fn drain(&self) -> u64 {
+        self.drain.load(Ordering::Relaxed)
+    }
+
+    pub fn overruns(&self) -> u64 {
+        self.overruns.load(Ordering::Relaxed)
+    }
+
+    /// Total requests of this class ever dispatched, across all reasons.
+    pub fn dispatched(&self) -> u64 {
+        self.fill() + self.deadline() + self.aged() + self.drain()
     }
 }
 

@@ -1,15 +1,20 @@
 //! Admission-queue parity: queries coalesced into shared cuts by the
 //! deadline-aware admission layer must resolve bit-identically to
 //! sequential `Orchestrator::query` — across batch caps, latency budgets,
-//! and cluster sizes, with genuinely concurrent submitters.
+//! scheduling classes (every run stripes submissions over BOTH the
+//! monitor and analytics lanes), and cluster sizes, with genuinely
+//! concurrent submitters.
 //!
 //! The batch compositions the cutter produces are scheduler-dependent
-//! (that is the point of the test: whatever cuts happen, results must not
-//! change); all assertions are value assertions, never timing assertions.
+//! (that is the point of the test: whatever cuts happen — and whichever
+//! lane a query waited in — results must not change); all assertions are
+//! value assertions, never timing assertions.
 
 use std::time::Duration;
 
-use dslsh::coordinator::{build_cluster, AdmissionConfig, ClusterConfig, QueryResult, Ticket};
+use dslsh::coordinator::{
+    build_cluster, AdmissionConfig, Class, ClusterConfig, QueryResult, Ticket,
+};
 use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
 use dslsh::lsh::family::LayerSpec;
 use dslsh::slsh::SlshParams;
@@ -68,7 +73,10 @@ fn admission_matches_sequential_across_configs() {
                 let budget = Duration::from_millis(budget_ms);
                 let ctx = format!("nodes={nodes} max_batch={max_batch} budget={budget_ms}ms");
 
-                // Concurrent submitters, striped over the query stream.
+                // Concurrent submitters, striped over the query stream
+                // AND over both scheduling lanes (even queries ride the
+                // monitor lane, odd ones the analytics lane — whatever
+                // lane a query waits in, its result must not change).
                 // Each thread bursts all its submissions first (letting
                 // fill cuts coalesce across threads), then waits.
                 let results: Vec<(usize, QueryResult)> = std::thread::scope(|s| {
@@ -79,7 +87,20 @@ fn admission_matches_sequential_across_configs() {
                                 let tickets: Vec<(usize, Ticket)> = (t..nq)
                                     .step_by(SUBMITTERS)
                                     .map(|i| {
-                                        (i, orch.submit(c.queries.point(i), budget).unwrap())
+                                        let class = if i % 2 == 0 {
+                                            Class::Monitor
+                                        } else {
+                                            Class::Analytics
+                                        };
+                                        (
+                                            i,
+                                            orch.submit_class(
+                                                c.queries.point(i),
+                                                budget,
+                                                class,
+                                            )
+                                            .unwrap(),
+                                        )
                                     })
                                     .collect();
                                 tickets
@@ -101,10 +122,20 @@ fn admission_matches_sequential_across_configs() {
                 assert_eq!(st.submitted, nq as u64, "{ctx}: admitted count");
                 assert_eq!(st.completed, nq as u64, "{ctx}: completed count");
                 assert_eq!(st.depth, 0, "{ctx}: queue drained");
+                // The lane split must account for every request: even
+                // indices rode the monitor lane, odd the analytics lane.
+                assert_eq!(st.monitor.submitted, nq.div_ceil(2) as u64, "{ctx}: monitor lane");
+                assert_eq!(st.analytics.submitted, (nq / 2) as u64, "{ctx}: analytics lane");
+                assert_eq!(
+                    st.monitor.depth + st.analytics.depth,
+                    0,
+                    "{ctx}: both lanes drained"
+                );
                 if max_batch == 1 {
                     // Every cut is a singleton fill cut by construction.
                     assert_eq!(st.cuts_fill, nq as u64, "{ctx}: singleton fills");
                     assert_eq!(st.cuts_deadline, 0, "{ctx}: no deadline cuts at cap 1");
+                    assert_eq!(st.cuts_aged, 0, "{ctx}: no aged cuts at cap 1");
                 }
             }
         }

@@ -1,0 +1,227 @@
+//! Deterministic scheduling-semantics tests for the priority-class
+//! admission lanes + pipelined dispatch.
+//!
+//! These are the two guarantees PR 2's FIFO/serial-dispatch cutter could
+//! not give (its module docs documented the gap):
+//!
+//! 1. **Monitor budgets hold mid-dispatch.** A `Class::Monitor` request
+//!    arriving while an analytics batch is on the cluster is CUT at its
+//!    deadline, not up to one batch service time late. On the PR 2
+//!    scheduler the cutter itself ran the dispatch, so the deadline
+//!    check could not fire until the batch returned — the
+//!    `monitor_cut_within_budget_while_analytics_batch_in_flight` test
+//!    fails on that design and passes on the pipelined one.
+//! 2. **Analytics cannot starve.** Under sustained monitor load, an
+//!    analytics request is dispatched within the configured aging bound.
+//!
+//! Every test drives a [`MockClock`] and synchronizes through channel
+//! handshakes plus bounded counter polls — the *outcomes* asserted are
+//! deterministic; no assertion depends on real-time durations.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dslsh::coordinator::admission::{AdmissionConfig, AdmissionQueue, Class, MockClock};
+use dslsh::coordinator::QueryResult;
+
+/// Budgets a frozen MockClock can never expire.
+const FAR: Duration = Duration::from_secs(3600);
+
+/// Dispatcher used by every test: reports each batch's flat payload on
+/// `evt_tx` (dim = 1, so the payload identifies the batch composition),
+/// then blocks until the test releases it through `gate_rx` — an
+/// in-flight batch the test fully controls. Results echo each query's
+/// coordinate in `positive_share` to prove ticket↔result alignment.
+fn gated_echo(
+    evt_tx: Sender<Vec<f32>>,
+    gate_rx: Receiver<()>,
+) -> impl FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static {
+    move |flat: Vec<f32>, nq: usize, _budget_us: u64, _class: Class| {
+        evt_tx.send(flat.clone()).unwrap();
+        gate_rx.recv().unwrap();
+        (0..nq)
+            .map(|i| QueryResult {
+                qid: i as u64,
+                neighbors: Vec::new(),
+                positive_share: flat[i] as f64,
+                prediction: false,
+                max_comparisons: 0,
+                per_node_comparisons: Vec::new(),
+                latency_s: 0.0,
+            })
+            .collect()
+    }
+}
+
+/// Spin (bounded by real time) until a counter condition holds. The
+/// cutter thread needs a moment to act on a clock advance; only the
+/// arrival time of the outcome is scheduler-dependent, never the
+/// outcome itself. On the PR 2 scheduler the conditions these tests wait
+/// for can NEVER become true, so the bound doubles as the failure mode.
+fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
+    let t0 = std::time::Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn monitor_cut_within_budget_while_analytics_batch_in_flight() {
+    // The PR 2 overrun repro, now fixed. Timeline (mock ns):
+    //   t=0     analytics {1.0, 2.0} fill-cut, dispatched, GATED — the
+    //           batch is "on the cluster" and will stay there.
+    //   t=0     monitor 9.0 submitted with a 1000ns budget.
+    //   t=1000  the monitor's deadline: the cutter (no longer blocked
+    //           inside the dispatch) must cut it NOW, while the
+    //           analytics batch is still in flight.
+    let clock = Arc::new(MockClock::new(0));
+    let (evt_tx, evt_rx) = channel();
+    let (gate_tx, gate_rx) = channel();
+    let cfg = AdmissionConfig::new(1, 2).with_queue_cap(16).with_pipeline(2);
+    let q = AdmissionQueue::start_with_clock(
+        cfg,
+        gated_echo(evt_tx, gate_rx),
+        Arc::clone(&clock) as Arc<dyn dslsh::coordinator::Clock>,
+    );
+
+    let a1 = q.submit_class(&[1.0], FAR, Class::Analytics).unwrap();
+    let a2 = q.submit_class(&[2.0], FAR, Class::Analytics).unwrap();
+    assert_eq!(evt_rx.recv().unwrap(), vec![1.0, 2.0], "analytics batch must be in flight");
+
+    let m = q.submit_class(&[9.0], Duration::from_nanos(1000), Class::Monitor).unwrap();
+    clock.advance_ns(1000);
+
+    // THE assertion: the monitor's deadline cut is recorded while the
+    // analytics batch is still gated. On the PR 2 scheduler the cutter
+    // is stuck inside the dispatch and this wait times out.
+    let cuts = q.cut_counters();
+    wait_until(
+        || cuts.deadline() == 1,
+        "monitor deadline cut while the analytics batch is in flight",
+    );
+    let st = q.stats();
+    assert_eq!(st.depth, 0, "the monitor must have left the queue by its deadline");
+    assert_eq!(st.monitor.dispatched_deadline, 1);
+    assert_eq!(st.analytics.dispatched_fill, 2);
+
+    // Let the in-flight analytics batch take 500ns longer: the monitor
+    // batch then RESOLVES 500ns past its deadline — dispatched on time,
+    // finished late — and the per-class overrun counters must say so.
+    clock.advance_ns(500);
+    gate_tx.send(()).unwrap(); // release the analytics batch
+    assert_eq!(evt_rx.recv().unwrap(), vec![9.0], "monitor batch dispatches next");
+    gate_tx.send(()).unwrap(); // release the monitor batch
+
+    assert_eq!(m.wait().unwrap().positive_share, 9.0);
+    assert_eq!(a1.wait().unwrap().positive_share, 1.0);
+    assert_eq!(a2.wait().unwrap().positive_share, 2.0);
+    let st = q.stats();
+    assert_eq!(st.monitor.overruns, 1, "the late resolution must be attributed to the monitor");
+    assert_eq!(st.analytics.overruns, 0, "FAR-budget analytics never overrun");
+}
+
+#[test]
+fn analytics_dispatched_within_age_bound_under_sustained_monitor_load() {
+    // Anti-starvation bound. The tricky part of testing it is building a
+    // monitor backlog DETERMINISTICALLY: the cutter fill-cuts the moment
+    // two requests are pending, so a backlog can only accumulate while
+    // the cutter is parked handing a cut to the (gated) dispatcher. With
+    // pipeline=1 the handoff is a rendezvous: once one batch is gated in
+    // the dispatcher and a second is parked at the rendezvous, the
+    // cutter is blocked and every submission just queues — no race
+    // window between consecutive submits.
+    let clock = Arc::new(MockClock::new(0));
+    let (evt_tx, evt_rx) = channel();
+    let (gate_tx, gate_rx) = channel();
+    let cfg = AdmissionConfig::new(1, 2)
+        .with_queue_cap(16)
+        .with_pipeline(1)
+        .with_age_bound(Duration::from_nanos(1000));
+    let q = AdmissionQueue::start_with_clock(
+        cfg,
+        gated_echo(evt_tx, gate_rx),
+        Arc::clone(&clock) as Arc<dyn dslsh::coordinator::Clock>,
+    );
+
+    // Plug the pipeline: {x1,x2} gated in the dispatcher, {y1,y2} parked
+    // at the rendezvous — from here on the cutter cannot cut.
+    let x1 = q.submit_class(&[8.0], FAR, Class::Monitor).unwrap();
+    let x2 = q.submit_class(&[9.0], FAR, Class::Monitor).unwrap();
+    assert_eq!(evt_rx.recv().unwrap(), vec![8.0, 9.0]);
+    let y1 = q.submit_class(&[6.0], FAR, Class::Monitor).unwrap();
+    let y2 = q.submit_class(&[7.0], FAR, Class::Monitor).unwrap();
+    wait_until(|| q.stats().completed == 4, "second batch parked at the rendezvous");
+
+    // Sustained load: analytics request A, then a queue of monitors
+    // behind it — under pure strict priority A would wait out every one
+    // of them.
+    let a = q.submit_class(&[0.5], FAR, Class::Analytics).unwrap();
+    let m1 = q.submit_class(&[1.0], FAR, Class::Monitor).unwrap();
+    let m2 = q.submit_class(&[2.0], FAR, Class::Monitor).unwrap();
+    let m3 = q.submit_class(&[3.0], FAR, Class::Monitor).unwrap();
+    assert_eq!(q.stats().analytics.depth, 1, "A is waiting behind the plug");
+
+    // A's age crosses the bound while the backlog is still queued: the
+    // very next cut the cutter forms must give A a slot ahead of the
+    // monitors.
+    clock.advance_ns(1000);
+    gate_tx.send(()).unwrap(); // release {x1,x2}; cutter unblocks and cuts
+    assert_eq!(evt_rx.recv().unwrap(), vec![6.0, 7.0]);
+    gate_tx.send(()).unwrap(); // release {y1,y2}
+    assert_eq!(
+        evt_rx.recv().unwrap(),
+        vec![0.5, 1.0],
+        "aged A takes a slot of the first post-bound cut, ahead of the monitor backlog"
+    );
+    gate_tx.send(()).unwrap(); // release {A,m1}
+    assert_eq!(evt_rx.recv().unwrap(), vec![2.0, 3.0]);
+    gate_tx.send(()).unwrap(); // release {m2,m3}
+
+    assert_eq!(a.wait().unwrap().positive_share, 0.5);
+    for (t, want) in
+        [(x1, 8.0), (x2, 9.0), (y1, 6.0), (y2, 7.0), (m1, 1.0), (m2, 2.0), (m3, 3.0)]
+    {
+        assert_eq!(t.wait().unwrap().positive_share, want);
+    }
+    let st = q.stats();
+    assert_eq!(st.cuts_fill, 4, "every cut here was a fill cut");
+    assert_eq!(st.analytics.dispatched_fill, 1, "A rode a fill cut via the aging bound");
+    assert_eq!(st.monitor.dispatched_fill, 7);
+    assert_eq!(st.depth, 0);
+    assert_eq!(st.monitor.overruns + st.analytics.overruns, 0, "far deadlines never overrun");
+}
+
+#[test]
+fn pipelined_dispatch_forms_next_cut_while_batch_in_flight() {
+    // Direct witness of the overlap: with one batch gated on the
+    // cluster, the cutter still forms (and buffers) the next cut — the
+    // completed counter advances while the first dispatch has not
+    // returned. On the serial PR 2 dispatcher, completed would stay at
+    // the first batch's size until the gate opened.
+    let (evt_tx, evt_rx) = channel();
+    let (gate_tx, gate_rx) = channel();
+    let cfg = AdmissionConfig::new(1, 2).with_queue_cap(16).with_pipeline(2);
+    let q = AdmissionQueue::start_with_clock(
+        cfg,
+        gated_echo(evt_tx, gate_rx),
+        Arc::new(MockClock::new(0)),
+    );
+
+    let t1 = q.submit(&[1.0], FAR).unwrap();
+    let t2 = q.submit(&[2.0], FAR).unwrap();
+    assert_eq!(evt_rx.recv().unwrap(), vec![1.0, 2.0]);
+    let t3 = q.submit(&[3.0], FAR).unwrap();
+    let t4 = q.submit(&[4.0], FAR).unwrap();
+    wait_until(
+        || q.stats().completed == 4,
+        "cut N+1 to form while cut N is in flight",
+    );
+    gate_tx.send(()).unwrap();
+    assert_eq!(evt_rx.recv().unwrap(), vec![3.0, 4.0]);
+    gate_tx.send(()).unwrap();
+    for (t, want) in [(t1, 1.0), (t2, 2.0), (t3, 3.0), (t4, 4.0)] {
+        assert_eq!(t.wait().unwrap().positive_share, want);
+    }
+}

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use dslsh::coordinator::admission::completion_slot;
 use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
-use dslsh::coordinator::{build_cluster, AdmissionConfig, ClusterConfig};
+use dslsh::coordinator::{build_cluster, AdmissionConfig, Class, ClusterConfig};
 use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
 use dslsh::engine::native::NativeEngine;
 use dslsh::engine::{DistanceEngine, Metric};
@@ -129,17 +129,25 @@ fn tcp_admission_with_budget_frames_matches_local_sequential() {
     let orch = &tcp;
 
     // Two concurrent submitters with a finite budget: every cut travels
-    // as a QueryBatchBudget frame (budget != NO_BUDGET).
+    // as a QueryBatchBudget frame (budget != NO_BUDGET). One submitter
+    // rides the monitor lane, the other the analytics lane, so the class
+    // byte crosses the wire in both values (and mixed cuts resolve to
+    // the monitor class).
     let results: Vec<(usize, dslsh::coordinator::QueryResult)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..2)
             .map(|t| {
                 let c = &c;
+                let class = if t == 0 { Class::Monitor } else { Class::Analytics };
                 s.spawn(move || {
                     (t..n_queries)
                         .step_by(2)
                         .map(|i| {
                             let ticket = orch
-                                .submit(c.queries.point(i), Duration::from_millis(1))
+                                .submit_class(
+                                    c.queries.point(i),
+                                    Duration::from_millis(1),
+                                    class,
+                                )
                                 .unwrap();
                             (i, ticket.wait().unwrap())
                         })

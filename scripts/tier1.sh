@@ -1,17 +1,30 @@
 #!/usr/bin/env bash
 # Tier-1 verification: build + full test suite (see ROADMAP.md).
 # Usage: scripts/tier1.sh  (run from the repository root; CI entry point)
+#
+# TIER1_LINT=1 additionally runs the CI lint gate (rustfmt + clippy with
+# warnings denied) — off by default so local runs stay fast; the lint job
+# in .github/workflows/ci.yml runs the same commands unconditionally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${TIER1_LINT:-0}" == "1" ]]; then
+  cargo fmt --all -- --check
+  cargo clippy --all-targets -- -D warnings
+fi
 
 cargo build --release
 cargo test -q
 
 # Admission layer, explicitly: the scheduling seam every later feature
-# (priority classes, NUMA pinning) plugs into — fail loudly on its own.
+# (node-side shedding, NUMA pinning) plugs into — fail loudly on its own.
+# admission_priority holds the deterministic priority-lane/pipelining
+# semantics (the PR 2 overrun repro, now required to pass).
 cargo test -q --test admission_parity
+cargo test -q --test admission_priority
 cargo test -q --lib coordinator::admission
 
-# Bench smoke: asserts the admission-latency bench produces a non-empty
-# CSV (artifact plumbing, not timing quality).
+# Bench smoke: asserts the admission-latency bench produces non-empty
+# CSVs for both the load sweep and the priority-lane scenario (artifact
+# plumbing, not timing quality). CI uploads results/*.csv.
 cargo bench --bench admission_latency -- --smoke
