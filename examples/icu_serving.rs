@@ -19,10 +19,13 @@
 //! and dispatches through a pipelined window, so a monitor arriving while
 //! an analytics batch is on the cluster is still cut at its deadline;
 //! analytics ride leftover batch slots, protected from starvation by the
-//! aging bound (see the admission module docs). The tail prints
-//! per-class latency percentiles split by lane, the per-lane dispatch mix
-//! (fill/deadline/aged) with budget overruns, and the cut-reason mix —
-//! the primary health signals for a latency-bound cluster.
+//! aging bound (see the admission module docs). Node-side budget
+//! enforcement runs in `PartialResults` mode: a blown budget yields a
+//! flagged table-prefix answer instead of a late complete one. The tail
+//! prints per-class latency percentiles split by lane, the per-lane
+//! dispatch mix (fill/deadline/aged) with budget overruns and
+//! partial/shed counts, and the cut-reason mix — the primary health
+//! signals for a latency-bound cluster.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example icu_serving
@@ -30,9 +33,11 @@
 
 use std::time::{Duration, Instant};
 
-use dslsh::coordinator::{build_cluster, AdmissionConfig, Class, ClusterConfig, EngineKind};
-use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
+use dslsh::coordinator::{
+    build_cluster, AdmissionConfig, BudgetPolicy, Class, ClusterConfig, EngineKind,
+};
 use dslsh::data::WindowSpec;
+use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
 use dslsh::knn::predict::VoteConfig;
 use dslsh::metrics::Confusion;
 use dslsh::util::stats;
@@ -137,7 +142,10 @@ fn main() -> anyhow::Result<()> {
     // queries (see rust/tests/admission_parity.rs) — what moves is who
     // waits for whom.
     println!();
-    println!("== mixed ICU/analytics admission (max_batch=16, priority lanes) ==");
+    println!(
+        "== mixed ICU/analytics admission (max_batch=16, priority lanes, \
+         budget policy: partial-results) =="
+    );
     let monitors = 4usize;
     let analysts = 2usize;
     let budget_monitor = Duration::from_millis(2);
@@ -145,10 +153,14 @@ fn main() -> anyhow::Result<()> {
     let q_total = corpus.queries.len();
     let per_monitor = (q_total / 2 / monitors).max(1);
     let per_analyst = (q_total / 2 / analysts).max(1);
+    // Node-side budget enforcement ON: a monitor whose budget is blown
+    // gets a flagged table-prefix answer at its deadline instead of a
+    // complete answer arriving too late to act on.
     cluster.orchestrator.enable_admission(
         AdmissionConfig::new(corpus.data.dim, 16)
             .with_queue_cap(256)
-            .with_age_bound(Duration::from_millis(20)),
+            .with_age_bound(Duration::from_millis(20))
+            .with_budget_policy(BudgetPolicy::PartialResults),
     );
     let orch = &cluster.orchestrator;
     let (monitor_lat, analytics_lat): (Vec<f64>, Vec<f64>) = std::thread::scope(|s| {
@@ -229,12 +241,14 @@ fn main() -> anyhow::Result<()> {
     for (name, lane) in [("monitor  ", ad.monitor), ("analytics", ad.analytics)] {
         println!(
             "  lane {name}  {} submitted, dispatched {} fill / {} deadline / {} aged, \
-             {} overruns, depth high-water {}",
+             {} overruns, {} partial / {} shed, depth high-water {}",
             lane.submitted,
             lane.dispatched_fill,
             lane.dispatched_deadline,
             lane.dispatched_aged,
             lane.overruns,
+            lane.partials,
+            lane.sheds,
             lane.high_water
         );
     }

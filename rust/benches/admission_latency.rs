@@ -14,13 +14,23 @@
 //! (fill/deadline/aged) and budget overruns go to
 //! results/admission_priority.csv.
 //!
+//! A third section measures **node-side budget enforcement**: the same
+//! oversubscribed tight-budget monitor workload under each
+//! `BudgetPolicy` (LogOnly = enforcement off, PartialResults, Shed).
+//! Enforcement caps the work a blown deadline can burn, so the p99 tail
+//! should contract at the price of flagged partial/shed answers —
+//! p50/p99 plus overrun/partial/shed counts go to
+//! results/admission_enforcement.csv.
+//!
 //! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and load and
-//! asserts non-empty CSVs were produced for BOTH sections — artifact
-//! plumbing (and both scheduling lanes) exercised, not timing quality.
+//! asserts non-empty CSVs were produced for ALL sections — artifact
+//! plumbing (all lanes + all policies) exercised, not timing quality.
 
 use std::time::{Duration, Instant};
 
-use dslsh::coordinator::{build_cluster, AdmissionConfig, AdmissionStats, Class, ClusterConfig};
+use dslsh::coordinator::{
+    build_cluster, AdmissionConfig, AdmissionStats, BudgetPolicy, Class, ClusterConfig,
+};
 use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
 use dslsh::experiments::report::Table;
 use dslsh::lsh::family::LayerSpec;
@@ -231,10 +241,74 @@ fn main() {
     println!("{}", ptable.render());
     ptable.save(std::path::Path::new("results"), "admission_priority").expect("saving csv");
 
-    // The bench's contract with CI: both sections produced a CSV with at
+    // -- Budget enforcement on vs off: tail latency under oversubscription --
+    //
+    // The same tight-budget monitor workload, oversubscribed (more
+    // concurrent closed-loop submitters than the cluster can serve inside
+    // the budget), once per policy. LogOnly is the enforcement-off
+    // baseline: a blown deadline still burns a full scan, so the tail
+    // stretches with the backlog. PartialResults caps per-cut work at the
+    // deadline; Shed refuses already-dead cuts outright — both should
+    // contract the p99 at the price of flagged answers (counted in the
+    // partial/shed columns; numbers are machine-dependent and not
+    // asserted).
+    let (enf_threads, per_enf) = if smoke { (4usize, 16usize) } else { (12, 100) };
+    let budget_enf = if smoke { Duration::from_micros(500) } else { Duration::from_millis(1) };
+    let mut etable = Table::new(
+        format!(
+            "Admission budget enforcement — nu=2 x p=2, max_batch={max_batch}, \
+             monitor budget {}us x{enf_threads} closed-loop",
+            budget_enf.as_micros()
+        ),
+        &["policy", "requests", "p50 ms", "p99 ms", "overruns", "partials", "sheds"],
+    );
+    for policy in [BudgetPolicy::LogOnly, BudgetPolicy::PartialResults, BudgetPolicy::Shed] {
+        cluster.orchestrator.enable_admission(
+            AdmissionConfig::new(corpus.data.dim, max_batch)
+                .with_queue_cap(4096)
+                .with_budget_policy(policy),
+        );
+        let orch = &cluster.orchestrator;
+        let lat: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..enf_threads)
+                .map(|t| {
+                    let corpus = &corpus;
+                    s.spawn(move || {
+                        let mut lat = Vec::with_capacity(per_enf);
+                        for j in 0..per_enf {
+                            let qi = (t * per_enf + j) % corpus.queries.len();
+                            let ts = Instant::now();
+                            let ticket = orch
+                                .submit(corpus.queries.point(qi), budget_enf)
+                                .expect("admission rejected");
+                            let r = ticket.wait().expect("ticket canceled");
+                            lat.push(ts.elapsed().as_secs_f64() * 1e3);
+                            std::hint::black_box(r.partial);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let snap = orch.admission().unwrap().stats();
+        etable.row(vec![
+            policy.to_string(),
+            snap.monitor.submitted.to_string(),
+            format!("{:.2}", stats::percentile(&lat, 0.50)),
+            format!("{:.2}", stats::percentile(&lat, 0.99)),
+            snap.monitor.overruns.to_string(),
+            snap.monitor.partials.to_string(),
+            snap.monitor.sheds.to_string(),
+        ]);
+    }
+    println!("{}", etable.render());
+    etable.save(std::path::Path::new("results"), "admission_enforcement").expect("saving csv");
+
+    // The bench's contract with CI: every section produced a CSV with at
     // least one data row (timing numbers are machine-dependent and NOT
     // asserted).
-    for name in ["admission_latency", "admission_priority"] {
+    for name in ["admission_latency", "admission_priority", "admission_enforcement"] {
         let path = format!("results/{name}.csv");
         let csv = std::fs::read_to_string(&path).unwrap_or_else(|_| panic!("{path} must exist"));
         assert!(

@@ -48,10 +48,10 @@
 //!
 //! Dispatch rides [`Orchestrator::query_batch`]'s flat-block path, so a
 //! coalesced batch reuses the per-core `QueryScratch`/`BatchOutput` arenas
-//! downstream exactly like a caller-formed block, and the remaining budget
-//! of the most urgent request travels with the cut together with the
-//! batch's class (the TCP wire ships both in a `QueryBatchBudget` frame so
-//! remote nodes can honor the same cut and attribute overruns per class).
+//! downstream exactly like a caller-formed block, and the cut's [`Budget`]
+//! travels with it together with the batch's class (the TCP wire ships
+//! budget, policy and class in a `QueryBatchBudget` frame so remote nodes
+//! honor the same cut and attribute overruns per class).
 //!
 //! **Determinism.** The cutter never reads the wall clock directly: it
 //! takes a [`Clock`] (real [`SystemClock`] or test [`MockClock`]), and the
@@ -65,31 +65,73 @@
 //! dispatch/overrun attribution through [`LaneCounters`], all defined in
 //! [`crate::runtime::service`].
 //!
-//! **Budgets are scheduling targets, not hard real-time guarantees.**
+//! **Budget enforcement at the nodes.** A cut's remaining budget is
+//! computed ONCE, when the dispatcher picks the cut up — time spent
+//! queued behind the pipeline counts against it — and shipped to every
+//! node together with the queue's [`BudgetPolicy`]
+//! ([`AdmissionConfig::budget_policy`]), so in-process and remote nodes
+//! enforce against the same deadline, anchored at batch arrival:
+//!
+//! | policy                           | node behavior on a budget-carrying cut |
+//! |----------------------------------|----------------------------------------|
+//! | [`BudgetPolicy::LogOnly`]        | full scan always; overruns logged + counted (bit-identical results to a cluster without enforcement) |
+//! | [`BudgetPolicy::PartialResults`] | deadline-checked scan at table/tile granularity; once blown, remaining tables are skipped and the reply is flagged `partial` |
+//! | [`BudgetPolicy::Shed`]           | budget already spent on node arrival ⇒ reject before ANY scan work (empty reply flagged `shed` + `partial`); otherwise `PartialResults` semantics |
+//!
+//! **Partial-result semantics.** A partial answer is built from *strict
+//! prefixes*, never samples: each core stops after a prefix of its owned
+//! tables (and a prefix of the last table's candidate tiles), so every
+//! neighbor returned carries its true distance and appears in the
+//! unenforced candidate walk; what a node (and then the cluster) returns
+//! is the union of those per-core prefixes. The Reducer merges per-node
+//! answers as usual and marks the merged [`QueryResult`] `partial` if
+//! ANY node answered partially (with `shed_nodes` counting outright
+//! rejections), so callers always learn when recall was traded for the
+//! deadline — the flag rides the [`Ticket`] unchanged. What `Shed`
+//! guarantees: a node never spends scan time on a batch that already
+//! missed its deadline, so a backlogged cluster stops burning work on
+//! answers nobody can use — the paper's latency-first stance made an
+//! enforced contract.
+//!
+//! **The deadline is per CUT, not per request.** A cut ships ONE
+//! remaining budget — that of its most urgent request — so a loose-budget
+//! request co-batched with a nearly-expired one inherits the tight
+//! deadline and can come back flagged partial (or shed) with plenty of
+//! its own budget left. That is the deliberate price of sharing a scan:
+//! the batch resolves as a unit, the flag makes the trade visible per
+//! result, and the two-lane scheduler already keeps the lanes apart
+//! except for fill leftovers and aged promotions. Workloads that cannot
+//! accept it should keep enforcement on `LogOnly` or stop co-batching
+//! (smaller `max_batch`).
+//!
+//! **Budgets remain scheduling targets, not hard real-time guarantees.**
 //! With a free pipeline slot, a request is *cut* no later than its
 //! effective deadline (plus scheduler wakeup); under saturation the cut
-//! additionally waits for a slot (see above), and the cluster may take
-//! longer than the remaining budget to resolve the batch. Those misses
-//! are first-class signals: the dispatcher counts every request that
-//! resolves past its deadline, per class
-//! ([`LaneCounters::overruns`]), and node-side accounting
-//! ([`note_batch_overrun`]) logs them identically for in-process and
-//! remote nodes.
+//! additionally waits for a slot (see above), and under `LogOnly` the
+//! cluster may take longer than the remaining budget to resolve the
+//! batch. Misses stay first-class signals: the dispatcher counts every
+//! request that resolves past its deadline per class
+//! ([`LaneCounters::overruns`]), every partial/shed answer per class
+//! ([`LaneCounters::partials`]/[`LaneCounters::sheds`]), and node-side
+//! accounting ([`note_batch_overrun`]) logs overruns identically for
+//! in-process and remote nodes.
 //!
 //! This queue is the architectural seam all later scheduling work
-//! (node-side shedding, NUMA pinning) plugs into: those features change
-//! *which* requests a cut takes or where a cut runs, not how callers
-//! submit or wait.
+//! (NUMA pinning, multi-probe degradation) plugs into: those features
+//! change *which* requests a cut takes or how a node resolves it, not how
+//! callers submit or wait.
+//!
+//! [`QueryResult`]: crate::coordinator::orchestrator::QueryResult
 //!
 //! [`Orchestrator::query_batch`]: crate::coordinator::Orchestrator::query_batch
 
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::orchestrator::QueryResult;
 use crate::runtime::service::{CutCounters, LaneCounters, QueueStats};
@@ -176,67 +218,101 @@ pub fn note_batch_overrun(
 }
 
 // ---------------------------------------------------------------------------
-// Clock
+// Clock (defined in util::clock; re-exported here where it is consumed)
 // ---------------------------------------------------------------------------
 
-/// Monotonic time source for batching decisions. Injecting it is what
-/// makes every cutter decision reproducible in tests.
-pub trait Clock: Send + Sync {
-    /// Nanoseconds since an arbitrary fixed origin. Must be monotone.
-    fn now_ns(&self) -> u64;
+pub use crate::util::clock::{Clock, MockClock, SystemClock, TickClock};
+
+// ---------------------------------------------------------------------------
+// Budget policy — the node-side enforcement contract
+// ---------------------------------------------------------------------------
+
+/// What a node does with the remaining latency budget that ships with
+/// every admission cut. Policy travels with the cut (and over the wire in
+/// the `QueryBatchBudget` frame), so in-process and remote nodes enforce
+/// the same contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BudgetPolicy {
+    /// Observe only: full scans always; overruns logged and counted.
+    /// Results are bit-identical to a cluster without enforcement.
+    LogOnly,
+    /// Enforce by early exit: once the budget is blown the node stops
+    /// consulting further tables (and further candidate tiles) and
+    /// returns what it has, flagged `partial`. A partial answer is a
+    /// strict prefix of the full resolution, never a sample.
+    PartialResults,
+    /// Enforce by rejection: a batch whose budget is already spent when
+    /// it reaches the node is shed before ANY scan work — empty replies
+    /// flagged `shed` (and `partial`). A batch that still has budget on
+    /// arrival is served with `PartialResults` semantics.
+    Shed,
 }
 
-/// Production clock: monotonic nanoseconds since construction.
-#[derive(Debug)]
-pub struct SystemClock {
-    origin: Instant,
-}
+impl BudgetPolicy {
+    /// Wire encoding (stable: `QueryBatchBudget` frames carry it).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            BudgetPolicy::LogOnly => 0,
+            BudgetPolicy::PartialResults => 1,
+            BudgetPolicy::Shed => 2,
+        }
+    }
 
-impl SystemClock {
-    pub fn new() -> SystemClock {
-        SystemClock { origin: Instant::now() }
+    /// Inverse of [`as_u8`](BudgetPolicy::as_u8); `None` for unknown
+    /// bytes (hostile/corrupt peers must not silently change enforcement
+    /// behavior).
+    pub fn from_u8(v: u8) -> Option<BudgetPolicy> {
+        match v {
+            0 => Some(BudgetPolicy::LogOnly),
+            1 => Some(BudgetPolicy::PartialResults),
+            2 => Some(BudgetPolicy::Shed),
+            _ => None,
+        }
     }
 }
 
-impl Default for SystemClock {
-    fn default() -> SystemClock {
-        SystemClock::new()
+impl std::fmt::Display for BudgetPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetPolicy::LogOnly => f.write_str("log-only"),
+            BudgetPolicy::PartialResults => f.write_str("partial-results"),
+            BudgetPolicy::Shed => f.write_str("shed"),
+        }
     }
 }
 
-impl Clock for SystemClock {
-    fn now_ns(&self) -> u64 {
-        self.origin.elapsed().as_nanos() as u64
-    }
+/// A cut's budget as shipped to every node: the remaining latency budget
+/// — computed ONCE, when the dispatcher picks the cut up, so time spent
+/// queued in the pipeline counts against it and local and remote nodes
+/// enforce against the same deadline — plus the enforcement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Budget {
+    /// µs until the batch's most urgent deadline at dispatch, saturating
+    /// to 0 once the deadline has passed;
+    /// [`NO_BUDGET`](crate::coordinator::orchestrator::NO_BUDGET) when
+    /// the batch carries no deadline (caller-formed blocks).
+    pub remaining_us: u64,
+    pub policy: BudgetPolicy,
 }
 
-/// Test clock: time only moves when the test says so.
-#[derive(Debug, Default)]
-pub struct MockClock {
-    ns: AtomicU64,
-}
-
-impl MockClock {
-    pub fn new(start_ns: u64) -> MockClock {
-        MockClock { ns: AtomicU64::new(start_ns) }
+impl Budget {
+    /// An enforced budget under `policy`.
+    pub fn enforced(remaining_us: u64, policy: BudgetPolicy) -> Budget {
+        Budget { remaining_us, policy }
     }
 
-    pub fn set_ns(&self, t: u64) {
-        self.ns.store(t, Ordering::SeqCst);
+    /// The no-deadline sentinel (caller-formed bulk blocks): nodes run
+    /// plain full scans whatever the policy says.
+    pub fn none() -> Budget {
+        Budget {
+            remaining_us: crate::coordinator::orchestrator::NO_BUDGET,
+            policy: BudgetPolicy::LogOnly,
+        }
     }
 
-    pub fn advance_ns(&self, d: u64) {
-        self.ns.fetch_add(d, Ordering::SeqCst);
-    }
-
-    pub fn advance(&self, d: Duration) {
-        self.advance_ns(d.as_nanos().min(u64::MAX as u128) as u64);
-    }
-}
-
-impl Clock for MockClock {
-    fn now_ns(&self) -> u64 {
-        self.ns.load(Ordering::SeqCst)
+    /// True when this batch carries no deadline at all.
+    pub fn is_none(&self) -> bool {
+        self.remaining_us == crate::coordinator::orchestrator::NO_BUDGET
     }
 }
 
@@ -405,6 +481,10 @@ pub struct AdmissionConfig {
     /// cut N is still in the reducer; `1` degenerates to a rendezvous
     /// handoff (the cutter still never blocks *inside* a dispatch).
     pub pipeline: usize,
+    /// Node-side budget enforcement policy shipped with every cut (see
+    /// [`BudgetPolicy`]). Defaults to [`BudgetPolicy::LogOnly`], which is
+    /// bit-identical to a cluster without enforcement.
+    pub budget_policy: BudgetPolicy,
 }
 
 impl AdmissionConfig {
@@ -417,6 +497,7 @@ impl AdmissionConfig {
             seed: 0,
             age_bound: Duration::from_millis(25),
             pipeline: 2,
+            budget_policy: BudgetPolicy::LogOnly,
         }
     }
 
@@ -438,6 +519,11 @@ impl AdmissionConfig {
 
     pub fn with_pipeline(mut self, depth: usize) -> AdmissionConfig {
         self.pipeline = depth;
+        self
+    }
+
+    pub fn with_budget_policy(mut self, policy: BudgetPolicy) -> AdmissionConfig {
+        self.budget_policy = policy;
         self
     }
 }
@@ -519,6 +605,13 @@ pub struct LaneStats {
     pub dispatched_drain: u64,
     /// Requests of this class whose batch resolved after their deadline.
     pub overruns: u64,
+    /// Requests of this class answered from an incomplete scan (at least
+    /// one node returned a budget-enforced partial answer; includes
+    /// sheds).
+    pub partials: u64,
+    /// Requests of this class where at least one node shed the batch
+    /// outright (zero scan work) under [`BudgetPolicy::Shed`].
+    pub sheds: u64,
     /// `try_submit` rejections of this class due to a full queue.
     pub rejected_full: u64,
 }
@@ -759,14 +852,15 @@ fn take_cut(
 
 impl AdmissionQueue {
     /// Start the queue with the production clock. `dispatch` resolves one
-    /// flat row-major block (`nq × dim` floats, plus the remaining budget
-    /// in µs of the batch's most urgent request — saturating to 0 once
-    /// the deadline has passed — and the batch's scheduling class:
-    /// [`Class::Monitor`] if any monitor rides the cut) and returns
-    /// exactly `nq` results in order.
+    /// flat row-major block (`nq × dim` floats, plus the cut's [`Budget`]
+    /// — the remaining µs of the batch's most urgent request, computed at
+    /// dispatch and saturating to 0 once the deadline has passed, paired
+    /// with the queue's [`BudgetPolicy`] — and the batch's scheduling
+    /// class: [`Class::Monitor`] if any monitor rides the cut) and
+    /// returns exactly `nq` results in order.
     pub fn start<D>(cfg: AdmissionConfig, dispatch: D) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static,
+        D: FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static,
     {
         AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(SystemClock::new()))
     }
@@ -778,7 +872,7 @@ impl AdmissionQueue {
         clock: Arc<dyn Clock>,
     ) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static,
+        D: FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static,
     {
         assert!(cfg.dim > 0, "admission dim must be positive");
         assert!(cfg.max_batch > 0, "max_batch must be positive");
@@ -816,15 +910,17 @@ impl AdmissionQueue {
                 while let Ok(CutJob { batch }) = cut_rx.recv() {
                     let nq = batch.len();
                     let start_ns = shared.clock.now_ns();
-                    // Remaining budget of the batch's most urgent request
-                    // — time spent queued behind the pipeline counts
-                    // against it.
-                    let budget_us = batch
+                    // Remaining budget of the batch's most urgent request,
+                    // computed ONCE here — time spent queued behind the
+                    // pipeline counts against it, and every node (local or
+                    // remote) enforces against this same number.
+                    let remaining_us = batch
                         .iter()
                         .map(|p| p.deadline_ns)
                         .min()
                         .map(|dl| dl.saturating_sub(start_ns) / 1_000)
                         .unwrap_or(0);
+                    let budget = Budget::enforced(remaining_us, shared.cfg.budget_policy);
                     let class = if batch.iter().any(|p| p.class == Class::Monitor) {
                         Class::Monitor
                     } else {
@@ -834,7 +930,7 @@ impl AdmissionQueue {
                     for p in &batch {
                         flat.extend_from_slice(&p.q);
                     }
-                    let results = dispatch(flat, nq, budget_us, class);
+                    let results = dispatch(flat, nq, budget, class);
                     // Per-class overrun attribution: every request whose
                     // deadline passed before its batch resolved is a miss
                     // the lane counters must surface.
@@ -851,6 +947,27 @@ impl AdmissionQueue {
                         }
                     }
                     if results.len() == nq {
+                        // Per-class partial/shed attribution: enforcement
+                        // outcomes are health signals, surfaced on the
+                        // same lane counters as overruns.
+                        let mut partials = [0u64; 2];
+                        let mut sheds = [0u64; 2];
+                        for (p, r) in batch.iter().zip(&results) {
+                            if r.partial {
+                                partials[p.class.idx()] += 1;
+                            }
+                            if r.shed_nodes > 0 {
+                                sheds[p.class.idx()] += 1;
+                            }
+                        }
+                        for idx in 0..2 {
+                            if partials[idx] > 0 {
+                                shared.lane_counters[idx].record_partials(partials[idx]);
+                            }
+                            if sheds[idx] > 0 {
+                                shared.lane_counters[idx].record_sheds(sheds[idx]);
+                            }
+                        }
                         for (p, r) in batch.into_iter().zip(results) {
                             p.slot.fulfill(Ok(r));
                         }
@@ -1047,6 +1164,8 @@ impl AdmissionQueue {
             dispatched_aged: c.aged(),
             dispatched_drain: c.drain(),
             overruns: c.overruns(),
+            partials: c.partials(),
+            sheds: c.sheds(),
             rejected_full: q.rejected(),
         }
     }
@@ -1119,11 +1238,11 @@ impl Drop for AdmissionQueue {
 /// [`Orchestrator::enable_admission`]: crate::coordinator::Orchestrator::enable_admission
 pub(crate) fn root_dispatcher(
     root_tx: Sender<crate::coordinator::orchestrator::RootRequest>,
-) -> impl FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static {
+) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static {
     use crate::coordinator::orchestrator::RootRequest;
-    move |qs: Vec<f32>, nq: usize, budget_us: u64, class: Class| -> Vec<QueryResult> {
+    move |qs: Vec<f32>, nq: usize, budget: Budget, class: Class| -> Vec<QueryResult> {
         let (tx, rx) = channel();
-        if root_tx.send(RootRequest::Batch { qs, nq, budget_us, class, reply_to: tx }).is_err() {
+        if root_tx.send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx }).is_err() {
             return Vec::new();
         }
         rx.recv().unwrap_or_default()
@@ -1133,6 +1252,7 @@ pub(crate) fn root_dispatcher(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     /// Far enough out that MockClock tests never promote it (the default
     /// 25ms age bound is in play unless a test overrides it).
@@ -1171,7 +1291,7 @@ mod tests {
 
     /// Fake dispatcher that echoes each query's first coordinate back in
     /// `positive_share` — proves result↔caller alignment end to end.
-    fn echo(flat: Vec<f32>, nq: usize, _budget_us: u64, _class: Class) -> Vec<QueryResult> {
+    fn echo(flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class) -> Vec<QueryResult> {
         let dim = if nq == 0 { 0 } else { flat.len() / nq };
         (0..nq)
             .map(|i| QueryResult {
@@ -1182,6 +1302,8 @@ mod tests {
                 max_comparisons: 0,
                 per_node_comparisons: Vec::new(),
                 latency_s: 0.0,
+                partial: false,
+                shed_nodes: 0,
             })
             .collect()
     }
@@ -1444,7 +1566,7 @@ mod tests {
         // channel handshakes + counter waits — no sleeps.
         let (evt_tx, evt_rx) = channel::<usize>();
         let (gate_tx, gate_rx) = channel::<()>();
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: u64, c: Class| {
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class| {
             evt_tx.send(nq).unwrap();
             gate_rx.recv().unwrap();
             echo(flat, nq, b, c)

@@ -8,7 +8,8 @@ pub mod orchestrator;
 
 pub use admission::{
     completion_slot, note_batch_overrun, AdmissionConfig, AdmissionError, AdmissionQueue,
-    AdmissionStats, Class, Clock, CutReason, LaneStats, MockClock, SystemClock, Ticket,
+    AdmissionStats, Budget, BudgetPolicy, Class, Clock, CutReason, LaneStats, MockClock,
+    SystemClock, TickClock, Ticket,
 };
 pub use cluster::{build_cluster, Cluster, ClusterConfig, EngineKind};
 pub use orchestrator::{NodeHandle, Orchestrator, QueryResult, NO_BUDGET};

@@ -27,7 +27,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::admission::{
-    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Class, Ticket,
+    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Budget, Class, Ticket,
 };
 use crate::knn::heap::{Neighbor, TopK};
 use crate::knn::predict::{positive_share, VoteConfig};
@@ -59,19 +59,21 @@ pub trait NodeHandle: Send {
         qs.chunks_exact(dim).map(|q| self.query(q)).collect()
     }
 
-    /// Batch resolution carrying the admission cut's remaining latency
-    /// budget (µs until the batch's most urgent deadline; [`NO_BUDGET`]
-    /// when the batch has none) and the cut's scheduling class
-    /// ([`Class::Monitor`] if any monitor rides it). The default ignores
-    /// both — the orchestrator-side cutter already made the cut — but
-    /// transports (TCP) override this to ship budget + class with the
-    /// frame so the far side can honor the same deadline and attribute
-    /// overruns to the right lane.
+    /// Batch resolution carrying the admission cut's [`Budget`] — the
+    /// remaining latency budget (µs until the batch's most urgent
+    /// deadline, computed once at dispatch; [`NO_BUDGET`] when the batch
+    /// has none) plus the enforcement policy — and the cut's scheduling
+    /// class ([`Class::Monitor`] if any monitor rides it). The default
+    /// ignores both — the orchestrator-side cutter already made the cut —
+    /// but real nodes enforce the budget (early-exit/shed per policy) and
+    /// transports (TCP) ship budget, policy and class with the frame so
+    /// the far side enforces the same deadline and attributes overruns to
+    /// the right lane.
     fn query_batch_budget(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
-        _budget_us: u64,
+        _budget: Budget,
         _class: Class,
     ) -> Vec<NodeReply> {
         self.query_batch(qs, nq)
@@ -95,10 +97,10 @@ impl NodeHandle for crate::node::node::LocalNode {
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
-        budget_us: u64,
+        budget: Budget,
         class: Class,
     ) -> Vec<NodeReply> {
-        crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget_us, class)
+        crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget, class)
     }
 }
 
@@ -118,16 +120,26 @@ pub struct QueryResult {
     pub per_node_comparisons: Vec<Vec<u64>>,
     /// Wall-clock latency of the full round trip (seconds).
     pub latency_s: f64,
+    /// True when at least one node answered from an incomplete scan under
+    /// budget enforcement (includes sheds): `neighbors` covers a prefix
+    /// of the cluster's tables, not all of them — recall was traded for
+    /// the deadline. Always `false` under `BudgetPolicy::LogOnly` and for
+    /// un-budgeted queries.
+    pub partial: bool,
+    /// Nodes that shed this query's batch outright (budget already spent
+    /// on arrival under `BudgetPolicy::Shed` — zero scan work done).
+    pub shed_nodes: u32,
 }
 
 #[derive(Clone)]
 enum Job {
     Single { qid: u64, q: Arc<Vec<f32>> },
     /// Flat row-major `nq × dim` block; query `i` has id `qid0 + i`.
-    /// `budget_us` is the admission cut's remaining latency budget
-    /// ([`NO_BUDGET`] for caller-formed blocks); `class` is the cut's
-    /// scheduling class (monitor if any monitor rides it).
-    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget_us: u64, class: Class },
+    /// `budget` is the admission cut's remaining latency budget plus
+    /// enforcement policy ([`Budget::none`] for caller-formed blocks);
+    /// `class` is the cut's scheduling class (monitor if any monitor
+    /// rides it).
+    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget: Budget, class: Class },
 }
 
 pub(crate) enum RootRequest {
@@ -136,7 +148,7 @@ pub(crate) enum RootRequest {
     Batch {
         qs: Vec<f32>,
         nq: usize,
-        budget_us: u64,
+        budget: Budget,
         class: Class,
         reply_to: Sender<Vec<QueryResult>>,
     },
@@ -191,10 +203,10 @@ impl Orchestrator {
                                         break;
                                     }
                                 }
-                                Job::Batch { qid0, qs, nq, budget_us, class } => {
+                                Job::Batch { qid0, qs, nq, budget, class } => {
                                     let t0 = std::time::Instant::now();
                                     let replies =
-                                        node.query_batch_budget(qs, nq, budget_us, class);
+                                        node.query_batch_budget(qs, nq, budget, class);
                                     let dt = t0.elapsed().as_secs_f64();
                                     debug_assert_eq!(replies.len(), nq);
                                     let mut dead = false;
@@ -247,10 +259,17 @@ impl Orchestrator {
                             topk: TopK::new(k_red),
                             per_node: Vec::new(),
                             received: 0,
+                            partial: false,
+                            shed_nodes: 0,
                         });
                         for &n in &reply.neighbors {
                             acc.topk.push_unique(n);
                         }
+                        // A merge of partial per-node answers is itself
+                        // partial: the flag must survive reduction so the
+                        // caller learns recall was traded for the deadline.
+                        acc.partial |= reply.partial;
+                        acc.shed_nodes += reply.shed as u32;
                         acc.per_node.push((node_id, reply.comparisons));
                         acc.received += 1;
                         if acc.received == nu {
@@ -262,6 +281,8 @@ impl Orchestrator {
                                 qid,
                                 neighbors: acc.topk.into_sorted(),
                                 per_node: acc.per_node.into_iter().map(|(_, c)| c).collect(),
+                                partial: acc.partial,
+                                shed_nodes: acc.shed_nodes,
                             };
                             if done_tx.send(out).is_err() {
                                 return;
@@ -293,6 +314,8 @@ impl Orchestrator {
                             max_comparisons,
                             per_node_comparisons: red.per_node,
                             latency_s,
+                            partial: red.partial,
+                            shed_nodes: red.shed_nodes,
                         }
                     };
                     let mut qid = 0u64;
@@ -311,7 +334,7 @@ impl Orchestrator {
                                 let _ = reply_to.send(result);
                                 qid += 1;
                             }
-                            RootRequest::Batch { qs, nq, budget_us, class, reply_to } => {
+                            RootRequest::Batch { qs, nq, budget, class, reply_to } => {
                                 let n = nq;
                                 if n == 0 {
                                     let _ = reply_to.send(Vec::new());
@@ -323,7 +346,7 @@ impl Orchestrator {
                                         qid0: qid,
                                         qs: Arc::new(qs),
                                         nq,
-                                        budget_us,
+                                        budget,
                                         class,
                                     })
                                     .is_err()
@@ -386,21 +409,22 @@ impl Orchestrator {
         }
         // Caller-formed bulk blocks are analytics by nature: no latency
         // budget, throughput-oriented.
-        self.query_batch_flat(flat, nq, NO_BUDGET, Class::Analytics)
+        self.query_batch_flat(flat, nq, Budget::none(), Class::Analytics)
     }
 
     /// Flat-buffer variant of [`query_batch`]: the block is already
     /// row-major `nq × dim` (the admission cutter's native shape),
-    /// `budget_us` carries the cut's remaining latency budget to the
-    /// nodes ([`NO_BUDGET`] when there is none), and `class` the cut's
-    /// scheduling class for node-side overrun attribution.
+    /// `budget` carries the cut's remaining latency budget plus
+    /// enforcement policy to the nodes ([`Budget::none`] when there is no
+    /// deadline), and `class` the cut's scheduling class for node-side
+    /// overrun attribution.
     ///
     /// [`query_batch`]: Orchestrator::query_batch
     pub fn query_batch_flat(
         &self,
         qs: Vec<f32>,
         nq: usize,
-        budget_us: u64,
+        budget: Budget,
         class: Class,
     ) -> Vec<QueryResult> {
         if nq == 0 {
@@ -409,7 +433,7 @@ impl Orchestrator {
         assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
         let (tx, rx) = channel();
         self.root_tx
-            .send(RootRequest::Batch { qs, nq, budget_us, class, reply_to: tx })
+            .send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx })
             .expect("root thread gone");
         rx.recv().expect("root dropped reply")
     }
@@ -432,7 +456,12 @@ impl Orchestrator {
     /// Admit one [`Class::Monitor`] query with a latency budget; returns
     /// a [`Ticket`] whose [`wait`](Ticket::wait) yields the same result
     /// [`query`] would (bit-identical reduction — the admission layer
-    /// only changes *when* work is dispatched, never what it computes).
+    /// only changes *when* work is dispatched, never what it computes)
+    /// — except under an enforcing
+    /// [`BudgetPolicy`](crate::coordinator::admission::BudgetPolicy)
+    /// (`PartialResults`/`Shed`), where a blown budget yields a
+    /// prefix-of-the-full answer with [`QueryResult::partial`] set
+    /// instead of a late complete one.
     /// Requires [`enable_admission`](Orchestrator::enable_admission).
     /// Bulk callers should use
     /// [`submit_class`](Orchestrator::submit_class) with
@@ -502,10 +531,16 @@ struct ReduceAcc {
     /// `(node_id, per-core comparisons)` — sorted by node id on completion.
     per_node: Vec<(usize, Vec<u64>)>,
     received: usize,
+    /// Any node answered partially under budget enforcement.
+    partial: bool,
+    /// Nodes that shed the batch outright.
+    shed_nodes: u32,
 }
 
 struct ReducedQuery {
     qid: u64,
     neighbors: Vec<Neighbor>,
     per_node: Vec<Vec<u64>>,
+    partial: bool,
+    shed_nodes: u32,
 }

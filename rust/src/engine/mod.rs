@@ -14,10 +14,75 @@
 
 pub mod native;
 
+use std::cell::Cell;
+use std::sync::Arc;
+
 use crate::knn::heap::{Neighbor, TopK};
+use crate::util::clock::Clock;
 
 /// Distance metrics supported by the scan.
 pub use crate::lsh::family::Metric;
+
+/// Cooperative deadline token for budget-enforced scans.
+///
+/// The scan kernels check it at *tile* granularity ([`CANCEL_TILE`] rows
+/// or candidates between checks), so the clock is read once per tile of
+/// work instead of once per row — amortized to noise against the tile's
+/// distance computations. The verdict latches: once the deadline has
+/// passed, `blown` answers without touching the clock again, and an
+/// unbounded token never reads it at all.
+///
+/// The token holds an injected [`Clock`], so enforcement tests drive it
+/// with `MockClock`/`TickClock` and are deterministic — no sleeps, no
+/// machine-speed assumptions. It is intentionally NOT `Sync` (one token
+/// belongs to one scanning thread); the engines take it by reference
+/// alongside `&self`, which stays `Send + Sync`.
+pub struct ScanCancel {
+    clock: Arc<dyn Clock>,
+    deadline_ns: u64,
+    blown: Cell<bool>,
+}
+
+impl ScanCancel {
+    /// A token that trips once `clock` reaches `deadline_ns` (a blown
+    /// deadline in the past trips on the first check).
+    pub fn until(clock: Arc<dyn Clock>, deadline_ns: u64) -> ScanCancel {
+        ScanCancel { clock, deadline_ns, blown: Cell::new(false) }
+    }
+
+    /// A token that never trips (and never reads the clock) — the
+    /// enforced code paths degenerate to the unenforced ones with it.
+    pub fn unbounded(clock: Arc<dyn Clock>) -> ScanCancel {
+        ScanCancel::until(clock, u64::MAX)
+    }
+
+    /// Has the deadline passed? Reads the clock at most once per call and
+    /// not at all once the verdict is latched (or when unbounded).
+    pub fn blown(&self) -> bool {
+        if self.blown.get() {
+            return true;
+        }
+        if self.deadline_ns == u64::MAX {
+            return false;
+        }
+        if self.clock.now_ns() >= self.deadline_ns {
+            self.blown.set(true);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Outcome of a cancellable range scan: how much work was done and
+/// whether the range was finished or the deadline cut it short.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScanProgress {
+    /// Distance computations actually performed.
+    pub comparisons: u64,
+    /// `false` when the deadline stopped the scan before the range end.
+    pub completed: bool,
+}
 
 /// Scalar reference distances (also the oracle for engine tests).
 #[inline]
@@ -147,10 +212,84 @@ pub trait DistanceEngine: Send + Sync {
         }
         total
     }
+
+    /// Cancellable candidate scan — the budget-enforcement entry point of
+    /// the SLSH serving path. Identical contract to [`scan`], except the
+    /// id list is walked in [`CANCEL_TILE`]-sized tiles with a deadline
+    /// check between tiles: once `cancel` is blown, the remaining ids are
+    /// skipped. Returns the comparisons actually performed (`< ids.len()`
+    /// means the scan was cut short). When the deadline never trips, the
+    /// result is bit-identical to [`scan`] — the tiles preserve candidate
+    /// order, so every top-K push happens in the same sequence.
+    ///
+    /// [`scan`]: DistanceEngine::scan
+    #[allow(clippy::too_many_arguments)]
+    fn scan_until(
+        &self,
+        metric: Metric,
+        q: &[f32],
+        data: &[f32],
+        dim: usize,
+        ids: &[u32],
+        labels: &[bool],
+        id_base: u64,
+        topk: &mut TopK,
+        cancel: &ScanCancel,
+    ) -> u64 {
+        let mut total = 0u64;
+        for tile in ids.chunks(CANCEL_TILE) {
+            if cancel.blown() {
+                break;
+            }
+            total += self.scan(metric, q, data, dim, tile, labels, id_base, topk);
+        }
+        total
+    }
+
+    /// Cancellable twin of [`scan_batch_range`] (the batched exhaustive /
+    /// PKNN path): the row range is walked in [`CANCEL_TILE`]-row tiles
+    /// with a deadline check between tiles, so a blown budget stops the
+    /// scan within one tile of work instead of finishing the shard.
+    /// Row-ascending order is preserved, so the retained top-K equals a
+    /// plain [`scan_batch_range`] over the prefix that was actually
+    /// scanned — partial results are prefixes, never samples.
+    ///
+    /// [`scan_batch_range`]: DistanceEngine::scan_batch_range
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_range_until(
+        &self,
+        metric: Metric,
+        qs: &[f32],
+        data: &[f32],
+        dim: usize,
+        range: std::ops::Range<u32>,
+        labels: &[bool],
+        id_base: u64,
+        topks: &mut [TopK],
+        cancel: &ScanCancel,
+    ) -> ScanProgress {
+        let mut comparisons = 0u64;
+        let mut next = range.start;
+        while next < range.end {
+            if cancel.blown() {
+                return ScanProgress { comparisons, completed: false };
+            }
+            let end = range.end.min(next + CANCEL_TILE as u32);
+            comparisons +=
+                self.scan_batch_range(metric, qs, data, dim, next..end, labels, id_base, topks);
+            next = end;
+        }
+        ScanProgress { comparisons, completed: true }
+    }
 }
 
 /// Stack-buffer chunk size for the default `scan_range` implementation.
 const RANGE_CHUNK: usize = 256;
+
+/// Rows/candidates scanned between deadline checks in the cancellable
+/// kernels — one clock read per tile of `CANCEL_TILE × dim` floats, so
+/// enforcement overhead is amortized to noise.
+pub const CANCEL_TILE: usize = 256;
 
 /// Push one scored candidate — shared by engine implementations.
 #[inline]
@@ -161,6 +300,142 @@ pub fn push_scored(topk: &mut TopK, id_base: u64, id: u32, dist: f32, labels: &[
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::native::NativeEngine;
+    use crate::util::clock::{MockClock, TickClock};
+    use crate::util::rng::Xoshiro256;
+
+    fn fixture(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<bool>, Vec<f32>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(0.0, 100.0) as f32).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.3)).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.gen_f64(0.0, 100.0) as f32).collect();
+        (data, labels, q)
+    }
+
+    #[test]
+    fn unbounded_cancel_is_bit_identical_to_plain_scan() {
+        let (data, labels, q) = fixture(700, 30, 11);
+        let engine = NativeEngine::new();
+        let ids: Vec<u32> = (0..700).collect();
+        let cancel = ScanCancel::unbounded(Arc::new(MockClock::new(0)));
+        let mut a = TopK::new(7);
+        let mut b = TopK::new(7);
+        let na = engine.scan(Metric::L1, &q, &data, 30, &ids, &labels, 0, &mut a);
+        let nb = engine.scan_until(Metric::L1, &q, &data, 30, &ids, &labels, 0, &mut b, &cancel);
+        assert_eq!(na, nb);
+        assert_eq!(a.into_sorted(), b.into_sorted());
+        // Range variant: same bit-identity through the tiled walk.
+        let qs: Vec<f32> = q.iter().chain(q.iter()).copied().collect();
+        let mut c: Vec<TopK> = (0..2).map(|_| TopK::new(7)).collect();
+        let mut d: Vec<TopK> = (0..2).map(|_| TopK::new(7)).collect();
+        let nc = engine.scan_batch_range(Metric::L1, &qs, &data, 30, 3..691, &labels, 0, &mut c);
+        let prog = engine.scan_batch_range_until(
+            Metric::L1,
+            &qs,
+            &data,
+            30,
+            3..691,
+            &labels,
+            0,
+            &mut d,
+            &cancel,
+        );
+        assert!(prog.completed);
+        assert_eq!(prog.comparisons, nc);
+        for (x, y) in c.into_iter().zip(d) {
+            assert_eq!(x.into_sorted(), y.into_sorted());
+        }
+    }
+
+    #[test]
+    fn already_blown_deadline_does_no_work() {
+        let (data, labels, q) = fixture(300, 30, 12);
+        let engine = NativeEngine::new();
+        let ids: Vec<u32> = (0..300).collect();
+        // Deadline at the clock's current instant: blown on the first check.
+        let cancel = ScanCancel::until(Arc::new(MockClock::new(5_000)), 5_000);
+        let mut topk = TopK::new(5);
+        let n = engine.scan_until(Metric::L1, &q, &data, 30, &ids, &labels, 0, &mut topk, &cancel);
+        assert_eq!(n, 0);
+        assert!(topk.is_empty());
+        let mut topks = [TopK::new(5)];
+        let prog = engine.scan_batch_range_until(
+            Metric::L1,
+            &q,
+            &data,
+            30,
+            0..300,
+            &labels,
+            0,
+            &mut topks,
+            &cancel,
+        );
+        assert_eq!(prog, ScanProgress { comparisons: 0, completed: false });
+        assert!(topks[0].is_empty());
+    }
+
+    #[test]
+    fn mid_scan_cancel_yields_exact_tile_prefix() {
+        // TickClock: each deadline check costs 1ns, so a deadline of D
+        // allows exactly D checks = D tiles before the scan stops — and
+        // the retained top-K must equal a plain scan over that prefix.
+        let (data, labels, q) = fixture(1000, 30, 13);
+        let engine = NativeEngine::new();
+        let ids: Vec<u32> = (0..1000).collect();
+        for allowed_tiles in [1usize, 2, 3] {
+            let cancel =
+                ScanCancel::until(Arc::new(TickClock::new(0, 1)), allowed_tiles as u64);
+            let mut partial = TopK::new(9);
+            let n = engine
+                .scan_until(Metric::L1, &q, &data, 30, &ids, &labels, 0, &mut partial, &cancel);
+            let want = (allowed_tiles * CANCEL_TILE).min(ids.len());
+            assert_eq!(n as usize, want, "tiles={allowed_tiles}");
+            let mut prefix = TopK::new(9);
+            engine.scan(Metric::L1, &q, &data, 30, &ids[..want], &labels, 0, &mut prefix);
+            assert_eq!(partial.into_sorted(), prefix.into_sorted(), "tiles={allowed_tiles}");
+        }
+        // Range variant: same prefix semantics over row tiles.
+        let cancel = ScanCancel::until(Arc::new(TickClock::new(0, 1)), 2);
+        let mut topks = [TopK::new(9)];
+        let prog = engine.scan_batch_range_until(
+            Metric::L1,
+            &q,
+            &data,
+            30,
+            0..1000,
+            &labels,
+            0,
+            &mut topks,
+            &cancel,
+        );
+        assert_eq!(prog, ScanProgress { comparisons: 2 * CANCEL_TILE as u64, completed: false });
+        let mut prefix = TopK::new(9);
+        let end = 2 * CANCEL_TILE as u32;
+        engine.scan_range(Metric::L1, &q, &data, 30, 0..end, &labels, 0, &mut prefix);
+        assert_eq!(topks[0].clone().into_sorted(), prefix.into_sorted());
+    }
+
+    #[test]
+    fn cancel_latches_and_unbounded_never_reads_the_clock() {
+        // Latching: after the first blown verdict the clock is not read
+        // again — with a TickClock the timestamp would keep climbing, so
+        // equal reads before/after prove no further reads happened.
+        let clock = Arc::new(TickClock::new(0, 1));
+        let cancel = ScanCancel::until(Arc::clone(&clock) as Arc<dyn Clock>, 1);
+        assert!(!cancel.blown()); // read 0 < 1
+        assert!(cancel.blown()); // read 1 >= 1: latch
+        let stamp = clock.now_ns();
+        assert!(cancel.blown());
+        assert!(cancel.blown());
+        assert_eq!(clock.now_ns(), stamp + 1, "latched verdict must not read the clock");
+        // Unbounded: never reads.
+        let clock = Arc::new(TickClock::new(0, 1));
+        let cancel = ScanCancel::unbounded(Arc::clone(&clock) as Arc<dyn Clock>);
+        for _ in 0..10 {
+            assert!(!cancel.blown());
+        }
+        assert_eq!(clock.now_ns(), 0, "unbounded token must not read the clock");
+    }
 
     #[test]
     fn l1_reference_values() {

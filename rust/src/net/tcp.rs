@@ -16,8 +16,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::admission::Class;
-use crate::coordinator::orchestrator::{NodeHandle, NO_BUDGET};
+use crate::coordinator::admission::{Budget, Class};
+use crate::coordinator::orchestrator::NodeHandle;
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
 use crate::node::node::{LocalNode, NodeInfo, NodeReply};
@@ -44,6 +44,8 @@ fn reply_batch<W: std::io::Write>(
             neighbors: r.neighbors,
             comparisons: r.comparisons,
             inner_probes: r.inner_probes,
+            partial: r.partial,
+            shed: r.shed,
         })
         .collect();
     Message::ReplyBatch { qid0, replies: items }.write_frame(writer)?;
@@ -117,14 +119,17 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
-            Some(Message::QueryBatchBudget { qid0, nq, budget_us, class, qs }) => {
+            Some(Message::QueryBatchBudget { qid0, nq, budget_us, class, policy, qs }) => {
                 let nq = validate_batch_geometry(nq, qs.len(), dim)
                     .map_err(|e| anyhow!("{e}"))?;
-                // Budget-overrun accounting lives inside
-                // `LocalNode::query_batch_budget` (shared with the
-                // in-process path via `note_batch_overrun`), so local and
-                // remote nodes report per-class overruns identically.
-                let replies = node.query_batch_budget(Arc::new(qs), nq, budget_us, class);
+                // Budget enforcement (overrun accounting, early-exit
+                // partial scans, shedding) lives inside
+                // `LocalNode::query_batch_budget`, shared with the
+                // in-process path — so local and remote nodes enforce the
+                // shipped remaining budget identically, anchored at
+                // their own batch arrival.
+                let budget = Budget::enforced(budget_us, policy);
+                let replies = node.query_batch_budget(Arc::new(qs), nq, budget, class);
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
@@ -200,29 +205,30 @@ impl NodeHandle for RemoteNode {
             panic!("expected Reply, got {reply:?}");
         };
         assert_eq!(rqid, qid, "out-of-order reply");
-        NodeReply { qid, neighbors, comparisons, inner_probes }
+        NodeReply { qid, neighbors, comparisons, inner_probes, partial: false, shed: false }
     }
 
     /// One frame per batch instead of one round trip per query — the
     /// remote node resolves the block on its batched core path. (The
     /// wire message needs an owned buffer, so this copies once.)
     fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
-        self.batch_roundtrip(qs, nq, NO_BUDGET, Class::Analytics)
+        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics)
     }
 
-    /// Admission cuts ship their remaining budget and class with the
-    /// frame (`QueryBatchBudget`) so the remote node can honor the same
-    /// cut and attribute overruns per lane; caller-formed blocks
-    /// ([`NO_BUDGET`]) stay on the plain `QueryBatch` frame for protocol
-    /// compatibility.
+    /// Admission cuts ship their remaining budget, enforcement policy and
+    /// class with the frame (`QueryBatchBudget`) so the remote node
+    /// enforces the same cut — anchored at frame arrival, the remaining
+    /// value having been computed once at dispatch — and attributes
+    /// overruns per lane; caller-formed blocks ([`Budget::none`]) stay on
+    /// the plain `QueryBatch` frame for protocol compatibility.
     fn query_batch_budget(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
-        budget_us: u64,
+        budget: Budget,
         class: Class,
     ) -> Vec<NodeReply> {
-        self.batch_roundtrip(qs, nq, budget_us, class)
+        self.batch_roundtrip(qs, nq, budget, class)
     }
 }
 
@@ -231,7 +237,7 @@ impl RemoteNode {
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
-        budget_us: u64,
+        budget: Budget,
         class: Class,
     ) -> Vec<NodeReply> {
         if nq == 0 {
@@ -240,14 +246,15 @@ impl RemoteNode {
         debug_assert_eq!(qs.len() % nq, 0);
         let qid0 = self.next_qid;
         self.next_qid += nq as u64;
-        let frame = if budget_us == NO_BUDGET {
+        let frame = if budget.is_none() {
             Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
         } else {
             Message::QueryBatchBudget {
                 qid0,
                 nq: nq as u64,
-                budget_us,
+                budget_us: budget.remaining_us,
                 class,
+                policy: budget.policy,
                 qs: qs.as_ref().clone(),
             }
         };
@@ -268,6 +275,8 @@ impl RemoteNode {
                 neighbors: item.neighbors,
                 comparisons: item.comparisons,
                 inner_probes: item.inner_probes,
+                partial: item.partial,
+                shed: item.shed,
             })
             .collect()
     }

@@ -8,7 +8,7 @@
 
 use std::io::{Read, Write};
 
-use crate::coordinator::admission::Class;
+use crate::coordinator::admission::{BudgetPolicy, Class};
 use crate::data::Dataset;
 use crate::knn::heap::Neighbor;
 use crate::slsh::SlshParams;
@@ -42,24 +42,39 @@ pub enum Message {
     QueryBatch { qid0: u64, nq: u64, qs: Vec<f32> },
     /// Root → node: a [`QueryBatch`](Message::QueryBatch) that carries
     /// the admission cut's remaining latency budget (µs until the batch's
-    /// most urgent deadline; `u64::MAX` = no budget) and the cut's
+    /// most urgent deadline, computed once at dispatch; `u64::MAX` = no
+    /// budget), the node-side enforcement policy, and the cut's
     /// scheduling class (monitor if any monitor rides it). Remote nodes
-    /// honor the same cut the orchestrator-side cutter made — today that
-    /// means per-class budget-overrun accounting, and it is the hook for
-    /// node-side shedding/priority scheduling.
-    QueryBatchBudget { qid0: u64, nq: u64, budget_us: u64, class: Class, qs: Vec<f32> },
+    /// enforce the same cut the orchestrator-side cutter made: per-class
+    /// overrun accounting under `LogOnly`, early-exit partial scans under
+    /// `PartialResults`, and reject-before-scan under `Shed` when the
+    /// budget is already spent on arrival.
+    QueryBatchBudget {
+        qid0: u64,
+        nq: u64,
+        budget_us: u64,
+        class: Class,
+        policy: BudgetPolicy,
+        qs: Vec<f32>,
+    },
     /// Node → root: per-query answers for one batch, in qid order.
     ReplyBatch { qid0: u64, replies: Vec<BatchReplyItem> },
     /// Root → node: drain and exit.
     Shutdown,
 }
 
-/// One query's answer inside a [`Message::ReplyBatch`].
+/// One query's answer inside a [`Message::ReplyBatch`]. The enforcement
+/// flags travel as one validated byte: bit 0 = `partial` (the scan was
+/// cut short by the budget), bit 1 = `shed` (the node rejected the batch
+/// before any scan work; implies `partial`). Any other byte — including
+/// the inconsistent `shed`-without-`partial` — is rejected as `BadTag`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchReplyItem {
     pub neighbors: Vec<Neighbor>,
     pub comparisons: Vec<u64>,
     pub inner_probes: u64,
+    pub partial: bool,
+    pub shed: bool,
 }
 
 const TAG_BUILD: u8 = 1;
@@ -156,12 +171,13 @@ impl Message {
                 bytes::write_u64(&mut out, *nq).unwrap();
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
-            Message::QueryBatchBudget { qid0, nq, budget_us, class, qs } => {
+            Message::QueryBatchBudget { qid0, nq, budget_us, class, policy, qs } => {
                 bytes::write_u8(&mut out, TAG_QUERY_BATCH_BUDGET).unwrap();
                 bytes::write_u64(&mut out, *qid0).unwrap();
                 bytes::write_u64(&mut out, *nq).unwrap();
                 bytes::write_u64(&mut out, *budget_us).unwrap();
                 bytes::write_u8(&mut out, class.as_u8()).unwrap();
+                bytes::write_u8(&mut out, policy.as_u8()).unwrap();
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
             Message::ReplyBatch { qid0, replies } => {
@@ -172,6 +188,8 @@ impl Message {
                     write_neighbors(&mut out, &item.neighbors);
                     bytes::write_u64_vec(&mut out, &item.comparisons).unwrap();
                     bytes::write_u64(&mut out, item.inner_probes).unwrap();
+                    let flags = item.partial as u8 | ((item.shed as u8) << 1);
+                    bytes::write_u8(&mut out, flags).unwrap();
                 }
             }
             Message::Shutdown => {
@@ -229,8 +247,13 @@ impl Message {
                 let class_b = bytes::read_u8(&mut r)?;
                 let class = Class::from_u8(class_b)
                     .ok_or(CodecError::BadTag(class_b as u32, "Class"))?;
+                // Peer-controlled policy byte: same rule — a corrupt byte
+                // must not silently change enforcement behavior.
+                let policy_b = bytes::read_u8(&mut r)?;
+                let policy = BudgetPolicy::from_u8(policy_b)
+                    .ok_or(CodecError::BadTag(policy_b as u32, "BudgetPolicy"))?;
                 let qs = bytes::read_f32_vec(&mut r)?;
-                Ok(Message::QueryBatchBudget { qid0, nq, budget_us, class, qs })
+                Ok(Message::QueryBatchBudget { qid0, nq, budget_us, class, policy, qs })
             }
             TAG_REPLY_BATCH => {
                 let qid0 = bytes::read_u64(&mut r)?;
@@ -240,10 +263,25 @@ impl Message {
                 }
                 let mut replies = Vec::with_capacity(count);
                 for _ in 0..count {
+                    let neighbors = read_neighbors(&mut r)?;
+                    let comparisons = bytes::read_u64_vec(&mut r)?;
+                    let inner_probes = bytes::read_u64(&mut r)?;
+                    // Flags byte: only {none, partial, partial|shed} are
+                    // coherent states; everything else (including shed
+                    // without partial) is a hostile/corrupt peer.
+                    let flags = bytes::read_u8(&mut r)?;
+                    let (partial, shed) = match flags {
+                        0 => (false, false),
+                        1 => (true, false),
+                        3 => (true, true),
+                        f => return Err(CodecError::BadTag(f as u32, "ReplyFlags")),
+                    };
                     replies.push(BatchReplyItem {
-                        neighbors: read_neighbors(&mut r)?,
-                        comparisons: bytes::read_u64_vec(&mut r)?,
-                        inner_probes: bytes::read_u64(&mut r)?,
+                        neighbors,
+                        comparisons,
+                        inner_probes,
+                        partial,
+                        shed,
                     });
                 }
                 Ok(Message::ReplyBatch { qid0, replies })
@@ -325,70 +363,106 @@ mod tests {
         assert_eq!(roundtrip(&r), r);
     }
 
-    #[test]
-    fn batch_messages_roundtrip() {
-        let q = Message::QueryBatch { qid0: 40, nq: 2, qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
-        assert_eq!(roundtrip(&q), q);
-        let r = Message::ReplyBatch {
+    /// One of each enforcement-relevant frame shape, spanning lanes,
+    /// policies, flags and the no-budget sentinel — the corpus the
+    /// roundtrip and truncation property tests sweep.
+    fn budget_frame_corpus() -> Vec<Message> {
+        let mut frames = Vec::new();
+        // Geometry sweep × class × policy for the budget frame.
+        for (nq, dim) in [(1u64, 1usize), (2, 3), (4, 7), (3, 30)] {
+            for class in [Class::Monitor, Class::Analytics] {
+                for policy in
+                    [BudgetPolicy::LogOnly, BudgetPolicy::PartialResults, BudgetPolicy::Shed]
+                {
+                    frames.push(Message::QueryBatchBudget {
+                        qid0: 77,
+                        nq,
+                        budget_us: 1500,
+                        class,
+                        policy,
+                        qs: (0..nq as usize * dim).map(|i| i as f32 * 0.5).collect(),
+                    });
+                }
+            }
+        }
+        // The no-budget sentinel used by caller-formed blocks.
+        frames.push(Message::QueryBatchBudget {
+            qid0: 0,
+            nq: 1,
+            budget_us: u64::MAX,
+            class: Class::Analytics,
+            policy: BudgetPolicy::LogOnly,
+            qs: vec![9.0, 8.0, 7.0],
+        });
+        // Reply batches across every coherent flag state, empty and
+        // non-empty neighbor sets, empty batch included.
+        frames.push(Message::ReplyBatch { qid0: 9, replies: vec![] });
+        frames.push(Message::ReplyBatch {
             qid0: 40,
             replies: vec![
                 BatchReplyItem {
                     neighbors: vec![Neighbor { id: 5, dist: 1.25, label: true }],
                     comparisons: vec![10, 20],
                     inner_probes: 1,
+                    partial: false,
+                    shed: false,
                 },
-                BatchReplyItem { neighbors: vec![], comparisons: vec![0, 0], inner_probes: 0 },
+                BatchReplyItem {
+                    neighbors: vec![Neighbor { id: 6, dist: 2.5, label: false }],
+                    comparisons: vec![4, 0],
+                    inner_probes: 0,
+                    partial: true,
+                    shed: false,
+                },
+                BatchReplyItem {
+                    neighbors: vec![],
+                    comparisons: vec![0, 0],
+                    inner_probes: 0,
+                    partial: true,
+                    shed: true,
+                },
             ],
-        };
-        assert_eq!(roundtrip(&r), r);
+        });
+        frames
     }
 
     #[test]
-    fn budget_batch_roundtrip() {
-        // A real admission cut (finite remaining budget, monitor lane)...
-        let m = Message::QueryBatchBudget {
-            qid0: 77,
-            nq: 2,
-            budget_us: 1500,
-            class: Class::Monitor,
-            qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
-        };
-        assert_eq!(roundtrip(&m), m);
-        // ...an analytics-only cut...
-        let m = Message::QueryBatchBudget {
-            qid0: 78,
-            nq: 1,
-            budget_us: 50_000,
-            class: Class::Analytics,
-            qs: vec![1.0, 2.0, 3.0],
-        };
-        assert_eq!(roundtrip(&m), m);
-        // ...and the no-budget sentinel used by caller-formed blocks.
-        let m = Message::QueryBatchBudget {
-            qid0: 0,
-            nq: 1,
-            budget_us: u64::MAX,
-            class: Class::Analytics,
-            qs: vec![9.0, 8.0, 7.0],
-        };
-        assert_eq!(roundtrip(&m), m);
+    fn batch_messages_roundtrip() {
+        let q = Message::QueryBatch { qid0: 40, nq: 2, qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        assert_eq!(roundtrip(&q), q);
     }
 
     #[test]
-    fn truncated_budget_batch_is_error() {
-        let mut buf = Vec::new();
-        Message::QueryBatchBudget {
-            qid0: 3,
-            nq: 4,
-            budget_us: 250,
-            class: Class::Monitor,
-            qs: vec![0.5; 120],
+    fn budget_and_reply_frames_roundtrip_across_sweep() {
+        for m in budget_frame_corpus() {
+            assert_eq!(roundtrip(&m), m, "frame {m:?}");
         }
-        .write_frame(&mut buf)
-        .unwrap();
-        // Valid length prefix, payload cut mid-floats.
-        buf.truncate(buf.len() / 2);
-        assert!(Message::read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn budget_and_reply_frames_reject_truncation_at_every_byte() {
+        // Property: EVERY strict prefix of a valid payload must decode to
+        // an error — never panic, never silently succeed with less data.
+        for m in budget_frame_corpus() {
+            let payload = m.encode();
+            assert_eq!(Message::decode(&payload).unwrap(), m);
+            for cut in 0..payload.len() {
+                assert!(
+                    Message::decode(&payload[..cut]).is_err(),
+                    "decode must fail at cut {cut}/{} for {m:?}",
+                    payload.len()
+                );
+            }
+            // Framed variant: valid length prefix, payload cut short.
+            let mut framed = Vec::new();
+            m.write_frame(&mut framed).unwrap();
+            for cut in 4..framed.len() {
+                assert!(
+                    Message::read_frame(&mut std::io::Cursor::new(&framed[..cut])).is_err(),
+                    "read_frame must fail at cut {cut} for {m:?}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -398,11 +472,13 @@ mod tests {
             nq: 1,
             budget_us: 100,
             class: Class::Monitor,
+            policy: BudgetPolicy::LogOnly,
             qs: vec![1.0, 2.0],
         };
         let mut payload = m.encode();
         // Payload layout: tag(1) + qid0(8) + nq(8) + budget_us(8) +
-        // class(1) + floats. Flip the class byte to an unknown lane.
+        // class(1) + policy(1) + floats. Flip the class byte to an
+        // unknown lane.
         assert_eq!(payload[25], Class::Monitor.as_u8());
         payload[25] = 7;
         assert!(matches!(Message::decode(&payload), Err(CodecError::BadTag(7, _))));
@@ -412,6 +488,61 @@ mod tests {
             assert_eq!(Class::from_u8(class.as_u8()), Some(class));
         }
         assert_eq!(Class::from_u8(2), None);
+    }
+
+    #[test]
+    fn bad_policy_byte_is_rejected() {
+        let m = Message::QueryBatchBudget {
+            qid0: 1,
+            nq: 1,
+            budget_us: 100,
+            class: Class::Monitor,
+            policy: BudgetPolicy::Shed,
+            qs: vec![1.0, 2.0],
+        };
+        let mut payload = m.encode();
+        // Policy byte sits right after the class byte.
+        assert_eq!(payload[26], BudgetPolicy::Shed.as_u8());
+        for bad in [3u8, 7, 255] {
+            payload[26] = bad;
+            let got = Message::decode(&payload);
+            assert!(
+                matches!(got, Err(CodecError::BadTag(b, "BudgetPolicy")) if b == bad as u32),
+                "policy byte {bad} must be rejected"
+            );
+        }
+        // The policy codec itself: all three policies survive, unknown
+        // bytes do not.
+        for policy in [BudgetPolicy::LogOnly, BudgetPolicy::PartialResults, BudgetPolicy::Shed] {
+            assert_eq!(BudgetPolicy::from_u8(policy.as_u8()), Some(policy));
+        }
+        assert_eq!(BudgetPolicy::from_u8(3), None);
+    }
+
+    #[test]
+    fn bad_reply_flags_byte_is_rejected() {
+        let m = Message::ReplyBatch {
+            qid0: 4,
+            replies: vec![BatchReplyItem {
+                neighbors: vec![],
+                comparisons: vec![1],
+                inner_probes: 0,
+                partial: false,
+                shed: false,
+            }],
+        };
+        let mut payload = m.encode();
+        // The flags byte is the LAST payload byte (single item).
+        let last = payload.len() - 1;
+        // 2 = shed-without-partial (incoherent), >3 = unknown bits.
+        for bad in [2u8, 4, 9, 255] {
+            payload[last] = bad;
+            let got = Message::decode(&payload);
+            assert!(
+                matches!(got, Err(CodecError::BadTag(b, "ReplyFlags")) if b == bad as u32),
+                "flags byte {bad} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -8,13 +8,13 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::coordinator::admission::{note_batch_overrun, Class};
-use crate::coordinator::orchestrator::NO_BUDGET;
+use crate::coordinator::admission::{note_batch_overrun, Budget, BudgetPolicy, Class};
 use crate::data::Dataset;
 use crate::engine::DistanceEngine;
 use crate::knn::heap::{Neighbor, TopK};
 use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReplyMsg};
 use crate::slsh::SlshParams;
+use crate::util::clock::{Clock, SystemClock};
 
 /// A node's answer to one query — what travels back to the Orchestrator.
 #[derive(Debug, Clone)]
@@ -27,6 +27,18 @@ pub struct NodeReply {
     pub comparisons: Vec<u64>,
     /// Inner-layer probes per core (diagnostics).
     pub inner_probes: u64,
+    /// True when budget enforcement stopped at least one core before it
+    /// covered all its tables. `neighbors` is then the union of
+    /// *per-core table prefixes* (each core stops on a prefix of its OWN
+    /// owned tables; cores progress independently), so every returned
+    /// neighbor carries its true distance and appears in the unenforced
+    /// candidate walk — but the union is not in general a prefix of the
+    /// node's full table order. Always false without enforcement.
+    pub partial: bool,
+    /// True when the node shed the whole batch before any scan work
+    /// (budget already spent on arrival under `BudgetPolicy::Shed`).
+    /// Implies `partial`.
+    pub shed: bool,
 }
 
 /// Construction-time information reported by a node.
@@ -48,6 +60,9 @@ pub struct LocalNode {
     p: usize,
     info: NodeInfo,
     next_qid: u64,
+    /// Budget-enforcement time source (shared with every worker); a node
+    /// anchors a cut's deadline at batch *arrival* on this clock.
+    clock: Arc<dyn Clock>,
 }
 
 impl LocalNode {
@@ -62,7 +77,30 @@ impl LocalNode {
         id_base: u64,
         params: &SlshParams,
         p: usize,
+        engines: Vec<Box<dyn DistanceEngine>>,
+    ) -> LocalNode {
+        LocalNode::spawn_with_clock(
+            node_id,
+            shard,
+            id_base,
+            params,
+            p,
+            engines,
+            Arc::new(SystemClock::new()),
+        )
+    }
+
+    /// [`spawn`](LocalNode::spawn) with an injected [`Clock`] — the
+    /// budget-enforcement tests drive nodes with `MockClock`/`TickClock`
+    /// so partial-scan decisions are deterministic.
+    pub fn spawn_with_clock(
+        node_id: usize,
+        shard: Arc<Dataset>,
+        id_base: u64,
+        params: &SlshParams,
+        p: usize,
         mut engines: Vec<Box<dyn DistanceEngine>>,
+        clock: Arc<dyn Clock>,
     ) -> LocalNode {
         assert_eq!(engines.len(), p, "need one engine per core");
         let t0 = std::time::Instant::now();
@@ -77,14 +115,15 @@ impl LocalNode {
             let params_c = params.clone();
             let tables = owned_tables(params.outer.l, p, core);
             let engine = engines.remove(0);
+            let clock_c = Arc::clone(&clock);
             let reply_tx_c = reply_tx.clone();
             let ready_c = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("node{node_id}-core{core}"))
                 .spawn(move || {
                     run_worker(
-                        core, shard_c, id_base, params_c, tables, engine, rx, reply_tx_c,
-                        ready_c,
+                        core, shard_c, id_base, params_c, tables, engine, clock_c, rx,
+                        reply_tx_c, ready_c,
                     )
                 })
                 .expect("spawning worker");
@@ -103,7 +142,17 @@ impl LocalNode {
             cores: p,
             build_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
-        LocalNode { node_id, worker_tx, reply_rx, handles, k: params.k, p, info, next_qid: 0 }
+        LocalNode {
+            node_id,
+            worker_tx,
+            reply_rx,
+            handles,
+            k: params.k,
+            p,
+            info,
+            next_qid: 0,
+            clock,
+        }
     }
 
     pub fn info(&self) -> &NodeInfo {
@@ -143,7 +192,14 @@ impl LocalNode {
             }
             received += 1;
         }
-        NodeReply { qid, neighbors: topk.into_sorted(), comparisons, inner_probes }
+        NodeReply {
+            qid,
+            neighbors: topk.into_sorted(),
+            comparisons,
+            inner_probes,
+            partial: false,
+            shed: false,
+        }
     }
 
     /// Resolve a block of `nq` queries (row-major `nq × dim`, shared
@@ -166,9 +222,18 @@ impl LocalNode {
             tx.send(WorkerMsg::QueryBatch { qid0, qs: Arc::clone(&qs), nq })
                 .expect("worker channel closed");
         }
+        self.gather_batch(qid0, nq)
+    }
+
+    /// Gather + reduce the `p` flat batch replies of one in-flight batch
+    /// (plain or budget-enforced — the per-query `partial` flags ride the
+    /// workers' [`QueryStats`](crate::slsh::QueryStats) either way and
+    /// are always false on the plain path).
+    fn gather_batch(&mut self, qid0: u64, nq: usize) -> Vec<NodeReply> {
         let mut topks: Vec<TopK> = (0..nq).map(|_| TopK::new(self.k)).collect();
         let mut comparisons: Vec<Vec<u64>> = (0..nq).map(|_| vec![0u64; self.p]).collect();
         let mut inner_probes = vec![0u64; nq];
+        let mut partial = vec![false; nq];
         let mut received = 0;
         while received < self.p {
             let WorkerReplyMsg::Batch(reply) = self.reply_rx.recv().expect("worker died")
@@ -185,6 +250,7 @@ impl LocalNode {
                 }
                 comparisons[qi][reply.core] = reply.stats[qi].comparisons;
                 inner_probes[qi] += reply.stats[qi].inner_probes;
+                partial[qi] |= reply.stats[qi].partial;
             }
             received += 1;
         }
@@ -192,39 +258,105 @@ impl LocalNode {
             .into_iter()
             .zip(comparisons)
             .zip(inner_probes)
+            .zip(partial)
             .enumerate()
-            .map(|(qi, ((topk, comps), probes))| NodeReply {
+            .map(|(qi, (((topk, comps), probes), part))| NodeReply {
                 qid: qid0 + qi as u64,
                 neighbors: topk.into_sorted(),
                 comparisons: comps,
                 inner_probes: probes,
+                partial: part,
+                shed: false,
             })
             .collect()
     }
 
     /// Budget-aware batch entry point, mirroring the wire protocol's
-    /// batch-with-budget frame: `budget_us` is the admission cut's
-    /// remaining latency budget and `class` its scheduling class. The
-    /// node receives a cut the orchestrator's cutter already made, so no
-    /// scheduling happens here — but it owns the shared budget-overrun
-    /// accounting ([`note_batch_overrun`]): both the in-process path and
-    /// the TCP server path resolve budget batches through this method, so
-    /// local and remote nodes report overruns identically. This is also
-    /// the hook for future node-side shedding/early-exit scans.
+    /// batch-with-budget frame: `budget` is the admission cut's remaining
+    /// latency budget plus the enforcement policy, `class` its scheduling
+    /// class. The node receives a cut the orchestrator's cutter already
+    /// made, so no scheduling happens here — what IS node-side is the
+    /// enforcement contract:
+    ///
+    /// * [`BudgetPolicy::LogOnly`] — full scan; overruns logged through
+    ///   the shared accounting ([`note_batch_overrun`]), which both the
+    ///   in-process path and the TCP server path go through, so local and
+    ///   remote nodes report identically (pre-enforcement behavior,
+    ///   bit-identical results).
+    /// * [`BudgetPolicy::PartialResults`] — the deadline is anchored at
+    ///   batch arrival on the node's clock (`now + remaining`), shipped
+    ///   to every worker, and the scan early-exits when it passes;
+    ///   replies carry per-query `partial` flags.
+    /// * [`BudgetPolicy::Shed`] — a batch whose budget is already spent
+    ///   on arrival (`remaining == 0`) is rejected before ANY scan work:
+    ///   workers are never contacted, every reply is empty and flagged
+    ///   `shed`. With budget remaining it behaves as `PartialResults`.
     pub fn query_batch_budget(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
-        budget_us: u64,
+        budget: Budget,
         class: Class,
     ) -> Vec<NodeReply> {
-        if budget_us == NO_BUDGET {
+        if budget.is_none() {
             return self.query_batch(qs, nq);
         }
-        let t0 = std::time::Instant::now();
-        let replies = self.query_batch(qs, nq);
-        note_batch_overrun(self.node_id, class, budget_us, t0.elapsed(), nq);
-        replies
+        match budget.policy {
+            BudgetPolicy::LogOnly => {
+                let t0 = std::time::Instant::now();
+                let replies = self.query_batch(qs, nq);
+                note_batch_overrun(self.node_id, class, budget.remaining_us, t0.elapsed(), nq);
+                replies
+            }
+            BudgetPolicy::Shed if budget.remaining_us == 0 => {
+                // The deadline has already passed: a late answer is
+                // worthless under the paper's latency model, so spend
+                // ZERO scan time on it — empty replies, flagged.
+                let qid0 = self.next_qid;
+                self.next_qid += nq as u64;
+                crate::log_info!(
+                    "node",
+                    "budget shed [{class}]: node {} rejected {nq} queries (0us remaining on arrival)",
+                    self.node_id
+                );
+                (0..nq)
+                    .map(|i| NodeReply {
+                        qid: qid0 + i as u64,
+                        neighbors: Vec::new(),
+                        comparisons: vec![0u64; self.p],
+                        inner_probes: 0,
+                        partial: true,
+                        shed: true,
+                    })
+                    .collect()
+            }
+            BudgetPolicy::PartialResults | BudgetPolicy::Shed => {
+                if nq == 0 {
+                    return Vec::new();
+                }
+                assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
+                let t0 = std::time::Instant::now();
+                // Anchor at arrival: remaining was computed once at
+                // dispatch, so every node (this one or a TCP-remote one)
+                // enforces the same wall-clock deadline.
+                let deadline_ns =
+                    self.clock.now_ns().saturating_add(budget.remaining_us.saturating_mul(1_000));
+                let qid0 = self.next_qid;
+                self.next_qid += nq as u64;
+                for tx in &self.worker_tx {
+                    tx.send(WorkerMsg::QueryBatchBudget {
+                        qid0,
+                        qs: Arc::clone(&qs),
+                        nq,
+                        deadline_ns,
+                    })
+                    .expect("worker channel closed");
+                }
+                let replies = self.gather_batch(qid0, nq);
+                note_batch_overrun(self.node_id, class, budget.remaining_us, t0.elapsed(), nq);
+                replies
+            }
+        }
     }
 }
 

@@ -8,15 +8,21 @@
 //! model) and query batches: a batch is resolved through
 //! [`SlshIndex::query_batch`] — batched hashing + pooled scratch — and
 //! answered with ONE flat [`WorkerBatchReply`] per batch, so the reply
-//! path allocates per batch, not per query.
+//! path allocates per batch, not per query. Budget-enforced batches
+//! ([`WorkerMsg::QueryBatchBudget`]) carry an absolute deadline on the
+//! node's injected clock and resolve through
+//! [`SlshIndex::query_batch_cancel`] — the worker stops consulting
+//! tables the moment the deadline is blown and flags the affected
+//! queries `partial` in their [`QueryStats`].
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::data::Dataset;
-use crate::engine::DistanceEngine;
+use crate::engine::{DistanceEngine, ScanCancel};
 use crate::knn::heap::Neighbor;
 use crate::slsh::{BatchOutput, QueryScratch, QueryStats, SlshIndex, SlshParams};
+use crate::util::clock::Clock;
 
 /// Messages a worker accepts.
 pub enum WorkerMsg {
@@ -25,6 +31,10 @@ pub enum WorkerMsg {
     /// Resolve a block of queries (`qs` row-major `nq × dim`, query `i`
     /// has id `qid0 + i`).
     QueryBatch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize },
+    /// Resolve a block under budget enforcement: stop scanning when the
+    /// worker's clock reaches `deadline_ns` and report partial results
+    /// (see [`SlshIndex::query_batch_cancel`]).
+    QueryBatchBudget { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, deadline_ns: u64 },
     /// Drain and exit.
     Shutdown,
 }
@@ -72,6 +82,7 @@ pub fn run_worker(
     params: SlshParams,
     tables: Vec<usize>,
     engine: Box<dyn DistanceEngine>,
+    clock: Arc<dyn Clock>,
     rx: Receiver<WorkerMsg>,
     reply_tx: Sender<WorkerReplyMsg>,
     ready: Sender<usize>,
@@ -113,21 +124,47 @@ pub fn run_worker(
                     &mut batch_out,
                 );
                 debug_assert_eq!(batch_out.len(), nq);
-                let (neighbors, offsets, stats) = batch_out.flat();
-                let reply = WorkerBatchReply {
-                    core,
-                    qid0,
-                    neighbors: neighbors.to_vec(),
-                    offsets: offsets.to_vec(),
-                    stats: stats.to_vec(),
-                };
-                if reply_tx.send(WorkerReplyMsg::Batch(reply)).is_err() {
+                if send_batch_reply(&reply_tx, core, qid0, &batch_out).is_err() {
+                    break;
+                }
+            }
+            WorkerMsg::QueryBatchBudget { qid0, qs, nq, deadline_ns } => {
+                let cancel = ScanCancel::until(Arc::clone(&clock), deadline_ns);
+                index.query_batch_cancel(
+                    engine.as_ref(),
+                    &qs,
+                    &shard.points,
+                    &shard.labels,
+                    id_base,
+                    &mut scratch,
+                    &mut batch_out,
+                    &cancel,
+                );
+                debug_assert_eq!(batch_out.len(), nq);
+                if send_batch_reply(&reply_tx, core, qid0, &batch_out).is_err() {
                     break;
                 }
             }
             WorkerMsg::Shutdown => break,
         }
     }
+}
+
+/// Ship one flat batch reply (shared by the plain and budget arms).
+fn send_batch_reply(
+    reply_tx: &Sender<WorkerReplyMsg>,
+    core: usize,
+    qid0: u64,
+    batch_out: &BatchOutput,
+) -> Result<(), std::sync::mpsc::SendError<WorkerReplyMsg>> {
+    let (neighbors, offsets, stats) = batch_out.flat();
+    reply_tx.send(WorkerReplyMsg::Batch(WorkerBatchReply {
+        core,
+        qid0,
+        neighbors: neighbors.to_vec(),
+        offsets: offsets.to_vec(),
+        stats: stats.to_vec(),
+    }))
 }
 
 #[cfg(test)]

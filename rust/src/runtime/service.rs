@@ -160,11 +160,14 @@ impl CutCounters {
 }
 
 /// Per-scheduling-lane dispatch accounting for the admission queue: how
-/// many requests of one class left through each cut reason, and how many
+/// many requests of one class left through each cut reason, how many
 /// were resolved only after their deadline had already passed (overruns —
-/// the tail-latency failures the priority lanes exist to prevent). One
-/// instance per [`Class`](crate::coordinator::admission::Class); all
-/// counters are monotone relaxed atomics, never a lock on the hot path.
+/// the tail-latency failures the priority lanes exist to prevent), and
+/// how many were answered under budget enforcement with a partial scan
+/// or an outright node-side shed (the recall the cluster knowingly traded
+/// for the deadline). One instance per
+/// [`Class`](crate::coordinator::admission::Class); all counters are
+/// monotone relaxed atomics, never a lock on the hot path.
 #[derive(Debug, Default)]
 pub struct LaneCounters {
     fill: AtomicU64,
@@ -172,6 +175,8 @@ pub struct LaneCounters {
     aged: AtomicU64,
     drain: AtomicU64,
     overruns: AtomicU64,
+    partials: AtomicU64,
+    sheds: AtomicU64,
 }
 
 impl LaneCounters {
@@ -204,6 +209,18 @@ impl LaneCounters {
         self.overruns.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `n` requests of this class answered from an incomplete scan
+    /// (budget enforcement returned a partial result).
+    pub fn record_partials(&self, n: u64) {
+        self.partials.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests of this class where at least one node shed the batch
+    /// before any scan work (budget already spent on arrival).
+    pub fn record_sheds(&self, n: u64) {
+        self.sheds.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn fill(&self) -> u64 {
         self.fill.load(Ordering::Relaxed)
     }
@@ -222,6 +239,14 @@ impl LaneCounters {
 
     pub fn overruns(&self) -> u64 {
         self.overruns.load(Ordering::Relaxed)
+    }
+
+    pub fn partials(&self) -> u64 {
+        self.partials.load(Ordering::Relaxed)
+    }
+
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
     }
 
     /// Total requests of this class ever dispatched, across all reasons.

@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use crate::engine::{DistanceEngine, Metric};
+use crate::engine::{DistanceEngine, Metric, ScanCancel};
 use crate::knn::heap::{Neighbor, TopK};
 use crate::lsh::family::LayerSpec;
 use crate::lsh::key::PackedKey;
@@ -35,15 +35,25 @@ pub struct SlshIndex {
     pub inner_count: usize,
 }
 
-/// Per-query resolution statistics.
+/// Per-query resolution statistics — including the completion metadata
+/// budget enforcement reports (how much of the index this answer covers).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueryStats {
-    /// Deduplicated candidates scanned — equals distance comparisons.
+    /// Deduplicated candidates scanned — equals distance comparisons
+    /// actually performed (under enforcement this can be less than the
+    /// candidate set gathered).
     pub comparisons: u64,
     /// Outer buckets that hit an inner index.
     pub inner_probes: u64,
     /// Outer buckets that were taken whole.
     pub direct_buckets: u64,
+    /// Owned outer tables this query consulted — equals the number of
+    /// owned tables unless budget enforcement cut the resolution short.
+    pub tables: u32,
+    /// True when budget enforcement stopped this query before it covered
+    /// every owned table (the answer is a table-prefix, see
+    /// [`SlshIndex::query_batch_cancel`]).
+    pub partial: bool,
 }
 
 /// K-NN output of one core for one query.
@@ -238,34 +248,54 @@ impl SlshIndex {
         let mut stats = QueryStats::default();
         out.clear();
         visited.clear();
-        for (pos, lt) in self.outer.tables.iter().enumerate() {
+        for pos in 0..self.outer.tables.len() {
             let key = key_at(pos);
-            let Some(bucket_idx) = lt.table.find_bucket(&key) else { continue };
-            let ids = lt.table.bucket(bucket_idx);
-            if ids.is_empty() {
-                continue;
-            }
-            if let Some(inner) = self.inners[pos].get(&bucket_idx) {
-                stats.inner_probes += 1;
-                inner.layer.probe_each(q, |_t, positions| {
-                    for &p in positions {
-                        let id = inner.members[p as usize];
-                        if visited.insert(id) {
-                            out.push(id);
-                        }
-                    }
-                });
-            } else {
-                stats.direct_buckets += 1;
-                for &id in ids {
+            self.gather_table(pos, q, key, visited, out, &mut stats);
+        }
+        stats.tables = self.outer.tables.len() as u32;
+        stats.comparisons = out.len() as u64;
+        stats
+    }
+
+    /// Gather ONE owned table's (deduplicated) contribution to the
+    /// candidate set — the per-table body shared by the all-tables walk
+    /// above and the budget-enforced table-at-a-time walk in
+    /// [`query_batch_cancel`](SlshIndex::query_batch_cancel), which is
+    /// what makes an enforced answer an exact table-prefix of the
+    /// unenforced one.
+    fn gather_table(
+        &self,
+        pos: usize,
+        q: &[f32],
+        key: PackedKey,
+        visited: &mut StampSet,
+        out: &mut Vec<u32>,
+        stats: &mut QueryStats,
+    ) {
+        let lt = &self.outer.tables[pos];
+        let Some(bucket_idx) = lt.table.find_bucket(&key) else { return };
+        let ids = lt.table.bucket(bucket_idx);
+        if ids.is_empty() {
+            return;
+        }
+        if let Some(inner) = self.inners[pos].get(&bucket_idx) {
+            stats.inner_probes += 1;
+            inner.layer.probe_each(q, |_t, positions| {
+                for &p in positions {
+                    let id = inner.members[p as usize];
                     if visited.insert(id) {
                         out.push(id);
                     }
                 }
+            });
+        } else {
+            stats.direct_buckets += 1;
+            for &id in ids {
+                if visited.insert(id) {
+                    out.push(id);
+                }
             }
         }
-        stats.comparisons = out.len() as u64;
-        stats
     }
 
     /// Resolve a query on this core: gather candidates, scan them with the
@@ -336,6 +366,102 @@ impl SlshIndex {
             topk.reset(self.params.k);
             let scanned = engine.scan(Metric::L1, q, data, dim, cand, labels, id_base, topk);
             debug_assert_eq!(scanned, stats.comparisons);
+            out.push_query(topk, stats);
+        }
+    }
+
+    /// Budget-enforced twin of [`query_batch`]: resolution proceeds
+    /// table-at-a-time and *stops* — hashing, gathering and scanning —
+    /// the moment `cancel`'s deadline is blown, instead of finishing the
+    /// remaining tables late.
+    ///
+    /// Mechanics, chosen so partial answers have exact semantics:
+    ///
+    /// * **Lazy hashing** — owned tables are batch-hashed one table at a
+    ///   time, on first use; tables past the stopping point are never
+    ///   hashed at all.
+    /// * **Table-at-a-time gather + scan** — each table's (deduplicated)
+    ///   candidates are gathered and scanned before the next table is
+    ///   touched, through the same per-table body the unenforced path
+    ///   uses, with the deadline checked between tables and (inside
+    ///   [`DistanceEngine::scan_until`]) between candidate tiles.
+    /// * **Prefix contract** — a partial answer equals the *unenforced*
+    ///   answer of an index holding only the first [`QueryStats::tables`]
+    ///   owned tables, truncated to the first [`QueryStats::comparisons`]
+    ///   candidates — a strict prefix of the full resolution, never a
+    ///   sample (`rust/tests/budget_enforcement.rs` asserts this
+    ///   reconstruction bit-for-bit).
+    /// * **Batch-shared deadline** — one `cancel` covers the whole block;
+    ///   once it trips, every later query in the block reports
+    ///   `partial = true` with zero work, matching the node-level budget
+    ///   (the batch, not each query, owns the deadline).
+    ///
+    /// With a deadline that never trips, results and stats are
+    /// bit-identical to [`query_batch`] — same candidate order, same scan
+    /// order, same counters.
+    ///
+    /// [`query_batch`]: SlshIndex::query_batch
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_batch_cancel(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        data: &[f32],
+        labels: &[bool],
+        id_base: u64,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+        cancel: &ScanCancel,
+    ) {
+        let dim = self.params.outer.dim;
+        assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+        let nq = qs.len() / dim;
+        scratch.ensure(self.n_local, nq, self.params.k);
+        out.clear();
+        let QueryScratch { visited, cand, keys, topks } = scratch;
+        keys.clear();
+        let n_tables = self.outer.tables.len();
+        // Tables hashed so far: the batch-hashed key block is extended
+        // lazily, one table (all nq queries) at a time, preserving the
+        // `keys[pos * nq + qi]` layout.
+        let mut hashed = 0usize;
+        for qi in 0..nq {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            let topk = &mut topks[qi];
+            topk.reset(self.params.k);
+            let mut stats = QueryStats::default();
+            visited.clear();
+            cand.clear();
+            for pos in 0..n_tables {
+                if cancel.blown() {
+                    stats.partial = true;
+                    break;
+                }
+                if hashed == pos {
+                    self.outer.tables[pos].hash.hash_batch(qs, dim, keys);
+                    hashed += 1;
+                }
+                let start = cand.len();
+                self.gather_table(pos, q, keys[pos * nq + qi], visited, cand, &mut stats);
+                stats.tables += 1;
+                let fresh = cand.len() - start;
+                let scanned = engine.scan_until(
+                    Metric::L1,
+                    q,
+                    data,
+                    dim,
+                    &cand[start..],
+                    labels,
+                    id_base,
+                    topk,
+                    cancel,
+                );
+                stats.comparisons += scanned;
+                if scanned < fresh as u64 {
+                    stats.partial = true;
+                    break;
+                }
+            }
             out.push_query(topk, stats);
         }
     }
@@ -587,6 +713,75 @@ mod tests {
                     assert_eq!(out.neighbors(qi), seq.topk.into_sorted().as_slice());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn query_batch_cancel_unbounded_is_bit_identical_to_query_batch() {
+        use crate::util::clock::MockClock;
+        let fx = Fixture::new(14);
+        let engine = NativeEngine::new();
+        for params in [lsh_params(20, 16, 31), slsh_params(12, 8, 0.05, 31)] {
+            let idx = SlshIndex::build_full(&params, &fx.view());
+            let mut scratch = QueryScratch::new(fx.n());
+            let mut plain = BatchOutput::new();
+            let mut enforced = BatchOutput::new();
+            let cancel = ScanCancel::unbounded(std::sync::Arc::new(MockClock::new(0)));
+            let mut rng = Xoshiro256::seed_from_u64(16);
+            for nq in [1usize, 3, 9] {
+                let qs: Vec<f32> =
+                    (0..nq * 30).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+                idx.query_batch(&engine, &qs, &fx.data, &fx.labels, 70, &mut scratch, &mut plain);
+                idx.query_batch_cancel(
+                    &engine,
+                    &qs,
+                    &fx.data,
+                    &fx.labels,
+                    70,
+                    &mut scratch,
+                    &mut enforced,
+                    &cancel,
+                );
+                assert_eq!(enforced.len(), nq);
+                for qi in 0..nq {
+                    assert_eq!(enforced.stats(qi), plain.stats(qi), "nq={nq} qi={qi}");
+                    assert!(!enforced.stats(qi).partial);
+                    assert_eq!(enforced.stats(qi).tables, idx.num_tables() as u32);
+                    assert_eq!(enforced.neighbors(qi), plain.neighbors(qi), "nq={nq} qi={qi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn query_batch_cancel_blown_deadline_does_no_work() {
+        use crate::util::clock::MockClock;
+        let fx = Fixture::new(15);
+        let engine = NativeEngine::new();
+        let idx = SlshIndex::build_full(&lsh_params(20, 16, 31), &fx.view());
+        let mut scratch = QueryScratch::new(fx.n());
+        let mut out = BatchOutput::new();
+        // Deadline already passed: every query must come back partial,
+        // with zero tables consulted and zero comparisons.
+        let cancel = ScanCancel::until(std::sync::Arc::new(MockClock::new(1000)), 1000);
+        let qs: Vec<f32> = (0..3 * 30).map(|i| 40.0 + (i % 30) as f32).collect();
+        idx.query_batch_cancel(
+            &engine,
+            &qs,
+            &fx.data,
+            &fx.labels,
+            0,
+            &mut scratch,
+            &mut out,
+            &cancel,
+        );
+        assert_eq!(out.len(), 3);
+        for qi in 0..3 {
+            let st = out.stats(qi);
+            assert!(st.partial, "qi={qi}");
+            assert_eq!(st.tables, 0);
+            assert_eq!(st.comparisons, 0);
+            assert!(out.neighbors(qi).is_empty());
         }
     }
 

@@ -1,0 +1,135 @@
+//! Injectable monotonic time sources.
+//!
+//! Everything on the serving path that makes a *time-dependent* decision
+//! — the admission cutter choosing when to cut, a node deciding whether a
+//! scan's budget is blown — reads time through the [`Clock`] trait instead
+//! of the wall clock, so every decision is reproducible in tests:
+//!
+//! * [`SystemClock`] — production: monotonic nanoseconds since start;
+//! * [`MockClock`] — tests: time moves only when the test says so;
+//! * [`TickClock`] — tests: time advances by a fixed step on every read,
+//!   which makes "work takes time" deterministic — a scan that checks the
+//!   clock once per table blows its deadline after exactly
+//!   `deadline / step` checks, independent of the machine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic time source for scheduling and budget-enforcement decisions.
+/// Injecting it is what makes those decisions reproducible in tests.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since an arbitrary fixed origin. Must be monotone.
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: monotonic nanoseconds since construction.
+#[derive(Debug)]
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { origin: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> SystemClock {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// Test clock: time only moves when the test says so.
+#[derive(Debug, Default)]
+pub struct MockClock {
+    ns: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new(start_ns: u64) -> MockClock {
+        MockClock { ns: AtomicU64::new(start_ns) }
+    }
+
+    pub fn set_ns(&self, t: u64) {
+        self.ns.store(t, Ordering::SeqCst);
+    }
+
+    pub fn advance_ns(&self, d: u64) {
+        self.ns.fetch_add(d, Ordering::SeqCst);
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.advance_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
+/// Test clock whose reads COST time: every `now_ns` returns the current
+/// value and then advances it by `step_ns`. A budget-enforced scan that
+/// checks the clock once per unit of work therefore stops after exactly
+/// `ceil(deadline / step)` checks — a pure function of the deadline, not
+/// of machine speed — which is what makes mid-scan partial results
+/// assertable bit-for-bit (see `rust/tests/budget_enforcement.rs`).
+#[derive(Debug)]
+pub struct TickClock {
+    ns: AtomicU64,
+    step: u64,
+}
+
+impl TickClock {
+    pub fn new(start_ns: u64, step_ns: u64) -> TickClock {
+        TickClock { ns: AtomicU64::new(start_ns), step: step_ns }
+    }
+}
+
+impl Clock for TickClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.fetch_add(self.step, Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn mock_clock_moves_only_on_command() {
+        let c = MockClock::new(100);
+        assert_eq!(c.now_ns(), 100);
+        assert_eq!(c.now_ns(), 100);
+        c.advance_ns(50);
+        assert_eq!(c.now_ns(), 150);
+        c.set_ns(7);
+        assert_eq!(c.now_ns(), 7);
+        c.advance(Duration::from_nanos(3));
+        assert_eq!(c.now_ns(), 10);
+    }
+
+    #[test]
+    fn tick_clock_charges_a_step_per_read() {
+        let c = TickClock::new(1000, 10);
+        assert_eq!(c.now_ns(), 1000);
+        assert_eq!(c.now_ns(), 1010);
+        assert_eq!(c.now_ns(), 1020);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bytes;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod logger;
 pub mod rng;

@@ -10,49 +10,26 @@
 //! lane a query waited in — results must not change); all assertions are
 //! value assertions, never timing assertions.
 
+mod common;
+
 use std::time::Duration;
 
+use common::{assert_bit_identical, corpus as make_corpus, lsh_params};
 use dslsh::coordinator::{
     build_cluster, AdmissionConfig, Class, ClusterConfig, QueryResult, Ticket,
 };
-use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
-use dslsh::lsh::family::LayerSpec;
-use dslsh::slsh::SlshParams;
+use dslsh::data::Corpus;
 
 const SUBMITTERS: usize = 4;
 
 fn corpus() -> Corpus {
-    build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 2500, 24, 99))
-}
-
-fn params(data: &dslsh::data::Dataset) -> SlshParams {
-    let (lo, hi) = data.value_range();
-    SlshParams::lsh_only(LayerSpec::outer_l1(data.dim, 40, 12, lo, hi, 13), 10)
-}
-
-/// Everything in a `QueryResult` that is workload-determined. `qid` is
-/// arrival-order (scheduler-dependent through the queue) and `latency_s`
-/// is wall-clock; both are excluded by construction.
-fn assert_bit_identical(got: &QueryResult, want: &QueryResult, ctx: &str) {
-    assert_eq!(got.neighbors, want.neighbors, "{ctx}: neighbors");
-    assert!(
-        got.positive_share == want.positive_share,
-        "{ctx}: positive_share {} != {}",
-        got.positive_share,
-        want.positive_share
-    );
-    assert_eq!(got.prediction, want.prediction, "{ctx}: prediction");
-    assert_eq!(got.max_comparisons, want.max_comparisons, "{ctx}: max_comparisons");
-    assert_eq!(
-        got.per_node_comparisons, want.per_node_comparisons,
-        "{ctx}: per_node_comparisons"
-    );
+    make_corpus(2500, 24, 99)
 }
 
 #[test]
 fn admission_matches_sequential_across_configs() {
     let c = corpus();
-    let p = params(&c.data);
+    let p = lsh_params(&c.data, 40, 12, 13);
     let nq = c.queries.len();
 
     for nodes in [1usize, 2, 4] {
@@ -148,7 +125,7 @@ fn resubmission_after_queue_replacement_still_matches() {
     // must stay identical across the swap (the seam later scheduling
     // work will exercise constantly).
     let c = corpus();
-    let p = params(&c.data);
+    let p = lsh_params(&c.data, 40, 12, 13);
     let reference = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
     let want: Vec<QueryResult> = (0..6).map(|i| reference.query(c.queries.point(i))).collect();
 

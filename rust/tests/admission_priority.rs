@@ -18,54 +18,21 @@
 //! handshakes plus bounded counter polls — the *outcomes* asserted are
 //! deterministic; no assertion depends on real-time durations.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+mod common;
+
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{gated_echo, wait_until, FAR};
 use dslsh::coordinator::admission::{AdmissionConfig, AdmissionQueue, Class, MockClock};
-use dslsh::coordinator::QueryResult;
 
-/// Budgets a frozen MockClock can never expire.
-const FAR: Duration = Duration::from_secs(3600);
-
-/// Dispatcher used by every test: reports each batch's flat payload on
-/// `evt_tx` (dim = 1, so the payload identifies the batch composition),
-/// then blocks until the test releases it through `gate_rx` — an
-/// in-flight batch the test fully controls. Results echo each query's
-/// coordinate in `positive_share` to prove ticket↔result alignment.
-fn gated_echo(
-    evt_tx: Sender<Vec<f32>>,
-    gate_rx: Receiver<()>,
-) -> impl FnMut(Vec<f32>, usize, u64, Class) -> Vec<QueryResult> + Send + 'static {
-    move |flat: Vec<f32>, nq: usize, _budget_us: u64, _class: Class| {
-        evt_tx.send(flat.clone()).unwrap();
-        gate_rx.recv().unwrap();
-        (0..nq)
-            .map(|i| QueryResult {
-                qid: i as u64,
-                neighbors: Vec::new(),
-                positive_share: flat[i] as f64,
-                prediction: false,
-                max_comparisons: 0,
-                per_node_comparisons: Vec::new(),
-                latency_s: 0.0,
-            })
-            .collect()
-    }
-}
-
-/// Spin (bounded by real time) until a counter condition holds. The
-/// cutter thread needs a moment to act on a clock advance; only the
-/// arrival time of the outcome is scheduler-dependent, never the
-/// outcome itself. On the PR 2 scheduler the conditions these tests wait
-/// for can NEVER become true, so the bound doubles as the failure mode.
-fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
-    let t0 = std::time::Instant::now();
-    while !cond() {
-        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
-        std::thread::yield_now();
-    }
-}
+// `gated_echo` (the gated dispatcher every test here drives), `FAR`
+// (budgets a frozen MockClock can never expire) and the bounded
+// `wait_until` counter poll live in tests/common/mod.rs, shared with the
+// parity and budget-enforcement suites. On the PR 2 scheduler the
+// conditions these tests wait for can NEVER become true, so wait_until's
+// bound doubles as the failure mode.
 
 #[test]
 fn monitor_cut_within_budget_while_analytics_batch_in_flight() {

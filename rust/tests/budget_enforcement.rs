@@ -1,0 +1,507 @@
+//! Deterministic node-side budget-enforcement tests: the deadline is an
+//! ENFORCED contract from the scan kernel to the ticket, not a telemetry
+//! footnote.
+//!
+//! What is proven, all MockClock/TickClock-driven and
+//! handshake-synchronized (no sleeps, no machine-speed assumptions):
+//!
+//! * **(a) Blown budget ⇒ partial, with monotone work.** A budget that is
+//!   already spent yields `partial = true` with ZERO candidates examined
+//!   — strictly fewer than the unenforced run — and across a deadline
+//!   sweep the work done is monotonically non-decreasing in the budget,
+//!   never exceeding the unenforced run.
+//! * **(b) Partial answers are strict prefixes.** An enforced answer is
+//!   reconstructed bit-for-bit as the unenforced resolution of the first
+//!   `tables` owned tables truncated to the first `comparisons`
+//!   candidates — and every returned neighbor appears in the unenforced
+//!   run's candidate walk with its true distance. Partials are prefixes,
+//!   never samples.
+//! * **(c) `LogOnly` is bit-identical to the pre-enforcement behavior**,
+//!   node-level and end-to-end through the admission queue.
+//! * **`Shed` rejects before ANY scan work** when the budget is spent on
+//!   arrival — and behaves like `PartialResults` when budget remains.
+//! * **The remaining budget is computed once, at dispatch** (a slow
+//!   MockClock step between cut and dispatch is charged against the
+//!   budget), and local and remote (TCP) nodes enforce that same shipped
+//!   value identically.
+
+mod common;
+
+use std::collections::HashSet;
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{assert_bit_identical, corpus, echo_result, lsh_params, native_engines, wait_until};
+use dslsh::coordinator::admission::{
+    AdmissionConfig, AdmissionQueue, Budget, BudgetPolicy, Class, Clock, MockClock, TickClock,
+};
+use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
+use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{DistanceEngine, Metric, ScanCancel};
+use dslsh::knn::heap::TopK;
+use dslsh::knn::predict::VoteConfig;
+use dslsh::net::{serve_node, RemoteNode};
+use dslsh::node::node::{LocalNode, NodeReply};
+use dslsh::slsh::{BatchOutput, QueryScratch, SlshIndex};
+use dslsh::util::stamp::StampSet;
+use dslsh::util::threadpool::chunk_ranges;
+
+/// Flat row-major block of dataset points (self-queries guarantee every
+/// query collides in every table, so the unenforced run always does
+/// work).
+fn self_queries(data: &dslsh::data::Dataset, ids: &[usize]) -> Vec<f32> {
+    let mut flat = Vec::with_capacity(ids.len() * data.dim);
+    for &i in ids {
+        flat.extend_from_slice(data.point(i));
+    }
+    flat
+}
+
+// ---------------------------------------------------------------------------
+// (a) + (b): index-level, TickClock-driven partial scans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partial_scans_are_monotone_table_prefixes_of_the_full_answer() {
+    let c = corpus(1500, 6, 21);
+    let dim = c.data.dim;
+    let p = lsh_params(&c.data, 24, 12, 7);
+    let idx = SlshIndex::build_full(&p, &c.data);
+    let engine = NativeEngine::new();
+    let mut scratch = QueryScratch::new(c.data.len());
+    let nq = 4usize;
+    let qs = self_queries(&c.data, &[3, 77, 500, 1200]);
+
+    // Unenforced reference (and the enforced path with an unbounded
+    // token, which must be bit-identical to it).
+    let mut full = BatchOutput::new();
+    idx.query_batch(&engine, &qs, &c.data.points, &c.data.labels, 0, &mut scratch, &mut full);
+    let mut unbounded_out = BatchOutput::new();
+    let unbounded = ScanCancel::unbounded(Arc::new(MockClock::new(0)));
+    idx.query_batch_cancel(
+        &engine,
+        &qs,
+        &c.data.points,
+        &c.data.labels,
+        0,
+        &mut scratch,
+        &mut unbounded_out,
+        &unbounded,
+    );
+    for qi in 0..nq {
+        assert_eq!(unbounded_out.stats(qi), full.stats(qi), "qi={qi}");
+        assert_eq!(unbounded_out.neighbors(qi), full.neighbors(qi), "qi={qi}");
+        assert!(full.stats(qi).comparisons > 0, "fixture must do work for qi={qi}");
+    }
+
+    // Full candidate walks (per query) for the ⊆-of-unenforced-run check.
+    let mut visited = StampSet::new(c.data.len());
+    let mut cand = Vec::new();
+    let full_candidates: Vec<HashSet<u32>> = (0..nq)
+        .map(|qi| {
+            idx.candidates(&qs[qi * dim..(qi + 1) * dim], &mut visited, &mut cand);
+            cand.iter().copied().collect()
+        })
+        .collect();
+
+    // Deadline sweep on a TickClock (1ns per clock read): every run is a
+    // pure function of the deadline. Work must be monotone in the budget
+    // and every partial answer must reconstruct as a strict prefix.
+    let mut prev = vec![0u64; nq];
+    let mut saw_partial_with_work = false;
+    for deadline in [0u64, 1, 2, 3, 5, 8, 13, 21, 40, 80, 1_000, 1_000_000] {
+        let cancel = ScanCancel::until(Arc::new(TickClock::new(0, 1)), deadline);
+        let mut out = BatchOutput::new();
+        idx.query_batch_cancel(
+            &engine,
+            &qs,
+            &c.data.points,
+            &c.data.labels,
+            0,
+            &mut scratch,
+            &mut out,
+            &cancel,
+        );
+        for qi in 0..nq {
+            let st = out.stats(qi);
+            let full_st = full.stats(qi);
+            assert!(st.comparisons <= full_st.comparisons, "d={deadline} qi={qi}");
+            assert!(st.tables <= full_st.tables, "d={deadline} qi={qi}");
+            assert!(
+                st.comparisons >= prev[qi],
+                "work must be monotone in the budget: d={deadline} qi={qi}"
+            );
+            prev[qi] = st.comparisons;
+            if deadline == 0 {
+                // (a) already-blown budget: flagged, and STRICTLY fewer
+                // candidates examined than the unenforced run (zero).
+                assert!(st.partial, "qi={qi}");
+                assert_eq!(st.comparisons, 0);
+                assert_eq!(st.tables, 0);
+                assert!(out.neighbors(qi).is_empty());
+            }
+            if !st.partial {
+                assert_eq!(st, full_st, "complete answers must match the unenforced run");
+                assert_eq!(out.neighbors(qi), full.neighbors(qi));
+            } else {
+                assert!(
+                    st.comparisons < full_st.comparisons || st.tables < full_st.tables,
+                    "a partial answer must have done less: d={deadline} qi={qi}"
+                );
+                if st.comparisons > 0 {
+                    saw_partial_with_work = true;
+                }
+                // (b) strict-prefix reconstruction: an index holding only
+                // the first `tables` owned tables, resolved WITHOUT
+                // enforcement and truncated to the first `comparisons`
+                // candidates, reproduces the partial answer bit-for-bit.
+                let prefix_tables: Vec<usize> = (0..st.tables as usize).collect();
+                let prefix_idx = SlshIndex::build(&p, &c.data, &prefix_tables);
+                let q = &qs[qi * dim..(qi + 1) * dim];
+                prefix_idx.candidates(q, &mut visited, &mut cand);
+                assert!(
+                    st.comparisons as usize <= cand.len(),
+                    "d={deadline} qi={qi}: examined more than the prefix holds"
+                );
+                let mut topk = TopK::new(p.k);
+                engine.scan(
+                    Metric::L1,
+                    q,
+                    &c.data.points,
+                    dim,
+                    &cand[..st.comparisons as usize],
+                    &c.data.labels,
+                    0,
+                    &mut topk,
+                );
+                assert_eq!(
+                    out.neighbors(qi),
+                    topk.into_sorted().as_slice(),
+                    "d={deadline} qi={qi}: partial answer must be the prefix resolution"
+                );
+                // ...and every returned neighbor appears in the
+                // unenforced run's candidate walk.
+                for n in out.neighbors(qi) {
+                    assert!(
+                        full_candidates[qi].contains(&(n.id as u32)),
+                        "d={deadline} qi={qi}: neighbor {} not in the unenforced run",
+                        n.id
+                    );
+                }
+            }
+        }
+    }
+    assert!(
+        saw_partial_with_work,
+        "sweep must include genuine mid-scan partials, not only empty/complete runs"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Node-level enforcement (MockClock, frozen: deterministic on any machine)
+// ---------------------------------------------------------------------------
+
+/// Everything in a `NodeReply` that is workload-determined (`qid` is
+/// per-node arrival order, excluded).
+fn assert_replies_match(got: &[NodeReply], want: &[NodeReply], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: arity");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.neighbors, w.neighbors, "{ctx} q={i}: neighbors");
+        assert_eq!(g.comparisons, w.comparisons, "{ctx} q={i}: comparisons");
+        assert_eq!(g.inner_probes, w.inner_probes, "{ctx} q={i}: inner_probes");
+        assert_eq!(g.partial, w.partial, "{ctx} q={i}: partial");
+        assert_eq!(g.shed, w.shed, "{ctx} q={i}: shed");
+    }
+}
+
+#[test]
+fn node_enforcement_policies_zero_and_slack_budgets() {
+    let c = corpus(1200, 4, 33);
+    let p = lsh_params(&c.data, 30, 8, 5);
+    let shard = Arc::new(c.data.clone());
+    let nq = 4usize;
+    let qs = Arc::new(self_queries(&c.data, &[1, 200, 600, 1100]));
+
+    // Twin nodes with identical specs build identical tables; `node` runs
+    // on a frozen MockClock so every enforcement decision is exact.
+    let clock = Arc::new(MockClock::new(10_000));
+    let mut node = LocalNode::spawn_with_clock(
+        0,
+        Arc::clone(&shard),
+        0,
+        &p,
+        2,
+        native_engines(2),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    );
+    let mut twin = LocalNode::spawn(0, Arc::clone(&shard), 0, &p, 2, native_engines(2));
+    let full = twin.query_batch(Arc::clone(&qs), nq);
+    let full_work: u64 = full.iter().flat_map(|r| r.comparisons.iter()).sum();
+    assert!(full_work > 0, "fixture must do work unenforced");
+
+    // (a) PartialResults with the budget already spent: partial replies,
+    // ZERO scan work — strictly fewer candidates examined than the
+    // unenforced run.
+    let replies = node.query_batch_budget(
+        Arc::clone(&qs),
+        nq,
+        Budget::enforced(0, BudgetPolicy::PartialResults),
+        Class::Monitor,
+    );
+    assert_eq!(replies.len(), nq);
+    for r in &replies {
+        assert!(r.partial && !r.shed);
+        assert!(r.neighbors.is_empty());
+        assert!(r.comparisons.iter().all(|&w| w == 0), "no scan work on a spent budget");
+    }
+
+    // PartialResults with slack budget on a frozen clock: the deadline
+    // can never pass, so the answer is bit-identical to the unenforced
+    // twin.
+    let slack = node.query_batch_budget(
+        Arc::clone(&qs),
+        nq,
+        Budget::enforced(1_000_000, BudgetPolicy::PartialResults),
+        Class::Monitor,
+    );
+    assert_replies_match(&slack, &full, "slack PartialResults");
+
+    // (c) LogOnly is bit-identical to the plain batch path even with a
+    // hopeless 1µs budget (it only logs the overrun).
+    let log_only = node.query_batch_budget(
+        Arc::clone(&qs),
+        nq,
+        Budget::enforced(1, BudgetPolicy::LogOnly),
+        Class::Analytics,
+    );
+    assert_replies_match(&log_only, &full, "LogOnly");
+
+    // Shed with the budget spent on arrival: rejected before ANY scan
+    // work, every reply flagged shed + partial.
+    let shed = node.query_batch_budget(
+        Arc::clone(&qs),
+        nq,
+        Budget::enforced(0, BudgetPolicy::Shed),
+        Class::Monitor,
+    );
+    assert_eq!(shed.len(), nq);
+    for r in &shed {
+        assert!(r.shed && r.partial);
+        assert!(r.neighbors.is_empty());
+        assert_eq!(r.comparisons, vec![0u64; 2], "shed must do zero scan work");
+        assert_eq!(r.inner_probes, 0);
+    }
+
+    // Shed with budget remaining serves the batch (PartialResults
+    // semantics; complete here because the clock is frozen).
+    let served = node.query_batch_budget(
+        Arc::clone(&qs),
+        nq,
+        Budget::enforced(1_000_000, BudgetPolicy::Shed),
+        Class::Monitor,
+    );
+    assert_replies_match(&served, &full, "Shed with remaining budget");
+
+    // And a no-budget batch ignores the policy entirely.
+    let unbudgeted = node.query_batch_budget(Arc::clone(&qs), nq, Budget::none(), Class::Monitor);
+    assert_replies_match(&unbudgeted, &full, "no budget");
+}
+
+// ---------------------------------------------------------------------------
+// The dispatch-time budget contract (the RemoteNode regression)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remaining_budget_is_computed_at_dispatch_not_at_cut() {
+    // Regression for the one-deadline contract: the remaining budget a
+    // cut ships is computed when the DISPATCHER picks the cut up, so a
+    // slow step between cut and dispatch (here: an explicit MockClock
+    // advance while the cut is parked at the pipeline rendezvous) is
+    // charged against the budget — every node, local or remote, then
+    // anchors the same shipped remainder at its own arrival instant.
+    let clock = Arc::new(MockClock::new(0));
+    let (evt_tx, evt_rx) = channel::<(Vec<f32>, Budget)>();
+    let (gate_tx, gate_rx) = channel::<()>();
+    let dispatch = move |flat: Vec<f32>, nq: usize, budget: Budget, _class: Class| {
+        evt_tx.send((flat.clone(), budget)).unwrap();
+        gate_rx.recv().unwrap();
+        (0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect()
+    };
+    let cfg = AdmissionConfig::new(1, 1)
+        .with_queue_cap(16)
+        .with_pipeline(1)
+        .with_budget_policy(BudgetPolicy::PartialResults);
+    let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::clone(&clock) as Arc<dyn Clock>);
+
+    // Batch 1 (max_batch = 1 ⇒ singleton fill cuts) is dispatched
+    // immediately and gated — the dispatcher is now busy.
+    let t1 = q.submit(&[1.0], common::FAR).unwrap();
+    let (f1, _) = evt_rx.recv().unwrap();
+    assert_eq!(f1, vec![1.0]);
+
+    // Batch 2 is CUT now (t = 0, budget 10µs) but parks at the pipeline
+    // rendezvous behind the gated dispatcher.
+    let t2 = q.submit(&[2.0], Duration::from_micros(10)).unwrap();
+    wait_until(|| q.stats().completed == 2, "cut 2 to park at the rendezvous");
+
+    // The slow step between cut and dispatch.
+    clock.advance(Duration::from_micros(4));
+
+    // Release batch 1; the dispatcher picks batch 2 up and computes its
+    // remaining budget NOW: 10µs − 4µs, not the 10µs of cut time.
+    gate_tx.send(()).unwrap();
+    let (f2, b2) = evt_rx.recv().unwrap();
+    assert_eq!(f2, vec![2.0]);
+    assert_eq!(b2.remaining_us, 6, "remaining budget must be computed at dispatch");
+    assert_eq!(b2.policy, BudgetPolicy::PartialResults, "policy must ride the cut");
+    gate_tx.send(()).unwrap();
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: flags and counters through cluster, tickets and wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_policies_flow_to_tickets_and_lane_counters() {
+    let c = corpus(2000, 8, 55);
+    let dim = c.data.dim;
+    let p = lsh_params(&c.data, 40, 12, 13);
+    let reference = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
+    let seq: Vec<_> = (0..4).map(|i| reference.query(c.queries.point(i))).collect();
+    let mut cluster = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
+
+    // (c) LogOnly (the default policy), zero budget: bit-identical to
+    // sequential queries — enforcement off means nothing changes, not
+    // even the flags.
+    cluster
+        .orchestrator
+        .enable_admission(AdmissionConfig::new(dim, 4).with_queue_cap(32));
+    for (i, want) in seq.iter().enumerate() {
+        let got = cluster
+            .orchestrator
+            .submit(c.queries.point(i), Duration::ZERO)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(!got.partial && got.shed_nodes == 0, "LogOnly must never flag");
+        assert_bit_identical(&got, want, &format!("LogOnly q={i}"));
+    }
+    let st = cluster.orchestrator.admission().unwrap().stats();
+    assert_eq!(st.monitor.partials, 0);
+    assert_eq!(st.monitor.sheds, 0);
+
+    // PartialResults, zero budget: both nodes are already blown on
+    // arrival ⇒ empty partial answers with zero comparisons, flagged on
+    // the ticket and counted on the monitor lane.
+    cluster.orchestrator.enable_admission(
+        AdmissionConfig::new(dim, 4)
+            .with_queue_cap(32)
+            .with_budget_policy(BudgetPolicy::PartialResults),
+    );
+    for i in 0..3 {
+        let got = cluster
+            .orchestrator
+            .submit(c.queries.point(i), Duration::ZERO)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(got.partial, "q={i}");
+        assert_eq!(got.shed_nodes, 0, "PartialResults never sheds");
+        assert!(got.neighbors.is_empty());
+        assert_eq!(got.max_comparisons, 0, "no scan work on a spent budget");
+        assert_eq!(got.per_node_comparisons, vec![vec![0u64; 2]; 2]);
+        assert!(!got.prediction, "empty K-NN abstains to the majority class");
+    }
+    let st = cluster.orchestrator.admission().unwrap().stats();
+    assert_eq!(st.monitor.partials, 3, "every zero-budget request must count as partial");
+    assert_eq!(st.monitor.sheds, 0);
+
+    // Shed, zero budget: both nodes reject before any scan work.
+    cluster.orchestrator.enable_admission(
+        AdmissionConfig::new(dim, 4).with_queue_cap(32).with_budget_policy(BudgetPolicy::Shed),
+    );
+    for i in 0..2 {
+        let got = cluster
+            .orchestrator
+            .submit(c.queries.point(i), Duration::ZERO)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(got.partial, "q={i}");
+        assert_eq!(got.shed_nodes, 2, "every node must shed an already-spent budget");
+        assert!(got.neighbors.is_empty());
+        assert_eq!(got.max_comparisons, 0);
+    }
+    let st = cluster.orchestrator.admission().unwrap().stats();
+    assert_eq!(st.monitor.partials, 2);
+    assert_eq!(st.monitor.sheds, 2);
+}
+
+#[test]
+fn local_and_remote_nodes_enforce_the_same_shipped_budget() {
+    // A MIXED cluster — node 0 in-process, node 1 behind a TCP loopback
+    // server — must enforce identically: the cut ships ONE remaining
+    // budget + policy, each node anchors it at its own arrival.
+    let c = corpus(1600, 4, 66);
+    let dim = c.data.dim;
+    let p = lsh_params(&c.data, 30, 8, 9);
+    let ranges = chunk_ranges(c.data.len(), 2);
+
+    let shard0 = Arc::new(c.data.shard(ranges[0].clone()));
+    let local = LocalNode::spawn(0, shard0, ranges[0].start as u64, &p, 2, native_engines(2));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || serve_node(&listener, None).unwrap());
+    let remote = RemoteNode::connect(
+        addr,
+        1,
+        c.data.shard(ranges[1].clone()),
+        ranges[1].start as u64,
+        &p,
+        2,
+    )
+    .unwrap();
+
+    let nodes: Vec<Box<dyn NodeHandle>> = vec![Box::new(local), Box::new(remote)];
+    let mut orch = Orchestrator::start(nodes, p.k, VoteConfig::default());
+    let reference = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
+
+    // Shed @ spent budget: BOTH nodes (local and across the wire) shed.
+    orch.enable_admission(
+        AdmissionConfig::new(dim, 4).with_queue_cap(16).with_budget_policy(BudgetPolicy::Shed),
+    );
+    let r = orch.submit(c.queries.point(0), Duration::ZERO).unwrap().wait().unwrap();
+    assert!(r.partial);
+    assert_eq!(r.shed_nodes, 2, "local and remote must both shed the spent budget");
+    assert!(r.neighbors.is_empty());
+    assert_eq!(r.max_comparisons, 0);
+
+    // PartialResults @ spent budget: both nodes return empty partials
+    // with zero scan work — the flags cross the wire intact.
+    orch.enable_admission(
+        AdmissionConfig::new(dim, 4)
+            .with_queue_cap(16)
+            .with_budget_policy(BudgetPolicy::PartialResults),
+    );
+    let r = orch.submit(c.queries.point(1), Duration::ZERO).unwrap().wait().unwrap();
+    assert!(r.partial);
+    assert_eq!(r.shed_nodes, 0);
+    assert_eq!(r.per_node_comparisons, vec![vec![0u64; 2]; 2]);
+
+    // LogOnly with a real budget: the mixed cluster answers bit-identical
+    // to an all-local reference cluster.
+    orch.enable_admission(
+        AdmissionConfig::new(dim, 4).with_queue_cap(16).with_budget_policy(BudgetPolicy::LogOnly),
+    );
+    let got = orch.submit(c.queries.point(2), Duration::from_millis(5)).unwrap().wait().unwrap();
+    assert_bit_identical(&got, &reference.query(c.queries.point(2)), "mixed LogOnly");
+
+    drop(orch);
+    assert_eq!(server.join().unwrap(), 3, "remote node must account every budget frame");
+}

@@ -1,0 +1,142 @@
+//! Shared helpers for the integration-test suites (admission parity,
+//! priority lanes, budget enforcement, distributed runtime): corpus +
+//! parameter fixtures, TCP cluster spawning, the gated-dispatcher
+//! harness, and the bit-identity assertion. One copy, four suites — a
+//! new scheduling test should never re-implement these.
+//!
+//! Compiled once per test binary; not every binary uses every helper.
+#![allow(dead_code)]
+
+use std::net::TcpListener;
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use dslsh::coordinator::admission::{Budget, Class};
+use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
+use dslsh::coordinator::QueryResult;
+use dslsh::data::{build_corpus, Corpus, CorpusConfig, Dataset, WindowSpec};
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::DistanceEngine;
+use dslsh::knn::predict::VoteConfig;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::net::{serve_node, RemoteNode};
+use dslsh::slsh::SlshParams;
+use dslsh::util::threadpool::chunk_ranges;
+
+/// Budgets a frozen MockClock can never expire.
+pub const FAR: Duration = Duration::from_secs(3600);
+
+/// AHE-51-5c corpus fixture (`n` points, `nq` queries).
+pub fn corpus(n: usize, nq: usize, seed: u64) -> Corpus {
+    build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), n, nq, seed))
+}
+
+/// LSH-only SLSH parameters over `data`'s value range, K = 10.
+pub fn lsh_params(data: &Dataset, m: usize, l: usize, seed: u64) -> SlshParams {
+    let (lo, hi) = data.value_range();
+    SlshParams::lsh_only(LayerSpec::outer_l1(data.dim, m, l, lo, hi, seed), 10)
+}
+
+/// One native engine per core — the node-spawning boilerplate.
+pub fn native_engines(p: usize) -> Vec<Box<dyn DistanceEngine>> {
+    (0..p).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect()
+}
+
+/// Everything in a `QueryResult` that is workload-determined. `qid` is
+/// arrival-order (scheduler-dependent through the queue) and `latency_s`
+/// is wall-clock; both are excluded by construction.
+pub fn assert_bit_identical(got: &QueryResult, want: &QueryResult, ctx: &str) {
+    assert_eq!(got.neighbors, want.neighbors, "{ctx}: neighbors");
+    assert!(
+        got.positive_share == want.positive_share,
+        "{ctx}: positive_share {} != {}",
+        got.positive_share,
+        want.positive_share
+    );
+    assert_eq!(got.prediction, want.prediction, "{ctx}: prediction");
+    assert_eq!(got.max_comparisons, want.max_comparisons, "{ctx}: max_comparisons");
+    assert_eq!(
+        got.per_node_comparisons, want.per_node_comparisons,
+        "{ctx}: per_node_comparisons"
+    );
+    assert_eq!(got.partial, want.partial, "{ctx}: partial flag");
+    assert_eq!(got.shed_nodes, want.shed_nodes, "{ctx}: shed_nodes");
+}
+
+/// Spin (bounded by real time) until a counter condition holds — cutter
+/// and dispatcher threads need a moment to act on a notify or a clock
+/// advance; the *outcome* waited for is deterministic, only its arrival
+/// time is scheduler-dependent.
+pub fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+/// A minimal `QueryResult` echoing `share` in `positive_share` — for
+/// fake dispatchers proving ticket↔result alignment.
+pub fn echo_result(qid: u64, share: f64) -> QueryResult {
+    QueryResult {
+        qid,
+        neighbors: Vec::new(),
+        positive_share: share,
+        prediction: false,
+        max_comparisons: 0,
+        per_node_comparisons: Vec::new(),
+        latency_s: 0.0,
+        partial: false,
+        shed_nodes: 0,
+    }
+}
+
+/// Gated dispatcher used by the scheduling-semantics tests: reports each
+/// batch's flat payload on `evt_tx` (dim = 1, so the payload identifies
+/// the batch composition), then blocks until the test releases it through
+/// `gate_rx` — an in-flight batch the test fully controls. Results echo
+/// each query's coordinate in `positive_share`.
+pub fn gated_echo(
+    evt_tx: Sender<Vec<f32>>,
+    gate_rx: Receiver<()>,
+) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static {
+    move |flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class| {
+        evt_tx.send(flat.clone()).unwrap();
+        gate_rx.recv().unwrap();
+        (0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect()
+    }
+}
+
+/// Spawn a TCP loopback cluster over `data`: one port-0 listener + server
+/// thread per node (parallel-safe under the concurrent test runner), one
+/// connected [`RemoteNode`] each, wrapped in a started [`Orchestrator`].
+/// Join the returned server handles after dropping the orchestrator to
+/// assert per-server query accounting.
+pub fn tcp_cluster(
+    data: &Dataset,
+    params: &SlshParams,
+    nu: usize,
+    cores: usize,
+) -> (Orchestrator, Vec<JoinHandle<u64>>) {
+    let mut listeners = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..nu {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(l.local_addr().unwrap());
+        listeners.push(l);
+    }
+    let servers: Vec<JoinHandle<u64>> = listeners
+        .into_iter()
+        .map(|l| std::thread::spawn(move || serve_node(&l, None).unwrap()))
+        .collect();
+    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::new();
+    for (node_id, range) in chunk_ranges(data.len(), nu).into_iter().enumerate() {
+        let shard = data.shard(range.clone());
+        let remote =
+            RemoteNode::connect(addrs[node_id], node_id, shard, range.start as u64, params, cores)
+                .unwrap();
+        nodes.push(Box::new(remote));
+    }
+    (Orchestrator::start(nodes, params.k, VoteConfig::default()), servers)
+}

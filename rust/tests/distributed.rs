@@ -5,31 +5,29 @@
 //! port to the client side, so the suite is parallel-safe (tier-1 runs
 //! tests concurrently; a fixed port would flake on collision).
 
-use std::net::TcpListener;
+mod common;
+
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{corpus as make_corpus, lsh_params, tcp_cluster};
 use dslsh::coordinator::admission::completion_slot;
-use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
+use dslsh::coordinator::orchestrator::NodeHandle;
 use dslsh::coordinator::{build_cluster, AdmissionConfig, Class, ClusterConfig};
-use dslsh::data::{build_corpus, Corpus, CorpusConfig, WindowSpec};
+use dslsh::data::Corpus;
 use dslsh::engine::native::NativeEngine;
 use dslsh::engine::{DistanceEngine, Metric};
 use dslsh::knn::exhaustive::pknn_query;
-use dslsh::knn::predict::VoteConfig;
 use dslsh::lsh::family::LayerSpec;
-use dslsh::net::{serve_node, RemoteNode};
 use dslsh::node::node::LocalNode;
 use dslsh::slsh::SlshParams;
-use dslsh::util::threadpool::chunk_ranges;
 
 fn corpus() -> Corpus {
-    build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), 5000, 60, 77))
+    make_corpus(5000, 60, 77)
 }
 
 fn params(data: &dslsh::data::Dataset) -> SlshParams {
-    let (lo, hi) = data.value_range();
-    SlshParams::lsh_only(LayerSpec::outer_l1(data.dim, 40, 16, lo, hi, 13), 10)
+    lsh_params(data, 40, 16, 13)
 }
 
 #[test]
@@ -39,37 +37,10 @@ fn tcp_cluster_matches_local_cluster() {
     let nu = 2;
     let cores = 2;
 
-    // Local (in-process) cluster.
+    // Local (in-process) cluster vs TCP loopback cluster (one port-0
+    // server thread per node; see tests/common/mod.rs).
     let local = build_cluster(&c.data, &p, &ClusterConfig::new(nu, cores)).unwrap();
-
-    // TCP loopback cluster: one server thread per node.
-    let mut listeners = Vec::new();
-    let mut addrs = Vec::new();
-    for _ in 0..nu {
-        let l = TcpListener::bind("127.0.0.1:0").unwrap();
-        addrs.push(l.local_addr().unwrap());
-        listeners.push(l);
-    }
-    let servers: Vec<_> = listeners
-        .into_iter()
-        .map(|l| std::thread::spawn(move || serve_node(&l, None).unwrap()))
-        .collect();
-
-    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::new();
-    for (node_id, range) in chunk_ranges(c.data.len(), nu).into_iter().enumerate() {
-        let shard = c.data.shard(range.clone());
-        let remote = RemoteNode::connect(
-            addrs[node_id],
-            node_id,
-            shard,
-            range.start as u64,
-            &p,
-            cores,
-        )
-        .unwrap();
-        nodes.push(Box::new(remote));
-    }
-    let tcp = Orchestrator::start(nodes, p.k, VoteConfig::default());
+    let (tcp, servers) = tcp_cluster(&c.data, &p, nu, cores);
 
     for i in 0..25 {
         let q = c.queries.point(i);
@@ -104,27 +75,7 @@ fn tcp_admission_with_budget_frames_matches_local_sequential() {
 
     let local = build_cluster(&c.data, &p, &ClusterConfig::new(nu, cores)).unwrap();
 
-    let mut listeners = Vec::new();
-    let mut addrs = Vec::new();
-    for _ in 0..nu {
-        let l = TcpListener::bind("127.0.0.1:0").unwrap();
-        addrs.push(l.local_addr().unwrap());
-        listeners.push(l);
-    }
-    let servers: Vec<_> = listeners
-        .into_iter()
-        .map(|l| std::thread::spawn(move || serve_node(&l, None).unwrap()))
-        .collect();
-
-    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::new();
-    for (node_id, range) in chunk_ranges(c.data.len(), nu).into_iter().enumerate() {
-        let shard = c.data.shard(range.clone());
-        let remote =
-            RemoteNode::connect(addrs[node_id], node_id, shard, range.start as u64, &p, cores)
-                .unwrap();
-        nodes.push(Box::new(remote));
-    }
-    let mut tcp = Orchestrator::start(nodes, p.k, VoteConfig::default());
+    let (mut tcp, servers) = tcp_cluster(&c.data, &p, nu, cores);
     tcp.enable_admission(AdmissionConfig::new(c.data.dim, 4).with_queue_cap(32));
     let orch = &tcp;
 

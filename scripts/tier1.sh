@@ -5,6 +5,9 @@
 # TIER1_LINT=1 additionally runs the CI lint gate (rustfmt + clippy with
 # warnings denied) — off by default so local runs stay fast; the lint job
 # in .github/workflows/ci.yml runs the same commands unconditionally.
+#
+# TIER1_MATRIX=1 additionally builds/tests with --no-default-features so
+# the stubbed-`xla` feature split stays buildable both ways (CI sets it).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,12 +19,18 @@ fi
 cargo build --release
 cargo test -q
 
+if [[ "${TIER1_MATRIX:-0}" == "1" ]]; then
+  cargo test -q --no-default-features
+fi
+
 # Admission layer, explicitly: the scheduling seam every later feature
-# (node-side shedding, NUMA pinning) plugs into — fail loudly on its own.
-# admission_priority holds the deterministic priority-lane/pipelining
-# semantics (the PR 2 overrun repro, now required to pass).
+# (NUMA pinning, multi-probe degradation) plugs into — fail loudly on its
+# own. admission_priority holds the deterministic priority-lane/
+# pipelining semantics (the PR 2 overrun repro); budget_enforcement the
+# deterministic partial/shed/log-only enforcement contract (PR 4).
 cargo test -q --test admission_parity
 cargo test -q --test admission_priority
+cargo test -q --test budget_enforcement
 cargo test -q --lib coordinator::admission
 
 # Bench smoke: asserts the admission-latency bench produces non-empty
