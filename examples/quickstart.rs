@@ -1,13 +1,19 @@
 //! Quickstart: build a DSLSH cluster over a small synthetic ABP corpus
-//! and predict Acute Hypotensive Episodes for a handful of queries.
+//! and predict Acute Hypotensive Episodes for a handful of queries —
+//! then the streaming path: an empty live index taking online inserts.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use std::sync::Arc;
+
 use dslsh::coordinator::{build_cluster, ClusterConfig};
 use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::engine::native::NativeEngine;
 use dslsh::experiments::outer_params;
+use dslsh::slsh::{BatchOutput, LiveIndex, LiveScratch, SealPolicy};
+use dslsh::util::clock::SystemClock;
 
 fn main() -> anyhow::Result<()> {
     // 1. Data: synthetic ABP waveforms -> beat validity -> rolling windows.
@@ -51,5 +57,42 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("accuracy: {correct}/{} (class imbalance makes MCC the real metric — see the exp benches)", corpus.queries.len());
+
+    // 5. Streaming: the same index as a LIVE structure — start empty,
+    //    insert windows as monitors produce them, query at any point, and
+    //    seal the delta into an immutable segment (by an explicit call
+    //    here; in serving, by the size-or-age SealPolicy).
+    println!();
+    println!("-- streaming (LiveIndex: insert -> query -> seal -> query) --");
+    let live = LiveIndex::new(&params, SealPolicy::by_size(8192), Arc::new(SystemClock::new()));
+    let engine = NativeEngine::new();
+    let (mut scratch, mut out) = (LiveScratch::new(), BatchOutput::new());
+    let d = &corpus.data;
+    // Stream the first 2000 windows in monitor-sized dribbles.
+    for at in (0..2000).step_by(125) {
+        live.insert_batch(&d.points[at * d.dim..(at + 125) * d.dim], &d.labels[at..at + 125]);
+    }
+    let q = corpus.queries.point(0);
+    live.query_batch(&engine, q, &mut scratch, &mut out);
+    println!(
+        "after {} inserts: {} neighbors for query 0 ({} comparisons, delta-only)",
+        live.len(),
+        out.neighbors(0).len(),
+        out.stats(0).comparisons
+    );
+    live.seal_now(); // delta -> sealed segment (inner indices built here)
+    for at in (2000..3000).step_by(125) {
+        live.insert_batch(&d.points[at * d.dim..(at + 125) * d.dim], &d.labels[at..at + 125]);
+    }
+    live.query_batch(&engine, q, &mut scratch, &mut out);
+    println!(
+        "after seal + {} more: {} sealed segment(s) + {} delta points, {} neighbors ({} comparisons)",
+        1000,
+        live.sealed_segments(),
+        live.delta_len(),
+        out.neighbors(0).len(),
+        out.stats(0).comparisons
+    );
+    println!("(full streaming cluster: examples/icu_serving.rs; rates: cargo bench --bench ingest)");
     Ok(())
 }

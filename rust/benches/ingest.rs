@@ -1,0 +1,188 @@
+//! §Perf: streaming-ingest throughput and its cost to query latency.
+//!
+//! Two sections, one CSV (`results/ingest.csv`):
+//!
+//! * **insert throughput** — a standalone `LiveIndex` absorbing the
+//!   corpus at several insert-batch sizes: points/s hashed into the
+//!   delta plus the seals performed along the way (a seal is a full
+//!   segment build — the amortized cost of keeping SLSH semantics).
+//! * **query latency vs ingest rate** — a live cluster (ν=2 × p=2)
+//!   serving a closed-loop monitor while an ingest thread streams
+//!   windows at a paced target rate: query p50/p99 as the ingest rate
+//!   climbs from zero (quiet ward) past seal-storm territory. The
+//!   "rate 0" row is the baseline the other rows are read against.
+//!
+//! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and load and
+//! asserts a non-empty CSV was produced — artifact plumbing, not timing
+//! quality.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dslsh::coordinator::{build_live_cluster, ClusterConfig};
+use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::engine::native::NativeEngine;
+use dslsh::experiments::report::Table;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::slsh::{BatchOutput, LiveIndex, LiveScratch, SealPolicy, SlshParams};
+use dslsh::util::clock::SystemClock;
+use dslsh::util::stats;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (corpus points, seal size, insert-batch sizes, paced ingest rates
+    //  in points/s — 0 = no ingest baseline, queries per rate point)
+    let (n, seal, batches, rates, n_queries): (usize, usize, Vec<usize>, Vec<u64>, usize) =
+        if smoke {
+            (4_000, 1_000, vec![64], vec![0, 20_000], 30)
+        } else {
+            (30_000, 4_000, vec![1, 16, 64, 256], vec![0, 2_000, 20_000, 100_000], 300)
+        };
+
+    println!("== ingest bench ({} mode) ==", if smoke { "smoke" } else { "full" });
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), n, 200, 42));
+    let (lo, hi) = corpus.data.value_range();
+    let params =
+        SlshParams::lsh_only(LayerSpec::outer_l1(corpus.data.dim, 60, 24, lo, hi, 7), 10);
+
+    let mut table = Table::new(
+        format!("Streaming ingest — n={n}, seal at {seal} points, nu=2 x p=2 for the rate sweep"),
+        &[
+            "scenario",
+            "insert batch",
+            "target pts/s",
+            "inserts/s",
+            "sealed",
+            "query p50 ms",
+            "query p99 ms",
+        ],
+    );
+
+    // -- Section 1: standalone insert throughput ---------------------------
+    let d = &corpus.data;
+    for &batch in &batches {
+        let live = LiveIndex::new(
+            &params,
+            SealPolicy::by_size(seal),
+            Arc::new(SystemClock::new()),
+        );
+        let t0 = Instant::now();
+        let mut at = 0usize;
+        while at < d.len() {
+            let take = batch.min(d.len() - at);
+            live.insert_batch(&d.points[at * d.dim..(at + take) * d.dim], &d.labels[at..at + take]);
+            at += take;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = d.len() as f64 / dt;
+        println!(
+            "standalone insert: batch {batch:>4} → {rate:>10.0} pts/s, {} seals",
+            live.sealed_segments()
+        );
+        table.row(vec![
+            "standalone".into(),
+            batch.to_string(),
+            "-".into(),
+            format!("{rate:.0}"),
+            live.sealed_segments().to_string(),
+            "-".into(),
+            "-".into(),
+        ]);
+        // Sanity: everything searchable afterwards.
+        let engine = NativeEngine::new();
+        let (mut scratch, mut out) = (LiveScratch::new(), BatchOutput::new());
+        live.query_batch(&engine, d.point(d.len() / 2), &mut scratch, &mut out);
+        assert!(out.neighbors(0).iter().any(|nb| nb.dist == 0.0), "ingested point lost");
+    }
+
+    // -- Section 2: query latency under paced ingest -----------------------
+    let ingest_batch = 64usize;
+    for &rate in &rates {
+        let cluster = build_live_cluster(
+            &params,
+            &ClusterConfig::new(2, 2),
+            SealPolicy::by_size(seal),
+        )
+        .expect("live cluster");
+        // Pre-load half the corpus so queries always have something to
+        // find; the paced stream then ingests the other half.
+        let preload = d.len() / 2;
+        let mut at = 0usize;
+        while at < preload {
+            let take = 512.min(preload - at);
+            cluster
+                .insert_batch(&d.points[at * d.dim..(at + take) * d.dim], &d.labels[at..at + take]);
+            at += take;
+        }
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let (lat_ms, achieved): (Vec<f64>, f64) = std::thread::scope(|s| {
+            let ingester = s.spawn(|| {
+                if rate == 0 {
+                    return 0.0;
+                }
+                let t0 = Instant::now();
+                let mut sent = 0usize;
+                let mut at = preload;
+                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                    let due = t0 + Duration::from_secs_f64(sent as f64 / rate as f64);
+                    while Instant::now() < due {
+                        std::hint::spin_loop();
+                    }
+                    let take = ingest_batch.min(d.len() - at);
+                    cluster.insert_batch(
+                        &d.points[at * d.dim..(at + take) * d.dim],
+                        &d.labels[at..at + take],
+                    );
+                    sent += take;
+                    at += take;
+                    if at >= d.len() {
+                        at = preload; // wrap: re-offer the tail (ids keep advancing)
+                    }
+                }
+                sent as f64 / t0.elapsed().as_secs_f64()
+            });
+            let lat: Vec<f64> = (0..n_queries)
+                .map(|i| {
+                    let q = corpus.queries.point(i % corpus.queries.len());
+                    let ts = Instant::now();
+                    let r = cluster.query(q);
+                    std::hint::black_box(r.max_comparisons);
+                    ts.elapsed().as_secs_f64() * 1e3
+                })
+                .collect();
+            done.store(true, std::sync::atomic::Ordering::Relaxed);
+            (lat, ingester.join().unwrap())
+        });
+        let ing = cluster.ingest_stats();
+        println!(
+            "rate {rate:>7} pts/s → achieved {achieved:>9.0}, {} seals, query p50 {:.2} ms p99 {:.2} ms",
+            ing.sealed_segments,
+            stats::percentile(&lat_ms, 0.50),
+            stats::percentile(&lat_ms, 0.99),
+        );
+        table.row(vec![
+            "cluster".into(),
+            ingest_batch.to_string(),
+            rate.to_string(),
+            format!("{achieved:.0}"),
+            ing.sealed_segments.to_string(),
+            format!("{:.3}", stats::percentile(&lat_ms, 0.50)),
+            format!("{:.3}", stats::percentile(&lat_ms, 0.99)),
+        ]);
+    }
+
+    println!();
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "ingest").expect("saving csv");
+    println!("saved results/ingest.csv");
+
+    if smoke {
+        let csv = std::fs::read_to_string("results/ingest.csv")
+            .expect("results/ingest.csv must exist");
+        assert!(
+            csv.lines().count() >= 1 + batches.len() + rates.len(),
+            "smoke: ingest.csv must hold every scenario row:\n{csv}"
+        );
+        println!("smoke OK: ingest.csv has {} lines", csv.lines().count());
+    }
+}

@@ -612,6 +612,8 @@ pub struct LaneStats {
     /// Requests of this class where at least one node shed the batch
     /// outright (zero scan work) under [`BudgetPolicy::Shed`].
     pub sheds: u64,
+    /// Points ingested (online inserts) attributed to this class.
+    pub inserted: u64,
     /// `try_submit` rejections of this class due to a full queue.
     pub rejected_full: u64,
 }
@@ -1166,8 +1168,17 @@ impl AdmissionQueue {
             overruns: c.overruns(),
             partials: c.partials(),
             sheds: c.sheds(),
+            inserted: c.inserts(),
             rejected_full: q.rejected(),
         }
+    }
+
+    /// Attribute `points` ingested (online inserts) to `class` — the
+    /// orchestrator calls this on every routed insert batch so the
+    /// per-lane `inserted` counter sits next to the partial/shed counts
+    /// in [`LaneStats`].
+    pub fn note_ingest(&self, class: Class, points: u64) {
+        self.shared.lane_counters[class.idx()].record_inserts(points);
     }
 
     /// Counter snapshot: queue depth + cut-reason mix + per-lane split.

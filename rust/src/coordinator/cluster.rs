@@ -13,7 +13,8 @@ use crate::engine::DistanceEngine;
 use crate::knn::predict::VoteConfig;
 use crate::node::node::LocalNode;
 use crate::runtime::XlaService;
-use crate::slsh::SlshParams;
+use crate::slsh::{SealPolicy, SlshParams, LIVE_ID_STRIDE};
+use crate::util::clock::SystemClock;
 use crate::util::threadpool::chunk_ranges;
 
 /// Which distance engine the cores use.
@@ -72,6 +73,28 @@ impl std::ops::Deref for Cluster {
     }
 }
 
+/// Start the XLA service when selected and yield the per-node engine
+/// factory — the one spot both cluster builders share, so the engine
+/// wiring cannot diverge between the batch-built and live paths.
+fn engine_setup(
+    kind: EngineKind,
+) -> Result<(Option<Arc<XlaService>>, impl Fn(usize) -> Vec<Box<dyn DistanceEngine>>)> {
+    let xla = match kind {
+        EngineKind::Xla => Some(Arc::new(XlaService::start()?)),
+        EngineKind::Native => None,
+    };
+    let xla_f = xla.clone();
+    let make = move |p: usize| -> Vec<Box<dyn DistanceEngine>> {
+        (0..p)
+            .map(|_| match &xla_f {
+                Some(svc) => Box::new(svc.engine()) as Box<dyn DistanceEngine>,
+                None => Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>,
+            })
+            .collect()
+    };
+    Ok((xla, make))
+}
+
 /// Build and start a cluster over `data`.
 ///
 /// Shards are contiguous equal ranges (the Root "assigns each node its
@@ -79,26 +102,43 @@ impl std::ops::Deref for Cluster {
 /// Reducer's K-NN refers to positions in `data`.
 pub fn build_cluster(data: &Dataset, params: &SlshParams, cfg: &ClusterConfig) -> Result<Cluster> {
     assert!(cfg.nu > 0 && cfg.p > 0);
-    let xla = match cfg.engine {
-        EngineKind::Xla => Some(Arc::new(XlaService::start()?)),
-        EngineKind::Native => None,
-    };
-    let make_engines = |p: usize| -> Vec<Box<dyn DistanceEngine>> {
-        (0..p)
-            .map(|_| match (&xla, cfg.engine) {
-                (Some(svc), EngineKind::Xla) => {
-                    Box::new(svc.engine()) as Box<dyn DistanceEngine>
-                }
-                _ => Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>,
-            })
-            .collect()
-    };
+    let (xla, make_engines) = engine_setup(cfg.engine)?;
     let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::with_capacity(cfg.nu);
     for (node_id, range) in chunk_ranges(data.len(), cfg.nu).into_iter().enumerate() {
         let id_base = range.start as u64;
         let shard = Arc::new(data.shard(range));
         let node =
             LocalNode::spawn(node_id, shard, id_base, params, cfg.p, make_engines(cfg.p));
+        nodes.push(Box::new(node));
+    }
+    let orchestrator = Orchestrator::start(nodes, params.k, cfg.vote.clone());
+    Ok(Cluster { orchestrator, _xla: xla })
+}
+
+/// Build and start an EMPTY live (streaming) cluster: ν live nodes ready
+/// for [`Orchestrator::insert_batch`] routing, each sealing its delta by
+/// `policy` (size-or-age on the system clock). Node `i` mints global ids
+/// from `i * LIVE_ID_STRIDE`, so ids stay disjoint without per-insert
+/// coordination; queries broadcast and reduce exactly like a batch-built
+/// cluster's.
+pub fn build_live_cluster(
+    params: &SlshParams,
+    cfg: &ClusterConfig,
+    policy: SealPolicy,
+) -> Result<Cluster> {
+    assert!(cfg.nu > 0 && cfg.p > 0);
+    let (xla, make_engines) = engine_setup(cfg.engine)?;
+    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::with_capacity(cfg.nu);
+    for node_id in 0..cfg.nu {
+        let node = LocalNode::spawn_live(
+            node_id,
+            node_id as u64 * LIVE_ID_STRIDE,
+            params,
+            cfg.p,
+            make_engines(cfg.p),
+            Arc::new(SystemClock::new()),
+            policy,
+        );
         nodes.push(Box::new(node));
     }
     let orchestrator = Orchestrator::start(nodes, params.k, cfg.vote.clone());
@@ -168,6 +208,43 @@ mod tests {
                 None => reference = Some(answers),
                 Some(rf) => assert_eq!(&answers, rf, "topology ({nu},{pc}) changed output"),
             }
+        }
+    }
+
+    #[test]
+    fn live_cluster_ingests_routes_round_robin_and_answers() {
+        let c = corpus();
+        let p = params(&c.data);
+        let cluster =
+            build_live_cluster(&p, &ClusterConfig::new(2, 2), SealPolicy::by_size(500)).unwrap();
+        let d = &c.data;
+        let batch = 250usize;
+        for b in 0..8 {
+            let at = b * batch;
+            let out = cluster.insert_batch(
+                &d.points[at * d.dim..(at + batch) * d.dim],
+                &d.labels[at..at + batch],
+            );
+            assert_eq!(out.node, b % 2, "round-robin routing");
+            assert_eq!(out.accepted, batch as u64);
+            assert_eq!(out.node_total, ((b / 2) as u64 + 1) * batch as u64);
+        }
+        let stats = cluster.ingest_stats();
+        assert_eq!(stats.batches, 8);
+        assert_eq!(stats.points, 2000);
+        assert_eq!(stats.sealed_segments, 4, "1000 points per node / 500 per seal");
+        // A point inserted in batch `b` lives on node `b % 2` at local
+        // index `(b / 2) * batch + off` — its global id must come back at
+        // distance 0 through the ordinary broadcast/reduce query path.
+        for probe in [0usize, 260, 990, 1999] {
+            let (b, off) = (probe / batch, probe % batch);
+            let want = (b % 2) as u64 * LIVE_ID_STRIDE + ((b / 2) * batch + off) as u64;
+            let r = cluster.query(d.point(probe));
+            assert!(
+                r.neighbors.iter().any(|n| n.id == want && n.dist == 0.0),
+                "probe {probe}: want id {want} in {:?}",
+                r.neighbors
+            );
         }
     }
 

@@ -11,5 +11,5 @@ pub use admission::{
     AdmissionStats, Budget, BudgetPolicy, Class, Clock, CutReason, LaneStats, MockClock,
     SystemClock, TickClock, Ticket,
 };
-pub use cluster::{build_cluster, Cluster, ClusterConfig, EngineKind};
-pub use orchestrator::{NodeHandle, Orchestrator, QueryResult, NO_BUDGET};
+pub use cluster::{build_cluster, build_live_cluster, Cluster, ClusterConfig, EngineKind};
+pub use orchestrator::{InsertOutcome, NodeHandle, Orchestrator, QueryResult, NO_BUDGET};

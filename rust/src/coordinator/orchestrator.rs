@@ -21,6 +21,7 @@
 //! budgets (see [`crate::coordinator::admission`]).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -31,7 +32,8 @@ use crate::coordinator::admission::{
 };
 use crate::knn::heap::{Neighbor, TopK};
 use crate::knn::predict::{positive_share, VoteConfig};
-use crate::node::node::{NodeInfo, NodeReply};
+use crate::node::node::{InsertReply, NodeInfo, NodeReply};
+use crate::runtime::service::{IngestCounters, IngestStats};
 
 /// Sentinel budget for batches that carry no latency deadline (direct
 /// [`Orchestrator::query_batch`] calls, as opposed to admission cuts).
@@ -78,6 +80,17 @@ pub trait NodeHandle: Send {
     ) -> Vec<NodeReply> {
         self.query_batch(qs, nq)
     }
+
+    /// Append a batch of labeled points to this node's live index
+    /// (`points` row-major `labels.len() × dim`), returning once every
+    /// core has indexed them. Only live nodes
+    /// ([`LocalNode::spawn_live`](crate::node::node::LocalNode::spawn_live),
+    /// [`RemoteNode::connect_live`](crate::net::tcp::RemoteNode::connect_live))
+    /// support inserts; the default panics so a misrouted insert fails
+    /// loudly instead of silently dropping ICU data.
+    fn insert_batch(&mut self, _points: &[f32], _labels: &[bool]) -> InsertReply {
+        panic!("node {} does not accept online inserts (live nodes only)", self.node_id());
+    }
 }
 
 impl NodeHandle for crate::node::node::LocalNode {
@@ -101,6 +114,9 @@ impl NodeHandle for crate::node::node::LocalNode {
         class: Class,
     ) -> Vec<NodeReply> {
         crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget, class)
+    }
+    fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> InsertReply {
+        crate::node::node::LocalNode::insert_batch(self, points, labels)
     }
 }
 
@@ -131,6 +147,21 @@ pub struct QueryResult {
     pub shed_nodes: u32,
 }
 
+/// Cluster-level outcome of one routed insert batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertOutcome {
+    /// Node the batch was routed to (round-robin).
+    pub node: usize,
+    /// Points appended.
+    pub accepted: u64,
+    /// That node's total points afterwards.
+    pub node_total: u64,
+    /// Segments the batch caused to seal.
+    pub sealed_now: u64,
+    /// That node's total sealed segments afterwards.
+    pub sealed_total: u64,
+}
+
 #[derive(Clone)]
 enum Job {
     Single { qid: u64, q: Arc<Vec<f32>> },
@@ -140,6 +171,15 @@ enum Job {
     /// `class` is the cut's scheduling class (monitor if any monitor
     /// rides it).
     Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget: Budget, class: Class },
+    /// Online insert, ROUTED to node `target` (never broadcast — each
+    /// point lives on exactly one shard); the node runner acks straight
+    /// to the caller through `reply`, bypassing the query Reducer.
+    Insert {
+        target: usize,
+        points: Arc<Vec<f32>>,
+        labels: Arc<Vec<bool>>,
+        reply: Sender<InsertReply>,
+    },
 }
 
 pub(crate) enum RootRequest {
@@ -157,12 +197,20 @@ pub(crate) enum RootRequest {
 /// Orchestrator over ν nodes.
 pub struct Orchestrator {
     root_tx: Sender<RootRequest>,
+    /// Direct line to the Forwarder for routed (non-broadcast) work:
+    /// online inserts skip the Root's query sequencing entirely, so a
+    /// sustained ingest stream never serializes behind queries.
+    ingest_tx: Sender<Job>,
     /// Deadline-aware admission layer (see [`Orchestrator::enable_admission`]).
     admission: Option<AdmissionQueue>,
     threads: Vec<JoinHandle<()>>,
     node_infos: Vec<NodeInfo>,
     k: usize,
     nu: usize,
+    /// Round-robin insert-routing cursor.
+    next_ingest: AtomicUsize,
+    /// Cluster-wide ingest telemetry (batches, points, seals).
+    ingest: Arc<IngestCounters>,
 }
 
 impl Orchestrator {
@@ -223,6 +271,13 @@ impl Orchestrator {
                                         break;
                                     }
                                 }
+                                Job::Insert { points, labels, reply, .. } => {
+                                    let r = node.insert_batch(&points, &labels);
+                                    // A dropped reply just means the
+                                    // caller gave up waiting; the insert
+                                    // itself is already durable.
+                                    let _ = reply.send(r);
+                                }
                             }
                         }
                     })
@@ -231,15 +286,25 @@ impl Orchestrator {
         }
         drop(reduce_tx);
 
-        // Forwarder: broadcast each job to every node runner.
+        // Forwarder: broadcast query jobs to every node runner; route
+        // insert jobs to exactly their target shard.
         threads.push(
             std::thread::Builder::new()
                 .name("forwarder".into())
                 .spawn(move || {
                     while let Ok(job) = fwd_rx.recv() {
-                        for tx in &node_tx {
-                            if tx.send(job.clone()).is_err() {
-                                return;
+                        match &job {
+                            Job::Insert { target, .. } => {
+                                if node_tx[*target].send(job.clone()).is_err() {
+                                    return;
+                                }
+                            }
+                            _ => {
+                                for tx in &node_tx {
+                                    if tx.send(job.clone()).is_err() {
+                                        return;
+                                    }
+                                }
                             }
                         }
                     }
@@ -292,6 +357,10 @@ impl Orchestrator {
                 })
                 .expect("spawn reducer"),
         );
+
+        // Routed-insert line into the forwarder (the Root never sees
+        // inserts — they don't consume qids or reducer slots).
+        let ingest_tx = fwd_tx.clone();
 
         // Root: sequence queries, join reduction results with callers.
         threads.push(
@@ -375,7 +444,17 @@ impl Orchestrator {
                 .expect("spawn root"),
         );
 
-        Orchestrator { root_tx, admission: None, threads, node_infos, k, nu }
+        Orchestrator {
+            root_tx,
+            ingest_tx,
+            admission: None,
+            threads,
+            node_infos,
+            k,
+            nu,
+            next_ingest: AtomicUsize::new(0),
+            ingest: Arc::new(IngestCounters::new()),
+        }
     }
 
     /// Resolve one query through the full Root → Forwarder → nodes →
@@ -436,6 +515,71 @@ impl Orchestrator {
             .send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx })
             .expect("root thread gone");
         rx.recv().expect("root dropped reply")
+    }
+
+    /// Append a batch of labeled points to the live cluster (`points`
+    /// row-major `labels.len() × dim`), ingest attributed to
+    /// [`Class::Monitor`] — live bedside streams are the default
+    /// ingester. See [`insert_batch_class`].
+    ///
+    /// [`insert_batch_class`]: Orchestrator::insert_batch_class
+    pub fn insert_batch(&self, points: &[f32], labels: &[bool]) -> InsertOutcome {
+        self.insert_batch_class(points, labels, Class::Monitor)
+    }
+
+    /// Append a batch of labeled points, attributing the ingest to an
+    /// explicit scheduling class (monitor streams vs analytics
+    /// backfills — the per-lane `inserted` counter in
+    /// [`LaneStats`](crate::coordinator::admission::LaneStats) when the
+    /// admission layer is installed).
+    ///
+    /// Routing: batches go to ONE node each, round-robin — unlike
+    /// queries, which broadcast; a point lives on exactly one shard.
+    /// Inserts travel Forwarder → node runner directly (no Root
+    /// sequencing, no qids), so a sustained ingest stream interleaves
+    /// with queries instead of serializing behind them; per node, the
+    /// runner's inbox orders inserts against query jobs, so a query
+    /// submitted after this call returns observes the points. Requires
+    /// live nodes
+    /// ([`build_live_cluster`](crate::coordinator::cluster::build_live_cluster));
+    /// batch-built nodes panic their runner rather than drop data.
+    pub fn insert_batch_class(
+        &self,
+        points: &[f32],
+        labels: &[bool],
+        class: Class,
+    ) -> InsertOutcome {
+        let n = labels.len();
+        assert!(n > 0, "empty insert batch");
+        assert_eq!(points.len() % n, 0, "insert block not n × dim");
+        let target = self.next_ingest.fetch_add(1, Ordering::Relaxed) % self.nu;
+        let (tx, rx) = channel();
+        self.ingest_tx
+            .send(Job::Insert {
+                target,
+                points: Arc::new(points.to_vec()),
+                labels: Arc::new(labels.to_vec()),
+                reply: tx,
+            })
+            .expect("forwarder gone");
+        let r = rx.recv().expect("node dropped insert reply");
+        self.ingest.record_batch(r.accepted);
+        self.ingest.record_seals(r.sealed_now);
+        if let Some(q) = &self.admission {
+            q.note_ingest(class, r.accepted);
+        }
+        InsertOutcome {
+            node: target,
+            accepted: r.accepted,
+            node_total: r.total,
+            sealed_now: r.sealed_now,
+            sealed_total: r.sealed_total,
+        }
+    }
+
+    /// Cluster-wide ingest telemetry snapshot.
+    pub fn ingest_stats(&self) -> IngestStats {
+        self.ingest.snapshot()
     }
 
     /// Install the deadline-aware admission layer (see
@@ -516,10 +660,13 @@ impl Drop for Orchestrator {
         // The admission cutter holds a root_tx clone, so it must drain
         // and exit FIRST or the root thread would never see EOF.
         self.admission = None;
-        // Closing root_tx cascades: root exits, forwarder inbox closes,
-        // node runners exit, reducer sees EOF.
+        // Closing root_tx AND the ingest line cascades: root exits, the
+        // forwarder inbox loses its last sender, node runners exit, the
+        // reducer sees EOF.
         let (dead_tx, _) = channel();
         let _ = std::mem::replace(&mut self.root_tx, dead_tx);
+        let (dead_ingest, _) = channel();
+        let _ = std::mem::replace(&mut self.ingest_tx, dead_ingest);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }

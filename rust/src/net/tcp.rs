@@ -20,9 +20,10 @@ use crate::coordinator::admission::{Budget, Class};
 use crate::coordinator::orchestrator::NodeHandle;
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
-use crate::node::node::{LocalNode, NodeInfo, NodeReply};
+use crate::node::node::{InsertReply, LocalNode, NodeInfo, NodeReply};
 use crate::net::wire::{validate_batch_geometry, BatchReplyItem, Message};
-use crate::slsh::SlshParams;
+use crate::slsh::{SealPolicy, SlshParams};
+use crate::util::clock::SystemClock;
 
 /// Engine factory for served nodes (native by default; the XLA service
 /// cannot cross processes, each node process may start its own).
@@ -66,29 +67,57 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
     let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
     let mut writer = BufWriter::new(stream);
 
-    // Phase 1: Build.
+    // Phase 1: Build (batch over a shipped shard) or BuildLive (empty
+    // streaming node).
     let build = Message::read_frame(&mut reader)
         .map_err(|e| anyhow!("reading build frame: {e}"))?
         .ok_or_else(|| anyhow!("peer closed before Build"))?;
-    let Message::Build { node_id, id_base, p, params, shard } = build else {
-        bail!("expected Build, got {build:?}");
+    let (mut node, dim, shard_len) = match build {
+        Message::Build { node_id, id_base, p, params, shard } => {
+            let shard = Arc::new(shard);
+            let engine_vec = match engines {
+                Some(f) => f(p as usize),
+                None => native_factory(p as usize),
+            };
+            let dim = shard.dim;
+            let node = LocalNode::spawn(
+                node_id as usize,
+                Arc::clone(&shard),
+                id_base,
+                &params,
+                p as usize,
+                engine_vec,
+            );
+            (node, dim, shard.len() as u64)
+        }
+        Message::BuildLive { node_id, id_base, p, params, seal_points, seal_age_ns } => {
+            let engine_vec = match engines {
+                Some(f) => f(p as usize),
+                None => native_factory(p as usize),
+            };
+            let policy = SealPolicy { max_points: seal_points as usize, max_age_ns: seal_age_ns };
+            let dim = params.outer.dim;
+            let node = LocalNode::spawn_live(
+                node_id as usize,
+                id_base,
+                &params,
+                p as usize,
+                engine_vec,
+                Arc::new(SystemClock::new()),
+                policy,
+            );
+            (node, dim, 0)
+        }
+        other => bail!("expected Build or BuildLive, got {other:?}"),
     };
-    let shard = Arc::new(shard);
-    let engine_vec = match engines {
-        Some(f) => f(p as usize),
-        None => native_factory(p as usize),
-    };
-    let mut node =
-        LocalNode::spawn(node_id as usize, Arc::clone(&shard), id_base, &params, p as usize, engine_vec);
     Message::BuildDone {
-        node_id,
-        shard_len: shard.len() as u64,
+        node_id: node.node_id() as u32,
+        shard_len,
         build_ms: node.info().build_ms,
     }
     .write_frame(&mut writer)?;
 
-    // Phase 2: queries (single or batched frames, freely interleaved).
-    let dim = shard.dim;
+    // Phase 2: queries and (live) inserts, freely interleaved.
     let mut served = 0u64;
     loop {
         match Message::read_frame(&mut reader).map_err(|e| anyhow!("reading frame: {e}"))? {
@@ -133,6 +162,27 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
+            Some(Message::InsertBatch { seq, n, points, labels }) => {
+                if !node.is_live() {
+                    bail!("InsertBatch sent to a batch-built node");
+                }
+                // Same hostile-input hardening as the query-batch arms:
+                // the label count was already checked against `n` at
+                // decode; the float count is checked against `n × dim`
+                // here, where the node's dim is known.
+                let n = validate_batch_geometry(n, points.len(), dim)
+                    .map_err(|e| anyhow!("{e}"))?;
+                debug_assert_eq!(labels.len(), n);
+                let r = node.insert_batch(&points, &labels);
+                Message::InsertAck {
+                    seq,
+                    accepted: r.accepted,
+                    total: r.total,
+                    sealed_now: r.sealed_now,
+                    sealed_total: r.sealed_total,
+                }
+                .write_frame(&mut writer)?;
+            }
             Some(other) => bail!("unexpected message {other:?}"),
         }
     }
@@ -147,6 +197,7 @@ pub struct RemoteNode {
     writer: BufWriter<TcpStream>,
     info: NodeInfo,
     next_qid: u64,
+    next_insert_seq: u64,
 }
 
 impl RemoteNode {
@@ -159,19 +210,64 @@ impl RemoteNode {
         params: &SlshParams,
         p: usize,
     ) -> Result<RemoteNode> {
-        let stream = TcpStream::connect(addr).context("connecting to node")?;
-        stream.set_nodelay(true).ok();
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut writer = BufWriter::new(stream);
         let shard_len = shard.len();
-        Message::Build {
+        let build = Message::Build {
             node_id: node_id as u32,
             id_base,
             p: p as u32,
             params: params.clone(),
             shard,
+        };
+        RemoteNode::connect_inner(addr, node_id, p, shard_len, build)
+    }
+
+    /// Connect and spawn an EMPTY live node on the far side: ships a
+    /// `BuildLive` frame (params + seal policy, no shard), waits for
+    /// BuildDone. The returned handle accepts
+    /// [`insert_batch`](NodeHandle::insert_batch) with acks crossing the
+    /// wire. Seal capacities above
+    /// [`MAX_SEAL_POINTS`](crate::net::wire::MAX_SEAL_POINTS) are
+    /// rejected here (the server would refuse the frame as hostile —
+    /// extent allocation is proportional to the capacity); local
+    /// clusters have no such cap.
+    pub fn connect_live<A: ToSocketAddrs>(
+        addr: A,
+        node_id: usize,
+        id_base: u64,
+        params: &SlshParams,
+        p: usize,
+        policy: SealPolicy,
+    ) -> Result<RemoteNode> {
+        if policy.max_points as u64 > crate::net::wire::MAX_SEAL_POINTS {
+            bail!(
+                "seal capacity {} exceeds the wire cap {} (remote nodes allocate per extent)",
+                policy.max_points,
+                crate::net::wire::MAX_SEAL_POINTS
+            );
         }
-        .write_frame(&mut writer)?;
+        let build = Message::BuildLive {
+            node_id: node_id as u32,
+            id_base,
+            p: p as u32,
+            params: params.clone(),
+            seal_points: policy.max_points as u64,
+            seal_age_ns: policy.max_age_ns,
+        };
+        RemoteNode::connect_inner(addr, node_id, p, 0, build)
+    }
+
+    fn connect_inner<A: ToSocketAddrs>(
+        addr: A,
+        node_id: usize,
+        p: usize,
+        shard_len: usize,
+        build: Message,
+    ) -> Result<RemoteNode> {
+        let stream = TcpStream::connect(addr).context("connecting to node")?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        build.write_frame(&mut writer)?;
         let done = Message::read_frame(&mut reader)
             .map_err(|e| anyhow!("reading BuildDone: {e}"))?
             .ok_or_else(|| anyhow!("node closed during build"))?;
@@ -179,7 +275,7 @@ impl RemoteNode {
             bail!("expected BuildDone, got {done:?}");
         };
         let info = NodeInfo { node_id, shard_len, cores: p, build_ms };
-        Ok(RemoteNode { node_id, reader, writer, info, next_qid: 0 })
+        Ok(RemoteNode { node_id, reader, writer, info, next_qid: 0, next_insert_seq: 0 })
     }
 }
 
@@ -229,6 +325,33 @@ impl NodeHandle for RemoteNode {
         class: Class,
     ) -> Vec<NodeReply> {
         self.batch_roundtrip(qs, nq, budget, class)
+    }
+
+    /// One `InsertBatch` frame per append; the remote live node appends
+    /// to its store, fans the insert to its cores, and acks once every
+    /// core has indexed the points — so a query batched after this
+    /// returns (on this same strictly request/response connection) sees
+    /// them, exactly like the in-process path.
+    fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> InsertReply {
+        let seq = self.next_insert_seq;
+        self.next_insert_seq += 1;
+        Message::InsertBatch {
+            seq,
+            n: labels.len() as u64,
+            points: points.to_vec(),
+            labels: labels.to_vec(),
+        }
+        .write_frame(&mut self.writer)
+        .expect("remote node write failed");
+        let reply = Message::read_frame(&mut self.reader)
+            .expect("remote node read failed")
+            .expect("remote node closed mid-insert");
+        let Message::InsertAck { seq: rseq, accepted, total, sealed_now, sealed_total } = reply
+        else {
+            panic!("expected InsertAck, got {reply:?}");
+        };
+        assert_eq!(rseq, seq, "out-of-order insert ack");
+        InsertReply { accepted, total, sealed_now, sealed_total }
     }
 }
 

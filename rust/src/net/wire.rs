@@ -59,6 +59,29 @@ pub enum Message {
     },
     /// Node → root: per-query answers for one batch, in qid order.
     ReplyBatch { qid0: u64, replies: Vec<BatchReplyItem> },
+    /// Root → node: spawn an EMPTY live (streaming) node instead of
+    /// building over a shipped shard. `seal_points`/`seal_age_ns` are the
+    /// node's [`SealPolicy`](crate::slsh::SealPolicy) (`u64::MAX` age =
+    /// size-only); global ids are `id_base + insertion index`.
+    BuildLive {
+        node_id: u32,
+        id_base: u64,
+        p: u32,
+        params: SlshParams,
+        seal_points: u64,
+        seal_age_ns: u64,
+    },
+    /// Root → node: append `n` labeled points to a live node's store
+    /// (`points` row-major `n × dim`). Label count must equal `n` — a
+    /// mismatch is rejected at decode as hostile geometry; the `n × dim`
+    /// check happens server-side via [`validate_batch_geometry`], which
+    /// knows the node's dim.
+    InsertBatch { seq: u64, n: u64, points: Vec<f32>, labels: Vec<bool> },
+    /// Node → root: ingest acknowledged. Carries one validated flags byte
+    /// (bit 0 = "this call sealed at least one segment"); the byte must
+    /// be coherent with `sealed_now` — anything else is a hostile/corrupt
+    /// peer, rejected as `BadTag` like the reply-batch flags.
+    InsertAck { seq: u64, accepted: u64, total: u64, sealed_now: u64, sealed_total: u64 },
     /// Root → node: drain and exit.
     Shutdown,
 }
@@ -85,9 +108,21 @@ const TAG_SHUTDOWN: u8 = 5;
 const TAG_QUERY_BATCH: u8 = 6;
 const TAG_REPLY_BATCH: u8 = 7;
 const TAG_QUERY_BATCH_BUDGET: u8 = 8;
+const TAG_BUILD_LIVE: u8 = 9;
+const TAG_INSERT_BATCH: u8 = 10;
+const TAG_INSERT_ACK: u8 = 11;
 
 /// Sanity cap on per-message collection sizes (hostile/corrupt peers).
 const MAX_ITEMS: usize = 1 << 20;
+
+/// Largest seal capacity a `BuildLive` frame may request — the server
+/// pre-allocates extent + delta-table memory proportional to it, so a
+/// hostile peer must not get to pick the size. [`RemoteNode::connect_live`]
+/// rejects larger policies client-side with a clear error instead of a
+/// server disconnect.
+///
+/// [`RemoteNode::connect_live`]: crate::net::tcp::RemoteNode::connect_live
+pub const MAX_SEAL_POINTS: u64 = MAX_ITEMS as u64;
 
 /// Shared hostile-input check for batch frames (`QueryBatch` and
 /// `QueryBatchBudget`): the peer-controlled item count must be within the
@@ -192,6 +227,31 @@ impl Message {
                     bytes::write_u8(&mut out, flags).unwrap();
                 }
             }
+            Message::BuildLive { node_id, id_base, p, params, seal_points, seal_age_ns } => {
+                bytes::write_u8(&mut out, TAG_BUILD_LIVE).unwrap();
+                bytes::write_u32(&mut out, *node_id).unwrap();
+                bytes::write_u64(&mut out, *id_base).unwrap();
+                bytes::write_u32(&mut out, *p).unwrap();
+                bytes::write_string(&mut out, &params.to_json().to_string_compact()).unwrap();
+                bytes::write_u64(&mut out, *seal_points).unwrap();
+                bytes::write_u64(&mut out, *seal_age_ns).unwrap();
+            }
+            Message::InsertBatch { seq, n, points, labels } => {
+                bytes::write_u8(&mut out, TAG_INSERT_BATCH).unwrap();
+                bytes::write_u64(&mut out, *seq).unwrap();
+                bytes::write_u64(&mut out, *n).unwrap();
+                bytes::write_f32_vec(&mut out, points).unwrap();
+                bytes::write_bitvec(&mut out, labels).unwrap();
+            }
+            Message::InsertAck { seq, accepted, total, sealed_now, sealed_total } => {
+                bytes::write_u8(&mut out, TAG_INSERT_ACK).unwrap();
+                bytes::write_u64(&mut out, *seq).unwrap();
+                bytes::write_u64(&mut out, *accepted).unwrap();
+                bytes::write_u64(&mut out, *total).unwrap();
+                bytes::write_u64(&mut out, *sealed_now).unwrap();
+                bytes::write_u64(&mut out, *sealed_total).unwrap();
+                bytes::write_u8(&mut out, (*sealed_now > 0) as u8).unwrap();
+            }
             Message::Shutdown => {
                 bytes::write_u8(&mut out, TAG_SHUTDOWN).unwrap();
             }
@@ -285,6 +345,65 @@ impl Message {
                     });
                 }
                 Ok(Message::ReplyBatch { qid0, replies })
+            }
+            TAG_BUILD_LIVE => {
+                let node_id = bytes::read_u32(&mut r)?;
+                let id_base = bytes::read_u64(&mut r)?;
+                let p = bytes::read_u32(&mut r)?;
+                let params_json = bytes::read_string(&mut r)?;
+                let params = Json::parse(&params_json)
+                    .ok()
+                    .as_ref()
+                    .and_then(SlshParams::from_json)
+                    .ok_or(CodecError::BadTag(0, "SlshParams"))?;
+                let seal_points = bytes::read_u64(&mut r)?;
+                let seal_age_ns = bytes::read_u64(&mut r)?;
+                // A zero-capacity extent can never hold a point, and the
+                // capacity drives server-side allocation (see
+                // [`MAX_SEAL_POINTS`]): hostile or corrupt, never a real
+                // policy.
+                if seal_points == 0 || seal_points > MAX_SEAL_POINTS {
+                    return Err(CodecError::BadGeometry {
+                        items: seal_points,
+                        len: 0,
+                        dim: params.outer.dim as u64,
+                    });
+                }
+                Ok(Message::BuildLive { node_id, id_base, p, params, seal_points, seal_age_ns })
+            }
+            TAG_INSERT_BATCH => {
+                let seq = bytes::read_u64(&mut r)?;
+                let n = bytes::read_u64(&mut r)?;
+                if n > MAX_ITEMS as u64 {
+                    return Err(CodecError::TooLong(n, MAX_ITEMS as u64));
+                }
+                let points = bytes::read_f32_vec(&mut r)?;
+                let labels = bytes::read_bitvec(&mut r)?;
+                // The label count is peer-controlled twice (header `n`
+                // and the bitvec's own length): a mismatch means the
+                // frame lies about its geometry.
+                if labels.len() as u64 != n {
+                    return Err(CodecError::BadGeometry {
+                        items: n,
+                        len: labels.len() as u64,
+                        dim: 1,
+                    });
+                }
+                Ok(Message::InsertBatch { seq, n, points, labels })
+            }
+            TAG_INSERT_ACK => {
+                let seq = bytes::read_u64(&mut r)?;
+                let accepted = bytes::read_u64(&mut r)?;
+                let total = bytes::read_u64(&mut r)?;
+                let sealed_now = bytes::read_u64(&mut r)?;
+                let sealed_total = bytes::read_u64(&mut r)?;
+                // Flags byte: bit 0 must mirror `sealed_now > 0`; unknown
+                // bits or an incoherent mirror = hostile/corrupt peer.
+                let flags = bytes::read_u8(&mut r)?;
+                if flags > 1 || (flags == 1) != (sealed_now > 0) {
+                    return Err(CodecError::BadTag(flags as u32, "InsertAckFlags"));
+                }
+                Ok(Message::InsertAck { seq, accepted, total, sealed_now, sealed_total })
             }
             TAG_SHUTDOWN => Ok(Message::Shutdown),
             t => Err(CodecError::BadTag(t as u32, "Message")),
@@ -426,6 +545,56 @@ mod tests {
         frames
     }
 
+    /// The streaming-ingest frames, spanning geometries, label patterns,
+    /// seal states and both policy shapes — swept by the same roundtrip
+    /// and truncation property tests as the budget frames.
+    fn ingest_frame_corpus() -> Vec<Message> {
+        let mut frames = Vec::new();
+        for (n, dim) in [(1u64, 1usize), (2, 3), (5, 7), (3, 30)] {
+            frames.push(Message::InsertBatch {
+                seq: 9,
+                n,
+                points: (0..n as usize * dim).map(|i| i as f32 * 0.25).collect(),
+                labels: (0..n as usize).map(|i| i % 2 == 0).collect(),
+            });
+        }
+        // Empty batch: legal (a no-op append), must survive the codec.
+        frames.push(Message::InsertBatch { seq: 0, n: 0, points: vec![], labels: vec![] });
+        // Acks across both coherent flag states.
+        frames.push(Message::InsertAck {
+            seq: 9,
+            accepted: 5,
+            total: 105,
+            sealed_now: 0,
+            sealed_total: 3,
+        });
+        frames.push(Message::InsertAck {
+            seq: 10,
+            accepted: 64,
+            total: 169,
+            sealed_now: 2,
+            sealed_total: 5,
+        });
+        // Live builds: size-only and size-or-age policies.
+        frames.push(Message::BuildLive {
+            node_id: 2,
+            id_base: 1 << 40,
+            p: 4,
+            params: SlshParams::paper_onset(30, 20.0, 180.0, 42),
+            seal_points: 4096,
+            seal_age_ns: u64::MAX,
+        });
+        frames.push(Message::BuildLive {
+            node_id: 0,
+            id_base: 0,
+            p: 1,
+            params: SlshParams::paper_onset(30, 20.0, 180.0, 7),
+            seal_points: 128,
+            seal_age_ns: 5_000_000,
+        });
+        frames
+    }
+
     #[test]
     fn batch_messages_roundtrip() {
         let q = Message::QueryBatch { qid0: 40, nq: 2, qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
@@ -434,7 +603,7 @@ mod tests {
 
     #[test]
     fn budget_and_reply_frames_roundtrip_across_sweep() {
-        for m in budget_frame_corpus() {
+        for m in budget_frame_corpus().into_iter().chain(ingest_frame_corpus()) {
             assert_eq!(roundtrip(&m), m, "frame {m:?}");
         }
     }
@@ -443,7 +612,7 @@ mod tests {
     fn budget_and_reply_frames_reject_truncation_at_every_byte() {
         // Property: EVERY strict prefix of a valid payload must decode to
         // an error — never panic, never silently succeed with less data.
-        for m in budget_frame_corpus() {
+        for m in budget_frame_corpus().into_iter().chain(ingest_frame_corpus()) {
             let payload = m.encode();
             assert_eq!(Message::decode(&payload).unwrap(), m);
             for cut in 0..payload.len() {
@@ -541,6 +710,92 @@ mod tests {
             assert!(
                 matches!(got, Err(CodecError::BadTag(b, "ReplyFlags")) if b == bad as u32),
                 "flags byte {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn insert_batch_label_count_mismatch_is_rejected() {
+        // Header `n` and the labels bitvec each carry a count; a frame
+        // whose counts disagree lies about its geometry.
+        let m = Message::InsertBatch {
+            seq: 1,
+            n: 3,
+            points: vec![0.0; 9],
+            labels: vec![true, false, true],
+        };
+        let mut payload = m.encode();
+        assert_eq!(Message::decode(&payload).unwrap(), m);
+        // Payload layout: tag(1) + seq(8) + n(8) + ... — bump `n` so it
+        // no longer matches the shipped labels.
+        payload[9] = 4;
+        assert!(matches!(
+            Message::decode(&payload),
+            Err(CodecError::BadGeometry { items: 4, len: 3, .. })
+        ));
+    }
+
+    #[test]
+    fn bad_insert_ack_flags_byte_is_rejected() {
+        let m = Message::InsertAck {
+            seq: 4,
+            accepted: 8,
+            total: 80,
+            sealed_now: 0,
+            sealed_total: 2,
+        };
+        let mut payload = m.encode();
+        let last = payload.len() - 1;
+        assert_eq!(payload[last], 0);
+        // Unknown bits AND the incoherent "sealed flag without a seal".
+        for bad in [1u8, 2, 4, 255] {
+            payload[last] = bad;
+            let got = Message::decode(&payload);
+            assert!(
+                matches!(got, Err(CodecError::BadTag(b, "InsertAckFlags")) if b == bad as u32),
+                "flags byte {bad} must be rejected"
+            );
+        }
+        // The mirrored incoherence: a seal count without the flag.
+        let sealed = Message::InsertAck {
+            seq: 4,
+            accepted: 8,
+            total: 80,
+            sealed_now: 1,
+            sealed_total: 3,
+        };
+        let mut payload = sealed.encode();
+        let last = payload.len() - 1;
+        assert_eq!(payload[last], 1);
+        payload[last] = 0;
+        assert!(matches!(
+            Message::decode(&payload),
+            Err(CodecError::BadTag(0, "InsertAckFlags"))
+        ));
+    }
+
+    #[test]
+    fn build_live_hostile_seal_capacity_is_rejected() {
+        let m = Message::BuildLive {
+            node_id: 1,
+            id_base: 0,
+            p: 2,
+            params: SlshParams::paper_onset(30, 20.0, 180.0, 3),
+            seal_points: 1,
+            seal_age_ns: u64::MAX,
+        };
+        assert_eq!(roundtrip(&m), m);
+        // seal_points sits 16 bytes before the payload end (u64 + u64).
+        let mut payload = m.encode();
+        let at = payload.len() - 16;
+        for hostile in [0u64, MAX_ITEMS as u64 + 1, u64::MAX] {
+            payload[at..at + 8].copy_from_slice(&hostile.to_le_bytes());
+            assert!(
+                matches!(
+                    Message::decode(&payload),
+                    Err(CodecError::BadGeometry { .. }) | Err(CodecError::TooLong(..))
+                ),
+                "seal_points {hostile} must be rejected"
             );
         }
     }

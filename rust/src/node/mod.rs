@@ -4,4 +4,4 @@
 pub mod node;
 pub mod worker;
 
-pub use node::{LocalNode, NodeInfo, NodeReply};
+pub use node::{InsertReply, LocalNode, NodeInfo, NodeReply};

@@ -3,6 +3,18 @@
 //! one VM; here it is a thread group (comparisons — the paper's speed
 //! metric — are partitioning-determined, so the simulation reproduces the
 //! tables exactly; see DESIGN.md §Substitutions).
+//!
+//! Nodes come in two shapes sharing every serving path:
+//!
+//! * **batch-built** ([`LocalNode::spawn`]) — workers freeze a static
+//!   shard slice at construction; inserts are rejected.
+//! * **live** ([`LocalNode::spawn_live`]) — the node starts EMPTY and
+//!   owns a growable [`LiveStore`]; [`LocalNode::insert_batch`] appends
+//!   points once to the shared store and fans a `WorkerMsg::Insert` to
+//!   every core, which hashes the new rows into its own delta tables and
+//!   acks. The store is the single seal authority (size-or-age
+//!   [`SealPolicy`] on the node's injected clock), so all cores agree on
+//!   segment boundaries deterministically.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -12,8 +24,8 @@ use crate::coordinator::admission::{note_batch_overrun, Budget, BudgetPolicy, Cl
 use crate::data::Dataset;
 use crate::engine::DistanceEngine;
 use crate::knn::heap::{Neighbor, TopK};
-use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReplyMsg};
-use crate::slsh::SlshParams;
+use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReplyMsg, WorkerSpec};
+use crate::slsh::{LiveStore, SealPolicy, SlshParams};
 use crate::util::clock::{Clock, SystemClock};
 
 /// A node's answer to one query — what travels back to the Orchestrator.
@@ -50,6 +62,21 @@ pub struct NodeInfo {
     pub build_ms: f64,
 }
 
+/// A live node's answer to one [`LocalNode::insert_batch`] (or seal
+/// poll): what travels back to the Orchestrator, and over the wire as an
+/// `InsertAck` frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertReply {
+    /// Points appended by this call (the store never drops).
+    pub accepted: u64,
+    /// Total points in the node's store afterwards.
+    pub total: u64,
+    /// Segments sealed during this call.
+    pub sealed_now: u64,
+    /// Total sealed segments afterwards.
+    pub sealed_total: u64,
+}
+
 /// One in-process SLSH node: `p` worker threads + shared shard.
 pub struct LocalNode {
     node_id: usize,
@@ -63,6 +90,10 @@ pub struct LocalNode {
     /// Budget-enforcement time source (shared with every worker); a node
     /// anchors a cut's deadline at batch *arrival* on this clock.
     clock: Arc<dyn Clock>,
+    /// Live nodes: the shared growable point store (the seal authority);
+    /// `None` on batch-built nodes, which reject inserts.
+    store: Option<Arc<LiveStore>>,
+    insert_seq: u64,
 }
 
 impl LocalNode {
@@ -99,10 +130,48 @@ impl LocalNode {
         id_base: u64,
         params: &SlshParams,
         p: usize,
-        mut engines: Vec<Box<dyn DistanceEngine>>,
+        engines: Vec<Box<dyn DistanceEngine>>,
         clock: Arc<dyn Clock>,
     ) -> LocalNode {
+        let shard_len = shard.len();
+        LocalNode::spawn_inner(node_id, id_base, params, p, engines, clock, Some(shard), None)
+            .with_shard_len(shard_len)
+    }
+
+    /// Spawn an EMPTY live node: workers follow a shared growable
+    /// [`LiveStore`] instead of freezing a static shard, and the node
+    /// accepts [`insert_batch`](LocalNode::insert_batch). `policy` is the
+    /// seal trigger (size or age on `clock`); global ids are
+    /// `id_base + insertion index` — live clusters stride `id_base` per
+    /// node (see [`crate::slsh::live::LIVE_ID_STRIDE`]).
+    pub fn spawn_live(
+        node_id: usize,
+        id_base: u64,
+        params: &SlshParams,
+        p: usize,
+        engines: Vec<Box<dyn DistanceEngine>>,
+        clock: Arc<dyn Clock>,
+        policy: SealPolicy,
+    ) -> LocalNode {
+        let store = Arc::new(LiveStore::new(params.outer.dim, policy, Arc::clone(&clock)));
+        LocalNode::spawn_inner(node_id, id_base, params, p, engines, clock, None, Some(store))
+    }
+
+    /// Shared spawn body: exactly one of `shard` (batch-built) or `store`
+    /// (live) is `Some`.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_inner(
+        node_id: usize,
+        id_base: u64,
+        params: &SlshParams,
+        p: usize,
+        mut engines: Vec<Box<dyn DistanceEngine>>,
+        clock: Arc<dyn Clock>,
+        shard: Option<Arc<Dataset>>,
+        store: Option<Arc<LiveStore>>,
+    ) -> LocalNode {
         assert_eq!(engines.len(), p, "need one engine per core");
+        debug_assert!(shard.is_some() != store.is_some());
         let t0 = std::time::Instant::now();
         let (reply_tx, reply_rx) = channel::<WorkerReplyMsg>();
         let (ready_tx, ready_rx) = channel::<usize>();
@@ -111,9 +180,13 @@ impl LocalNode {
         for core in 0..p {
             let (tx, rx) = channel::<WorkerMsg>();
             worker_tx.push(tx);
-            let shard_c = Arc::clone(&shard);
             let params_c = params.clone();
             let tables = owned_tables(params.outer.l, p, core);
+            let spec = match (&shard, &store) {
+                (Some(s), _) => WorkerSpec::Static { shard: Arc::clone(s), tables },
+                (None, Some(st)) => WorkerSpec::Live { store: Arc::clone(st), tables },
+                (None, None) => unreachable!(),
+            };
             let engine = engines.remove(0);
             let clock_c = Arc::clone(&clock);
             let reply_tx_c = reply_tx.clone();
@@ -122,8 +195,7 @@ impl LocalNode {
                 .name(format!("node{node_id}-core{core}"))
                 .spawn(move || {
                     run_worker(
-                        core, shard_c, id_base, params_c, tables, engine, clock_c, rx,
-                        reply_tx_c, ready_c,
+                        core, spec, id_base, params_c, engine, clock_c, rx, reply_tx_c, ready_c,
                     )
                 })
                 .expect("spawning worker");
@@ -138,7 +210,7 @@ impl LocalNode {
         }
         let info = NodeInfo {
             node_id,
-            shard_len: shard.len(),
+            shard_len: 0,
             cores: p,
             build_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
@@ -152,7 +224,14 @@ impl LocalNode {
             info,
             next_qid: 0,
             clock,
+            store,
+            insert_seq: 0,
         }
+    }
+
+    fn with_shard_len(mut self, shard_len: usize) -> LocalNode {
+        self.info.shard_len = shard_len;
+        self
     }
 
     pub fn info(&self) -> &NodeInfo {
@@ -161,6 +240,73 @@ impl LocalNode {
 
     pub fn node_id(&self) -> usize {
         self.node_id
+    }
+
+    /// Whether this node accepts online inserts.
+    pub fn is_live(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// The live store (the seal authority), if this is a live node.
+    pub fn store(&self) -> Option<&Arc<LiveStore>> {
+        self.store.as_ref()
+    }
+
+    /// Append a batch of labeled points to this live node: ONE append to
+    /// the shared store (which decides seals), then an `Insert` fan-out so
+    /// every core hashes the new rows into its own tables. Returns after
+    /// all `p` cores acked — a query admitted after this call sees the
+    /// points. Panics on a batch-built node (the orchestrator only routes
+    /// inserts to live nodes; the TCP server rejects them with an error).
+    pub fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> InsertReply {
+        let store =
+            Arc::clone(self.store.as_ref().expect("insert_batch on a batch-built node"));
+        let out = store.append(points, labels);
+        let mut reply = self.sync_workers();
+        reply.accepted = out.accepted;
+        reply.sealed_now = out.sealed_now;
+        reply
+    }
+
+    /// Check the age-seal policy now (for a COMPLETELY quiet stream — any
+    /// arriving insert already closes an overdue extent on its way in)
+    /// and propagate the seal to the cores. Live nodes only; reachable
+    /// in-process (callers owning the `LocalNode`) — a cluster/wire-level
+    /// poll is a named ROADMAP follow-up.
+    pub fn poll_seal(&mut self) -> InsertReply {
+        let store = Arc::clone(self.store.as_ref().expect("poll_seal on a batch-built node"));
+        let sealed = store.poll_age();
+        let mut reply = self.sync_workers();
+        reply.sealed_now = sealed;
+        reply
+    }
+
+    /// Fan an `Insert` to every core and gather the `p` acks (live
+    /// nodes). Cores sync against the same store snapshot authority, so
+    /// their acked counts must agree.
+    fn sync_workers(&mut self) -> InsertReply {
+        let store = Arc::clone(self.store.as_ref().expect("sync_workers on a batch-built node"));
+        let seq = self.insert_seq;
+        self.insert_seq += 1;
+        for tx in &self.worker_tx {
+            tx.send(WorkerMsg::Insert { seq }).expect("worker channel closed");
+        }
+        let (mut total, mut sealed_total) = (0u64, 0u64);
+        for i in 0..self.p {
+            let WorkerReplyMsg::Insert(ack) = self.reply_rx.recv().expect("worker died") else {
+                unreachable!("query reply during insert");
+            };
+            debug_assert_eq!(ack.seq, seq);
+            if i == 0 {
+                total = ack.indexed;
+                sealed_total = ack.sealed_segments;
+            } else {
+                debug_assert_eq!(ack.indexed, total, "cores disagree on indexed count");
+                debug_assert_eq!(ack.sealed_segments, sealed_total, "cores disagree on seals");
+            }
+        }
+        debug_assert_eq!(total, store.total(), "cores lag the store after sync");
+        InsertReply { accepted: 0, total, sealed_now: 0, sealed_total }
     }
 
     /// Resolve one query: the Master broadcasts to all cores, gathers the
@@ -488,6 +634,79 @@ mod tests {
                     assert_eq!(batched[j].inner_probes, seq.inner_probes);
                 }
                 qi += nq;
+            }
+        }
+    }
+
+    #[test]
+    fn live_node_serves_inserts_then_queries() {
+        use crate::util::clock::MockClock;
+        let corpus = small_corpus();
+        let params = params(&corpus.data, 30, 12);
+        let clock = Arc::new(MockClock::new(0));
+        let mut node = LocalNode::spawn_live(
+            0,
+            7_000,
+            &params,
+            3,
+            native_engines(3),
+            clock,
+            crate::slsh::SealPolicy::by_size(1000),
+        );
+        assert!(node.is_live());
+        assert_eq!(node.info().shard_len, 0);
+        // Empty node answers empty.
+        let empty = node.query(corpus.queries.point(0));
+        assert!(empty.neighbors.is_empty());
+        // Insert 2500 points in uneven batches; seals trip at 1000/2000.
+        let d = &corpus.data;
+        let mut at = 0usize;
+        let mut sealed = 0u64;
+        for take in [700usize, 700, 700, 400] {
+            let r = node.insert_batch(
+                &d.points[at * d.dim..(at + take) * d.dim],
+                &d.labels[at..at + take],
+            );
+            at += take;
+            sealed = r.sealed_total;
+            assert_eq!(r.accepted, take as u64);
+            assert_eq!(r.total, at as u64);
+        }
+        assert_eq!(sealed, 2);
+        // Every inserted point finds itself, with the node's id base.
+        for probe in [0usize, 999, 1000, 2499] {
+            let reply = node.query(d.point(probe));
+            assert!(
+                reply.neighbors.iter().any(|n| n.id == 7_000 + probe as u64 && n.dist == 0.0),
+                "probe {probe}: {:?}",
+                reply.neighbors
+            );
+        }
+    }
+
+    #[test]
+    fn live_node_result_invariant_to_core_count() {
+        use crate::util::clock::MockClock;
+        let corpus = small_corpus();
+        let params = params(&corpus.data, 40, 12);
+        let d = &corpus.data;
+        let mut reference: Option<Vec<Vec<Neighbor>>> = None;
+        for p in [1usize, 3] {
+            let mut node = LocalNode::spawn_live(
+                0,
+                0,
+                &params,
+                p,
+                native_engines(p),
+                Arc::new(MockClock::new(0)),
+                crate::slsh::SealPolicy::by_size(900),
+            );
+            node.insert_batch(&d.points[..2000 * d.dim], &d.labels[..2000]);
+            let answers: Vec<Vec<Neighbor>> =
+                (0..10).map(|i| node.query(corpus.queries.point(i)).neighbors).collect();
+            match &reference {
+                None => reference = Some(answers),
+                Some(r) => assert_eq!(&answers, r, "p={p} changed results"),
             }
         }
     }

@@ -1,19 +1,30 @@
 //! Per-core worker (paper Figure 2): one long-lived thread per simulated
 //! core `P_i`, owning `O(L_out / p)` outer tables (and their inner
 //! indices), a reusable query-scratch arena, and a comparison counter.
-//! The shard's points live in shared memory (`Arc<Dataset>`); buckets
-//! hold local ids into it.
+//! The shard's points live in shared memory — a static `Arc<Dataset>`
+//! slice for batch-built nodes, or the node's growable
+//! [`LiveStore`] for live (streaming) nodes; buckets hold local ids into
+//! it.
 //!
 //! Workers serve both single queries (the ICU one-in-flight latency
 //! model) and query batches: a batch is resolved through
-//! [`SlshIndex::query_batch`] — batched hashing + pooled scratch — and
-//! answered with ONE flat [`WorkerBatchReply`] per batch, so the reply
-//! path allocates per batch, not per query. Budget-enforced batches
+//! [`SlshIndex::query_batch`] (batch-built) or
+//! [`LiveIndex::query_batch`] (live, cross-segment merge) — batched
+//! hashing + pooled scratch — and answered with ONE flat
+//! [`WorkerBatchReply`] per batch, so the reply path allocates per batch,
+//! not per query. Budget-enforced batches
 //! ([`WorkerMsg::QueryBatchBudget`]) carry an absolute deadline on the
-//! node's injected clock and resolve through
-//! [`SlshIndex::query_batch_cancel`] — the worker stops consulting
-//! tables the moment the deadline is blown and flags the affected
-//! queries `partial` in their [`QueryStats`].
+//! node's injected clock and resolve through the cancellable twins — the
+//! worker stops consulting tables (and, live, whole segments) the moment
+//! the deadline is blown and flags the affected queries `partial` in
+//! their [`QueryStats`].
+//!
+//! Live workers additionally serve [`WorkerMsg::Insert`]: the node master
+//! has already appended the points to the shared store; the worker
+//! catches its own tables up ([`LiveIndex::sync`] — hashing fresh rows
+//! into its delta, sealing segments the store closed) and acks. Queries
+//! and inserts are serialized per worker by the inbox, so a query
+//! admitted after an insert ack always sees those points.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -21,7 +32,10 @@ use std::sync::Arc;
 use crate::data::Dataset;
 use crate::engine::{DistanceEngine, ScanCancel};
 use crate::knn::heap::Neighbor;
-use crate::slsh::{BatchOutput, QueryScratch, QueryStats, SlshIndex, SlshParams};
+use crate::slsh::{
+    BatchOutput, LiveIndex, LiveScratch, LiveStore, QueryScratch, QueryStats, SlshIndex,
+    SlshParams,
+};
 use crate::util::clock::Clock;
 
 /// Messages a worker accepts.
@@ -35,6 +49,10 @@ pub enum WorkerMsg {
     /// worker's clock reaches `deadline_ns` and report partial results
     /// (see [`SlshIndex::query_batch_cancel`]).
     QueryBatchBudget { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, deadline_ns: u64 },
+    /// Live nodes only: catch this core's tables up with the node store
+    /// (hash newly appended points, seal closed extents) and ack with
+    /// sequence number `seq`.
+    Insert { seq: u64 },
     /// Drain and exit.
     Shutdown,
 }
@@ -57,10 +75,29 @@ pub struct WorkerBatchReply {
     pub stats: Vec<QueryStats>,
 }
 
+/// One worker's ingest acknowledgment (live nodes).
+pub struct WorkerInsertAck {
+    pub core: usize,
+    pub seq: u64,
+    /// Points this core has fully indexed after the sync.
+    pub indexed: u64,
+    /// Sealed segments this core holds after the sync.
+    pub sealed_segments: u64,
+}
+
 /// What flows back over the node's gather channel.
 pub enum WorkerReplyMsg {
     Single(WorkerReply),
     Batch(WorkerBatchReply),
+    Insert(WorkerInsertAck),
+}
+
+/// How a worker obtains its index — the batch-built / live split.
+pub enum WorkerSpec {
+    /// Build a frozen [`SlshIndex`] over a static shard slice.
+    Static { shard: Arc<Dataset>, tables: Vec<usize> },
+    /// Follow the node's growable [`LiveStore`] with a [`LiveIndex`].
+    Live { store: Arc<LiveStore>, tables: Vec<usize> },
 }
 
 /// Table indices owned by core `i` of `p`: `{t : t ≡ i (mod p)}` — the
@@ -69,7 +106,54 @@ pub fn owned_tables(l: usize, p: usize, core: usize) -> Vec<usize> {
     (0..l).filter(|t| t % p == core).collect()
 }
 
-/// Worker main loop: build the owned tables, then serve queries.
+/// A worker's resolved index + scratch, behind one dispatch point so the
+/// message loop stays shape-agnostic.
+enum WorkerIndex {
+    Static { index: SlshIndex, shard: Arc<Dataset>, scratch: QueryScratch },
+    Live { live: LiveIndex, scratch: LiveScratch },
+}
+
+impl WorkerIndex {
+    fn resolve(
+        &mut self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        id_base: u64,
+        out: &mut BatchOutput,
+        cancel: Option<&ScanCancel>,
+    ) {
+        match self {
+            WorkerIndex::Static { index, shard, scratch } => match cancel {
+                None => index.query_batch(
+                    engine,
+                    qs,
+                    &shard.points,
+                    &shard.labels,
+                    id_base,
+                    scratch,
+                    out,
+                ),
+                Some(c) => index.query_batch_cancel(
+                    engine,
+                    qs,
+                    &shard.points,
+                    &shard.labels,
+                    id_base,
+                    scratch,
+                    out,
+                    c,
+                ),
+            },
+            WorkerIndex::Live { live, scratch } => match cancel {
+                None => live.query_batch(engine, qs, scratch, out),
+                Some(c) => live.query_batch_cancel(engine, qs, scratch, out, c),
+            },
+        }
+    }
+}
+
+/// Worker main loop: build/attach the owned tables, then serve queries
+/// (and, live, inserts).
 ///
 /// `ready` fires once construction finishes (the node master waits for all
 /// cores before declaring the node built — table construction is entirely
@@ -77,32 +161,33 @@ pub fn owned_tables(l: usize, p: usize, core: usize) -> Vec<usize> {
 #[allow(clippy::too_many_arguments)]
 pub fn run_worker(
     core: usize,
-    shard: Arc<Dataset>,
+    spec: WorkerSpec,
     id_base: u64,
     params: SlshParams,
-    tables: Vec<usize>,
     engine: Box<dyn DistanceEngine>,
     clock: Arc<dyn Clock>,
     rx: Receiver<WorkerMsg>,
     reply_tx: Sender<WorkerReplyMsg>,
     ready: Sender<usize>,
 ) {
-    let index = SlshIndex::build(&params, &*shard, &tables);
-    let mut scratch = QueryScratch::new(shard.len().max(1));
+    let mut backend = match spec {
+        WorkerSpec::Static { shard, tables } => {
+            let index = SlshIndex::build(&params, &*shard, &tables);
+            let scratch = QueryScratch::new(shard.len().max(1));
+            WorkerIndex::Static { index, shard, scratch }
+        }
+        WorkerSpec::Live { store, tables } => {
+            let live = LiveIndex::with_store(&params, &tables, store, id_base);
+            live.sync(); // the store may be pre-populated
+            WorkerIndex::Live { live, scratch: LiveScratch::new() }
+        }
+    };
     let mut batch_out = BatchOutput::new();
     let _ = ready.send(core);
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Query { qid, q } => {
-                index.query_batch(
-                    engine.as_ref(),
-                    &q,
-                    &shard.points,
-                    &shard.labels,
-                    id_base,
-                    &mut scratch,
-                    &mut batch_out,
-                );
+                backend.resolve(engine.as_ref(), &q, id_base, &mut batch_out, None);
                 let reply = WorkerReply {
                     core,
                     qid,
@@ -114,15 +199,7 @@ pub fn run_worker(
                 }
             }
             WorkerMsg::QueryBatch { qid0, qs, nq } => {
-                index.query_batch(
-                    engine.as_ref(),
-                    &qs,
-                    &shard.points,
-                    &shard.labels,
-                    id_base,
-                    &mut scratch,
-                    &mut batch_out,
-                );
+                backend.resolve(engine.as_ref(), &qs, id_base, &mut batch_out, None);
                 debug_assert_eq!(batch_out.len(), nq);
                 if send_batch_reply(&reply_tx, core, qid0, &batch_out).is_err() {
                     break;
@@ -130,18 +207,24 @@ pub fn run_worker(
             }
             WorkerMsg::QueryBatchBudget { qid0, qs, nq, deadline_ns } => {
                 let cancel = ScanCancel::until(Arc::clone(&clock), deadline_ns);
-                index.query_batch_cancel(
-                    engine.as_ref(),
-                    &qs,
-                    &shard.points,
-                    &shard.labels,
-                    id_base,
-                    &mut scratch,
-                    &mut batch_out,
-                    &cancel,
-                );
+                backend.resolve(engine.as_ref(), &qs, id_base, &mut batch_out, Some(&cancel));
                 debug_assert_eq!(batch_out.len(), nq);
                 if send_batch_reply(&reply_tx, core, qid0, &batch_out).is_err() {
+                    break;
+                }
+            }
+            WorkerMsg::Insert { seq } => {
+                let WorkerIndex::Live { live, .. } = &backend else {
+                    unreachable!("Insert sent to a batch-built worker");
+                };
+                live.sync();
+                let ack = WorkerInsertAck {
+                    core,
+                    seq,
+                    indexed: live.len() as u64,
+                    sealed_segments: live.sealed_segments() as u64,
+                };
+                if reply_tx.send(WorkerReplyMsg::Insert(ack)).is_err() {
                     break;
                 }
             }

@@ -8,4 +8,6 @@ pub mod service;
 
 pub use artifacts::{locate, ArtifactError, Manifest};
 pub use pjrt::{XlaRuntime, PAD_DIST};
-pub use service::{CutCounters, LaneCounters, QueueStats, XlaEngine, XlaService};
+pub use service::{
+    CutCounters, IngestCounters, IngestStats, LaneCounters, QueueStats, XlaEngine, XlaService,
+};

@@ -177,6 +177,7 @@ pub struct LaneCounters {
     overruns: AtomicU64,
     partials: AtomicU64,
     sheds: AtomicU64,
+    inserts: AtomicU64,
 }
 
 impl LaneCounters {
@@ -221,6 +222,14 @@ impl LaneCounters {
         self.sheds.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `n` points ingested (online inserts) attributed to this class —
+    /// live monitor streams vs analytics backfills share the cluster the
+    /// same way queries do, so ingest volume is per-lane health signal
+    /// too.
+    pub fn record_inserts(&self, n: u64) {
+        self.inserts.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn fill(&self) -> u64 {
         self.fill.load(Ordering::Relaxed)
     }
@@ -249,9 +258,61 @@ impl LaneCounters {
         self.sheds.load(Ordering::Relaxed)
     }
 
+    pub fn inserts(&self) -> u64 {
+        self.inserts.load(Ordering::Relaxed)
+    }
+
     /// Total requests of this class ever dispatched, across all reasons.
     pub fn dispatched(&self) -> u64 {
         self.fill() + self.deadline() + self.aged() + self.drain()
+    }
+}
+
+/// Cluster-wide online-ingest telemetry: how much the live index grew and
+/// how often deltas sealed into immutable segments. Lives beside the
+/// queue/cut/lane counters because ingest shares the serving path — a
+/// seal is a build burst the latency dashboards need to see next to the
+/// partial/shed counts it can cause.
+#[derive(Debug, Default)]
+pub struct IngestCounters {
+    batches: AtomicU64,
+    points: AtomicU64,
+    sealed_segments: AtomicU64,
+}
+
+/// Snapshot of [`IngestCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IngestStats {
+    /// Insert batches routed.
+    pub batches: u64,
+    /// Points appended across all nodes.
+    pub points: u64,
+    /// Segments sealed (delta → immutable) across all nodes.
+    pub sealed_segments: u64,
+}
+
+impl IngestCounters {
+    pub fn new() -> IngestCounters {
+        IngestCounters::default()
+    }
+
+    /// One routed batch of `points` points.
+    pub fn record_batch(&self, points: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.points.fetch_add(points, Ordering::Relaxed);
+    }
+
+    /// `n` segments sealed as a consequence of an insert (or age poll).
+    pub fn record_seals(&self, n: u64) {
+        self.sealed_segments.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> IngestStats {
+        IngestStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            points: self.points.load(Ordering::Relaxed),
+            sealed_segments: self.sealed_segments.load(Ordering::Relaxed),
+        }
     }
 }
 

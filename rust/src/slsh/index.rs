@@ -86,7 +86,7 @@ impl QueryScratch {
         }
     }
 
-    fn ensure(&mut self, n_local: usize, nq: usize, k: usize) {
+    pub(crate) fn ensure(&mut self, n_local: usize, nq: usize, k: usize) {
         self.visited.ensure_capacity(n_local);
         if self.topks.len() < nq {
             let grow = nq - self.topks.len();
@@ -137,14 +137,14 @@ impl BatchOutput {
         (&self.neighbors, &self.offsets, &self.stats)
     }
 
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         self.neighbors.clear();
         self.offsets.clear();
         self.offsets.push(0);
         self.stats.clear();
     }
 
-    fn push_query(&mut self, topk: &mut TopK, stats: QueryStats) {
+    pub(crate) fn push_query(&mut self, topk: &mut TopK, stats: QueryStats) {
         topk.drain_sorted_into(&mut self.neighbors);
         self.offsets.push(self.neighbors.len() as u32);
         self.stats.push(stats);

@@ -1,0 +1,936 @@
+//! The live (streaming) SLSH index: online inserts without rebuilds.
+//!
+//! The paper's ICU scenario is inherently streaming — new ABP windows
+//! arrive from monitors continuously — yet the batch-built
+//! [`SlshIndex`] can only be frozen once. A [`LiveIndex`] closes that gap
+//! with an LSM-like segment lifecycle:
+//!
+//! ```text
+//!   inserts ──▶ delta (hash-on-insert, outer tables only)
+//!                 │ seal: size OR age (SealPolicy, injectable Clock)
+//!                 ▼
+//!              sealed segment (full SlshIndex, inner indices built now)
+//!                 ▼
+//!              sealed stack  ── queries merge every segment's top-K
+//! ```
+//!
+//! Three cooperating pieces:
+//!
+//! * [`LiveStore`] — the node-level growable point store: a chain of
+//!   fixed-capacity [`Extent`]s (points never move, so scan kernels keep
+//!   their flat slices) plus the seal decisions. ONE store serves every
+//!   core of a node; the store is the single seal authority, so all cores
+//!   agree on segment boundaries deterministically.
+//! * [`LiveIndex`] — one owner's index over a subset of the outer tables
+//!   (a core's `{t : t ≡ i (mod p)}` share, or all tables standalone):
+//!   sealed [`SealedSegment`]s + one [`DeltaSegment`].
+//!   [`LiveIndex::sync`] catches the tables up with the store — indexing
+//!   fresh rows into the delta, and sealing (building a full
+//!   [`SlshIndex`], inner indices included) when the store closed an
+//!   extent.
+//! * [`LiveScratch`] — the reusable per-owner query arena (per-segment
+//!   scratch + the cross-segment top-K accumulators).
+//!
+//! **Epoch-guarded snapshot reads.** Queries never lock against inserts.
+//! A query pins an `Arc` snapshot of the segment stack (one brief mutex
+//! for the clone), then reads the delta at its `Acquire`-published epoch:
+//! the answer is always a valid *prefix* of the insertion order — every
+//! neighbor's floats were fully written before the epoch was published,
+//! and no point is visible in some tables but not others. Concurrent
+//! inserts simply land past the epoch and become visible to the next
+//! query.
+//!
+//! **Cross-segment resolution.** Each segment resolves independently
+//! (comparison counting and [`ScanCancel`] budget enforcement intact);
+//! per-segment top-Ks are merged through the same reduction the
+//! cluster's Reducer uses ([`crate::knn::reduce::fold_partial`]), so
+//! results are order-invariant and deduplication semantics match the
+//! distributed path exactly.
+//!
+//! **Seal equivalence.** Sealing rebuilds the segment with
+//! [`SlshIndex::build`] over the extent's final points, so an index grown
+//! from empty and then sealed answers bit-identically to
+//! [`SlshIndex::build_full`] over the same points
+//! (`rust/tests/streaming_ingest.rs` pins this across seeds and both
+//! LSH/SLSH configs). Before sealing, the delta serves LSH-only
+//! semantics on the outer tables — identical candidates in LSH-only
+//! configs; stratification (inner indices) kicks in at seal time, when
+//! bucket populations are final.
+//!
+//! [`SlshIndex`]: crate::slsh::index::SlshIndex
+//! [`SlshIndex::build`]: crate::slsh::index::SlshIndex::build
+//! [`SlshIndex::build_full`]: crate::slsh::index::SlshIndex::build_full
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::{DistanceEngine, ScanCancel};
+use crate::knn::heap::TopK;
+use crate::knn::reduce::fold_partial;
+use crate::slsh::index::{BatchOutput, QueryScratch, QueryStats};
+use crate::slsh::params::SlshParams;
+use crate::slsh::segment::{DeltaSegment, Extent, SealReason, SealedSegment};
+use crate::util::clock::Clock;
+
+/// Global-id stride between live nodes: node `i` of a live cluster mints
+/// ids from `i * LIVE_ID_STRIDE`, so ids stay disjoint (and stable across
+/// local/remote deployments) without a coordinator round trip per insert.
+pub const LIVE_ID_STRIDE: u64 = 1 << 40;
+
+/// When the delta seals into an immutable segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SealPolicy {
+    /// Seal once the open extent holds this many points (also the
+    /// extent's fixed capacity — delta structures never reallocate).
+    pub max_points: usize,
+    /// Seal once the open extent's FIRST point is this old (ns on the
+    /// injected clock); `u64::MAX` disables age sealing.
+    pub max_age_ns: u64,
+}
+
+impl SealPolicy {
+    /// Seal on size only.
+    pub fn by_size(max_points: usize) -> SealPolicy {
+        assert!(max_points > 0, "seal size must be positive");
+        SealPolicy { max_points, max_age_ns: u64::MAX }
+    }
+
+    /// Seal on size or age, whichever trips first.
+    pub fn by_size_or_age(max_points: usize, max_age: Duration) -> SealPolicy {
+        assert!(max_points > 0, "seal size must be positive");
+        let ns = max_age.as_nanos().min(u64::MAX as u128) as u64;
+        SealPolicy { max_points, max_age_ns: ns }
+    }
+}
+
+/// What one [`LiveStore::append`] did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AppendOutcome {
+    /// Points appended (all of them — the store never drops).
+    pub accepted: u64,
+    /// Extents closed during this call (size or age trips).
+    pub sealed_now: u64,
+}
+
+/// Immutable snapshot of the store's extent chain.
+struct StoreSnapshot {
+    extents: Vec<Arc<Extent>>,
+}
+
+/// Node-level growable point store: the seal authority every core's
+/// [`LiveIndex`] follows. Appends are serialized by an internal writer
+/// lock; readers (worker `sync`s and queries) go through `Arc` snapshots
+/// and each extent's published row count, never a lock on data.
+pub struct LiveStore {
+    dim: usize,
+    policy: SealPolicy,
+    clock: Arc<dyn Clock>,
+    /// Serializes append/close decisions.
+    write: Mutex<()>,
+    /// Published extent chain (all but the last are closed).
+    snap: Mutex<Arc<StoreSnapshot>>,
+    /// Total points ever appended.
+    total: AtomicU64,
+    /// Extents closed so far (== sealed segments once owners sync).
+    closed: AtomicU64,
+}
+
+impl LiveStore {
+    pub fn new(dim: usize, policy: SealPolicy, clock: Arc<dyn Clock>) -> LiveStore {
+        assert!(dim > 0, "store needs dim > 0");
+        // SealPolicy's fields are pub (the TCP server builds it from wire
+        // values), so the constructor invariant is re-checked here — at
+        // the source — rather than panicking inside the first extent
+        // allocation.
+        assert!(policy.max_points > 0, "seal size must be positive");
+        LiveStore {
+            dim,
+            policy,
+            clock,
+            write: Mutex::new(()),
+            snap: Mutex::new(Arc::new(StoreSnapshot { extents: Vec::new() })),
+            total: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn policy(&self) -> SealPolicy {
+        self.policy
+    }
+
+    /// Total points ever appended.
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Acquire)
+    }
+
+    /// Extents closed so far.
+    pub fn closed_extents(&self) -> u64 {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    fn snapshot(&self) -> Arc<StoreSnapshot> {
+        Arc::clone(&self.snap.lock().unwrap())
+    }
+
+    /// Append `labels.len()` points, splitting across extents and closing
+    /// any that trip the size policy; an age-due open extent is closed
+    /// FIRST so the new points start a fresh one.
+    pub fn append(&self, points: &[f32], labels: &[bool]) -> AppendOutcome {
+        let n = labels.len();
+        assert_eq!(points.len(), n * self.dim, "insert block not n × dim");
+        let _g = self.write.lock().unwrap();
+        let now = self.clock.now_ns();
+        let mut sealed_now = self.close_if_age_due(now);
+        let mut off = 0usize;
+        while off < n {
+            let ext = self.open_extent(now);
+            let room = self.policy.max_points - ext.writer_rows();
+            let take = room.min(n - off);
+            ext.append(
+                &points[off * self.dim..(off + take) * self.dim],
+                &labels[off..off + take],
+            );
+            self.total.fetch_add(take as u64, Ordering::Release);
+            off += take;
+            if ext.writer_rows() == self.policy.max_points {
+                self.close_current(SealReason::Size);
+                sealed_now += 1;
+            }
+        }
+        AppendOutcome { accepted: n as u64, sealed_now }
+    }
+
+    /// Close the open extent if its age bound has passed — the explicit
+    /// poll for quiet streams (no timer thread; callers decide when time
+    /// is checked, which is what keeps age sealing deterministic under
+    /// `MockClock`). Returns the number of extents closed (0 or 1).
+    pub fn poll_age(&self) -> u64 {
+        let _g = self.write.lock().unwrap();
+        self.close_if_age_due(self.clock.now_ns())
+    }
+
+    /// Unconditionally close the open extent (if it holds any points).
+    /// Returns the number of extents closed (0 or 1).
+    pub fn force_seal(&self) -> u64 {
+        let _g = self.write.lock().unwrap();
+        let snap = self.snapshot();
+        match snap.extents.last() {
+            Some(ext) if !ext.is_closed() && ext.writer_rows() > 0 => {
+                self.close_current(SealReason::Forced);
+                1
+            }
+            _ => 0,
+        }
+    }
+
+    /// Close the open extent when age-due (write lock held).
+    fn close_if_age_due(&self, now: u64) -> u64 {
+        if self.policy.max_age_ns == u64::MAX {
+            return 0;
+        }
+        let snap = self.snapshot();
+        match snap.extents.last() {
+            Some(ext)
+                if !ext.is_closed()
+                    && ext.writer_rows() > 0
+                    && now >= ext.created_ns().saturating_add(self.policy.max_age_ns) =>
+            {
+                self.close_current(SealReason::Age);
+                1
+            }
+            _ => 0,
+        }
+    }
+
+    /// The open extent, creating (and publishing) a fresh one if the
+    /// chain is empty or its tail is closed (write lock held).
+    fn open_extent(&self, now: u64) -> Arc<Extent> {
+        let mut snap = self.snap.lock().unwrap();
+        if let Some(last) = snap.extents.last() {
+            if !last.is_closed() {
+                return Arc::clone(last);
+            }
+        }
+        let start = self.total.load(Ordering::Relaxed);
+        let ext = Arc::new(Extent::new(self.dim, self.policy.max_points, start, now));
+        let mut extents = snap.extents.clone();
+        extents.push(Arc::clone(&ext));
+        *snap = Arc::new(StoreSnapshot { extents });
+        ext
+    }
+
+    /// Mark the chain's tail closed (write lock held; tail must be open).
+    fn close_current(&self, reason: SealReason) {
+        let snap = self.snapshot();
+        let last = snap.extents.last().expect("closing with no extent");
+        debug_assert!(!last.is_closed());
+        last.close(reason);
+        self.closed.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Reusable query arena for a [`LiveIndex`] owner: the per-segment
+/// scratch/output plus the cross-segment top-K accumulators and merged
+/// stats. Steady state allocates nothing per query.
+pub struct LiveScratch {
+    /// Per-segment resolution scratch (visited stamps, candidate buffer,
+    /// batch-hash keys, pooled per-query top-Ks).
+    seg: QueryScratch,
+    /// Per-segment flat output, folded into `acc` after each segment.
+    seg_out: BatchOutput,
+    /// Cross-segment top-K accumulator, one per query in the batch.
+    acc: Vec<TopK>,
+    /// Merged per-query stats (comparisons summed across segments).
+    stats: Vec<QueryStats>,
+}
+
+impl LiveScratch {
+    pub fn new() -> LiveScratch {
+        LiveScratch {
+            seg: QueryScratch::new(1),
+            seg_out: BatchOutput::new(),
+            acc: Vec::new(),
+            stats: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, nq: usize, k: usize) {
+        if self.acc.len() < nq {
+            let grow = nq - self.acc.len();
+            self.acc.extend((0..grow).map(|_| TopK::new(k)));
+        }
+        if self.stats.len() < nq {
+            self.stats.resize(nq, QueryStats::default());
+        }
+        for qi in 0..nq {
+            self.acc[qi].reset(k);
+            self.stats[qi] = QueryStats::default();
+        }
+    }
+}
+
+/// What one standalone [`LiveIndex::insert_batch`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertSummary {
+    /// Points accepted by this call.
+    pub accepted: u64,
+    /// Total points in the store afterwards.
+    pub total: u64,
+    /// Segments sealed by this call.
+    pub sealed_now: u64,
+    /// Total sealed segments afterwards.
+    pub sealed_total: u64,
+}
+
+/// Published index snapshot: what one query resolves against.
+struct LiveSnap {
+    sealed: Vec<Arc<SealedSegment>>,
+    delta: Option<Arc<DeltaSegment>>,
+}
+
+/// A live, segmented SLSH index over a subset of the outer tables —
+/// sealed immutable segments plus one append-only delta. See the
+/// [module docs](self) for the lifecycle and consistency contracts.
+pub struct LiveIndex {
+    params: SlshParams,
+    tables: Vec<usize>,
+    store: Arc<LiveStore>,
+    /// Standalone indexes own their store and may insert/seal through it;
+    /// worker-mode indexes follow a node-owned store via [`sync`].
+    ///
+    /// [`sync`]: LiveIndex::sync
+    owns_store: bool,
+    id_base: u64,
+    /// Serializes index mutation (insert / sync / seal). Queries never
+    /// take it.
+    write: Mutex<()>,
+    /// Published segment stack; queries clone the `Arc` and go.
+    snap: Mutex<Arc<LiveSnap>>,
+}
+
+impl LiveIndex {
+    /// A standalone live index owning all `L` outer tables and its own
+    /// store — the single-process streaming front door (see
+    /// `examples/quickstart.rs`).
+    pub fn new(params: &SlshParams, policy: SealPolicy, clock: Arc<dyn Clock>) -> LiveIndex {
+        let tables: Vec<usize> = (0..params.outer.l).collect();
+        let store = Arc::new(LiveStore::new(params.outer.dim, policy, clock));
+        LiveIndex::with_store_inner(params, &tables, store, 0, true)
+    }
+
+    /// A live index over `table_indices`, following a shared node store —
+    /// the per-core worker shape. Call [`sync`](LiveIndex::sync) to catch
+    /// up with the store's appends and seals.
+    pub fn with_store(
+        params: &SlshParams,
+        table_indices: &[usize],
+        store: Arc<LiveStore>,
+        id_base: u64,
+    ) -> LiveIndex {
+        LiveIndex::with_store_inner(params, table_indices, store, id_base, false)
+    }
+
+    fn with_store_inner(
+        params: &SlshParams,
+        table_indices: &[usize],
+        store: Arc<LiveStore>,
+        id_base: u64,
+        owns_store: bool,
+    ) -> LiveIndex {
+        assert_eq!(store.dim(), params.outer.dim, "store/params dim mismatch");
+        LiveIndex {
+            params: params.clone(),
+            tables: table_indices.to_vec(),
+            store,
+            owns_store,
+            id_base,
+            write: Mutex::new(()),
+            snap: Mutex::new(Arc::new(LiveSnap { sealed: Vec::new(), delta: None })),
+        }
+    }
+
+    pub fn params(&self) -> &SlshParams {
+        &self.params
+    }
+
+    pub fn store(&self) -> &Arc<LiveStore> {
+        &self.store
+    }
+
+    pub fn id_base(&self) -> u64 {
+        self.id_base
+    }
+
+    fn snapshot(&self) -> Arc<LiveSnap> {
+        Arc::clone(&self.snap.lock().unwrap())
+    }
+
+    /// Points this index has fully indexed (sealed rows + delta epoch) —
+    /// the upper bound on what a query started NOW can see.
+    pub fn len(&self) -> usize {
+        let snap = self.snapshot();
+        let sealed: usize = snap.sealed.iter().map(|s| s.rows()).sum();
+        sealed + snap.delta.as_ref().map(|d| d.indexed()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sealed segments in the published stack.
+    pub fn sealed_segments(&self) -> usize {
+        self.snapshot().sealed.len()
+    }
+
+    /// Points in the (published) delta.
+    pub fn delta_len(&self) -> usize {
+        self.snapshot().delta.as_ref().map(|d| d.indexed()).unwrap_or(0)
+    }
+
+    /// Close reasons of the sealed stack, in seal order (tests pin
+    /// size/age triggering through this).
+    pub fn seal_reasons(&self) -> Vec<SealReason> {
+        self.snapshot().sealed.iter().filter_map(|s| s.close_reason()).collect()
+    }
+
+    /// Insert a batch of labeled points (standalone indexes only):
+    /// append to the owned store, hash into the delta tables, and seal if
+    /// the policy trips. Returns what happened.
+    pub fn insert_batch(&self, points: &[f32], labels: &[bool]) -> InsertSummary {
+        assert!(
+            self.owns_store,
+            "insert through the store's owner (the node), not a follower index"
+        );
+        let out = self.store.append(points, labels);
+        self.sync();
+        InsertSummary {
+            accepted: out.accepted,
+            total: self.store.total(),
+            sealed_now: out.sealed_now,
+            sealed_total: self.store.closed_extents(),
+        }
+    }
+
+    /// Seal the current delta now (standalone indexes only); no-op when
+    /// the delta is empty.
+    pub fn seal_now(&self) -> u64 {
+        assert!(self.owns_store, "seal through the store's owner (the node)");
+        let sealed = self.store.force_seal();
+        self.sync();
+        sealed
+    }
+
+    /// Check the age policy and seal if due (standalone indexes only).
+    /// Deterministic: time is only read here and in `insert_batch`, on
+    /// the injected clock.
+    pub fn maybe_seal(&self) -> u64 {
+        assert!(self.owns_store, "seal through the store's owner (the node)");
+        let sealed = self.store.poll_age();
+        self.sync();
+        sealed
+    }
+
+    /// Catch this index up with the store: hash newly appended rows into
+    /// the delta tables, and convert the delta into a [`SealedSegment`]
+    /// (building inner indices) for every extent the store has closed.
+    /// Safe to call from the owner thread at any time; queries running
+    /// concurrently keep their pinned snapshots.
+    pub fn sync(&self) {
+        let _g = self.write.lock().unwrap();
+        let store_snap = self.store.snapshot();
+        let cur = self.snapshot();
+        let mut sealed = cur.sealed.clone();
+        let mut delta = cur.delta.clone();
+        let mut changed = false;
+        loop {
+            let sidx = sealed.len();
+            let Some(ext) = store_snap.extents.get(sidx) else { break };
+            // Read `closed` BEFORE the row count: if the close is
+            // visible, the count read after it is the extent's final one.
+            let closed = ext.is_closed();
+            let rows = ext.published_rows();
+            if closed {
+                // Seal straight from the extent: `SlshIndex::build`
+                // re-hashes every row anyway, so hashing them into a
+                // delta first (or finishing a half-indexed one) would be
+                // pure throwaway work. Any existing delta for this extent
+                // is simply dropped from the next snapshot; pinned
+                // readers keep theirs.
+                let seg =
+                    SealedSegment::build(&self.params, &self.tables, Arc::clone(ext), rows);
+                sealed.push(Arc::new(seg));
+                delta = None;
+                changed = true;
+                continue; // the next extent may already exist
+            }
+            let d = match &delta {
+                Some(d) if d.extent_idx() == sidx => Arc::clone(d),
+                _ => {
+                    let d = Arc::new(DeltaSegment::new(
+                        &self.params.outer,
+                        &self.tables,
+                        Arc::clone(ext),
+                        sidx,
+                    ));
+                    delta = Some(Arc::clone(&d));
+                    changed = true;
+                    d
+                }
+            };
+            d.index_rows(rows);
+            break;
+        }
+        if changed {
+            *self.snap.lock().unwrap() = Arc::new(LiveSnap { sealed, delta });
+        }
+    }
+
+    /// Resolve a block of queries (`qs` row-major `nq × dim`) against the
+    /// pinned segment snapshot: every sealed segment resolves on the
+    /// regular [`SlshIndex`] path, the delta on its epoch-guarded
+    /// hash-on-insert path, and per-segment top-Ks merge through
+    /// [`fold_partial`] — the same reduction the cluster's Reducer runs.
+    /// `out` holds one entry per query; stats sum comparisons/probes and
+    /// count tables across ALL segments.
+    pub fn query_batch(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        scratch: &mut LiveScratch,
+        out: &mut BatchOutput,
+    ) {
+        self.query_batch_inner(engine, qs, scratch, out, None);
+    }
+
+    /// Budget-enforced twin of [`query_batch`](LiveIndex::query_batch):
+    /// segments resolve in stack order (sealed oldest-first, delta last)
+    /// and the walk stops — remaining segments unvisited, affected
+    /// queries flagged `partial` — the moment `cancel`'s deadline blows.
+    /// With a deadline that never trips, bit-identical to `query_batch`.
+    pub fn query_batch_cancel(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        scratch: &mut LiveScratch,
+        out: &mut BatchOutput,
+        cancel: &ScanCancel,
+    ) {
+        self.query_batch_inner(engine, qs, scratch, out, Some(cancel));
+    }
+
+    fn query_batch_inner(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        scratch: &mut LiveScratch,
+        out: &mut BatchOutput,
+        cancel: Option<&ScanCancel>,
+    ) {
+        let dim = self.params.outer.dim;
+        assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+        let nq = qs.len() / dim;
+        let k = self.params.k;
+        let snap = self.snapshot();
+        scratch.ensure(nq, k);
+        let mut cut = false;
+        for seg in &snap.sealed {
+            if Self::blown(cancel) {
+                cut = true;
+                break;
+            }
+            match cancel {
+                None => seg.index.query_batch(
+                    engine,
+                    qs,
+                    seg.data(),
+                    seg.labels(),
+                    self.id_base + seg.start(),
+                    &mut scratch.seg,
+                    &mut scratch.seg_out,
+                ),
+                Some(c) => seg.index.query_batch_cancel(
+                    engine,
+                    qs,
+                    seg.data(),
+                    seg.labels(),
+                    self.id_base + seg.start(),
+                    &mut scratch.seg,
+                    &mut scratch.seg_out,
+                    c,
+                ),
+            }
+            fold_segment(&mut scratch.acc, &mut scratch.stats, &scratch.seg_out);
+        }
+        if let Some(delta) = &snap.delta {
+            if !cut && Self::blown(cancel) {
+                cut = true;
+            }
+            if !cut {
+                match cancel {
+                    None => delta.query_batch(
+                        engine,
+                        qs,
+                        k,
+                        self.id_base,
+                        &mut scratch.seg,
+                        &mut scratch.seg_out,
+                    ),
+                    Some(c) => delta.query_batch_cancel(
+                        engine,
+                        qs,
+                        k,
+                        self.id_base,
+                        &mut scratch.seg,
+                        &mut scratch.seg_out,
+                        c,
+                    ),
+                }
+                fold_segment(&mut scratch.acc, &mut scratch.stats, &scratch.seg_out);
+            }
+        }
+        if cut {
+            // Segments skipped wholesale: every query's answer misses
+            // them — flag the whole batch partial.
+            for qi in 0..nq {
+                scratch.stats[qi].partial = true;
+            }
+        }
+        out.clear();
+        for qi in 0..nq {
+            out.push_query(&mut scratch.acc[qi], scratch.stats[qi]);
+        }
+    }
+
+    fn blown(cancel: Option<&ScanCancel>) -> bool {
+        cancel.map(|c| c.blown()).unwrap_or(false)
+    }
+}
+
+/// Fold one segment's flat batch output into the cross-segment
+/// accumulators: neighbors through the Reducer's merge
+/// ([`fold_partial`]), stats by summation (`partial` is sticky).
+fn fold_segment(acc: &mut [TopK], stats: &mut [QueryStats], seg_out: &BatchOutput) {
+    for qi in 0..seg_out.len() {
+        fold_partial(&mut acc[qi], seg_out.neighbors(qi));
+        let s = seg_out.stats(qi);
+        stats[qi].comparisons += s.comparisons;
+        stats[qi].inner_probes += s.inner_probes;
+        stats[qi].direct_buckets += s.direct_buckets;
+        stats[qi].tables += s.tables;
+        stats[qi].partial |= s.partial;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+    use crate::lsh::family::LayerSpec;
+    use crate::slsh::index::SlshIndex;
+    use crate::slsh::params::InnerParams;
+    use crate::util::clock::MockClock;
+    use crate::util::rng::Xoshiro256;
+
+    fn clustered(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<bool>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(n * dim);
+        let mut labels = Vec::with_capacity(n);
+        let centers: Vec<Vec<f32>> = (0..12)
+            .map(|_| (0..dim).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect())
+            .collect();
+        for i in 0..n {
+            let c = &centers[rng.gen_index(centers.len())];
+            for &v in c {
+                data.push(v + rng.gen_normal(0.0, 0.5) as f32);
+            }
+            labels.push(i % 9 == 0);
+        }
+        (data, labels)
+    }
+
+    fn lsh_params(dim: usize, m: usize, l: usize, seed: u64) -> SlshParams {
+        SlshParams::lsh_only(LayerSpec::outer_l1(dim, m, l, 20.0, 180.0, seed), 10)
+    }
+
+    fn slsh_params(dim: usize, seed: u64) -> SlshParams {
+        SlshParams {
+            outer: LayerSpec::outer_l1(dim, 12, 8, 20.0, 180.0, seed),
+            inner: Some(InnerParams { m: 24, l: 8, alpha: 0.05, seed: seed ^ 0xBEEF }),
+            k: 10,
+        }
+    }
+
+    fn mock_clock() -> Arc<MockClock> {
+        Arc::new(MockClock::new(0))
+    }
+
+    #[test]
+    fn empty_index_answers_empty() {
+        let params = lsh_params(30, 16, 8, 3);
+        let live = LiveIndex::new(&params, SealPolicy::by_size(64), mock_clock());
+        assert!(live.is_empty());
+        let engine = NativeEngine::new();
+        let mut scratch = LiveScratch::new();
+        let mut out = BatchOutput::new();
+        let qs: Vec<f32> = (0..2 * 30).map(|i| 40.0 + (i % 30) as f32).collect();
+        live.query_batch(&engine, &qs, &mut scratch, &mut out);
+        assert_eq!(out.len(), 2);
+        for qi in 0..2 {
+            assert!(out.neighbors(qi).is_empty());
+            assert_eq!(out.stats(qi).comparisons, 0);
+        }
+    }
+
+    #[test]
+    fn seal_by_size_segments_deterministically() {
+        let dim = 30;
+        let (data, labels) = clustered(200, dim, 5);
+        let params = lsh_params(dim, 16, 8, 7);
+        let live = LiveIndex::new(&params, SealPolicy::by_size(64), mock_clock());
+        let mut sealed_seen = 0;
+        for chunk in 0..(200 / 10) {
+            let r = chunk * 10;
+            let s = live.insert_batch(&data[r * dim..(r + 10) * dim], &labels[r..r + 10]);
+            sealed_seen += s.sealed_now;
+        }
+        assert_eq!(live.len(), 200);
+        assert_eq!(live.sealed_segments(), 3, "200 / 64 = 3 full extents");
+        assert_eq!(sealed_seen, 3);
+        assert_eq!(live.delta_len(), 200 - 3 * 64);
+        assert_eq!(live.seal_reasons(), vec![SealReason::Size; 3]);
+    }
+
+    #[test]
+    fn seal_by_age_uses_injected_clock() {
+        let dim = 30;
+        let (data, labels) = clustered(20, dim, 6);
+        let params = lsh_params(dim, 16, 8, 9);
+        let clock = mock_clock();
+        let policy = SealPolicy::by_size_or_age(1000, Duration::from_millis(5));
+        let live = LiveIndex::new(&params, policy, Arc::clone(&clock) as Arc<dyn Clock>);
+        live.insert_batch(&data[..10 * dim], &labels[..10]);
+        assert_eq!(live.sealed_segments(), 0);
+        // Not due yet: 1ns short of the bound.
+        clock.advance(Duration::from_millis(5) - Duration::from_nanos(1));
+        assert_eq!(live.maybe_seal(), 0);
+        clock.advance(Duration::from_nanos(1));
+        assert_eq!(live.maybe_seal(), 1);
+        assert_eq!(live.seal_reasons(), vec![SealReason::Age]);
+        assert_eq!(live.delta_len(), 0);
+        // The NEXT insert lands in a fresh extent; its age clock starts
+        // now, and an overdue extent closes on the insert path too.
+        live.insert_batch(&data[10 * dim..], &labels[10..]);
+        assert_eq!(live.sealed_segments(), 1);
+        clock.advance(Duration::from_millis(6));
+        let s = live.insert_batch(&data[..dim], &labels[..1]);
+        assert_eq!(s.sealed_now, 1, "insert closes the overdue extent first");
+        assert_eq!(live.sealed_segments(), 2);
+        assert_eq!(live.delta_len(), 1);
+    }
+
+    #[test]
+    fn grown_then_sealed_matches_build_full() {
+        // The seal-equivalence contract, at unit scope (the integration
+        // suite sweeps seeds and configs on real corpus data).
+        let dim = 30;
+        let (data, labels) = clustered(600, dim, 11);
+        for params in [lsh_params(dim, 16, 8, 13), slsh_params(dim, 13)] {
+            let live = LiveIndex::new(&params, SealPolicy::by_size(600), mock_clock());
+            for chunk in data.chunks(97 * dim).zip(labels.chunks(97)) {
+                live.insert_batch(chunk.0, chunk.1);
+            }
+            assert_eq!(live.sealed_segments(), 1, "cap reached exactly at n");
+            assert_eq!(live.delta_len(), 0);
+            let reference = SlshIndex::build_full(
+                &params,
+                &crate::lsh::layer::SliceView { data: &data, dim },
+            );
+            let engine = NativeEngine::new();
+            let mut live_scr = LiveScratch::new();
+            let mut live_out = BatchOutput::new();
+            let mut ref_scr = QueryScratch::new(600);
+            let mut ref_out = BatchOutput::new();
+            let mut rng = Xoshiro256::seed_from_u64(15);
+            let qs: Vec<f32> = (0..5 * dim).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+            live.query_batch(&engine, &qs, &mut live_scr, &mut live_out);
+            reference.query_batch(&engine, &qs, &data, &labels, 0, &mut ref_scr, &mut ref_out);
+            for qi in 0..5 {
+                assert_eq!(live_out.neighbors(qi), ref_out.neighbors(qi), "qi={qi}");
+                assert_eq!(live_out.stats(qi), ref_out.stats(qi), "qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_matches_build_full_in_lsh_only_mode() {
+        // Before sealing, the delta's outer tables hold exactly the same
+        // buckets (same hash instances, same insertion order) as a batch
+        // build — LSH-only answers are bit-identical.
+        let dim = 30;
+        let (data, labels) = clustered(400, dim, 17);
+        let params = lsh_params(dim, 20, 12, 19);
+        let live = LiveIndex::new(&params, SealPolicy::by_size(4096), mock_clock());
+        live.insert_batch(&data, &labels);
+        assert_eq!(live.sealed_segments(), 0);
+        assert_eq!(live.delta_len(), 400);
+        let reference =
+            SlshIndex::build_full(&params, &crate::lsh::layer::SliceView { data: &data, dim });
+        let engine = NativeEngine::new();
+        let mut live_scr = LiveScratch::new();
+        let mut live_out = BatchOutput::new();
+        let mut ref_scr = QueryScratch::new(400);
+        let mut ref_out = BatchOutput::new();
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let qs: Vec<f32> = (0..7 * dim).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+        live.query_batch(&engine, &qs, &mut live_scr, &mut live_out);
+        reference.query_batch(&engine, &qs, &data, &labels, 0, &mut ref_scr, &mut ref_out);
+        for qi in 0..7 {
+            assert_eq!(live_out.neighbors(qi), ref_out.neighbors(qi), "qi={qi}");
+            assert_eq!(live_out.stats(qi), ref_out.stats(qi), "qi={qi}");
+        }
+    }
+
+    #[test]
+    fn segmented_answers_cover_all_segments() {
+        // With several sealed segments + a delta, a point inserted in any
+        // segment must find itself at distance 0.
+        let dim = 30;
+        let (data, labels) = clustered(300, dim, 23);
+        let params = lsh_params(dim, 16, 8, 25);
+        let live = LiveIndex::new(&params, SealPolicy::by_size(90), mock_clock());
+        live.insert_batch(&data, &labels);
+        assert_eq!(live.sealed_segments(), 3);
+        assert_eq!(live.delta_len(), 30);
+        let engine = NativeEngine::new();
+        let mut scratch = LiveScratch::new();
+        let mut out = BatchOutput::new();
+        for probe in [0usize, 89, 90, 179, 270, 299] {
+            let q = &data[probe * dim..(probe + 1) * dim];
+            live.query_batch(&engine, q, &mut scratch, &mut out);
+            let nbs = out.neighbors(0);
+            assert!(
+                nbs.iter().any(|n| n.id == probe as u64 && n.dist == 0.0),
+                "point {probe} must find itself: {nbs:?}"
+            );
+            // 8 owned tables per segment × 4 segments.
+            assert_eq!(out.stats(0).tables, 32);
+        }
+    }
+
+    #[test]
+    fn worker_follower_sync_matches_owner() {
+        // Two follower indexes over disjoint table subsets of a shared
+        // store must jointly cover exactly what a full owner sees.
+        let dim = 30;
+        let (data, labels) = clustered(150, dim, 27);
+        let params = lsh_params(dim, 16, 8, 29);
+        let clock = mock_clock();
+        let store = Arc::new(LiveStore::new(dim, SealPolicy::by_size(60), clock));
+        let even: Vec<usize> = (0..8).filter(|t| t % 2 == 0).collect();
+        let odd: Vec<usize> = (0..8).filter(|t| t % 2 == 1).collect();
+        let a = LiveIndex::with_store(&params, &even, Arc::clone(&store), 0);
+        let b = LiveIndex::with_store(&params, &odd, Arc::clone(&store), 0);
+        store.append(&data, &labels);
+        a.sync();
+        b.sync();
+        assert_eq!(a.len(), 150);
+        assert_eq!(b.len(), 150);
+        assert_eq!(a.sealed_segments(), 2);
+        assert_eq!(b.sealed_segments(), 2);
+        let engine = NativeEngine::new();
+        let (mut sa, mut sb) = (LiveScratch::new(), LiveScratch::new());
+        let (mut oa, mut ob) = (BatchOutput::new(), BatchOutput::new());
+        let full = LiveIndex::new(&params, SealPolicy::by_size(60), mock_clock());
+        full.insert_batch(&data, &labels);
+        let (mut sf, mut of) = (LiveScratch::new(), BatchOutput::new());
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+            a.query_batch(&engine, &q, &mut sa, &mut oa);
+            b.query_batch(&engine, &q, &mut sb, &mut ob);
+            full.query_batch(&engine, &q, &mut sf, &mut of);
+            let mut merged = TopK::new(params.k);
+            fold_partial(&mut merged, oa.neighbors(0));
+            fold_partial(&mut merged, ob.neighbors(0));
+            assert_eq!(merged.into_sorted(), of.neighbors(0));
+            // Owners dedup only within their own table subsets, so their
+            // summed comparison counts can only exceed the full owner's.
+            assert!(oa.stats(0).comparisons + ob.stats(0).comparisons >= of.stats(0).comparisons);
+        }
+    }
+
+    #[test]
+    fn cancel_unbounded_is_bit_identical_and_blown_is_empty_partial() {
+        let dim = 30;
+        let (data, labels) = clustered(240, dim, 33);
+        let params = lsh_params(dim, 16, 8, 35);
+        let live = LiveIndex::new(&params, SealPolicy::by_size(80), mock_clock());
+        live.insert_batch(&data, &labels);
+        let engine = NativeEngine::new();
+        let mut scratch = LiveScratch::new();
+        let (mut plain, mut enforced) = (BatchOutput::new(), BatchOutput::new());
+        let mut rng = Xoshiro256::seed_from_u64(37);
+        let qs: Vec<f32> = (0..3 * dim).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+        live.query_batch(&engine, &qs, &mut scratch, &mut plain);
+        let unbounded = ScanCancel::unbounded(mock_clock());
+        live.query_batch_cancel(&engine, &qs, &mut scratch, &mut enforced, &unbounded);
+        for qi in 0..3 {
+            assert_eq!(enforced.neighbors(qi), plain.neighbors(qi));
+            assert_eq!(enforced.stats(qi), plain.stats(qi));
+            assert!(!enforced.stats(qi).partial);
+        }
+        // Deadline already blown: zero work, everything partial.
+        let blown = ScanCancel::until(Arc::new(MockClock::new(10)), 10);
+        live.query_batch_cancel(&engine, &qs, &mut scratch, &mut enforced, &blown);
+        for qi in 0..3 {
+            assert!(enforced.stats(qi).partial);
+            assert_eq!(enforced.stats(qi).comparisons, 0);
+            assert!(enforced.neighbors(qi).is_empty());
+        }
+    }
+}

@@ -1,4 +1,5 @@
-//! Stratified Locality Sensitive Hashing (paper §2, Kim et al. [10]).
+//! Stratified Locality Sensitive Hashing (paper §2, Kim et al. [10]) —
+//! batch-built and live (streaming) indexes.
 //!
 //! SLSH layers a second, different-metric LSH **inside** the most populous
 //! buckets of the outer layer: buckets holding more than `α·n` points get
@@ -6,9 +7,54 @@
 //! a huge bucket is narrowed by a second notion of similarity instead of
 //! linearly scanning the whole bucket. This both cuts candidate counts
 //! (the LSH bottleneck) and injects a second metric's semantics.
+//!
+//! # Index lifecycles
+//!
+//! Two front doors share one resolution path:
+//!
+//! * **Batch-built** — [`SlshIndex::build`] / [`build_full`] freeze an
+//!   index over a static point set in one shot (tables built in parallel
+//!   across cores, inner indices where populations exceed `α·n`). This is
+//!   the shape a [`LocalNode`] constructs at cluster build time.
+//! * **Live (streaming)** — [`LiveIndex`] accepts online inserts and runs
+//!   an LSM-like segment lifecycle:
+//!
+//!   ```text
+//!   delta  ──seal (size OR age)──▶  sealed segment  ──▶  sealed stack
+//!   ```
+//!
+//!   New points hash straight into the **delta**'s growable outer tables
+//!   ([`segment`]: hash-on-insert, epoch-published so concurrent queries
+//!   never see torn state); when the delta trips its [`SealPolicy`]
+//!   — by size, or by age on an injectable [`Clock`] — it is **sealed**:
+//!   rebuilt as a regular [`SlshIndex`] (inner stratified indices are
+//!   built now, when bucket populations are final) and pushed onto the
+//!   immutable sealed stack. Queries resolve every sealed segment plus
+//!   the delta and merge per-segment top-Ks through the cluster Reducer's
+//!   fold — comparison counting and [`ScanCancel`] budget enforcement
+//!   intact across segments. An index grown from empty and then sealed
+//!   answers bit-identically to a batch build over the same points
+//!   (`rust/tests/streaming_ingest.rs`).
+//!
+//! Nodes expose the live shape end to end: a growable [`LiveStore`] per
+//! node (the seal authority all cores follow), `WorkerMsg::Insert`
+//! fan-out, `InsertBatch`/`InsertAck` wire frames, and
+//! `Orchestrator::insert_batch` shard routing — see
+//! [`crate::node`], [`crate::net::wire`] and [`crate::coordinator`].
+//!
+//! [`build_full`]: SlshIndex::build_full
+//! [`LocalNode`]: crate::node::node::LocalNode
+//! [`Clock`]: crate::util::clock::Clock
+//! [`ScanCancel`]: crate::engine::ScanCancel
 
 pub mod index;
+pub mod live;
 pub mod params;
+pub mod segment;
 
 pub use index::{BatchOutput, QueryOutput, QueryScratch, QueryStats, SlshIndex};
+pub use live::{
+    AppendOutcome, InsertSummary, LiveIndex, LiveScratch, LiveStore, SealPolicy, LIVE_ID_STRIDE,
+};
 pub use params::{InnerParams, SlshParams};
+pub use segment::{DeltaSegment, Extent, SealReason, SealedSegment};

@@ -1,0 +1,771 @@
+//! Segment primitives for the live (streaming) SLSH index.
+//!
+//! A [`LiveIndex`](crate::slsh::live::LiveIndex) is a stack of sealed,
+//! immutable segments plus one append-only **delta** segment. This module
+//! holds the pieces a segment is made of, all built around a single
+//! publication discipline — *epoch-guarded snapshot reads*:
+//!
+//! * [`AppendBuf`] — a fixed-capacity, single-writer, multi-reader append
+//!   buffer. The writer fills slots past the published prefix; readers
+//!   only ever dereference the prefix an `Acquire` counter told them is
+//!   complete, so a query racing an insert can never observe torn floats.
+//! * [`Extent`] — one contiguous block of points (rows × dim + labels)
+//!   shared by every core of a node. Row count is published with a single
+//!   `Release` store *after* the row data is fully written.
+//! * [`DeltaTable`] — a growable open-addressing hash table supporting
+//!   hash-on-insert while concurrent readers probe it. Bucket membership
+//!   is a forward-linked chain in insertion order (ids strictly
+//!   ascending), so a reader walking under epoch `e` stops at the first
+//!   entry `≥ e` and sees exactly the prefix of the bucket that existed
+//!   at its snapshot — the same bucket order `TableBuilder::freeze`
+//!   produces, which is what makes a pre-seal delta bit-compatible with
+//!   the batch-built index in LSH-only mode.
+//! * [`DeltaSegment`] — one owner's (core's) delta: hash-on-insert outer
+//!   tables over the current extent. No inner (stratified) indices live
+//!   here; those are built at seal time, when the bucket populations are
+//!   final.
+//! * [`SealedSegment`] — a frozen delta: a regular [`SlshIndex`] (inner
+//!   indices included) built over the extent's final rows. Sealing an
+//!   extent that grew from empty yields an index bit-identical to
+//!   [`SlshIndex::build`] over the same points — the seal-equivalence
+//!   contract `rust/tests/streaming_ingest.rs` pins.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::engine::{DistanceEngine, Metric, ScanCancel};
+use crate::lsh::family::{ComposedHash, LayerSpec};
+use crate::lsh::key::PackedKey;
+use crate::lsh::layer::SliceView;
+use crate::slsh::index::{BatchOutput, QueryScratch, QueryStats, SlshIndex};
+use crate::slsh::params::SlshParams;
+use crate::util::stamp::StampSet;
+
+/// Why an extent was closed (and hence a segment sealed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SealReason {
+    /// The extent reached the policy's `max_points`.
+    Size,
+    /// The extent's first point aged past the policy's `max_age`.
+    Age,
+    /// An explicit `seal_now` call.
+    Forced,
+}
+
+impl SealReason {
+    fn as_u8(self) -> u8 {
+        match self {
+            SealReason::Size => 1,
+            SealReason::Age => 2,
+            SealReason::Forced => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SealReason> {
+        match v {
+            1 => Some(SealReason::Size),
+            2 => Some(SealReason::Age),
+            3 => Some(SealReason::Forced),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AppendBuf — fixed-capacity single-writer publish buffer
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity append buffer: one writer fills slots, readers see a
+/// stable `&[T]` prefix. The buffer itself carries NO length — publication
+/// is the owner's job (one `Release` counter covering data and labels
+/// together), which keeps the unsafe surface to two small functions.
+struct AppendBuf<T> {
+    cells: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+// SAFETY: access follows the single-writer/prefix-reader protocol below —
+// the writer only touches cells at indices ≥ every published prefix, and
+// readers only dereference cells < a prefix length they obtained through
+// an Acquire load that synchronizes with the writer's Release publish.
+// The two regions are disjoint, so no cell is ever read and written
+// concurrently.
+unsafe impl<T: Send + Sync> Sync for AppendBuf<T> {}
+unsafe impl<T: Send> Send for AppendBuf<T> {}
+
+impl<T: Copy> AppendBuf<T> {
+    fn new(cap: usize) -> AppendBuf<T> {
+        let cells: Box<[UnsafeCell<MaybeUninit<T>>]> =
+            (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        AppendBuf { cells }
+    }
+
+    /// Write `xs` starting at slot `at`.
+    ///
+    /// SAFETY: caller must be the single writer, `at + xs.len()` must be
+    /// within capacity, and `[at, at + xs.len())` must lie entirely past
+    /// every published prefix.
+    unsafe fn write(&self, at: usize, xs: &[T]) {
+        debug_assert!(at + xs.len() <= self.cells.len());
+        for (i, &x) in xs.iter().enumerate() {
+            (*self.cells[at + i].get()).write(x);
+        }
+    }
+
+    /// The initialized prefix of length `n`.
+    ///
+    /// SAFETY: `n` must not exceed a prefix length obtained via an
+    /// Acquire load that observed the writer's Release publish of at
+    /// least `n` initialized slots.
+    unsafe fn prefix(&self, n: usize) -> &[T] {
+        debug_assert!(n <= self.cells.len());
+        // UnsafeCell<MaybeUninit<T>> has the same layout as T.
+        std::slice::from_raw_parts(self.cells.as_ptr() as *const T, n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extent — one contiguous block of live points
+// ---------------------------------------------------------------------------
+
+/// One contiguous, fixed-capacity block of points in a node's live store.
+/// Extents never move or reallocate, so every segment's scan kernel gets
+/// the flat `&[f32]` slice it wants; the row count is the publication
+/// point (`Release` after the row's floats and label are written).
+pub struct Extent {
+    dim: usize,
+    cap: usize,
+    /// Store-global index of row 0 (global id = node `id_base` + this +
+    /// local row).
+    start: u64,
+    /// Clock reading at creation — the age-seal origin.
+    created_ns: u64,
+    data: AppendBuf<f32>,
+    labels: AppendBuf<bool>,
+    rows: AtomicUsize,
+    /// 0 while open, else a [`SealReason`] discriminant (`Release` after
+    /// the final row publish, so a reader that observes "closed" also
+    /// observes the final row count).
+    closed: AtomicU8,
+}
+
+impl Extent {
+    pub(crate) fn new(dim: usize, cap: usize, start: u64, created_ns: u64) -> Extent {
+        assert!(dim > 0 && cap > 0, "extent needs dim > 0 and cap > 0");
+        Extent {
+            dim,
+            cap,
+            start,
+            created_ns,
+            data: AppendBuf::new(cap * dim),
+            labels: AppendBuf::new(cap),
+            rows: AtomicUsize::new(0),
+            closed: AtomicU8::new(0),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn start(&self) -> u64 {
+        self.start
+    }
+
+    pub(crate) fn created_ns(&self) -> u64 {
+        self.created_ns
+    }
+
+    /// Rows fully written and visible to readers.
+    pub fn published_rows(&self) -> usize {
+        self.rows.load(Ordering::Acquire)
+    }
+
+    /// Writer-side row count (callers must hold the store's write lock).
+    pub(crate) fn writer_rows(&self) -> usize {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    /// Append `lbs.len()` rows. Single writer (the store's write lock).
+    pub(crate) fn append(&self, pts: &[f32], lbs: &[bool]) {
+        let n = lbs.len();
+        let r = self.writer_rows();
+        assert_eq!(pts.len(), n * self.dim, "row block not n × dim");
+        assert!(r + n <= self.cap, "extent overflow");
+        // SAFETY: single writer; the target slots are past the published
+        // prefix (published ≤ writer rows) and within capacity.
+        unsafe {
+            self.data.write(r * self.dim, pts);
+            self.labels.write(r, lbs);
+        }
+        self.rows.store(r + n, Ordering::Release);
+    }
+
+    pub(crate) fn close(&self, reason: SealReason) {
+        self.closed.store(reason.as_u8(), Ordering::Release);
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire) != 0
+    }
+
+    pub fn close_reason(&self) -> Option<SealReason> {
+        SealReason::from_u8(self.closed.load(Ordering::Acquire))
+    }
+
+    /// Flat point data of the first `rows` published rows.
+    pub fn data(&self, rows: usize) -> &[f32] {
+        assert!(rows <= self.published_rows(), "reading past the published prefix");
+        // SAFETY: `rows` is bounded by the Acquire-published row count,
+        // whose Release publish happened after those rows were written.
+        unsafe { self.data.prefix(rows * self.dim) }
+    }
+
+    /// Labels of the first `rows` published rows.
+    pub fn labels(&self, rows: usize) -> &[bool] {
+        assert!(rows <= self.published_rows(), "reading past the published prefix");
+        // SAFETY: same argument as [`Extent::data`].
+        unsafe { self.labels.prefix(rows) }
+    }
+
+    /// One published row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.published_rows(), "row {i} not published");
+        let d = self.data(i + 1);
+        &d[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeltaTable — hash-on-insert table with concurrent probes
+// ---------------------------------------------------------------------------
+
+const NIL: u32 = u32::MAX;
+
+/// Open-addressing hash table that accepts inserts from a single writer
+/// while readers probe concurrently. Layout mirrors
+/// [`TableBuilder`](crate::lsh::table::TableBuilder) — slots map a key to
+/// a bucket, buckets are intrusive chains through a `next[]` array — but
+/// the chain links FORWARD (head = oldest, append at tail), so a probe
+/// yields ids in insertion order without the freeze-time reversal, and
+/// since local ids are inserted in ascending order a reader can stop at
+/// the first id `≥` its epoch: everything after is newer than its
+/// snapshot.
+///
+/// Publication protocol (single writer):
+/// * new bucket — write the slot's key and the bucket head, then
+///   `Release`-store the slot's bucket index; a reader's `Acquire` load of
+///   the slot therefore sees both.
+/// * existing bucket — `Release`-store `next[tail] = id`; a reader's
+///   `Acquire` chain walk sees every link published before it started.
+///
+/// Capacity is fixed at construction (one slot array sized for the
+/// extent's `max_points`), so nothing ever reallocates under a reader.
+pub struct DeltaTable {
+    mask: usize,
+    /// `NIL` or bucket index; the slot's publication point.
+    slot_bucket: Vec<AtomicU32>,
+    slot_key: Vec<UnsafeCell<MaybeUninit<PackedKey>>>,
+    /// Bucket → first inserted id (written before the slot publish).
+    heads: Vec<AtomicU32>,
+    /// Bucket → last inserted id. Writer-only.
+    tails: Vec<AtomicU32>,
+    /// `next[id]` → the next id in the same bucket, `NIL` at the chain
+    /// end. Pre-initialized to `NIL` for every possible id.
+    next: Vec<AtomicU32>,
+    /// Buckets created so far. Writer-only.
+    buckets: AtomicU32,
+}
+
+// SAFETY: `slot_key[s]` is written exactly once, by the single writer,
+// before the matching `slot_bucket[s]` Release store; readers only read it
+// after an Acquire load of `slot_bucket[s]` returned non-NIL. All other
+// shared state is atomic.
+unsafe impl Sync for DeltaTable {}
+unsafe impl Send for DeltaTable {}
+
+impl DeltaTable {
+    /// `cap` = maximum number of inserts (the extent's `max_points`);
+    /// sized for a ≤ 0.5 load factor like the frozen table builder.
+    pub fn with_capacity(cap: usize) -> DeltaTable {
+        let slots = (cap.max(8) * 2).next_power_of_two();
+        DeltaTable {
+            mask: slots - 1,
+            slot_bucket: (0..slots).map(|_| AtomicU32::new(NIL)).collect(),
+            slot_key: (0..slots).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect(),
+            heads: (0..cap).map(|_| AtomicU32::new(NIL)).collect(),
+            tails: (0..cap).map(|_| AtomicU32::new(NIL)).collect(),
+            next: (0..cap).map(|_| AtomicU32::new(NIL)).collect(),
+            buckets: AtomicU32::new(0),
+        }
+    }
+
+    /// Insert local id `id` under `key`. Ids MUST arrive in strictly
+    /// ascending order (the epoch-walk contract).
+    ///
+    /// SAFETY: caller must be the single writer (serialized externally —
+    /// the live index's writer lock); concurrent inserts would race on
+    /// slot claims and key cells.
+    pub(crate) unsafe fn insert(&self, key: PackedKey, id: u32) {
+        let mut slot = (key.digest() as usize) & self.mask;
+        loop {
+            let b = self.slot_bucket[slot].load(Ordering::Acquire);
+            if b == NIL {
+                // New bucket: head + key first, slot publish last.
+                let b = self.buckets.load(Ordering::Relaxed);
+                self.buckets.store(b + 1, Ordering::Relaxed);
+                self.heads[b as usize].store(id, Ordering::Relaxed);
+                self.tails[b as usize].store(id, Ordering::Relaxed);
+                (*self.slot_key[slot].get()).write(key);
+                self.slot_bucket[slot].store(b, Ordering::Release);
+                return;
+            }
+            // SAFETY: published slot ⇒ key initialized (protocol above).
+            let k = (*self.slot_key[slot].get()).assume_init_ref();
+            if *k == key {
+                let t = self.tails[b as usize].load(Ordering::Relaxed);
+                self.next[t as usize].store(id, Ordering::Release);
+                self.tails[b as usize].store(id, Ordering::Relaxed);
+                return;
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// Bucket index for `key`, if any writer published one.
+    pub fn find_bucket(&self, key: &PackedKey) -> Option<usize> {
+        let mut slot = (key.digest() as usize) & self.mask;
+        loop {
+            let b = self.slot_bucket[slot].load(Ordering::Acquire);
+            if b == NIL {
+                return None;
+            }
+            // SAFETY: published slot ⇒ key initialized before the Release
+            // store the Acquire load above synchronized with.
+            let k = unsafe { (*self.slot_key[slot].get()).assume_init_ref() };
+            if *k == *key {
+                return Some(b as usize);
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// Walk bucket `b` in insertion order, visiting only ids `< epoch`;
+    /// returns how many were visited. Ids are ascending, so the walk stops
+    /// at the first id past the epoch — everything later is newer than the
+    /// caller's snapshot.
+    pub fn walk(&self, b: usize, epoch: u32, mut visit: impl FnMut(u32)) -> usize {
+        let mut cur = self.heads[b].load(Ordering::Acquire);
+        let mut seen = 0usize;
+        while cur != NIL && cur < epoch {
+            visit(cur);
+            seen += 1;
+            cur = self.next[cur as usize].load(Ordering::Acquire);
+        }
+        seen
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeltaSegment — one owner's hash-on-insert view of the open extent
+// ---------------------------------------------------------------------------
+
+struct DeltaTableEntry {
+    hash: Box<dyn ComposedHash>,
+    table: DeltaTable,
+}
+
+/// The append-only delta of one live index: the owned outer tables,
+/// hash-on-insert, over the node's currently open [`Extent`]. Queries see
+/// the `indexed` epoch — points are searchable only once their owner has
+/// hashed them into every owned table, never partially.
+pub struct DeltaSegment {
+    extent: Arc<Extent>,
+    /// Which store extent this delta indexes (for catch-up bookkeeping).
+    extent_idx: usize,
+    tables: Vec<DeltaTableEntry>,
+    /// Local rows fully indexed across ALL owned tables (`Release` after
+    /// the last table insert — the delta's query epoch).
+    indexed: AtomicUsize,
+}
+
+impl DeltaSegment {
+    pub(crate) fn new(
+        outer: &LayerSpec,
+        table_indices: &[usize],
+        extent: Arc<Extent>,
+        extent_idx: usize,
+    ) -> DeltaSegment {
+        let cap = extent.capacity();
+        let tables = table_indices
+            .iter()
+            .map(|&t| DeltaTableEntry {
+                hash: outer.instantiate(t),
+                table: DeltaTable::with_capacity(cap),
+            })
+            .collect();
+        DeltaSegment { extent, extent_idx, tables, indexed: AtomicUsize::new(0) }
+    }
+
+    pub(crate) fn extent_idx(&self) -> usize {
+        self.extent_idx
+    }
+
+    /// Local rows visible to queries.
+    pub fn indexed(&self) -> usize {
+        self.indexed.load(Ordering::Acquire)
+    }
+
+    /// Store-global index of local row 0.
+    pub fn start(&self) -> u64 {
+        self.extent.start()
+    }
+
+    /// Catch the tables up with the extent: hash rows `[indexed, upto)`
+    /// into every owned table, then publish the new epoch. Single writer
+    /// (the live index's writer lock); `upto` must not exceed the
+    /// extent's published rows.
+    pub(crate) fn index_rows(&self, upto: usize) {
+        let from = self.indexed.load(Ordering::Relaxed);
+        if upto <= from {
+            return;
+        }
+        let dim = self.extent.dim();
+        let data = self.extent.data(upto);
+        for i in from..upto {
+            let x = &data[i * dim..(i + 1) * dim];
+            for e in &self.tables {
+                // SAFETY: single writer (caller holds the live index's
+                // writer lock); ids arrive in ascending order.
+                unsafe { e.table.insert(e.hash.hash(x), i as u32) };
+            }
+        }
+        self.indexed.store(upto, Ordering::Release);
+    }
+
+    /// Gather one owned table's deduplicated contribution to `out` for
+    /// query `q` at `epoch` — the delta twin of `SlshIndex::gather_table`
+    /// (no inner indices: those exist only after sealing).
+    fn gather_table(
+        &self,
+        pos: usize,
+        q: &[f32],
+        epoch: u32,
+        visited: &mut StampSet,
+        out: &mut Vec<u32>,
+        stats: &mut QueryStats,
+    ) {
+        let e = &self.tables[pos];
+        let key = e.hash.hash(q);
+        let Some(b) = e.table.find_bucket(&key) else { return };
+        let seen = e.table.walk(b, epoch, |id| {
+            if visited.insert(id) {
+                out.push(id);
+            }
+        });
+        if seen > 0 {
+            stats.direct_buckets += 1;
+        }
+    }
+
+    /// Resolve a block of queries against the delta at its current epoch
+    /// — the streaming twin of [`SlshIndex::query_batch`], minus inner
+    /// indices. `out` is cleared and refilled with one resolved query per
+    /// input row (same contract as the `SlshIndex` batch paths), reusing
+    /// `scratch`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn query_batch(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        k: usize,
+        id_base: u64,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+    ) {
+        self.query_batch_inner(engine, qs, k, id_base, scratch, out, None);
+    }
+
+    /// Budget-enforced twin of [`query_batch`](DeltaSegment::query_batch):
+    /// table-at-a-time with the deadline checked between tables and
+    /// between candidate tiles, same prefix contract as
+    /// [`SlshIndex::query_batch_cancel`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn query_batch_cancel(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        k: usize,
+        id_base: u64,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+        cancel: &ScanCancel,
+    ) {
+        self.query_batch_inner(engine, qs, k, id_base, scratch, out, Some(cancel));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn query_batch_inner(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        k: usize,
+        id_base: u64,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+        cancel: Option<&ScanCancel>,
+    ) {
+        let dim = self.extent.dim();
+        assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+        let nq = qs.len() / dim;
+        // The epoch is read ONCE per batch: every query in the block sees
+        // the same point-set prefix.
+        let epoch = self.indexed();
+        scratch.ensure(epoch.max(1), nq, k);
+        out.clear();
+        let data = self.extent.data(epoch);
+        let labels = self.extent.labels(epoch);
+        let gid_base = id_base + self.extent.start();
+        let QueryScratch { visited, cand, topks, .. } = scratch;
+        for qi in 0..nq {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            let topk = &mut topks[qi];
+            topk.reset(k);
+            let mut stats = QueryStats::default();
+            visited.clear();
+            cand.clear();
+            for pos in 0..self.tables.len() {
+                if let Some(c) = cancel {
+                    if c.blown() {
+                        stats.partial = true;
+                        break;
+                    }
+                }
+                let start = cand.len();
+                self.gather_table(pos, q, epoch as u32, visited, cand, &mut stats);
+                stats.tables += 1;
+                let fresh = (cand.len() - start) as u64;
+                let scanned = match cancel {
+                    None => engine.scan(
+                        Metric::L1,
+                        q,
+                        data,
+                        dim,
+                        &cand[start..],
+                        labels,
+                        gid_base,
+                        topk,
+                    ),
+                    Some(c) => engine.scan_until(
+                        Metric::L1,
+                        q,
+                        data,
+                        dim,
+                        &cand[start..],
+                        labels,
+                        gid_base,
+                        topk,
+                        c,
+                    ),
+                };
+                stats.comparisons += scanned;
+                if scanned < fresh {
+                    stats.partial = true;
+                    break;
+                }
+            }
+            out.push_query(topk, stats);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SealedSegment — a frozen delta
+// ---------------------------------------------------------------------------
+
+/// An immutable segment of a live index: a regular [`SlshIndex`] (inner
+/// stratified indices included, built now that bucket populations are
+/// final) over a closed extent's rows. Local ids are extent-relative;
+/// global ids are `id_base + start + local`.
+pub struct SealedSegment {
+    pub index: SlshIndex,
+    extent: Arc<Extent>,
+    rows: usize,
+}
+
+impl SealedSegment {
+    /// Build the owned tables over the extent's final `rows` — exactly
+    /// [`SlshIndex::build`] over those points, which is the
+    /// seal-equivalence contract.
+    pub(crate) fn build(
+        params: &SlshParams,
+        table_indices: &[usize],
+        extent: Arc<Extent>,
+        rows: usize,
+    ) -> SealedSegment {
+        let view = SliceView { data: extent.data(rows), dim: extent.dim() };
+        let index = SlshIndex::build(params, &view, table_indices);
+        SealedSegment { index, extent, rows }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn start(&self) -> u64 {
+        self.extent.start()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        self.extent.data(self.rows)
+    }
+
+    pub fn labels(&self) -> &[bool] {
+        self.extent.labels(self.rows)
+    }
+
+    pub fn close_reason(&self) -> Option<SealReason> {
+        self.extent.close_reason()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use std::collections::BTreeMap;
+
+    fn key_of(v: u64) -> PackedKey {
+        PackedKey::from_bits((0..64).map(|b| (v >> b) & 1 == 1))
+    }
+
+    #[test]
+    fn extent_publishes_rows_after_data() {
+        let e = Extent::new(3, 10, 100, 7);
+        assert_eq!(e.published_rows(), 0);
+        e.append(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[true, false]);
+        assert_eq!(e.published_rows(), 2);
+        assert_eq!(e.data(2), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(e.labels(2), &[true, false]);
+        assert_eq!(e.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(e.start(), 100);
+        assert!(!e.is_closed());
+        e.close(SealReason::Age);
+        assert_eq!(e.close_reason(), Some(SealReason::Age));
+    }
+
+    #[test]
+    #[should_panic(expected = "extent overflow")]
+    fn extent_rejects_overflow() {
+        let e = Extent::new(2, 1, 0, 0);
+        e.append(&[0.0, 0.0, 1.0, 1.0], &[false, false]);
+    }
+
+    #[test]
+    fn delta_table_grouping_matches_btreemap_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 5000usize;
+        let table = DeltaTable::with_capacity(n);
+        let mut reference: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for id in 0..n as u32 {
+            let v = rng.gen_below(200); // heavy collisions
+            // SAFETY: single-threaded test = single writer.
+            unsafe { table.insert(key_of(v), id) };
+            reference.entry(v).or_default().push(id);
+        }
+        for (&v, ids) in &reference {
+            let b = table.find_bucket(&key_of(v)).expect("bucket must exist");
+            let mut got = Vec::new();
+            let seen = table.walk(b, n as u32, |id| got.push(id));
+            assert_eq!(seen, ids.len());
+            assert_eq!(&got, ids, "bucket for {v} (insertion order)");
+        }
+        assert!(table.find_bucket(&key_of(9999)).is_none());
+    }
+
+    #[test]
+    fn delta_table_walk_respects_epoch() {
+        let table = DeltaTable::with_capacity(16);
+        for id in 0..8u32 {
+            // SAFETY: single writer.
+            unsafe { table.insert(key_of(5), id) };
+        }
+        let b = table.find_bucket(&key_of(5)).unwrap();
+        for epoch in [0u32, 1, 3, 8, 100] {
+            let mut got = Vec::new();
+            table.walk(b, epoch, |id| got.push(id));
+            let want: Vec<u32> = (0..epoch.min(8)).collect();
+            assert_eq!(got, want, "epoch {epoch}");
+        }
+    }
+
+    #[test]
+    fn delta_table_concurrent_probe_during_insert() {
+        // Smoke the publication protocol: a reader probing while the
+        // writer inserts must only ever see fully-published prefixes.
+        let table = Arc::new(DeltaTable::with_capacity(4096));
+        let t2 = Arc::clone(&table);
+        let writer = std::thread::spawn(move || {
+            for id in 0..4096u32 {
+                // SAFETY: this thread is the only writer.
+                unsafe { t2.insert(key_of((id % 7) as u64), id) };
+            }
+        });
+        for _ in 0..2000 {
+            for v in 0..7u64 {
+                if let Some(b) = table.find_bucket(&key_of(v)) {
+                    let mut prev = None;
+                    table.walk(b, u32::MAX, |id| {
+                        assert_eq!(id % 7, v as u32, "id in wrong bucket");
+                        if let Some(p) = prev {
+                            assert!(id > p, "chain must ascend");
+                        }
+                        prev = Some(id);
+                    });
+                }
+            }
+        }
+        writer.join().unwrap();
+        // Final state complete.
+        for v in 0..7u64 {
+            let b = table.find_bucket(&key_of(v)).unwrap();
+            let seen = table.walk(b, u32::MAX, |_| {});
+            assert_eq!(seen, 4096 / 7 + usize::from(v < 4096 % 7));
+        }
+    }
+
+    #[test]
+    fn delta_segment_epoch_gates_queries() {
+        use crate::engine::native::NativeEngine;
+        let dim = 4;
+        let extent = Arc::new(Extent::new(dim, 64, 0, 0));
+        let spec = LayerSpec::outer_l1(dim, 8, 4, 0.0, 10.0, 3);
+        let delta = DeltaSegment::new(&spec, &[0, 1, 2, 3], Arc::clone(&extent), 0);
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let pts: Vec<f32> = (0..32 * dim).map(|_| rng.gen_f64(0.0, 10.0) as f32).collect();
+        let labels = vec![false; 32];
+        extent.append(&pts, &labels);
+        delta.index_rows(16); // only half published to queries
+        assert_eq!(delta.indexed(), 16);
+        let engine = NativeEngine::new();
+        let mut scratch = QueryScratch::new(1);
+        let mut out = BatchOutput::new();
+        // Query = point 20 (inserted but NOT indexed): it must not be its
+        // own neighbor; every neighbor id must be < 16.
+        let q = &pts[20 * dim..21 * dim];
+        delta.query_batch(&engine, q, 5, 1000, &mut scratch, &mut out);
+        assert_eq!(out.len(), 1);
+        for n in out.neighbors(0) {
+            assert!(n.id >= 1000 && n.id < 1016, "epoch leak: {n:?}");
+        }
+        // After catching up, the point finds itself at distance 0.
+        delta.index_rows(32);
+        delta.query_batch(&engine, q, 5, 1000, &mut scratch, &mut out);
+        assert!(out.neighbors(0).iter().any(|n| n.id == 1020 && n.dist == 0.0));
+    }
+}

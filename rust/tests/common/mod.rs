@@ -21,7 +21,7 @@ use dslsh::engine::DistanceEngine;
 use dslsh::knn::predict::VoteConfig;
 use dslsh::lsh::family::LayerSpec;
 use dslsh::net::{serve_node, RemoteNode};
-use dslsh::slsh::SlshParams;
+use dslsh::slsh::{SealPolicy, SlshParams, LIVE_ID_STRIDE};
 use dslsh::util::threadpool::chunk_ranges;
 
 /// Budgets a frozen MockClock can never expire.
@@ -119,6 +119,46 @@ pub fn tcp_cluster(
     nu: usize,
     cores: usize,
 ) -> (Orchestrator, Vec<JoinHandle<u64>>) {
+    let ranges = chunk_ranges(data.len(), nu);
+    tcp_cluster_with(params, nu, |node_id, addr| {
+        let range = ranges[node_id].clone();
+        let shard = data.shard(range.clone());
+        RemoteNode::connect(addr, node_id, shard, range.start as u64, params, cores).unwrap()
+    })
+}
+
+/// Spawn an EMPTY live TCP loopback cluster: one port-0 listener +
+/// server thread per node, one `connect_live`-built [`RemoteNode`] each
+/// (id bases strided like `build_live_cluster`'s), wrapped in a started
+/// [`Orchestrator`] ready for `insert_batch` routing with acks crossing
+/// the wire.
+pub fn tcp_live_cluster(
+    params: &SlshParams,
+    nu: usize,
+    cores: usize,
+    policy: SealPolicy,
+) -> (Orchestrator, Vec<JoinHandle<u64>>) {
+    tcp_cluster_with(params, nu, |node_id, addr| {
+        RemoteNode::connect_live(
+            addr,
+            node_id,
+            node_id as u64 * LIVE_ID_STRIDE,
+            params,
+            cores,
+            policy,
+        )
+        .unwrap()
+    })
+}
+
+/// Shared TCP-cluster scaffolding: port-0 listeners + one server thread
+/// per node, nodes built by `connect` (batch `RemoteNode::connect` or
+/// live `connect_live`), wrapped in a started [`Orchestrator`].
+fn tcp_cluster_with(
+    params: &SlshParams,
+    nu: usize,
+    mut connect: impl FnMut(usize, std::net::SocketAddr) -> RemoteNode,
+) -> (Orchestrator, Vec<JoinHandle<u64>>) {
     let mut listeners = Vec::new();
     let mut addrs = Vec::new();
     for _ in 0..nu {
@@ -130,13 +170,8 @@ pub fn tcp_cluster(
         .into_iter()
         .map(|l| std::thread::spawn(move || serve_node(&l, None).unwrap()))
         .collect();
-    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::new();
-    for (node_id, range) in chunk_ranges(data.len(), nu).into_iter().enumerate() {
-        let shard = data.shard(range.clone());
-        let remote =
-            RemoteNode::connect(addrs[node_id], node_id, shard, range.start as u64, params, cores)
-                .unwrap();
-        nodes.push(Box::new(remote));
-    }
+    let nodes: Vec<Box<dyn NodeHandle>> = (0..nu)
+        .map(|node_id| Box::new(connect(node_id, addrs[node_id])) as Box<dyn NodeHandle>)
+        .collect();
     (Orchestrator::start(nodes, params.k, VoteConfig::default()), servers)
 }

@@ -1,0 +1,481 @@
+//! Streaming-ingest contracts (the live index end to end), all
+//! deterministic — MockClock / TickClock only, no sleeps:
+//!
+//! * **seal equivalence** — an index grown from empty via inserts and
+//!   then sealed answers bit-identically (neighbors AND stats) to
+//!   `SlshIndex::build_full` over the same points, across seeds and both
+//!   LSH-only / stratified configs.
+//! * **snapshot consistency** — queries racing a concurrent inserter
+//!   never observe torn state: every neighbor is a fully-written point
+//!   that was indexed before the query finished, carrying its true
+//!   bit-exact distance (the epoch-guarded prefix contract).
+//! * **deterministic sealing** — size trips at exactly the policy count;
+//!   age trips exactly at the bound on the injected clock.
+//! * **budget enforcement across segments** — partial answers stay
+//!   monotone prefixes as the budget grows, `Shed`/`PartialResults`
+//!   reject-before-work at zero budget, and an unbounded deadline is
+//!   bit-identical to the unenforced path — at the index AND node level.
+//! * **local/TCP parity** — the same insert stream routed through
+//!   in-process live nodes and through `InsertBatch`/`InsertAck` frames
+//!   over real sockets yields identical acks and identical query
+//!   results.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dslsh::coordinator::admission::{AdmissionConfig, Budget, BudgetPolicy, Class};
+use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{DistanceEngine, Metric, ScanCancel};
+use dslsh::knn::heap::TopK;
+use dslsh::knn::predict::VoteConfig;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::node::node::LocalNode;
+use dslsh::slsh::{
+    BatchOutput, InnerParams, LiveIndex, LiveScratch, QueryScratch, SealPolicy, SealReason,
+    SlshIndex, SlshParams, LIVE_ID_STRIDE,
+};
+use dslsh::util::clock::{Clock, MockClock, TickClock};
+
+use common::{assert_bit_identical, corpus, lsh_params, native_engines, FAR};
+
+fn mock_clock() -> Arc<MockClock> {
+    Arc::new(MockClock::new(0))
+}
+
+fn slsh_params(data: &dslsh::data::Dataset, seed: u64) -> SlshParams {
+    let (lo, hi) = data.value_range();
+    SlshParams {
+        outer: LayerSpec::outer_l1(data.dim, 12, 8, lo, hi, seed),
+        inner: Some(InnerParams { m: 24, l: 8, alpha: 0.02, seed: seed ^ 0xACED }),
+        k: 10,
+    }
+}
+
+/// The engine's own L1 distance for (query, point `id`) — the oracle the
+/// torn-read checks compare against bit-for-bit. The scan kernels use a
+/// 4-way-unrolled accumulation, so the scalar `l1_dist` is NOT the right
+/// reference; one single-candidate scan through the same kernel is.
+fn engine_dist(engine: &NativeEngine, q: &[f32], data: &dslsh::data::Dataset, id: usize) -> f32 {
+    let mut t = TopK::new(1);
+    engine.scan(Metric::L1, q, &data.points, data.dim, &[id as u32], &data.labels, 0, &mut t);
+    t.into_sorted()[0].dist
+}
+
+/// Insert `data` into `live` in uneven batches (stresses extent
+/// splitting) and return how many segments sealed along the way.
+fn stream_in(live: &LiveIndex, data: &dslsh::data::Dataset, batch: usize) -> u64 {
+    let mut sealed = 0;
+    let mut at = 0usize;
+    while at < data.len() {
+        let take = batch.min(data.len() - at);
+        let s = live.insert_batch(
+            &data.points[at * data.dim..(at + take) * data.dim],
+            &data.labels[at..at + take],
+        );
+        sealed += s.sealed_now;
+        at += take;
+    }
+    sealed
+}
+
+#[test]
+fn seal_equivalence_with_build_full_across_seeds_and_configs() {
+    for seed in [3u64, 19] {
+        let c = corpus(2500, 20, seed);
+        let configs = [lsh_params(&c.data, 24, 12, seed ^ 1), slsh_params(&c.data, seed ^ 2)];
+        for (ci, params) in configs.iter().enumerate() {
+            let live = LiveIndex::new(params, SealPolicy::by_size(c.data.len()), mock_clock());
+            stream_in(&live, &c.data, 311);
+            assert_eq!(live.sealed_segments(), 1, "seed={seed} cfg={ci}");
+            assert_eq!(live.delta_len(), 0);
+            let reference = SlshIndex::build_full(params, &c.data);
+            let engine = NativeEngine::new();
+            let (mut lscr, mut lout) = (LiveScratch::new(), BatchOutput::new());
+            let (mut rscr, mut rout) =
+                (QueryScratch::new(c.data.len()), BatchOutput::new());
+            // Whole query set in one batch: bit-identical neighbors
+            // (exact f32 distances) AND stats (comparisons, probes,
+            // bucket kinds, tables).
+            let mut flat = Vec::new();
+            for i in 0..c.queries.len() {
+                flat.extend_from_slice(c.queries.point(i));
+            }
+            live.query_batch(&engine, &flat, &mut lscr, &mut lout);
+            reference.query_batch(
+                &engine,
+                &flat,
+                &c.data.points,
+                &c.data.labels,
+                0,
+                &mut rscr,
+                &mut rout,
+            );
+            assert_eq!(lout.len(), c.queries.len());
+            for qi in 0..c.queries.len() {
+                assert_eq!(
+                    lout.neighbors(qi),
+                    rout.neighbors(qi),
+                    "seed={seed} cfg={ci} qi={qi}"
+                );
+                assert_eq!(lout.stats(qi), rout.stats(qi), "seed={seed} cfg={ci} qi={qi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn seal_triggers_deterministically_by_size_and_age() {
+    let c = corpus(1000, 5, 7);
+    let params = lsh_params(&c.data, 20, 8, 11);
+    // Size: 1000 points through a 256-point policy = 3 seals + 232 delta.
+    let live = LiveIndex::new(&params, SealPolicy::by_size(256), mock_clock());
+    let sealed = stream_in(&live, &c.data, 100);
+    assert_eq!(sealed, 3);
+    assert_eq!(live.sealed_segments(), 3);
+    assert_eq!(live.delta_len(), 1000 - 3 * 256);
+    assert_eq!(live.len(), 1000);
+    assert_eq!(live.seal_reasons(), vec![SealReason::Size; 3]);
+
+    // Age: nothing seals a tick before the bound, everything at it.
+    let clock = mock_clock();
+    let live = LiveIndex::new(
+        &params,
+        SealPolicy::by_size_or_age(10_000, Duration::from_millis(2)),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    );
+    live.insert_batch(&c.data.points[..40 * c.data.dim], &c.data.labels[..40]);
+    clock.advance(Duration::from_millis(2) - Duration::from_nanos(1));
+    assert_eq!(live.maybe_seal(), 0, "one tick early must not seal");
+    clock.advance(Duration::from_nanos(1));
+    assert_eq!(live.maybe_seal(), 1, "exactly at the bound must seal");
+    assert_eq!(live.seal_reasons(), vec![SealReason::Age]);
+    // An overdue open extent also closes on the next insert's way in.
+    live.insert_batch(&c.data.points[..10 * c.data.dim], &c.data.labels[..10]);
+    clock.advance(Duration::from_millis(3));
+    let s = live.insert_batch(&c.data.points[..c.data.dim], &c.data.labels[..1]);
+    assert_eq!(s.sealed_now, 1);
+    assert_eq!(live.seal_reasons(), vec![SealReason::Age, SealReason::Age]);
+    assert_eq!(live.delta_len(), 1, "the triggering insert starts the fresh extent");
+
+    // Node level: `poll_seal` runs the same age check for a completely
+    // quiet stream and propagates the seal to every core.
+    let clock = mock_clock();
+    let mut node = LocalNode::spawn_live(
+        0,
+        0,
+        &params,
+        2,
+        native_engines(2),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+        SealPolicy::by_size_or_age(10_000, Duration::from_millis(2)),
+    );
+    node.insert_batch(&c.data.points[..20 * c.data.dim], &c.data.labels[..20]);
+    let r = node.poll_seal();
+    assert_eq!(r.sealed_now, 0, "not due yet");
+    clock.advance(Duration::from_millis(2));
+    let r = node.poll_seal();
+    assert_eq!((r.sealed_now, r.sealed_total, r.total), (1, 1, 20));
+    assert_eq!(node.poll_seal().sealed_now, 0, "nothing left to seal");
+}
+
+#[test]
+fn snapshot_consistency_under_concurrent_insert_and_query() {
+    // A writer streams the corpus in while readers hammer queries. No
+    // schedule control, no sleeps: the asserted properties hold under
+    // EVERY interleaving — that is the epoch contract.
+    let c = corpus(4000, 10, 13);
+    let params = lsh_params(&c.data, 20, 8, 17);
+    let live = Arc::new(LiveIndex::new(&params, SealPolicy::by_size(512), mock_clock()));
+    let data = Arc::new(c.data);
+    let queries = Arc::new(c.queries);
+    let done = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let (live, data, done) = (Arc::clone(&live), Arc::clone(&data), Arc::clone(&done));
+        std::thread::spawn(move || {
+            let mut at = 0usize;
+            while at < data.len() {
+                let take = 97.min(data.len() - at);
+                live.insert_batch(
+                    &data.points[at * data.dim..(at + take) * data.dim],
+                    &data.labels[at..at + take],
+                );
+                at += take;
+            }
+            done.store(true, Ordering::Release);
+        })
+    };
+    let readers: Vec<_> = (0..2)
+        .map(|r| {
+            let (live, data, queries, done) = (
+                Arc::clone(&live),
+                Arc::clone(&data),
+                Arc::clone(&queries),
+                Arc::clone(&done),
+            );
+            std::thread::spawn(move || {
+                let engine = NativeEngine::new();
+                let (mut scratch, mut out) = (LiveScratch::new(), BatchOutput::new());
+                let mut rounds = 0usize;
+                // Keep querying until the writer finishes, then once more
+                // against the complete index.
+                loop {
+                    let finished = done.load(Ordering::Acquire);
+                    for qi in 0..queries.len() {
+                        let q = queries.point((qi + r) % queries.len());
+                        live.query_batch(&engine, q, &mut scratch, &mut out);
+                        let visible = live.len() as u64; // read AFTER the query
+                        let nbs = out.neighbors(0);
+                        for w in nbs.windows(2) {
+                            assert!(w[0].dist <= w[1].dist, "unsorted answer");
+                            assert_ne!(w[0].id, w[1].id, "duplicate neighbor");
+                        }
+                        for n in nbs {
+                            // Every neighbor must be a point inserted
+                            // before the query's epoch, fully written
+                            // (bit-exact distance against the source
+                            // data), with its true label.
+                            assert!(n.id < visible, "neighbor past the epoch: {n:?}");
+                            let i = n.id as usize;
+                            let true_d = engine_dist(&engine, q, &data, i);
+                            assert_eq!(n.dist, true_d, "torn read for point {i}");
+                            assert_eq!(n.label, data.labels[i]);
+                        }
+                    }
+                    rounds += 1;
+                    if finished {
+                        break;
+                    }
+                }
+                rounds
+            })
+        })
+        .collect();
+    writer.join().unwrap();
+    for r in readers {
+        assert!(r.join().unwrap() >= 1);
+    }
+    // Final state: everything visible and searchable.
+    assert_eq!(live.len(), data.len());
+    let engine = NativeEngine::new();
+    let (mut scratch, mut out) = (LiveScratch::new(), BatchOutput::new());
+    live.query_batch(&engine, data.point(777), &mut scratch, &mut out);
+    assert!(out.neighbors(0).iter().any(|n| n.id == 777 && n.dist == 0.0));
+}
+
+#[test]
+fn budget_enforcement_is_monotone_across_segments() {
+    // TickClock: every deadline check costs one tick, so coverage is a
+    // pure function of the budget — sweep it and demand monotone,
+    // prefix-true partials, converging to the unenforced answer.
+    let c = corpus(1200, 5, 23);
+    let params = lsh_params(&c.data, 20, 8, 29);
+    let live = LiveIndex::new(&params, SealPolicy::by_size(300), mock_clock());
+    stream_in(&live, &c.data, 150);
+    assert_eq!(live.sealed_segments(), 4);
+    let engine = NativeEngine::new();
+    let q = c.queries.point(0);
+    let (mut scratch, mut plain) = (LiveScratch::new(), BatchOutput::new());
+    live.query_batch(&engine, q, &mut scratch, &mut plain);
+    let full = (plain.stats(0).tables, plain.stats(0).comparisons);
+    assert_eq!(full.0, 32, "4 segments × 8 tables");
+    let mut out = BatchOutput::new();
+    let mut prev = (0u32, 0u64);
+    let mut saw_partial_with_work = false;
+    for budget_ticks in [0u64, 1, 2, 4, 8, 16, 32, 64, 1 << 40] {
+        let cancel =
+            ScanCancel::until(Arc::new(TickClock::new(0, 1)), budget_ticks);
+        live.query_batch_cancel(&engine, q, &mut scratch, &mut out, &cancel);
+        let st = out.stats(0);
+        assert!(
+            st.tables >= prev.0 && st.comparisons >= prev.1,
+            "coverage must grow with budget: {budget_ticks} ticks, \
+             ({}, {}) after {prev:?}",
+            st.tables,
+            st.comparisons
+        );
+        prev = (st.tables, st.comparisons);
+        if budget_ticks == 0 {
+            assert!(st.partial);
+            assert_eq!(st.comparisons, 0, "zero budget ⇒ zero work");
+            assert!(out.neighbors(0).is_empty());
+        }
+        if st.partial && st.comparisons > 0 {
+            saw_partial_with_work = true;
+        }
+        // Partial or not, every returned neighbor carries its true
+        // distance (prefixes, never garbage).
+        for n in out.neighbors(0) {
+            assert_eq!(n.dist, engine_dist(&engine, q, &c.data, n.id as usize));
+        }
+        if !st.partial {
+            assert_eq!((st.tables, st.comparisons), full, "complete answer = full coverage");
+            assert_eq!(out.neighbors(0), plain.neighbors(0));
+        }
+    }
+    assert!(saw_partial_with_work, "sweep never produced a mid-scan partial");
+    assert!(!out.stats(0).partial, "the largest budget must complete");
+}
+
+#[test]
+fn node_level_budget_policies_work_on_live_nodes() {
+    let c = corpus(1500, 5, 31);
+    let params = lsh_params(&c.data, 24, 12, 37);
+    let spawn = |clock: Arc<dyn Clock>| {
+        LocalNode::spawn_live(0, 0, &params, 2, native_engines(2), clock, SealPolicy::by_size(400))
+    };
+    let fill = |node: &mut LocalNode| {
+        let d = &c.data;
+        let mut at = 0usize;
+        while at < d.len() {
+            let take = 250.min(d.len() - at);
+            node.insert_batch(&d.points[at * d.dim..(at + take) * d.dim], &d.labels[at..at + take]);
+            at += take;
+        }
+    };
+    let flat = |n: usize| {
+        let mut v = Vec::new();
+        for i in 0..n {
+            v.extend_from_slice(c.queries.point(i));
+        }
+        Arc::new(v)
+    };
+
+    // Shed with the budget already spent: rejected before ANY scan work.
+    let mut node = spawn(mock_clock());
+    fill(&mut node);
+    let shed_budget = Budget::enforced(0, BudgetPolicy::Shed);
+    let replies = node.query_batch_budget(flat(3), 3, shed_budget, Class::Monitor);
+    assert_eq!(replies.len(), 3);
+    for r in &replies {
+        assert!(r.shed && r.partial);
+        assert!(r.neighbors.is_empty());
+        assert!(r.comparisons.iter().all(|&x| x == 0));
+    }
+
+    // PartialResults at zero budget: served, but the deadline trips on
+    // the first check — partial answers with zero work.
+    let replies = node.query_batch_budget(
+        flat(3),
+        3,
+        Budget::enforced(0, BudgetPolicy::PartialResults),
+        Class::Monitor,
+    );
+    for r in &replies {
+        assert!(r.partial && !r.shed);
+        assert!(r.comparisons.iter().all(|&x| x == 0));
+    }
+
+    // PartialResults with a budget a frozen MockClock can never spend:
+    // bit-identical to the unenforced path on a twin node.
+    let mut twin = spawn(mock_clock());
+    fill(&mut twin);
+    let enforced = node.query_batch_budget(
+        flat(4),
+        4,
+        Budget::enforced(FAR.as_micros() as u64, BudgetPolicy::PartialResults),
+        Class::Monitor,
+    );
+    let plain = twin.query_batch(flat(4), 4);
+    for (e, p) in enforced.iter().zip(&plain) {
+        assert!(!e.partial);
+        assert_eq!(e.neighbors, p.neighbors);
+        assert_eq!(e.comparisons, p.comparisons);
+    }
+}
+
+#[test]
+fn insert_batch_local_and_tcp_clusters_are_bit_identical() {
+    let c = corpus(3000, 15, 41);
+    let params = lsh_params(&c.data, 24, 12, 43);
+    let policy = SealPolicy::by_size(300);
+
+    // Local live cluster (MockClock: sealing is size-driven anyway).
+    let local_nodes: Vec<Box<dyn NodeHandle>> = (0..2)
+        .map(|i| {
+            Box::new(LocalNode::spawn_live(
+                i,
+                i as u64 * LIVE_ID_STRIDE,
+                &params,
+                2,
+                native_engines(2),
+                mock_clock(),
+                policy,
+            )) as Box<dyn NodeHandle>
+        })
+        .collect();
+    let local = Orchestrator::start(local_nodes, params.k, VoteConfig::default());
+
+    // TCP live cluster: same topology, inserts/acks cross real sockets.
+    let (remote, servers) = common::tcp_live_cluster(&params, 2, 2, policy);
+
+    // Drive both identically: interleave routed insert batches with
+    // broadcast queries, comparing acks and answers at every step.
+    let d = &c.data;
+    let batch = 125usize;
+    for b in 0..(d.len() / batch) {
+        let at = b * batch;
+        let pts = &d.points[at * d.dim..(at + batch) * d.dim];
+        let lbs = &d.labels[at..at + batch];
+        let lo = local.insert_batch(pts, lbs);
+        let ro = remote.insert_batch(pts, lbs);
+        assert_eq!(lo, ro, "insert acks diverged at batch {b}");
+        assert_eq!(lo.node, b % 2);
+        if b % 5 == 4 {
+            let qi = b % c.queries.len();
+            let lr = local.query(c.queries.point(qi));
+            let rr = remote.query(c.queries.point(qi));
+            assert_bit_identical(&lr, &rr, &format!("query after batch {b}"));
+        }
+    }
+    // Ingest telemetry matched the stream on both sides.
+    let (li, ri) = (local.ingest_stats(), remote.ingest_stats());
+    assert_eq!(li, ri);
+    assert_eq!(li.points, d.len() as u64);
+    assert_eq!(li.sealed_segments, 2 * (d.len() as u64 / 2 / 300));
+    // Full query sweep over the final index.
+    for qi in 0..c.queries.len() {
+        let lr = local.query(c.queries.point(qi));
+        let rr = remote.query(c.queries.point(qi));
+        assert_bit_identical(&lr, &rr, &format!("final query {qi}"));
+        assert!(!lr.partial);
+    }
+    drop(remote);
+    for s in servers {
+        s.join().unwrap();
+    }
+}
+
+#[test]
+fn per_lane_ingest_counters_surface_next_to_partials() {
+    let c = corpus(400, 2, 47);
+    let params = lsh_params(&c.data, 16, 8, 53);
+    let nodes: Vec<Box<dyn NodeHandle>> = vec![Box::new(LocalNode::spawn_live(
+        0,
+        0,
+        &params,
+        1,
+        native_engines(1),
+        mock_clock(),
+        SealPolicy::by_size(1000),
+    ))];
+    let mut orch = Orchestrator::start(nodes, params.k, VoteConfig::default());
+    orch.enable_admission(AdmissionConfig::new(c.data.dim, 4));
+    let d = &c.data;
+    orch.insert_batch_class(&d.points[..100 * d.dim], &d.labels[..100], Class::Monitor);
+    orch.insert_batch_class(
+        &d.points[100 * d.dim..130 * d.dim],
+        &d.labels[100..130],
+        Class::Analytics,
+    );
+    orch.insert_batch(&d.points[130 * d.dim..135 * d.dim], &d.labels[130..135]);
+    let stats = orch.admission().unwrap().stats();
+    assert_eq!(stats.monitor.inserted, 105, "default class is Monitor");
+    assert_eq!(stats.analytics.inserted, 30);
+    let ing = orch.ingest_stats();
+    assert_eq!(ing.batches, 3);
+    assert_eq!(ing.points, 135);
+}

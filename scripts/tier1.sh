@@ -27,13 +27,17 @@ fi
 # (NUMA pinning, multi-probe degradation) plugs into — fail loudly on its
 # own. admission_priority holds the deterministic priority-lane/
 # pipelining semantics (the PR 2 overrun repro); budget_enforcement the
-# deterministic partial/shed/log-only enforcement contract (PR 4).
+# deterministic partial/shed/log-only enforcement contract (PR 4);
+# streaming_ingest the live-index contracts (seal equivalence, snapshot
+# consistency under concurrent inserts, local/TCP insert parity — PR 5).
 cargo test -q --test admission_parity
 cargo test -q --test admission_priority
 cargo test -q --test budget_enforcement
+cargo test -q --test streaming_ingest
 cargo test -q --lib coordinator::admission
 
-# Bench smoke: asserts the admission-latency bench produces non-empty
-# CSVs for both the load sweep and the priority-lane scenario (artifact
-# plumbing, not timing quality). CI uploads results/*.csv.
+# Bench smoke: asserts the admission-latency and ingest benches produce
+# non-empty CSVs for every scenario (artifact plumbing, not timing
+# quality). CI uploads results/*.csv.
 cargo bench --bench admission_latency -- --smoke
+cargo bench --bench ingest -- --smoke
