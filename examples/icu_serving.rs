@@ -31,18 +31,68 @@
 //! make artifacts && cargo run --release --example icu_serving
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use dslsh::coordinator::orchestrator::{NodeError, NodeHandle, Orchestrator};
 use dslsh::coordinator::{
     build_cluster, build_live_cluster, AdmissionConfig, BudgetPolicy, Class, ClusterConfig,
-    EngineKind,
+    EngineKind, FailoverConfig, ReplicaSet,
 };
 use dslsh::data::WindowSpec;
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::DistanceEngine;
 use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
 use dslsh::knn::predict::VoteConfig;
 use dslsh::metrics::Confusion;
+use dslsh::node::node::{HeartbeatReply, LocalNode, NodeInfo, NodeReply};
 use dslsh::slsh::SealPolicy;
 use dslsh::util::stats;
+use dslsh::util::threadpool::chunk_ranges;
+
+/// A replica whose transport can be cut from the outside — the induced
+/// node-kill for the failover demo. Once `dead` flips, every request
+/// errors exactly like a crashed VM's closed socket would.
+struct KillableNode {
+    inner: LocalNode,
+    dead: Arc<AtomicBool>,
+}
+
+impl KillableNode {
+    fn check(&self) -> Result<(), NodeError> {
+        if self.dead.load(Ordering::Relaxed) {
+            Err(NodeError::new(self.inner.node_id(), "replica killed (induced fault)"))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl NodeHandle for KillableNode {
+    fn node_id(&self) -> usize {
+        self.inner.node_id()
+    }
+
+    fn info(&self) -> NodeInfo {
+        self.inner.info()
+    }
+
+    fn query(&mut self, q: &[f32]) -> Result<NodeReply, NodeError> {
+        self.check()?;
+        Ok(self.inner.query(q))
+    }
+
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Result<Vec<NodeReply>, NodeError> {
+        self.check()?;
+        Ok(self.inner.query_batch(qs, nq))
+    }
+
+    fn heartbeat(&mut self) -> Result<HeartbeatReply, NodeError> {
+        self.check()?;
+        Ok(HeartbeatReply::not_live())
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let n = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(30_000);
@@ -80,7 +130,7 @@ fn main() -> anyhow::Result<()> {
     let mut confusion = Confusion::new();
     let t_serve = std::time::Instant::now();
     for i in 0..corpus.queries.len() {
-        let r = cluster.query(corpus.queries.point(i));
+        let r = cluster.query(corpus.queries.point(i))?;
         latencies_ms.push(r.latency_s * 1e3);
         comparisons.push(r.max_comparisons as f64);
         confusion.push(r.prediction, corpus.queries.labels[i]);
@@ -120,7 +170,7 @@ fn main() -> anyhow::Result<()> {
         while start < corpus.queries.len() {
             let end = (start + batch).min(corpus.queries.len());
             let qs: Vec<&[f32]> = (start..end).map(|i| corpus.queries.point(i)).collect();
-            let rs = cluster.query_batch(&qs);
+            let rs = cluster.query_batch(&qs)?;
             for (j, r) in rs.iter().enumerate() {
                 batched_confusion.push(r.prediction, corpus.queries.labels[start + j]);
             }
@@ -285,11 +335,13 @@ fn main() -> anyhow::Result<()> {
             let mut at = 0usize;
             while at < n_ingest {
                 let take = ingest_batch.min(n_ingest - at);
-                live_orch.insert_batch_class(
-                    &d.points[at * d.dim..(at + take) * d.dim],
-                    &d.labels[at..at + take],
-                    Class::Monitor,
-                );
+                live_orch
+                    .insert_batch_class(
+                        &d.points[at * d.dim..(at + take) * d.dim],
+                        &d.labels[at..at + take],
+                        Class::Monitor,
+                    )
+                    .expect("live insert");
                 at += take;
             }
             t0.elapsed().as_secs_f64()
@@ -342,11 +394,79 @@ fn main() -> anyhow::Result<()> {
     );
     // The freshly ingested windows are immediately searchable: a just-
     // inserted point must be its own nearest neighbor.
-    let probe = live.query(corpus.data.point(n_ingest / 2));
+    let probe = live.query(corpus.data.point(n_ingest / 2))?;
     assert!(
         probe.neighbors.first().map(|n| n.dist == 0.0).unwrap_or(false),
         "ingested point not searchable"
     );
     println!("freshness  probe of an ingested window returns itself at distance 0 ✓");
+
+    // Fault tolerance: the same shards served by TWO replicas each behind
+    // hedged, failure-aware dispatch. Mid-stream one replica of shard 0
+    // is killed outright; the dispatcher fails over to its sibling, so
+    // monitors keep getting COMPLETE answers (shed_nodes == 0). Killing
+    // the sibling too leaves the shard unservable — queries then complete
+    // within the request timeout as flagged partials instead of hanging.
+    println!();
+    println!("== replicated failover (2 replicas/shard; replica killed mid-run) ==");
+    let failover = FailoverConfig {
+        hedge_after: Duration::from_millis(5),
+        request_timeout: Duration::from_millis(250),
+        ..FailoverConfig::default()
+    };
+    let mut kill_switches: Vec<Arc<AtomicBool>> = Vec::new();
+    let mut sets: Vec<ReplicaSet> = Vec::new();
+    for (shard_id, range) in chunk_ranges(corpus.data.len(), nu).into_iter().enumerate() {
+        let shard = Arc::new(corpus.data.shard(range.clone()));
+        let replicas: Vec<Box<dyn NodeHandle>> = (0..2)
+            .map(|_| {
+                // Replicas share the shard slice and id base and build
+                // from the same deterministic params — bit-identical
+                // tables, so either replica answers for the shard.
+                let engines: Vec<Box<dyn DistanceEngine>> = (0..p)
+                    .map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>)
+                    .collect();
+                let node = LocalNode::spawn(
+                    shard_id,
+                    Arc::clone(&shard),
+                    range.start as u64,
+                    &params,
+                    p,
+                    engines,
+                );
+                let dead = Arc::new(AtomicBool::new(false));
+                kill_switches.push(Arc::clone(&dead));
+                Box::new(KillableNode { inner: node, dead }) as Box<dyn NodeHandle>
+            })
+            .collect();
+        sets.push(ReplicaSet::new(shard_id, replicas));
+    }
+    let replicated =
+        Orchestrator::start_replicated(sets, params.k, VoteConfig::default(), failover);
+    for i in 0..200usize {
+        if i == 100 {
+            // Replica 0 of shard 0 dies mid-run (kill_switches is laid
+            // out shard-major: [s0r0, s0r1, s1r0, s1r1]).
+            kill_switches[0].store(true, Ordering::Relaxed);
+            println!("   -- killed replica 0 of shard 0; queries continue --");
+        }
+        let r = replicated.query(corpus.queries.point(i % corpus.queries.len()))?;
+        assert_eq!(r.shed_nodes, 0, "sibling replica must cover the killed one");
+    }
+    let fs = replicated.failover_stats();
+    println!(
+        "failover   200/200 complete answers; {} failovers, {} hedges ({} won), \
+         {} down transitions, {} reconnect attempts",
+        fs.failovers, fs.hedges, fs.hedge_wins, fs.down_transitions, fs.reconnect_attempts
+    );
+    // Kill the sibling too: shard 0 is now unservable, but the monitor
+    // still gets an in-budget answer with the damage flagged.
+    kill_switches[1].store(true, Ordering::Relaxed);
+    let r = replicated.query(corpus.queries.point(0))?;
+    assert!(r.partial && r.shed_nodes >= 1, "dead shard must surface as a flagged partial");
+    println!(
+        "degraded   both replicas down: answer still in budget, shed_nodes={} partial={} ✓",
+        r.shed_nodes, r.partial
+    );
     Ok(())
 }

@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0;
     for i in 0..corpus.queries.len() {
         let truth = corpus.queries.labels[i];
-        let r = cluster.query(corpus.queries.point(i));
+        let r = cluster.query(corpus.queries.point(i))?;
         if r.prediction == truth {
             correct += 1;
         }

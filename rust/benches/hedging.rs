@@ -1,0 +1,197 @@
+//! §Perf: hedged requests vs a straggling replica.
+//!
+//! One shard replica is an induced straggler: every Nth request it
+//! sleeps `stall` before answering — the paper's late-answer-is-useless
+//! failure mode, in miniature. Three closed-loop scenarios over the same
+//! replicated cluster (ν=2 × r=2), one CSV (`results/hedging.csv`):
+//!
+//! * **clean** — no straggler, hedging off: the baseline tail.
+//! * **straggler unhedged** — hedging off: every stall lands in the
+//!   caller's latency, so p99/p999 inflate to ~`stall`.
+//! * **straggler hedged** — hedge after a small delay: the dispatcher
+//!   re-issues the late request to the twin and the first reply wins, so
+//!   the tail collapses back toward the hedge delay. `hedges` /
+//!   `hedge_wins` from [`Orchestrator::failover_stats`] ride along as
+//!   evidence it was the hedge, not luck.
+//!
+//! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and load and
+//! asserts the CSV holds every scenario row and that the hedged run
+//! actually hedged — artifact plumbing, not timing quality.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dslsh::coordinator::{FailoverConfig, NodeError, NodeHandle, Orchestrator, ReplicaSet};
+use dslsh::data::{build_corpus, CorpusConfig, Dataset, WindowSpec};
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::DistanceEngine;
+use dslsh::experiments::report::Table;
+use dslsh::knn::predict::VoteConfig;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::node::node::{LocalNode, NodeInfo, NodeReply};
+use dslsh::slsh::SlshParams;
+use dslsh::util::stats;
+use dslsh::util::threadpool::chunk_ranges;
+
+/// A replica that answers correctly but sleeps `stall` on every
+/// `every`-th request it receives — a real straggler (late, not wrong,
+/// not dead), so health stays `Up`/`Suspect` and only the hedge path can
+/// save the tail.
+struct StraggleNode {
+    inner: LocalNode,
+    every: usize,
+    stall: Duration,
+    seen: usize,
+}
+
+impl StraggleNode {
+    fn pause(&mut self) {
+        self.seen += 1;
+        if self.seen % self.every == 0 {
+            std::thread::sleep(self.stall);
+        }
+    }
+}
+
+impl NodeHandle for StraggleNode {
+    fn node_id(&self) -> usize {
+        LocalNode::node_id(&self.inner)
+    }
+
+    fn info(&self) -> NodeInfo {
+        self.inner.info().clone()
+    }
+
+    fn query(&mut self, q: &[f32]) -> Result<NodeReply, NodeError> {
+        self.pause();
+        Ok(self.inner.query(q))
+    }
+
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Result<Vec<NodeReply>, NodeError> {
+        self.pause();
+        Ok(self.inner.query_batch(qs, nq))
+    }
+}
+
+fn engines(p: usize) -> Vec<Box<dyn DistanceEngine>> {
+    (0..p).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect()
+}
+
+/// ν=2 shards × 2 replicas; replica 0 of shard 0 becomes the straggler
+/// when `straggle` is set. Heartbeats and request timeouts are parked
+/// far out so the hedge delay is the only timer in play.
+fn replicated(
+    data: &Dataset,
+    params: &SlshParams,
+    hedge_after: Duration,
+    straggle: Option<(usize, Duration)>,
+) -> Orchestrator {
+    let p = 2usize;
+    let mut sets = Vec::new();
+    for (shard, range) in chunk_ranges(data.len(), 2).into_iter().enumerate() {
+        let base = range.start as u64;
+        let slice = Arc::new(data.shard(range));
+        let mut replicas: Vec<Box<dyn NodeHandle>> = Vec::new();
+        for rep in 0..2 {
+            let node = LocalNode::spawn(shard, Arc::clone(&slice), base, params, p, engines(p));
+            match straggle {
+                Some((every, stall)) if rep == 0 && shard == 0 => {
+                    let s = StraggleNode { inner: node, every, stall, seen: 0 };
+                    replicas.push(Box::new(s));
+                }
+                _ => replicas.push(Box::new(node)),
+            }
+        }
+        sets.push(ReplicaSet::new(shard, replicas));
+    }
+    let failover = FailoverConfig {
+        hedge_after,
+        request_timeout: Duration::from_secs(30),
+        heartbeat_every: Duration::from_secs(3600),
+        ..FailoverConfig::default()
+    };
+    Orchestrator::start_replicated(sets, params.k, VoteConfig::default(), failover)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (corpus points, timed queries, straggle period, stall, hedge delay)
+    let (n, n_queries, every, stall, hedge) = if smoke {
+        (4_000, 40, 5, Duration::from_millis(5), Duration::from_millis(1))
+    } else {
+        (20_000, 400, 10, Duration::from_millis(20), Duration::from_millis(2))
+    };
+    let off = Duration::from_secs(30); // "hedging off": longer than any stall
+
+    println!("== hedging bench ({} mode) ==", if smoke { "smoke" } else { "full" });
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), n, 200, 42));
+    let (lo, hi) = corpus.data.value_range();
+    let params =
+        SlshParams::lsh_only(LayerSpec::outer_l1(corpus.data.dim, 40, 12, lo, hi, 7), 10);
+
+    let mut table = Table::new(
+        format!(
+            "Hedged fan-out vs one straggler — nu=2 x r=2, stall {} ms every {} requests",
+            stall.as_millis(),
+            every
+        ),
+        &["scenario", "hedge ms", "p50 ms", "p99 ms", "p999 ms", "hedges", "hedge wins"],
+    );
+
+    let scenarios: [(&str, Duration, Option<(usize, Duration)>); 3] = [
+        ("clean", off, None),
+        ("straggler unhedged", off, Some((every, stall))),
+        ("straggler hedged", hedge, Some((every, stall))),
+    ];
+    for (name, hedge_after, straggle) in scenarios {
+        let orch = replicated(&corpus.data, &params, hedge_after, straggle);
+        let mut lat = Vec::with_capacity(n_queries);
+        for i in 0..n_queries {
+            let q = corpus.queries.point(i % corpus.queries.len());
+            let t = Instant::now();
+            std::hint::black_box(orch.query(q).expect("query"));
+            lat.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let fo = orch.failover_stats();
+        println!(
+            "{name:>18}: p50 {:.2} ms  p99 {:.2} ms  p999 {:.2} ms  ({} hedges, {} wins)",
+            stats::percentile(&lat, 0.50),
+            stats::percentile(&lat, 0.99),
+            stats::percentile(&lat, 0.999),
+            fo.hedges,
+            fo.hedge_wins,
+        );
+        let hedge_label = if hedge_after == off {
+            "off".to_string()
+        } else {
+            hedge_after.as_millis().to_string()
+        };
+        table.row(vec![
+            name.into(),
+            hedge_label,
+            format!("{:.3}", stats::percentile(&lat, 0.50)),
+            format!("{:.3}", stats::percentile(&lat, 0.99)),
+            format!("{:.3}", stats::percentile(&lat, 0.999)),
+            fo.hedges.to_string(),
+            fo.hedge_wins.to_string(),
+        ]);
+        if smoke && name == "straggler hedged" {
+            assert!(fo.hedges >= 1, "hedged scenario never hedged a stalled request");
+        }
+    }
+
+    println!();
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "hedging").expect("saving csv");
+    println!("saved results/hedging.csv");
+
+    if smoke {
+        let csv = std::fs::read_to_string("results/hedging.csv")
+            .expect("results/hedging.csv must exist");
+        assert!(
+            csv.lines().count() >= 1 + scenarios.len(),
+            "smoke: hedging.csv must hold every scenario row:\n{csv}"
+        );
+        println!("smoke OK: hedging.csv has {} lines", csv.lines().count());
+    }
+}

@@ -111,7 +111,8 @@ fn main() {
         while at < preload {
             let take = 512.min(preload - at);
             cluster
-                .insert_batch(&d.points[at * d.dim..(at + take) * d.dim], &d.labels[at..at + take]);
+                .insert_batch(&d.points[at * d.dim..(at + take) * d.dim], &d.labels[at..at + take])
+                .expect("preload insert");
             at += take;
         }
         let done = std::sync::atomic::AtomicBool::new(false);
@@ -129,10 +130,12 @@ fn main() {
                         std::hint::spin_loop();
                     }
                     let take = ingest_batch.min(d.len() - at);
-                    cluster.insert_batch(
-                        &d.points[at * d.dim..(at + take) * d.dim],
-                        &d.labels[at..at + take],
-                    );
+                    cluster
+                        .insert_batch(
+                            &d.points[at * d.dim..(at + take) * d.dim],
+                            &d.labels[at..at + take],
+                        )
+                        .expect("paced insert");
                     sent += take;
                     at += take;
                     if at >= d.len() {
@@ -145,7 +148,7 @@ fn main() {
                 .map(|i| {
                     let q = corpus.queries.point(i % corpus.queries.len());
                     let ts = Instant::now();
-                    let r = cluster.query(q);
+                    let r = cluster.query(q).expect("paced query");
                     std::hint::black_box(r.max_comparisons);
                     ts.elapsed().as_secs_f64() * 1e3
                 })

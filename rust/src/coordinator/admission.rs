@@ -133,7 +133,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::orchestrator::QueryResult;
+use crate::coordinator::orchestrator::{ClusterError, QueryResult};
 use crate::runtime::service::{CutCounters, LaneCounters, QueueStats};
 use crate::util::rng::Xoshiro256;
 
@@ -539,6 +539,11 @@ pub enum AdmissionError {
     /// The request was admitted but the dispatcher died before resolving
     /// it (only during teardown of the underlying cluster).
     Canceled,
+    /// The request was admitted and dispatched, but the cluster failed it
+    /// (see [`ClusterError`]) — the typed replacement for the old
+    /// panic-on-dead-cluster path: callers get the error through their
+    /// [`Ticket`] instead of a poisoned process.
+    Cluster(ClusterError),
 }
 
 impl std::fmt::Display for AdmissionError {
@@ -547,6 +552,7 @@ impl std::fmt::Display for AdmissionError {
             AdmissionError::QueueFull => write!(f, "admission queue full"),
             AdmissionError::ShuttingDown => write!(f, "admission queue shutting down"),
             AdmissionError::Canceled => write!(f, "request canceled during teardown"),
+            AdmissionError::Cluster(e) => write!(f, "cluster failed the batch: {e}"),
         }
     }
 }
@@ -862,7 +868,9 @@ impl AdmissionQueue {
     /// returns exactly `nq` results in order.
     pub fn start<D>(cfg: AdmissionConfig, dispatch: D) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static,
+        D: FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError>
+            + Send
+            + 'static,
     {
         AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(SystemClock::new()))
     }
@@ -874,7 +882,9 @@ impl AdmissionQueue {
         clock: Arc<dyn Clock>,
     ) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static,
+        D: FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError>
+            + Send
+            + 'static,
     {
         assert!(cfg.dim > 0, "admission dim must be positive");
         assert!(cfg.max_batch > 0, "max_batch must be positive");
@@ -932,7 +942,7 @@ impl AdmissionQueue {
                     for p in &batch {
                         flat.extend_from_slice(&p.q);
                     }
-                    let results = dispatch(flat, nq, budget, class);
+                    let outcome = dispatch(flat, nq, budget, class);
                     // Per-class overrun attribution: every request whose
                     // deadline passed before its batch resolved is a miss
                     // the lane counters must surface.
@@ -948,6 +958,19 @@ impl AdmissionQueue {
                             shared.lane_counters[idx].record_overruns(n);
                         }
                     }
+                    let results = match outcome {
+                        Ok(results) => results,
+                        Err(e) => {
+                            // The cluster failed the whole batch (e.g. it
+                            // was dropped mid-flight): every rider learns
+                            // why through its ticket; nothing panics,
+                            // nothing hangs.
+                            for p in batch {
+                                p.slot.fulfill(Err(AdmissionError::Cluster(e)));
+                            }
+                            continue;
+                        }
+                    };
                     if results.len() == nq {
                         // Per-class partial/shed attribution: enforcement
                         // outcomes are health signals, surfaced on the
@@ -1249,14 +1272,19 @@ impl Drop for AdmissionQueue {
 /// [`Orchestrator::enable_admission`]: crate::coordinator::Orchestrator::enable_admission
 pub(crate) fn root_dispatcher(
     root_tx: Sender<crate::coordinator::orchestrator::RootRequest>,
-) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static {
+) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError> + Send + 'static
+{
     use crate::coordinator::orchestrator::RootRequest;
-    move |qs: Vec<f32>, nq: usize, budget: Budget, class: Class| -> Vec<QueryResult> {
+    move |qs: Vec<f32>,
+          nq: usize,
+          budget: Budget,
+          class: Class|
+          -> Result<Vec<QueryResult>, ClusterError> {
         let (tx, rx) = channel();
-        if root_tx.send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx }).is_err() {
-            return Vec::new();
-        }
-        rx.recv().unwrap_or_default()
+        root_tx
+            .send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx })
+            .map_err(|_| ClusterError::Shutdown)?;
+        rx.recv().map_err(|_| ClusterError::Shutdown)
     }
 }
 
@@ -1302,9 +1330,14 @@ mod tests {
 
     /// Fake dispatcher that echoes each query's first coordinate back in
     /// `positive_share` — proves result↔caller alignment end to end.
-    fn echo(flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class) -> Vec<QueryResult> {
+    fn echo(
+        flat: Vec<f32>,
+        nq: usize,
+        _budget: Budget,
+        _class: Class,
+    ) -> Result<Vec<QueryResult>, ClusterError> {
         let dim = if nq == 0 { 0 } else { flat.len() / nq };
-        (0..nq)
+        Ok((0..nq)
             .map(|i| QueryResult {
                 qid: i as u64,
                 neighbors: Vec::new(),
@@ -1316,7 +1349,7 @@ mod tests {
                 partial: false,
                 shed_nodes: 0,
             })
-            .collect()
+            .collect())
     }
 
     // -- table-driven cut decisions (pure, MockClock-style time values) --
@@ -1646,6 +1679,30 @@ mod tests {
         assert_eq!(queue_stats.depth(), 0);
         assert!(cut_counters.drain() >= 1, "drain cut must be recorded");
         assert_eq!(cut_counters.deadline(), 0, "frozen clock cannot deadline-cut");
+    }
+
+    #[test]
+    fn cluster_failure_surfaces_through_tickets() {
+        // A dispatch that fails (dead cluster) must fulfill every rider
+        // of the batch with a typed error — no panic, no hang, and the
+        // queue keeps serving later batches.
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class| {
+            if flat[0] < 0.0 {
+                Err(ClusterError::Shutdown)
+            } else {
+                echo(flat, nq, b, c)
+            }
+        };
+        let cfg = AdmissionConfig::new(1, 2);
+        let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
+        let bad1 = q.submit(&[-1.0], FAR).unwrap();
+        let bad2 = q.submit(&[-2.0], FAR).unwrap();
+        assert_eq!(bad1.wait().unwrap_err(), AdmissionError::Cluster(ClusterError::Shutdown));
+        assert_eq!(bad2.wait().unwrap_err(), AdmissionError::Cluster(ClusterError::Shutdown));
+        let good1 = q.submit(&[3.0], FAR).unwrap();
+        let good2 = q.submit(&[4.0], FAR).unwrap();
+        assert_eq!(good1.wait().unwrap().positive_share, 3.0);
+        assert_eq!(good2.wait().unwrap().positive_share, 4.0);
     }
 
     #[test]

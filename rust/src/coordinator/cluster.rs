@@ -1,8 +1,17 @@
 //! Cluster assembly — the Root's construction duties (paper §3): assign
 //! each node its O(n/ν) shard of the dataset and broadcast the outer hash
 //! specification so every node uses the same hash-family instances.
+//!
+//! With [`ClusterConfig::with_replication`] each shard is served by a
+//! [`ReplicaSet`] of N interchangeable nodes built from the same shard
+//! slice, id base and hash spec — so replicas hold bit-identical tables
+//! and any one of them can answer for the shard. The per-replica
+//! [`Health`] machine, hedge/timeout policy and reconnect backoff are
+//! configured here ([`FailoverConfig`]) and enforced by the shard
+//! dispatchers in [`crate::coordinator::orchestrator`].
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -36,6 +45,113 @@ impl EngineKind {
     }
 }
 
+/// Per-replica health as the shard dispatcher sees it.
+///
+/// * `Up` — answering normally; preferred for dispatch.
+/// * `Suspect` — alive but slow (a request of its outlived the hedge
+///   delay or the request timeout) or freshly reconnected; deprioritized
+///   but still routable. Any successful reply promotes back to `Up`.
+/// * `Down` — a request or heartbeat failed outright (broken transport,
+///   node error); excluded from routing until a
+///   [`reconnect`](NodeHandle::reconnect) succeeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Up,
+    Suspect,
+    Down,
+}
+
+/// Failure-handling policy for the shard dispatchers: hedge and timeout
+/// deadlines, heartbeat cadence, reconnect backoff. All decisions read
+/// the orchestrator's injected [`Clock`](crate::util::clock::Clock), so
+/// every one of these is pinnable under a `MockClock` in tests.
+///
+/// The defaults are deliberately conservative so an unreplicated cluster
+/// behaves exactly as before: a 250 ms hedge delay never fires on
+/// in-process microsecond queries, and with one replica per shard there
+/// is nobody to hedge to anyway.
+#[derive(Debug, Clone)]
+pub struct FailoverConfig {
+    /// Hedge a query to the next replica when the preferred one has not
+    /// answered within this delay.
+    pub hedge_after: Duration,
+    /// Give up on a request entirely after this long and synthesize a
+    /// shed reply (queries) or report the acks gathered so far (inserts).
+    pub request_timeout: Duration,
+    /// Liveness/seal-poll heartbeat cadence per replica.
+    pub heartbeat_every: Duration,
+    /// First reconnect attempt fires this long after a replica goes
+    /// `Down`; attempt `n` waits `base · 2ⁿ` (capped, jittered).
+    pub reconnect_base: Duration,
+    /// Ceiling on the exponential reconnect delay (before jitter).
+    pub reconnect_cap: Duration,
+    /// Jitter fraction in `[0, 1]`: attempt `n`'s delay is stretched by
+    /// up to this fraction, deterministically from `seed` and `n` — so
+    /// replicas that died together don't re-dial in lockstep, yet tests
+    /// can assert the exact schedule.
+    pub reconnect_jitter: f64,
+    /// Seed for the deterministic jitter.
+    pub seed: u64,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> FailoverConfig {
+        FailoverConfig {
+            hedge_after: Duration::from_millis(250),
+            request_timeout: Duration::from_secs(10),
+            heartbeat_every: Duration::from_millis(500),
+            reconnect_base: Duration::from_millis(50),
+            reconnect_cap: Duration::from_secs(5),
+            reconnect_jitter: 0.2,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// SplitMix64 — tiny, seedable, good enough for jitter.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl FailoverConfig {
+    /// Delay before reconnect attempt `attempt` (0-based): capped
+    /// exponential backoff `min(base · 2ᵃ, cap)` stretched by a
+    /// deterministic jitter in `[0, reconnect_jitter]` derived from
+    /// `(seed, attempt)`. Pure — the fault-tolerance tests assert the
+    /// schedule exactly.
+    pub fn reconnect_delay(&self, attempt: u32) -> Duration {
+        let base = self.reconnect_base.as_nanos();
+        let exp = base.saturating_mul(1u128 << attempt.min(63));
+        let capped = exp.min(self.reconnect_cap.as_nanos());
+        let h = splitmix64(self.seed ^ u64::from(attempt).wrapping_mul(0x9E3779B97F4A7C15));
+        let frac = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let jitter = (capped as f64 * self.reconnect_jitter.clamp(0.0, 1.0) * frac) as u128;
+        let total = capped.saturating_add(jitter).min(u64::MAX as u128) as u64;
+        Duration::from_nanos(total)
+    }
+}
+
+/// N interchangeable nodes serving the same shard: same slice, same id
+/// base, same hash spec — bit-identical tables, so the dispatcher can
+/// route a query to ANY of them (and hedge/fail over among them) without
+/// changing the answer. Inserts fan out to all live replicas to keep
+/// them identical.
+pub struct ReplicaSet {
+    /// The shard these replicas serve; also the reducer's ordering key.
+    pub shard_id: usize,
+    pub replicas: Vec<Box<dyn NodeHandle>>,
+}
+
+impl ReplicaSet {
+    pub fn new(shard_id: usize, replicas: Vec<Box<dyn NodeHandle>>) -> ReplicaSet {
+        assert!(!replicas.is_empty(), "replica set for shard {shard_id} is empty");
+        ReplicaSet { shard_id, replicas }
+    }
+}
+
 /// Cluster topology + engine choice.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -45,15 +161,39 @@ pub struct ClusterConfig {
     pub p: usize,
     pub engine: EngineKind,
     pub vote: VoteConfig,
+    /// Replicas per shard (≥ 1). One means no replication — the exact
+    /// pre-replication topology.
+    pub replication: usize,
+    /// Hedge/timeout/heartbeat/backoff policy for the shard dispatchers.
+    pub failover: FailoverConfig,
 }
 
 impl ClusterConfig {
     pub fn new(nu: usize, p: usize) -> Self {
-        Self { nu, p, engine: EngineKind::Native, vote: VoteConfig::default() }
+        Self {
+            nu,
+            p,
+            engine: EngineKind::Native,
+            vote: VoteConfig::default(),
+            replication: 1,
+            failover: FailoverConfig::default(),
+        }
     }
 
     pub fn with_engine(mut self, engine: EngineKind) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Serve every shard with `r` interchangeable replicas.
+    pub fn with_replication(mut self, r: usize) -> Self {
+        assert!(r >= 1, "replication factor must be at least 1");
+        self.replication = r;
+        self
+    }
+
+    pub fn with_failover(mut self, failover: FailoverConfig) -> Self {
+        self.failover = failover;
         self
     }
 }
@@ -101,17 +241,31 @@ fn engine_setup(
 /// share of the dataset"); global point ids are shard-offset so the
 /// Reducer's K-NN refers to positions in `data`.
 pub fn build_cluster(data: &Dataset, params: &SlshParams, cfg: &ClusterConfig) -> Result<Cluster> {
-    assert!(cfg.nu > 0 && cfg.p > 0);
+    assert!(cfg.nu > 0 && cfg.p > 0 && cfg.replication > 0);
     let (xla, make_engines) = engine_setup(cfg.engine)?;
-    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::with_capacity(cfg.nu);
+    let mut sets: Vec<ReplicaSet> = Vec::with_capacity(cfg.nu);
     for (node_id, range) in chunk_ranges(data.len(), cfg.nu).into_iter().enumerate() {
         let id_base = range.start as u64;
         let shard = Arc::new(data.shard(range));
-        let node =
-            LocalNode::spawn(node_id, shard, id_base, params, cfg.p, make_engines(cfg.p));
-        nodes.push(Box::new(node));
+        // Replicas share the shard slice (Arc) and the id base, and are
+        // built from the same deterministic params — bit-identical
+        // tables, so any replica answers for the shard.
+        let replicas: Vec<Box<dyn NodeHandle>> = (0..cfg.replication)
+            .map(|_| {
+                Box::new(LocalNode::spawn(
+                    node_id,
+                    Arc::clone(&shard),
+                    id_base,
+                    params,
+                    cfg.p,
+                    make_engines(cfg.p),
+                )) as Box<dyn NodeHandle>
+            })
+            .collect();
+        sets.push(ReplicaSet::new(node_id, replicas));
     }
-    let orchestrator = Orchestrator::start(nodes, params.k, cfg.vote.clone());
+    let orchestrator =
+        Orchestrator::start_replicated(sets, params.k, cfg.vote.clone(), cfg.failover.clone());
     Ok(Cluster { orchestrator, _xla: xla })
 }
 
@@ -126,22 +280,31 @@ pub fn build_live_cluster(
     cfg: &ClusterConfig,
     policy: SealPolicy,
 ) -> Result<Cluster> {
-    assert!(cfg.nu > 0 && cfg.p > 0);
+    assert!(cfg.nu > 0 && cfg.p > 0 && cfg.replication > 0);
     let (xla, make_engines) = engine_setup(cfg.engine)?;
-    let mut nodes: Vec<Box<dyn NodeHandle>> = Vec::with_capacity(cfg.nu);
+    let mut sets: Vec<ReplicaSet> = Vec::with_capacity(cfg.nu);
     for node_id in 0..cfg.nu {
-        let node = LocalNode::spawn_live(
-            node_id,
-            node_id as u64 * LIVE_ID_STRIDE,
-            params,
-            cfg.p,
-            make_engines(cfg.p),
-            Arc::new(SystemClock::new()),
-            policy,
-        );
-        nodes.push(Box::new(node));
+        // Replicas of a live shard each own a store, but mint ids from
+        // the same base and apply the same batches in the same order
+        // (the dispatcher fans every insert to all live replicas), so
+        // they stay bit-identical.
+        let replicas: Vec<Box<dyn NodeHandle>> = (0..cfg.replication)
+            .map(|_| {
+                Box::new(LocalNode::spawn_live(
+                    node_id,
+                    node_id as u64 * LIVE_ID_STRIDE,
+                    params,
+                    cfg.p,
+                    make_engines(cfg.p),
+                    Arc::new(SystemClock::new()),
+                    policy,
+                )) as Box<dyn NodeHandle>
+            })
+            .collect();
+        sets.push(ReplicaSet::new(node_id, replicas));
     }
-    let orchestrator = Orchestrator::start(nodes, params.k, cfg.vote.clone());
+    let orchestrator =
+        Orchestrator::start_replicated(sets, params.k, cfg.vote.clone(), cfg.failover.clone());
     Ok(Cluster { orchestrator, _xla: xla })
 }
 
@@ -166,7 +329,7 @@ mod tests {
         let cluster = build_cluster(&c.data, &params(&c.data), &ClusterConfig::new(2, 2)).unwrap();
         assert_eq!(cluster.num_nodes(), 2);
         assert_eq!(cluster.total_processors(), 4);
-        let r = cluster.query(c.queries.point(0));
+        let r = cluster.query(c.queries.point(0)).unwrap();
         assert!(r.neighbors.len() <= 10);
         assert_eq!(r.per_node_comparisons.len(), 2);
         assert_eq!(r.per_node_comparisons[0].len(), 2);
@@ -179,7 +342,7 @@ mod tests {
         let cluster = build_cluster(&c.data, &params(&c.data), &ClusterConfig::new(3, 1)).unwrap();
         // Query with dataset point 2500 (lives in the last shard): its own
         // global id must come back at distance 0.
-        let r = cluster.query(c.data.point(2500));
+        let r = cluster.query(c.data.point(2500)).unwrap();
         assert_eq!(r.neighbors[0].id, 2500);
         assert_eq!(r.neighbors[0].dist, 0.0);
         // Neighbor labels must match the dataset at the global id.
@@ -200,7 +363,7 @@ mod tests {
             let cluster = build_cluster(&c.data, &p, &ClusterConfig::new(nu, pc)).unwrap();
             let answers: Vec<(bool, u64)> = (0..15)
                 .map(|i| {
-                    let r = cluster.query(c.queries.point(i));
+                    let r = cluster.query(c.queries.point(i)).unwrap();
                     (r.prediction, r.neighbors.first().map(|n| n.id).unwrap_or(u64::MAX))
                 })
                 .collect();
@@ -221,10 +384,12 @@ mod tests {
         let batch = 250usize;
         for b in 0..8 {
             let at = b * batch;
-            let out = cluster.insert_batch(
-                &d.points[at * d.dim..(at + batch) * d.dim],
-                &d.labels[at..at + batch],
-            );
+            let out = cluster
+                .insert_batch(
+                    &d.points[at * d.dim..(at + batch) * d.dim],
+                    &d.labels[at..at + batch],
+                )
+                .unwrap();
             assert_eq!(out.node, b % 2, "round-robin routing");
             assert_eq!(out.accepted, batch as u64);
             assert_eq!(out.node_total, ((b / 2) as u64 + 1) * batch as u64);
@@ -239,7 +404,7 @@ mod tests {
         for probe in [0usize, 260, 990, 1999] {
             let (b, off) = (probe / batch, probe % batch);
             let want = (b % 2) as u64 * LIVE_ID_STRIDE + ((b / 2) * batch + off) as u64;
-            let r = cluster.query(d.point(probe));
+            let r = cluster.query(d.point(probe)).unwrap();
             assert!(
                 r.neighbors.iter().any(|n| n.id == want && n.dist == 0.0),
                 "probe {probe}: want id {want} in {:?}",
@@ -256,7 +421,7 @@ mod tests {
         for (nu, pc) in [(1usize, 2usize), (2, 2), (4, 2)] {
             let cluster = build_cluster(&c.data, &p, &ClusterConfig::new(nu, pc)).unwrap();
             let mut comps: Vec<f64> = (0..20)
-                .map(|i| cluster.query(c.queries.point(i)).max_comparisons as f64)
+                .map(|i| cluster.query(c.queries.point(i)).unwrap().max_comparisons as f64)
                 .collect();
             comps.sort_by(|a, b| a.partial_cmp(b).unwrap());
             meds.push(comps[comps.len() / 2]);
@@ -265,5 +430,71 @@ mod tests {
             meds[2] < meds[0],
             "scaling failed: medians {meds:?} should decrease with pν"
         );
+    }
+
+    #[test]
+    fn reconnect_backoff_schedule_is_exact_without_jitter() {
+        let cfg = FailoverConfig {
+            reconnect_base: Duration::from_millis(10),
+            reconnect_cap: Duration::from_millis(160),
+            reconnect_jitter: 0.0,
+            ..FailoverConfig::default()
+        };
+        // 10, 20, 40, 80, 160, then pinned at the 160 ms cap.
+        let want = [10u64, 20, 40, 80, 160, 160, 160];
+        for (attempt, w) in want.iter().enumerate() {
+            assert_eq!(
+                cfg.reconnect_delay(attempt as u32),
+                Duration::from_millis(*w),
+                "attempt {attempt}"
+            );
+        }
+        // Huge attempt numbers must not overflow past the cap.
+        assert_eq!(cfg.reconnect_delay(u32::MAX), Duration::from_millis(160));
+    }
+
+    #[test]
+    fn reconnect_jitter_is_deterministic_and_bounded() {
+        let cfg = FailoverConfig {
+            reconnect_base: Duration::from_millis(100),
+            reconnect_cap: Duration::from_secs(10),
+            reconnect_jitter: 0.5,
+            seed: 42,
+            ..FailoverConfig::default()
+        };
+        for attempt in 0..8u32 {
+            let d = cfg.reconnect_delay(attempt);
+            let floor = Duration::from_millis(100 * (1 << attempt));
+            let ceil = floor + floor.mul_f64(0.5);
+            assert!(d >= floor && d <= ceil, "attempt {attempt}: {d:?} outside [{floor:?}, {ceil:?}]");
+            // Same (seed, attempt) → same delay, different seed → (almost
+            // surely) different delay.
+            assert_eq!(d, cfg.reconnect_delay(attempt));
+        }
+        let other = FailoverConfig { seed: 43, ..cfg };
+        assert_ne!(other.reconnect_delay(0), cfg.reconnect_delay(0));
+    }
+
+    #[test]
+    fn replicated_cluster_matches_unreplicated_bit_for_bit() {
+        // All replicas healthy: replication must be invisible — same
+        // neighbors, same comparison counts, no partials, no sheds.
+        let c = corpus();
+        let p = params(&c.data);
+        let plain = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
+        let replicated =
+            build_cluster(&c.data, &p, &ClusterConfig::new(2, 2).with_replication(2)).unwrap();
+        assert_eq!(replicated.num_nodes(), 2, "replication must not change shard count");
+        for i in 0..10 {
+            let a = plain.query(c.queries.point(i)).unwrap();
+            let b = replicated.query(c.queries.point(i)).unwrap();
+            assert_eq!(a.neighbors, b.neighbors, "query {i}");
+            assert_eq!(a.max_comparisons, b.max_comparisons, "query {i}");
+            assert_eq!(a.per_node_comparisons, b.per_node_comparisons, "query {i}");
+            assert_eq!(a.partial, b.partial, "query {i}");
+            assert_eq!(a.shed_nodes, b.shed_nodes, "query {i}");
+        }
+        assert_eq!(replicated.failover_stats().synthesized_sheds, 0);
+        assert_eq!(replicated.failover_stats().failovers, 0);
     }
 }

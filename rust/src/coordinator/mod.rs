@@ -1,6 +1,36 @@
 //! The distributed coordination layer (paper Figure 1): the Orchestrator's
 //! Root / Forwarder / Reducer processes, the deadline-aware admission
-//! queue in front of them, and cluster assembly.
+//! queue in front of them, and cluster assembly with per-shard replica
+//! groups.
+//!
+//! # Failure-semantics contract
+//!
+//! The coordination layer's promise to callers, in order of strength:
+//!
+//! 1. **No panic, no hang.** Node death never aborts the process or
+//!    stalls a query: every shard dispatcher guarantees exactly one reply
+//!    per (shard, query), synthesizing a shed reply when no replica can
+//!    answer. The only caller-visible error on the query path is
+//!    [`ClusterError::Shutdown`] — the cluster itself was dropped.
+//! 2. **Degrade, don't wait.** A dead or straggling replica is routed
+//!    around: hedged to a sibling after
+//!    [`FailoverConfig::hedge_after`], failed over on transport error,
+//!    and written off (shed) at [`FailoverConfig::request_timeout`]. The
+//!    caller reads the damage from [`QueryResult::shed_nodes`] /
+//!    [`QueryResult::partial`] — the same vocabulary node-side budget
+//!    enforcement uses, because "a shard contributed nothing" means the
+//!    same thing to a monitor either way.
+//! 3. **Never silently drop ingest.** Inserts fan out to every live
+//!    replica of the target shard; zero acknowledgements is a hard
+//!    [`ClusterError::ShardUnavailable`], and partial replication is
+//!    visible in [`InsertOutcome::replicas_acked`].
+//! 4. **Health is observable and recoverable.** Replicas move `Up` →
+//!    `Suspect` → `Down` ([`Health`]) on request outcomes and
+//!    heartbeats; `Down` replicas are re-dialed on a capped, jittered
+//!    exponential backoff ([`FailoverConfig::reconnect_delay`]). All of
+//!    it is metered ([`Orchestrator::failover_stats`]) and every timing
+//!    decision reads the injectable clock, so the whole contract is
+//!    pinned by deterministic tests (`rust/tests/fault_tolerance.rs`).
 
 pub mod admission;
 pub mod cluster;
@@ -11,5 +41,10 @@ pub use admission::{
     AdmissionStats, Budget, BudgetPolicy, Class, Clock, CutReason, LaneStats, MockClock,
     SystemClock, TickClock, Ticket,
 };
-pub use cluster::{build_cluster, build_live_cluster, Cluster, ClusterConfig, EngineKind};
-pub use orchestrator::{InsertOutcome, NodeHandle, Orchestrator, QueryResult, NO_BUDGET};
+pub use cluster::{
+    build_cluster, build_live_cluster, Cluster, ClusterConfig, EngineKind, FailoverConfig, Health,
+    ReplicaSet,
+};
+pub use orchestrator::{
+    ClusterError, InsertOutcome, NodeError, NodeHandle, Orchestrator, QueryResult, NO_BUDGET,
+};

@@ -1,16 +1,56 @@
 //! The Orchestrator (paper Figure 1, §3): Root, Forwarder and Reducer
-//! processes coordinating ν SLSH nodes.
+//! processes coordinating ν SLSH shards, each served by a replica group.
 //!
 //! * **Root** — the public API; coordinates query resolution (and, at
 //!   construction time, shard assignment + hash-spec broadcast, done in
 //!   [`crate::coordinator::cluster`]).
-//! * **Forwarder** — broadcasts each query to every node.
-//! * **Reducer** — gathers the ν node-local K-NN sets and keeps the K
+//! * **Forwarder** — broadcasts each query to every shard dispatcher.
+//! * **Reducer** — gathers the ν shard-local K-NN sets and keeps the K
 //!   closest (reduction), then the Root turns them into the prediction.
 //!
-//! All three are real threads connected by channels, mirroring the cloud
-//! deployment's processes; nodes are [`NodeHandle`]s so the same
-//! Orchestrator drives in-process thread-group nodes and remote TCP nodes.
+//! # Failure semantics
+//!
+//! Every shard is served by a [`ReplicaSet`] of interchangeable nodes
+//! behind a *shard dispatcher* thread — the failure-containment seam:
+//!
+//! * **Health.** Each replica carries a [`Health`] state (`Up` →
+//!   `Suspect` → `Down`) driven by request outcomes and a periodic
+//!   [`heartbeat`](NodeHandle::heartbeat) on the injectable
+//!   [`Clock`]. Transport errors mark a replica `Down` (excluded from
+//!   routing); a request that outlives the hedge delay demotes it to
+//!   `Suspect` (deprioritized); any successful reply promotes back to
+//!   `Up`.
+//! * **Hedged reads.** A query is dispatched to the best-ranked replica;
+//!   if no reply arrives within [`FailoverConfig::hedge_after`] it is
+//!   *hedged* to the next replica. First reply wins; the loser's late
+//!   reply is drained and ignored (it still refreshes health).
+//! * **Graceful degradation.** When a replica fails mid-request the
+//!   dispatcher fails over to the next one; when *no* replica can answer
+//!   (all `Down`, or [`FailoverConfig::request_timeout`] elapses) the
+//!   dispatcher synthesizes a shed [`NodeReply`] — exactly the shape a
+//!   node-side budget shed produces — so the Reducer still completes the
+//!   query and the caller sees [`QueryResult::shed_nodes`]` > 0` instead
+//!   of a hang or a panic. A query NEVER errors because a shard is
+//!   unavailable; it degrades to a partial answer.
+//! * **Recovery.** `Down` replicas are re-dialed through
+//!   [`NodeHandle::reconnect`] on a capped exponential backoff with
+//!   deterministic jitter ([`FailoverConfig::reconnect_delay`]).
+//! * **Ingest.** Inserts fan out to every live replica of the target
+//!   shard (replicas stay bit-identical because they apply the same
+//!   batches in the same order from the same id base); the ack reports
+//!   how many replicas made the batch durable. Zero acks IS an error —
+//!   [`ClusterError::ShardUnavailable`] — because dropping ICU data
+//!   silently is worse than failing loudly.
+//!
+//! The dispatcher guarantees exactly one reply per (shard, query) —
+//! possibly synthesized — so the Reducer's `received == ν` completion
+//! rule holds even with dead nodes, and the Root's qid-monotone
+//! sequencing is preserved.
+//!
+//! All coordination processes are real threads connected by channels,
+//! mirroring the cloud deployment; nodes are [`NodeHandle`]s so the same
+//! Orchestrator drives in-process thread-group nodes and remote TCP
+//! nodes (which reconnect with the same backoff schedule).
 //!
 //! Queries enter through three doors: [`Orchestrator::query`] (one query,
 //! the paper's ICU latency model), [`Orchestrator::query_batch`] (a
@@ -19,10 +59,16 @@
 //! admission layer — [`Orchestrator::submit`], which coalesces
 //! *independent* callers into shared cuts under per-request latency
 //! budgets (see [`crate::coordinator::admission`]).
+//!
+//! [`ReplicaSet`]: crate::coordinator::cluster::ReplicaSet
+//! [`Health`]: crate::coordinator::cluster::Health
+//! [`FailoverConfig::hedge_after`]: crate::coordinator::cluster::FailoverConfig
+//! [`FailoverConfig::request_timeout`]: crate::coordinator::cluster::FailoverConfig
+//! [`FailoverConfig::reconnect_delay`]: crate::coordinator::cluster::FailoverConfig::reconnect_delay
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -30,21 +76,80 @@ use std::time::Duration;
 use crate::coordinator::admission::{
     root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Budget, Class, Ticket,
 };
+use crate::coordinator::cluster::{FailoverConfig, Health, ReplicaSet};
 use crate::knn::heap::{Neighbor, TopK};
 use crate::knn::predict::{positive_share, VoteConfig};
-use crate::node::node::{InsertReply, NodeInfo, NodeReply};
-use crate::runtime::service::{IngestCounters, IngestStats};
+use crate::node::node::{HeartbeatReply, InsertReply, NodeInfo, NodeReply};
+use crate::runtime::service::{FailoverCounters, FailoverStats, IngestCounters, IngestStats};
+use crate::util::clock::{Clock, SystemClock};
 
 /// Sentinel budget for batches that carry no latency deadline (direct
 /// [`Orchestrator::query_batch`] calls, as opposed to admission cuts).
 pub const NO_BUDGET: u64 = u64::MAX;
 
-/// Abstraction over a node the Forwarder can reach (in-process thread
-/// group or TCP-remote process).
+/// A transport- or node-level failure talking to ONE replica: the
+/// connection broke, the frame was malformed, the node rejected the
+/// request. Node errors never escape the shard dispatcher as-is — they
+/// drive health transitions (the replica goes `Down`) and either
+/// failover or degradation to a synthesized shed reply.
+#[derive(Debug, Clone)]
+pub struct NodeError {
+    /// Node that failed.
+    pub node_id: usize,
+    /// Human-readable failure description (best effort; for logs).
+    pub detail: String,
+}
+
+impl NodeError {
+    pub fn new(node_id: usize, detail: impl Into<String>) -> NodeError {
+        NodeError { node_id, detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for NodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node {}: {}", self.node_id, self.detail)
+    }
+}
+
+impl std::error::Error for NodeError {}
+
+/// A cluster-level failure the caller must handle. Queries only ever
+/// return [`ClusterError::Shutdown`] (a dead shard degrades to
+/// [`QueryResult::shed_nodes`], never an error); inserts additionally
+/// return [`ClusterError::ShardUnavailable`] when zero replicas of the
+/// target shard acknowledged the batch — the data is NOT durable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterError {
+    /// The orchestrator's coordination threads are gone (the cluster was
+    /// dropped, or a coordination thread died). Retrying cannot succeed.
+    Shutdown,
+    /// No replica of shard `shard` accepted the request.
+    ShardUnavailable { shard: usize },
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Shutdown => write!(f, "cluster is shut down"),
+            ClusterError::ShardUnavailable { shard } => {
+                write!(f, "no live replica of shard {shard}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Abstraction over a node the shard dispatcher can reach (in-process
+/// thread group or TCP-remote process). Every request is fallible: a
+/// `NodeError` means THIS replica failed, and the dispatcher routes
+/// around it — implementations must return errors, not panic, on broken
+/// transports.
 pub trait NodeHandle: Send {
     fn node_id(&self) -> usize;
     fn info(&self) -> NodeInfo;
-    fn query(&mut self, q: &[f32]) -> NodeReply;
+    fn query(&mut self, q: &[f32]) -> Result<NodeReply, NodeError>;
 
     /// Resolve a block of `nq` queries (`qs` row-major `nq × dim` — one
     /// shared flat buffer end to end, so batching adds no per-query or
@@ -52,9 +157,9 @@ pub trait NodeHandle: Send {
     /// trips; in-process and TCP nodes override it to ship the whole
     /// block at once and ride the cores' batched resolution path
     /// (batched hashing + reused scratch arena).
-    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Result<Vec<NodeReply>, NodeError> {
         if nq == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         debug_assert_eq!(qs.len() % nq, 0);
         let dim = qs.len() / nq;
@@ -77,7 +182,7 @@ pub trait NodeHandle: Send {
         nq: usize,
         _budget: Budget,
         _class: Class,
-    ) -> Vec<NodeReply> {
+    ) -> Result<Vec<NodeReply>, NodeError> {
         self.query_batch(qs, nq)
     }
 
@@ -86,10 +191,37 @@ pub trait NodeHandle: Send {
     /// core has indexed them. Only live nodes
     /// ([`LocalNode::spawn_live`](crate::node::node::LocalNode::spawn_live),
     /// [`RemoteNode::connect_live`](crate::net::tcp::RemoteNode::connect_live))
-    /// support inserts; the default panics so a misrouted insert fails
+    /// support inserts; the default errors so a misrouted insert fails
     /// loudly instead of silently dropping ICU data.
-    fn insert_batch(&mut self, _points: &[f32], _labels: &[bool]) -> InsertReply {
-        panic!("node {} does not accept online inserts (live nodes only)", self.node_id());
+    fn insert_batch(&mut self, _points: &[f32], _labels: &[bool]) -> Result<InsertReply, NodeError> {
+        Err(NodeError::new(
+            self.node_id(),
+            "node does not accept online inserts (live nodes only)",
+        ))
+    }
+
+    /// Liveness + ingest-progress probe, fired periodically by the shard
+    /// dispatcher ([`FailoverConfig::heartbeat_every`]). An `Err` marks
+    /// the replica `Down`. For live nodes the reply doubles as the
+    /// cluster-level seal poll: answering a heartbeat runs the node's
+    /// age-seal check ([`LocalNode::poll_seal`]), so a COMPLETELY quiet
+    /// remote stream still seals by age and the seal count flows back
+    /// into [`Orchestrator::ingest_stats`]. The default answers "alive,
+    /// not live-indexed" — correct for any batch-built node.
+    ///
+    /// [`FailoverConfig::heartbeat_every`]: crate::coordinator::cluster::FailoverConfig
+    /// [`LocalNode::poll_seal`]: crate::node::node::LocalNode::poll_seal
+    fn heartbeat(&mut self) -> Result<HeartbeatReply, NodeError> {
+        Ok(HeartbeatReply::not_live())
+    }
+
+    /// Re-establish a broken transport (TCP re-dial + build replay).
+    /// Called by the shard dispatcher on the capped-exponential-backoff
+    /// schedule after the replica goes `Down`; `Ok` promotes it back to
+    /// `Suspect` (the next successful reply makes it `Up`). The default
+    /// errors: an in-process node that died cannot be revived.
+    fn reconnect(&mut self) -> Result<(), NodeError> {
+        Err(NodeError::new(self.node_id(), "reconnect not supported"))
     }
 }
 
@@ -100,11 +232,11 @@ impl NodeHandle for crate::node::node::LocalNode {
     fn info(&self) -> NodeInfo {
         crate::node::node::LocalNode::info(self).clone()
     }
-    fn query(&mut self, q: &[f32]) -> NodeReply {
-        crate::node::node::LocalNode::query(self, q)
+    fn query(&mut self, q: &[f32]) -> Result<NodeReply, NodeError> {
+        Ok(crate::node::node::LocalNode::query(self, q))
     }
-    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
-        crate::node::node::LocalNode::query_batch(self, qs, nq)
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Result<Vec<NodeReply>, NodeError> {
+        Ok(crate::node::node::LocalNode::query_batch(self, qs, nq))
     }
     fn query_batch_budget(
         &mut self,
@@ -112,11 +244,30 @@ impl NodeHandle for crate::node::node::LocalNode {
         nq: usize,
         budget: Budget,
         class: Class,
-    ) -> Vec<NodeReply> {
-        crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget, class)
+    ) -> Result<Vec<NodeReply>, NodeError> {
+        Ok(crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget, class))
     }
-    fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> InsertReply {
-        crate::node::node::LocalNode::insert_batch(self, points, labels)
+    fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> Result<InsertReply, NodeError> {
+        if !self.is_live() {
+            return Err(NodeError::new(
+                crate::node::node::LocalNode::node_id(self),
+                "node does not accept online inserts (live nodes only)",
+            ));
+        }
+        Ok(crate::node::node::LocalNode::insert_batch(self, points, labels))
+    }
+    fn heartbeat(&mut self) -> Result<HeartbeatReply, NodeError> {
+        if self.is_live() {
+            let r = self.poll_seal();
+            Ok(HeartbeatReply {
+                live: true,
+                total: r.total,
+                sealed_now: r.sealed_now,
+                sealed_total: r.sealed_total,
+            })
+        } else {
+            Ok(HeartbeatReply::not_live())
+        }
     }
 }
 
@@ -142,43 +293,60 @@ pub struct QueryResult {
     /// the deadline. Always `false` under `BudgetPolicy::LogOnly` and for
     /// un-budgeted queries.
     pub partial: bool,
-    /// Nodes that shed this query's batch outright (budget already spent
-    /// on arrival under `BudgetPolicy::Shed` — zero scan work done).
+    /// Shards that contributed NO scan work to this answer: a node-side
+    /// budget shed (budget already spent on arrival under
+    /// `BudgetPolicy::Shed`), or a shard whose replicas were all dead or
+    /// too slow — the dispatcher synthesized the shed so the answer could
+    /// complete in time instead of hanging.
     pub shed_nodes: u32,
 }
 
 /// Cluster-level outcome of one routed insert batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InsertOutcome {
-    /// Node the batch was routed to (round-robin).
+    /// Shard the batch was routed to (round-robin).
     pub node: usize,
     /// Points appended.
     pub accepted: u64,
-    /// That node's total points afterwards.
+    /// That shard's total points afterwards.
     pub node_total: u64,
     /// Segments the batch caused to seal.
     pub sealed_now: u64,
-    /// That node's total sealed segments afterwards.
+    /// That shard's total sealed segments afterwards.
     pub sealed_total: u64,
+    /// Replicas of the target shard that acknowledged the batch (≥ 1; a
+    /// zero-ack insert returns [`ClusterError::ShardUnavailable`]
+    /// instead). Below the replication factor means a replica was down
+    /// and will be missing these points until it is rebuilt.
+    pub replicas_acked: u32,
+}
+
+/// One shard's ack for a replicated insert (internal).
+struct ShardInsert {
+    reply: InsertReply,
+    replicas_acked: u32,
 }
 
 #[derive(Clone)]
 enum Job {
-    Single { qid: u64, q: Arc<Vec<f32>> },
+    Single {
+        qid: u64,
+        q: Arc<Vec<f32>>,
+    },
     /// Flat row-major `nq × dim` block; query `i` has id `qid0 + i`.
     /// `budget` is the admission cut's remaining latency budget plus
     /// enforcement policy ([`Budget::none`] for caller-formed blocks);
     /// `class` is the cut's scheduling class (monitor if any monitor
     /// rides it).
     Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget: Budget, class: Class },
-    /// Online insert, ROUTED to node `target` (never broadcast — each
-    /// point lives on exactly one shard); the node runner acks straight
+    /// Online insert, ROUTED to shard `target` (never broadcast — each
+    /// point lives on exactly one shard); the dispatcher acks straight
     /// to the caller through `reply`, bypassing the query Reducer.
     Insert {
         target: usize,
         points: Arc<Vec<f32>>,
         labels: Arc<Vec<bool>>,
-        reply: Sender<InsertReply>,
+        reply: Sender<Result<ShardInsert, ClusterError>>,
     },
 }
 
@@ -194,7 +362,26 @@ pub(crate) enum RootRequest {
     },
 }
 
-/// Orchestrator over ν nodes.
+/// One unit of work for a replica runner thread. `seq` tags the outcome
+/// so the dispatcher can tell a current reply from a stale one (a hedge
+/// loser, a timed-out straggler) — stale outcomes still update health
+/// but never complete a request twice.
+enum ReplicaJob {
+    Run { seq: u64, job: Job },
+    Insert { seq: u64, points: Arc<Vec<f32>>, labels: Arc<Vec<bool>> },
+    Heartbeat { seq: u64 },
+    Reconnect { seq: u64 },
+}
+
+enum ReplicaOutcome {
+    /// `(qid, reply)` per query of the job, in qid order.
+    Queries(Result<Vec<(u64, NodeReply)>, NodeError>),
+    Insert(Result<InsertReply, NodeError>),
+    Heartbeat(Result<HeartbeatReply, NodeError>),
+    Reconnect(Result<(), NodeError>),
+}
+
+/// Orchestrator over ν replicated shards.
 pub struct Orchestrator {
     root_tx: Sender<RootRequest>,
     /// Direct line to the Forwarder for routed (non-broadcast) work:
@@ -211,83 +398,140 @@ pub struct Orchestrator {
     next_ingest: AtomicUsize,
     /// Cluster-wide ingest telemetry (batches, points, seals).
     ingest: Arc<IngestCounters>,
+    /// Hedge / failover / reconnect telemetry, shared with the shard
+    /// dispatchers.
+    failover: Arc<FailoverCounters>,
+}
+
+/// Cap on a dispatcher's blocking wait while a request is in flight: the
+/// dispatcher re-reads the [`Clock`] at least this often (real time), so
+/// hedge/timeout decisions track a `MockClock` that tests advance
+/// without any real-time coupling.
+const RESOLVE_POLL: Duration = Duration::from_millis(1);
+/// Cap on the idle wait between jobs (heartbeat / reconnect duty cycle).
+const IDLE_POLL: Duration = Duration::from_millis(5);
+
+fn dur_ns(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
 }
 
 impl Orchestrator {
-    /// Wire Root → Forwarder → node runners → Reducer → Root and start
-    /// all threads.
+    /// Wire Root → Forwarder → shard dispatchers → Reducer → Root and
+    /// start all threads, one single-replica shard per node (the
+    /// unreplicated topology; identical behavior to replication factor 1
+    /// under [`FailoverConfig::default`]).
     pub fn start(nodes: Vec<Box<dyn NodeHandle>>, k: usize, vote: VoteConfig) -> Orchestrator {
-        let nu = nodes.len();
-        assert!(nu > 0, "orchestrator needs at least one node");
-        let node_infos: Vec<NodeInfo> = nodes.iter().map(|n| n.info()).collect();
+        let sets = nodes
+            .into_iter()
+            .enumerate()
+            .map(|(shard, n)| ReplicaSet::new(shard, vec![n]))
+            .collect();
+        Self::start_replicated(sets, k, vote, FailoverConfig::default())
+    }
+
+    /// Start over explicit replica groups (see
+    /// [`build_cluster`](crate::coordinator::cluster::build_cluster) with
+    /// [`ClusterConfig::with_replication`](crate::coordinator::cluster::ClusterConfig::with_replication)
+    /// for the assembled path). Shard `i` must be `sets[i]`.
+    pub fn start_replicated(
+        sets: Vec<ReplicaSet>,
+        k: usize,
+        vote: VoteConfig,
+        failover: FailoverConfig,
+    ) -> Orchestrator {
+        Self::start_replicated_with_clock(sets, k, vote, failover, Arc::new(SystemClock::new()))
+    }
+
+    /// [`start_replicated`](Orchestrator::start_replicated) with an
+    /// injected [`Clock`] — hedge, timeout, heartbeat and reconnect
+    /// decisions all read this clock, so fault-injection tests pin their
+    /// timing with a `MockClock`.
+    pub fn start_replicated_with_clock(
+        sets: Vec<ReplicaSet>,
+        k: usize,
+        vote: VoteConfig,
+        failover: FailoverConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Orchestrator {
+        let nu = sets.len();
+        assert!(nu > 0, "orchestrator needs at least one shard");
+        let node_infos: Vec<NodeInfo> = sets.iter().map(|s| s.replicas[0].info()).collect();
+        let counters = Arc::new(FailoverCounters::new());
+        let ingest = Arc::new(IngestCounters::new());
         let mut threads = Vec::new();
 
-        // Channels. The reduce channel carries the node id so the Reducer
-        // can order per-node data deterministically (reply arrival order
-        // is scheduler-dependent).
+        // Channels. The reduce channel carries the shard id so the
+        // Reducer can order per-shard data deterministically (reply
+        // arrival order is scheduler-dependent).
         let (root_tx, root_rx) = channel::<RootRequest>();
         let (fwd_tx, fwd_rx) = channel::<Job>();
         let (reduce_tx, reduce_rx) = channel::<(u64, usize, NodeReply, f64)>();
         let (done_tx, done_rx) = channel::<ReducedQuery>();
 
-        // Node runners: one thread per node, each with its own inbox.
-        let mut node_tx: Vec<Sender<Job>> = Vec::with_capacity(nu);
-        for mut node in nodes {
-            let (tx, rx) = channel::<Job>();
-            node_tx.push(tx);
+        // Shard dispatchers: one thread per shard owning the replica
+        // runner threads, hedging and failing over among them.
+        let mut shard_tx: Vec<Sender<Job>> = Vec::with_capacity(nu);
+        for (shard, set) in sets.into_iter().enumerate() {
+            assert_eq!(set.shard_id, shard, "replica sets must arrive in shard order");
+            assert!(!set.replicas.is_empty(), "shard {shard} has no replicas");
+            let cores = node_infos[shard].cores;
+            let (reply_tx, reply_rx) = channel::<(usize, u64, ReplicaOutcome, f64)>();
+            let mut runner_tx: Vec<Sender<ReplicaJob>> = Vec::new();
+            let mut runners: Vec<JoinHandle<()>> = Vec::new();
+            for (idx, mut node) in set.replicas.into_iter().enumerate() {
+                let (tx, rx) = channel::<ReplicaJob>();
+                runner_tx.push(tx);
+                let reply_tx = reply_tx.clone();
+                runners.push(
+                    std::thread::Builder::new()
+                        .name(format!("replica-{shard}-{idx}"))
+                        .spawn(move || run_replica(node.as_mut(), idx, rx, reply_tx))
+                        .expect("spawn replica runner"),
+                );
+            }
+            drop(reply_tx);
+            let (in_tx, in_rx) = channel::<Job>();
+            shard_tx.push(in_tx);
+            let n_rep = runner_tx.len();
             let reduce_tx = reduce_tx.clone();
-            let node_id = node.node_id();
+            let clock = Arc::clone(&clock);
+            let cfg = failover.clone();
+            let counters = Arc::clone(&counters);
+            let ingest = Arc::clone(&ingest);
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("node-runner-{node_id}"))
+                    .name(format!("shard-dispatch-{shard}"))
                     .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            match job {
-                                Job::Single { qid, q } => {
-                                    let t0 = std::time::Instant::now();
-                                    let reply = node.query(&q);
-                                    let dt = t0.elapsed().as_secs_f64();
-                                    if reduce_tx.send((qid, node_id, reply, dt)).is_err() {
-                                        break;
-                                    }
-                                }
-                                Job::Batch { qid0, qs, nq, budget, class } => {
-                                    let t0 = std::time::Instant::now();
-                                    let replies =
-                                        node.query_batch_budget(qs, nq, budget, class);
-                                    let dt = t0.elapsed().as_secs_f64();
-                                    debug_assert_eq!(replies.len(), nq);
-                                    let mut dead = false;
-                                    for (i, reply) in replies.into_iter().enumerate() {
-                                        if reduce_tx
-                                            .send((qid0 + i as u64, node_id, reply, dt))
-                                            .is_err()
-                                        {
-                                            dead = true;
-                                            break;
-                                        }
-                                    }
-                                    if dead {
-                                        break;
-                                    }
-                                }
-                                Job::Insert { points, labels, reply, .. } => {
-                                    let r = node.insert_batch(&points, &labels);
-                                    // A dropped reply just means the
-                                    // caller gave up waiting; the insert
-                                    // itself is already durable.
-                                    let _ = reply.send(r);
-                                }
-                            }
+                        let next_hb = clock.now_ns().saturating_add(dur_ns(cfg.heartbeat_every));
+                        let mut d = ShardDispatcher {
+                            shard,
+                            cores,
+                            clock,
+                            cfg,
+                            counters,
+                            ingest,
+                            health: vec![Health::Up; n_rep],
+                            busy: vec![false; n_rep],
+                            reconnect: vec![None; n_rep],
+                            runner_tx,
+                            reply_rx,
+                            reduce_tx,
+                            next_seq: 0,
+                            next_hb,
+                        };
+                        d.run(in_rx);
+                        drop(d);
+                        for h in runners {
+                            let _ = h.join();
                         }
                     })
-                    .expect("spawn node runner"),
+                    .expect("spawn shard dispatcher"),
             );
         }
         drop(reduce_tx);
 
-        // Forwarder: broadcast query jobs to every node runner; route
-        // insert jobs to exactly their target shard.
+        // Forwarder: broadcast query jobs to every shard dispatcher;
+        // route insert jobs to exactly their target shard.
         threads.push(
             std::thread::Builder::new()
                 .name("forwarder".into())
@@ -295,12 +539,12 @@ impl Orchestrator {
                     while let Ok(job) = fwd_rx.recv() {
                         match &job {
                             Job::Insert { target, .. } => {
-                                if node_tx[*target].send(job.clone()).is_err() {
+                                if shard_tx[*target].send(job.clone()).is_err() {
                                     return;
                                 }
                             }
                             _ => {
-                                for tx in &node_tx {
+                                for tx in &shard_tx {
                                     if tx.send(job.clone()).is_err() {
                                         return;
                                     }
@@ -312,14 +556,14 @@ impl Orchestrator {
                 .expect("spawn forwarder"),
         );
 
-        // Reducer: fold ν node replies per qid into the global K-NN.
+        // Reducer: fold ν shard replies per qid into the global K-NN.
         let k_red = k;
         threads.push(
             std::thread::Builder::new()
                 .name("reducer".into())
                 .spawn(move || {
                     let mut pending: HashMap<u64, ReduceAcc> = HashMap::new();
-                    while let Ok((qid, node_id, reply, _dt)) = reduce_rx.recv() {
+                    while let Ok((qid, shard_id, reply, _dt)) = reduce_rx.recv() {
                         let acc = pending.entry(qid).or_insert_with(|| ReduceAcc {
                             topk: TopK::new(k_red),
                             per_node: Vec::new(),
@@ -335,11 +579,11 @@ impl Orchestrator {
                         // caller learns recall was traded for the deadline.
                         acc.partial |= reply.partial;
                         acc.shed_nodes += reply.shed as u32;
-                        acc.per_node.push((node_id, reply.comparisons));
+                        acc.per_node.push((shard_id, reply.comparisons));
                         acc.received += 1;
                         if acc.received == nu {
                             let mut acc = pending.remove(&qid).unwrap();
-                            // Deterministic per-node order regardless of
+                            // Deterministic per-shard order regardless of
                             // reply arrival order.
                             acc.per_node.sort_by_key(|(id, _)| *id);
                             let out = ReducedQuery {
@@ -423,7 +667,7 @@ impl Orchestrator {
                                     return;
                                 }
                                 // Per-qid completion is monotone: every
-                                // node replies to qid i before i + 1, so
+                                // shard replies to qid i before i + 1, so
                                 // the reducer finishes them in order.
                                 let mut results = Vec::with_capacity(n);
                                 for i in 0..n {
@@ -453,30 +697,34 @@ impl Orchestrator {
             k,
             nu,
             next_ingest: AtomicUsize::new(0),
-            ingest: Arc::new(IngestCounters::new()),
+            ingest,
+            failover: counters,
         }
     }
 
-    /// Resolve one query through the full Root → Forwarder → nodes →
-    /// Reducer → Root pipeline.
-    pub fn query(&self, q: &[f32]) -> QueryResult {
+    /// Resolve one query through the full Root → Forwarder → shards →
+    /// Reducer → Root pipeline. A dead or slow shard degrades the answer
+    /// ([`QueryResult::shed_nodes`]); only a dropped cluster errors.
+    pub fn query(&self, q: &[f32]) -> Result<QueryResult, ClusterError> {
         let (tx, rx) = channel();
-        self.root_tx.send(RootRequest::Single(q.to_vec(), tx)).expect("root thread gone");
-        rx.recv().expect("root dropped reply")
+        self.root_tx
+            .send(RootRequest::Single(q.to_vec(), tx))
+            .map_err(|_| ClusterError::Shutdown)?;
+        rx.recv().map_err(|_| ClusterError::Shutdown)
     }
 
     /// Resolve a block of queries in one admission: the whole block is
-    /// flattened once and broadcast to every node, nodes resolve it on
+    /// flattened once and broadcast to every shard, nodes resolve it on
     /// their batched core path, and the Reducer folds replies per query.
     /// Results (neighbors, prediction, comparison counts) are identical
     /// to calling [`query`] per element; `latency_s` of result `i` is
     /// the wall-clock from batch admission to that query's reduction.
     ///
     /// [`query`]: Orchestrator::query
-    pub fn query_batch(&self, qs: &[&[f32]]) -> Vec<QueryResult> {
+    pub fn query_batch(&self, qs: &[&[f32]]) -> Result<Vec<QueryResult>, ClusterError> {
         let nq = qs.len();
         if nq == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let dim = qs[0].len();
         let mut flat = Vec::with_capacity(nq * dim);
@@ -505,16 +753,16 @@ impl Orchestrator {
         nq: usize,
         budget: Budget,
         class: Class,
-    ) -> Vec<QueryResult> {
+    ) -> Result<Vec<QueryResult>, ClusterError> {
         if nq == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
         let (tx, rx) = channel();
         self.root_tx
             .send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx })
-            .expect("root thread gone");
-        rx.recv().expect("root dropped reply")
+            .map_err(|_| ClusterError::Shutdown)?;
+        rx.recv().map_err(|_| ClusterError::Shutdown)
     }
 
     /// Append a batch of labeled points to the live cluster (`points`
@@ -523,7 +771,11 @@ impl Orchestrator {
     /// ingester. See [`insert_batch_class`].
     ///
     /// [`insert_batch_class`]: Orchestrator::insert_batch_class
-    pub fn insert_batch(&self, points: &[f32], labels: &[bool]) -> InsertOutcome {
+    pub fn insert_batch(
+        &self,
+        points: &[f32],
+        labels: &[bool],
+    ) -> Result<InsertOutcome, ClusterError> {
         self.insert_batch_class(points, labels, Class::Monitor)
     }
 
@@ -533,22 +785,26 @@ impl Orchestrator {
     /// [`LaneStats`](crate::coordinator::admission::LaneStats) when the
     /// admission layer is installed).
     ///
-    /// Routing: batches go to ONE node each, round-robin — unlike
-    /// queries, which broadcast; a point lives on exactly one shard.
-    /// Inserts travel Forwarder → node runner directly (no Root
+    /// Routing: batches go to ONE shard each, round-robin — unlike
+    /// queries, which broadcast; a point lives on exactly one shard. On
+    /// the shard, the batch fans out to every live replica so replicas
+    /// stay interchangeable; [`InsertOutcome::replicas_acked`] reports
+    /// how many made it durable, and zero acks is
+    /// [`ClusterError::ShardUnavailable`] — never a silent drop.
+    /// Inserts travel Forwarder → shard dispatcher directly (no Root
     /// sequencing, no qids), so a sustained ingest stream interleaves
-    /// with queries instead of serializing behind them; per node, the
-    /// runner's inbox orders inserts against query jobs, so a query
+    /// with queries instead of serializing behind them; per shard, the
+    /// dispatcher's inbox orders inserts against query jobs, so a query
     /// submitted after this call returns observes the points. Requires
     /// live nodes
     /// ([`build_live_cluster`](crate::coordinator::cluster::build_live_cluster));
-    /// batch-built nodes panic their runner rather than drop data.
+    /// inserts to batch-built nodes error rather than drop data.
     pub fn insert_batch_class(
         &self,
         points: &[f32],
         labels: &[bool],
         class: Class,
-    ) -> InsertOutcome {
+    ) -> Result<InsertOutcome, ClusterError> {
         let n = labels.len();
         assert!(n > 0, "empty insert batch");
         assert_eq!(points.len() % n, 0, "insert block not n × dim");
@@ -561,25 +817,33 @@ impl Orchestrator {
                 labels: Arc::new(labels.to_vec()),
                 reply: tx,
             })
-            .expect("forwarder gone");
-        let r = rx.recv().expect("node dropped insert reply");
+            .map_err(|_| ClusterError::Shutdown)?;
+        let shard_ack = rx.recv().map_err(|_| ClusterError::Shutdown)??;
+        let r = shard_ack.reply;
         self.ingest.record_batch(r.accepted);
         self.ingest.record_seals(r.sealed_now);
         if let Some(q) = &self.admission {
             q.note_ingest(class, r.accepted);
         }
-        InsertOutcome {
+        Ok(InsertOutcome {
             node: target,
             accepted: r.accepted,
             node_total: r.total,
             sealed_now: r.sealed_now,
             sealed_total: r.sealed_total,
-        }
+            replicas_acked: shard_ack.replicas_acked,
+        })
     }
 
     /// Cluster-wide ingest telemetry snapshot.
     pub fn ingest_stats(&self) -> IngestStats {
         self.ingest.snapshot()
+    }
+
+    /// Hedge / failover / reconnect telemetry snapshot, aggregated over
+    /// every shard dispatcher.
+    pub fn failover_stats(&self) -> FailoverStats {
+        self.failover.snapshot()
     }
 
     /// Install the deadline-aware admission layer (see
@@ -649,7 +913,9 @@ impl Orchestrator {
         &self.node_infos
     }
 
-    /// Total processors (pν) across the cluster.
+    /// Total processors (pν) across the cluster (per shard, not per
+    /// replica — replicas duplicate work for availability, they don't
+    /// partition it).
     pub fn total_processors(&self) -> usize {
         self.node_infos.iter().map(|i| i.cores).sum()
     }
@@ -661,8 +927,8 @@ impl Drop for Orchestrator {
         // and exit FIRST or the root thread would never see EOF.
         self.admission = None;
         // Closing root_tx AND the ingest line cascades: root exits, the
-        // forwarder inbox loses its last sender, node runners exit, the
-        // reducer sees EOF.
+        // forwarder inbox loses its last sender, shard dispatchers see
+        // EOF, replica runners exit, the reducer sees EOF.
         let (dead_tx, _) = channel();
         let _ = std::mem::replace(&mut self.root_tx, dead_tx);
         let (dead_ingest, _) = channel();
@@ -673,14 +939,412 @@ impl Drop for Orchestrator {
     }
 }
 
+/// Replica runner: executes jobs from its inbox strictly in order and
+/// reports `(replica, seq, outcome, secs)` — the dispatcher interprets
+/// outcomes; the runner never retries or routes.
+fn run_replica(
+    node: &mut dyn NodeHandle,
+    idx: usize,
+    rx: Receiver<ReplicaJob>,
+    reply_tx: Sender<(usize, u64, ReplicaOutcome, f64)>,
+) {
+    while let Ok(rj) = rx.recv() {
+        let t0 = std::time::Instant::now();
+        let (seq, outcome) = match rj {
+            ReplicaJob::Run { seq, job } => {
+                let out = match job {
+                    Job::Single { qid, q } => node.query(&q).map(|r| vec![(qid, r)]),
+                    Job::Batch { qid0, qs, nq, budget, class } => {
+                        node.query_batch_budget(qs, nq, budget, class).map(|rs| {
+                            rs.into_iter()
+                                .enumerate()
+                                .map(|(i, r)| (qid0 + i as u64, r))
+                                .collect()
+                        })
+                    }
+                    Job::Insert { .. } => unreachable!("inserts travel as ReplicaJob::Insert"),
+                };
+                (seq, ReplicaOutcome::Queries(out))
+            }
+            ReplicaJob::Insert { seq, points, labels } => {
+                (seq, ReplicaOutcome::Insert(node.insert_batch(&points, &labels)))
+            }
+            ReplicaJob::Heartbeat { seq } => (seq, ReplicaOutcome::Heartbeat(node.heartbeat())),
+            ReplicaJob::Reconnect { seq } => (seq, ReplicaOutcome::Reconnect(node.reconnect())),
+        };
+        if reply_tx.send((idx, seq, outcome, t0.elapsed().as_secs_f64())).is_err() {
+            break;
+        }
+    }
+}
+
+/// Per-shard hedged dispatcher state (one per shard, owning its replica
+/// runners). See the module header for the policy it implements.
+struct ShardDispatcher {
+    shard: usize,
+    /// Replica-0 core count — the shape of a synthesized shed reply's
+    /// per-core comparison vector.
+    cores: usize,
+    clock: Arc<dyn Clock>,
+    cfg: FailoverConfig,
+    counters: Arc<FailoverCounters>,
+    ingest: Arc<IngestCounters>,
+    health: Vec<Health>,
+    /// Replica has an unanswered job in its inbox (stale or current).
+    busy: Vec<bool>,
+    /// `Down` replicas' reconnect schedule: `(attempt, due_ns)`; the due
+    /// time is `u64::MAX` while an attempt is in flight.
+    reconnect: Vec<Option<(u32, u64)>>,
+    runner_tx: Vec<Sender<ReplicaJob>>,
+    reply_rx: Receiver<(usize, u64, ReplicaOutcome, f64)>,
+    reduce_tx: Sender<(u64, usize, NodeReply, f64)>,
+    next_seq: u64,
+    next_hb: u64,
+}
+
+impl ShardDispatcher {
+    fn run(&mut self, inbox: Receiver<Job>) {
+        loop {
+            self.drain_stale();
+            self.fire_duties();
+            match inbox.recv_timeout(self.idle_wait()) {
+                Ok(Job::Single { qid, q }) => self.resolve(qid, 1, Job::Single { qid, q }),
+                Ok(Job::Batch { qid0, qs, nq, budget, class }) => {
+                    self.resolve(qid0, nq, Job::Batch { qid0, qs, nq, budget, class })
+                }
+                Ok(Job::Insert { points, labels, reply, .. }) => {
+                    self.insert(points, labels, reply)
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+
+    fn take_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Replicas eligible for a new query, best first: `Up` before
+    /// `Suspect`, idle before busy, then lowest index (deterministic).
+    fn candidates(&self) -> Vec<usize> {
+        let mut c: Vec<usize> =
+            (0..self.health.len()).filter(|&i| self.health[i] != Health::Down).collect();
+        c.sort_by_key(|&i| (self.health[i] == Health::Suspect, self.busy[i], i));
+        c
+    }
+
+    /// Dispatch `job` to the first remaining candidate whose runner is
+    /// still accepting work; returns the chosen replica.
+    fn try_dispatch(&mut self, remaining: &mut Vec<usize>, seq: u64, job: &Job) -> Option<usize> {
+        while !remaining.is_empty() {
+            let idx = remaining.remove(0);
+            if self.health[idx] == Health::Down {
+                continue;
+            }
+            if self.runner_tx[idx].send(ReplicaJob::Run { seq, job: job.clone() }).is_ok() {
+                self.busy[idx] = true;
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Hedged resolution of one query job covering qids
+    /// `[qid0, qid0 + nq)`: primary dispatch, hedge after
+    /// `cfg.hedge_after`, failover on replica error, synthesized shed on
+    /// total loss or `cfg.request_timeout` — exactly one reply per qid
+    /// reaches the Reducer.
+    fn resolve(&mut self, qid0: u64, nq: usize, job: Job) {
+        let seq = self.take_seq();
+        let mut remaining = self.candidates();
+        let mut inflight: Vec<usize> = Vec::new();
+        match self.try_dispatch(&mut remaining, seq, &job) {
+            Some(p) => inflight.push(p),
+            None => {
+                self.synth_shed(qid0, nq);
+                return;
+            }
+        }
+        let mut hedged = false;
+        let mut hedge_replica: Option<usize> = None;
+        let t0 = self.clock.now_ns();
+        let hedge_at = t0.saturating_add(dur_ns(self.cfg.hedge_after));
+        let deadline = t0.saturating_add(dur_ns(self.cfg.request_timeout));
+        loop {
+            let now = self.clock.now_ns();
+            if now >= deadline {
+                // Stragglers aren't dead, just too slow to wait for.
+                for &r in &inflight {
+                    if self.health[r] == Health::Up {
+                        self.health[r] = Health::Suspect;
+                    }
+                }
+                self.synth_shed(qid0, nq);
+                return;
+            }
+            let next_event = if hedged { deadline } else { hedge_at.min(deadline) };
+            let wait = Duration::from_nanos(next_event.saturating_sub(now))
+                .min(RESOLVE_POLL);
+            match self.reply_rx.recv_timeout(wait) {
+                Ok((idx, rseq, outcome, dt)) => {
+                    if rseq != seq {
+                        self.absorb(idx, outcome);
+                        continue;
+                    }
+                    self.busy[idx] = false;
+                    match outcome {
+                        ReplicaOutcome::Queries(Ok(replies)) => {
+                            self.on_ok(idx);
+                            if hedge_replica == Some(idx) {
+                                self.counters.record_hedge_win();
+                            }
+                            for (qid, reply) in replies {
+                                let _ = self.reduce_tx.send((qid, self.shard, reply, dt));
+                            }
+                            return;
+                        }
+                        ReplicaOutcome::Queries(Err(_)) => {
+                            self.mark_down(idx);
+                            inflight.retain(|&r| r != idx);
+                            if hedge_replica == Some(idx) {
+                                hedge_replica = None;
+                            }
+                            if let Some(next) = self.try_dispatch(&mut remaining, seq, &job) {
+                                self.counters.record_failover();
+                                inflight.push(next);
+                            } else if inflight.is_empty() {
+                                self.synth_shed(qid0, nq);
+                                return;
+                            }
+                        }
+                        other => self.absorb(idx, other),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !hedged && self.clock.now_ns() >= hedge_at {
+                        hedged = true;
+                        if let Some(h) = self.try_dispatch(&mut remaining, seq, &job) {
+                            self.counters.record_hedge();
+                            hedge_replica = Some(h);
+                            if let Some(&p) = inflight.first() {
+                                if self.health[p] == Health::Up {
+                                    self.health[p] = Health::Suspect;
+                                }
+                            }
+                            inflight.push(h);
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+
+    /// Replicated insert: fan to every live replica, collect acks until
+    /// `cfg.request_timeout`. One ack suffices for durability; the total
+    /// ack count travels back to the caller.
+    fn insert(
+        &mut self,
+        points: Arc<Vec<f32>>,
+        labels: Arc<Vec<bool>>,
+        reply: Sender<Result<ShardInsert, ClusterError>>,
+    ) {
+        let seq = self.take_seq();
+        let mut outstanding: Vec<usize> = Vec::new();
+        for i in 0..self.runner_tx.len() {
+            if self.health[i] == Health::Down {
+                continue;
+            }
+            let rj = ReplicaJob::Insert {
+                seq,
+                points: Arc::clone(&points),
+                labels: Arc::clone(&labels),
+            };
+            if self.runner_tx[i].send(rj).is_ok() {
+                self.busy[i] = true;
+                outstanding.push(i);
+            }
+        }
+        if outstanding.is_empty() {
+            let _ = reply.send(Err(ClusterError::ShardUnavailable { shard: self.shard }));
+            return;
+        }
+        let deadline = self.clock.now_ns().saturating_add(dur_ns(self.cfg.request_timeout));
+        let mut first: Option<InsertReply> = None;
+        let mut acked = 0u32;
+        while !outstanding.is_empty() {
+            let now = self.clock.now_ns();
+            if now >= deadline {
+                for &r in &outstanding {
+                    if self.health[r] == Health::Up {
+                        self.health[r] = Health::Suspect;
+                    }
+                }
+                break;
+            }
+            let wait =
+                Duration::from_nanos(deadline.saturating_sub(now)).min(RESOLVE_POLL);
+            match self.reply_rx.recv_timeout(wait) {
+                Ok((idx, rseq, outcome, _dt)) => {
+                    if rseq != seq {
+                        self.absorb(idx, outcome);
+                        continue;
+                    }
+                    self.busy[idx] = false;
+                    outstanding.retain(|&r| r != idx);
+                    match outcome {
+                        ReplicaOutcome::Insert(Ok(r)) => {
+                            self.on_ok(idx);
+                            acked += 1;
+                            if first.is_none() {
+                                first = Some(r);
+                            }
+                        }
+                        ReplicaOutcome::Insert(Err(_)) => self.mark_down(idx),
+                        other => self.absorb(idx, other),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let _ = reply.send(match first {
+            Some(r) => Ok(ShardInsert { reply: r, replicas_acked: acked }),
+            None => Err(ClusterError::ShardUnavailable { shard: self.shard }),
+        });
+    }
+
+    /// Emit the shed reply every query of a lost job — the same shape a
+    /// node-side `BudgetPolicy::Shed` produces, so reduction and caller
+    /// semantics are identical whether the node or the dispatcher shed.
+    fn synth_shed(&mut self, qid0: u64, nq: usize) {
+        self.counters.record_synthesized_shed();
+        for i in 0..nq {
+            let qid = qid0 + i as u64;
+            let reply = NodeReply {
+                qid,
+                neighbors: Vec::new(),
+                comparisons: vec![0u64; self.cores],
+                inner_probes: 0,
+                partial: true,
+                shed: true,
+            };
+            let _ = self.reduce_tx.send((qid, self.shard, reply, 0.0));
+        }
+    }
+
+    /// Process an outcome that does not complete the current request: a
+    /// hedge loser's late reply, a heartbeat ack, a reconnect result.
+    /// Health still updates — a late success proves the replica lives.
+    fn absorb(&mut self, idx: usize, outcome: ReplicaOutcome) {
+        self.busy[idx] = false;
+        match outcome {
+            ReplicaOutcome::Queries(Ok(_)) | ReplicaOutcome::Insert(Ok(_)) => self.on_ok(idx),
+            ReplicaOutcome::Heartbeat(Ok(hb)) => {
+                self.on_ok(idx);
+                // The heartbeat doubles as the cluster-level seal poll:
+                // age-expired seals on quiet live nodes surface here.
+                if hb.live && hb.sealed_now > 0 {
+                    self.ingest.record_seals(hb.sealed_now);
+                }
+            }
+            ReplicaOutcome::Reconnect(Ok(())) => {
+                self.counters.record_reconnect();
+                self.reconnect[idx] = None;
+                if self.health[idx] == Health::Down {
+                    self.health[idx] = Health::Suspect;
+                }
+            }
+            ReplicaOutcome::Queries(Err(_))
+            | ReplicaOutcome::Insert(Err(_))
+            | ReplicaOutcome::Heartbeat(Err(_)) => self.mark_down(idx),
+            ReplicaOutcome::Reconnect(Err(_)) => {
+                let attempt = self.reconnect[idx].map(|(a, _)| a + 1).unwrap_or(1);
+                let due = self
+                    .clock
+                    .now_ns()
+                    .saturating_add(dur_ns(self.cfg.reconnect_delay(attempt)));
+                self.reconnect[idx] = Some((attempt, due));
+            }
+        }
+    }
+
+    fn on_ok(&mut self, idx: usize) {
+        self.health[idx] = Health::Up;
+        self.reconnect[idx] = None;
+    }
+
+    fn mark_down(&mut self, idx: usize) {
+        if self.health[idx] != Health::Down {
+            self.health[idx] = Health::Down;
+            self.counters.record_down();
+            let due = self.clock.now_ns().saturating_add(dur_ns(self.cfg.reconnect_delay(0)));
+            self.reconnect[idx] = Some((0, due));
+        }
+    }
+
+    /// Idle duties between jobs: fire heartbeats on schedule, fire due
+    /// reconnect attempts for `Down` replicas.
+    fn fire_duties(&mut self) {
+        let now = self.clock.now_ns();
+        if now >= self.next_hb {
+            for i in 0..self.runner_tx.len() {
+                if self.health[i] == Health::Down || self.busy[i] {
+                    continue;
+                }
+                let seq = self.take_seq();
+                if self.runner_tx[i].send(ReplicaJob::Heartbeat { seq }).is_ok() {
+                    self.busy[i] = true;
+                    self.counters.record_heartbeat();
+                }
+            }
+            self.next_hb = now.saturating_add(dur_ns(self.cfg.heartbeat_every));
+        }
+        for i in 0..self.runner_tx.len() {
+            if let Some((attempt, due)) = self.reconnect[i] {
+                if self.health[i] == Health::Down && !self.busy[i] && now >= due {
+                    let seq = self.take_seq();
+                    if self.runner_tx[i].send(ReplicaJob::Reconnect { seq }).is_ok() {
+                        self.busy[i] = true;
+                        self.counters.record_reconnect_attempt();
+                        // Park the schedule while the attempt is in
+                        // flight; its outcome re-arms it.
+                        self.reconnect[i] = Some((attempt, u64::MAX));
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_stale(&mut self) {
+        while let Ok((idx, _seq, outcome, _dt)) = self.reply_rx.try_recv() {
+            self.absorb(idx, outcome);
+        }
+    }
+
+    /// Time until the next heartbeat or reconnect duty, capped so a
+    /// frozen `MockClock` advanced by a test is noticed promptly.
+    fn idle_wait(&self) -> Duration {
+        let now = self.clock.now_ns();
+        let mut next = self.next_hb;
+        for r in self.reconnect.iter().flatten() {
+            next = next.min(r.1);
+        }
+        Duration::from_nanos(next.saturating_sub(now)).min(IDLE_POLL)
+    }
+}
+
 struct ReduceAcc {
     topk: TopK,
-    /// `(node_id, per-core comparisons)` — sorted by node id on completion.
+    /// `(shard_id, per-core comparisons)` — sorted by shard on completion.
     per_node: Vec<(usize, Vec<u64>)>,
     received: usize,
     /// Any node answered partially under budget enforcement.
     partial: bool,
-    /// Nodes that shed the batch outright.
+    /// Shards whose reply was a shed (node-side or synthesized).
     shed_nodes: u32,
 }
 

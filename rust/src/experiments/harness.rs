@@ -127,7 +127,9 @@ pub fn eval_cluster_batched(cluster: &Cluster, corpus: &Corpus, batch: usize) ->
         // A one-element block through query_batch IS the one-in-flight
         // model: same admission, same latency accounting.
         let qs: Vec<&[f32]> = (start..end).map(|i| corpus.queries.point(i)).collect();
-        let rs = cluster.query_batch(&qs);
+        // The cluster cannot shut down while we hold `&Cluster`, so the
+        // only query-path error is unreachable here.
+        let rs = cluster.query_batch(&qs).expect("cluster alive for the whole eval");
         debug_assert_eq!(rs.len(), end - start);
         // latency_s of the last result is the whole batch round trip.
         lat += rs.last().map(|r| r.latency_s).unwrap_or(0.0);

@@ -212,7 +212,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     let cluster = build_cluster(&data, &params, &cfg)?;
     let mut confusion = dslsh::metrics::Confusion::new();
     for i in 0..queries.len() {
-        let r = cluster.query(queries.point(i));
+        let r = cluster.query(queries.point(i))?;
         confusion.push(r.prediction, queries.labels[i]);
         println!(
             "q{i}: pred={} share={:.3} max_comps={} latency={:.2}ms nn={:?}",
@@ -261,7 +261,7 @@ fn cmd_orchestrate(args: &Args) -> Result<()> {
     let mut confusion = dslsh::metrics::Confusion::new();
     let t0 = std::time::Instant::now();
     for i in 0..queries.len() {
-        let r = orch.query(queries.point(i));
+        let r = orch.query(queries.point(i))?;
         confusion.push(r.prediction, queries.labels[i]);
     }
     let dt = t0.elapsed().as_secs_f64();

@@ -3,12 +3,39 @@
 //! In the paper's deployment the Orchestrator and the ν SLSH nodes are
 //! separate cloud VMs. This module provides that wire path: a
 //! length-prefixed binary protocol ([`wire`]), a node server
-//! ([`serve_node`]) run by `dslsh serve-node`, and a [`RemoteNode`] client
-//! implementing [`NodeHandle`](crate::coordinator::NodeHandle) so the
-//! Orchestrator drives remote processes exactly like in-process nodes.
+//! ([`serve_node`] / [`serve_node_loop`]) run by `dslsh serve-node`, and
+//! a [`RemoteNode`] client implementing
+//! [`NodeHandle`](crate::coordinator::NodeHandle) so the Orchestrator
+//! drives remote processes exactly like in-process nodes.
+//!
+//! # Failure-semantics contract
+//!
+//! The transport's promise to the coordination layer above it:
+//!
+//! 1. **Faults are values, never panics.** Every [`RemoteNode`] request
+//!    returns `Result<_, NodeError>`; a write error, read error,
+//!    mid-frame EOF or protocol desync (wrong frame type, out-of-order
+//!    reply) is an `Err`, not an abort. The process never dies because a
+//!    peer did.
+//! 2. **A fault poisons the connection.** After any transport error the
+//!    frame boundary is unknowable, so the handle drops its stream and
+//!    every later request fails fast ("connection is down") instead of
+//!    reading garbage. Recovery is explicit:
+//!    [`NodeHandle::reconnect`](crate::coordinator::NodeHandle) re-dials
+//!    and replays the retained build frame — batch shards rebuild
+//!    bit-identically from the same seed and bytes; live nodes come back
+//!    empty (re-population belongs to the replicated orchestrator).
+//! 3. **Hostile input is rejected at the boundary.** Both directions
+//!    validate peer-controlled geometry (item counts, flag bytes,
+//!    frame sizes) at decode, so corrupt or malicious frames surface as
+//!    codec errors before any scan work — see [`wire`].
+//! 4. **Liveness is part of the protocol.** `Heartbeat`/`HeartbeatAck`
+//!    frames let the failure detector probe a node between requests; for
+//!    live (streaming) nodes the ack doubles as the cluster-level seal
+//!    poll, so a quiet remote stream still seals by age.
 
 pub mod tcp;
 pub mod wire;
 
-pub use tcp::{serve_node, RemoteNode};
+pub use tcp::{serve_node, serve_node_loop, RemoteNode};
 pub use wire::{BatchReplyItem, Message};

@@ -3,24 +3,40 @@
 //! `dslsh serve-node --listen <addr>` runs [`serve_node`]: it waits for
 //! the Orchestrator's `Build`, spawns a [`LocalNode`] thread group over
 //! the received shard, then serves `Query` frames until `Shutdown`/EOF.
+//! [`serve_node_loop`] re-accepts after a disconnect, so an orchestrator
+//! that lost the connection can re-dial and replay the build.
 //!
 //! [`RemoteNode`] is the Orchestrator-side counterpart: it ships the shard
 //! and hash spec over the socket and then satisfies the
 //! [`NodeHandle`](crate::coordinator::NodeHandle) contract with one
 //! request/response round trip per query — the paper's low-QPS ICU
 //! latency model needs no pipelining.
+//!
+//! # Failure semantics
+//!
+//! Transport faults never panic. Every request returns
+//! `Result<_, NodeError>`; a write error, read error, mid-frame EOF or
+//! protocol desync (wrong frame type, wrong qid) poisons the connection —
+//! the handle drops its stream and every later request fails fast with
+//! "connection is down" until [`NodeHandle::reconnect`] succeeds. The
+//! shard dispatcher owns the retry schedule (capped exponential backoff);
+//! this layer only makes faults visible and reconnection possible: the
+//! build frame is retained verbatim, so a reconnect re-dials, replays it,
+//! and awaits a fresh `BuildDone` — a bit-identical rebuild for batch
+//! shards (same seed + shard), an EMPTY index for live nodes (replayed
+//! ingest is the replicated orchestrator's job, not the transport's).
 
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::admission::{Budget, Class};
-use crate::coordinator::orchestrator::NodeHandle;
+use crate::coordinator::orchestrator::{NodeError, NodeHandle};
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
-use crate::node::node::{InsertReply, LocalNode, NodeInfo, NodeReply};
+use crate::node::node::{HeartbeatReply, InsertReply, LocalNode, NodeInfo, NodeReply};
 use crate::net::wire::{validate_batch_geometry, BatchReplyItem, Message};
 use crate::slsh::{SealPolicy, SlshParams};
 use crate::util::clock::SystemClock;
@@ -59,6 +75,26 @@ pub fn serve_node(listener: &TcpListener, engines: Option<&EngineFactory>) -> Re
     let (stream, peer) = listener.accept().context("accept")?;
     crate::log_info!("node-server", "orchestrator connected from {peer}");
     serve_connection(stream, engines)
+}
+
+/// Serve up to `conns` sequential Orchestrator connections, re-accepting
+/// after each disconnect — the server half of the reconnect story: a
+/// re-dialing [`RemoteNode::reconnect`] replays its build frame and gets
+/// a freshly built node. A connection that dies mid-frame is logged, not
+/// fatal (the next accept proceeds). Returns total queries served.
+pub fn serve_node_loop(
+    listener: &TcpListener,
+    engines: Option<&EngineFactory>,
+    conns: usize,
+) -> Result<u64> {
+    let mut total = 0u64;
+    for i in 0..conns {
+        match serve_node(listener, engines) {
+            Ok(n) => total += n,
+            Err(e) => crate::log_info!("node-server", "connection {i} ended with error: {e}"),
+        }
+    }
+    Ok(total)
 }
 
 /// Protocol loop over an accepted stream.
@@ -117,7 +153,7 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
     }
     .write_frame(&mut writer)?;
 
-    // Phase 2: queries and (live) inserts, freely interleaved.
+    // Phase 2: queries, heartbeats and (live) inserts, freely interleaved.
     let mut served = 0u64;
     loop {
         match Message::read_frame(&mut reader).map_err(|e| anyhow!("reading frame: {e}"))? {
@@ -183,6 +219,32 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 }
                 .write_frame(&mut writer)?;
             }
+            Some(Message::Heartbeat { seq }) => {
+                // Liveness probe; for live nodes the ack doubles as the
+                // cluster-level seal poll (runs the age-seal check a
+                // quiet stream would otherwise never hit). Not counted
+                // in `served`: heartbeats are the detector's traffic,
+                // not the caller's.
+                let ack = if node.is_live() {
+                    let r = node.poll_seal();
+                    Message::HeartbeatAck {
+                        seq,
+                        live: true,
+                        total: r.total,
+                        sealed_now: r.sealed_now,
+                        sealed_total: r.sealed_total,
+                    }
+                } else {
+                    Message::HeartbeatAck {
+                        seq,
+                        live: false,
+                        total: 0,
+                        sealed_now: 0,
+                        sealed_total: 0,
+                    }
+                };
+                ack.write_frame(&mut writer)?;
+            }
             Some(other) => bail!("unexpected message {other:?}"),
         }
     }
@@ -190,14 +252,46 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
     Ok(served)
 }
 
+/// One poisoned-on-error connection (reader/writer over the same stream).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+/// Dial, ship the retained build frame, await `BuildDone`. Shared by the
+/// initial connect and every reconnect so both paths build the exact
+/// same node on the far side.
+fn dial(addrs: &[SocketAddr], build: &Message) -> std::result::Result<(Conn, f64), String> {
+    let stream = TcpStream::connect(addrs).map_err(|e| format!("connect: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("clone stream: {e}"))?);
+    let writer = BufWriter::new(stream);
+    let mut conn = Conn { reader, writer };
+    build.write_frame(&mut conn.writer).map_err(|e| format!("shipping build: {e}"))?;
+    match Message::read_frame(&mut conn.reader) {
+        Ok(Some(Message::BuildDone { build_ms, .. })) => Ok((conn, build_ms)),
+        Ok(Some(other)) => Err(format!("expected BuildDone, got {other:?}")),
+        Ok(None) => Err("node closed during build".into()),
+        Err(e) => Err(format!("reading BuildDone: {e}")),
+    }
+}
+
 /// Orchestrator-side handle to a TCP node.
 pub struct RemoteNode {
     node_id: usize,
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    /// Resolved peer addresses, retained for reconnects.
+    addrs: Vec<SocketAddr>,
+    /// The build frame, retained verbatim: a reconnect replays it so the
+    /// far side rebuilds the identical node (same seed, same shard).
+    build: Message,
+    /// `None` after a transport fault — every request fails fast until
+    /// [`NodeHandle::reconnect`] restores it.
+    conn: Option<Conn>,
     info: NodeInfo,
     next_qid: u64,
     next_insert_seq: u64,
+    next_hb_seq: u64,
 }
 
 impl RemoteNode {
@@ -263,108 +357,57 @@ impl RemoteNode {
         shard_len: usize,
         build: Message,
     ) -> Result<RemoteNode> {
-        let stream = TcpStream::connect(addr).context("connecting to node")?;
-        stream.set_nodelay(true).ok();
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut writer = BufWriter::new(stream);
-        build.write_frame(&mut writer)?;
-        let done = Message::read_frame(&mut reader)
-            .map_err(|e| anyhow!("reading BuildDone: {e}"))?
-            .ok_or_else(|| anyhow!("node closed during build"))?;
-        let Message::BuildDone { build_ms, .. } = done else {
-            bail!("expected BuildDone, got {done:?}");
-        };
-        let info = NodeInfo { node_id, shard_len, cores: p, build_ms };
-        Ok(RemoteNode { node_id, reader, writer, info, next_qid: 0, next_insert_seq: 0 })
-    }
-}
-
-impl NodeHandle for RemoteNode {
-    fn node_id(&self) -> usize {
-        self.node_id
-    }
-
-    fn info(&self) -> NodeInfo {
-        self.info.clone()
-    }
-
-    fn query(&mut self, q: &[f32]) -> NodeReply {
-        let qid = self.next_qid;
-        self.next_qid += 1;
-        Message::Query { qid, q: q.to_vec() }
-            .write_frame(&mut self.writer)
-            .expect("remote node write failed");
-        let reply = Message::read_frame(&mut self.reader)
-            .expect("remote node read failed")
-            .expect("remote node closed mid-query");
-        let Message::Reply { qid: rqid, neighbors, comparisons, inner_probes } = reply else {
-            panic!("expected Reply, got {reply:?}");
-        };
-        assert_eq!(rqid, qid, "out-of-order reply");
-        NodeReply { qid, neighbors, comparisons, inner_probes, partial: false, shed: false }
-    }
-
-    /// One frame per batch instead of one round trip per query — the
-    /// remote node resolves the block on its batched core path. (The
-    /// wire message needs an owned buffer, so this copies once.)
-    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
-        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics)
-    }
-
-    /// Admission cuts ship their remaining budget, enforcement policy and
-    /// class with the frame (`QueryBatchBudget`) so the remote node
-    /// enforces the same cut — anchored at frame arrival, the remaining
-    /// value having been computed once at dispatch — and attributes
-    /// overruns per lane; caller-formed blocks ([`Budget::none`]) stay on
-    /// the plain `QueryBatch` frame for protocol compatibility.
-    fn query_batch_budget(
-        &mut self,
-        qs: Arc<Vec<f32>>,
-        nq: usize,
-        budget: Budget,
-        class: Class,
-    ) -> Vec<NodeReply> {
-        self.batch_roundtrip(qs, nq, budget, class)
-    }
-
-    /// One `InsertBatch` frame per append; the remote live node appends
-    /// to its store, fans the insert to its cores, and acks once every
-    /// core has indexed the points — so a query batched after this
-    /// returns (on this same strictly request/response connection) sees
-    /// them, exactly like the in-process path.
-    fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> InsertReply {
-        let seq = self.next_insert_seq;
-        self.next_insert_seq += 1;
-        Message::InsertBatch {
-            seq,
-            n: labels.len() as u64,
-            points: points.to_vec(),
-            labels: labels.to_vec(),
+        let addrs: Vec<SocketAddr> =
+            addr.to_socket_addrs().context("resolving node address")?.collect();
+        if addrs.is_empty() {
+            bail!("node address resolved to nothing");
         }
-        .write_frame(&mut self.writer)
-        .expect("remote node write failed");
-        let reply = Message::read_frame(&mut self.reader)
-            .expect("remote node read failed")
-            .expect("remote node closed mid-insert");
-        let Message::InsertAck { seq: rseq, accepted, total, sealed_now, sealed_total } = reply
-        else {
-            panic!("expected InsertAck, got {reply:?}");
-        };
-        assert_eq!(rseq, seq, "out-of-order insert ack");
-        InsertReply { accepted, total, sealed_now, sealed_total }
+        let (conn, build_ms) = dial(&addrs, &build).map_err(|e| anyhow!("node {node_id}: {e}"))?;
+        let info = NodeInfo { node_id, shard_len, cores: p, build_ms };
+        Ok(RemoteNode {
+            node_id,
+            addrs,
+            build,
+            conn: Some(conn),
+            info,
+            next_qid: 0,
+            next_insert_seq: 0,
+            next_hb_seq: 0,
+        })
     }
-}
 
-impl RemoteNode {
+    fn fault(&mut self, detail: String) -> NodeError {
+        // Poison the stream: after a fault the frame boundary is gone, so
+        // every later request on this connection would read garbage.
+        self.conn = None;
+        NodeError::new(self.node_id, detail)
+    }
+
+    /// One strict request/response round trip; any transport fault
+    /// poisons the connection.
+    fn exchange(&mut self, frame: &Message) -> std::result::Result<Message, NodeError> {
+        let Some(conn) = self.conn.as_mut() else {
+            return Err(NodeError::new(self.node_id, "connection is down (awaiting reconnect)"));
+        };
+        if let Err(e) = frame.write_frame(&mut conn.writer) {
+            return Err(self.fault(format!("write failed: {e}")));
+        }
+        match Message::read_frame(&mut conn.reader) {
+            Ok(Some(m)) => Ok(m),
+            Ok(None) => Err(self.fault("peer closed mid-request".into())),
+            Err(e) => Err(self.fault(format!("read failed: {e}"))),
+        }
+    }
+
     fn batch_roundtrip(
         &mut self,
         qs: Arc<Vec<f32>>,
         nq: usize,
         budget: Budget,
         class: Class,
-    ) -> Vec<NodeReply> {
+    ) -> std::result::Result<Vec<NodeReply>, NodeError> {
         if nq == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         debug_assert_eq!(qs.len() % nq, 0);
         let qid0 = self.next_qid;
@@ -381,16 +424,17 @@ impl RemoteNode {
                 qs: qs.as_ref().clone(),
             }
         };
-        frame.write_frame(&mut self.writer).expect("remote node write failed");
-        let reply = Message::read_frame(&mut self.reader)
-            .expect("remote node read failed")
-            .expect("remote node closed mid-batch");
+        let reply = self.exchange(&frame)?;
         let Message::ReplyBatch { qid0: rqid0, replies } = reply else {
-            panic!("expected ReplyBatch, got {reply:?}");
+            return Err(self.fault(format!("expected ReplyBatch, got {reply:?}")));
         };
-        assert_eq!(rqid0, qid0, "out-of-order batch reply");
-        assert_eq!(replies.len(), nq, "batch reply arity mismatch");
-        replies
+        if rqid0 != qid0 {
+            return Err(self.fault(format!("out-of-order batch reply: {rqid0} != {qid0}")));
+        }
+        if replies.len() != nq {
+            return Err(self.fault(format!("batch reply arity {} != {nq}", replies.len())));
+        }
+        Ok(replies
             .into_iter()
             .enumerate()
             .map(|(i, item)| NodeReply {
@@ -401,12 +445,126 @@ impl RemoteNode {
                 partial: item.partial,
                 shed: item.shed,
             })
-            .collect()
+            .collect())
+    }
+}
+
+impl NodeHandle for RemoteNode {
+    fn node_id(&self) -> usize {
+        self.node_id
+    }
+
+    fn info(&self) -> NodeInfo {
+        self.info.clone()
+    }
+
+    fn query(&mut self, q: &[f32]) -> std::result::Result<NodeReply, NodeError> {
+        let qid = self.next_qid;
+        self.next_qid += 1;
+        let reply = self.exchange(&Message::Query { qid, q: q.to_vec() })?;
+        let Message::Reply { qid: rqid, neighbors, comparisons, inner_probes } = reply else {
+            return Err(self.fault(format!("expected Reply, got {reply:?}")));
+        };
+        if rqid != qid {
+            return Err(self.fault(format!("out-of-order reply: {rqid} != {qid}")));
+        }
+        Ok(NodeReply { qid, neighbors, comparisons, inner_probes, partial: false, shed: false })
+    }
+
+    /// One frame per batch instead of one round trip per query — the
+    /// remote node resolves the block on its batched core path. (The
+    /// wire message needs an owned buffer, so this copies once.)
+    fn query_batch(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+    ) -> std::result::Result<Vec<NodeReply>, NodeError> {
+        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics)
+    }
+
+    /// Admission cuts ship their remaining budget, enforcement policy and
+    /// class with the frame (`QueryBatchBudget`) so the remote node
+    /// enforces the same cut — anchored at frame arrival, the remaining
+    /// value having been computed once at dispatch — and attributes
+    /// overruns per lane; caller-formed blocks ([`Budget::none`]) stay on
+    /// the plain `QueryBatch` frame for protocol compatibility.
+    fn query_batch_budget(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+    ) -> std::result::Result<Vec<NodeReply>, NodeError> {
+        self.batch_roundtrip(qs, nq, budget, class)
+    }
+
+    /// One `InsertBatch` frame per append; the remote live node appends
+    /// to its store, fans the insert to its cores, and acks once every
+    /// core has indexed the points — so a query batched after this
+    /// returns (on this same strictly request/response connection) sees
+    /// them, exactly like the in-process path.
+    fn insert_batch(
+        &mut self,
+        points: &[f32],
+        labels: &[bool],
+    ) -> std::result::Result<InsertReply, NodeError> {
+        let seq = self.next_insert_seq;
+        self.next_insert_seq += 1;
+        let frame = Message::InsertBatch {
+            seq,
+            n: labels.len() as u64,
+            points: points.to_vec(),
+            labels: labels.to_vec(),
+        };
+        let reply = self.exchange(&frame)?;
+        let Message::InsertAck { seq: rseq, accepted, total, sealed_now, sealed_total } = reply
+        else {
+            return Err(self.fault(format!("expected InsertAck, got {reply:?}")));
+        };
+        if rseq != seq {
+            return Err(self.fault(format!("out-of-order insert ack: {rseq} != {seq}")));
+        }
+        Ok(InsertReply { accepted, total, sealed_now, sealed_total })
+    }
+
+    /// One `Heartbeat` frame; the ack carries the far node's liveness and
+    /// ingest counters (the cluster-level seal poll rides this probe).
+    fn heartbeat(&mut self) -> std::result::Result<HeartbeatReply, NodeError> {
+        let seq = self.next_hb_seq;
+        self.next_hb_seq += 1;
+        let reply = self.exchange(&Message::Heartbeat { seq })?;
+        let Message::HeartbeatAck { seq: rseq, live, total, sealed_now, sealed_total } = reply
+        else {
+            return Err(self.fault(format!("expected HeartbeatAck, got {reply:?}")));
+        };
+        if rseq != seq {
+            return Err(self.fault(format!("out-of-order heartbeat ack: {rseq} != {seq}")));
+        }
+        Ok(HeartbeatReply { live, total, sealed_now, sealed_total })
+    }
+
+    /// Re-dial and replay the retained build frame, awaiting a fresh
+    /// `BuildDone`. Batch shards rebuild bit-identically (same seed, same
+    /// shard bytes); a live node comes back EMPTY — re-populating it is
+    /// the replicated orchestrator's responsibility, not the transport's.
+    /// All request sequence counters reset with the new connection.
+    fn reconnect(&mut self) -> std::result::Result<(), NodeError> {
+        self.conn = None;
+        let (conn, build_ms) =
+            dial(&self.addrs, &self.build).map_err(|e| NodeError::new(self.node_id, e))?;
+        self.info.build_ms = build_ms;
+        self.conn = Some(conn);
+        self.next_qid = 0;
+        self.next_insert_seq = 0;
+        self.next_hb_seq = 0;
+        Ok(())
     }
 }
 
 impl Drop for RemoteNode {
     fn drop(&mut self) {
-        let _ = Message::Shutdown.write_frame(&mut self.writer);
+        if let Some(conn) = self.conn.as_mut() {
+            let _ = Message::Shutdown.write_frame(&mut conn.writer);
+        }
     }
 }

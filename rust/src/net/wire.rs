@@ -82,6 +82,19 @@ pub enum Message {
     /// be coherent with `sealed_now` — anything else is a hostile/corrupt
     /// peer, rejected as `BadTag` like the reply-batch flags.
     InsertAck { seq: u64, accepted: u64, total: u64, sealed_now: u64, sealed_total: u64 },
+    /// Root → node: failure-detector probe. A node that answers within
+    /// the deadline is alive; the ack doubles as the cluster-level seal
+    /// poll (see [`NodeHandle::heartbeat`]) so liveness checking and
+    /// age-based seal sweeps ride one frame.
+    ///
+    /// [`NodeHandle::heartbeat`]: crate::coordinator::orchestrator::NodeHandle::heartbeat
+    Heartbeat { seq: u64 },
+    /// Node → root: heartbeat answer. `live` mirrors the node's ingest
+    /// mode; a batch (non-live) node reports all counters zero. Carries
+    /// one validated flags byte (bit 0 = `live`); a non-live ack with
+    /// nonzero counters is incoherent — a hostile/corrupt peer, rejected
+    /// as `BadTag` like the other flag bytes.
+    HeartbeatAck { seq: u64, live: bool, total: u64, sealed_now: u64, sealed_total: u64 },
     /// Root → node: drain and exit.
     Shutdown,
 }
@@ -111,6 +124,8 @@ const TAG_QUERY_BATCH_BUDGET: u8 = 8;
 const TAG_BUILD_LIVE: u8 = 9;
 const TAG_INSERT_BATCH: u8 = 10;
 const TAG_INSERT_ACK: u8 = 11;
+const TAG_HEARTBEAT: u8 = 12;
+const TAG_HEARTBEAT_ACK: u8 = 13;
 
 /// Sanity cap on per-message collection sizes (hostile/corrupt peers).
 const MAX_ITEMS: usize = 1 << 20;
@@ -251,6 +266,18 @@ impl Message {
                 bytes::write_u64(&mut out, *sealed_now).unwrap();
                 bytes::write_u64(&mut out, *sealed_total).unwrap();
                 bytes::write_u8(&mut out, (*sealed_now > 0) as u8).unwrap();
+            }
+            Message::Heartbeat { seq } => {
+                bytes::write_u8(&mut out, TAG_HEARTBEAT).unwrap();
+                bytes::write_u64(&mut out, *seq).unwrap();
+            }
+            Message::HeartbeatAck { seq, live, total, sealed_now, sealed_total } => {
+                bytes::write_u8(&mut out, TAG_HEARTBEAT_ACK).unwrap();
+                bytes::write_u64(&mut out, *seq).unwrap();
+                bytes::write_u64(&mut out, *total).unwrap();
+                bytes::write_u64(&mut out, *sealed_now).unwrap();
+                bytes::write_u64(&mut out, *sealed_total).unwrap();
+                bytes::write_u8(&mut out, *live as u8).unwrap();
             }
             Message::Shutdown => {
                 bytes::write_u8(&mut out, TAG_SHUTDOWN).unwrap();
@@ -404,6 +431,20 @@ impl Message {
                     return Err(CodecError::BadTag(flags as u32, "InsertAckFlags"));
                 }
                 Ok(Message::InsertAck { seq, accepted, total, sealed_now, sealed_total })
+            }
+            TAG_HEARTBEAT => Ok(Message::Heartbeat { seq: bytes::read_u64(&mut r)? }),
+            TAG_HEARTBEAT_ACK => {
+                let seq = bytes::read_u64(&mut r)?;
+                let total = bytes::read_u64(&mut r)?;
+                let sealed_now = bytes::read_u64(&mut r)?;
+                let sealed_total = bytes::read_u64(&mut r)?;
+                // Flags byte: bit 0 = live; unknown bits, or a non-live
+                // node claiming ingest counters, = hostile/corrupt peer.
+                let flags = bytes::read_u8(&mut r)?;
+                if flags > 1 || (flags == 0 && total | sealed_now | sealed_total != 0) {
+                    return Err(CodecError::BadTag(flags as u32, "HeartbeatAckFlags"));
+                }
+                Ok(Message::HeartbeatAck { seq, live: flags == 1, total, sealed_now, sealed_total })
             }
             TAG_SHUTDOWN => Ok(Message::Shutdown),
             t => Err(CodecError::BadTag(t as u32, "Message")),
@@ -595,6 +636,48 @@ mod tests {
         frames
     }
 
+    /// The failure-detector frames: probes across seq values, acks from
+    /// live nodes (all counter shapes) and batch nodes (all-zero) —
+    /// swept by the same roundtrip and truncation property tests.
+    fn heartbeat_frame_corpus() -> Vec<Message> {
+        let mut frames = Vec::new();
+        for seq in [0u64, 1, 7, u64::MAX] {
+            frames.push(Message::Heartbeat { seq });
+        }
+        // Batch node: not live, all counters zero (the only coherent
+        // non-live shape).
+        frames.push(Message::HeartbeatAck {
+            seq: 3,
+            live: false,
+            total: 0,
+            sealed_now: 0,
+            sealed_total: 0,
+        });
+        // Live nodes: quiet, actively sealing, and sealed-in-the-past.
+        frames.push(Message::HeartbeatAck {
+            seq: 4,
+            live: true,
+            total: 0,
+            sealed_now: 0,
+            sealed_total: 0,
+        });
+        frames.push(Message::HeartbeatAck {
+            seq: 5,
+            live: true,
+            total: 4096,
+            sealed_now: 2,
+            sealed_total: 9,
+        });
+        frames.push(Message::HeartbeatAck {
+            seq: 6,
+            live: true,
+            total: 128,
+            sealed_now: 0,
+            sealed_total: 1,
+        });
+        frames
+    }
+
     #[test]
     fn batch_messages_roundtrip() {
         let q = Message::QueryBatch { qid0: 40, nq: 2, qs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
@@ -603,7 +686,11 @@ mod tests {
 
     #[test]
     fn budget_and_reply_frames_roundtrip_across_sweep() {
-        for m in budget_frame_corpus().into_iter().chain(ingest_frame_corpus()) {
+        for m in budget_frame_corpus()
+            .into_iter()
+            .chain(ingest_frame_corpus())
+            .chain(heartbeat_frame_corpus())
+        {
             assert_eq!(roundtrip(&m), m, "frame {m:?}");
         }
     }
@@ -612,7 +699,11 @@ mod tests {
     fn budget_and_reply_frames_reject_truncation_at_every_byte() {
         // Property: EVERY strict prefix of a valid payload must decode to
         // an error — never panic, never silently succeed with less data.
-        for m in budget_frame_corpus().into_iter().chain(ingest_frame_corpus()) {
+        for m in budget_frame_corpus()
+            .into_iter()
+            .chain(ingest_frame_corpus())
+            .chain(heartbeat_frame_corpus())
+        {
             let payload = m.encode();
             assert_eq!(Message::decode(&payload).unwrap(), m);
             for cut in 0..payload.len() {
@@ -771,6 +862,36 @@ mod tests {
         assert!(matches!(
             Message::decode(&payload),
             Err(CodecError::BadTag(0, "InsertAckFlags"))
+        ));
+    }
+
+    #[test]
+    fn bad_heartbeat_ack_flags_byte_is_rejected() {
+        let m = Message::HeartbeatAck {
+            seq: 7,
+            live: true,
+            total: 64,
+            sealed_now: 1,
+            sealed_total: 2,
+        };
+        let mut payload = m.encode();
+        let last = payload.len() - 1;
+        assert_eq!(payload[last], 1);
+        // Unknown bits beyond the live flag.
+        for bad in [2u8, 3, 4, 255] {
+            payload[last] = bad;
+            let got = Message::decode(&payload);
+            assert!(
+                matches!(got, Err(CodecError::BadTag(b, "HeartbeatAckFlags")) if b == bad as u32),
+                "flags byte {bad} must be rejected"
+            );
+        }
+        // The incoherence: a batch (non-live) node claiming ingest
+        // counters.
+        payload[last] = 0;
+        assert!(matches!(
+            Message::decode(&payload),
+            Err(CodecError::BadTag(0, "HeartbeatAckFlags"))
         ));
     }
 

@@ -77,6 +77,33 @@ pub struct InsertReply {
     pub sealed_total: u64,
 }
 
+/// A node's answer to a liveness heartbeat — what travels back to the
+/// shard dispatcher, and over the wire as a `HeartbeatAck` frame. Any
+/// answer at all proves the node lives; for live (streaming) nodes the
+/// payload additionally carries ingest progress, because answering a
+/// heartbeat runs the node's age-seal check ([`LocalNode::poll_seal`]) —
+/// the heartbeat IS the cluster-level seal poll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeartbeatReply {
+    /// Whether this node carries a live (insertable) index. When false
+    /// every count below is zero.
+    pub live: bool,
+    /// Total points in the node's store.
+    pub total: u64,
+    /// Segments the heartbeat's seal poll sealed just now (age expiry on
+    /// a quiet stream).
+    pub sealed_now: u64,
+    /// Total sealed segments.
+    pub sealed_total: u64,
+}
+
+impl HeartbeatReply {
+    /// The batch-built node's answer: alive, no live index, no counts.
+    pub const fn not_live() -> HeartbeatReply {
+        HeartbeatReply { live: false, total: 0, sealed_now: 0, sealed_total: 0 }
+    }
+}
+
 /// One in-process SLSH node: `p` worker threads + shared shard.
 pub struct LocalNode {
     node_id: usize,
@@ -270,9 +297,12 @@ impl LocalNode {
 
     /// Check the age-seal policy now (for a COMPLETELY quiet stream — any
     /// arriving insert already closes an overdue extent on its way in)
-    /// and propagate the seal to the cores. Live nodes only; reachable
-    /// in-process (callers owning the `LocalNode`) — a cluster/wire-level
-    /// poll is a named ROADMAP follow-up.
+    /// and propagate the seal to the cores. Live nodes only. At cluster
+    /// level this runs on every heartbeat (the shard dispatcher's
+    /// periodic liveness probe answers through
+    /// [`NodeHandle::heartbeat`](crate::coordinator::orchestrator::NodeHandle::heartbeat),
+    /// which calls this), so quiet remote streams seal by age without
+    /// anyone owning the `LocalNode` directly.
     pub fn poll_seal(&mut self) -> InsertReply {
         let store = Arc::clone(self.store.as_ref().expect("poll_seal on a batch-built node"));
         let sealed = store.poll_age();

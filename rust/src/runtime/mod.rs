@@ -9,5 +9,6 @@ pub mod service;
 pub use artifacts::{locate, ArtifactError, Manifest};
 pub use pjrt::{XlaRuntime, PAD_DIST};
 pub use service::{
-    CutCounters, IngestCounters, IngestStats, LaneCounters, QueueStats, XlaEngine, XlaService,
+    CutCounters, FailoverCounters, FailoverStats, IngestCounters, IngestStats, LaneCounters,
+    QueueStats, XlaEngine, XlaService,
 };

@@ -316,6 +316,111 @@ impl IngestCounters {
     }
 }
 
+/// Cluster-wide fault-tolerance telemetry, shared by every shard
+/// dispatcher: how often queries were hedged, failed over or degraded to
+/// synthesized sheds, and how replica recovery is going. The hedge/shed
+/// counters are the dashboard complement of
+/// [`QueryResult::shed_nodes`](crate::coordinator::QueryResult) — a
+/// rising `synthesized_sheds` means callers are getting partial answers
+/// because replicas are dead or slow, not because budgets are tight.
+#[derive(Debug, Default)]
+pub struct FailoverCounters {
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+    failovers: AtomicU64,
+    synthesized_sheds: AtomicU64,
+    heartbeats: AtomicU64,
+    reconnect_attempts: AtomicU64,
+    reconnects: AtomicU64,
+    down_transitions: AtomicU64,
+}
+
+/// Snapshot of [`FailoverCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FailoverStats {
+    /// Queries dispatched a second time because the first replica was
+    /// late past the hedge delay.
+    pub hedges: u64,
+    /// Hedged queries won by the hedge replica (the straggler lost).
+    pub hedge_wins: u64,
+    /// Re-dispatches after a replica failed mid-request.
+    pub failovers: u64,
+    /// Requests that degraded to a dispatcher-synthesized shed reply
+    /// (every replica dead or the request timeout elapsed).
+    pub synthesized_sheds: u64,
+    /// Heartbeat probes sent.
+    pub heartbeats: u64,
+    /// Reconnect attempts fired on the backoff schedule.
+    pub reconnect_attempts: u64,
+    /// Reconnects that succeeded (replica revived to `Suspect`).
+    pub reconnects: u64,
+    /// `Up`/`Suspect` → `Down` transitions.
+    pub down_transitions: u64,
+}
+
+impl FailoverCounters {
+    pub fn new() -> FailoverCounters {
+        FailoverCounters::default()
+    }
+
+    pub fn record_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_synthesized_shed(&self) {
+        self.synthesized_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_heartbeat(&self) {
+        self.heartbeats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reconnect_attempt(&self) {
+        self.reconnect_attempts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_down(&self) {
+        self.down_transitions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn hedges(&self) -> u64 {
+        self.hedges.load(Ordering::Relaxed)
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn reconnect_attempts(&self) -> u64 {
+        self.reconnect_attempts.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> FailoverStats {
+        FailoverStats {
+            hedges: self.hedges.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            synthesized_sheds: self.synthesized_sheds.load(Ordering::Relaxed),
+            heartbeats: self.heartbeats.load(Ordering::Relaxed),
+            reconnect_attempts: self.reconnect_attempts.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            down_transitions: self.down_transitions.load(Ordering::Relaxed),
+        }
+    }
+}
+
 enum Request {
     Scan {
         metric: Metric,

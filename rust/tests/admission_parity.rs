@@ -38,7 +38,7 @@ fn admission_matches_sequential_across_configs() {
         // a second cluster serves the admission side without the two
         // streams perturbing each other's qid sequences.
         let reference = build_cluster(&c.data, &p, &ClusterConfig::new(nodes, 2)).unwrap();
-        let seq: Vec<QueryResult> = (0..nq).map(|i| reference.query(c.queries.point(i))).collect();
+        let seq: Vec<QueryResult> = (0..nq).map(|i| reference.query(c.queries.point(i)).unwrap()).collect();
         let mut under_test = build_cluster(&c.data, &p, &ClusterConfig::new(nodes, 2)).unwrap();
 
         for max_batch in [1usize, 4, 16] {
@@ -127,7 +127,7 @@ fn resubmission_after_queue_replacement_still_matches() {
     let c = corpus();
     let p = lsh_params(&c.data, 40, 12, 13);
     let reference = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
-    let want: Vec<QueryResult> = (0..6).map(|i| reference.query(c.queries.point(i))).collect();
+    let want: Vec<QueryResult> = (0..6).map(|i| reference.query(c.queries.point(i)).unwrap()).collect();
 
     let mut cluster = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
     for round in 0..3 {

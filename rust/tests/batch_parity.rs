@@ -155,12 +155,12 @@ fn cluster_query_batch_parity_across_topologies() {
     for (nu, p) in [(1usize, 1usize), (2, 2), (3, 1)] {
         let cluster = build_cluster(&c.data, &params, &ClusterConfig::new(nu, p)).unwrap();
         // Sequential reference.
-        let sequential: Vec<_> = (0..24).map(|i| cluster.query(c.queries.point(i))).collect();
+        let sequential: Vec<_> = (0..24).map(|i| cluster.query(c.queries.point(i)).unwrap()).collect();
         // Batched, in blocks of 1 / 7 / 16 (stragglers included).
         let mut batched = Vec::new();
         for block in [(0usize, 1usize), (1, 8), (8, 24)] {
             let qs: Vec<&[f32]> = (block.0..block.1).map(|i| c.queries.point(i)).collect();
-            batched.extend(cluster.query_batch(&qs));
+            batched.extend(cluster.query_batch(&qs).unwrap());
         }
         assert_eq!(batched.len(), sequential.len());
         for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {

@@ -328,7 +328,7 @@ fn remaining_budget_is_computed_at_dispatch_not_at_cut() {
     let dispatch = move |flat: Vec<f32>, nq: usize, budget: Budget, _class: Class| {
         evt_tx.send((flat.clone(), budget)).unwrap();
         gate_rx.recv().unwrap();
-        (0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect()
+        Ok((0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect())
     };
     let cfg = AdmissionConfig::new(1, 1)
         .with_queue_cap(16)
@@ -372,7 +372,7 @@ fn cluster_policies_flow_to_tickets_and_lane_counters() {
     let dim = c.data.dim;
     let p = lsh_params(&c.data, 40, 12, 13);
     let reference = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
-    let seq: Vec<_> = (0..4).map(|i| reference.query(c.queries.point(i))).collect();
+    let seq: Vec<_> = (0..4).map(|i| reference.query(c.queries.point(i)).unwrap()).collect();
     let mut cluster = build_cluster(&c.data, &p, &ClusterConfig::new(2, 2)).unwrap();
 
     // (c) LogOnly (the default policy), zero budget: bit-identical to
@@ -500,7 +500,7 @@ fn local_and_remote_nodes_enforce_the_same_shipped_budget() {
         AdmissionConfig::new(dim, 4).with_queue_cap(16).with_budget_policy(BudgetPolicy::LogOnly),
     );
     let got = orch.submit(c.queries.point(2), Duration::from_millis(5)).unwrap().wait().unwrap();
-    assert_bit_identical(&got, &reference.query(c.queries.point(2)), "mixed LogOnly");
+    assert_bit_identical(&got, &reference.query(c.queries.point(2)).unwrap(), "mixed LogOnly");
 
     drop(orch);
     assert_eq!(server.join().unwrap(), 3, "remote node must account every budget frame");

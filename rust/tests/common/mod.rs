@@ -1,26 +1,29 @@
 //! Shared helpers for the integration-test suites (admission parity,
-//! priority lanes, budget enforcement, distributed runtime): corpus +
-//! parameter fixtures, TCP cluster spawning, the gated-dispatcher
-//! harness, and the bit-identity assertion. One copy, four suites — a
-//! new scheduling test should never re-implement these.
+//! priority lanes, budget enforcement, distributed runtime, fault
+//! tolerance): corpus + parameter fixtures, TCP cluster spawning, the
+//! gated-dispatcher harness, the fault-injection node double, and the
+//! bit-identity assertion. One copy, five suites — a new scheduling or
+//! failover test should never re-implement these.
 //!
 //! Compiled once per test binary; not every binary uses every helper.
 #![allow(dead_code)]
 
 use std::net::TcpListener;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use dslsh::coordinator::admission::{Budget, Class};
-use dslsh::coordinator::orchestrator::{NodeHandle, Orchestrator};
-use dslsh::coordinator::QueryResult;
+use dslsh::coordinator::orchestrator::{ClusterError, NodeError, NodeHandle, Orchestrator};
+use dslsh::coordinator::{Clock, FailoverConfig, MockClock, QueryResult, ReplicaSet};
 use dslsh::data::{build_corpus, Corpus, CorpusConfig, Dataset, WindowSpec};
 use dslsh::engine::native::NativeEngine;
 use dslsh::engine::DistanceEngine;
 use dslsh::knn::predict::VoteConfig;
 use dslsh::lsh::family::LayerSpec;
 use dslsh::net::{serve_node, RemoteNode};
+use dslsh::node::node::{HeartbeatReply, InsertReply, LocalNode, NodeInfo, NodeReply};
 use dslsh::slsh::{SealPolicy, SlshParams, LIVE_ID_STRIDE};
 use dslsh::util::threadpool::chunk_ranges;
 
@@ -100,11 +103,13 @@ pub fn echo_result(qid: u64, share: f64) -> QueryResult {
 pub fn gated_echo(
     evt_tx: Sender<Vec<f32>>,
     gate_rx: Receiver<()>,
-) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Vec<QueryResult> + Send + 'static {
+) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError>
+       + Send
+       + 'static {
     move |flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class| {
         evt_tx.send(flat.clone()).unwrap();
         gate_rx.recv().unwrap();
-        (0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect()
+        Ok((0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect())
     }
 }
 
@@ -149,6 +154,238 @@ pub fn tcp_live_cluster(
         )
         .unwrap()
     })
+}
+
+/// Failover policy whose timers can only be driven by an explicit
+/// `MockClock` advance: hedge, request timeout and heartbeat are parked
+/// at [`FAR`] (override the field under test); reconnect backoff is
+/// 10 ms · 2ⁿ capped at 160 ms with ZERO jitter, so attempt due-times
+/// are exact clock values the fault suite can step right up to.
+pub fn quiet_failover() -> FailoverConfig {
+    FailoverConfig {
+        hedge_after: FAR,
+        request_timeout: FAR,
+        heartbeat_every: FAR,
+        reconnect_base: Duration::from_millis(10),
+        reconnect_cap: Duration::from_millis(160),
+        reconnect_jitter: 0.0,
+        seed: 7,
+    }
+}
+
+/// Shard `data` into `nu` contiguous parts as `(id_base, shared slice)`
+/// pairs — the inputs every replica of a shard must share so their
+/// tables come out bit-identical.
+pub fn shard_parts(data: &Dataset, nu: usize) -> Vec<(u64, Arc<Dataset>)> {
+    chunk_ranges(data.len(), nu)
+        .into_iter()
+        .map(|r| (r.start as u64, Arc::new(data.shard(r))))
+        .collect()
+}
+
+/// One batch-built [`LocalNode`] replica over a shared shard slice.
+pub fn spawn_replica(
+    shard: &Arc<Dataset>,
+    node_id: usize,
+    id_base: u64,
+    params: &SlshParams,
+    cores: usize,
+) -> LocalNode {
+    LocalNode::spawn(node_id, Arc::clone(shard), id_base, params, cores, native_engines(cores))
+}
+
+/// Unreplicated orchestrator over the same shard layout the replicated
+/// builds use — the bit-identity baseline for the fault-tolerance suite.
+pub fn reference_orchestrator(
+    data: &Dataset,
+    params: &SlshParams,
+    nu: usize,
+    cores: usize,
+) -> Orchestrator {
+    let nodes: Vec<Box<dyn NodeHandle>> = shard_parts(data, nu)
+        .into_iter()
+        .enumerate()
+        .map(|(i, (base, shard))| {
+            Box::new(spawn_replica(&shard, i, base, params, cores)) as Box<dyn NodeHandle>
+        })
+        .collect();
+    Orchestrator::start(nodes, params.k, VoteConfig::default())
+}
+
+/// Start a replicated orchestrator under an injected [`MockClock`] — the
+/// boilerplate every fault test shares.
+pub fn replicated_orch(
+    sets: Vec<ReplicaSet>,
+    k: usize,
+    cfg: FailoverConfig,
+    clock: &Arc<MockClock>,
+) -> Orchestrator {
+    Orchestrator::start_replicated_with_clock(
+        sets,
+        k,
+        VoteConfig::default(),
+        cfg,
+        Arc::clone(clock) as Arc<dyn Clock>,
+    )
+}
+
+/// Erase a concrete node into the `Box<dyn NodeHandle>` the replica-set
+/// constructors take.
+pub fn boxed(node: impl NodeHandle + 'static) -> Box<dyn NodeHandle> {
+    Box::new(node)
+}
+
+/// One [`ReplicaSet`] per shard part, replicas minted by `make` — which
+/// receives `(shard, id_base, slice)` and returns the boxed replicas.
+pub fn replica_sets(
+    parts: &[(u64, Arc<Dataset>)],
+    mut make: impl FnMut(usize, u64, &Arc<Dataset>) -> Vec<Box<dyn NodeHandle>>,
+) -> Vec<ReplicaSet> {
+    parts
+        .iter()
+        .enumerate()
+        .map(|(shard, (base, slice))| ReplicaSet::new(shard, make(shard, *base, slice)))
+        .collect()
+}
+
+/// Mutable fault program for a [`FaultyNode`], shared between the test
+/// and the replica runner thread that owns the node. Flip the switches
+/// mid-run to kill, stall or revive a replica while the cluster serves.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Queries, batches and inserts return `Err` (heartbeats too — a
+    /// dead node answers nothing).
+    pub fail_requests: bool,
+    /// Requests block (releasably) instead of answering — a straggler,
+    /// not a corpse; forces hedges without real sleeps.
+    pub block_queries: bool,
+    /// `reconnect()` returns `Err` (the replica is still unreachable).
+    pub fail_reconnects: bool,
+    /// Requests that reached the node (queries, batches, inserts).
+    pub requests_seen: u64,
+    /// Reconnect attempts that reached the node.
+    pub reconnects_seen: u64,
+}
+
+/// Shared handle to a [`FaultPlan`]: the test flips switches, the node
+/// (on its runner thread) observes them; the condvar wakes requests
+/// parked by `block_queries`.
+pub struct FaultSwitch {
+    plan: Mutex<FaultPlan>,
+    released: Condvar,
+}
+
+impl FaultSwitch {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<FaultSwitch> {
+        Arc::new(FaultSwitch { plan: Mutex::new(FaultPlan::default()), released: Condvar::new() })
+    }
+
+    /// Atomically edit the plan and wake any blocked requests.
+    pub fn set(&self, edit: impl FnOnce(&mut FaultPlan)) {
+        let mut plan = self.plan.lock().unwrap();
+        edit(&mut plan);
+        self.released.notify_all();
+    }
+
+    pub fn requests_seen(&self) -> u64 {
+        self.plan.lock().unwrap().requests_seen
+    }
+
+    pub fn reconnects_seen(&self) -> u64 {
+        self.plan.lock().unwrap().reconnects_seen
+    }
+}
+
+/// A [`NodeHandle`] test double wrapping a real [`LocalNode`]: healthy by
+/// default (bit-identical answers to its inner node), it fails or blocks
+/// requests on command through its [`FaultSwitch`] — the deterministic
+/// stand-in for a crashed or straggling replica. Blocking is bounded
+/// (10 s real time) so a test bug cannot wedge a runner thread forever.
+pub struct FaultyNode {
+    inner: LocalNode,
+    switch: Arc<FaultSwitch>,
+}
+
+impl FaultyNode {
+    pub fn new(inner: LocalNode, switch: Arc<FaultSwitch>) -> FaultyNode {
+        FaultyNode { inner, switch }
+    }
+
+    /// Count the request, park while `block_queries` holds, then fail if
+    /// `fail_requests` holds.
+    fn gate(&self) -> Result<(), NodeError> {
+        let mut plan = self.switch.plan.lock().unwrap();
+        plan.requests_seen += 1;
+        let t0 = Instant::now();
+        while plan.block_queries {
+            assert!(t0.elapsed() < Duration::from_secs(10), "blocked replica never released");
+            let (p, _) =
+                self.switch.released.wait_timeout(plan, Duration::from_millis(50)).unwrap();
+            plan = p;
+        }
+        if plan.fail_requests {
+            Err(NodeError::new(LocalNode::node_id(&self.inner), "injected fault"))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl NodeHandle for FaultyNode {
+    fn node_id(&self) -> usize {
+        LocalNode::node_id(&self.inner)
+    }
+
+    fn info(&self) -> NodeInfo {
+        self.inner.info().clone()
+    }
+
+    fn query(&mut self, q: &[f32]) -> Result<NodeReply, NodeError> {
+        self.gate()?;
+        Ok(self.inner.query(q))
+    }
+
+    fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Result<Vec<NodeReply>, NodeError> {
+        self.gate()?;
+        Ok(self.inner.query_batch(qs, nq))
+    }
+
+    fn query_batch_budget(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+    ) -> Result<Vec<NodeReply>, NodeError> {
+        self.gate()?;
+        Ok(self.inner.query_batch_budget(qs, nq, budget, class))
+    }
+
+    fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> Result<InsertReply, NodeError> {
+        self.gate()?;
+        Ok(self.inner.insert_batch(points, labels))
+    }
+
+    fn heartbeat(&mut self) -> Result<HeartbeatReply, NodeError> {
+        // Heartbeats share the failure switch (a dead node answers
+        // nothing) but never block or count: they are the detector's
+        // traffic, not the workload's.
+        if self.switch.plan.lock().unwrap().fail_requests {
+            return Err(NodeError::new(LocalNode::node_id(&self.inner), "injected fault"));
+        }
+        NodeHandle::heartbeat(&mut self.inner)
+    }
+
+    fn reconnect(&mut self) -> Result<(), NodeError> {
+        let mut plan = self.switch.plan.lock().unwrap();
+        plan.reconnects_seen += 1;
+        if plan.fail_reconnects {
+            Err(NodeError::new(LocalNode::node_id(&self.inner), "injected reconnect fault"))
+        } else {
+            Ok(())
+        }
+    }
 }
 
 /// Shared TCP-cluster scaffolding: port-0 listeners + one server thread

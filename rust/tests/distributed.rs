@@ -44,8 +44,8 @@ fn tcp_cluster_matches_local_cluster() {
 
     for i in 0..25 {
         let q = c.queries.point(i);
-        let a = local.query(q);
-        let b = tcp.query(q);
+        let a = local.query(q).unwrap();
+        let b = tcp.query(q).unwrap();
         assert_eq!(a.prediction, b.prediction, "query {i}");
         assert_eq!(a.max_comparisons, b.max_comparisons, "query {i}");
         assert_eq!(
@@ -111,7 +111,7 @@ fn tcp_admission_with_budget_frames_matches_local_sequential() {
 
     assert_eq!(results.len(), n_queries);
     for (i, b) in &results {
-        let a = local.query(c.queries.point(*i));
+        let a = local.query(c.queries.point(*i)).unwrap();
         assert_eq!(a.prediction, b.prediction, "query {i}");
         assert_eq!(a.max_comparisons, b.max_comparisons, "query {i}");
         assert_eq!(
@@ -164,8 +164,8 @@ fn distributed_knn_equals_single_node_knn() {
     let multi = build_cluster(&c.data, &p, &ClusterConfig::new(4, 2)).unwrap();
     for i in 0..20 {
         let q = c.queries.point(i);
-        let a = single.query(q);
-        let b = multi.query(q);
+        let a = single.query(q).unwrap();
+        let b = multi.query(q).unwrap();
         assert_eq!(
             a.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
             b.neighbors.iter().map(|n| n.id).collect::<Vec<_>>(),
@@ -194,7 +194,7 @@ fn lsh_recall_and_comparisons_vs_pknn() {
     let mut slsh_comp = Vec::new();
     for i in 0..40 {
         let q = c.queries.point(i);
-        let r = cluster.query(q);
+        let r = cluster.query(q).unwrap();
         slsh_comp.push(r.max_comparisons);
         let truth = pknn_query(
             &engine,
@@ -234,6 +234,6 @@ fn node_handle_trait_object_works_for_local_nodes() {
         (0..2).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect();
     let node = LocalNode::spawn(0, shard, 0, &p, 2, engines);
     let mut boxed: Box<dyn NodeHandle> = Box::new(node);
-    let reply = boxed.query(c.queries.point(0));
+    let reply = boxed.query(c.queries.point(0)).unwrap();
     assert!(reply.neighbors.len() <= 10);
 }

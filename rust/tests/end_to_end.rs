@@ -29,8 +29,8 @@ fn xla_cluster_matches_native_cluster_end_to_end() {
     };
     for i in 0..corpus.queries.len() {
         let q = corpus.queries.point(i);
-        let a = native.query(q);
-        let b = xla.query(q);
+        let a = native.query(q).unwrap();
+        let b = xla.query(q).unwrap();
         assert_eq!(a.prediction, b.prediction, "query {i}");
         assert_eq!(a.max_comparisons, b.max_comparisons, "query {i}");
         assert_eq!(

@@ -1,0 +1,470 @@
+//! Deterministic fault-tolerance suite: replica death, hedged requests,
+//! synthesized sheds, reconnect backoff, replicated-insert ack
+//! accounting and the TCP fault → failover → reconnect cycle.
+//!
+//! No sleeps anywhere. Every timer the dispatcher owns (hedge delay,
+//! request timeout, heartbeat cadence, reconnect backoff) reads the
+//! injected `MockClock`, so each test pins timing by advancing the clock
+//! and `wait_until` only bounds the scheduler's *delivery* of an outcome
+//! that is already determined. The baseline for every assertion is an
+//! UNREPLICATED orchestrator over the same shard layout: replication and
+//! failover must change availability, never answers — degraded paths are
+//! asserted field by field (`shed_nodes`, `partial`) against it.
+
+mod common;
+
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::*;
+use dslsh::coordinator::{
+    AdmissionConfig, ClusterError, FailoverConfig, MockClock, Orchestrator, ReplicaSet,
+    SystemClock,
+};
+use dslsh::knn::predict::VoteConfig;
+use dslsh::net::wire::Message;
+use dslsh::net::{serve_node_loop, RemoteNode};
+use dslsh::node::node::LocalNode;
+use dslsh::slsh::SealPolicy;
+
+/// Two shards, two replicas each, every replica healthy: replication
+/// must be invisible — single and batch answers bit-identical to the
+/// unreplicated baseline, zero failover activity, and (after the clock
+/// crosses the heartbeat period) heartbeats that probe every replica
+/// without perturbing anything.
+#[test]
+fn healthy_replicas_are_bit_identical_to_unreplicated() {
+    let c = corpus(2000, 20, 11);
+    let params = lsh_params(&c.data, 40, 12, 5);
+    let reference = reference_orchestrator(&c.data, &params, 2, 2);
+
+    let clock = Arc::new(MockClock::new(0));
+    let cfg = FailoverConfig { heartbeat_every: Duration::from_secs(1), ..quiet_failover() };
+    let sets = replica_sets(&shard_parts(&c.data, 2), |shard, base, slice| {
+        (0..2).map(|_| boxed(spawn_replica(slice, shard, base, &params, 2))).collect()
+    });
+    let orch = replicated_orch(sets, params.k, cfg, &clock);
+
+    for i in 0..10 {
+        let got = orch.query(c.queries.point(i)).unwrap();
+        let want = reference.query(c.queries.point(i)).unwrap();
+        assert_bit_identical(&got, &want, &format!("query {i}"));
+    }
+    let qs: Vec<&[f32]> = (10..20).map(|i| c.queries.point(i)).collect();
+    let got = orch.query_batch(&qs).unwrap();
+    let want = reference.query_batch(&qs).unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_bit_identical(g, w, &format!("batch query {i}"));
+    }
+
+    let stats = orch.failover_stats();
+    assert_eq!(stats.hedges, 0, "frozen clock: the hedge delay can never elapse");
+    assert_eq!(stats.failovers, 0);
+    assert_eq!(stats.synthesized_sheds, 0);
+    assert_eq!(stats.down_transitions, 0);
+    assert_eq!(stats.heartbeats, 0, "heartbeat cadence is clock-driven; the clock is frozen");
+
+    // Cross the heartbeat period: all four replicas get probed (batch
+    // nodes answer "alive, not live-indexed"), and answers afterwards
+    // are still bit-identical — the detector's traffic is invisible to
+    // the workload.
+    clock.advance(Duration::from_secs(1));
+    wait_until(|| orch.failover_stats().heartbeats >= 4, "all four replicas heartbeated");
+    let got = orch.query(c.queries.point(0)).unwrap();
+    let want = reference.query(c.queries.point(0)).unwrap();
+    assert_bit_identical(&got, &want, "post-heartbeat query");
+    assert_eq!(orch.failover_stats().down_transitions, 0);
+}
+
+/// Kill a shard's preferred replica mid-run: the detecting query pays
+/// one failover hop to the twin and still returns the FULL answer
+/// (`shed_nodes == 0`); once the replica is `Down` it is routed around,
+/// so exactly one failover per kill is recorded. Covers both the single
+/// and batch dispatch paths.
+#[test]
+fn killed_replica_fails_over_without_shedding() {
+    let c = corpus(2000, 20, 11);
+    let params = lsh_params(&c.data, 40, 12, 5);
+    let reference = reference_orchestrator(&c.data, &params, 2, 2);
+
+    let clock = Arc::new(MockClock::new(0));
+    let mut switches = Vec::new();
+    let sets = replica_sets(&shard_parts(&c.data, 2), |shard, base, slice| {
+        let switch = FaultSwitch::new();
+        let inner = spawn_replica(slice, shard, base, &params, 2);
+        let primary = FaultyNode::new(inner, Arc::clone(&switch));
+        switches.push(switch);
+        let twin = spawn_replica(slice, shard, base, &params, 2);
+        vec![boxed(primary), boxed(twin)]
+    });
+    let orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+
+    // Healthy warm-up through the (still well-behaved) primaries.
+    for i in 0..5 {
+        let got = orch.query(c.queries.point(i)).unwrap();
+        let want = reference.query(c.queries.point(i)).unwrap();
+        assert_bit_identical(&got, &want, &format!("warm-up query {i}"));
+    }
+    assert_eq!(orch.failover_stats().failovers, 0);
+
+    // Kill shard 0's primary. The next query that touches it fails over
+    // to the twin; the caller never sees a shed or an error.
+    switches[0].set(|p| p.fail_requests = true);
+    for i in 5..15 {
+        let got = orch.query(c.queries.point(i)).unwrap();
+        let want = reference.query(c.queries.point(i)).unwrap();
+        assert_bit_identical(&got, &want, &format!("query {i} across the kill"));
+    }
+    let stats = orch.failover_stats();
+    assert_eq!(stats.down_transitions, 1);
+    assert_eq!(stats.failovers, 1, "only the detecting query pays the hop; Down is routed around");
+    assert_eq!(stats.synthesized_sheds, 0);
+    assert_eq!(stats.reconnect_attempts, 0, "frozen clock: backoff cannot elapse");
+
+    // Kill shard 1's primary too and take the batch path across it.
+    switches[1].set(|p| p.fail_requests = true);
+    let qs: Vec<&[f32]> = (0..8).map(|i| c.queries.point(i)).collect();
+    let got = orch.query_batch(&qs).unwrap();
+    let want = reference.query_batch(&qs).unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_bit_identical(g, w, &format!("batch query {i} across the second kill"));
+    }
+    let stats = orch.failover_stats();
+    assert_eq!(stats.down_transitions, 2);
+    assert_eq!(stats.failovers, 2);
+    assert_eq!(stats.synthesized_sheds, 0);
+}
+
+/// A shard whose ONLY replica is dead cannot answer — but the cluster
+/// must degrade, not hang or error: the dispatcher synthesizes a shed
+/// reply immediately (errors are prompt, not timeouts), the caller gets
+/// the live shards' answer with `shed_nodes == 1` and `partial` set, and
+/// the admission path completes monitor tickets the same way.
+#[test]
+fn dead_shard_degrades_to_synthesized_shed_not_a_hang() {
+    let c = corpus(2000, 12, 11);
+    let params = lsh_params(&c.data, 40, 12, 5);
+    let parts = shard_parts(&c.data, 2);
+
+    // Baseline: shard 0 alone — the dead shard must contribute nothing.
+    let solo = vec![boxed(spawn_replica(&parts[0].1, 0, parts[0].0, &params, 2))];
+    let reference = Orchestrator::start(solo, params.k, VoteConfig::default());
+
+    let clock = Arc::new(MockClock::new(0));
+    let switch = FaultSwitch::new();
+    switch.set(|p| p.fail_requests = true); // dead before the first request
+    let healthy = boxed(spawn_replica(&parts[0].1, 0, parts[0].0, &params, 2));
+    let inner = spawn_replica(&parts[1].1, 1, parts[1].0, &params, 2);
+    let dead = FaultyNode::new(inner, Arc::clone(&switch));
+    let sets = vec![ReplicaSet::new(0, vec![healthy]), ReplicaSet::new(1, vec![boxed(dead)])];
+    let mut orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+
+    for i in 0..2 {
+        let got = orch.query(c.queries.point(i)).unwrap();
+        let want = reference.query(c.queries.point(i)).unwrap();
+        assert_eq!(got.neighbors, want.neighbors, "query {i}: only shard 0 contributes");
+        assert_eq!(got.prediction, want.prediction, "query {i}");
+        assert_eq!(got.max_comparisons, want.max_comparisons, "query {i}");
+        assert!(got.partial, "query {i}: a shed shard makes the answer partial");
+        assert_eq!(got.shed_nodes, 1, "query {i}");
+        let zeros = vec![0u64; 2];
+        assert_eq!(got.per_node_comparisons[1], zeros, "query {i}: dead shard scanned nothing");
+    }
+    let stats = orch.failover_stats();
+    assert_eq!(stats.down_transitions, 1, "first failure marks Down; later queries skip it");
+    assert_eq!(stats.synthesized_sheds, 2);
+
+    // Batch path: one synthesized shed covers the whole lost job, and
+    // every rider degrades identically.
+    let qs: Vec<&[f32]> = (2..5).map(|i| c.queries.point(i)).collect();
+    for (i, g) in orch.query_batch(&qs).unwrap().iter().enumerate() {
+        assert_eq!(g.shed_nodes, 1, "batch query {i}");
+        assert!(g.partial, "batch query {i}");
+    }
+    assert_eq!(orch.failover_stats().synthesized_sheds, 3);
+
+    // Monitor tickets through the admission layer complete promptly too:
+    // the shed is synthesized on failure, not at request_timeout (which
+    // is parked FAR away and would time the test out if waited on).
+    // max_batch = 1 so the lone submit triggers an immediate fill cut.
+    orch.enable_admission(AdmissionConfig::new(c.data.dim, 1).with_queue_cap(16));
+    let ticket = orch.submit(c.queries.point(5), FAR).unwrap();
+    let r = ticket.wait().unwrap();
+    assert_eq!(r.shed_nodes, 1);
+    assert!(r.partial);
+}
+
+/// Hedge timing, pinned: with the primary stalling (not dead) and the
+/// clock frozen 1 ms short of `hedge_after`, no hedge may fire and the
+/// query cannot complete; crossing the threshold fires exactly one hedge
+/// to the twin, whose reply wins and is bit-identical to the baseline.
+#[test]
+fn hedge_fires_exactly_at_the_configured_delay() {
+    let c = corpus(1500, 8, 3);
+    let params = lsh_params(&c.data, 40, 12, 5);
+    let parts = shard_parts(&c.data, 1);
+    let reference = reference_orchestrator(&c.data, &params, 1, 2);
+
+    let clock = Arc::new(MockClock::new(0));
+    let switch = FaultSwitch::new();
+    switch.set(|p| p.block_queries = true); // a straggler, not a corpse
+    let inner = spawn_replica(&parts[0].1, 0, parts[0].0, &params, 2);
+    let straggler = FaultyNode::new(inner, Arc::clone(&switch));
+    let twin = spawn_replica(&parts[0].1, 0, parts[0].0, &params, 2);
+    let sets = vec![ReplicaSet::new(0, vec![boxed(straggler), boxed(twin)])];
+    let cfg = FailoverConfig { hedge_after: Duration::from_millis(100), ..quiet_failover() };
+    let orch = replicated_orch(sets, params.k, cfg, &clock);
+
+    let (tx, rx) = channel();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            tx.send(orch.query(c.queries.point(0)).unwrap()).unwrap();
+        });
+        // The primary is holding the query. One millisecond short of the
+        // hedge delay nothing may happen: the twin has not been asked,
+        // so completing is impossible — not merely unlikely.
+        wait_until(|| switch.requests_seen() >= 1, "the primary to receive the query");
+        clock.advance(Duration::from_millis(99));
+        assert_eq!(orch.failover_stats().hedges, 0, "hedge before hedge_after");
+        assert!(rx.try_recv().is_err(), "query completed with its only live replica stalled");
+
+        // Crossing hedge_after fires the hedge; the twin answers and the
+        // straggler never influences the result.
+        clock.advance(Duration::from_millis(1));
+        wait_until(|| orch.failover_stats().hedges == 1, "the hedge to fire");
+        let got = rx.recv().unwrap();
+        let want = reference.query(c.queries.point(0)).unwrap();
+        assert_bit_identical(&got, &want, "hedged query");
+        let stats = orch.failover_stats();
+        assert_eq!(stats.hedge_wins, 1, "the twin's reply won the race");
+        assert_eq!(stats.failovers, 0);
+        assert_eq!(stats.synthesized_sheds, 0);
+        assert_eq!(stats.down_transitions, 0, "a straggler is Suspect, never Down");
+
+        // Release the straggler so its runner can drain; the late reply
+        // is absorbed, never completing the query twice.
+        switch.set(|p| p.block_queries = false);
+    });
+}
+
+/// Reconnect backoff is gated by the injected clock, exactly: the first
+/// attempt is due `reconnect_base` (10 ms) after the death, fires at
+/// 10 ms and not at 10 ms − 1 ns, and a revived node rejoins through a
+/// successful attempt — after which queries are full and bit-identical
+/// again.
+#[test]
+fn reconnect_backoff_is_gated_by_the_injected_clock() {
+    let c = corpus(1500, 8, 3);
+    let params = lsh_params(&c.data, 40, 12, 5);
+    let parts = shard_parts(&c.data, 1);
+    let reference = reference_orchestrator(&c.data, &params, 1, 2);
+
+    let clock = Arc::new(MockClock::new(0));
+    let switch = FaultSwitch::new();
+    switch.set(|p| {
+        p.fail_requests = true;
+        p.fail_reconnects = true;
+    });
+    let inner = spawn_replica(&parts[0].1, 0, parts[0].0, &params, 2);
+    let faulty = FaultyNode::new(inner, Arc::clone(&switch));
+    let sets = vec![ReplicaSet::new(0, vec![boxed(faulty)])];
+    let orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+
+    // The first query detects the death at t = 0 and schedules the first
+    // reconnect attempt for t = 10 ms; both queries degrade to sheds.
+    for i in 0..2 {
+        let r = orch.query(c.queries.point(i)).unwrap();
+        assert_eq!(r.shed_nodes, 1, "query {i}");
+        assert!(r.partial, "query {i}");
+    }
+    assert_eq!(orch.failover_stats().down_transitions, 1);
+    assert_eq!(orch.failover_stats().reconnect_attempts, 0, "frozen clock: nothing is due");
+
+    // 1 ns short of due: serving another query drives the dispatcher
+    // through its duty cycle, yet the attempt must not fire.
+    clock.set_ns(10_000_000 - 1);
+    let r = orch.query(c.queries.point(2)).unwrap();
+    assert_eq!(r.shed_nodes, 1);
+    assert_eq!(orch.failover_stats().reconnect_attempts, 0, "attempt fired before its due time");
+
+    // At exactly 10 ms the attempt fires — and fails, re-arming the
+    // schedule at the next exponential step.
+    clock.set_ns(10_000_000);
+    wait_until(|| switch.reconnects_seen() == 1, "the first attempt to reach the node");
+    assert_eq!(orch.failover_stats().reconnect_attempts, 1);
+    assert_eq!(orch.failover_stats().reconnects, 0);
+
+    // Revive the node and walk the clock forward: the next due attempt
+    // succeeds, the replica rejoins (as Suspect), and the very next
+    // query is complete and bit-identical again.
+    switch.set(|p| {
+        p.fail_requests = false;
+        p.fail_reconnects = false;
+    });
+    wait_until(
+        || {
+            clock.advance(Duration::from_millis(5));
+            orch.failover_stats().reconnects == 1
+        },
+        "the reconnect to succeed",
+    );
+    let got = orch.query(c.queries.point(3)).unwrap();
+    let want = reference.query(c.queries.point(3)).unwrap();
+    assert_bit_identical(&got, &want, "post-recovery query");
+    assert_eq!(orch.failover_stats().synthesized_sheds, 3, "only pre-recovery queries shed");
+}
+
+/// The full TCP cycle: a remote replica's connection dies mid-request →
+/// the dispatcher fails over to the in-process sibling (full answer) →
+/// the backoff re-dials through `serve_node_loop`, which replays the
+/// build bit-identically → when the sibling later dies, traffic fails
+/// over BACK onto the fresh connection. The honest server's query count
+/// proves the reconnected link carried the post-recovery traffic.
+#[test]
+fn tcp_fault_fails_over_then_reconnects_on_a_fresh_connection() {
+    let c = corpus(1500, 8, 3);
+    let params = lsh_params(&c.data, 40, 12, 5);
+    let parts = shard_parts(&c.data, 1);
+    let reference = reference_orchestrator(&c.data, &params, 1, 2);
+
+    let listener = Arc::new(TcpListener::bind("127.0.0.1:0").unwrap());
+    let addr = listener.local_addr().unwrap();
+
+    // Flaky first connection: serve the build honestly, then read exactly
+    // one request and vanish without replying — a mid-request disconnect
+    // the client must surface as a fault, not a panic or a hang.
+    let flaky = {
+        let listener = Arc::clone(&listener);
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = std::io::BufWriter::new(stream);
+            let build = Message::read_frame(&mut reader).unwrap().unwrap();
+            let Message::Build { shard, .. } = build else {
+                panic!("expected Build, got {build:?}");
+            };
+            Message::BuildDone { node_id: 0, shard_len: shard.len() as u64, build_ms: 0.0 }
+                .write_frame(&mut writer)
+                .unwrap();
+            let _ = Message::read_frame(&mut reader).unwrap();
+        })
+    };
+
+    let remote =
+        RemoteNode::connect(addr, 0, c.data.shard(0..c.data.len()), 0, &params, 2).unwrap();
+    let switch = FaultSwitch::new();
+    let inner = spawn_replica(&parts[0].1, 0, parts[0].0, &params, 2);
+    let sibling = FaultyNode::new(inner, Arc::clone(&switch));
+    let clock = Arc::new(MockClock::new(0));
+    let sets = vec![ReplicaSet::new(0, vec![boxed(remote), boxed(sibling)])];
+    let orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+
+    // Query 0 hits the remote primary, whose connection dies mid-request;
+    // the dispatcher fails over to the sibling. Full answer, no shed.
+    let got = orch.query(c.queries.point(0)).unwrap();
+    let want = reference.query(c.queries.point(0)).unwrap();
+    assert_bit_identical(&got, &want, "query across the TCP fault");
+    flaky.join().unwrap();
+    let stats = orch.failover_stats();
+    assert_eq!(stats.down_transitions, 1);
+    assert_eq!(stats.failovers, 1);
+
+    // Honest server for the recovery: re-accepts once, gets the replayed
+    // build frame, serves until the cluster shuts down.
+    let server = {
+        let listener = Arc::clone(&listener);
+        std::thread::spawn(move || serve_node_loop(&listener, None, 1).unwrap())
+    };
+    clock.advance(Duration::from_millis(20)); // past the 10 ms first backoff
+    wait_until(|| orch.failover_stats().reconnects == 1, "the TCP reconnect");
+
+    // Kill the sibling: traffic must fail over BACK to the revived
+    // remote, over the fresh connection and the bit-identically rebuilt
+    // index.
+    switch.set(|p| p.fail_requests = true);
+    for i in 1..3 {
+        let got = orch.query(c.queries.point(i)).unwrap();
+        let want = reference.query(c.queries.point(i)).unwrap();
+        assert_bit_identical(&got, &want, &format!("query {i} on the reconnected remote"));
+    }
+    let stats = orch.failover_stats();
+    assert_eq!(stats.down_transitions, 2);
+    assert_eq!(stats.failovers, 2);
+    assert_eq!(stats.synthesized_sheds, 0);
+
+    // Clean shutdown closes the remote; the honest server saw exactly
+    // the two post-reconnect queries (heartbeats are parked FAR away and
+    // never count toward the served total anyway).
+    drop(orch);
+    assert_eq!(server.join().unwrap(), 2);
+}
+
+/// Replicated ingest: a batch fans out to every live replica and the ack
+/// reports exactly how many hold it; one dead replica degrades the ack
+/// count (the data stays durable and queryable), zero live replicas is a
+/// loud [`ClusterError::ShardUnavailable`] — never silent data loss.
+#[test]
+fn replicated_insert_fans_out_and_reports_ack_count() {
+    let c = corpus(1500, 8, 3);
+    let d = &c.data;
+    let params = lsh_params(d, 40, 12, 5);
+    let policy = SealPolicy::by_size(500);
+
+    let clock = Arc::new(MockClock::new(0));
+    let switches = [FaultSwitch::new(), FaultSwitch::new()];
+    let replicas: Vec<_> = switches
+        .iter()
+        .map(|sw| {
+            // Replicas mint ids from the same base and apply the same
+            // batches in the same order, so they stay interchangeable.
+            let inner = LocalNode::spawn_live(
+                0,
+                0,
+                &params,
+                2,
+                native_engines(2),
+                Arc::new(SystemClock::new()),
+                policy,
+            );
+            boxed(FaultyNode::new(inner, Arc::clone(sw)))
+        })
+        .collect();
+    let sets = vec![ReplicaSet::new(0, replicas)];
+    let orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+
+    // Healthy: the batch lands on every replica.
+    let dim = d.dim;
+    let out = orch.insert_batch(&d.points[..250 * dim], &d.labels[..250]).unwrap();
+    assert_eq!(out.replicas_acked, 2, "healthy fan-out reaches both replicas");
+    assert_eq!(out.accepted, 250);
+    assert_eq!(out.node_total, 250);
+
+    // One replica dead: the batch is still durable (one ack) and the
+    // caller is told exactly how many replicas hold it.
+    switches[0].set(|p| p.fail_requests = true);
+    let out = orch.insert_batch(&d.points[250 * dim..500 * dim], &d.labels[250..500]).unwrap();
+    assert_eq!(out.replicas_acked, 1, "a dead replica cannot ack");
+    assert_eq!(out.node_total, 500);
+    assert_eq!(orch.failover_stats().down_transitions, 1);
+
+    // The surviving replica serves queries over BOTH batches.
+    let r = orch.query(d.point(300)).unwrap();
+    assert!(
+        r.neighbors.iter().any(|n| n.id == 300 && n.dist == 0.0),
+        "a point from the degraded batch must be indexed: {:?}",
+        r.neighbors
+    );
+    assert_eq!(r.shed_nodes, 0);
+
+    // Zero acks is an error, not silent data loss...
+    switches[1].set(|p| p.fail_requests = true);
+    let err = orch.insert_batch(&d.points[500 * dim..501 * dim], &d.labels[500..501]).unwrap_err();
+    assert_eq!(err, ClusterError::ShardUnavailable { shard: 0 });
+    // ...while queries degrade to a shed instead of hanging.
+    let r = orch.query(d.point(0)).unwrap();
+    assert_eq!(r.shed_nodes, 1);
+    assert!(r.partial);
+    assert!(r.neighbors.is_empty());
+}

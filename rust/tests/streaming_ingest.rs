@@ -420,14 +420,14 @@ fn insert_batch_local_and_tcp_clusters_are_bit_identical() {
         let at = b * batch;
         let pts = &d.points[at * d.dim..(at + batch) * d.dim];
         let lbs = &d.labels[at..at + batch];
-        let lo = local.insert_batch(pts, lbs);
-        let ro = remote.insert_batch(pts, lbs);
+        let lo = local.insert_batch(pts, lbs).unwrap();
+        let ro = remote.insert_batch(pts, lbs).unwrap();
         assert_eq!(lo, ro, "insert acks diverged at batch {b}");
         assert_eq!(lo.node, b % 2);
         if b % 5 == 4 {
             let qi = b % c.queries.len();
-            let lr = local.query(c.queries.point(qi));
-            let rr = remote.query(c.queries.point(qi));
+            let lr = local.query(c.queries.point(qi)).unwrap();
+            let rr = remote.query(c.queries.point(qi)).unwrap();
             assert_bit_identical(&lr, &rr, &format!("query after batch {b}"));
         }
     }
@@ -438,8 +438,8 @@ fn insert_batch_local_and_tcp_clusters_are_bit_identical() {
     assert_eq!(li.sealed_segments, 2 * (d.len() as u64 / 2 / 300));
     // Full query sweep over the final index.
     for qi in 0..c.queries.len() {
-        let lr = local.query(c.queries.point(qi));
-        let rr = remote.query(c.queries.point(qi));
+        let lr = local.query(c.queries.point(qi)).unwrap();
+        let rr = remote.query(c.queries.point(qi)).unwrap();
         assert_bit_identical(&lr, &rr, &format!("final query {qi}"));
         assert!(!lr.partial);
     }
@@ -465,13 +465,14 @@ fn per_lane_ingest_counters_surface_next_to_partials() {
     let mut orch = Orchestrator::start(nodes, params.k, VoteConfig::default());
     orch.enable_admission(AdmissionConfig::new(c.data.dim, 4));
     let d = &c.data;
-    orch.insert_batch_class(&d.points[..100 * d.dim], &d.labels[..100], Class::Monitor);
+    orch.insert_batch_class(&d.points[..100 * d.dim], &d.labels[..100], Class::Monitor).unwrap();
     orch.insert_batch_class(
         &d.points[100 * d.dim..130 * d.dim],
         &d.labels[100..130],
         Class::Analytics,
-    );
-    orch.insert_batch(&d.points[130 * d.dim..135 * d.dim], &d.labels[130..135]);
+    )
+    .unwrap();
+    orch.insert_batch(&d.points[130 * d.dim..135 * d.dim], &d.labels[130..135]).unwrap();
     let stats = orch.admission().unwrap().stats();
     assert_eq!(stats.monitor.inserted, 105, "default class is Monitor");
     assert_eq!(stats.analytics.inserted, 30);

@@ -29,15 +29,20 @@ fi
 # pipelining semantics (the PR 2 overrun repro); budget_enforcement the
 # deterministic partial/shed/log-only enforcement contract (PR 4);
 # streaming_ingest the live-index contracts (seal equivalence, snapshot
-# consistency under concurrent inserts, local/TCP insert parity — PR 5).
+# consistency under concurrent inserts, local/TCP insert parity — PR 5);
+# fault_tolerance the deterministic replication contract (hedge/backoff
+# timing under MockClock, failover bit-identity, synthesized sheds — PR 6).
 cargo test -q --test admission_parity
 cargo test -q --test admission_priority
 cargo test -q --test budget_enforcement
 cargo test -q --test streaming_ingest
+cargo test -q --test fault_tolerance
 cargo test -q --lib coordinator::admission
 
-# Bench smoke: asserts the admission-latency and ingest benches produce
-# non-empty CSVs for every scenario (artifact plumbing, not timing
-# quality). CI uploads results/*.csv.
+# Bench smoke: asserts the admission-latency, ingest and hedging benches
+# produce non-empty CSVs for every scenario (artifact plumbing, not
+# timing quality; hedging additionally asserts the hedged run hedged).
+# CI uploads results/*.csv.
 cargo bench --bench admission_latency -- --smoke
 cargo bench --bench ingest -- --smoke
+cargo bench --bench hedging -- --smoke
