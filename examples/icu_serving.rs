@@ -46,6 +46,7 @@ use dslsh::engine::DistanceEngine;
 use dslsh::experiments::{cached_corpus, eval_pknn, outer_params};
 use dslsh::knn::predict::VoteConfig;
 use dslsh::metrics::Confusion;
+use dslsh::net::{EdgeConfig, EdgeServer};
 use dslsh::node::node::{HeartbeatReply, LocalNode, NodeInfo, NodeReply};
 use dslsh::slsh::SealPolicy;
 use dslsh::util::stats;
@@ -92,6 +93,24 @@ impl NodeHandle for KillableNode {
         self.check()?;
         Ok(HeartbeatReply::not_live())
     }
+}
+
+/// One close-framed HTTP exchange: write the request, read to EOF (the
+/// edge speaks one request per connection with `Connection: close`).
+fn http(addr: std::net::SocketAddr, req: &str) -> anyhow::Result<String> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.write_all(req.as_bytes())?;
+    let mut reply = String::new();
+    s.read_to_string(&mut reply)?;
+    Ok(reply)
+}
+
+/// Status line + body of a close-framed HTTP reply, for printing.
+fn status_and_body(reply: &str) -> (&str, &str) {
+    let status = reply.lines().next().unwrap_or("");
+    let body = reply.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    (status, body)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -442,7 +461,7 @@ fn main() -> anyhow::Result<()> {
         sets.push(ReplicaSet::new(shard_id, replicas));
     }
     let replicated =
-        Orchestrator::start_replicated(sets, params.k, VoteConfig::default(), failover);
+        Arc::new(Orchestrator::start_replicated(sets, params.k, VoteConfig::default(), failover));
     for i in 0..200usize {
         if i == 100 {
             // Replica 0 of shard 0 dies mid-run (kill_switches is laid
@@ -468,5 +487,46 @@ fn main() -> anyhow::Result<()> {
         "degraded   both replicas down: answer still in budget, shed_nodes={} partial={} ✓",
         r.shed_nodes, r.partial
     );
+
+    // HTTP front door: the SAME degraded cluster behind the serving edge
+    // (rust/src/net/edge.rs). Everything the orchestrator knows shows up
+    // in status codes: liveness stays 200, readiness flips to 503 while a
+    // shard has no live replica, and a query comes back as a 206 with the
+    // damage flagged in the JSON — no client library required, plain
+    // curl sees it all.
+    println!();
+    println!("== HTTP serving edge (the degraded cluster behind the JSON front door) ==");
+    let edge = EdgeServer::start(
+        Arc::clone(&replicated),
+        std::net::TcpListener::bind("127.0.0.1:0")?,
+        EdgeConfig::new(corpus.data.dim),
+    )?;
+    let addr = edge.addr();
+    println!("listening on http://{addr}  (try: curl -s {addr}/healthz)");
+    let reply = http(addr, "GET /healthz HTTP/1.1\r\nHost: icu\r\n\r\n")?;
+    let (status, body) = status_and_body(&reply);
+    println!("GET  /healthz   -> {status}   {body}");
+    let reply = http(addr, "GET /readyz HTTP/1.1\r\nHost: icu\r\n\r\n")?;
+    let (status, body) = status_and_body(&reply);
+    println!("GET  /readyz    -> {status}   {body}");
+    let point: Vec<String> = corpus.queries.point(0).iter().map(|v| format!("{v}")).collect();
+    let q_body = format!("{{\"point\":[{}]}}", point.join(","));
+    let req = format!(
+        "POST /v1/query HTTP/1.1\r\nHost: icu\r\nContent-Length: {}\r\n\r\n{q_body}",
+        q_body.len()
+    );
+    let query_reply = http(addr, &req)?;
+    let (status, body) = status_and_body(&query_reply);
+    println!("POST /v1/query  -> {status}");
+    println!("                   {body}");
+    let reply = http(addr, "GET /v1/stats HTTP/1.1\r\nHost: icu\r\n\r\n")?;
+    let (status, _) = status_and_body(&reply);
+    println!("GET  /v1/stats  -> {status}   ({:?})", edge.stats().query);
+    assert!(status.contains("200"), "stats endpoint must serve");
+    assert!(
+        query_reply.starts_with("HTTP/1.1 206"),
+        "degraded query must be a flagged 206 over HTTP"
+    );
+    println!("the shard outage is visible end to end: 503 readiness + 206 partial answers ✓");
     Ok(())
 }

@@ -94,5 +94,29 @@ fn main() -> anyhow::Result<()> {
         out.stats(0).comparisons
     );
     println!("(full streaming cluster: examples/icu_serving.rs; rates: cargo bench --bench ingest)");
+
+    // 6. HTTP front door (zero-dependency; see rust/src/net/edge.rs and
+    //    the tail of examples/icu_serving.rs for a running server). Any
+    //    orchestrator can be served over plain HTTP/1.1 + JSON:
+    //
+    //        use dslsh::net::{EdgeConfig, EdgeServer};
+    //        let listener = std::net::TcpListener::bind("127.0.0.1:8080")?;
+    //        let edge = EdgeServer::start(orch, listener, EdgeConfig::new(dim))?;
+    //
+    //    and then exercised from a shell — one request per connection,
+    //    responses close-framed:
+    //
+    //        curl -s localhost:8080/healthz
+    //        curl -s localhost:8080/readyz          # 503 while a shard has no live replica
+    //        curl -s localhost:8080/v1/stats        # edge/admission/ingest/failover counters
+    //        curl -s -X POST localhost:8080/v1/query \
+    //             -d '{"point":[0.1,0.2, ...], "budget_us":2000, "policy":"partial", "class":"monitor"}'
+    //        curl -s -X POST localhost:8080/v1/insert \
+    //             -d '{"points":[[0.1,0.2, ...]], "labels":[true]}'
+    //
+    //    A blown budget comes back as `206 Partial Content` with
+    //    `"partial":true`; a full admission queue as `429` with a
+    //    `Retry-After` header; malformed input as a typed 4xx JSON error
+    //    (see rust/tests/http_edge.rs for the full hostile-input battery).
     Ok(())
 }

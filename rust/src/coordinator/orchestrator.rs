@@ -1256,6 +1256,7 @@ impl ShardDispatcher {
                 self.reconnect[idx] = None;
                 if self.health[idx] == Health::Down {
                     self.health[idx] = Health::Suspect;
+                    self.counters.record_down_recovered();
                 }
             }
             ReplicaOutcome::Queries(Err(_))
@@ -1273,6 +1274,10 @@ impl ShardDispatcher {
     }
 
     fn on_ok(&mut self, idx: usize) {
+        if self.health[idx] == Health::Down {
+            // A late reply from a replica we had written off: it lives.
+            self.counters.record_down_recovered();
+        }
         self.health[idx] = Health::Up;
         self.reconnect[idx] = None;
     }

@@ -1,0 +1,657 @@
+//! HTTP/JSON serving edge: the cluster's front door.
+//!
+//! [`EdgeServer`] accepts plain HTTP/1.1 connections (std `TcpListener`,
+//! zero dependencies — parsing lives in [`crate::net::http`]), validates
+//! typed JSON request bodies over [`crate::util::json`], and maps them
+//! onto the Orchestrator's admission lanes:
+//!
+//! * `POST /v1/query` — `{"point": [f32; dim], "class"?: "monitor" |
+//!   "analytics", "budget_us"?: u64, "policy"?: "log_only" | "partial" |
+//!   "shed"}`. With the admission layer installed the edge calls
+//!   `try_submit_class`, so a full queue is a `429` with `Retry-After`
+//!   (backpressure is part of the API contract) — and `"policy"` is
+//!   advisory there, because enforcement policy is a property of the
+//!   installed [`AdmissionConfig`], not of one request. Without
+//!   admission, the edge drives `query_batch_flat` directly and
+//!   `"budget_us"`/`"policy"` form the [`Budget`] verbatim. A
+//!   budget-blown answer (`QueryResult::partial`) comes back as `206`
+//!   with `"partial":true` and `"shed_nodes"` — degraded, flagged, never
+//!   silent.
+//! * `POST /v1/insert` — `{"points": [[f32; dim]..], "labels": [bool..],
+//!   "class"?}` → [`Orchestrator::insert_batch_class`]; a zero-ack insert
+//!   (`ClusterError::ShardUnavailable`) is `503`, and the response body
+//!   reports `replicas_acked` so under-replicated writes are visible.
+//! * `GET /v1/stats` — edge / admission / ingest / failover counters in
+//!   one JSON document.
+//! * `GET /healthz` — process liveness (always `200` while serving).
+//! * `GET /readyz` — cluster readiness: `200` only while the PR 6
+//!   failure detector reports every replica reachable
+//!   (`FailoverStats::replicas_down == 0`), else `503` — so a load
+//!   balancer stops routing to an edge whose cluster is degraded.
+//!
+//! Time is injected: the read deadline (slowloris cut-off) and the
+//! per-request latency counters run on the [`Clock`] handed to
+//! [`EdgeServer::start_with_clock`], so the whole edge is deterministic
+//! under a `MockClock` in tests and `SystemClock` in production. The
+//! status-code ↔ cluster-semantics table lives in [`crate::net::http`].
+
+use std::io::{Read as _, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{
+    AdmissionError, AdmissionStats, Budget, BudgetPolicy, Class, ClusterError, LaneStats,
+    Orchestrator, QueryResult,
+};
+use crate::net::http::{parse_request, HttpError, Limits, Request, Response};
+use crate::runtime::service::{
+    EdgeCounters, EdgeEndpoint, EdgeStats, FailoverStats, IngestStats,
+};
+use crate::util::clock::{Clock, SystemClock};
+use crate::util::json::{Json, JsonObj};
+
+/// Serving-edge tunables. `dim` must match the cluster: the edge
+/// pre-validates point dimension so a wrong-sized query is a typed `400`
+/// at the boundary instead of an assertion deep in the admission layer.
+#[derive(Debug, Clone)]
+pub struct EdgeConfig {
+    /// Query/insert point dimensionality (the cluster's `dim`).
+    pub dim: usize,
+    /// HTTP parser caps (head/header-count/body).
+    pub limits: Limits,
+    /// Total time a client gets to deliver one full request, measured on
+    /// the injected clock (slowloris cut-off → `408`).
+    pub read_timeout: Duration,
+    /// OS-level poll interval while waiting for request bytes: the real
+    /// `set_read_timeout` on the socket, after which the deadline is
+    /// re-checked on the injected clock.
+    pub read_poll: Duration,
+    /// Seconds advertised in `Retry-After` on a `429`.
+    pub retry_after_s: u32,
+    /// Budget assigned to queries that do not send `"budget_us"` when the
+    /// admission layer is installed (the queue needs a deadline to
+    /// schedule by; the default is long enough to behave as "no
+    /// deadline").
+    pub default_budget: Duration,
+}
+
+impl EdgeConfig {
+    pub fn new(dim: usize) -> EdgeConfig {
+        EdgeConfig {
+            dim,
+            limits: Limits::default(),
+            read_timeout: Duration::from_secs(2),
+            read_poll: Duration::from_millis(5),
+            retry_after_s: 1,
+            default_budget: Duration::from_secs(3600),
+        }
+    }
+
+    pub fn with_limits(mut self, limits: Limits) -> EdgeConfig {
+        self.limits = limits;
+        self
+    }
+
+    pub fn with_read_timeout(mut self, timeout: Duration) -> EdgeConfig {
+        self.read_timeout = timeout;
+        self
+    }
+
+    pub fn with_retry_after_s(mut self, s: u32) -> EdgeConfig {
+        self.retry_after_s = s;
+        self
+    }
+
+    pub fn with_default_budget(mut self, budget: Duration) -> EdgeConfig {
+        self.default_budget = budget;
+        self
+    }
+}
+
+struct Shared {
+    orch: Arc<Orchestrator>,
+    cfg: EdgeConfig,
+    clock: Arc<dyn Clock>,
+    counters: EdgeCounters,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// The HTTP front door: an accept loop plus one short-lived handler
+/// thread per connection (the edge speaks one request per connection —
+/// see [`crate::net::http`]). Dropping the server stops accepting, wakes
+/// the accept thread and joins every in-flight handler.
+pub struct EdgeServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl EdgeServer {
+    /// Serve `orch` on `listener` with the production clock.
+    pub fn start(
+        orch: Arc<Orchestrator>,
+        listener: TcpListener,
+        cfg: EdgeConfig,
+    ) -> std::io::Result<EdgeServer> {
+        EdgeServer::start_with_clock(orch, listener, cfg, Arc::new(SystemClock::new()))
+    }
+
+    /// Serve with an injected clock — tests drive read deadlines and
+    /// latency accounting with a `MockClock` (no sleeps).
+    pub fn start_with_clock(
+        orch: Arc<Orchestrator>,
+        listener: TcpListener,
+        cfg: EdgeConfig,
+        clock: Arc<dyn Clock>,
+    ) -> std::io::Result<EdgeServer> {
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            orch,
+            cfg,
+            clock,
+            counters: EdgeCounters::new(),
+            handlers: Mutex::new(Vec::new()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new().name("edge-accept".into()).spawn(move || loop {
+                let stream = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(_) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let sh = Arc::clone(&shared);
+                let handle = std::thread::spawn(move || handle_conn(&sh, stream));
+                let mut hs = shared.handlers.lock().unwrap();
+                hs.retain(|h| !h.is_finished());
+                hs.push(handle);
+            })?
+        };
+        Ok(EdgeServer { shared, addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (port 0 in tests resolves here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Per-endpoint request/error/latency counters.
+    pub fn stats(&self) -> EdgeStats {
+        self.shared.counters.snapshot()
+    }
+}
+
+impl Drop for EdgeServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop with a throwaway connection; it re-checks
+        // the stop flag before handling anything.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let handlers = std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(sh: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(sh.cfg.read_poll));
+    let start_ns = sh.clock.now_ns();
+    let deadline_ns = start_ns.saturating_add(sh.cfg.read_timeout.as_nanos() as u64);
+    let (endpoint, resp) =
+        match parse_request(&mut stream, sh.clock.as_ref(), deadline_ns, &sh.cfg.limits) {
+            Ok(req) => route(sh, &req),
+            Err(e) => (EdgeEndpoint::Other, Response::from_err(&e)),
+        };
+    let status = resp.status;
+    let _ = resp.write_to(&mut stream);
+    let _ = stream.flush();
+    // Lingering close: signal end-of-response, then drain (bounded) what
+    // the client is still sending, so an early error response — e.g. a
+    // 431 cut mid-upload — isn't destroyed by a TCP reset before the
+    // client reads it.
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut sink = [0u8; 4096];
+    for _ in 0..256 {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => continue,
+        }
+    }
+    let latency_us = sh.clock.now_ns().saturating_sub(start_ns) / 1_000;
+    sh.counters.record(endpoint, status, latency_us);
+}
+
+fn route(sh: &Shared, req: &Request) -> (EdgeEndpoint, Response) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/query") => (EdgeEndpoint::Query, handle_query(sh, req)),
+        ("POST", "/v1/insert") => (EdgeEndpoint::Insert, handle_insert(sh, req)),
+        ("GET", "/v1/stats") => (EdgeEndpoint::Stats, handle_stats(sh)),
+        ("GET", "/healthz") => (EdgeEndpoint::Health, handle_healthz()),
+        ("GET", "/readyz") => (EdgeEndpoint::Health, handle_readyz(sh)),
+        (_, "/v1/query") => (EdgeEndpoint::Query, method_not_allowed("POST")),
+        (_, "/v1/insert") => (EdgeEndpoint::Insert, method_not_allowed("POST")),
+        (_, "/v1/stats") => (EdgeEndpoint::Stats, method_not_allowed("GET")),
+        (_, "/healthz" | "/readyz") => (EdgeEndpoint::Health, method_not_allowed("GET")),
+        _ => (EdgeEndpoint::Other, Response::error(404, "not-found", "unknown path")),
+    }
+}
+
+fn method_not_allowed(allow: &str) -> Response {
+    Response::error(405, "method-not-allowed", &format!("use {allow} for this path"))
+        .with_header("Allow", allow)
+}
+
+// ---------------------------------------------------------------------------
+// POST /v1/query
+// ---------------------------------------------------------------------------
+
+struct QuerySpec {
+    point: Vec<f32>,
+    class: Class,
+    budget_us: Option<u64>,
+    policy: Option<BudgetPolicy>,
+}
+
+fn handle_query(sh: &Shared, req: &Request) -> Response {
+    let spec = match parse_body(req).and_then(|b| parse_query_spec(&b, sh.cfg.dim)) {
+        Ok(s) => s,
+        Err(e) => return Response::from_err(&e),
+    };
+    if let Some(queue) = sh.orch.admission() {
+        // Admission lane path: backpressure (429) and queue-side budget
+        // enforcement; `policy` is fixed by the installed AdmissionConfig.
+        let budget = spec
+            .budget_us
+            .map(Duration::from_micros)
+            .unwrap_or(sh.cfg.default_budget);
+        match queue
+            .try_submit_class(&spec.point, budget, spec.class)
+            .and_then(|ticket| ticket.wait())
+        {
+            Ok(r) => query_result_response(&r),
+            Err(e) => admission_error_response(&e, sh.cfg.retry_after_s),
+        }
+    } else {
+        // Direct path (admission disabled): the request's budget/policy
+        // form the node-side Budget verbatim.
+        let budget = match spec.budget_us {
+            Some(us) => Budget::enforced(us, spec.policy.unwrap_or(BudgetPolicy::LogOnly)),
+            None => Budget::none(),
+        };
+        match sh.orch.query_batch_flat(spec.point, 1, budget, spec.class) {
+            Ok(mut rs) => query_result_response(&rs.remove(0)),
+            Err(e) => cluster_error_response(&e),
+        }
+    }
+}
+
+fn admission_error_response(e: &AdmissionError, retry_after_s: u32) -> Response {
+    match e {
+        AdmissionError::QueueFull => Response::error(
+            429,
+            "queue-full",
+            "admission queue at capacity; retry after the indicated delay",
+        )
+        .with_header("Retry-After", retry_after_s.to_string()),
+        AdmissionError::ShuttingDown => {
+            Response::error(503, "shutting-down", "cluster is shutting down")
+        }
+        AdmissionError::Canceled => {
+            Response::error(503, "canceled", "request canceled during cluster teardown")
+        }
+        AdmissionError::Cluster(c) => cluster_error_response(c),
+    }
+}
+
+fn cluster_error_response(e: &ClusterError) -> Response {
+    match e {
+        ClusterError::Shutdown => Response::error(503, "shutting-down", "cluster is shutting down"),
+        ClusterError::ShardUnavailable { shard } => Response::error(
+            503,
+            "shard-unavailable",
+            &format!("shard {shard} has no live replica"),
+        ),
+    }
+}
+
+fn parse_query_spec(body: &Json, dim: usize) -> Result<QuerySpec, HttpError> {
+    let obj = top_object(body)?;
+    reject_unknown_fields(obj, &["point", "class", "budget_us", "policy"])?;
+    let point = parse_point(
+        obj.get("point")
+            .ok_or_else(|| HttpError::new(400, "missing-field", "\"point\" is required"))?,
+        dim,
+    )?;
+    let class = match obj.get("class") {
+        Some(v) => parse_class(v)?,
+        None => Class::Monitor,
+    };
+    let budget_us = match obj.get("budget_us") {
+        Some(v) => Some(v.as_u64().ok_or_else(|| {
+            HttpError::new(400, "bad-budget", "\"budget_us\" must be a non-negative integer")
+        })?),
+        None => None,
+    };
+    let policy = match obj.get("policy") {
+        Some(v) => Some(parse_policy(v)?),
+        None => None,
+    };
+    Ok(QuerySpec { point, class, budget_us, policy })
+}
+
+// ---------------------------------------------------------------------------
+// POST /v1/insert
+// ---------------------------------------------------------------------------
+
+fn handle_insert(sh: &Shared, req: &Request) -> Response {
+    let (flat, labels, class) =
+        match parse_body(req).and_then(|b| parse_insert_spec(&b, sh.cfg.dim)) {
+            Ok(s) => s,
+            Err(e) => return Response::from_err(&e),
+        };
+    match sh.orch.insert_batch_class(&flat, &labels, class) {
+        Ok(out) => {
+            let mut o = JsonObj::new();
+            o.insert("node", num(out.node as u64));
+            o.insert("accepted", num(out.accepted));
+            o.insert("node_total", num(out.node_total));
+            o.insert("sealed_now", num(out.sealed_now));
+            o.insert("sealed_total", num(out.sealed_total));
+            o.insert("replicas_acked", num(out.replicas_acked as u64));
+            Response::json(200, Json::Obj(o).to_string_compact())
+        }
+        Err(e) => cluster_error_response(&e),
+    }
+}
+
+type InsertSpec = (Vec<f32>, Vec<bool>, Class);
+
+fn parse_insert_spec(body: &Json, dim: usize) -> Result<InsertSpec, HttpError> {
+    let obj = top_object(body)?;
+    reject_unknown_fields(obj, &["points", "labels", "class"])?;
+    let points = obj
+        .get("points")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| HttpError::new(400, "bad-points", "\"points\" must be an array of points"))?;
+    let labels_json = obj
+        .get("labels")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| HttpError::new(400, "bad-labels", "\"labels\" must be an array of bools"))?;
+    if points.is_empty() {
+        return Err(HttpError::new(400, "empty-batch", "insert batch must be non-empty"));
+    }
+    if points.len() != labels_json.len() {
+        return Err(HttpError::new(
+            400,
+            "length-mismatch",
+            format!("{} points but {} labels", points.len(), labels_json.len()),
+        ));
+    }
+    let mut flat = Vec::with_capacity(points.len() * dim);
+    for p in points {
+        flat.extend_from_slice(&parse_point(p, dim)?);
+    }
+    let mut labels = Vec::with_capacity(labels_json.len());
+    for l in labels_json {
+        labels.push(l.as_bool().ok_or_else(|| {
+            HttpError::new(400, "bad-labels", "\"labels\" entries must be booleans")
+        })?);
+    }
+    let class = match obj.get("class") {
+        Some(v) => parse_class(v)?,
+        None => Class::Monitor,
+    };
+    Ok((flat, labels, class))
+}
+
+// ---------------------------------------------------------------------------
+// GET /v1/stats, /healthz, /readyz
+// ---------------------------------------------------------------------------
+
+fn handle_stats(sh: &Shared) -> Response {
+    let mut top = JsonObj::new();
+    top.insert("edge", edge_json(&sh.counters.snapshot()));
+    top.insert(
+        "admission",
+        match sh.orch.admission() {
+            Some(q) => admission_json(&q.stats()),
+            None => Json::Null,
+        },
+    );
+    top.insert("ingest", ingest_json(&sh.orch.ingest_stats()));
+    top.insert("failover", failover_json(&sh.orch.failover_stats()));
+    Response::json(200, Json::Obj(top).to_string_compact())
+}
+
+fn handle_healthz() -> Response {
+    let mut o = JsonObj::new();
+    o.insert("status", Json::Str("ok".into()));
+    Response::json(200, Json::Obj(o).to_string_compact())
+}
+
+fn handle_readyz(sh: &Shared) -> Response {
+    let down = sh.orch.failover_stats().replicas_down;
+    if down == 0 {
+        let mut o = JsonObj::new();
+        o.insert("ready", Json::Bool(true));
+        o.insert("replicas_down", num(0));
+        Response::json(200, Json::Obj(o).to_string_compact())
+    } else {
+        Response::error(503, "not-ready", &format!("{down} replica(s) down"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON helpers
+// ---------------------------------------------------------------------------
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn parse_body(req: &Request) -> Result<Json, HttpError> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| HttpError::new(400, "body-not-utf8", "request body is not valid UTF-8"))?;
+    Json::parse(text).map_err(|e| {
+        HttpError::new(400, "bad-json", format!("JSON error at byte {}: {}", e.offset, e.msg))
+    })
+}
+
+fn top_object(body: &Json) -> Result<&JsonObj, HttpError> {
+    body.as_obj()
+        .ok_or_else(|| HttpError::new(400, "schema", "request body must be a JSON object"))
+}
+
+fn reject_unknown_fields(obj: &JsonObj, allowed: &[&str]) -> Result<(), HttpError> {
+    for (k, _) in obj.iter() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(HttpError::new(
+                400,
+                "unknown-field",
+                format!("unknown field {k:?} (expected one of {allowed:?})"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn parse_point(v: &Json, dim: usize) -> Result<Vec<f32>, HttpError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| HttpError::new(400, "bad-point", "a point must be an array of numbers"))?;
+    if arr.len() != dim {
+        return Err(HttpError::new(
+            400,
+            "bad-dimension",
+            format!("expected {dim} components, got {}", arr.len()),
+        ));
+    }
+    arr.iter()
+        .map(|x| {
+            x.as_f64().map(|f| f as f32).ok_or_else(|| {
+                HttpError::new(400, "bad-point", "point components must be numbers")
+            })
+        })
+        .collect()
+}
+
+fn parse_class(v: &Json) -> Result<Class, HttpError> {
+    match v.as_str() {
+        Some("monitor") => Ok(Class::Monitor),
+        Some("analytics") => Ok(Class::Analytics),
+        _ => Err(HttpError::new(
+            400,
+            "bad-class",
+            "\"class\" must be \"monitor\" or \"analytics\"",
+        )),
+    }
+}
+
+fn parse_policy(v: &Json) -> Result<BudgetPolicy, HttpError> {
+    match v.as_str() {
+        Some("log_only") => Ok(BudgetPolicy::LogOnly),
+        Some("partial") => Ok(BudgetPolicy::PartialResults),
+        Some("shed") => Ok(BudgetPolicy::Shed),
+        _ => Err(HttpError::new(
+            400,
+            "bad-policy",
+            "\"policy\" must be \"log_only\", \"partial\" or \"shed\"",
+        )),
+    }
+}
+
+fn query_result_response(r: &QueryResult) -> Response {
+    let status = if r.partial { 206 } else { 200 };
+    Response::json(status, query_result_body(r))
+}
+
+/// Serialize a [`QueryResult`] losslessly: f32 distances widen exactly to
+/// f64, and the writer's shortest-roundtrip float formatting means a
+/// client parsing this body reconstructs bit-identical values (the E2E
+/// suite pins that against a direct `Orchestrator` call).
+fn query_result_body(r: &QueryResult) -> String {
+    let mut o = JsonObj::new();
+    o.insert("qid", num(r.qid));
+    o.insert("prediction", Json::Bool(r.prediction));
+    o.insert("positive_share", Json::Num(r.positive_share));
+    o.insert("partial", Json::Bool(r.partial));
+    o.insert("shed_nodes", num(r.shed_nodes as u64));
+    o.insert("max_comparisons", num(r.max_comparisons));
+    o.insert("latency_s", Json::Num(r.latency_s));
+    o.insert(
+        "neighbors",
+        Json::Arr(
+            r.neighbors
+                .iter()
+                .map(|n| {
+                    let mut m = JsonObj::new();
+                    m.insert("id", num(n.id));
+                    m.insert("dist", Json::Num(f64::from(n.dist)));
+                    m.insert("label", Json::Bool(n.label));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    o.insert(
+        "per_node_comparisons",
+        Json::Arr(
+            r.per_node_comparisons
+                .iter()
+                .map(|pc| Json::Arr(pc.iter().map(|&c| num(c)).collect()))
+                .collect(),
+        ),
+    );
+    Json::Obj(o).to_string_compact()
+}
+
+fn edge_json(s: &EdgeStats) -> Json {
+    let mut o = JsonObj::new();
+    for (name, e) in [
+        ("query", s.query),
+        ("insert", s.insert),
+        ("stats", s.stats),
+        ("health", s.health),
+        ("other", s.other),
+    ] {
+        let mut row = JsonObj::new();
+        row.insert("requests", num(e.requests));
+        row.insert("errors", num(e.errors));
+        row.insert("latency_us_sum", num(e.latency_us_sum));
+        o.insert(name, Json::Obj(row));
+    }
+    Json::Obj(o)
+}
+
+fn lane_json(l: &LaneStats) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("depth", num(l.depth as u64));
+    o.insert("high_water", num(l.high_water as u64));
+    o.insert("submitted", num(l.submitted));
+    o.insert("dispatched_fill", num(l.dispatched_fill));
+    o.insert("dispatched_deadline", num(l.dispatched_deadline));
+    o.insert("dispatched_aged", num(l.dispatched_aged));
+    o.insert("dispatched_drain", num(l.dispatched_drain));
+    o.insert("overruns", num(l.overruns));
+    o.insert("partials", num(l.partials));
+    o.insert("sheds", num(l.sheds));
+    o.insert("inserted", num(l.inserted));
+    o.insert("rejected_full", num(l.rejected_full));
+    Json::Obj(o)
+}
+
+fn admission_json(s: &AdmissionStats) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("depth", num(s.depth as u64));
+    o.insert("high_water", num(s.high_water as u64));
+    o.insert("submitted", num(s.submitted));
+    o.insert("completed", num(s.completed));
+    o.insert("rejected_full", num(s.rejected_full));
+    o.insert("cuts_fill", num(s.cuts_fill));
+    o.insert("cuts_deadline", num(s.cuts_deadline));
+    o.insert("cuts_aged", num(s.cuts_aged));
+    o.insert("cuts_drain", num(s.cuts_drain));
+    o.insert("monitor", lane_json(&s.monitor));
+    o.insert("analytics", lane_json(&s.analytics));
+    Json::Obj(o)
+}
+
+fn ingest_json(s: &IngestStats) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("batches", num(s.batches));
+    o.insert("points", num(s.points));
+    o.insert("sealed_segments", num(s.sealed_segments));
+    Json::Obj(o)
+}
+
+fn failover_json(s: &FailoverStats) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("hedges", num(s.hedges));
+    o.insert("hedge_wins", num(s.hedge_wins));
+    o.insert("failovers", num(s.failovers));
+    o.insert("synthesized_sheds", num(s.synthesized_sheds));
+    o.insert("heartbeats", num(s.heartbeats));
+    o.insert("reconnect_attempts", num(s.reconnect_attempts));
+    o.insert("reconnects", num(s.reconnects));
+    o.insert("down_transitions", num(s.down_transitions));
+    o.insert("replicas_down", num(s.replicas_down));
+    Json::Obj(o)
+}

@@ -1,0 +1,636 @@
+//! Zero-dependency HTTP/1.1 front-door codec: a bounded, injectable-clock
+//! request parser and a response writer, used by the serving edge
+//! ([`crate::net::edge`]) in front of the Orchestrator.
+//!
+//! This is the one place untrusted bytes from arbitrary clients enter the
+//! system, so the parser is written to the same discipline as the binary
+//! wire codec ([`crate::net::wire`]): every malformed, truncated,
+//! oversized or stalled input is a typed error — never a panic, never a
+//! hang, never a silent partial parse. Specifically:
+//!
+//! * **Bounded everything.** Request line + headers are capped
+//!   ([`Limits::max_head`], [`Limits::max_headers`]), the body by
+//!   [`Limits::max_body`]; exceeding a cap is an error, not an
+//!   allocation.
+//! * **Clock-injected read deadline.** The parser polls a non-blocking
+//!   (read-timeout) stream and checks an injected
+//!   [`Clock`](crate::util::clock::Clock) against a deadline on every
+//!   would-block, so a slowloris client is cut off deterministically —
+//!   tests drive the timeout with a `MockClock`, production with
+//!   `SystemClock` (no real sleeps in either).
+//! * **Smuggling-hostile.** Duplicate or malformed `Content-Length`,
+//!   any `Transfer-Encoding`, control bytes in header names/values
+//!   (CR/LF injection) and obs-folded continuation lines are all
+//!   rejected outright; the edge speaks one-request-per-connection
+//!   (`Connection: close`), so there is no pipeline to desynchronize.
+//!
+//! # Status-code ↔ cluster-semantics contract
+//!
+//! The serving edge maps cluster outcomes onto HTTP like this (the
+//! routing half lives in [`crate::net::edge`]; the table is the API
+//! contract):
+//!
+//! | status | meaning at the cluster |
+//! |--------|------------------------|
+//! | `200`  | complete answer: every shard contributed a full scan |
+//! | `206`  | budget-blown or degraded answer: `QueryResult::partial` — a table-prefix answer, `shed_nodes` shards contributed nothing |
+//! | `400`  | malformed HTTP or JSON, schema violation, wrong dimension |
+//! | `404`  | unknown path |
+//! | `405`  | known path, wrong method (`Allow` header lists the right one) |
+//! | `408`  | request read deadline expired (slowloris cut-off) |
+//! | `411`  | `POST` without `Content-Length` |
+//! | `413`  | declared body exceeds [`Limits::max_body`] |
+//! | `429`  | admission queue full (`AdmissionError::QueueFull`) — backpressure, `Retry-After` tells the client when to come back |
+//! | `431`  | request line + headers exceed [`Limits::max_head`] / [`Limits::max_headers`] |
+//! | `503`  | cluster shutting down, zero-ack insert (`ShardUnavailable`), or `/readyz` with a replica down |
+//! | `505`  | HTTP version other than 1.0/1.1 |
+//!
+//! Every non-2xx body is typed JSON: `{"error":{"code":..,"message":..}}`.
+
+use std::io::{Read, Write};
+
+use crate::util::clock::Clock;
+
+/// Hard caps on what one request may cost before it is rejected.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Max bytes of request line + headers (terminator included).
+    pub max_head: usize,
+    /// Max number of header fields.
+    pub max_headers: usize,
+    /// Max declared (and read) body bytes.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits { max_head: 16 * 1024, max_headers: 64, max_body: 1 << 20 }
+    }
+}
+
+/// A typed request-handling failure: the HTTP status it maps to, a
+/// stable machine-readable code and a human-readable message. The edge
+/// serializes it as the `{"error":{...}}` body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, code: &'static str, msg: impl Into<String>) -> HttpError {
+        HttpError { status, code, msg: msg.into() }
+    }
+
+    fn bad(code: &'static str, msg: impl Into<String>) -> HttpError {
+        HttpError::new(400, code, msg)
+    }
+
+    /// The typed JSON error body for this failure.
+    pub fn body(&self) -> String {
+        error_body(self.code, &self.msg)
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.status, self.code, self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Build the canonical typed error body.
+pub fn error_body(code: &str, msg: &str) -> String {
+    use crate::util::json::{Json, JsonObj};
+    let mut err = JsonObj::new();
+    err.insert("code", Json::Str(code.to_string()));
+    err.insert("message", Json::Str(msg.to_string()));
+    let mut top = JsonObj::new();
+    top.insert("error", Json::Obj(err));
+    Json::Obj(top).to_string_compact()
+}
+
+/// Reason phrase for the status codes the edge emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        206 => "Partial Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// One parsed request. Headers keep arrival order with original names;
+/// lookup is case-insensitive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string (after `?`), if any.
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name`, case-insensitive.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Incremental reader: accumulates bytes from a (possibly read-timeout)
+/// stream, converting would-block into a deadline check against the
+/// injected clock.
+struct Source<'a, R: Read> {
+    r: &'a mut R,
+    clock: &'a dyn Clock,
+    deadline_ns: u64,
+    buf: Vec<u8>,
+    eof: bool,
+}
+
+impl<R: Read> Source<'_, R> {
+    /// Pull at least one more byte into `buf` (or learn EOF). A stalled
+    /// stream (WouldBlock / TimedOut) re-polls until the deadline.
+    fn fill(&mut self) -> Result<(), HttpError> {
+        if self.eof {
+            return Ok(());
+        }
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.r.read(&mut chunk) {
+                Ok(0) => {
+                    self.eof = true;
+                    return Ok(());
+                }
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(());
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if self.clock.now_ns() >= self.deadline_ns {
+                        return Err(HttpError::new(
+                            408,
+                            "timeout",
+                            "request not completed within the read deadline",
+                        ));
+                    }
+                }
+                Err(e) => {
+                    return Err(HttpError::bad("read-error", format!("stream error: {e}")));
+                }
+            }
+        }
+    }
+}
+
+/// Parse one HTTP/1.1 request from `r`, enforcing `limits` and the read
+/// deadline `deadline_ns` (checked on `clock` whenever the stream
+/// stalls). Every failure is a typed [`HttpError`]; a truncated request
+/// (EOF mid-head or mid-body) is an error, never a partial success —
+/// the truncation-at-every-byte property tests pin exactly that.
+pub fn parse_request<R: Read>(
+    r: &mut R,
+    clock: &dyn Clock,
+    deadline_ns: u64,
+    limits: &Limits,
+) -> Result<Request, HttpError> {
+    let mut src = Source { r, clock, deadline_ns, buf: Vec::new(), eof: false };
+
+    // --- head: everything up to the blank line -------------------------
+    let head_end = loop {
+        if let Some(at) = find_terminator(&src.buf) {
+            break at;
+        }
+        if src.buf.len() > limits.max_head {
+            return Err(HttpError::new(
+                431,
+                "head-too-large",
+                format!("request head exceeds {} bytes", limits.max_head),
+            ));
+        }
+        if src.eof {
+            return Err(HttpError::bad("truncated-request", "EOF before end of headers"));
+        }
+        src.fill()?;
+    };
+    if head_end + 4 > limits.max_head {
+        return Err(HttpError::new(
+            431,
+            "head-too-large",
+            format!("request head exceeds {} bytes", limits.max_head),
+        ));
+    }
+
+    let head = src.buf[..head_end].to_vec();
+    let mut lines = split_crlf(&head)?;
+    if lines.is_empty() {
+        return Err(HttpError::bad("empty-request", "missing request line"));
+    }
+    let (method, path, query) = parse_request_line(&lines.remove(0))?;
+    if lines.len() > limits.max_headers {
+        return Err(HttpError::new(
+            431,
+            "too-many-headers",
+            format!("more than {} header fields", limits.max_headers),
+        ));
+    }
+    let mut headers = Vec::with_capacity(lines.len());
+    for line in &lines {
+        headers.push(parse_header(line)?);
+    }
+
+    // --- framing: Content-Length only, exactly once --------------------
+    if headers.iter().any(|(k, _)| k.eq_ignore_ascii_case("transfer-encoding")) {
+        return Err(HttpError::bad(
+            "transfer-encoding-unsupported",
+            "Transfer-Encoding is not accepted; use Content-Length",
+        ));
+    }
+    let cls: Vec<&str> = headers
+        .iter()
+        .filter(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.as_str())
+        .collect();
+    let content_length = match cls.len() {
+        0 => None,
+        1 => Some(parse_content_length(cls[0], limits)?),
+        _ => {
+            return Err(HttpError::bad(
+                "duplicate-content-length",
+                "multiple Content-Length headers",
+            ))
+        }
+    };
+    let content_length = match (content_length, method.as_str()) {
+        (Some(n), _) => n,
+        (None, "POST" | "PUT" | "PATCH") => {
+            return Err(HttpError::new(
+                411,
+                "length-required",
+                "POST requires a Content-Length header",
+            ))
+        }
+        (None, _) => 0,
+    };
+
+    // --- body: exactly Content-Length bytes ----------------------------
+    let body_start = head_end + 4;
+    while src.buf.len() < body_start + content_length {
+        if src.eof {
+            return Err(HttpError::bad(
+                "truncated-body",
+                format!(
+                    "EOF after {} of {} declared body bytes",
+                    src.buf.len().saturating_sub(body_start),
+                    content_length
+                ),
+            ));
+        }
+        src.fill()?;
+    }
+    // Trailing bytes beyond Content-Length are a framing violation under
+    // one-request-per-connection: there is no next request to own them.
+    if src.buf.len() > body_start + content_length {
+        return Err(HttpError::bad("excess-body", "bytes beyond the declared Content-Length"));
+    }
+    let body = src.buf[body_start..body_start + content_length].to_vec();
+
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// Index of the `\r\n\r\n` head terminator, if present.
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Split the head into lines on CRLF. Any bare CR or bare LF left inside
+/// a line is rejected (header-injection hostile), as are obs-fold
+/// continuations (a line starting with SP/HT). The head never ends with
+/// a CRLF of its own — the terminating `\r\n\r\n` was cut off before it.
+fn split_crlf(head: &[u8]) -> Result<Vec<Vec<u8>>, HttpError> {
+    let mut lines = Vec::new();
+    let mut rest = head;
+    loop {
+        match rest.windows(2).position(|w| w == b"\r\n") {
+            Some(i) => {
+                lines.push(rest[..i].to_vec());
+                rest = &rest[i + 2..];
+            }
+            None => {
+                lines.push(rest.to_vec());
+                break;
+            }
+        }
+    }
+    for line in &lines {
+        if line.contains(&b'\r') {
+            return Err(HttpError::bad("bare-cr", "bare CR in request head"));
+        }
+        if line.contains(&b'\n') {
+            return Err(HttpError::bad("bare-lf", "bare LF in request head"));
+        }
+        if matches!(line.first(), Some(b' ' | b'\t')) {
+            return Err(HttpError::bad("obs-fold", "folded header continuation lines"));
+        }
+    }
+    Ok(lines)
+}
+
+fn parse_request_line(line: &[u8]) -> Result<(String, String, Option<String>), HttpError> {
+    let parts: Vec<&[u8]> = line.split(|&b| b == b' ').collect();
+    if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+        return Err(HttpError::bad("bad-request-line", "expected 'METHOD target HTTP/x.y'"));
+    }
+    let method = parts[0];
+    if !method.iter().all(|&b| b.is_ascii_uppercase()) {
+        return Err(HttpError::bad("bad-method", "method must be upper-case ASCII"));
+    }
+    let target = parts[1];
+    if target[0] != b'/' || !target.iter().all(|&b| (0x21..=0x7e).contains(&b)) {
+        return Err(HttpError::bad("bad-target", "target must be a visible-ASCII absolute path"));
+    }
+    match parts[2] {
+        b"HTTP/1.1" | b"HTTP/1.0" => {}
+        v if v.starts_with(b"HTTP/") => {
+            return Err(HttpError::new(505, "bad-version", "only HTTP/1.0 and HTTP/1.1"))
+        }
+        _ => return Err(HttpError::bad("bad-request-line", "malformed HTTP version")),
+    }
+    let target = String::from_utf8(target.to_vec())
+        .map_err(|_| HttpError::bad("bad-target", "non-UTF-8 target"))?;
+    let (path, qstr) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+    Ok((String::from_utf8(method.to_vec()).unwrap(), path, qstr))
+}
+
+/// RFC 7230 `tchar` — the bytes legal in a header field name.
+fn is_tchar(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b)
+}
+
+fn parse_header(line: &[u8]) -> Result<(String, String), HttpError> {
+    let colon = line
+        .iter()
+        .position(|&b| b == b':')
+        .ok_or_else(|| HttpError::bad("bad-header", "header line without ':'"))?;
+    let (name, rest) = line.split_at(colon);
+    if name.is_empty() || !name.iter().all(|&b| is_tchar(b)) {
+        return Err(HttpError::bad("bad-header-name", "invalid header field name"));
+    }
+    let value = &rest[1..];
+    let value = trim_ows(value);
+    if !value.iter().all(|&b| b == b'\t' || (0x20..=0x7e).contains(&b)) {
+        return Err(HttpError::bad("bad-header-value", "control bytes in header value"));
+    }
+    Ok((
+        String::from_utf8(name.to_vec()).unwrap(),
+        String::from_utf8(value.to_vec()).unwrap(),
+    ))
+}
+
+fn trim_ows(v: &[u8]) -> &[u8] {
+    let start = v.iter().position(|&b| b != b' ' && b != b'\t').unwrap_or(v.len());
+    let end = v.iter().rposition(|&b| b != b' ' && b != b'\t').map(|i| i + 1).unwrap_or(start);
+    &v[start..end]
+}
+
+fn parse_content_length(v: &str, limits: &Limits) -> Result<usize, HttpError> {
+    if v.is_empty() || v.len() > 18 || !v.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(HttpError::bad("bad-content-length", "Content-Length must be decimal digits"));
+    }
+    let n: u64 = v.parse().expect("digits only");
+    if n as usize > limits.max_body {
+        return Err(HttpError::new(
+            413,
+            "body-too-large",
+            format!("declared body of {n} bytes exceeds the {} byte cap", limits.max_body),
+        ));
+    }
+    Ok(n as usize)
+}
+
+/// One HTTP response. The writer always emits `Content-Length`,
+/// `Content-Type: application/json` and `Connection: close` — the edge
+/// speaks one request per connection, so clients frame on close and a
+/// desynchronized parse cannot leak into a second request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Response {
+    /// A JSON response with the given status.
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response { status, headers: Vec::new(), body: body.into() }
+    }
+
+    /// The canonical typed error response.
+    pub fn error(status: u16, code: &'static str, msg: &str) -> Response {
+        Response::json(status, error_body(code, msg))
+    }
+
+    /// From a parser/validation failure.
+    pub fn from_err(e: &HttpError) -> Response {
+        Response::json(e.status, e.body())
+    }
+
+    pub fn with_header(mut self, name: impl Into<String>, value: impl Into<String>) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
+        write!(w, "Content-Type: application/json\r\n")?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        write!(w, "Connection: close\r\n")?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "\r\n")?;
+        w.write_all(self.body.as_bytes())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::MockClock;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Request, HttpError> {
+        let clock = MockClock::new(0);
+        parse_request(&mut Cursor::new(bytes), &clock, u64::MAX, &Limits::default())
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let r = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+
+        let r = parse(b"POST /v1/query?trace=1 HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}").unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/query");
+        assert_eq!(r.query.as_deref(), Some("trace=1"));
+        assert_eq!(r.body, b"{}");
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive_and_ows_trimmed() {
+        let r = parse(b"GET / HTTP/1.1\r\nX-Thing:   padded \t\r\n\r\n").unwrap();
+        assert_eq!(r.header("x-thing"), Some("padded"));
+        assert_eq!(r.header("X-THING"), Some("padded"));
+    }
+
+    #[test]
+    fn post_without_content_length_is_411() {
+        let e = parse(b"POST /v1/query HTTP/1.1\r\nHost: x\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 411);
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        let e = parse(b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\n{}")
+            .unwrap_err();
+        assert_eq!((e.status, e.code), (400, "duplicate-content-length"));
+    }
+
+    #[test]
+    fn transfer_encoding_is_rejected() {
+        let e = parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!((e.status, e.code), (400, "transfer-encoding-unsupported"));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let limits = Limits { max_body: 64, ..Limits::default() };
+        let clock = MockClock::new(0);
+        let req = b"POST / HTTP/1.1\r\nContent-Length: 65\r\n\r\n";
+        let e = parse_request(&mut Cursor::new(&req[..]), &clock, u64::MAX, &limits).unwrap_err();
+        assert_eq!(e.status, 413);
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        req.extend_from_slice(format!("X-Pad: {}\r\n\r\n", "a".repeat(32 * 1024)).as_bytes());
+        let e = parse(&req).unwrap_err();
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn header_injection_and_folding_are_rejected() {
+        // Bare CR inside a header line.
+        assert_eq!(parse(b"GET / HTTP/1.1\r\nX-A: a\rb\r\n\r\n").unwrap_err().code, "bare-cr");
+        // Bare LF line termination.
+        assert_eq!(parse(b"GET / HTTP/1.1\nHost: x\r\n\r\n").unwrap_err().code, "bare-lf");
+        // Obsolete folded continuation.
+        assert_eq!(parse(b"GET / HTTP/1.1\r\nX-A: a\r\n b\r\n\r\n").unwrap_err().code, "obs-fold");
+        // Control byte in a header value.
+        assert_eq!(
+            parse(b"GET / HTTP/1.1\r\nX-A: a\x01b\r\n\r\n").unwrap_err().code,
+            "bad-header-value"
+        );
+        // Space in a header name.
+        assert_eq!(
+            parse(b"GET / HTTP/1.1\r\nX A: b\r\n\r\n").unwrap_err().code,
+            "bad-header-name"
+        );
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_an_error() {
+        let full: &[u8] = b"POST /v1/query HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"point\":[1]}";
+        assert!(parse(full).is_ok());
+        for cut in 0..full.len() {
+            assert!(parse(&full[..cut]).is_err(), "prefix of {cut} bytes must not parse");
+        }
+    }
+
+    #[test]
+    fn excess_body_bytes_are_rejected() {
+        let e = parse(b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}garbage").unwrap_err();
+        assert_eq!(e.code, "excess-body");
+    }
+
+    #[test]
+    fn bad_versions_and_methods() {
+        assert_eq!(parse(b"GET / HTTP/2.0\r\n\r\n").unwrap_err().status, 505);
+        assert_eq!(parse(b"get / HTTP/1.1\r\n\r\n").unwrap_err().code, "bad-method");
+        assert_eq!(parse(b"GET  / HTTP/1.1\r\n\r\n").unwrap_err().code, "bad-request-line");
+        assert_eq!(parse(b"GET x HTTP/1.1\r\n\r\n").unwrap_err().code, "bad-target");
+    }
+
+    /// A stream that never yields bytes, only would-block — each poll
+    /// advances the MockClock, so the deadline passes after a
+    /// deterministic number of polls (a slowloris in miniature).
+    struct Stalled<'a> {
+        clock: &'a MockClock,
+        step_ns: u64,
+    }
+
+    impl Read for Stalled<'_> {
+        fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+            self.clock.advance_ns(self.step_ns);
+            Err(std::io::Error::from(std::io::ErrorKind::WouldBlock))
+        }
+    }
+
+    #[test]
+    fn stalled_stream_times_out_on_the_injected_clock() {
+        let clock = MockClock::new(0);
+        let mut r = Stalled { clock: &clock, step_ns: 400_000 };
+        let e = parse_request(&mut r, &clock, 1_000_000, &Limits::default()).unwrap_err();
+        assert_eq!((e.status, e.code), (408, "timeout"));
+        // 400µs per poll against a 1ms deadline: exactly 3 polls.
+        assert_eq!(clock.now_ns(), 1_200_000);
+    }
+
+    #[test]
+    fn response_writer_emits_framing_headers() {
+        let mut out = Vec::new();
+        Response::json(429, error_body("queue-full", "try later"))
+            .with_header("Retry-After", "1")
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: "));
+        assert!(text.ends_with("\"message\":\"try later\"}}"));
+    }
+}

@@ -34,8 +34,18 @@
 //!    live (streaming) nodes the ack doubles as the cluster-level seal
 //!    poll, so a quiet remote stream still seals by age.
 
+//! Alongside the internal binary protocol, this module carries the
+//! public front door: a zero-dependency HTTP/1.1 codec ([`http`]) and
+//! the JSON serving edge ([`edge`]) that maps HTTP requests onto the
+//! Orchestrator's admission lanes — untrusted-input hostile to the same
+//! standard as the wire codec.
+
+pub mod edge;
+pub mod http;
 pub mod tcp;
 pub mod wire;
 
+pub use edge::{EdgeConfig, EdgeServer};
+pub use http::{HttpError, Limits, Request, Response};
 pub use tcp::{serve_node, serve_node_loop, RemoteNode};
 pub use wire::{BatchReplyItem, Message};

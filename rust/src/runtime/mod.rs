@@ -9,6 +9,6 @@ pub mod service;
 pub use artifacts::{locate, ArtifactError, Manifest};
 pub use pjrt::{XlaRuntime, PAD_DIST};
 pub use service::{
-    CutCounters, FailoverCounters, FailoverStats, IngestCounters, IngestStats, LaneCounters,
-    QueueStats, XlaEngine, XlaService,
+    CutCounters, EdgeCounters, EdgeEndpoint, EdgeStats, EndpointStats, FailoverCounters,
+    FailoverStats, IngestCounters, IngestStats, LaneCounters, QueueStats, XlaEngine, XlaService,
 };

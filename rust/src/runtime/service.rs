@@ -333,6 +333,9 @@ pub struct FailoverCounters {
     reconnect_attempts: AtomicU64,
     reconnects: AtomicU64,
     down_transitions: AtomicU64,
+    /// Gauge: replicas currently `Down` across all shards — the
+    /// cluster-dependency check behind the edge's `/readyz`.
+    down_now: AtomicU64,
 }
 
 /// Snapshot of [`FailoverCounters`].
@@ -356,6 +359,10 @@ pub struct FailoverStats {
     pub reconnects: u64,
     /// `Up`/`Suspect` → `Down` transitions.
     pub down_transitions: u64,
+    /// Replicas currently `Down` (gauge, not monotone): zero means every
+    /// replica of every shard is reachable — the readiness condition the
+    /// serving edge's `/readyz` reports.
+    pub replicas_down: u64,
 }
 
 impl FailoverCounters {
@@ -391,8 +398,22 @@ impl FailoverCounters {
         self.reconnects.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A replica transitioned `Up`/`Suspect` → `Down`. Bumps both the
+    /// monotone transition count and the current-down gauge; callers must
+    /// pair it with [`record_down_recovered`](Self::record_down_recovered)
+    /// when the replica leaves `Down`.
     pub fn record_down(&self) {
         self.down_transitions.fetch_add(1, Ordering::Relaxed);
+        self.down_now.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `Down` replica recovered (reconnect succeeded or a late reply
+    /// proved it alive). Saturates at zero so an unmatched call can never
+    /// wrap the gauge.
+    pub fn record_down_recovered(&self) {
+        let _ = self
+            .down_now
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
     }
 
     pub fn hedges(&self) -> u64 {
@@ -417,6 +438,132 @@ impl FailoverCounters {
             reconnect_attempts: self.reconnect_attempts.load(Ordering::Relaxed),
             reconnects: self.reconnects.load(Ordering::Relaxed),
             down_transitions: self.down_transitions.load(Ordering::Relaxed),
+            replicas_down: self.down_now.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving-edge observability
+// ---------------------------------------------------------------------------
+
+/// Which serving-edge endpoint a request hit, for per-endpoint
+/// accounting. `Other` collects unknown paths and requests that failed
+/// before routing (malformed HTTP never names an endpoint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeEndpoint {
+    /// `POST /v1/query`
+    Query,
+    /// `POST /v1/insert`
+    Insert,
+    /// `GET /v1/stats`
+    Stats,
+    /// `GET /healthz` and `GET /readyz`
+    Health,
+    /// Everything else (404s, parse failures).
+    Other,
+}
+
+impl EdgeEndpoint {
+    pub const ALL: [EdgeEndpoint; 5] = [
+        EdgeEndpoint::Query,
+        EdgeEndpoint::Insert,
+        EdgeEndpoint::Stats,
+        EdgeEndpoint::Health,
+        EdgeEndpoint::Other,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            EdgeEndpoint::Query => 0,
+            EdgeEndpoint::Insert => 1,
+            EdgeEndpoint::Stats => 2,
+            EdgeEndpoint::Health => 3,
+            EdgeEndpoint::Other => 4,
+        }
+    }
+
+    /// Stable label for stats bodies and dashboards.
+    pub fn name(self) -> &'static str {
+        match self {
+            EdgeEndpoint::Query => "query",
+            EdgeEndpoint::Insert => "insert",
+            EdgeEndpoint::Stats => "stats",
+            EdgeEndpoint::Health => "health",
+            EdgeEndpoint::Other => "other",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct EndpointCounters {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    latency_us_sum: AtomicU64,
+}
+
+/// Per-endpoint request/error/latency accounting for the HTTP serving
+/// edge ([`crate::net::edge`]) — one row per [`EdgeEndpoint`], all
+/// relaxed atomics, same discipline as every other counter block here.
+#[derive(Debug, Default)]
+pub struct EdgeCounters {
+    endpoints: [EndpointCounters; 5],
+}
+
+/// Snapshot of one endpoint's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EndpointStats {
+    /// Requests routed to (or failing toward) this endpoint.
+    pub requests: u64,
+    /// Responses with a 4xx/5xx status.
+    pub errors: u64,
+    /// Sum of request latencies in µs (divide by `requests` for the
+    /// mean; the edge measures on its injected clock).
+    pub latency_us_sum: u64,
+}
+
+/// Snapshot of [`EdgeCounters`], one row per endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EdgeStats {
+    pub query: EndpointStats,
+    pub insert: EndpointStats,
+    pub stats: EndpointStats,
+    pub health: EndpointStats,
+    pub other: EndpointStats,
+}
+
+impl EdgeCounters {
+    pub fn new() -> EdgeCounters {
+        EdgeCounters::default()
+    }
+
+    /// One finished request against `endpoint`: the response status and
+    /// the request's wall latency (µs on the edge's clock).
+    pub fn record(&self, endpoint: EdgeEndpoint, status: u16, latency_us: u64) {
+        let c = &self.endpoints[endpoint.idx()];
+        c.requests.fetch_add(1, Ordering::Relaxed);
+        if status >= 400 {
+            c.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        c.latency_us_sum.fetch_add(latency_us, Ordering::Relaxed);
+    }
+
+    fn endpoint(&self, e: EdgeEndpoint) -> EndpointStats {
+        let c = &self.endpoints[e.idx()];
+        EndpointStats {
+            requests: c.requests.load(Ordering::Relaxed),
+            errors: c.errors.load(Ordering::Relaxed),
+            latency_us_sum: c.latency_us_sum.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn snapshot(&self) -> EdgeStats {
+        EdgeStats {
+            query: self.endpoint(EdgeEndpoint::Query),
+            insert: self.endpoint(EdgeEndpoint::Insert),
+            stats: self.endpoint(EdgeEndpoint::Stats),
+            health: self.endpoint(EdgeEndpoint::Health),
+            other: self.endpoint(EdgeEndpoint::Other),
         }
     }
 }

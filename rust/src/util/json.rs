@@ -4,8 +4,29 @@
 //! small subset of JSON it needs for configs and experiment reports:
 //! full RFC 8259 value grammar (objects, arrays, strings with escapes,
 //! numbers, booleans, null), preserved key order, and a pretty printer.
+//!
+//! Since the HTTP serving edge ([`crate::net::edge`]) feeds untrusted
+//! request bodies through this parser, it is hardened against
+//! adversarial input:
+//!
+//! * **Bounded recursion** — containers may nest at most [`MAX_DEPTH`]
+//!   levels; a deep-nesting bomb is a parse error, not a stack overflow.
+//! * **Strict RFC 8259 numbers** — leading zeros, `1.`, `.5`, `1e`,
+//!   `NaN`/`Infinity` spellings and over-long exponents are all
+//!   rejected, and any number that does not land on a *finite* `f64`
+//!   (e.g. `1e400`) is an error, so `Json::Num` is finite by
+//!   construction and round-trips through the writer.
+//! * **Duplicate keys rejected** — two members with the same name in one
+//!   object are a parse error (the classic smuggling vector where two
+//!   layers disagree about which value wins). Programmatic
+//!   [`JsonObj::insert`] keeps its last-write-wins contract.
 
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. Deep enough for any
+/// legitimate config or API body, shallow enough that parsing is
+/// stack-safe on spawned threads.
+pub const MAX_DEPTH: usize = 64;
 
 /// A parsed JSON value. Object keys keep insertion order via a Vec of
 /// pairs plus an index for O(log n) lookup.
@@ -74,6 +95,7 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -131,17 +153,30 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return self.err(format!("nesting deeper than {MAX_DEPTH} levels"));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut obj = JsonObj::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(obj));
         }
         loop {
             self.skip_ws();
             let key = self.string()?;
+            if obj.get(&key).is_some() {
+                return self.err(format!("duplicate key {key:?}"));
+            }
             self.skip_ws();
             self.expect(b':')?;
             let val = self.value()?;
@@ -149,18 +184,23 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(obj)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(obj));
+                }
                 _ => return self.err("expected ',' or '}'"),
             }
         }
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut arr = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(arr));
         }
         loop {
@@ -168,7 +208,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(arr)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(arr));
+                }
                 _ => return self.err("expected ',' or ']'"),
             }
         }
@@ -245,18 +288,33 @@ impl<'a> Parser<'a> {
         Ok(v)
     }
 
+    /// Strict RFC 8259 number grammar, plus a finiteness requirement:
+    /// every accepted number is a finite `f64`, so values round-trip
+    /// through the writer and downstream code never sees NaN/Inf.
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
+        let int_start = self.pos;
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.pos += 1;
         }
+        let int_len = self.pos - int_start;
+        if int_len == 0 {
+            return self.err("number must have integer digits");
+        }
+        if int_len > 1 && self.bytes[int_start] == b'0' {
+            return self.err("leading zeros are not allowed");
+        }
         if self.peek() == Some(b'.') {
             self.pos += 1;
+            let frac_start = self.pos;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
+            }
+            if self.pos == frac_start {
+                return self.err("digit required after decimal point");
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
@@ -264,13 +322,23 @@ impl<'a> Parser<'a> {
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
             }
+            let exp_start = self.pos;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
+            }
+            let exp_len = self.pos - exp_start;
+            if exp_len == 0 {
+                return self.err("digit required in exponent");
+            }
+            // f64 tops out around e±308; anything longer is hostile.
+            if exp_len > 4 {
+                return self.err("exponent too large");
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         match text.parse::<f64>() {
-            Ok(v) => Ok(Json::Num(v)),
+            Ok(v) if v.is_finite() => Ok(Json::Num(v)),
+            Ok(_) => self.err(format!("number '{text}' overflows f64")),
             Err(_) => self.err(format!("invalid number '{text}'")),
         }
     }
@@ -289,7 +357,7 @@ fn utf8_len(first: u8) -> usize {
 impl Json {
     /// Parse a complete JSON document (trailing whitespace allowed).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
@@ -546,5 +614,114 @@ mod tests {
     fn integer_formatting_is_exact() {
         assert_eq!(Json::Num(120.0).to_string_compact(), "120");
         assert_eq!(Json::Num(0.005).to_string_compact(), "0.005");
+    }
+
+    #[test]
+    fn nesting_is_bounded() {
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let e = Json::parse(&too_deep).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        // Objects count against the same budget as arrays.
+        let obj_ok = "{\"a\":".repeat(MAX_DEPTH) + "1" + &"}".repeat(MAX_DEPTH);
+        assert!(Json::parse(&obj_ok).is_ok());
+        let obj_deep = "{\"a\":".repeat(MAX_DEPTH + 1) + "1" + &"}".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&obj_deep).is_err());
+    }
+
+    #[test]
+    fn non_finite_and_huge_exponents_are_rejected() {
+        for bad in ["NaN", "Infinity", "-Infinity", "nan", "inf"] {
+            assert!(Json::parse(bad).is_err(), "{bad} must not parse");
+        }
+        for bad in ["1e400", "-1e309", "1e99999", "2.5e+999999999"] {
+            assert!(Json::parse(bad).is_err(), "{bad} must not parse to ±inf");
+        }
+        // Large but finite is fine.
+        assert_eq!(Json::parse("1e308").unwrap(), Json::Num(1e308));
+        assert_eq!(Json::parse("-2.5e-300").unwrap(), Json::Num(-2.5e-300));
+    }
+
+    #[test]
+    fn strict_number_grammar() {
+        for bad in ["01", "-01", "1.", ".5", "-.5", "1e", "1e+", "+1", "0x10", "1_000", "--1"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        for good in ["0", "-0", "0.5", "10", "1e3", "1E-3", "1.25e+2"] {
+            assert!(Json::parse(good).is_ok(), "{good:?} must parse");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_are_a_parse_error() {
+        let e = Json::parse(r#"{"a":1,"a":2}"#).unwrap_err();
+        assert!(e.msg.contains("duplicate"), "{e}");
+        // Same name at different nesting levels is legitimate.
+        assert!(Json::parse(r#"{"a":{"a":1},"b":[{"a":2}]}"#).is_ok());
+    }
+
+    /// Seeded random documents survive parse → print → parse with `==`
+    /// (possible because every accepted number is a finite f64 and the
+    /// writer's `{}` formatting is shortest-roundtrip).
+    #[test]
+    fn parse_print_parse_roundtrip_property() {
+        use crate::util::rng::Xoshiro256;
+
+        fn gen_value(rng: &mut Xoshiro256, depth: usize) -> Json {
+            let pick = if depth >= 5 { rng.gen_below(4) } else { rng.gen_below(6) };
+            match pick {
+                0 => Json::Null,
+                1 => Json::Bool(rng.gen_bool(0.5)),
+                2 => {
+                    // Mix integers, f32-ish and full-precision doubles.
+                    match rng.gen_below(3) {
+                        0 => Json::Num(rng.gen_range(0, 1 << 20) as f64 - 1e5),
+                        1 => Json::Num(f64::from(rng.next_f32()) * 100.0),
+                        _ => Json::Num(rng.gen_f64(-1e12, 1e12)),
+                    }
+                }
+                3 => {
+                    let len = rng.gen_below(8) as usize;
+                    Json::Str(
+                        (0..len)
+                            .map(|_| {
+                                // Printable ASCII plus escapes plus multibyte.
+                                match rng.gen_below(4) {
+                                    0 => '"',
+                                    1 => '\\',
+                                    2 => 'é',
+                                    _ => (b'a' + rng.gen_below(26) as u8) as char,
+                                }
+                            })
+                            .collect(),
+                    )
+                }
+                4 => {
+                    let len = rng.gen_below(4) as usize;
+                    Json::Arr((0..len).map(|_| gen_value(rng, depth + 1)).collect())
+                }
+                _ => {
+                    let len = rng.gen_below(4) as usize;
+                    let mut o = JsonObj::new();
+                    for i in 0..len {
+                        o.insert(format!("k{i}"), gen_value(rng, depth + 1));
+                    }
+                    Json::Obj(o)
+                }
+            }
+        }
+
+        let mut rng = Xoshiro256::seed_from_u64(0x150_4a50);
+        for round in 0..200 {
+            let doc = gen_value(&mut rng, 0);
+            let compact = doc.to_string_compact();
+            let back = Json::parse(&compact).unwrap_or_else(|e| {
+                panic!("round {round}: reparse failed on {compact:?}: {e}")
+            });
+            assert_eq!(doc, back, "round {round}: {compact}");
+            let pretty = doc.to_string_pretty();
+            assert_eq!(doc, Json::parse(&pretty).unwrap(), "round {round} (pretty)");
+        }
     }
 }

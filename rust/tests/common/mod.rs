@@ -412,3 +412,144 @@ fn tcp_cluster_with(
         .collect();
     (Orchestrator::start(nodes, params.k, VoteConfig::default()), servers)
 }
+
+// ---------------------------------------------------------------------------
+// Hostile-input corpus drivers (shared by the HTTP parser and the binary
+// wire codec — one discipline, two codecs)
+// ---------------------------------------------------------------------------
+
+/// Every strict prefix of `payload`: the truncation-at-every-byte corpus.
+/// A parser under test must return a typed error (never panic, never
+/// succeed) on each one.
+pub fn truncation_corpus(payload: &[u8]) -> impl Iterator<Item = &[u8]> + '_ {
+    (0..payload.len()).map(move |cut| &payload[..cut])
+}
+
+/// Seeded fuzz corpus: `rounds` random mutations of `payload`, each a
+/// stack of 1–4 edits (bit flip, byte insert, byte delete,
+/// truncate-at-random-offset). Deterministic in `seed`, so a CI failure
+/// reproduces locally byte-for-byte. A parser under test may accept or
+/// reject each mutant — it just must not panic or hang.
+pub fn mutation_corpus(payload: &[u8], rounds: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = dslsh::util::rng::Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let mut m = payload.to_vec();
+        let edits = 1 + rng.gen_below(4) as usize;
+        for _ in 0..edits {
+            if m.is_empty() {
+                break;
+            }
+            match rng.gen_below(4) {
+                0 => {
+                    let i = rng.gen_index(m.len());
+                    m[i] ^= 1 << rng.gen_below(8);
+                }
+                1 => {
+                    let i = rng.gen_index(m.len() + 1);
+                    m.insert(i, rng.next_u64() as u8);
+                }
+                2 => {
+                    let i = rng.gen_index(m.len());
+                    m.remove(i);
+                }
+                _ => {
+                    let i = rng.gen_index(m.len() + 1);
+                    m.truncate(i);
+                }
+            }
+        }
+        out.push(m);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Minimal HTTP test client (the edge speaks one request per connection
+// and frames responses on close, so a blocking read-to-EOF client is
+// complete)
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP response from the serving edge.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// First value of `name`, case-insensitive.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON (panics on non-JSON — use in tests that
+    /// expect the typed-body contract to hold).
+    pub fn json(&self) -> dslsh::util::json::Json {
+        dslsh::util::json::Json::parse(&self.body)
+            .unwrap_or_else(|e| panic!("non-JSON body {:?}: {e}", self.body))
+    }
+
+    /// The `error.code` field of a typed error body.
+    pub fn error_code(&self) -> String {
+        self.json()
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(|c| c.as_str())
+            .unwrap_or_else(|| panic!("no error.code in {:?}", self.body))
+            .to_string()
+    }
+}
+
+/// Send raw bytes to the edge, half-close, and read the full response.
+/// Write errors are tolerated (the server may reject and close while the
+/// client is still sending — e.g. an oversized head); a missing response
+/// is not.
+pub fn http_send_raw(addr: std::net::SocketAddr, bytes: &[u8]) -> HttpResponse {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let _ = s.write_all(bytes);
+    let _ = s.shutdown(std::net::Shutdown::Write);
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    parse_http_response(&buf)
+}
+
+/// `POST path` with a JSON body.
+pub fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> HttpResponse {
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    http_send_raw(addr, req.as_bytes())
+}
+
+/// `GET path`.
+pub fn http_get(addr: std::net::SocketAddr, path: &str) -> HttpResponse {
+    http_send_raw(addr, format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").as_bytes())
+}
+
+/// Parse a complete close-framed HTTP response.
+pub fn parse_http_response(buf: &[u8]) -> HttpResponse {
+    let text = std::str::from_utf8(buf).expect("response is UTF-8");
+    let head_end = text.find("\r\n\r\n").expect("complete response head");
+    let mut lines = text[..head_end].split("\r\n");
+    let status_line = lines.next().unwrap();
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+    let headers = lines
+        .map(|l| {
+            let (k, v) = l.split_once(':').unwrap_or_else(|| panic!("bad header {l:?}"));
+            (k.to_string(), v.trim().to_string())
+        })
+        .collect();
+    HttpResponse { status, headers, body: text[head_end + 4..].to_string() }
+}

@@ -468,3 +468,87 @@ fn replicated_insert_fans_out_and_reports_ack_count() {
     assert!(r.partial);
     assert!(r.neighbors.is_empty());
 }
+
+/// PR 6 known-gap regression: a *live* (streaming) remote replica that
+/// dies and reconnects comes back EMPTY — the retained `BuildLive` frame
+/// replays the node's configuration, not its data, and nothing re-feeds
+/// the lost inserts. The failure detector declares the replica healthy
+/// again (`replicas_down` returns to 0, `/readyz` would go green) while
+/// its answers silently carry zero neighbors with `shed_nodes == 0`.
+/// This test pins today's degraded behavior; the future anti-entropy /
+/// re-replication pass must flip the final assertions.
+#[test]
+fn reconnected_live_replica_serves_an_empty_shard() {
+    let c = corpus(200, 2, 27);
+    let d = &c.data;
+    let params = lsh_params(d, 8, 4, 5);
+    let policy = SealPolicy::by_size(500);
+
+    let listener = Arc::new(TcpListener::bind("127.0.0.1:0").unwrap());
+    let addr = listener.local_addr().unwrap();
+
+    // Flaky first connection: the live build and one insert batch are
+    // served honestly, then the peer vanishes on the next request.
+    let flaky = {
+        let listener = Arc::clone(&listener);
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = std::io::BufWriter::new(stream);
+            let build = Message::read_frame(&mut reader).unwrap().unwrap();
+            assert!(matches!(build, Message::BuildLive { .. }), "expected BuildLive: {build:?}");
+            Message::BuildDone { node_id: 0, shard_len: 0, build_ms: 0.0 }
+                .write_frame(&mut writer)
+                .unwrap();
+            let insert = Message::read_frame(&mut reader).unwrap().unwrap();
+            let Message::InsertBatch { seq, n, .. } = insert else {
+                panic!("expected InsertBatch, got {insert:?}");
+            };
+            Message::InsertAck { seq, accepted: n, total: n, sealed_now: 0, sealed_total: 0 }
+                .write_frame(&mut writer)
+                .unwrap();
+            let _ = Message::read_frame(&mut reader);
+        })
+    };
+
+    let remote = RemoteNode::connect_live(addr, 0, 0, &params, 2, policy).unwrap();
+    let clock = Arc::new(MockClock::new(0));
+    let sets = vec![ReplicaSet::new(0, vec![boxed(remote)])];
+    let orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+
+    // Ingest lands on the sole replica and is acknowledged.
+    let out = orch.insert_batch(&d.points[..200 * d.dim], &d.labels[..200]).unwrap();
+    assert_eq!(out.replicas_acked, 1);
+    assert_eq!(out.accepted, 200);
+
+    // The replica dies mid-query: synthesized shed, marked Down, and the
+    // readiness gauge counts it.
+    let r = orch.query(c.queries.point(0)).unwrap();
+    assert_eq!(r.shed_nodes, 1);
+    assert!(r.partial);
+    flaky.join().unwrap();
+    let stats = orch.failover_stats();
+    assert_eq!(stats.down_transitions, 1);
+    assert_eq!(stats.replicas_down, 1, "the readiness gauge sees the dead replica");
+
+    // Honest recovery: the backoff re-dials, the retained BuildLive
+    // replays, the detector declares the replica healthy again.
+    let server = {
+        let listener = Arc::clone(&listener);
+        std::thread::spawn(move || serve_node_loop(&listener, None, 1).unwrap())
+    };
+    clock.advance(Duration::from_millis(20)); // past the 10 ms first backoff
+    wait_until(|| orch.failover_stats().reconnects == 1, "the live reconnect");
+    assert_eq!(orch.failover_stats().replicas_down, 0, "the gauge recovered");
+
+    // THE GAP: the reconnected live node lost its 200 points and nothing
+    // re-feeds them. The query "succeeds" — zero neighbors, zero shed
+    // nodes — indistinguishable from a legitimately empty shard.
+    let r = orch.query(c.queries.point(1)).unwrap();
+    assert_eq!(r.shed_nodes, 0, "the replica is up as far as the detector knows");
+    assert!(!r.partial);
+    assert!(r.neighbors.is_empty(), "the live data is gone after the reconnect");
+
+    drop(orch);
+    assert_eq!(server.join().unwrap(), 1, "the revived server carried the post-recovery query");
+}

@@ -1,0 +1,682 @@
+//! The HTTP/JSON serving edge under fire: a hostile-input battery over
+//! the raw HTTP framing, the JSON schema layer, and the parser property
+//! corpora (truncation-at-every-byte + seeded mutation, shared with the
+//! binary wire codec), plus the deterministic end-to-end contract — an
+//! HTTP round trip through admission is bit-identical to a direct
+//! `Orchestrator::submit_class`, backpressure surfaces as `429` with
+//! `Retry-After`, blown budgets as `206`-flagged partials, and `/readyz`
+//! tracks the failure detector's replica gauge. Every timing-sensitive
+//! assertion runs on an injected `MockClock` — no sleeps anywhere.
+
+mod common;
+
+use std::io::{Cursor, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::*;
+use dslsh::coordinator::admission::{AdmissionConfig, Budget, BudgetPolicy, Class};
+use dslsh::coordinator::{Clock, MockClock, Orchestrator, QueryResult, ReplicaSet, SystemClock};
+use dslsh::data::{Corpus, Dataset};
+use dslsh::knn::Neighbor;
+use dslsh::net::http::parse_request;
+use dslsh::net::{EdgeConfig, EdgeServer, Limits, Message};
+use dslsh::node::node::LocalNode;
+use dslsh::slsh::{SealPolicy, LIVE_ID_STRIDE};
+use dslsh::util::json::{Json, JsonObj};
+
+// ---------------------------------------------------------------------------
+// Fixtures and JSON plumbing
+// ---------------------------------------------------------------------------
+
+/// A small admission-free cluster behind an edge — the fixture for the
+/// hostile-input battery and the direct-path (no admission) tests.
+fn direct_edge() -> (Arc<Orchestrator>, EdgeServer, Corpus) {
+    let c = corpus(96, 4, 11);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let orch = Arc::new(reference_orchestrator(&c.data, &params, 2, 1));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = EdgeConfig::new(c.data.dim);
+    let edge = EdgeServer::start(Arc::clone(&orch), listener, cfg).unwrap();
+    (orch, edge, c)
+}
+
+fn point_json(q: &[f32]) -> Json {
+    Json::Arr(q.iter().map(|&v| Json::Num(f64::from(v))).collect())
+}
+
+/// `{"point": [...]}` — the minimal valid query body.
+fn query_body(q: &[f32]) -> String {
+    let mut o = JsonObj::new();
+    o.insert("point", point_json(q));
+    Json::Obj(o).to_string_compact()
+}
+
+/// `{"points": [[...]..], "labels": [..]}` over `data[at..at+take]`.
+fn insert_body(data: &Dataset, at: usize, take: usize) -> String {
+    let mut o = JsonObj::new();
+    o.insert("points", Json::Arr((at..at + take).map(|i| point_json(data.point(i))).collect()));
+    o.insert(
+        "labels",
+        Json::Arr(data.labels[at..at + take].iter().map(|&b| Json::Bool(b)).collect()),
+    );
+    Json::Obj(o).to_string_compact()
+}
+
+/// Reconstruct a [`QueryResult`] from the edge's response body. `dist`
+/// values were widened f32 → f64 exactly and the writer prints
+/// shortest-roundtrip floats, so this recovers bit-identical values.
+fn result_from_json(j: &Json) -> QueryResult {
+    let field = |name: &str| j.get(name).unwrap_or_else(|| panic!("missing field {name}: {j:?}"));
+    QueryResult {
+        qid: field("qid").as_u64().unwrap(),
+        neighbors: field("neighbors")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|n| Neighbor {
+                id: n.get("id").unwrap().as_u64().unwrap(),
+                dist: n.get("dist").unwrap().as_f64().unwrap() as f32,
+                label: n.get("label").unwrap().as_bool().unwrap(),
+            })
+            .collect(),
+        positive_share: field("positive_share").as_f64().unwrap(),
+        prediction: field("prediction").as_bool().unwrap(),
+        max_comparisons: field("max_comparisons").as_u64().unwrap(),
+        per_node_comparisons: field("per_node_comparisons")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_u64().unwrap()).collect())
+            .collect(),
+        latency_s: field("latency_s").as_f64().unwrap(),
+        partial: field("partial").as_bool().unwrap(),
+        shed_nodes: field("shed_nodes").as_u64().unwrap() as u32,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hostile HTTP framing
+// ---------------------------------------------------------------------------
+
+/// Malformed framing never panics, never hangs, and always yields the
+/// specific typed 4xx/5xx the module contract promises.
+#[test]
+fn hostile_framing_is_rejected_with_typed_errors() {
+    let (_orch, edge, _c) = direct_edge();
+    let a = edge.addr();
+
+    let big_head = format!("GET /healthz HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(20_000));
+    let cases: Vec<(Vec<u8>, u16, &str)> = vec![
+        // POST without Content-Length: the edge cannot frame the body.
+        (b"POST /v1/query HTTP/1.1\r\nHost: t\r\n\r\n".to_vec(), 411, "length-required"),
+        // Two Content-Length headers: request-smuggling ambiguity.
+        (
+            b"POST /v1/query HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\n{}"
+                .to_vec(),
+            400,
+            "duplicate-content-length",
+        ),
+        // CR/LF injection inside a header value.
+        (
+            b"GET /healthz HTTP/1.1\r\nX-A: a\rX-Injected: 1\r\n\r\n".to_vec(),
+            400,
+            "bare-cr",
+        ),
+        // LF-only line endings.
+        (b"GET /healthz HTTP/1.1\nHost: t\r\n\r\n".to_vec(), 400, "bare-lf"),
+        // Chunked bodies are not accepted (no smuggling surface).
+        (
+            b"POST /v1/query HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n".to_vec(),
+            400,
+            "transfer-encoding-unsupported",
+        ),
+        // Declared body over the 1 MiB cap: rejected before any read.
+        (
+            format!("POST /v1/insert HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 2 << 20)
+                .into_bytes(),
+            413,
+            "body-too-large",
+        ),
+        // Non-numeric Content-Length.
+        (
+            b"POST /v1/query HTTP/1.1\r\nContent-Length: ten\r\n\r\n".to_vec(),
+            400,
+            "bad-content-length",
+        ),
+        // Head over the 16 KiB cap.
+        (big_head.into_bytes(), 431, "head-too-large"),
+        // Client dies mid-body.
+        (
+            b"POST /v1/query HTTP/1.1\r\nContent-Length: 10\r\n\r\n{\"po".to_vec(),
+            400,
+            "truncated-body",
+        ),
+        // More bytes than declared.
+        (
+            b"POST /v1/query HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}trailing".to_vec(),
+            400,
+            "excess-body",
+        ),
+        // Unsupported protocol version.
+        (b"GET /healthz HTTP/2.0\r\n\r\n".to_vec(), 505, "bad-version"),
+        // Folded (obsolete) header continuations.
+        (
+            b"GET /healthz HTTP/1.1\r\nX-A: 1\r\n  folded\r\n\r\n".to_vec(),
+            400,
+            "obs-fold",
+        ),
+        // Garbage request line.
+        (b"not http at all\r\n\r\n".to_vec(), 400, "bad-request-line"),
+        // Invalid UTF-8 where the JSON body should be.
+        (
+            b"POST /v1/query HTTP/1.1\r\nContent-Length: 4\r\n\r\n\xff\xfe{}".to_vec(),
+            400,
+            "body-not-utf8",
+        ),
+    ];
+    for (bytes, status, code) in &cases {
+        let r = http_send_raw(a, bytes);
+        assert_eq!(
+            (r.status, r.error_code().as_str()),
+            (*status, *code),
+            "case {:?} → {}",
+            String::from_utf8_lossy(&bytes[..bytes.len().min(60)]),
+            r.body
+        );
+    }
+}
+
+/// Wrong methods answer `405` with an `Allow` header attributed to the
+/// endpoint's counters; unknown paths are a `404`.
+#[test]
+fn wrong_method_and_unknown_path_are_typed() {
+    let (_orch, edge, _c) = direct_edge();
+    let a = edge.addr();
+
+    let r = http_get(a, "/v1/query");
+    assert_eq!((r.status, r.error_code().as_str()), (405, "method-not-allowed"));
+    assert_eq!(r.header("Allow"), Some("POST"));
+
+    let r = http_post(a, "/healthz", "{}");
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("Allow"), Some("GET"));
+
+    let r = http_get(a, "/v1/nope");
+    assert_eq!((r.status, r.error_code().as_str()), (404, "not-found"));
+
+    wait_until(
+        || {
+            let s = edge.stats();
+            s.query.requests == 1 && s.health.requests == 1 && s.other.requests == 1
+        },
+        "edge counters to attribute the rejects",
+    );
+    let s = edge.stats();
+    assert_eq!((s.query.errors, s.health.errors, s.other.errors), (1, 1, 1));
+}
+
+// ---------------------------------------------------------------------------
+// Hostile JSON schemas
+// ---------------------------------------------------------------------------
+
+/// Structurally valid HTTP with hostile JSON: every case is the specific
+/// typed 400 from the schema layer, and none of them reaches the cluster.
+#[test]
+fn hostile_json_bodies_are_typed_400s() {
+    let (_orch, edge, c) = direct_edge();
+    let a = edge.addr();
+    let pt = point_json(c.queries.point(0)).to_string_compact();
+
+    let deep = format!("{}1{}", "[".repeat(4096), "]".repeat(4096));
+    let query_cases: Vec<(String, &str)> = vec![
+        // Not JSON at all.
+        ("point=1,2,3".into(), "bad-json"),
+        // Parser hardening: nesting past the depth cap...
+        (deep, "bad-json"),
+        // ...duplicate keys...
+        (format!("{{\"point\":{pt},\"point\":{pt}}}"), "bad-json"),
+        // ...and non-finite / overflowing numbers.
+        ("{\"point\":[1e99999]}".into(), "bad-json"),
+        // Top level must be an object.
+        (format!("[{pt}]"), "schema"),
+        // Required field missing.
+        ("{}".into(), "missing-field"),
+        // Fields outside the schema are rejected, not ignored.
+        (format!("{{\"point\":{pt},\"evil\":1}}"), "unknown-field"),
+        // A point must be an array of numbers of the cluster's dim.
+        ("{\"point\":3}".into(), "bad-point"),
+        ("{\"point\":[1,2,3]}".into(), "bad-dimension"),
+        // Right dimension, wrong component type.
+        (
+            {
+                let mut comps = vec![Json::Bool(true)];
+                comps.extend((1..c.data.dim).map(|_| Json::Num(1.0)));
+                let mut o = JsonObj::new();
+                o.insert("point", Json::Arr(comps));
+                Json::Obj(o).to_string_compact()
+            },
+            "bad-point",
+        ),
+        // Enum and integer fields validate strictly.
+        (format!("{{\"point\":{pt},\"class\":\"vip\"}}"), "bad-class"),
+        (format!("{{\"point\":{pt},\"budget_us\":-5}}"), "bad-budget"),
+        (format!("{{\"point\":{pt},\"budget_us\":1.5}}"), "bad-budget"),
+        (format!("{{\"point\":{pt},\"policy\":\"fast\"}}"), "bad-policy"),
+    ];
+    for (body, code) in &query_cases {
+        let r = http_post(a, "/v1/query", body);
+        assert_eq!(r.status, 400, "body {body:?} → {}", r.body);
+        assert_eq!(r.error_code(), *code, "body {body:?}");
+    }
+
+    let insert_cases: Vec<(String, &str)> = vec![
+        ("{\"points\":5,\"labels\":[]}".into(), "bad-points"),
+        (format!("{{\"points\":[{pt}]}}"), "bad-labels"),
+        ("{\"points\":[],\"labels\":[]}".into(), "empty-batch"),
+        (format!("{{\"points\":[{pt}],\"labels\":[true,false]}}"), "length-mismatch"),
+        (format!("{{\"points\":[{pt}],\"labels\":[1]}}"), "bad-labels"),
+        (format!("{{\"points\":[[1,2]],\"labels\":[true]}}"), "bad-dimension"),
+    ];
+    for (body, code) in &insert_cases {
+        let r = http_post(a, "/v1/insert", body);
+        assert_eq!(r.status, 400, "body {body:?} → {}", r.body);
+        assert_eq!(r.error_code(), *code, "body {body:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slowloris: the read deadline runs on the injected clock
+// ---------------------------------------------------------------------------
+
+/// A client that sends half a request and stalls is cut off with a `408`
+/// when the *injected* clock passes the read deadline — the test drives
+/// the MockClock; no real timeout is waited out.
+#[test]
+fn stalled_request_times_out_on_the_injected_clock() {
+    let c = corpus(96, 2, 3);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let orch = Arc::new(reference_orchestrator(&c.data, &params, 1, 1));
+    let clock = Arc::new(MockClock::new(0));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = EdgeConfig::new(c.data.dim).with_read_timeout(Duration::from_millis(50));
+    let edge = EdgeServer::start_with_clock(
+        Arc::clone(&orch),
+        listener,
+        cfg,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+
+    let mut s = TcpStream::connect(edge.addr()).unwrap();
+    s.write_all(b"GET /healthz HTTP/1.1\r\nX-Slow: tric").unwrap();
+    // Advance the clock in steps larger than the deadline until the
+    // server's next poll observes it expired; the handler computes its
+    // deadline from the clock value at accept, so stepping (rather than
+    // one big jump racing the accept) is what makes this deterministic.
+    s.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+    let mut buf = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        clock.advance(Duration::from_millis(60));
+        let mut chunk = [0u8; 1024];
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => {}
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "no 408 before the real-time bound");
+    }
+    let r = parse_http_response(&buf);
+    assert_eq!((r.status, r.error_code().as_str()), (408, "timeout"));
+    drop(s);
+    wait_until(|| edge.stats().other.errors == 1, "the timeout to be counted");
+}
+
+// ---------------------------------------------------------------------------
+// Property corpora: one hostile-input discipline, two codecs
+// ---------------------------------------------------------------------------
+
+fn canonical_request() -> Vec<u8> {
+    let body = r#"{"point":[1,2,3],"budget_us":1000}"#;
+    format!(
+        "POST /v1/query HTTP/1.1\r\nHost: a\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Truncation at every byte: a cut-off request is always a typed error,
+/// never a partial success, never a panic or a hang.
+#[test]
+fn http_parser_rejects_every_truncation() {
+    let full = canonical_request();
+    let clock = MockClock::new(0);
+    let limits = Limits::default();
+    assert!(parse_request(&mut Cursor::new(&full[..]), &clock, u64::MAX, &limits).is_ok());
+    for (cut, prefix) in truncation_corpus(&full).enumerate() {
+        let got = parse_request(&mut Cursor::new(prefix), &clock, u64::MAX, &limits);
+        assert!(got.is_err(), "prefix of {cut} bytes parsed as {got:?}");
+    }
+}
+
+/// Seeded random mutations (bit flips, inserts, deletes, truncations):
+/// any verdict is acceptable, panicking or hanging is not.
+#[test]
+fn http_parser_survives_seeded_mutations() {
+    let full = canonical_request();
+    let clock = MockClock::new(0);
+    let limits = Limits::default();
+    for m in mutation_corpus(&full, 600, 0x177e_eb) {
+        let _ = parse_request(&mut Cursor::new(&m[..]), &clock, u64::MAX, &limits);
+    }
+}
+
+/// The binary wire codec holds the same line against the same corpus
+/// drivers — truncations are typed decode errors, mutations never panic.
+#[test]
+fn wire_codec_shares_the_hostile_corpus_discipline() {
+    let msg = Message::InsertAck { seq: 7, accepted: 3, total: 10, sealed_now: 1, sealed_total: 2 };
+    let bytes = msg.encode();
+    assert_eq!(Message::decode(&bytes).unwrap(), msg);
+    for (cut, prefix) in truncation_corpus(&bytes).enumerate() {
+        assert!(Message::decode(prefix).is_err(), "prefix of {cut} bytes decoded");
+    }
+    for m in mutation_corpus(&bytes, 600, 0xC0DEC) {
+        let _ = Message::decode(&m);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct path (admission disabled) — also the TIER1_MATRIX leg
+// ---------------------------------------------------------------------------
+
+/// Without admission the edge drives `query_batch_flat` directly; an HTTP
+/// round trip is bit-identical to the in-process call.
+#[test]
+fn direct_path_query_is_bit_identical_to_query_batch_flat() {
+    let (orch, edge, c) = direct_edge();
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let r = http_post(edge.addr(), "/v1/query", &query_body(q));
+        assert_eq!(r.status, 200, "query {i}: {}", r.body);
+        let got = result_from_json(&r.json());
+        let want = orch
+            .query_batch_flat(q.to_vec(), 1, Budget::none(), Class::Monitor)
+            .unwrap()
+            .remove(0);
+        assert_bit_identical(&got, &want, &format!("HTTP query {i} vs direct call"));
+    }
+    wait_until(|| edge.stats().query.requests == c.queries.len() as u64, "query counters");
+    assert_eq!(edge.stats().query.errors, 0);
+}
+
+/// On the direct path the request's `budget_us`/`policy` form the node
+/// Budget verbatim: a zero budget under `"partial"` comes back `206`,
+/// flagged partial, with zero scan work done.
+#[test]
+fn direct_path_zero_budget_partial_answer_is_206() {
+    let (_orch, edge, c) = direct_edge();
+    let mut o = JsonObj::new();
+    o.insert("point", point_json(c.queries.point(0)));
+    o.insert("budget_us", Json::Num(0.0));
+    o.insert("policy", Json::Str("partial".into()));
+    let r = http_post(edge.addr(), "/v1/query", &Json::Obj(o).to_string_compact());
+    assert_eq!(r.status, 206, "{}", r.body);
+    let j = r.json();
+    assert_eq!(j.get("partial").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("shed_nodes").unwrap().as_u64(), Some(0), "partial, not shed");
+    assert_eq!(j.get("max_comparisons").unwrap().as_u64(), Some(0), "no scan work");
+}
+
+/// Health and stats endpoints work without the admission layer: the
+/// stats document reports `"admission": null`.
+#[test]
+fn direct_path_health_and_stats_without_admission() {
+    let (_orch, edge, _c) = direct_edge();
+    let a = edge.addr();
+    let h = http_get(a, "/healthz");
+    assert_eq!(h.status, 200);
+    assert_eq!(h.json().get("status").unwrap().as_str(), Some("ok"));
+    let r = http_get(a, "/readyz");
+    assert_eq!(r.status, 200, "{}", r.body);
+    let s = http_get(a, "/v1/stats");
+    assert_eq!(s.status, 200);
+    let j = s.json();
+    assert!(matches!(j.get("admission"), Some(Json::Null)), "no admission installed: {}", s.body);
+    assert_eq!(j.get("failover").unwrap().get("replicas_down").unwrap().as_u64(), Some(0));
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: live replicated cluster + admission behind the edge
+// ---------------------------------------------------------------------------
+
+/// The acceptance scenario: a live (streaming) replicated cluster with
+/// the admission layer installed, served over HTTP on a port-0 listener.
+/// Inserts fan out to both replicas (`replicas_acked` in the response),
+/// HTTP queries are bit-identical to direct `submit_class` calls, and
+/// stats/health endpoints reflect the traffic.
+#[test]
+fn e2e_http_serving_matches_direct_submit_on_a_live_replicated_cluster() {
+    let c = corpus(240, 6, 21);
+    let d = &c.data;
+    let params = lsh_params(d, 16, 8, 23);
+    let policy = SealPolicy::by_size(100);
+    let clock = Arc::new(MockClock::new(0));
+
+    // Two shards × two replicas; replicas share an id base so the same
+    // insert stream keeps them interchangeable.
+    let sets: Vec<ReplicaSet> = (0..2)
+        .map(|shard| {
+            let replicas = (0..2)
+                .map(|_| {
+                    boxed(LocalNode::spawn_live(
+                        shard,
+                        shard as u64 * LIVE_ID_STRIDE,
+                        &params,
+                        2,
+                        native_engines(2),
+                        Arc::new(SystemClock::new()) as Arc<dyn Clock>,
+                        policy,
+                    ))
+                })
+                .collect();
+            ReplicaSet::new(shard, replicas)
+        })
+        .collect();
+    let mut orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+    orch.enable_admission(AdmissionConfig::new(d.dim, 1));
+    let orch = Arc::new(orch);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = EdgeConfig::new(d.dim);
+    let edge = EdgeServer::start(Arc::clone(&orch), listener, cfg).unwrap();
+    let a = edge.addr();
+
+    // Liveness and readiness before any data.
+    assert_eq!(http_get(a, "/healthz").status, 200);
+    let r = http_get(a, "/readyz");
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.json().get("ready").unwrap().as_bool(), Some(true));
+
+    // Ingest the corpus over HTTP; every batch must be acknowledged by
+    // both replicas of its target shard.
+    let batch = 60;
+    let mut at = 0;
+    while at < d.len() {
+        let take = batch.min(d.len() - at);
+        let r = http_post(a, "/v1/insert", &insert_body(d, at, take));
+        assert_eq!(r.status, 200, "insert at {at}: {}", r.body);
+        let j = r.json();
+        assert_eq!(j.get("accepted").unwrap().as_u64(), Some(take as u64));
+        assert_eq!(j.get("replicas_acked").unwrap().as_u64(), Some(2), "{}", r.body);
+        at += take;
+    }
+    let ing = orch.ingest_stats();
+    assert_eq!((ing.batches, ing.points), (4, 240));
+
+    // HTTP queries through admission are bit-identical to direct submits
+    // on the same cluster.
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let r = http_post(a, "/v1/query", &query_body(q));
+        assert_eq!(r.status, 200, "query {i}: {}", r.body);
+        let got = result_from_json(&r.json());
+        let want = orch.submit_class(q, FAR, Class::Monitor).unwrap().wait().unwrap();
+        assert_bit_identical(&got, &want, &format!("HTTP query {i} vs submit_class"));
+        assert!(!got.partial, "full budget must complete");
+    }
+
+    // The stats document reflects all of the above.
+    wait_until(|| edge.stats().query.requests == c.queries.len() as u64, "query counters");
+    let s = http_get(a, "/v1/stats");
+    assert_eq!(s.status, 200);
+    let j = s.json();
+    assert_eq!(j.get("ingest").unwrap().get("points").unwrap().as_u64(), Some(240));
+    assert_eq!(j.get("failover").unwrap().get("replicas_down").unwrap().as_u64(), Some(0));
+    let adm = j.get("admission").unwrap();
+    // 6 HTTP + 6 direct submits, all completed, none rejected.
+    assert_eq!(adm.get("submitted").unwrap().as_u64(), Some(12), "{}", s.body);
+    assert_eq!(adm.get("completed").unwrap().as_u64(), Some(12));
+    assert_eq!(adm.get("rejected_full").unwrap().as_u64(), Some(0));
+    let eq = j.get("edge").unwrap().get("query").unwrap();
+    assert_eq!(eq.get("requests").unwrap().as_u64(), Some(6));
+    assert_eq!(eq.get("errors").unwrap().as_u64(), Some(0));
+}
+
+/// Queue-full backpressure over HTTP, deterministically: with a blocked
+/// replica, a capacity-1 queue and a rendezvous pipeline, the fourth
+/// concurrent query is turned away at the door — `429`, `Retry-After`,
+/// `rejected_full` — and completes normally once capacity frees up.
+#[test]
+fn queue_full_is_429_with_retry_after() {
+    let c = corpus(160, 4, 17);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let parts = shard_parts(&c.data, 1);
+    let switch = FaultSwitch::new();
+    let inner = spawn_replica(&parts[0].1, 0, parts[0].0, &params, 1);
+    let clock = Arc::new(MockClock::new(0));
+    let sets = vec![ReplicaSet::new(0, vec![boxed(FaultyNode::new(inner, Arc::clone(&switch)))])];
+    let mut orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+    orch.enable_admission(AdmissionConfig::new(c.data.dim, 1).with_queue_cap(1).with_pipeline(1));
+    let orch = Arc::new(orch);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = EdgeConfig::new(c.data.dim);
+    let edge = EdgeServer::start(Arc::clone(&orch), listener, cfg).unwrap();
+    let a = edge.addr();
+    let admission = orch.admission().unwrap();
+
+    switch.set(|p| p.block_queries = true);
+    let body = query_body(c.queries.point(0));
+    let post = |body: String| std::thread::spawn(move || http_post(a, "/v1/query", &body));
+
+    // A: cut immediately (max_batch 1), dispatched, parked at the
+    // blocked replica.
+    let ta = post(body.clone());
+    wait_until(|| switch.requests_seen() == 1, "A to reach the blocked replica");
+    // B: cut by the cutter, then parked at the rendezvous handoff behind
+    // A (counters record the cut before the blocking send).
+    let tb = post(body.clone());
+    wait_until(|| admission.stats().completed == 2, "B's cut to be formed");
+    // C: fills the queue (capacity 1).
+    let tc = post(body.clone());
+    wait_until(|| admission.stats().depth == 1, "C to fill the queue");
+
+    // D: turned away at the door with the full backpressure contract.
+    let d = http_post(a, "/v1/query", &body);
+    assert_eq!(d.status, 429, "{}", d.body);
+    assert_eq!(d.error_code(), "queue-full");
+    assert_eq!(d.header("Retry-After"), Some("1"));
+    assert_eq!(admission.stats().rejected_full, 1);
+
+    // Release the replica: A, B and C all complete with full answers.
+    switch.set(|p| p.block_queries = false);
+    for (t, name) in [(ta, "A"), (tb, "B"), (tc, "C")] {
+        let r = t.join().unwrap();
+        assert_eq!(r.status, 200, "{name}: {}", r.body);
+    }
+    wait_until(|| edge.stats().query.requests == 4, "all four queries counted");
+    assert_eq!(edge.stats().query.errors, 1, "only D errored");
+}
+
+/// With the queue's enforcement policy set to `PartialResults`, a blown
+/// budget comes back over HTTP as a flagged `206` and shows up in the
+/// lane's `partials` counter — degraded, never silent.
+#[test]
+fn admission_blown_budget_is_a_flagged_206() {
+    let c = corpus(160, 2, 13);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let mut orch = reference_orchestrator(&c.data, &params, 2, 1);
+    orch.enable_admission(
+        AdmissionConfig::new(c.data.dim, 1).with_budget_policy(BudgetPolicy::PartialResults),
+    );
+    let orch = Arc::new(orch);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = EdgeConfig::new(c.data.dim);
+    let edge = EdgeServer::start(Arc::clone(&orch), listener, cfg).unwrap();
+
+    let mut o = JsonObj::new();
+    o.insert("point", point_json(c.queries.point(0)));
+    o.insert("budget_us", Json::Num(0.0));
+    let r = http_post(edge.addr(), "/v1/query", &Json::Obj(o).to_string_compact());
+    assert_eq!(r.status, 206, "{}", r.body);
+    let j = r.json();
+    assert_eq!(j.get("partial").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("shed_nodes").unwrap().as_u64(), Some(0), "partial, not shed");
+    let stats = orch.admission().unwrap().stats();
+    assert!(stats.monitor.partials >= 1, "the partial answer is metered: {stats:?}");
+}
+
+/// `/readyz` follows the PR 6 failure detector's replica gauge: a dead
+/// replica flips it to `503 not-ready`, a successful reconnect flips it
+/// back — so a load balancer drains a degraded edge and restores it.
+#[test]
+fn readyz_tracks_the_replica_down_gauge() {
+    let c = corpus(160, 2, 9);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let parts = shard_parts(&c.data, 1);
+    let switch = FaultSwitch::new();
+    let faulty =
+        FaultyNode::new(spawn_replica(&parts[0].1, 0, parts[0].0, &params, 1), Arc::clone(&switch));
+    let healthy = spawn_replica(&parts[0].1, 0, parts[0].0, &params, 1);
+    let clock = Arc::new(MockClock::new(0));
+    let sets = vec![ReplicaSet::new(0, vec![boxed(faulty), boxed(healthy)])];
+    let orch = Arc::new(replicated_orch(sets, params.k, quiet_failover(), &clock));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = EdgeConfig::new(c.data.dim);
+    let edge = EdgeServer::start(Arc::clone(&orch), listener, cfg).unwrap();
+    let a = edge.addr();
+
+    assert_eq!(http_get(a, "/readyz").status, 200);
+
+    // Kill the primary (reconnects fail too): the next query fails over
+    // to the sibling — still a 200 — but the detector marks the replica
+    // Down and readiness flips.
+    switch.set(|p| {
+        p.fail_requests = true;
+        p.fail_reconnects = true;
+    });
+    let q = http_post(a, "/v1/query", &query_body(c.queries.point(0)));
+    assert_eq!(q.status, 200, "failover keeps serving: {}", q.body);
+    wait_until(|| orch.failover_stats().replicas_down == 1, "the down transition");
+    let r = http_get(a, "/readyz");
+    assert_eq!((r.status, r.error_code().as_str()), (503, "not-ready"));
+
+    // Revive the replica and let the backoff'd reconnect succeed: the
+    // gauge returns to zero and readiness recovers.
+    switch.set(|p| {
+        p.fail_requests = false;
+        p.fail_reconnects = false;
+    });
+    wait_until(
+        || {
+            clock.advance(Duration::from_millis(5));
+            orch.failover_stats().reconnects == 1
+        },
+        "the reconnect to succeed",
+    );
+    wait_until(|| orch.failover_stats().replicas_down == 0, "the gauge to recover");
+    let r = http_get(a, "/readyz");
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.json().get("replicas_down").unwrap().as_u64(), Some(0));
+}

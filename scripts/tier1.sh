@@ -21,6 +21,10 @@ cargo test -q
 
 if [[ "${TIER1_MATRIX:-0}" == "1" ]]; then
   cargo test -q --no-default-features
+  # The serving edge's admission-free path must hold without the default
+  # features too: the `direct_path` tests drive query_batch_flat straight
+  # through the HTTP layer (no admission queue installed).
+  cargo test -q --no-default-features --test http_edge direct_path
 fi
 
 # Admission layer, explicitly: the scheduling seam every later feature
@@ -37,6 +41,13 @@ cargo test -q --test admission_priority
 cargo test -q --test budget_enforcement
 cargo test -q --test streaming_ingest
 cargo test -q --test fault_tolerance
+# http_edge holds the serving-edge contract (PR 7): hostile-input battery
+# over the HTTP framing + JSON schema layer, parser/codec property
+# corpora, and the deterministic E2E bit-identity / backpressure /
+# readiness suite. The json lib tests pin the hardened parser (depth cap,
+# strict numbers, duplicate-key rejection, round-trip property).
+cargo test -q --test http_edge
+cargo test -q --lib util::json
 cargo test -q --lib coordinator::admission
 
 # Bench smoke: asserts the admission-latency, ingest and hedging benches
