@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 use dslsh::coordinator::orchestrator::{NodeError, NodeHandle, Orchestrator};
 use dslsh::coordinator::{
     build_cluster, build_live_cluster, AdmissionConfig, BudgetPolicy, Class, ClusterConfig,
-    EngineKind, FailoverConfig, ReplicaSet,
+    EngineKind, FailoverConfig, QuerySpec, ReplicaSet,
 };
 use dslsh::data::WindowSpec;
 use dslsh::engine::native::NativeEngine;
@@ -241,13 +241,15 @@ fn main() -> anyhow::Result<()> {
                 s.spawn(move || {
                     // Closed loop: a bedside monitor has one window in
                     // flight at a time.
+                    let spec = QuerySpec::new()
+                        .with_class(Class::Monitor)
+                        .with_budget(budget_monitor);
                     let mut lat = Vec::with_capacity(per_monitor);
                     for j in 0..per_monitor {
                         let qi = (t * per_monitor + j) % q_total;
                         let ts = Instant::now();
-                        let ticket = orch
-                            .submit_class(corpus.queries.point(qi), budget_monitor, Class::Monitor)
-                            .unwrap();
+                        let ticket =
+                            orch.submit_spec(corpus.queries.point(qi), &spec).unwrap();
                         let _ = ticket.wait().unwrap();
                         lat.push(ts.elapsed().as_secs_f64() * 1e3);
                     }
@@ -261,6 +263,9 @@ fn main() -> anyhow::Result<()> {
                 s.spawn(move || {
                     // Open-loop bursts of 16: bulk re-scoring tolerates
                     // latency, so it queues deep and waits later.
+                    let spec = QuerySpec::new()
+                        .with_class(Class::Analytics)
+                        .with_budget(budget_analytics);
                     let mut lat = Vec::with_capacity(per_analyst);
                     let mut j = 0;
                     while j < per_analyst {
@@ -269,12 +274,7 @@ fn main() -> anyhow::Result<()> {
                         let tickets: Vec<_> = (0..burst)
                             .map(|b| {
                                 let qi = (q_total / 2 + t * per_analyst + j + b) % q_total;
-                                orch.submit_class(
-                                    corpus.queries.point(qi),
-                                    budget_analytics,
-                                    Class::Analytics,
-                                )
-                                .unwrap()
+                                orch.submit_spec(corpus.queries.point(qi), &spec).unwrap()
                             })
                             .collect();
                         for ticket in tickets {
@@ -369,17 +369,15 @@ fn main() -> anyhow::Result<()> {
             .map(|t| {
                 let corpus = &corpus;
                 s.spawn(move || {
+                    let spec = QuerySpec::new()
+                        .with_class(Class::Monitor)
+                        .with_budget(Duration::from_millis(5));
                     let mut lat = Vec::new();
                     for j in 0..100 {
                         let qi = (t * 100 + j) % corpus.queries.len();
                         let ts = Instant::now();
-                        let ticket = live_orch
-                            .submit_class(
-                                corpus.queries.point(qi),
-                                Duration::from_millis(5),
-                                Class::Monitor,
-                            )
-                            .unwrap();
+                        let ticket =
+                            live_orch.submit_spec(corpus.queries.point(qi), &spec).unwrap();
                         let _ = ticket.wait().unwrap();
                         lat.push(ts.elapsed().as_secs_f64() * 1e3);
                     }

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use dslsh::coordinator::{build_cluster, ClusterConfig};
+use dslsh::coordinator::{build_cluster, ClusterConfig, QuerySpec};
 use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
 use dslsh::engine::native::NativeEngine;
 use dslsh::experiments::outer_params;
@@ -58,7 +58,41 @@ fn main() -> anyhow::Result<()> {
     }
     println!("accuracy: {correct}/{} (class imbalance makes MCC the real metric — see the exp benches)", corpus.queries.len());
 
-    // 5. Streaming: the same index as a LIVE structure — start empty,
+    // 5. Choosing an operating point: every accuracy/latency knob rides
+    //    one typed QuerySpec — `QuerySpec::default()` IS the loop above.
+    //    `probes` widens the multi-probe search (each outer table visits
+    //    that many buckets in margin order: more candidates, higher
+    //    recall, more comparisons); `max_comparisons` is a deterministic
+    //    hard cap on per-worker work (truncation is flagged `partial`);
+    //    `k` trims the returned neighbor list without touching the vote.
+    println!();
+    println!("-- choosing an operating point (QuerySpec: probes / max_comparisons / k) --");
+    let q0 = corpus.queries.point(0);
+    for probes in [1u32, 2, 4, 8] {
+        let r = cluster.query_spec(q0, &QuerySpec::new().with_probes(probes))?;
+        println!(
+            "  probes {probes}: {:>5} comparisons, {} neighbors, predicted {}",
+            r.max_comparisons,
+            r.neighbors.len(),
+            if r.prediction { "AHE" } else { "no-AHE" },
+        );
+    }
+    let capped = cluster
+        .query_spec(q0, &QuerySpec::new().with_probes(8).with_max_comparisons(64).with_k(3))?;
+    println!(
+        "  probes 8 capped at 64: {} comparisons, partial={}, top-{} returned",
+        capped.max_comparisons,
+        capped.partial,
+        capped.neighbors.len()
+    );
+    // Prefer a declarative dial? recall_hint maps to a probe count
+    // (<=0.5 -> 1 probe, <=0.75 -> 2, <=0.9 -> 4, else 8) so callers
+    // name an accuracy target instead of a bucket count.
+    let hinted = cluster.query_spec(q0, &QuerySpec::new().with_recall_hint(0.9))?;
+    println!("  recall_hint 0.9 (= 4 probes/table): {} comparisons", hinted.max_comparisons);
+    println!("(the probes/recall/latency frontier: cargo bench --bench tradeoff)");
+
+    // 6. Streaming: the same index as a LIVE structure — start empty,
     //    insert windows as monitors produce them, query at any point, and
     //    seal the delta into an immutable segment (by an explicit call
     //    here; in serving, by the size-or-age SealPolicy).
@@ -95,7 +129,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("(full streaming cluster: examples/icu_serving.rs; rates: cargo bench --bench ingest)");
 
-    // 6. HTTP front door (zero-dependency; see rust/src/net/edge.rs and
+    // 7. HTTP front door (zero-dependency; see rust/src/net/edge.rs and
     //    the tail of examples/icu_serving.rs for a running server). Any
     //    orchestrator can be served over plain HTTP/1.1 + JSON:
     //
@@ -108,9 +142,13 @@ fn main() -> anyhow::Result<()> {
     //
     //        curl -s localhost:8080/healthz
     //        curl -s localhost:8080/readyz          # 503 while a shard has no live replica
-    //        curl -s localhost:8080/v1/stats        # edge/admission/ingest/failover counters
+    //        curl -s localhost:8080/v1/stats        # edge/admission/ingest/failover + per-lane probes/EWMA
     //        curl -s -X POST localhost:8080/v1/query \
     //             -d '{"point":[0.1,0.2, ...], "budget_us":2000, "policy":"partial", "class":"monitor"}'
+    //        curl -s -X POST localhost:8080/v1/query \      # the full QuerySpec over JSON
+    //             -d '{"point":[0.1,0.2, ...], "probes":4, "max_comparisons":5000, "k":3}'
+    //        curl -s -X POST localhost:8080/v1/query \      # declarative accuracy dial
+    //             -d '{"point":[0.1,0.2, ...], "recall_hint":0.9}'
     //        curl -s -X POST localhost:8080/v1/insert \
     //             -d '{"points":[[0.1,0.2, ...]], "labels":[true]}'
     //

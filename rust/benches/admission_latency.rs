@@ -26,6 +26,11 @@
 //! asserts non-empty CSVs were produced for ALL sections — artifact
 //! plumbing (all lanes + all policies) exercised, not timing quality.
 
+// The positional submit/query entry points are deprecated shims over the
+// QuerySpec API; this file exercises them on purpose (they must keep
+// working bit-identically until removal).
+#![allow(deprecated)]
+
 use std::time::{Duration, Instant};
 
 use dslsh::coordinator::{

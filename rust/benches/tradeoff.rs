@@ -1,0 +1,143 @@
+//! §Perf: the multi-probe accuracy/work frontier — the curve a caller
+//! rides when turning [`QuerySpec::with_probes`].
+//!
+//! One cluster (ν=2 × p=2) over an AHE-51-5c corpus; the same query set
+//! swept at `probes ∈ {1, 2, 4, 8}`. Per operating point, one CSV row
+//! (`results/tradeoff.csv`):
+//!
+//! * **comparisons** — median per-query max (the paper's speed metric)
+//!   and the run's summed total: the price of each extra probe.
+//! * **recall@K** — overlap with the exhaustive L1 K-NN over the full
+//!   corpus: what the extra buckets buy. Probe sequences are prefixes,
+//!   so candidates (and, up to distance ties, recall) only grow with P.
+//! * **MCC** — downstream prediction quality against the true labels.
+//! * **p50 latency** — the wall-clock cost of the wider scan.
+//!
+//! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and asserts
+//! the artifact contract: the CSV holds every probe row and total
+//! comparisons are STRICTLY increasing in P — the knob must actually
+//! buy work at every step, not merely not break.
+//!
+//! ```bash
+//! cargo bench --bench tradeoff            # full sweep
+//! cargo bench --bench tradeoff -- --smoke # CI artifact check
+//! ```
+
+use std::time::Instant;
+
+use dslsh::coordinator::{build_cluster, ClusterConfig, QuerySpec};
+use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::Metric;
+use dslsh::experiments::report::Table;
+use dslsh::knn::exhaustive::pknn_query_batch;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::metrics::Confusion;
+use dslsh::slsh::SlshParams;
+use dslsh::util::stats;
+
+const PROBES: [u32; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (corpus points, queries, tables) — few tables on purpose: that is
+    // where multi-probe earns its keep (each probe substitutes for a
+    // table the index never built).
+    let (n, n_queries, l) = if smoke { (3_000, 60, 6) } else { (20_000, 300, 8) };
+    let k = 10usize;
+    let (nu, p) = (2usize, 2usize);
+
+    println!("== tradeoff bench ({} mode) ==", if smoke { "smoke" } else { "full" });
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), n, n_queries, 42));
+    let (lo, hi) = corpus.data.value_range();
+    let params =
+        SlshParams::lsh_only(LayerSpec::outer_l1(corpus.data.dim, 40, l, lo, hi, 7), k);
+    let cluster = build_cluster(&corpus.data, &params, &ClusterConfig::new(nu, p))
+        .expect("cluster build");
+
+    // Exhaustive L1 ground truth over the FULL corpus — the recall
+    // yardstick every probe count is measured against.
+    println!("computing exhaustive ground truth ({n} points x {n_queries} queries)...");
+    let engine = NativeEngine::new();
+    let exact = pknn_query_batch(
+        &engine,
+        Metric::L1,
+        &corpus.queries.points,
+        &corpus.data.points,
+        corpus.data.dim,
+        &corpus.data.labels,
+        k,
+        nu * p,
+    );
+    let exact_ids: Vec<Vec<u64>> =
+        exact.iter().map(|r| r.neighbors.iter().map(|nb| nb.id).collect()).collect();
+
+    let mut table = Table::new(
+        format!("Multi-probe tradeoff — nu={nu} x p={p}, m=40 L={l}, recall@{k} vs exhaustive L1"),
+        &["probes", "median max comps", "total comps", "recall", "mcc", "p50 ms"],
+    );
+
+    let mut totals: Vec<u64> = Vec::new();
+    for probes in PROBES {
+        let spec = QuerySpec::new().with_probes(probes);
+        let mut max_comps = Vec::with_capacity(n_queries);
+        let mut lat_ms = Vec::with_capacity(n_queries);
+        let mut total = 0u64;
+        let mut hits = 0usize;
+        let mut confusion = Confusion::new();
+        for i in 0..corpus.queries.len() {
+            let t = Instant::now();
+            let r = cluster.query_spec(corpus.queries.point(i), &spec).expect("query");
+            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            max_comps.push(r.max_comparisons as f64);
+            total += r.per_node_comparisons.iter().flatten().sum::<u64>();
+            hits += r
+                .neighbors
+                .iter()
+                .filter(|nb| exact_ids[i].contains(&nb.id))
+                .count();
+            confusion.push(r.prediction, corpus.queries.labels[i]);
+        }
+        let recall = hits as f64 / (corpus.queries.len() * k) as f64;
+        println!(
+            "probes {probes}: median max comps {:.0}, total {total}, recall@{k} {recall:.3}, \
+             mcc {:.3}, p50 {:.2} ms",
+            stats::median(&max_comps),
+            confusion.mcc(),
+            stats::percentile(&lat_ms, 0.50),
+        );
+        table.row(vec![
+            probes.to_string(),
+            format!("{:.0}", stats::median(&max_comps)),
+            total.to_string(),
+            format!("{recall:.4}"),
+            format!("{:.4}", confusion.mcc()),
+            format!("{:.3}", stats::percentile(&lat_ms, 0.50)),
+        ]);
+        totals.push(total);
+    }
+
+    println!();
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "tradeoff").expect("saving csv");
+    println!("saved results/tradeoff.csv");
+
+    if smoke {
+        let csv = std::fs::read_to_string("results/tradeoff.csv")
+            .expect("results/tradeoff.csv must exist");
+        assert!(
+            csv.lines().count() >= 1 + PROBES.len(),
+            "smoke: tradeoff.csv must hold every probe row:\n{csv}"
+        );
+        for w in totals.windows(2) {
+            assert!(
+                w[1] > w[0],
+                "smoke: total comparisons must be STRICTLY increasing in probes ({totals:?})"
+            );
+        }
+        println!(
+            "smoke OK: tradeoff.csv has {} lines, comparisons strictly increasing {totals:?}",
+            csv.lines().count()
+        );
+    }
+}

@@ -9,10 +9,12 @@
 //!
 //! * Callers [`submit`](AdmissionQueue::submit) one query plus a latency
 //!   budget (and a scheduling [`Class`], via
-//!   [`submit_class`](AdmissionQueue::submit_class)) and get a [`Ticket`]
-//!   back; [`Ticket::wait`] blocks on a per-request one-shot completion
-//!   slot ([`completion_slot`]) — the reply path is lock-free (atomic
-//!   state + `thread::park`, no mutex).
+//!   [`submit_class`](AdmissionQueue::submit_class); a full per-request
+//!   operating point — probes, comparison cap, policy, k — via
+//!   [`submit_spec`](AdmissionQueue::submit_spec) and a [`QuerySpec`])
+//!   and get a [`Ticket`] back; [`Ticket::wait`] blocks on a per-request
+//!   one-shot completion slot ([`completion_slot`]) — the reply path is
+//!   lock-free (atomic state + `thread::park`, no mutex).
 //! * Pending requests live in **two scheduling lanes**:
 //!   [`Class::Monitor`] (strict priority, deadline-ordered — the paper's
 //!   bedside monitors) and [`Class::Analytics`] (FIFO behind monitors).
@@ -116,10 +118,18 @@
 //! accounting ([`note_batch_overrun`]) logs overruns identically for
 //! in-process and remote nodes.
 //!
-//! This queue is the architectural seam all later scheduling work
-//! (NUMA pinning, multi-probe degradation) plugs into: those features
-//! change *which* requests a cut takes or how a node resolves it, not how
-//! callers submit or wait.
+//! **Per-request accuracy knobs.** A [`QuerySpec`] rider also carries its
+//! probe count (or `0` = auto), comparison cap, policy escalation and
+//! result-k into the queue; at dispatch the cut resolves them batch-wide
+//! — widest probes, tightest nonzero cap, strictest policy — and ships a
+//! [`ProbeSpec`] alongside the [`Budget`]. The optional [`AutoProbes`]
+//! feedback controller tunes each lane's default probe count from live
+//! partial/shed signals and a comparisons-per-query EWMA, so auto riders
+//! get the widest scan the cluster currently serves inside its budgets.
+//!
+//! This queue is the architectural seam later scheduling work (e.g. NUMA
+//! pinning) plugs into: such features change *which* requests a cut takes
+//! or how a node resolves it, not how callers submit or wait.
 //!
 //! [`QueryResult`]: crate::coordinator::orchestrator::QueryResult
 //!
@@ -127,13 +137,14 @@
 
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::orchestrator::{ClusterError, QueryResult};
+use crate::coordinator::orchestrator::{ClusterError, QueryResult, QuerySpec};
+use crate::lsh::probe::ProbeSpec;
 use crate::runtime::service::{CutCounters, LaneCounters, QueueStats};
 use crate::util::rng::Xoshiro256;
 
@@ -483,8 +494,36 @@ pub struct AdmissionConfig {
     pub pipeline: usize,
     /// Node-side budget enforcement policy shipped with every cut (see
     /// [`BudgetPolicy`]). Defaults to [`BudgetPolicy::LogOnly`], which is
-    /// bit-identical to a cluster without enforcement.
+    /// bit-identical to a cluster without enforcement. A rider whose
+    /// [`QuerySpec`] names a stricter policy escalates the whole cut (the
+    /// config is the floor, never the ceiling).
     pub budget_policy: BudgetPolicy,
+    /// Optional per-lane probe-count feedback controller (see
+    /// [`AutoProbes`]). `None` (the default) pins auto-probe riders to 1
+    /// probe — the legacy single-bucket scan.
+    pub auto_probes: Option<AutoProbes>,
+}
+
+/// Feedback controller for the per-lane *default* probe count — the value
+/// auto-probe riders (a [`QuerySpec`] with `probes == 0` and no
+/// `recall_hint`) inherit at cut time. After every dispatched cut the
+/// controller folds the observed comparisons-per-query into a lane EWMA
+/// (`ewma = (7·prev + obs) / 8`) and steps the lane's probe count by ±1:
+/// down when the cut came back stressed (any partial or shed rider on the
+/// lane) or the EWMA exceeds `target_comparisons`, up otherwise — a
+/// classic AIAD walk that converges onto the widest probe count the
+/// cluster can serve inside its budgets. Explicit `probes`/`recall_hint`
+/// riders bypass the controller entirely; the EWMA telemetry is kept even
+/// when the controller is off (surfaced via [`LaneStats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoProbes {
+    /// Floor for the lane probe count (also its starting value); >= 1.
+    pub min: u32,
+    /// Ceiling for the lane probe count; >= `min`.
+    pub max: u32,
+    /// Comparisons-per-query EWMA above which the lane steps down even
+    /// without enforcement stress — the operator's cost budget.
+    pub target_comparisons: u64,
 }
 
 impl AdmissionConfig {
@@ -498,6 +537,7 @@ impl AdmissionConfig {
             age_bound: Duration::from_millis(25),
             pipeline: 2,
             budget_policy: BudgetPolicy::LogOnly,
+            auto_probes: None,
         }
     }
 
@@ -524,6 +564,12 @@ impl AdmissionConfig {
 
     pub fn with_budget_policy(mut self, policy: BudgetPolicy) -> AdmissionConfig {
         self.budget_policy = policy;
+        self
+    }
+
+    /// Enable the per-lane probe-count feedback controller.
+    pub fn with_auto_probes(mut self, auto: AutoProbes) -> AdmissionConfig {
+        self.auto_probes = Some(auto);
         self
     }
 }
@@ -622,6 +668,13 @@ pub struct LaneStats {
     pub inserted: u64,
     /// `try_submit` rejections of this class due to a full queue.
     pub rejected_full: u64,
+    /// Current per-lane default probe count — what auto-probe riders of
+    /// this class inherit at cut time (1 unless [`AutoProbes`] moved it).
+    pub probes: u32,
+    /// EWMA of observed comparisons-per-query on this lane's cuts (0
+    /// until the first cut resolves) — the controller's feedback signal,
+    /// exported even when the controller is off.
+    pub ewma_comparisons: u64,
 }
 
 /// Counter snapshot (see [`AdmissionQueue::stats`]).
@@ -641,6 +694,8 @@ pub struct AdmissionStats {
     pub cuts_deadline: u64,
     pub cuts_aged: u64,
     pub cuts_drain: u64,
+    /// Whether the [`AutoProbes`] feedback controller is enabled.
+    pub auto_probes: bool,
     /// Monitor-lane breakdown.
     pub monitor: LaneStats,
     /// Analytics-lane breakdown.
@@ -652,7 +707,21 @@ struct Pending {
     class: Class,
     /// When the request was admitted (clock ns) — the aging origin.
     enqueue_ns: u64,
+    /// `u64::MAX` = budgetless (a [`QuerySpec`] without a budget): never
+    /// deadline-cuts; rides fill/aged/drain cuts.
     deadline_ns: u64,
+    /// Requested probes per outer table; 0 = auto (inherit the lane's
+    /// feedback-controlled default at cut time).
+    probes: u32,
+    /// Candidate-budget cap (0 = unlimited); the cut takes the tightest
+    /// nonzero cap across its riders.
+    max_comparisons: u64,
+    /// Per-request policy escalation; the cut folds these with the
+    /// configured [`AdmissionConfig::budget_policy`] as the floor.
+    policy: Option<BudgetPolicy>,
+    /// Truncate the rider's returned neighbor list to this length at
+    /// fulfillment (0 = cluster default K).
+    k: usize,
     slot: SlotWriter<Result<QueryResult, AdmissionError>>,
 }
 
@@ -688,6 +757,11 @@ struct Shared {
     lane_queue: [Arc<QueueStats>; 2],
     /// Per-class dispatch/overrun counters, indexed by `Class::idx()`.
     lane_counters: [Arc<LaneCounters>; 2],
+    /// Per-class default probe count auto-probe riders inherit at cut
+    /// time, indexed by `Class::idx()` (stepped by [`AutoProbes`]).
+    lane_probes: [AtomicU32; 2],
+    /// Per-class EWMA of comparisons-per-query, indexed by `Class::idx()`.
+    lane_ewma: [AtomicU64; 2],
     cfg: AdmissionConfig,
 }
 
@@ -863,12 +937,20 @@ impl AdmissionQueue {
     /// flat row-major block (`nq × dim` floats, plus the cut's [`Budget`]
     /// — the remaining µs of the batch's most urgent request, computed at
     /// dispatch and saturating to 0 once the deadline has passed, paired
-    /// with the queue's [`BudgetPolicy`] — and the batch's scheduling
-    /// class: [`Class::Monitor`] if any monitor rides the cut) and
-    /// returns exactly `nq` results in order.
+    /// with the cut's effective [`BudgetPolicy`] — the batch's scheduling
+    /// class: [`Class::Monitor`] if any monitor rides the cut — and the
+    /// cut's [`ProbeSpec`]: the widest resolved probe count and tightest
+    /// nonzero comparison cap across its riders) and returns exactly `nq`
+    /// results in order.
     pub fn start<D>(cfg: AdmissionConfig, dispatch: D) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError>
+        D: FnMut(
+                Vec<f32>,
+                usize,
+                Budget,
+                Class,
+                ProbeSpec,
+            ) -> Result<Vec<QueryResult>, ClusterError>
             + Send
             + 'static,
     {
@@ -882,7 +964,13 @@ impl AdmissionQueue {
         clock: Arc<dyn Clock>,
     ) -> AdmissionQueue
     where
-        D: FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError>
+        D: FnMut(
+                Vec<f32>,
+                usize,
+                Budget,
+                Class,
+                ProbeSpec,
+            ) -> Result<Vec<QueryResult>, ClusterError>
             + Send
             + 'static,
     {
@@ -890,6 +978,11 @@ impl AdmissionQueue {
         assert!(cfg.max_batch > 0, "max_batch must be positive");
         assert!(cfg.queue_cap > 0, "queue_cap must be positive");
         assert!(cfg.pipeline > 0, "pipeline depth must be positive");
+        if let Some(auto) = cfg.auto_probes {
+            assert!(auto.min >= 1, "auto_probes.min must be >= 1");
+            assert!(auto.max >= auto.min, "auto_probes.max must be >= min");
+        }
+        let probes0 = cfg.auto_probes.map_or(1, |a| a.min);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 monitors: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
@@ -904,6 +997,8 @@ impl AdmissionQueue {
             cuts: Arc::new(CutCounters::new()),
             lane_queue: [Arc::new(QueueStats::new()), Arc::new(QueueStats::new())],
             lane_counters: [Arc::new(LaneCounters::new()), Arc::new(LaneCounters::new())],
+            lane_probes: [AtomicU32::new(probes0), AtomicU32::new(probes0)],
+            lane_ewma: [AtomicU64::new(0), AtomicU64::new(0)],
             cfg,
         });
 
@@ -925,24 +1020,57 @@ impl AdmissionQueue {
                     // Remaining budget of the batch's most urgent request,
                     // computed ONCE here — time spent queued behind the
                     // pipeline counts against it, and every node (local or
-                    // remote) enforces against this same number.
-                    let remaining_us = batch
-                        .iter()
-                        .map(|p| p.deadline_ns)
-                        .min()
-                        .map(|dl| dl.saturating_sub(start_ns) / 1_000)
-                        .unwrap_or(0);
-                    let budget = Budget::enforced(remaining_us, shared.cfg.budget_policy);
+                    // remote) enforces against this same number. A cut of
+                    // entirely budgetless riders (deadline u64::MAX) ships
+                    // the no-deadline sentinel instead.
+                    let min_deadline =
+                        batch.iter().map(|p| p.deadline_ns).min().unwrap_or(u64::MAX);
+                    // The strictest rider policy governs the shared cut;
+                    // the queue's configured policy is the floor (the
+                    // `as_u8` encoding orders LogOnly < Partial < Shed).
+                    let policy = batch.iter().filter_map(|p| p.policy).fold(
+                        shared.cfg.budget_policy,
+                        |acc, p| if p.as_u8() > acc.as_u8() { p } else { acc },
+                    );
+                    let budget = if min_deadline == u64::MAX {
+                        Budget::none()
+                    } else {
+                        Budget::enforced(min_deadline.saturating_sub(start_ns) / 1_000, policy)
+                    };
                     let class = if batch.iter().any(|p| p.class == Class::Monitor) {
                         Class::Monitor
                     } else {
                         Class::Analytics
                     };
+                    // Cut-level probe knobs: the WIDEST resolved probe
+                    // count (the batch shares one scan, so the widest
+                    // request sets it; auto riders inherit their lane's
+                    // controller value) and the TIGHTEST nonzero
+                    // comparison cap (a cap is a promise to stop, and the
+                    // strictest promise must hold for its rider).
+                    let mut probes_cut = 1u32;
+                    let mut cap_cut = 0u64;
+                    for p in &batch {
+                        let rp = if p.probes > 0 {
+                            p.probes
+                        } else {
+                            shared.lane_probes[p.class.idx()].load(Ordering::Relaxed)
+                        };
+                        probes_cut = probes_cut.max(rp.max(1));
+                        if p.max_comparisons > 0 {
+                            cap_cut = if cap_cut == 0 {
+                                p.max_comparisons
+                            } else {
+                                cap_cut.min(p.max_comparisons)
+                            };
+                        }
+                    }
+                    let probe = ProbeSpec::new(probes_cut, cap_cut);
                     let mut flat = Vec::with_capacity(nq * shared.cfg.dim);
                     for p in &batch {
                         flat.extend_from_slice(&p.q);
                     }
-                    let outcome = dispatch(flat, nq, budget, class);
+                    let outcome = dispatch(flat, nq, budget, class, probe);
                     // Per-class overrun attribution: every request whose
                     // deadline passed before its batch resolved is a miss
                     // the lane counters must surface.
@@ -993,7 +1121,44 @@ impl AdmissionQueue {
                                 shared.lane_counters[idx].record_sheds(sheds[idx]);
                             }
                         }
-                        for (p, r) in batch.into_iter().zip(results) {
+                        // Per-lane comparisons telemetry + auto-probe
+                        // feedback: fold the mean comparisons-per-query
+                        // into the lane EWMA, then (controller on) step
+                        // the lane's default probe count — down under
+                        // enforcement stress or past the cost target, up
+                        // while comfortably under it.
+                        let mut lane_sum = [0u64; 2];
+                        let mut lane_n = [0u64; 2];
+                        for (p, r) in batch.iter().zip(&results) {
+                            lane_sum[p.class.idx()] += r.max_comparisons;
+                            lane_n[p.class.idx()] += 1;
+                        }
+                        for idx in 0..2 {
+                            if lane_n[idx] == 0 {
+                                continue;
+                            }
+                            let obs = lane_sum[idx] / lane_n[idx];
+                            let prev = shared.lane_ewma[idx].load(Ordering::Relaxed);
+                            let ewma = if prev == 0 { obs } else { (7 * prev + obs) / 8 };
+                            shared.lane_ewma[idx].store(ewma, Ordering::Relaxed);
+                            if let Some(auto) = shared.cfg.auto_probes {
+                                let cur = shared.lane_probes[idx].load(Ordering::Relaxed);
+                                let stressed = partials[idx] > 0 || sheds[idx] > 0;
+                                let next = if stressed || ewma > auto.target_comparisons {
+                                    cur.saturating_sub(1).max(auto.min)
+                                } else {
+                                    cur.saturating_add(1).min(auto.max)
+                                };
+                                shared.lane_probes[idx].store(next, Ordering::Relaxed);
+                            }
+                        }
+                        for (p, mut r) in batch.into_iter().zip(results) {
+                            // A rider's k caps only ITS returned list —
+                            // the shared scan (and the vote behind the
+                            // prediction) already ran at cluster K.
+                            if p.k > 0 {
+                                r.neighbors.truncate(p.k);
+                            }
                             p.slot.fulfill(Ok(r));
                         }
                     } else {
@@ -1138,6 +1303,21 @@ impl AdmissionQueue {
         self.submit_inner(q, budget, class, false)
     }
 
+    /// Admit one query at an explicit operating point: every [`QuerySpec`]
+    /// knob (class, budget, policy, probes/recall hint, comparison cap,
+    /// k) rides the request into its cut. Blocking; panics on an invalid
+    /// spec (see [`QuerySpec::validate`] — a malformed spec is a caller
+    /// bug, same contract as a dimension mismatch).
+    pub fn submit_spec(&self, q: &[f32], spec: &QuerySpec) -> Result<Ticket, AdmissionError> {
+        self.submit_spec_inner(q, spec, true)
+    }
+
+    /// Non-blocking [`submit_spec`](AdmissionQueue::submit_spec):
+    /// `Err(QueueFull)` instead of waiting.
+    pub fn try_submit_spec(&self, q: &[f32], spec: &QuerySpec) -> Result<Ticket, AdmissionError> {
+        self.submit_spec_inner(q, spec, false)
+    }
+
     fn submit_inner(
         &self,
         q: &[f32],
@@ -1145,7 +1325,23 @@ impl AdmissionQueue {
         class: Class,
         block: bool,
     ) -> Result<Ticket, AdmissionError> {
+        // The legacy positional doors are exactly a default spec with the
+        // class and budget filled in — one admission path, one behavior.
+        let spec = QuerySpec { class, budget: Some(budget), ..QuerySpec::default() };
+        self.submit_spec_inner(q, &spec, block)
+    }
+
+    fn submit_spec_inner(
+        &self,
+        q: &[f32],
+        spec: &QuerySpec,
+        block: bool,
+    ) -> Result<Ticket, AdmissionError> {
         assert_eq!(q.len(), self.shared.cfg.dim, "query dimension mismatch");
+        if let Err(e) = spec.validate() {
+            panic!("invalid QuerySpec: {e}");
+        }
+        let class = spec.class;
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if st.shutdown {
@@ -1162,10 +1358,30 @@ impl AdmissionQueue {
             st = self.shared.space_free.wait(st).unwrap();
         }
         let now = self.shared.clock.now_ns();
-        let eff = jittered_budget_ns(budget, self.shared.cfg.budget_jitter, &mut st.jitter_rng);
-        let deadline_ns = now.saturating_add(eff);
+        let deadline_ns = match spec.budget {
+            Some(budget) => {
+                let eff =
+                    jittered_budget_ns(budget, self.shared.cfg.budget_jitter, &mut st.jitter_rng);
+                now.saturating_add(eff)
+            }
+            // Budgetless: never deadline-cuts; rides fill/aged/drain cuts
+            // (and ships the no-deadline sentinel when alone in a cut).
+            // No jitter draw — the RNG stream stays in lockstep with a
+            // budget-only workload.
+            None => u64::MAX,
+        };
         let (writer, reader) = completion_slot();
-        let pending = Pending { q: q.to_vec(), class, enqueue_ns: now, deadline_ns, slot: writer };
+        let pending = Pending {
+            q: q.to_vec(),
+            class,
+            enqueue_ns: now,
+            deadline_ns,
+            probes: spec.requested_probes(),
+            max_comparisons: spec.max_comparisons,
+            policy: spec.policy,
+            k: spec.k,
+            slot: writer,
+        };
         match class {
             Class::Monitor => st.monitors.push_back(pending),
             Class::Analytics => st.analytics.push_back(pending),
@@ -1193,6 +1409,8 @@ impl AdmissionQueue {
             sheds: c.sheds(),
             inserted: c.inserts(),
             rejected_full: q.rejected(),
+            probes: self.shared.lane_probes[class.idx()].load(Ordering::Relaxed),
+            ewma_comparisons: self.shared.lane_ewma[class.idx()].load(Ordering::Relaxed),
         }
     }
 
@@ -1216,6 +1434,7 @@ impl AdmissionQueue {
             cuts_deadline: self.shared.cuts.deadline(),
             cuts_aged: self.shared.cuts.aged(),
             cuts_drain: self.shared.cuts.drain(),
+            auto_probes: self.shared.cfg.auto_probes.is_some(),
             monitor: self.lane_stats(Class::Monitor),
             analytics: self.lane_stats(Class::Analytics),
         }
@@ -1272,17 +1491,19 @@ impl Drop for AdmissionQueue {
 /// [`Orchestrator::enable_admission`]: crate::coordinator::Orchestrator::enable_admission
 pub(crate) fn root_dispatcher(
     root_tx: Sender<crate::coordinator::orchestrator::RootRequest>,
-) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError> + Send + 'static
-{
+) -> impl FnMut(Vec<f32>, usize, Budget, Class, ProbeSpec) -> Result<Vec<QueryResult>, ClusterError>
+       + Send
+       + 'static {
     use crate::coordinator::orchestrator::RootRequest;
     move |qs: Vec<f32>,
           nq: usize,
           budget: Budget,
-          class: Class|
+          class: Class,
+          probe: ProbeSpec|
           -> Result<Vec<QueryResult>, ClusterError> {
         let (tx, rx) = channel();
         root_tx
-            .send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx })
+            .send(RootRequest::Batch { qs, nq, budget, class, probe, reply_to: tx })
             .map_err(|_| ClusterError::Shutdown)?;
         rx.recv().map_err(|_| ClusterError::Shutdown)
     }
@@ -1299,7 +1520,17 @@ mod tests {
 
     fn pending(class: Class, enqueue_ns: u64, deadline_ns: u64) -> Pending {
         let (writer, _reader) = completion_slot();
-        Pending { q: vec![0.0], class, enqueue_ns, deadline_ns, slot: writer }
+        Pending {
+            q: vec![0.0],
+            class,
+            enqueue_ns,
+            deadline_ns,
+            probes: 0,
+            max_comparisons: 0,
+            policy: None,
+            k: 0,
+            slot: writer,
+        }
     }
 
     /// Build a two-lane state from `(class, enqueue_ns, deadline_ns)`
@@ -1335,6 +1566,7 @@ mod tests {
         nq: usize,
         _budget: Budget,
         _class: Class,
+        _probe: ProbeSpec,
     ) -> Result<Vec<QueryResult>, ClusterError> {
         let dim = if nq == 0 { 0 } else { flat.len() / nq };
         Ok((0..nq)
@@ -1610,10 +1842,10 @@ mod tests {
         // channel handshakes + counter waits — no sleeps.
         let (evt_tx, evt_rx) = channel::<usize>();
         let (gate_tx, gate_rx) = channel::<()>();
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class| {
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
             evt_tx.send(nq).unwrap();
             gate_rx.recv().unwrap();
-            echo(flat, nq, b, c)
+            echo(flat, nq, b, c, p)
         };
         let cfg = AdmissionConfig::new(1, 2).with_queue_cap(2).with_pipeline(1);
         let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
@@ -1686,11 +1918,11 @@ mod tests {
         // A dispatch that fails (dead cluster) must fulfill every rider
         // of the batch with a typed error — no panic, no hang, and the
         // queue keeps serving later batches.
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class| {
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
             if flat[0] < 0.0 {
                 Err(ClusterError::Shutdown)
             } else {
-                echo(flat, nq, b, c)
+                echo(flat, nq, b, c, p)
             }
         };
         let cfg = AdmissionConfig::new(1, 2);
@@ -1703,6 +1935,99 @@ mod tests {
         let good2 = q.submit(&[4.0], FAR).unwrap();
         assert_eq!(good1.wait().unwrap().positive_share, 3.0);
         assert_eq!(good2.wait().unwrap().positive_share, 4.0);
+    }
+
+    #[test]
+    fn spec_riders_resolve_cut_knobs() {
+        // Two spec riders share one fill cut: the cut ships the WIDEST
+        // probe count, the TIGHTEST nonzero comparison cap, and the
+        // STRICTEST policy named by any rider.
+        let (cap_tx, cap_rx) = channel::<(Budget, ProbeSpec)>();
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
+            cap_tx.send((b, p)).unwrap();
+            echo(flat, nq, b, c, p)
+        };
+        let q = AdmissionQueue::start_with_clock(
+            AdmissionConfig::new(1, 2),
+            dispatch,
+            Arc::new(MockClock::new(0)),
+        );
+        let spec_a = QuerySpec::default()
+            .with_budget(FAR)
+            .with_probes(4)
+            .with_max_comparisons(100)
+            .with_policy(BudgetPolicy::Shed);
+        let spec_b =
+            QuerySpec::default().with_budget(FAR).with_probes(2).with_max_comparisons(50);
+        let ta = q.submit_spec(&[1.0], &spec_a).unwrap();
+        let tb = q.submit_spec(&[2.0], &spec_b).unwrap();
+        assert_eq!(ta.wait().unwrap().positive_share, 1.0);
+        assert_eq!(tb.wait().unwrap().positive_share, 2.0);
+        let (budget, probe) = cap_rx.recv().unwrap();
+        assert_eq!(probe.probes, 4, "widest rider sets the shared scan");
+        assert_eq!(probe.max_comparisons, 50, "tightest nonzero cap wins");
+        assert_eq!(budget.policy, BudgetPolicy::Shed, "strictest rider policy escalates");
+        assert!(!budget.is_none());
+    }
+
+    #[test]
+    fn budgetless_spec_ships_the_no_deadline_sentinel() {
+        let (cap_tx, cap_rx) = channel::<(Budget, ProbeSpec)>();
+        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
+            cap_tx.send((b, p)).unwrap();
+            echo(flat, nq, b, c, p)
+        };
+        let q = AdmissionQueue::start_with_clock(
+            AdmissionConfig::new(1, 1),
+            dispatch,
+            Arc::new(MockClock::new(0)),
+        );
+        // Default spec: no budget, auto probes with the controller off —
+        // the dispatched cut is budgetless at baseline knobs.
+        let t = q.submit_spec(&[3.0], &QuerySpec::default()).unwrap();
+        assert_eq!(t.wait().unwrap().positive_share, 3.0);
+        let (budget, probe) = cap_rx.recv().unwrap();
+        assert!(budget.is_none(), "no rider budget -> no-deadline sentinel");
+        assert!(probe.is_baseline(), "controller off -> baseline probes, no cap");
+    }
+
+    #[test]
+    fn auto_probes_controller_steps_on_feedback() {
+        // Feedback plant: comparisons = |x|, partial iff x < 0. Target
+        // 1000: cheap clean cuts step the lane up; a partial steps down.
+        let dispatch = move |flat: Vec<f32>, nq: usize, _b: Budget, _c: Class, _p: ProbeSpec| {
+            Ok((0..nq)
+                .map(|i| QueryResult {
+                    qid: i as u64,
+                    neighbors: Vec::new(),
+                    positive_share: 0.0,
+                    prediction: false,
+                    max_comparisons: flat[i].abs() as u64,
+                    per_node_comparisons: Vec::new(),
+                    latency_s: 0.0,
+                    partial: flat[i] < 0.0,
+                    shed_nodes: 0,
+                })
+                .collect())
+        };
+        let cfg = AdmissionConfig::new(1, 1)
+            .with_auto_probes(AutoProbes { min: 1, max: 4, target_comparisons: 1000 });
+        let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
+        assert!(q.stats().auto_probes);
+        assert_eq!(q.stats().monitor.probes, 1, "controller starts at min");
+        q.submit(&[16.0], FAR).unwrap().wait().unwrap();
+        let st = q.stats().monitor;
+        assert_eq!(st.probes, 2, "clean under-target cut steps up");
+        assert_eq!(st.ewma_comparisons, 16, "first observation seeds the EWMA");
+        q.submit(&[16.0], FAR).unwrap().wait().unwrap();
+        assert_eq!(q.stats().monitor.probes, 3);
+        q.submit(&[-8.0], FAR).unwrap().wait().unwrap();
+        let st = q.stats().monitor;
+        assert_eq!(st.probes, 2, "a partial answer steps the lane back down");
+        assert_eq!(st.ewma_comparisons, (7 * 16 + 8) / 8);
+        // Monitor traffic leaves the analytics lane untouched.
+        assert_eq!(q.stats().analytics.probes, 1);
+        assert_eq!(q.stats().analytics.ewma_comparisons, 0);
     }
 
     #[test]

@@ -3,6 +3,35 @@
 //! queue in front of them, and cluster assembly with per-shard replica
 //! groups.
 //!
+//! # The QuerySpec contract
+//!
+//! Every query enters through ONE typed operating point, [`QuerySpec`]:
+//! `query_spec` / `query_batch_spec_flat` on the direct path,
+//! `submit_spec` / `try_submit_spec` on the admission path, the wire's
+//! `QueryBatchBudget` frame between processes, and the HTTP edge's
+//! `POST /v1/query` body at the front door all carry the same fields.
+//! `QuerySpec::default()` is *exactly* the pre-spec behavior — no
+//! deadline, one probe per table, no comparison cap, the cluster's K —
+//! so the positional entry points (now thin deprecated shims) and the
+//! spec door are bit-identical when no knob is turned.
+//!
+//! What each knob means at each layer, and what is guaranteed:
+//!
+//! | Knob | Admission layer | Node/scan layer | Guarantee |
+//! |------|-----------------|-----------------|-----------|
+//! | `class` | picks the lane: monitor has strict priority, analytics rides leftovers with aging protection | — | lane isolation is pinned by `admission_priority` tests |
+//! | `budget` | drives the deadline cutter (when to dispatch); `None` = ride cuts, never force one | armed as the scan deadline from dispatch | deadline never inflates: a shared cut uses the *earliest* rider deadline |
+//! | `policy` | riders escalate the cut's policy; the configured [`AdmissionConfig`] policy is the floor | decides what an overrun does: log, truncate (`partial`), or shed | strictest rider governs — a `shed` rider is never silently degraded to `log_only` |
+//! | `probes` | cut uses the *widest* rider request; `0` = lane default (feedback-controlled under [`AutoProbes`]) | each outer table visits that many buckets in margin order | candidate set is monotone non-decreasing in `probes` (probe sequences are prefixes) |
+//! | `recall_hint` | mapped to a probe count before admission (mutually exclusive with `probes`) | as `probes` | same monotonicity, declarative dial |
+//! | `max_comparisons` | cut uses the *tightest* nonzero rider cap | hard per-worker candidate budget; truncation flags `partial` | deterministic (clock-free), reproducible under any scheduler |
+//! | `k` | returned-neighbor truncation at fulfillment | — | prediction/vote always uses the full cluster K-NN; `k` is display-only |
+//!
+//! Resolution on a shared admission cut is conservative per axis
+//! (earliest deadline, strictest policy, widest probes, tightest cap) so
+//! no rider ever gets *less* than it asked for on its own accuracy axis,
+//! and none can relax another rider's safety axis.
+//!
 //! # Failure-semantics contract
 //!
 //! The coordination layer's promise to callers, in order of strength:
@@ -38,13 +67,14 @@ pub mod orchestrator;
 
 pub use admission::{
     completion_slot, note_batch_overrun, AdmissionConfig, AdmissionError, AdmissionQueue,
-    AdmissionStats, Budget, BudgetPolicy, Class, Clock, CutReason, LaneStats, MockClock,
-    SystemClock, TickClock, Ticket,
+    AdmissionStats, AutoProbes, Budget, BudgetPolicy, Class, Clock, CutReason, LaneStats,
+    MockClock, SystemClock, TickClock, Ticket,
 };
 pub use cluster::{
     build_cluster, build_live_cluster, Cluster, ClusterConfig, EngineKind, FailoverConfig, Health,
     ReplicaSet,
 };
 pub use orchestrator::{
-    ClusterError, InsertOutcome, NodeError, NodeHandle, Orchestrator, QueryResult, NO_BUDGET,
+    ClusterError, InsertOutcome, NodeError, NodeHandle, Orchestrator, QueryResult, QuerySpec,
+    NO_BUDGET,
 };

@@ -52,13 +52,17 @@
 //! Orchestrator drives in-process thread-group nodes and remote TCP
 //! nodes (which reconnect with the same backoff schedule).
 //!
-//! Queries enter through three doors: [`Orchestrator::query`] (one query,
-//! the paper's ICU latency model), [`Orchestrator::query_batch`] (a
-//! caller-formed block), and — once
-//! [`Orchestrator::enable_admission`] has installed the deadline-aware
-//! admission layer — [`Orchestrator::submit`], which coalesces
-//! *independent* callers into shared cuts under per-request latency
-//! budgets (see [`crate::coordinator::admission`]).
+//! Queries enter through three doors — [`Orchestrator::query_spec`] (one
+//! query, the paper's ICU latency model),
+//! [`Orchestrator::query_batch_spec_flat`] (a caller-formed block), and —
+//! once [`Orchestrator::enable_admission`] has installed the
+//! deadline-aware admission layer — [`Orchestrator::submit_spec`], which
+//! coalesces *independent* callers into shared cuts under per-request
+//! latency budgets (see [`crate::coordinator::admission`]). All three
+//! take the same typed [`QuerySpec`] (class, latency budget, enforcement
+//! policy, multi-probe width, comparison cap, K), whose default
+//! reproduces the legacy positional entry points bit-for-bit; those old
+//! signatures survive as thin deprecated shims.
 //!
 //! [`ReplicaSet`]: crate::coordinator::cluster::ReplicaSet
 //! [`Health`]: crate::coordinator::cluster::Health
@@ -74,10 +78,12 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::admission::{
-    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Budget, Class, Ticket,
+    root_dispatcher, AdmissionConfig, AdmissionError, AdmissionQueue, Budget, BudgetPolicy, Class,
+    Ticket,
 };
 use crate::coordinator::cluster::{FailoverConfig, Health, ReplicaSet};
 use crate::knn::heap::{Neighbor, TopK};
+use crate::lsh::probe::{ProbeSpec, MAX_PROBES};
 use crate::knn::predict::{positive_share, VoteConfig};
 use crate::node::node::{HeartbeatReply, InsertReply, NodeInfo, NodeReply};
 use crate::runtime::service::{FailoverCounters, FailoverStats, IngestCounters, IngestStats};
@@ -86,6 +92,164 @@ use crate::util::clock::{Clock, SystemClock};
 /// Sentinel budget for batches that carry no latency deadline (direct
 /// [`Orchestrator::query_batch`] calls, as opposed to admission cuts).
 pub const NO_BUDGET: u64 = u64::MAX;
+
+/// The per-request accuracy/latency operating point — ONE typed knob
+/// bundle that every query door accepts ([`Orchestrator::query_spec`],
+/// [`Orchestrator::query_batch_spec_flat`], [`Orchestrator::submit_spec`],
+/// the wire's `QueryBatchBudget` frame and the HTTP edge's
+/// `POST /v1/query` body all carry the same fields).
+///
+/// `QuerySpec::default()` reproduces today's behavior exactly: no
+/// deadline, one bucket probed per outer table, no comparison cap, the
+/// cluster's configured K — bit-identical to the positional entry points
+/// it replaces. Every field widens or tightens one axis:
+///
+/// * `class` — scheduling lane on the admission path (monitor lane has
+///   strict priority; analytics rides leftovers, aging-protected).
+/// * `budget` — latency budget; `None` means no deadline. On the direct
+///   path the deadline is enforced node-side from dispatch; on the
+///   admission path it also drives the cutter.
+/// * `policy` — node-side enforcement contract for the budget; `None`
+///   inherits ([`BudgetPolicy::PartialResults`] on the direct path when a
+///   budget is set; the queue's configured policy on the admission path).
+///   On a shared admission cut the strictest policy requested by any
+///   rider governs the whole cut.
+/// * `probes` — buckets probed per outer hash table (multi-probe LSH):
+///   probe 1 is the query's own bucket; probes 2..P visit near-neighbor
+///   buckets in margin order (see [`crate::lsh::probe`]). More probes buy
+///   recall at the price of comparisons — equal recall from fewer tables.
+///   `0` = auto: resolve via `recall_hint` if set, else the lane's
+///   feedback-controlled default (admission path with
+///   [`AutoProbes`](crate::coordinator::admission::AutoProbes) enabled)
+///   or 1.
+/// * `recall_hint` — declarative alternative to `probes` (mutually
+///   exclusive with it): target recall in `(0, 1]`, mapped to a probe
+///   count (≤0.5→1, ≤0.75→2, ≤0.9→4, else 8).
+/// * `max_comparisons` — hard per-worker candidate budget; the scan
+///   truncates its candidate walk once this many comparisons have been
+///   spent and flags the answer `partial`. `0` = unlimited. Deterministic
+///   (clock-free), unlike the latency budget.
+/// * `k` — caps the *returned* neighbor list; `0` = the cluster's
+///   configured K. The vote/prediction still uses the full cluster K-NN,
+///   so prediction semantics do not depend on the caller's display size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuerySpec {
+    pub class: Class,
+    pub budget: Option<Duration>,
+    pub policy: Option<BudgetPolicy>,
+    pub probes: u32,
+    pub recall_hint: Option<f32>,
+    pub max_comparisons: u64,
+    pub k: usize,
+}
+
+impl Default for QuerySpec {
+    fn default() -> QuerySpec {
+        QuerySpec {
+            class: Class::Monitor,
+            budget: None,
+            policy: None,
+            probes: 0,
+            recall_hint: None,
+            max_comparisons: 0,
+            k: 0,
+        }
+    }
+}
+
+impl QuerySpec {
+    /// The default operating point (see the type docs).
+    pub fn new() -> QuerySpec {
+        QuerySpec::default()
+    }
+
+    pub fn with_class(mut self, class: Class) -> QuerySpec {
+        self.class = class;
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> QuerySpec {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: BudgetPolicy) -> QuerySpec {
+        self.policy = Some(policy);
+        self
+    }
+
+    pub fn with_probes(mut self, probes: u32) -> QuerySpec {
+        self.probes = probes;
+        self
+    }
+
+    pub fn with_recall_hint(mut self, hint: f32) -> QuerySpec {
+        self.recall_hint = Some(hint);
+        self
+    }
+
+    pub fn with_max_comparisons(mut self, cap: u64) -> QuerySpec {
+        self.max_comparisons = cap;
+        self
+    }
+
+    pub fn with_k(mut self, k: usize) -> QuerySpec {
+        self.k = k;
+        self
+    }
+
+    /// Field-level validation, shared by the typed API (which asserts on
+    /// it) and the HTTP edge (which turns the message into a 400).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.probes > 0 && self.recall_hint.is_some() {
+            return Err("probes and recall_hint are mutually exclusive".into());
+        }
+        if self.probes > MAX_PROBES {
+            return Err(format!("probes {} exceeds maximum {MAX_PROBES}", self.probes));
+        }
+        if let Some(h) = self.recall_hint {
+            if !(h > 0.0 && h <= 1.0) {
+                return Err(format!("recall_hint {h} outside (0, 1]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Probe count this spec *requests*: explicit `probes`, else the
+    /// `recall_hint` mapping, else `0` (= auto — the admission layer
+    /// resolves it to the lane default, the direct path to 1).
+    pub fn requested_probes(&self) -> u32 {
+        if self.probes > 0 {
+            return self.probes.min(MAX_PROBES);
+        }
+        match self.recall_hint {
+            Some(h) if h <= 0.5 => 1,
+            Some(h) if h <= 0.75 => 2,
+            Some(h) if h <= 0.9 => 4,
+            Some(_) => 8,
+            None => 0,
+        }
+    }
+
+    /// The node-level probe knobs for the DIRECT path (auto resolves
+    /// to 1 — no controller in the loop).
+    pub fn probe_spec(&self) -> ProbeSpec {
+        ProbeSpec::new(self.requested_probes().max(1), self.max_comparisons)
+    }
+
+    /// The node-level [`Budget`] for the direct path: no budget → the
+    /// no-deadline sentinel; a budget with no explicit policy enforces
+    /// [`BudgetPolicy::PartialResults`].
+    pub(crate) fn direct_budget(&self) -> Budget {
+        match self.budget {
+            None => Budget::none(),
+            Some(d) => Budget::enforced(
+                d.as_micros().min((NO_BUDGET - 1) as u128) as u64,
+                self.policy.unwrap_or(BudgetPolicy::PartialResults),
+            ),
+        }
+    }
+}
 
 /// A transport- or node-level failure talking to ONE replica: the
 /// connection broke, the frame was malformed, the node rejected the
@@ -186,6 +350,24 @@ pub trait NodeHandle: Send {
         self.query_batch(qs, nq)
     }
 
+    /// [`query_batch_budget`](NodeHandle::query_batch_budget) plus the
+    /// request's multi-probe knobs ([`ProbeSpec`]). The default ignores
+    /// the knobs and serves the baseline — correct for handles that
+    /// cannot carry them (a baseline spec IS the legacy behavior; a
+    /// wider spec degrades to it rather than failing). `LocalNode` and
+    /// `RemoteNode` override to thread the knobs to every worker / over
+    /// the wire.
+    fn query_batch_spec(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        _probe: ProbeSpec,
+    ) -> Result<Vec<NodeReply>, NodeError> {
+        self.query_batch_budget(qs, nq, budget, class)
+    }
+
     /// Append a batch of labeled points to this node's live index
     /// (`points` row-major `labels.len() × dim`), returning once every
     /// core has indexed them. Only live nodes
@@ -193,7 +375,11 @@ pub trait NodeHandle: Send {
     /// [`RemoteNode::connect_live`](crate::net::tcp::RemoteNode::connect_live))
     /// support inserts; the default errors so a misrouted insert fails
     /// loudly instead of silently dropping ICU data.
-    fn insert_batch(&mut self, _points: &[f32], _labels: &[bool]) -> Result<InsertReply, NodeError> {
+    fn insert_batch(
+        &mut self,
+        _points: &[f32],
+        _labels: &[bool],
+    ) -> Result<InsertReply, NodeError> {
         Err(NodeError::new(
             self.node_id(),
             "node does not accept online inserts (live nodes only)",
@@ -246,6 +432,16 @@ impl NodeHandle for crate::node::node::LocalNode {
         class: Class,
     ) -> Result<Vec<NodeReply>, NodeError> {
         Ok(crate::node::node::LocalNode::query_batch_budget(self, qs, nq, budget, class))
+    }
+    fn query_batch_spec(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        probe: ProbeSpec,
+    ) -> Result<Vec<NodeReply>, NodeError> {
+        Ok(crate::node::node::LocalNode::query_batch_spec(self, qs, nq, budget, class, probe))
     }
     fn insert_batch(&mut self, points: &[f32], labels: &[bool]) -> Result<InsertReply, NodeError> {
         if !self.is_live() {
@@ -329,16 +525,22 @@ struct ShardInsert {
 
 #[derive(Clone)]
 enum Job {
-    Single {
-        qid: u64,
-        q: Arc<Vec<f32>>,
-    },
     /// Flat row-major `nq × dim` block; query `i` has id `qid0 + i`.
     /// `budget` is the admission cut's remaining latency budget plus
     /// enforcement policy ([`Budget::none`] for caller-formed blocks);
     /// `class` is the cut's scheduling class (monitor if any monitor
-    /// rides it).
-    Batch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, budget: Budget, class: Class },
+    /// rides it); `probe` the cut's multi-probe knobs
+    /// ([`ProbeSpec::BASELINE`] for default-spec requests — the
+    /// bit-identical legacy path). Single queries travel as
+    /// batches of one.
+    Batch {
+        qid0: u64,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        probe: ProbeSpec,
+    },
     /// Online insert, ROUTED to shard `target` (never broadcast — each
     /// point lives on exactly one shard); the dispatcher acks straight
     /// to the caller through `reply`, bypassing the query Reducer.
@@ -351,13 +553,14 @@ enum Job {
 }
 
 pub(crate) enum RootRequest {
-    Single(Vec<f32>, Sender<QueryResult>),
-    /// Flat row-major `nq × dim` block.
+    /// Flat row-major `nq × dim` block (single queries are batches of
+    /// one — there is exactly one serving core).
     Batch {
         qs: Vec<f32>,
         nq: usize,
         budget: Budget,
         class: Class,
+        probe: ProbeSpec,
         reply_to: Sender<Vec<QueryResult>>,
     },
 }
@@ -370,7 +573,11 @@ enum ReplicaJob {
     Run { seq: u64, job: Job },
     Insert { seq: u64, points: Arc<Vec<f32>>, labels: Arc<Vec<bool>> },
     Heartbeat { seq: u64 },
-    Reconnect { seq: u64 },
+    /// Re-dial, then replay the shard's acked insert history so a live
+    /// replica rejoins with the SAME points (and ids) its peers hold —
+    /// a reconnected replica that skipped the replay would serve an
+    /// empty shard while ranked healthy.
+    Reconnect { seq: u64, backlog: Vec<(Arc<Vec<f32>>, Arc<Vec<bool>>)> },
 }
 
 enum ReplicaOutcome {
@@ -378,7 +585,10 @@ enum ReplicaOutcome {
     Queries(Result<Vec<(u64, NodeReply)>, NodeError>),
     Insert(Result<InsertReply, NodeError>),
     Heartbeat(Result<HeartbeatReply, NodeError>),
-    Reconnect(Result<(), NodeError>),
+    /// `Ok(n)` = reconnected and replayed `n` backlog batches; the
+    /// dispatcher promotes the replica only if `n` still matches its
+    /// log (batches may land while the replay is in flight).
+    Reconnect(Result<u64, NodeError>),
 }
 
 /// Orchestrator over ν replicated shards.
@@ -513,6 +723,7 @@ impl Orchestrator {
                             health: vec![Health::Up; n_rep],
                             busy: vec![false; n_rep],
                             reconnect: vec![None; n_rep],
+                            ingest_log: Vec::new(),
                             runner_tx,
                             reply_rx,
                             reduce_tx,
@@ -633,56 +844,37 @@ impl Orchestrator {
                     };
                     let mut qid = 0u64;
                     while let Ok(req) = root_rx.recv() {
-                        match req {
-                            RootRequest::Single(q, reply_to) => {
-                                let t0 = std::time::Instant::now();
-                                if fwd_tx.send(Job::Single { qid, q: Arc::new(q) }).is_err() {
-                                    return;
-                                }
-                                // ICU latency model: one query in flight.
-                                let Ok(red) = done_rx.recv() else { return };
-                                debug_assert_eq!(red.qid, qid);
-                                let result =
-                                    finish(red, &vote, t0.elapsed().as_secs_f64());
-                                let _ = reply_to.send(result);
-                                qid += 1;
-                            }
-                            RootRequest::Batch { qs, nq, budget, class, reply_to } => {
-                                let n = nq;
-                                if n == 0 {
-                                    let _ = reply_to.send(Vec::new());
-                                    continue;
-                                }
-                                let t0 = std::time::Instant::now();
-                                if fwd_tx
-                                    .send(Job::Batch {
-                                        qid0: qid,
-                                        qs: Arc::new(qs),
-                                        nq,
-                                        budget,
-                                        class,
-                                    })
-                                    .is_err()
-                                {
-                                    return;
-                                }
-                                // Per-qid completion is monotone: every
-                                // shard replies to qid i before i + 1, so
-                                // the reducer finishes them in order.
-                                let mut results = Vec::with_capacity(n);
-                                for i in 0..n {
-                                    let Ok(red) = done_rx.recv() else { return };
-                                    debug_assert_eq!(red.qid, qid + i as u64);
-                                    results.push(finish(
-                                        red,
-                                        &vote,
-                                        t0.elapsed().as_secs_f64(),
-                                    ));
-                                }
-                                qid += n as u64;
-                                let _ = reply_to.send(results);
-                            }
+                        let RootRequest::Batch { qs, nq, budget, class, probe, reply_to } = req;
+                        let n = nq;
+                        if n == 0 {
+                            let _ = reply_to.send(Vec::new());
+                            continue;
                         }
+                        let t0 = std::time::Instant::now();
+                        if fwd_tx
+                            .send(Job::Batch {
+                                qid0: qid,
+                                qs: Arc::new(qs),
+                                nq,
+                                budget,
+                                class,
+                                probe,
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                        // Per-qid completion is monotone: every shard
+                        // replies to qid i before i + 1, so the reducer
+                        // finishes them in order.
+                        let mut results = Vec::with_capacity(n);
+                        for i in 0..n {
+                            let Ok(red) = done_rx.recv() else { return };
+                            debug_assert_eq!(red.qid, qid + i as u64);
+                            results.push(finish(red, &vote, t0.elapsed().as_secs_f64()));
+                        }
+                        qid += n as u64;
+                        let _ = reply_to.send(results);
                     }
                 })
                 .expect("spawn root"),
@@ -703,14 +895,24 @@ impl Orchestrator {
     }
 
     /// Resolve one query through the full Root → Forwarder → shards →
-    /// Reducer → Root pipeline. A dead or slow shard degrades the answer
-    /// ([`QueryResult::shed_nodes`]); only a dropped cluster errors.
+    /// Reducer → Root pipeline at the default operating point
+    /// (equivalent to [`query_spec`] with `QuerySpec::default()`). A dead
+    /// or slow shard degrades the answer ([`QueryResult::shed_nodes`]);
+    /// only a dropped cluster errors.
+    ///
+    /// [`query_spec`]: Orchestrator::query_spec
     pub fn query(&self, q: &[f32]) -> Result<QueryResult, ClusterError> {
-        let (tx, rx) = channel();
-        self.root_tx
-            .send(RootRequest::Single(q.to_vec(), tx))
-            .map_err(|_| ClusterError::Shutdown)?;
-        rx.recv().map_err(|_| ClusterError::Shutdown)
+        self.query_spec(q, &QuerySpec::default())
+    }
+
+    /// Resolve one query at an explicit accuracy/latency operating point
+    /// (see [`QuerySpec`]). The default spec is bit-identical to
+    /// [`query`](Orchestrator::query); `probes`/`recall_hint` widen the
+    /// per-table bucket walk, `max_comparisons` caps candidate work
+    /// deterministically, `budget` + `policy` bound wall-clock latency.
+    pub fn query_spec(&self, q: &[f32], spec: &QuerySpec) -> Result<QueryResult, ClusterError> {
+        let mut results = self.query_batch_spec_flat(q.to_vec(), 1, spec)?;
+        Ok(results.pop().expect("batch of one reduces to one result"))
     }
 
     /// Resolve a block of queries in one admission: the whole block is
@@ -736,17 +938,58 @@ impl Orchestrator {
         }
         // Caller-formed bulk blocks are analytics by nature: no latency
         // budget, throughput-oriented.
-        self.query_batch_flat(flat, nq, Budget::none(), Class::Analytics)
+        self.query_batch_spec_flat(flat, nq, &QuerySpec::default().with_class(Class::Analytics))
     }
 
-    /// Flat-buffer variant of [`query_batch`]: the block is already
-    /// row-major `nq × dim` (the admission cutter's native shape),
-    /// `budget` carries the cut's remaining latency budget plus
-    /// enforcement policy to the nodes ([`Budget::none`] when there is no
-    /// deadline), and `class` the cut's scheduling class for node-side
-    /// overrun attribution.
+    /// THE batched serving core: resolve a flat row-major `nq × dim`
+    /// block at an explicit operating point. Every other query door
+    /// ([`query`], [`query_batch`], [`query_spec`], the admission
+    /// dispatcher and the HTTP edge) funnels into this method, so the
+    /// knob semantics are defined in exactly one place: [`QuerySpec`].
+    ///
+    /// Panics if the spec fails [`QuerySpec::validate`] (typed callers
+    /// own their specs; the HTTP edge pre-validates into a 400).
+    ///
+    /// [`query`]: Orchestrator::query
+    /// [`query_batch`]: Orchestrator::query_batch
+    /// [`query_spec`]: Orchestrator::query_spec
+    pub fn query_batch_spec_flat(
+        &self,
+        qs: Vec<f32>,
+        nq: usize,
+        spec: &QuerySpec,
+    ) -> Result<Vec<QueryResult>, ClusterError> {
+        if let Err(e) = spec.validate() {
+            panic!("invalid QuerySpec: {e}");
+        }
+        if nq == 0 {
+            return Ok(Vec::new());
+        }
+        assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
+        let (tx, rx) = channel();
+        self.root_tx
+            .send(RootRequest::Batch {
+                qs,
+                nq,
+                budget: spec.direct_budget(),
+                class: spec.class,
+                probe: spec.probe_spec(),
+                reply_to: tx,
+            })
+            .map_err(|_| ClusterError::Shutdown)?;
+        let mut results = rx.recv().map_err(|_| ClusterError::Shutdown)?;
+        if spec.k > 0 {
+            for r in &mut results {
+                r.neighbors.truncate(spec.k);
+            }
+        }
+        Ok(results)
+    }
+
+    /// Flat-buffer variant of [`query_batch`] with positional knobs.
     ///
     /// [`query_batch`]: Orchestrator::query_batch
+    #[deprecated(note = "use query_batch_spec_flat with a QuerySpec")]
     pub fn query_batch_flat(
         &self,
         qs: Vec<f32>,
@@ -760,7 +1003,14 @@ impl Orchestrator {
         assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
         let (tx, rx) = channel();
         self.root_tx
-            .send(RootRequest::Batch { qs, nq, budget, class, reply_to: tx })
+            .send(RootRequest::Batch {
+                qs,
+                nq,
+                budget,
+                class,
+                probe: ProbeSpec::BASELINE,
+                reply_to: tx,
+            })
             .map_err(|_| ClusterError::Shutdown)?;
         rx.recv().map_err(|_| ClusterError::Shutdown)
     }
@@ -877,23 +1127,36 @@ impl Orchestrator {
     /// budget.
     ///
     /// [`query`]: Orchestrator::query
+    #[deprecated(note = "use submit_spec with a QuerySpec")]
     pub fn submit(&self, q: &[f32], budget: Duration) -> Result<Ticket, AdmissionError> {
-        self.submit_class(q, budget, Class::Monitor)
+        self.submit_spec(q, &QuerySpec::default().with_budget(budget))
     }
 
     /// Admit one query into an explicit scheduling lane (see
     /// [`Class`]); same bit-identical-result contract as
-    /// [`submit`](Orchestrator::submit).
+    /// [`submit_spec`](Orchestrator::submit_spec).
+    #[deprecated(note = "use submit_spec with a QuerySpec")]
     pub fn submit_class(
         &self,
         q: &[f32],
         budget: Duration,
         class: Class,
     ) -> Result<Ticket, AdmissionError> {
+        self.submit_spec(q, &QuerySpec::default().with_budget(budget).with_class(class))
+    }
+
+    /// Admit one query at an explicit operating point ([`QuerySpec`]):
+    /// `class` picks the scheduling lane, `budget` the cut deadline
+    /// (`None` = ride fill/aged/drain cuts only), `policy` the node-side
+    /// enforcement (strictest rider governs a shared cut), and the probe
+    /// knobs travel with the cut to every node. The default spec with a
+    /// budget reproduces the old `submit` exactly. Requires
+    /// [`enable_admission`](Orchestrator::enable_admission).
+    pub fn submit_spec(&self, q: &[f32], spec: &QuerySpec) -> Result<Ticket, AdmissionError> {
         self.admission
             .as_ref()
-            .expect("call enable_admission before submit")
-            .submit_class(q, budget, class)
+            .expect("call enable_admission before submit_spec")
+            .submit_spec(q, spec)
     }
 
     /// The installed admission queue, if any (stats, `try_submit`).
@@ -953,9 +1216,8 @@ fn run_replica(
         let (seq, outcome) = match rj {
             ReplicaJob::Run { seq, job } => {
                 let out = match job {
-                    Job::Single { qid, q } => node.query(&q).map(|r| vec![(qid, r)]),
-                    Job::Batch { qid0, qs, nq, budget, class } => {
-                        node.query_batch_budget(qs, nq, budget, class).map(|rs| {
+                    Job::Batch { qid0, qs, nq, budget, class, probe } => {
+                        node.query_batch_spec(qs, nq, budget, class, probe).map(|rs| {
                             rs.into_iter()
                                 .enumerate()
                                 .map(|(i, r)| (qid0 + i as u64, r))
@@ -970,7 +1232,21 @@ fn run_replica(
                 (seq, ReplicaOutcome::Insert(node.insert_batch(&points, &labels)))
             }
             ReplicaJob::Heartbeat { seq } => (seq, ReplicaOutcome::Heartbeat(node.heartbeat())),
-            ReplicaJob::Reconnect { seq } => (seq, ReplicaOutcome::Reconnect(node.reconnect())),
+            ReplicaJob::Reconnect { seq, backlog } => {
+                // Re-dial, then replay the shard's acked inserts in their
+                // original order: the rebuilt live store assigns the same
+                // ids its peers did, so the replica rejoins bit-identical
+                // instead of serving an empty shard.
+                let out = node.reconnect().and_then(|()| {
+                    let mut replayed = 0u64;
+                    for (points, labels) in &backlog {
+                        node.insert_batch(points, labels)?;
+                        replayed += 1;
+                    }
+                    Ok(replayed)
+                });
+                (seq, ReplicaOutcome::Reconnect(out))
+            }
         };
         if reply_tx.send((idx, seq, outcome, t0.elapsed().as_secs_f64())).is_err() {
             break;
@@ -995,6 +1271,13 @@ struct ShardDispatcher {
     /// `Down` replicas' reconnect schedule: `(attempt, due_ns)`; the due
     /// time is `u64::MAX` while an attempt is in flight.
     reconnect: Vec<Option<(u32, u64)>>,
+    /// Every insert batch at least one replica acked, in arrival order —
+    /// the shard's recovery log. A reconnecting replica replays it after
+    /// re-dialing (its rebuilt store starts empty), so it rejoins with
+    /// the same points and ids as its peers. Entries are `Arc` pairs
+    /// shared with the original jobs; compaction (sealed-segment snapshot
+    /// shipping) is a roadmap item.
+    ingest_log: Vec<(Arc<Vec<f32>>, Arc<Vec<bool>>)>,
     runner_tx: Vec<Sender<ReplicaJob>>,
     reply_rx: Receiver<(usize, u64, ReplicaOutcome, f64)>,
     reduce_tx: Sender<(u64, usize, NodeReply, f64)>,
@@ -1008,9 +1291,8 @@ impl ShardDispatcher {
             self.drain_stale();
             self.fire_duties();
             match inbox.recv_timeout(self.idle_wait()) {
-                Ok(Job::Single { qid, q }) => self.resolve(qid, 1, Job::Single { qid, q }),
-                Ok(Job::Batch { qid0, qs, nq, budget, class }) => {
-                    self.resolve(qid0, nq, Job::Batch { qid0, qs, nq, budget, class })
+                Ok(Job::Batch { qid0, qs, nq, budget, class, probe }) => {
+                    self.resolve(qid0, nq, Job::Batch { qid0, qs, nq, budget, class, probe })
                 }
                 Ok(Job::Insert { points, labels, reply, .. }) => {
                     self.insert(points, labels, reply)
@@ -1211,6 +1493,12 @@ impl ShardDispatcher {
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        if first.is_some() {
+            // The batch is durable on this shard: log it so replicas
+            // that were down (and missed the fan-out) can replay it on
+            // reconnect.
+            self.ingest_log.push((points, labels));
+        }
         let _ = reply.send(match first {
             Some(r) => Ok(ShardInsert { reply: r, replicas_acked: acked }),
             None => Err(ClusterError::ShardUnavailable { shard: self.shard }),
@@ -1251,12 +1539,21 @@ impl ShardDispatcher {
                     self.ingest.record_seals(hb.sealed_now);
                 }
             }
-            ReplicaOutcome::Reconnect(Ok(())) => {
+            ReplicaOutcome::Reconnect(Ok(replayed)) => {
                 self.counters.record_reconnect();
-                self.reconnect[idx] = None;
-                if self.health[idx] == Health::Down {
-                    self.health[idx] = Health::Suspect;
-                    self.counters.record_down_recovered();
+                if replayed as usize == self.ingest_log.len() {
+                    self.reconnect[idx] = None;
+                    if self.health[idx] == Health::Down {
+                        self.health[idx] = Health::Suspect;
+                        self.counters.record_down_recovered();
+                    }
+                } else {
+                    // Batches landed while the replay was in flight: the
+                    // transport lives, but the replica is still behind
+                    // its peers. Re-dial immediately — the next attempt
+                    // replays the longer log from scratch.
+                    let attempt = self.reconnect[idx].map(|(a, _)| a).unwrap_or(0);
+                    self.reconnect[idx] = Some((attempt, self.clock.now_ns()));
                 }
             }
             ReplicaOutcome::Queries(Err(_))
@@ -1312,7 +1609,8 @@ impl ShardDispatcher {
             if let Some((attempt, due)) = self.reconnect[i] {
                 if self.health[i] == Health::Down && !self.busy[i] && now >= due {
                     let seq = self.take_seq();
-                    if self.runner_tx[i].send(ReplicaJob::Reconnect { seq }).is_ok() {
+                    let backlog = self.ingest_log.clone();
+                    if self.runner_tx[i].send(ReplicaJob::Reconnect { seq, backlog }).is_ok() {
                         self.busy[i] = true;
                         self.counters.record_reconnect_attempt();
                         // Park the schedule while the attempt is in

@@ -48,6 +48,21 @@ pub trait ComposedHash: Send + Sync {
             out.push(self.hash(x));
         }
     }
+
+    /// Per-bit flip margins for multi-probe ordering: `out[i]` is a
+    /// non-negative score of how far `x` sits from bit `i`'s decision
+    /// boundary (smaller = more likely a near neighbor lands across it).
+    /// `out` is cleared and filled with exactly [`bits`] entries. The
+    /// default knows nothing about the family's geometry and reports all
+    /// margins equal, which degrades probe ordering to bit-index order —
+    /// still deterministic, just uninformed.
+    ///
+    /// [`bits`]: ComposedHash::bits
+    fn margins(&self, x: &[f32], out: &mut Vec<f32>) {
+        let _ = x;
+        out.clear();
+        out.resize(self.bits(), 0.0);
+    }
 }
 
 /// Bit-sampling family instance for the l1 norm: `m` (coordinate,
@@ -107,6 +122,17 @@ impl ComposedHash for BitSamplingL1 {
                 out.push(kb.finish());
             }
             qi += tile;
+        }
+    }
+
+    /// Margin of bit `(c, t)` is the L1 distance to the threshold:
+    /// `|x[c] − t|`. A neighbor within `r` of `x` can only flip bits whose
+    /// threshold lies inside the radius, so small `|x[c] − t|` = likely
+    /// flip.
+    fn margins(&self, x: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        for (&c, &t) in self.coords.iter().zip(&self.thresholds) {
+            out.push((x[c as usize] - t).abs());
         }
     }
 }
@@ -177,6 +203,23 @@ impl ComposedHash for RandomProjection {
             qi += tile;
         }
     }
+
+    /// Margin of a sign bit is the unnormalized distance to the
+    /// hyperplane: `|w_i · x|`. Accumulation order matches [`hash`], so
+    /// `margins[i] == 0 ⇔` the hash put `x` exactly on the boundary.
+    ///
+    /// [`hash`]: ComposedHash::hash
+    fn margins(&self, x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), self.dim);
+        out.clear();
+        for row in self.dirs.chunks_exact(self.dim) {
+            let mut dot = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                dot += a * b;
+            }
+            out.push(dot.abs());
+        }
+    }
 }
 
 /// Which family a layer uses.
@@ -235,7 +278,9 @@ impl LayerSpec {
         assert!(t < self.l, "table index {t} out of range (l={})", self.l);
         let mut rng = Xoshiro256::seed_from_u64(self.seed).fork(t as u64);
         match self.metric {
-            Metric::L1 => Box::new(BitSamplingL1::sample(self.dim, self.m, self.lo, self.hi, &mut rng)),
+            Metric::L1 => {
+                Box::new(BitSamplingL1::sample(self.dim, self.m, self.lo, self.hi, &mut rng))
+            }
             Metric::Cosine => Box::new(RandomProjection::sample(self.dim, self.m, &mut rng)),
         }
     }
@@ -388,6 +433,48 @@ mod tests {
             })
             .count();
         assert!(diff > 40, "tables insufficiently independent: {diff}/50");
+    }
+
+    #[test]
+    fn margins_are_nonnegative_and_agree_with_flip_geometry() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let dim = 30;
+        let bs = BitSamplingL1::sample(dim, 64, 20.0, 180.0, &mut rng);
+        let rp = RandomProjection::sample(dim, 48, &mut rng);
+        let x = rand_point(&mut rng, dim, 20.0, 180.0);
+        let mut mg = Vec::new();
+        for hash in [&bs as &dyn ComposedHash, &rp as &dyn ComposedHash] {
+            hash.margins(&x, &mut mg);
+            assert_eq!(mg.len(), hash.bits());
+            assert!(mg.iter().all(|&z| z >= 0.0));
+        }
+        // Bit-sampling margin is exact: nudging the point by less than the
+        // margin on every coordinate cannot flip the bit.
+        bs.margins(&x, &mut mg);
+        let base = bs.hash(&x);
+        let eps = mg.iter().cloned().fold(f32::INFINITY, f32::min) * 0.5;
+        if eps.is_finite() && eps > 0.0 {
+            let nudged: Vec<f32> = x.iter().map(|v| v + eps.min(1e-3)).collect();
+            // Only bits whose margin is below the nudge may flip.
+            let after = bs.hash(&nudged);
+            for i in 0..bs.bits() {
+                if base.bit(i) != after.bit(i) {
+                    assert!(mg[i] <= eps.min(1e-3) + 1e-6, "bit {i} flipped past its margin");
+                }
+            }
+        }
+        // Default impl: uniform margins of the right arity.
+        struct Opaque;
+        impl ComposedHash for Opaque {
+            fn bits(&self) -> usize {
+                7
+            }
+            fn hash(&self, _x: &[f32]) -> PackedKey {
+                PackedKey::from_bits(std::iter::empty())
+            }
+        }
+        Opaque.margins(&x, &mut mg);
+        assert_eq!(mg, vec![0.0; 7]);
     }
 
     #[test]

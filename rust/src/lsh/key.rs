@@ -52,6 +52,18 @@ impl PackedKey {
             .map(|(a, b)| (a ^ b).count_ones())
             .sum()
     }
+
+    /// This key with bit `i` flipped — the multi-probe perturbation
+    /// primitive. The digest is recomputed, so the returned key is a
+    /// first-class bucket key (lookup-equal to hashing a point that
+    /// landed one threshold decision away).
+    #[inline]
+    pub fn toggled(&self, i: usize) -> PackedKey {
+        debug_assert!(i < MAX_BITS);
+        let mut words = self.words;
+        words[i / 64] ^= 1u64 << (i % 64);
+        PackedKey { words, digest: digest(&words) }
+    }
 }
 
 /// Incremental key builder used on the hashing hot path — avoids the

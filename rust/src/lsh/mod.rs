@@ -1,11 +1,30 @@
 //! Locality Sensitive Hashing substrate: hash families, packed keys,
-//! bucket tables, and multi-table layers (paper §2).
+//! bucket tables, multi-table layers (paper §2), and multi-probe
+//! perturbation sequences.
+//!
+//! # Probe-sequence math
+//!
+//! A composed hash `g = (h_1, …, h_m)` buckets a query `q` by `m`
+//! threshold decisions. Each bit `i` carries a *margin* `z_i ≥ 0` — how
+//! far `q` sits from that bit's decision boundary (`|q[c_i] − t_i|` for
+//! L1 bit sampling, `|w_i · q|` for signed random projections). A near
+//! neighbor `p` of `q` most plausibly lands in the bucket whose key
+//! differs from `g(q)` in the bits with the *smallest* margins, so the
+//! probe sequence enumerates perturbation sets `S ⊆ {1..m}`, `|S| ≤ 2`,
+//! by ascending total margin `Σ_{i∈S} z_i` (Lv et al.'s shift/expand
+//! heap, see [`probe`]). Probing the top `P` buckets per table recovers
+//! most of the recall of building extra tables at zero memory and zero
+//! network cost — the lever Bahmani et al. (arXiv:1210.7057) use for
+//! distributed LSH, and the knob this crate exposes per request via
+//! [`ProbeSpec`].
 
 pub mod family;
 pub mod key;
 pub mod layer;
+pub mod probe;
 pub mod table;
 
 pub use family::{BitSamplingL1, ComposedHash, LayerSpec, Metric, RandomProjection};
 pub use key::PackedKey;
 pub use layer::{LshLayer, Points, SliceView};
+pub use probe::{max_probe_universe, ProbeGen, ProbeSpec, MAX_PROBES};

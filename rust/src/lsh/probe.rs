@@ -1,0 +1,279 @@
+//! Multi-probe sequences over packed bucket keys.
+//!
+//! Multi-probe LSH (Lv et al.; Bahmani et al., arXiv:1210.7057) trades a
+//! little extra bucket traffic for a lot of recall: instead of adding
+//! hash tables, a query visits the buckets whose keys are *small
+//! perturbations* of its own key. A bit of a composed hash flips when the
+//! point crosses that bit's decision boundary, so the buckets most likely
+//! to hold near neighbors are the ones reached by flipping the bits with
+//! the smallest *margin* — the distance from the query to the boundary
+//! (see [`crate::lsh::family::ComposedHash::margins`]).
+//!
+//! The generator enumerates perturbation sets of size ≤ 2 (flip-1 and
+//! flip-2) in ascending total-margin order with a heap, exactly the
+//! shift/expand scheme of Lv et al.:
+//!
+//! * sort bit positions by margin ascending: `z[0] ≤ z[1] ≤ …`;
+//! * seed the heap with `{0}` (in sorted space);
+//! * popping `{a}` yields successors `{a+1}` (shift) and `{a, a+1}`
+//!   (expand); popping `{a, b}` yields `{a, b+1}` (shift).
+//!
+//! Every set of size ≤ 2 is generated exactly once, scores are
+//! non-decreasing (margins are non-negative, so `f32::to_bits` is a
+//! monotone order embedding), and ties break on sorted-space indices —
+//! the sequence is a pure function of `(margins, probes)`. Probe 0 is
+//! always the unperturbed base key, so `probes = 1` degenerates to the
+//! classic single-bucket lookup.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::key::PackedKey;
+
+/// Upper bound accepted for a per-table probe count. Far above any useful
+/// setting (the flip-≤2 universe for m ≤ 256 tops out at 32 897 probes);
+/// exists so wire/JSON validation can reject garbage.
+pub const MAX_PROBES: u32 = 1 << 16;
+
+/// Per-request accuracy/latency knobs that travel with a query all the
+/// way down to the per-table bucket walk.
+///
+/// * `probes` — buckets visited per outer table (flip-0/1/2
+///   perturbations, quality-ordered). `1` = today's single-bucket path.
+/// * `max_comparisons` — hard cap on candidates scanned per query
+///   (per core, per segment on the live path); `0` = unlimited. Enforced
+///   deterministically by truncating the candidate list, independent of
+///   any clock — unlike the wall-clock [`ScanCancel`] deadline, a capped
+///   answer is bit-reproducible.
+///
+/// [`ScanCancel`]: crate::engine::ScanCancel
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeSpec {
+    /// Buckets visited per outer table (≥ 1).
+    pub probes: u32,
+    /// Candidate-scan budget per query; 0 = unlimited.
+    pub max_comparisons: u64,
+}
+
+impl ProbeSpec {
+    /// The pre-multi-probe behavior: one bucket per table, no cap.
+    pub const BASELINE: ProbeSpec = ProbeSpec { probes: 1, max_comparisons: 0 };
+
+    pub fn new(probes: u32, max_comparisons: u64) -> ProbeSpec {
+        assert!(probes >= 1, "probes must be >= 1");
+        ProbeSpec { probes, max_comparisons }
+    }
+
+    /// True when this spec selects exactly the legacy query path.
+    #[inline]
+    pub fn is_baseline(&self) -> bool {
+        *self == Self::BASELINE
+    }
+}
+
+impl Default for ProbeSpec {
+    fn default() -> Self {
+        Self::BASELINE
+    }
+}
+
+/// Number of distinct probes available for an `m`-bit key under the
+/// flip-≤2 policy: the base bucket, `m` flip-1s and `m·(m−1)/2` flip-2s.
+pub fn max_probe_universe(m: usize) -> usize {
+    1 + m + m * (m - 1) / 2
+}
+
+/// Heap node: (score_bits, a, b) in *sorted-margin* index space with
+/// `b == u32::MAX` marking a singleton set. Lexicographic `Ord` gives the
+/// deterministic tie-break.
+type SetNode = (u32, u32, u32);
+
+const SINGLE: u32 = u32::MAX;
+
+/// Reusable probe-sequence generator. Holds the sort/heap scratch so the
+/// per-(query, table) call allocates nothing in steady state.
+#[derive(Debug, Default)]
+pub struct ProbeGen {
+    order: Vec<u32>,
+    heap: BinaryHeap<Reverse<SetNode>>,
+}
+
+impl ProbeGen {
+    pub fn new() -> ProbeGen {
+        ProbeGen { order: Vec::new(), heap: BinaryHeap::new() }
+    }
+
+    /// Write the first `probes` keys of the probe sequence for `base`
+    /// into `out` (cleared first). `margins[i]` is the non-negative
+    /// flip margin of bit `i`; `margins.len()` must equal the key's bit
+    /// count. `out[0]` is always `base` itself.
+    pub fn generate(
+        &mut self,
+        base: PackedKey,
+        margins: &[f32],
+        probes: u32,
+        out: &mut Vec<PackedKey>,
+    ) {
+        out.clear();
+        out.push(base);
+        if probes <= 1 || margins.is_empty() {
+            return;
+        }
+        let m = margins.len() as u32;
+        self.order.clear();
+        self.order.extend(0..m);
+        let score = |i: u32| margins[i as usize].to_bits();
+        self.order.sort_by_key(|&i| (score(i), i));
+        self.heap.clear();
+        self.heap.push(Reverse((score(self.order[0]), 0, SINGLE)));
+        while (out.len() as u32) < probes {
+            let Some(Reverse((s, a, b))) = self.heap.pop() else { break };
+            let bit_a = self.order[a as usize] as usize;
+            let key = if b == SINGLE {
+                base.toggled(bit_a)
+            } else {
+                base.toggled(bit_a).toggled(self.order[b as usize] as usize)
+            };
+            out.push(key);
+            if b == SINGLE {
+                if a + 1 < m {
+                    let next = score(self.order[(a + 1) as usize]);
+                    // Shift: {a} -> {a+1}.
+                    self.heap.push(Reverse((next, a + 1, SINGLE)));
+                    // Expand: {a} -> {a, a+1}. Margins are non-negative,
+                    // so the f32 sum never sorts below either term.
+                    let pair = f32::from_bits(s) + f32::from_bits(next);
+                    self.heap.push(Reverse((pair.to_bits(), a, a + 1)));
+                }
+            } else if b + 1 < m {
+                // Shift the max element: {a, b} -> {a, b+1}.
+                let base_a = score(self.order[a as usize]);
+                let next = score(self.order[(b + 1) as usize]);
+                let pair = f32::from_bits(base_a) + f32::from_bits(next);
+                self.heap.push(Reverse((pair.to_bits(), a, b + 1)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_key(m: usize) -> PackedKey {
+        PackedKey::from_bits((0..m).map(|i| i % 3 == 0))
+    }
+
+    fn flipped_bits(base: &PackedKey, key: &PackedKey, m: usize) -> Vec<usize> {
+        (0..m).filter(|&i| base.bit(i) != key.bit(i)).collect()
+    }
+
+    #[test]
+    fn probe_zero_is_base_and_probes_one_stops_there() {
+        let mut g = ProbeGen::new();
+        let base = base_key(16);
+        let mut out = Vec::new();
+        g.generate(base, &[0.5; 16], 1, &mut out);
+        assert_eq!(out, vec![base]);
+    }
+
+    #[test]
+    fn sequence_is_exact_for_known_margins() {
+        // margins: bit2=0.1 < bit0=0.2 < bit1=0.4 — the flip-≤2 order is
+        // fully determined: {2}, {0}, {2,0}, {1}, {2,1}, {0,1}.
+        let margins = [0.2f32, 0.4, 0.1];
+        let base = base_key(3);
+        let mut g = ProbeGen::new();
+        let mut out = Vec::new();
+        g.generate(base, &margins, 16, &mut out);
+        let sets: Vec<Vec<usize>> =
+            out.iter().map(|k| flipped_bits(&base, k, 3)).collect();
+        assert_eq!(
+            sets,
+            vec![
+                vec![],
+                vec![2],
+                vec![0],
+                vec![0, 2],
+                vec![1],
+                vec![1, 2],
+                vec![0, 1],
+            ]
+        );
+        // Universe exhausted exactly.
+        assert_eq!(out.len(), max_probe_universe(3));
+    }
+
+    #[test]
+    fn scores_are_nondecreasing_and_sets_unique() {
+        let m = 24;
+        let margins: Vec<f32> =
+            (0..m).map(|i| ((i * 37) % 17) as f32 * 0.03 + 0.01).collect();
+        let base = base_key(m);
+        let mut g = ProbeGen::new();
+        let mut out = Vec::new();
+        g.generate(base, &margins, u32::MAX.min(4096), &mut out);
+        assert_eq!(out.len(), max_probe_universe(m));
+        let mut seen = std::collections::HashSet::new();
+        let mut last = -1.0f32;
+        for key in &out {
+            let bits = flipped_bits(&base, key, m);
+            assert!(bits.len() <= 2);
+            assert!(seen.insert(bits.clone()), "duplicate probe set {bits:?}");
+            let score: f32 = bits.iter().map(|&i| margins[i]).sum();
+            assert!(score >= last - 1e-6, "score regressed: {score} < {last}");
+            last = score;
+        }
+    }
+
+    #[test]
+    fn prefix_property_holds() {
+        // The P-probe sequence is a strict prefix of the (P+1)-probe one.
+        let m = 12;
+        let margins: Vec<f32> = (0..m).map(|i| (i as f32 * 0.7).sin().abs()).collect();
+        let base = base_key(m);
+        let mut g = ProbeGen::new();
+        let mut full = Vec::new();
+        g.generate(base, &margins, 64, &mut full);
+        for p in 1..=16u32 {
+            let mut out = Vec::new();
+            g.generate(base, &margins, p, &mut out);
+            assert_eq!(out[..], full[..out.len()]);
+            assert_eq!(out.len(), (p as usize).min(full.len()));
+        }
+    }
+
+    #[test]
+    fn tie_margins_break_on_bit_index() {
+        // All-equal margins: order must fall back to bit index, giving
+        // {0}, {1}, {0,1}, {2}, {1,2}?... — exact order pinned below.
+        let margins = [0.25f32; 4];
+        let base = base_key(4);
+        let mut g = ProbeGen::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        g.generate(base, &margins, 32, &mut a);
+        g.generate(base, &margins, 32, &mut b);
+        assert_eq!(a, b, "generation must be deterministic");
+        assert_eq!(flipped_bits(&base, &a[1], 4), vec![0]);
+        assert_eq!(flipped_bits(&base, &a[2], 4), vec![1]);
+    }
+
+    #[test]
+    fn probes_beyond_universe_saturate() {
+        let margins = [0.1f32, 0.2];
+        let base = base_key(2);
+        let mut g = ProbeGen::new();
+        let mut out = Vec::new();
+        g.generate(base, &margins, 1000, &mut out);
+        assert_eq!(out.len(), max_probe_universe(2)); // 1 + 2 + 1
+    }
+
+    #[test]
+    fn spec_baseline_matches_default() {
+        assert_eq!(ProbeSpec::default(), ProbeSpec::BASELINE);
+        assert!(ProbeSpec::BASELINE.is_baseline());
+        assert!(!ProbeSpec::new(2, 0).is_baseline());
+        assert!(!ProbeSpec::new(1, 100).is_baseline());
+    }
+}

@@ -7,22 +7,32 @@
 //!
 //! * `POST /v1/query` — `{"point": [f32; dim], "class"?: "monitor" |
 //!   "analytics", "budget_us"?: u64, "policy"?: "log_only" | "partial" |
-//!   "shed"}`. With the admission layer installed the edge calls
-//!   `try_submit_class`, so a full queue is a `429` with `Retry-After`
-//!   (backpressure is part of the API contract) — and `"policy"` is
-//!   advisory there, because enforcement policy is a property of the
-//!   installed [`AdmissionConfig`], not of one request. Without
-//!   admission, the edge drives `query_batch_flat` directly and
-//!   `"budget_us"`/`"policy"` form the [`Budget`] verbatim. A
-//!   budget-blown answer (`QueryResult::partial`) comes back as `206`
-//!   with `"partial":true` and `"shed_nodes"` — degraded, flagged, never
-//!   silent.
+//!   "shed", "probes"?: u32, "recall_hint"?: f32 in (0,1],
+//!   "max_comparisons"?: u64, "k"?: usize}`. The body is one
+//!   [`QuerySpec`] in JSON clothing: every knob the typed API accepts
+//!   rides the wire, and the edge pre-validates the combination
+//!   ([`QuerySpec::validate`]) so a contradictory spec (`probes` +
+//!   `recall_hint` together, out-of-range hint) is a typed `400` at the
+//!   boundary, never a panic in the cluster. With the admission layer
+//!   installed the edge calls `try_submit_spec`, so a full queue is a
+//!   `429` with `Retry-After` (backpressure is part of the API
+//!   contract); a request-level `"policy"` can tighten — never loosen —
+//!   the cut policy fixed by the installed [`AdmissionConfig`]. Without
+//!   admission, the edge drives `query_spec` directly; for backward
+//!   compatibility a `"budget_us"` without `"policy"` enforces
+//!   `log_only`, exactly as the pre-spec edge did. A budget-blown answer
+//!   (`QueryResult::partial`) comes back as `206` with `"partial":true`
+//!   and `"shed_nodes"` — degraded, flagged, never silent.
 //! * `POST /v1/insert` — `{"points": [[f32; dim]..], "labels": [bool..],
 //!   "class"?}` → [`Orchestrator::insert_batch_class`]; a zero-ack insert
 //!   (`ClusterError::ShardUnavailable`) is `503`, and the response body
 //!   reports `replicas_acked` so under-replicated writes are visible.
 //! * `GET /v1/stats` — edge / admission / ingest / failover counters in
-//!   one JSON document.
+//!   one JSON document, including the accuracy/latency tradeoff
+//!   telemetry: per-lane effective probe counts, the EWMA of comparisons
+//!   per query, and whether the feedback controller
+//!   ([`AutoProbes`](crate::coordinator::admission::AutoProbes)) is
+//!   driving them.
 //! * `GET /healthz` — process liveness (always `200` while serving).
 //! * `GET /readyz` — cluster readiness: `200` only while the PR 6
 //!   failure detector reports every replica reachable
@@ -43,8 +53,8 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::{
-    AdmissionError, AdmissionStats, Budget, BudgetPolicy, Class, ClusterError, LaneStats,
-    Orchestrator, QueryResult,
+    AdmissionError, AdmissionStats, BudgetPolicy, Class, ClusterError, LaneStats, Orchestrator,
+    QueryResult, QuerySpec,
 };
 use crate::net::http::{parse_request, HttpError, Limits, Request, Response};
 use crate::runtime::service::{
@@ -263,41 +273,51 @@ fn method_not_allowed(allow: &str) -> Response {
 // POST /v1/query
 // ---------------------------------------------------------------------------
 
-struct QuerySpec {
+/// The decoded `POST /v1/query` body: the point plus a [`QuerySpec`]'s
+/// worth of knobs, kept apart so the edge can apply its own defaulting
+/// (`default_budget` on the admission path, `log_only` on the direct
+/// path) before the spec crosses into the cluster.
+struct QueryBody {
     point: Vec<f32>,
-    class: Class,
-    budget_us: Option<u64>,
-    policy: Option<BudgetPolicy>,
+    spec: QuerySpec,
+    has_budget: bool,
+    has_policy: bool,
 }
 
 fn handle_query(sh: &Shared, req: &Request) -> Response {
-    let spec = match parse_body(req).and_then(|b| parse_query_spec(&b, sh.cfg.dim)) {
+    let body = match parse_body(req).and_then(|b| parse_query_body(&b, sh.cfg.dim)) {
         Ok(s) => s,
         Err(e) => return Response::from_err(&e),
     };
+    // Pre-validate: the typed entry points treat an invalid spec as a
+    // caller bug (they panic); the HTTP boundary turns it into a 400.
+    if let Err(msg) = body.spec.validate() {
+        return Response::error(400, "bad-spec", &msg);
+    }
     if let Some(queue) = sh.orch.admission() {
         // Admission lane path: backpressure (429) and queue-side budget
-        // enforcement; `policy` is fixed by the installed AdmissionConfig.
-        let budget = spec
-            .budget_us
-            .map(Duration::from_micros)
-            .unwrap_or(sh.cfg.default_budget);
-        match queue
-            .try_submit_class(&spec.point, budget, spec.class)
-            .and_then(|ticket| ticket.wait())
-        {
+        // enforcement. The queue schedules by deadline, so a budgetless
+        // request is given the configured default budget — same contract
+        // as the pre-spec edge.
+        let mut spec = body.spec;
+        if !body.has_budget {
+            spec = spec.with_budget(sh.cfg.default_budget);
+        }
+        match queue.try_submit_spec(&body.point, &spec).and_then(|ticket| ticket.wait()) {
             Ok(r) => query_result_response(&r),
             Err(e) => admission_error_response(&e, sh.cfg.retry_after_s),
         }
     } else {
-        // Direct path (admission disabled): the request's budget/policy
-        // form the node-side Budget verbatim.
-        let budget = match spec.budget_us {
-            Some(us) => Budget::enforced(us, spec.policy.unwrap_or(BudgetPolicy::LogOnly)),
-            None => Budget::none(),
-        };
-        match sh.orch.query_batch_flat(spec.point, 1, budget, spec.class) {
-            Ok(mut rs) => query_result_response(&rs.remove(0)),
+        // Direct path (admission disabled): the request's knobs form the
+        // node-side Budget/ProbeSpec verbatim. A budget without an
+        // explicit policy enforces log_only (observe, don't cut) — the
+        // pre-spec edge default.
+        let mut spec = body.spec;
+        if body.has_budget && !body.has_policy {
+            spec = spec.with_policy(BudgetPolicy::LogOnly);
+        }
+        match sh.orch.query_spec(&body.point, &spec) {
+            Ok(r) => query_result_response(&r),
             Err(e) => cluster_error_response(&e),
         }
     }
@@ -332,29 +352,63 @@ fn cluster_error_response(e: &ClusterError) -> Response {
     }
 }
 
-fn parse_query_spec(body: &Json, dim: usize) -> Result<QuerySpec, HttpError> {
+fn parse_query_body(body: &Json, dim: usize) -> Result<QueryBody, HttpError> {
     let obj = top_object(body)?;
-    reject_unknown_fields(obj, &["point", "class", "budget_us", "policy"])?;
+    reject_unknown_fields(
+        obj,
+        &["point", "class", "budget_us", "policy", "probes", "recall_hint", "max_comparisons", "k"],
+    )?;
     let point = parse_point(
         obj.get("point")
             .ok_or_else(|| HttpError::new(400, "missing-field", "\"point\" is required"))?,
         dim,
     )?;
-    let class = match obj.get("class") {
-        Some(v) => parse_class(v)?,
-        None => Class::Monitor,
-    };
-    let budget_us = match obj.get("budget_us") {
-        Some(v) => Some(v.as_u64().ok_or_else(|| {
+    let mut spec = QuerySpec::new();
+    if let Some(v) = obj.get("class") {
+        spec = spec.with_class(parse_class(v)?);
+    }
+    let mut has_budget = false;
+    if let Some(v) = obj.get("budget_us") {
+        let us = v.as_u64().ok_or_else(|| {
             HttpError::new(400, "bad-budget", "\"budget_us\" must be a non-negative integer")
-        })?),
-        None => None,
-    };
-    let policy = match obj.get("policy") {
-        Some(v) => Some(parse_policy(v)?),
-        None => None,
-    };
-    Ok(QuerySpec { point, class, budget_us, policy })
+        })?;
+        spec = spec.with_budget(Duration::from_micros(us));
+        has_budget = true;
+    }
+    let mut has_policy = false;
+    if let Some(v) = obj.get("policy") {
+        spec = spec.with_policy(parse_policy(v)?);
+        has_policy = true;
+    }
+    if let Some(v) = obj.get("probes") {
+        let p = v.as_u64().filter(|&p| p <= u64::from(u32::MAX)).ok_or_else(|| {
+            HttpError::new(400, "bad-probes", "\"probes\" must be an unsigned 32-bit integer")
+        })?;
+        spec = spec.with_probes(p as u32);
+    }
+    if let Some(v) = obj.get("recall_hint") {
+        let h = v.as_f64().ok_or_else(|| {
+            HttpError::new(400, "bad-recall-hint", "\"recall_hint\" must be a number in (0, 1]")
+        })?;
+        spec = spec.with_recall_hint(h as f32);
+    }
+    if let Some(v) = obj.get("max_comparisons") {
+        let c = v.as_u64().ok_or_else(|| {
+            HttpError::new(
+                400,
+                "bad-max-comparisons",
+                "\"max_comparisons\" must be a non-negative integer",
+            )
+        })?;
+        spec = spec.with_max_comparisons(c);
+    }
+    if let Some(v) = obj.get("k") {
+        let k = v.as_u64().ok_or_else(|| {
+            HttpError::new(400, "bad-k", "\"k\" must be a non-negative integer")
+        })?;
+        spec = spec.with_k(k as usize);
+    }
+    Ok(QueryBody { point, spec, has_budget, has_policy })
 }
 
 // ---------------------------------------------------------------------------
@@ -615,6 +669,8 @@ fn lane_json(l: &LaneStats) -> Json {
     o.insert("sheds", num(l.sheds));
     o.insert("inserted", num(l.inserted));
     o.insert("rejected_full", num(l.rejected_full));
+    o.insert("probes", num(u64::from(l.probes)));
+    o.insert("ewma_comparisons", num(l.ewma_comparisons));
     Json::Obj(o)
 }
 
@@ -629,6 +685,7 @@ fn admission_json(s: &AdmissionStats) -> Json {
     o.insert("cuts_deadline", num(s.cuts_deadline));
     o.insert("cuts_aged", num(s.cuts_aged));
     o.insert("cuts_drain", num(s.cuts_drain));
+    o.insert("auto_probes", Json::Bool(s.auto_probes));
     o.insert("monitor", lane_json(&s.monitor));
     o.insert("analytics", lane_json(&s.analytics));
     Json::Obj(o)

@@ -34,6 +34,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::admission::{Budget, Class};
 use crate::coordinator::orchestrator::{NodeError, NodeHandle};
+use crate::lsh::probe::ProbeSpec;
 use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
 use crate::node::node::{HeartbeatReply, InsertReply, LocalNode, NodeInfo, NodeReply};
@@ -184,17 +185,30 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
-            Some(Message::QueryBatchBudget { qid0, nq, budget_us, class, policy, qs }) => {
+            Some(Message::QueryBatchBudget {
+                qid0,
+                nq,
+                budget_us,
+                class,
+                policy,
+                probes,
+                max_comparisons,
+                qs,
+            }) => {
                 let nq = validate_batch_geometry(nq, qs.len(), dim)
                     .map_err(|e| anyhow!("{e}"))?;
                 // Budget enforcement (overrun accounting, early-exit
-                // partial scans, shedding) lives inside
-                // `LocalNode::query_batch_budget`, shared with the
+                // partial scans, shedding) and the probe knobs live
+                // inside `LocalNode::query_batch_spec`, shared with the
                 // in-process path — so local and remote nodes enforce the
                 // shipped remaining budget identically, anchored at
-                // their own batch arrival.
+                // their own batch arrival. `probes` was validated into
+                // `1..=MAX_PROBES` at decode, so the spec constructor
+                // cannot panic on peer input; `budget_us = u64::MAX` is
+                // the no-deadline sentinel (budgetless spec riders).
                 let budget = Budget::enforced(budget_us, policy);
-                let replies = node.query_batch_budget(Arc::new(qs), nq, budget, class);
+                let spec = ProbeSpec::new(probes, max_comparisons);
+                let replies = node.query_batch_spec(Arc::new(qs), nq, budget, class, spec);
                 reply_batch(&mut writer, qid0, replies)?;
                 served += nq as u64;
             }
@@ -405,6 +419,7 @@ impl RemoteNode {
         nq: usize,
         budget: Budget,
         class: Class,
+        probe: ProbeSpec,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
         if nq == 0 {
             return Ok(Vec::new());
@@ -412,7 +427,12 @@ impl RemoteNode {
         debug_assert_eq!(qs.len() % nq, 0);
         let qid0 = self.next_qid;
         self.next_qid += nq as u64;
-        let frame = if budget.is_none() {
+        // Baseline-knob budgetless batches stay on the plain `QueryBatch`
+        // frame — byte-identical wire traffic to a pre-spec client.
+        // Anything carrying a knob (a budget, extra probes, or a cap)
+        // rides `QueryBatchBudget`, with `u64::MAX` as the no-deadline
+        // budget when only probe knobs are set.
+        let frame = if budget.is_none() && probe.is_baseline() {
             Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
         } else {
             Message::QueryBatchBudget {
@@ -421,6 +441,8 @@ impl RemoteNode {
                 budget_us: budget.remaining_us,
                 class,
                 policy: budget.policy,
+                probes: probe.probes,
+                max_comparisons: probe.max_comparisons,
                 qs: qs.as_ref().clone(),
             }
         };
@@ -479,7 +501,7 @@ impl NodeHandle for RemoteNode {
         qs: Arc<Vec<f32>>,
         nq: usize,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
-        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics)
+        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics, ProbeSpec::BASELINE)
     }
 
     /// Admission cuts ship their remaining budget, enforcement policy and
@@ -495,7 +517,22 @@ impl NodeHandle for RemoteNode {
         budget: Budget,
         class: Class,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
-        self.batch_roundtrip(qs, nq, budget, class)
+        self.batch_roundtrip(qs, nq, budget, class, ProbeSpec::BASELINE)
+    }
+
+    /// The spec-carrying batch path: probe knobs travel in the
+    /// `QueryBatchBudget` frame (with the `u64::MAX` no-deadline sentinel
+    /// when the request is budgetless) so the far node runs the same
+    /// multi-probe, candidate-capped scan an in-process node would.
+    fn query_batch_spec(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        probe: ProbeSpec,
+    ) -> std::result::Result<Vec<NodeReply>, NodeError> {
+        self.batch_roundtrip(qs, nq, budget, class, probe)
     }
 
     /// One `InsertBatch` frame per append; the remote live node appends

@@ -11,6 +11,7 @@ use std::io::{Read, Write};
 use crate::coordinator::admission::{BudgetPolicy, Class};
 use crate::data::Dataset;
 use crate::knn::heap::Neighbor;
+use crate::lsh::probe::MAX_PROBES;
 use crate::slsh::SlshParams;
 use crate::util::bytes::{self, CodecError};
 use crate::util::json::Json;
@@ -48,13 +49,21 @@ pub enum Message {
     /// enforce the same cut the orchestrator-side cutter made: per-class
     /// overrun accounting under `LogOnly`, early-exit partial scans under
     /// `PartialResults`, and reject-before-scan under `Shed` when the
-    /// budget is already spent on arrival.
+    /// budget is already spent on arrival. The frame also carries the
+    /// cut's probe knobs: `probes` buckets visited per outer table
+    /// (validated into `1..=MAX_PROBES` at decode — a zero or oversized
+    /// count is a hostile/corrupt peer) and the per-query candidate cap
+    /// `max_comparisons` (0 = unlimited). `budget_us = u64::MAX` keeps
+    /// meaning "no deadline", so a spec-carrying request without a budget
+    /// still rides this frame with its probe knobs intact.
     QueryBatchBudget {
         qid0: u64,
         nq: u64,
         budget_us: u64,
         class: Class,
         policy: BudgetPolicy,
+        probes: u32,
+        max_comparisons: u64,
         qs: Vec<f32>,
     },
     /// Node → root: per-query answers for one batch, in qid order.
@@ -221,13 +230,24 @@ impl Message {
                 bytes::write_u64(&mut out, *nq).unwrap();
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
-            Message::QueryBatchBudget { qid0, nq, budget_us, class, policy, qs } => {
+            Message::QueryBatchBudget {
+                qid0,
+                nq,
+                budget_us,
+                class,
+                policy,
+                probes,
+                max_comparisons,
+                qs,
+            } => {
                 bytes::write_u8(&mut out, TAG_QUERY_BATCH_BUDGET).unwrap();
                 bytes::write_u64(&mut out, *qid0).unwrap();
                 bytes::write_u64(&mut out, *nq).unwrap();
                 bytes::write_u64(&mut out, *budget_us).unwrap();
                 bytes::write_u8(&mut out, class.as_u8()).unwrap();
                 bytes::write_u8(&mut out, policy.as_u8()).unwrap();
+                bytes::write_u32(&mut out, *probes).unwrap();
+                bytes::write_u64(&mut out, *max_comparisons).unwrap();
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
             Message::ReplyBatch { qid0, replies } => {
@@ -339,8 +359,25 @@ impl Message {
                 let policy_b = bytes::read_u8(&mut r)?;
                 let policy = BudgetPolicy::from_u8(policy_b)
                     .ok_or(CodecError::BadTag(policy_b as u32, "BudgetPolicy"))?;
+                // Peer-controlled probe count: zero (no scan at all) and
+                // counts past the enumeration cap are both hostile or
+                // corrupt, never a real request.
+                let probes = bytes::read_u32(&mut r)?;
+                if probes == 0 || probes > MAX_PROBES {
+                    return Err(CodecError::BadTag(probes, "Probes"));
+                }
+                let max_comparisons = bytes::read_u64(&mut r)?;
                 let qs = bytes::read_f32_vec(&mut r)?;
-                Ok(Message::QueryBatchBudget { qid0, nq, budget_us, class, policy, qs })
+                Ok(Message::QueryBatchBudget {
+                    qid0,
+                    nq,
+                    budget_us,
+                    class,
+                    policy,
+                    probes,
+                    max_comparisons,
+                    qs,
+                })
             }
             TAG_REPLY_BATCH => {
                 let qid0 = bytes::read_u64(&mut r)?;
@@ -528,30 +565,42 @@ mod tests {
     /// roundtrip and truncation property tests sweep.
     fn budget_frame_corpus() -> Vec<Message> {
         let mut frames = Vec::new();
-        // Geometry sweep × class × policy for the budget frame.
-        for (nq, dim) in [(1u64, 1usize), (2, 3), (4, 7), (3, 30)] {
+        // Geometry sweep × class × policy × probe knobs for the budget
+        // frame (probe pairs sweep baseline, multi-probe, capped, and
+        // the extreme legal corners).
+        let probe_knobs =
+            [(1u32, 0u64), (2, 0), (8, 512), (1, 1), (MAX_PROBES, u64::MAX)];
+        for (i, (nq, dim)) in [(1u64, 1usize), (2, 3), (4, 7), (3, 30)].into_iter().enumerate() {
             for class in [Class::Monitor, Class::Analytics] {
-                for policy in
+                for (j, policy) in
                     [BudgetPolicy::LogOnly, BudgetPolicy::PartialResults, BudgetPolicy::Shed]
+                        .into_iter()
+                        .enumerate()
                 {
+                    let (probes, max_comparisons) = probe_knobs[(i + j) % probe_knobs.len()];
                     frames.push(Message::QueryBatchBudget {
                         qid0: 77,
                         nq,
                         budget_us: 1500,
                         class,
                         policy,
+                        probes,
+                        max_comparisons,
                         qs: (0..nq as usize * dim).map(|i| i as f32 * 0.5).collect(),
                     });
                 }
             }
         }
-        // The no-budget sentinel used by caller-formed blocks.
+        // The no-budget sentinel used by caller-formed blocks — and by
+        // budgetless specs that still carry probe knobs.
         frames.push(Message::QueryBatchBudget {
             qid0: 0,
             nq: 1,
             budget_us: u64::MAX,
             class: Class::Analytics,
             policy: BudgetPolicy::LogOnly,
+            probes: 4,
+            max_comparisons: 2048,
             qs: vec![9.0, 8.0, 7.0],
         });
         // Reply batches across every coherent flag state, empty and
@@ -733,6 +782,8 @@ mod tests {
             budget_us: 100,
             class: Class::Monitor,
             policy: BudgetPolicy::LogOnly,
+            probes: 1,
+            max_comparisons: 0,
             qs: vec![1.0, 2.0],
         };
         let mut payload = m.encode();
@@ -758,6 +809,8 @@ mod tests {
             budget_us: 100,
             class: Class::Monitor,
             policy: BudgetPolicy::Shed,
+            probes: 1,
+            max_comparisons: 0,
             qs: vec![1.0, 2.0],
         };
         let mut payload = m.encode();
@@ -777,6 +830,41 @@ mod tests {
             assert_eq!(BudgetPolicy::from_u8(policy.as_u8()), Some(policy));
         }
         assert_eq!(BudgetPolicy::from_u8(3), None);
+    }
+
+    #[test]
+    fn bad_probes_field_is_rejected() {
+        let m = Message::QueryBatchBudget {
+            qid0: 1,
+            nq: 1,
+            budget_us: 100,
+            class: Class::Monitor,
+            policy: BudgetPolicy::PartialResults,
+            probes: 3,
+            max_comparisons: 64,
+            qs: vec![1.0, 2.0],
+        };
+        let mut payload = m.encode();
+        // Payload layout: tag(1) + qid0(8) + nq(8) + budget_us(8) +
+        // class(1) + policy(1) + probes(4) + max_comparisons(8) + floats
+        // — the probes u32 sits at bytes 27..31.
+        assert_eq!(u32::from_le_bytes(payload[27..31].try_into().unwrap()), 3);
+        for hostile in [0u32, MAX_PROBES + 1, u32::MAX] {
+            payload[27..31].copy_from_slice(&hostile.to_le_bytes());
+            let got = Message::decode(&payload);
+            assert!(
+                matches!(got, Err(CodecError::BadTag(b, "Probes")) if b == hostile),
+                "probes field {hostile} must be rejected"
+            );
+        }
+        // The full legal range survives the codec.
+        for probes in [1u32, 2, MAX_PROBES] {
+            payload[27..31].copy_from_slice(&probes.to_le_bytes());
+            match Message::decode(&payload).unwrap() {
+                Message::QueryBatchBudget { probes: got, .. } => assert_eq!(got, probes),
+                other => panic!("wrong message: {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::coordinator::admission::{note_batch_overrun, Budget, BudgetPolicy, Cl
 use crate::data::Dataset;
 use crate::engine::DistanceEngine;
 use crate::knn::heap::{Neighbor, TopK};
+use crate::lsh::probe::ProbeSpec;
 use crate::node::worker::{owned_tables, run_worker, WorkerMsg, WorkerReplyMsg, WorkerSpec};
 use crate::slsh::{LiveStore, SealPolicy, SlshParams};
 use crate::util::clock::{Clock, SystemClock};
@@ -388,6 +389,20 @@ impl LocalNode {
     ///
     /// [`query`]: LocalNode::query
     pub fn query_batch(&mut self, qs: Arc<Vec<f32>>, nq: usize) -> Vec<NodeReply> {
+        self.query_batch_plain(qs, nq, ProbeSpec::BASELINE)
+    }
+
+    /// Unbudgeted broadcast body shared by [`query_batch`] (baseline
+    /// knobs) and [`query_batch_spec`] (per-request knobs).
+    ///
+    /// [`query_batch`]: LocalNode::query_batch
+    /// [`query_batch_spec`]: LocalNode::query_batch_spec
+    fn query_batch_plain(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        probe: ProbeSpec,
+    ) -> Vec<NodeReply> {
         if nq == 0 {
             return Vec::new();
         }
@@ -395,7 +410,7 @@ impl LocalNode {
         let qid0 = self.next_qid;
         self.next_qid += nq as u64;
         for tx in &self.worker_tx {
-            tx.send(WorkerMsg::QueryBatch { qid0, qs: Arc::clone(&qs), nq })
+            tx.send(WorkerMsg::QueryBatch { qid0, qs: Arc::clone(&qs), nq, spec: probe })
                 .expect("worker channel closed");
         }
         self.gather_batch(qid0, nq)
@@ -474,13 +489,33 @@ impl LocalNode {
         budget: Budget,
         class: Class,
     ) -> Vec<NodeReply> {
+        self.query_batch_spec(qs, nq, budget, class, ProbeSpec::BASELINE)
+    }
+
+    /// The node-side serving core: [`query_batch_budget`] with the
+    /// request's probe knobs threaded through to every worker. A baseline
+    /// spec (`probes == 1`, no comparison cap) takes the exact legacy
+    /// paths, so default-knob requests are bit-identical to the pre-spec
+    /// API; wider specs ride the same enforcement contract with each
+    /// worker visiting `probes` buckets per owned table and truncating
+    /// its candidate walk at `max_comparisons`.
+    ///
+    /// [`query_batch_budget`]: LocalNode::query_batch_budget
+    pub fn query_batch_spec(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        probe: ProbeSpec,
+    ) -> Vec<NodeReply> {
         if budget.is_none() {
-            return self.query_batch(qs, nq);
+            return self.query_batch_plain(qs, nq, probe);
         }
         match budget.policy {
             BudgetPolicy::LogOnly => {
                 let t0 = std::time::Instant::now();
-                let replies = self.query_batch(qs, nq);
+                let replies = self.query_batch_plain(qs, nq, probe);
                 note_batch_overrun(self.node_id, class, budget.remaining_us, t0.elapsed(), nq);
                 replies
             }
@@ -525,6 +560,7 @@ impl LocalNode {
                         qs: Arc::clone(&qs),
                         nq,
                         deadline_ns,
+                        spec: probe,
                     })
                     .expect("worker channel closed");
                 }

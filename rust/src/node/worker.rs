@@ -32,6 +32,7 @@ use std::sync::Arc;
 use crate::data::Dataset;
 use crate::engine::{DistanceEngine, ScanCancel};
 use crate::knn::heap::Neighbor;
+use crate::lsh::probe::ProbeSpec;
 use crate::slsh::{
     BatchOutput, LiveIndex, LiveScratch, LiveStore, QueryScratch, QueryStats, SlshIndex,
     SlshParams,
@@ -43,12 +44,20 @@ pub enum WorkerMsg {
     /// Resolve a query; reply through the node's gather channel.
     Query { qid: u64, q: Arc<Vec<f32>> },
     /// Resolve a block of queries (`qs` row-major `nq × dim`, query `i`
-    /// has id `qid0 + i`).
-    QueryBatch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize },
+    /// has id `qid0 + i`) under the request's probe/budget knobs
+    /// (`ProbeSpec::BASELINE` = the legacy path, bit-identical).
+    QueryBatch { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, spec: ProbeSpec },
     /// Resolve a block under budget enforcement: stop scanning when the
     /// worker's clock reaches `deadline_ns` and report partial results
-    /// (see [`SlshIndex::query_batch_cancel`]).
-    QueryBatchBudget { qid0: u64, qs: Arc<Vec<f32>>, nq: usize, deadline_ns: u64 },
+    /// (see [`SlshIndex::query_batch_cancel`]), with the probe knobs
+    /// applied the same way as [`WorkerMsg::QueryBatch`].
+    QueryBatchBudget {
+        qid0: u64,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        deadline_ns: u64,
+        spec: ProbeSpec,
+    },
     /// Live nodes only: catch this core's tables up with the node store
     /// (hash newly appended points, seal closed extents) and ack with
     /// sequence number `seq`.
@@ -119,35 +128,27 @@ impl WorkerIndex {
         engine: &dyn DistanceEngine,
         qs: &[f32],
         id_base: u64,
+        spec: ProbeSpec,
         out: &mut BatchOutput,
         cancel: Option<&ScanCancel>,
     ) {
+        // Both spec entry points dispatch the baseline spec to the exact
+        // legacy bodies, so the default-knob path is unchanged code.
         match self {
-            WorkerIndex::Static { index, shard, scratch } => match cancel {
-                None => index.query_batch(
-                    engine,
-                    qs,
-                    &shard.points,
-                    &shard.labels,
-                    id_base,
-                    scratch,
-                    out,
-                ),
-                Some(c) => index.query_batch_cancel(
-                    engine,
-                    qs,
-                    &shard.points,
-                    &shard.labels,
-                    id_base,
-                    scratch,
-                    out,
-                    c,
-                ),
-            },
-            WorkerIndex::Live { live, scratch } => match cancel {
-                None => live.query_batch(engine, qs, scratch, out),
-                Some(c) => live.query_batch_cancel(engine, qs, scratch, out, c),
-            },
+            WorkerIndex::Static { index, shard, scratch } => index.query_batch_spec(
+                engine,
+                qs,
+                &shard.points,
+                &shard.labels,
+                id_base,
+                spec,
+                scratch,
+                out,
+                cancel,
+            ),
+            WorkerIndex::Live { live, scratch } => {
+                live.query_batch_spec(engine, qs, scratch, out, spec, cancel)
+            }
         }
     }
 }
@@ -187,7 +188,14 @@ pub fn run_worker(
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Query { qid, q } => {
-                backend.resolve(engine.as_ref(), &q, id_base, &mut batch_out, None);
+                backend.resolve(
+                    engine.as_ref(),
+                    &q,
+                    id_base,
+                    ProbeSpec::BASELINE,
+                    &mut batch_out,
+                    None,
+                );
                 let reply = WorkerReply {
                     core,
                     qid,
@@ -198,16 +206,23 @@ pub fn run_worker(
                     break; // node gone
                 }
             }
-            WorkerMsg::QueryBatch { qid0, qs, nq } => {
-                backend.resolve(engine.as_ref(), &qs, id_base, &mut batch_out, None);
+            WorkerMsg::QueryBatch { qid0, qs, nq, spec } => {
+                backend.resolve(engine.as_ref(), &qs, id_base, spec, &mut batch_out, None);
                 debug_assert_eq!(batch_out.len(), nq);
                 if send_batch_reply(&reply_tx, core, qid0, &batch_out).is_err() {
                     break;
                 }
             }
-            WorkerMsg::QueryBatchBudget { qid0, qs, nq, deadline_ns } => {
+            WorkerMsg::QueryBatchBudget { qid0, qs, nq, deadline_ns, spec } => {
                 let cancel = ScanCancel::until(Arc::clone(&clock), deadline_ns);
-                backend.resolve(engine.as_ref(), &qs, id_base, &mut batch_out, Some(&cancel));
+                backend.resolve(
+                    engine.as_ref(),
+                    &qs,
+                    id_base,
+                    spec,
+                    &mut batch_out,
+                    Some(&cancel),
+                );
                 debug_assert_eq!(batch_out.len(), nq);
                 if send_batch_reply(&reply_tx, core, qid0, &batch_out).is_err() {
                     break;

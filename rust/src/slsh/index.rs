@@ -9,6 +9,7 @@ use crate::knn::heap::{Neighbor, TopK};
 use crate::lsh::family::LayerSpec;
 use crate::lsh::key::PackedKey;
 use crate::lsh::layer::{LshLayer, Points, SliceView};
+use crate::lsh::probe::{ProbeGen, ProbeSpec};
 use crate::slsh::params::SlshParams;
 use crate::util::rng::mix64;
 use crate::util::stamp::StampSet;
@@ -72,6 +73,12 @@ pub struct QueryScratch {
     pub(crate) cand: Vec<u32>,
     pub(crate) keys: Vec<PackedKey>,
     pub(crate) topks: Vec<TopK>,
+    /// Multi-probe scratch: per-bit flip margins of the current
+    /// (query, table), the generated probe keys, and the reusable
+    /// sort/heap state of the sequence generator.
+    pub(crate) margins: Vec<f32>,
+    pub(crate) probe_keys: Vec<PackedKey>,
+    pub(crate) probe: ProbeGen,
 }
 
 impl QueryScratch {
@@ -83,6 +90,9 @@ impl QueryScratch {
             cand: Vec::new(),
             keys: Vec::new(),
             topks: Vec::new(),
+            margins: Vec::new(),
+            probe_keys: Vec::new(),
+            probe: ProbeGen::new(),
         }
     }
 
@@ -465,6 +475,171 @@ impl SlshIndex {
             out.push_query(topk, stats);
         }
     }
+
+    /// Knob-carrying entry point: resolve a block under a [`ProbeSpec`]
+    /// (probes per table + candidate budget), optionally deadline-bounded.
+    ///
+    /// * `spec == ProbeSpec::BASELINE` dispatches to the *exact* legacy
+    ///   path — [`query_batch`] (no `cancel`) or [`query_batch_cancel`]
+    ///   (with one) — so the default spec is bit-identical to the
+    ///   pre-multi-probe code by construction.
+    /// * `probes = P > 1` visits, per owned table, the first `P` buckets
+    ///   of the margin-ordered flip-≤2 probe sequence
+    ///   ([`crate::lsh::probe`]); candidates dedupe through the same
+    ///   visited set, so the candidate *set* grows monotonically with `P`.
+    /// * `max_comparisons > 0` is a hard per-query candidate budget:
+    ///   each table's fresh candidates are truncated so the running scan
+    ///   count never exceeds the cap, then resolution stops with
+    ///   `partial = true`. The cap is enforced by list truncation — no
+    ///   clock involved — so a capped answer is bit-reproducible and
+    ///   equals the uncapped candidate walk cut at exactly
+    ///   `max_comparisons` candidates ([`candidates_spec`] reconstructs
+    ///   it).
+    ///
+    /// [`query_batch`]: SlshIndex::query_batch
+    /// [`query_batch_cancel`]: SlshIndex::query_batch_cancel
+    /// [`candidates_spec`]: SlshIndex::candidates_spec
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_batch_spec(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        data: &[f32],
+        labels: &[bool],
+        id_base: u64,
+        spec: ProbeSpec,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+        cancel: Option<&ScanCancel>,
+    ) {
+        if spec.is_baseline() {
+            match cancel {
+                None => self.query_batch(engine, qs, data, labels, id_base, scratch, out),
+                Some(c) => {
+                    self.query_batch_cancel(engine, qs, data, labels, id_base, scratch, out, c)
+                }
+            }
+            return;
+        }
+        let dim = self.params.outer.dim;
+        assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+        let nq = qs.len() / dim;
+        scratch.ensure(self.n_local, nq, self.params.k);
+        out.clear();
+        let QueryScratch { visited, cand, keys, topks, margins, probe_keys, probe } = scratch;
+        keys.clear();
+        let n_tables = self.outer.tables.len();
+        let mut hashed = 0usize;
+        for qi in 0..nq {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            let topk = &mut topks[qi];
+            topk.reset(self.params.k);
+            let mut stats = QueryStats::default();
+            visited.clear();
+            cand.clear();
+            for pos in 0..n_tables {
+                if cancel.is_some_and(|c| c.blown()) {
+                    stats.partial = true;
+                    break;
+                }
+                if hashed == pos {
+                    self.outer.tables[pos].hash.hash_batch(qs, dim, keys);
+                    hashed += 1;
+                }
+                let start = cand.len();
+                let base = keys[pos * nq + qi];
+                if spec.probes > 1 {
+                    let hash = &self.outer.tables[pos].hash;
+                    hash.margins(q, margins);
+                    probe.generate(base, margins, spec.probes, probe_keys);
+                    for &key in probe_keys.iter() {
+                        self.gather_table(pos, q, key, visited, cand, &mut stats);
+                    }
+                } else {
+                    self.gather_table(pos, q, base, visited, cand, &mut stats);
+                }
+                stats.tables += 1;
+                let mut fresh = (cand.len() - start) as u64;
+                let mut capped = false;
+                if spec.max_comparisons > 0 {
+                    let room = spec.max_comparisons.saturating_sub(stats.comparisons);
+                    if fresh > room {
+                        cand.truncate(start + room as usize);
+                        fresh = room;
+                        capped = true;
+                    }
+                }
+                let scanned = match cancel {
+                    None => {
+                        engine.scan(Metric::L1, q, data, dim, &cand[start..], labels, id_base, topk)
+                    }
+                    Some(c) => engine.scan_until(
+                        Metric::L1,
+                        q,
+                        data,
+                        dim,
+                        &cand[start..],
+                        labels,
+                        id_base,
+                        topk,
+                        c,
+                    ),
+                };
+                stats.comparisons += scanned;
+                if scanned < fresh || capped {
+                    stats.partial = true;
+                    break;
+                }
+            }
+            out.push_query(topk, stats);
+        }
+    }
+
+    /// Spec-aware twin of [`candidates`]: the deduplicated candidate list
+    /// a [`query_batch_spec`] resolution scans, in scan order, with the
+    /// `max_comparisons` truncation applied. Exists so tests (and
+    /// debugging) can reconstruct a capped answer: scanning exactly this
+    /// list with the engine reproduces the capped query bit-for-bit.
+    ///
+    /// [`candidates`]: SlshIndex::candidates
+    /// [`query_batch_spec`]: SlshIndex::query_batch_spec
+    pub fn candidates_spec(
+        &self,
+        q: &[f32],
+        spec: ProbeSpec,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u32>,
+    ) -> QueryStats {
+        if spec.is_baseline() {
+            scratch.visited.ensure_capacity(self.n_local);
+            return self.candidates(q, &mut scratch.visited, out);
+        }
+        scratch.visited.ensure_capacity(self.n_local);
+        let QueryScratch { visited, margins, probe_keys, probe, .. } = scratch;
+        let mut stats = QueryStats::default();
+        out.clear();
+        visited.clear();
+        for pos in 0..self.outer.tables.len() {
+            let base = self.outer.tables[pos].hash.hash(q);
+            if spec.probes > 1 {
+                self.outer.tables[pos].hash.margins(q, margins);
+                probe.generate(base, margins, spec.probes, probe_keys);
+                for &key in probe_keys.iter() {
+                    self.gather_table(pos, q, key, visited, out, &mut stats);
+                }
+            } else {
+                self.gather_table(pos, q, base, visited, out, &mut stats);
+            }
+            stats.tables += 1;
+            if spec.max_comparisons > 0 && out.len() as u64 > spec.max_comparisons {
+                out.truncate(spec.max_comparisons as usize);
+                stats.partial = true;
+                break;
+            }
+        }
+        stats.comparisons = out.len() as u64;
+        stats
+    }
 }
 
 #[cfg(test)]
@@ -783,6 +958,156 @@ mod tests {
             assert_eq!(st.comparisons, 0);
             assert!(out.neighbors(qi).is_empty());
         }
+    }
+
+    #[test]
+    fn baseline_spec_is_bit_identical_to_legacy_paths() {
+        use crate::util::clock::MockClock;
+        let fx = Fixture::new(14);
+        let engine = NativeEngine::new();
+        for params in [lsh_params(20, 16, 31), slsh_params(12, 8, 0.05, 31)] {
+            let idx = SlshIndex::build_full(&params, &fx.view());
+            let mut scratch = QueryScratch::new(fx.n());
+            let mut plain = BatchOutput::new();
+            let mut spec_out = BatchOutput::new();
+            let mut rng = Xoshiro256::seed_from_u64(40);
+            let qs: Vec<f32> = (0..5 * 30).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+            idx.query_batch(&engine, &qs, &fx.data, &fx.labels, 70, &mut scratch, &mut plain);
+            idx.query_batch_spec(
+                &engine,
+                &qs,
+                &fx.data,
+                &fx.labels,
+                70,
+                ProbeSpec::BASELINE,
+                &mut scratch,
+                &mut spec_out,
+                None,
+            );
+            for qi in 0..5 {
+                assert_eq!(spec_out.stats(qi), plain.stats(qi));
+                assert_eq!(spec_out.neighbors(qi), plain.neighbors(qi));
+            }
+            // And through the cancel arm with an unbounded deadline.
+            let cancel = ScanCancel::unbounded(std::sync::Arc::new(MockClock::new(0)));
+            idx.query_batch_spec(
+                &engine,
+                &qs,
+                &fx.data,
+                &fx.labels,
+                70,
+                ProbeSpec::BASELINE,
+                &mut scratch,
+                &mut spec_out,
+                Some(&cancel),
+            );
+            for qi in 0..5 {
+                assert_eq!(spec_out.stats(qi), plain.stats(qi));
+                assert_eq!(spec_out.neighbors(qi), plain.neighbors(qi));
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_sets_grow_monotonically_with_probes() {
+        let fx = Fixture::new(16);
+        let idx = SlshIndex::build_full(&lsh_params(14, 8, 37), &fx.view());
+        let mut scratch = QueryScratch::new(fx.n());
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let mut grew_somewhere = false;
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..30).map(|_| rng.gen_f64(40.0, 140.0) as f32).collect();
+            let mut prev: Option<std::collections::HashSet<u32>> = None;
+            let mut prev_n = 0usize;
+            for probes in [1u32, 2, 4, 8] {
+                let mut cand = Vec::new();
+                let stats =
+                    idx.candidates_spec(&q, ProbeSpec::new(probes, 0), &mut scratch, &mut cand);
+                assert_eq!(stats.comparisons as usize, cand.len());
+                let set: std::collections::HashSet<u32> = cand.iter().copied().collect();
+                assert_eq!(set.len(), cand.len(), "duplicates at P={probes}");
+                if let Some(p) = &prev {
+                    assert!(p.is_subset(&set), "candidate set shrank at P={probes}");
+                    if set.len() > prev_n {
+                        grew_somewhere = true;
+                    }
+                }
+                prev_n = set.len();
+                prev = Some(set);
+            }
+        }
+        assert!(grew_somewhere, "multi-probe never found an extra candidate");
+    }
+
+    #[test]
+    fn probes_one_candidates_spec_matches_candidates() {
+        let fx = Fixture::new(17);
+        let idx = SlshIndex::build_full(&lsh_params(20, 12, 39), &fx.view());
+        let mut scratch = QueryScratch::new(fx.n());
+        let mut visited = StampSet::new(fx.n());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let q = fx.view().point(5).to_vec();
+        let sa = idx.candidates(&q, &mut visited, &mut a);
+        let sb = idx.candidates_spec(&q, ProbeSpec::BASELINE, &mut scratch, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn max_comparisons_cap_is_a_reconstructible_prefix() {
+        let fx = Fixture::new(18);
+        let engine = NativeEngine::new();
+        let idx = SlshIndex::build_full(&slsh_params(12, 8, 0.05, 43), &fx.view());
+        let mut scratch = QueryScratch::new(fx.n());
+        let mut out = BatchOutput::new();
+        let q = fx.view().point(100).to_vec();
+        // Uncapped comparison volume at P=4.
+        let mut full = Vec::new();
+        let full_stats =
+            idx.candidates_spec(&q, ProbeSpec::new(4, 0), &mut scratch, &mut full);
+        assert!(full_stats.comparisons > 32, "fixture too sparse for a cap test");
+        let cap = full_stats.comparisons / 2;
+        let spec = ProbeSpec::new(4, cap);
+        // Capped candidates are the exact prefix of the uncapped walk.
+        let mut capped = Vec::new();
+        let capped_stats = idx.candidates_spec(&q, spec, &mut scratch, &mut capped);
+        assert!(capped_stats.partial);
+        assert_eq!(capped_stats.comparisons, cap);
+        assert_eq!(capped[..], full[..cap as usize]);
+        // And the capped query equals scanning exactly that prefix.
+        idx.query_batch_spec(
+            &engine,
+            &q,
+            &fx.data,
+            &fx.labels,
+            0,
+            spec,
+            &mut scratch,
+            &mut out,
+            None,
+        );
+        assert_eq!(out.stats(0).comparisons, cap);
+        assert!(out.stats(0).partial);
+        let mut topk = TopK::new(idx.params.k);
+        let scanned =
+            engine.scan(Metric::L1, &q, &fx.data, 30, &capped, &fx.labels, 0, &mut topk);
+        assert_eq!(scanned, cap);
+        assert_eq!(out.neighbors(0), topk.into_sorted().as_slice());
+        // Deterministic: a second capped run is bit-identical.
+        let mut again = BatchOutput::new();
+        idx.query_batch_spec(
+            &engine,
+            &q,
+            &fx.data,
+            &fx.labels,
+            0,
+            spec,
+            &mut scratch,
+            &mut again,
+            None,
+        );
+        assert_eq!(again.neighbors(0), out.neighbors(0));
+        assert_eq!(again.stats(0), out.stats(0));
     }
 
     #[test]

@@ -68,6 +68,7 @@ use std::time::Duration;
 use crate::engine::{DistanceEngine, ScanCancel};
 use crate::knn::heap::TopK;
 use crate::knn::reduce::fold_partial;
+use crate::lsh::probe::ProbeSpec;
 use crate::slsh::index::{BatchOutput, QueryScratch, QueryStats};
 use crate::slsh::params::SlshParams;
 use crate::slsh::segment::{DeltaSegment, Extent, SealReason, SealedSegment};
@@ -544,7 +545,7 @@ impl LiveIndex {
         scratch: &mut LiveScratch,
         out: &mut BatchOutput,
     ) {
-        self.query_batch_inner(engine, qs, scratch, out, None);
+        self.query_batch_inner(engine, qs, scratch, out, ProbeSpec::BASELINE, None);
     }
 
     /// Budget-enforced twin of [`query_batch`](LiveIndex::query_batch):
@@ -560,7 +561,26 @@ impl LiveIndex {
         out: &mut BatchOutput,
         cancel: &ScanCancel,
     ) {
-        self.query_batch_inner(engine, qs, scratch, out, Some(cancel));
+        self.query_batch_inner(engine, qs, scratch, out, ProbeSpec::BASELINE, Some(cancel));
+    }
+
+    /// Knob-carrying twin: every sealed segment resolves through
+    /// [`SlshIndex::query_batch_spec`] and the delta through its spec
+    /// path, so `probes`/`max_comparisons` apply uniformly across the
+    /// whole segment stack. The baseline spec takes the exact legacy
+    /// per-segment bodies. Note `max_comparisons` bounds candidates *per
+    /// segment* on the live path (each segment is its own index); the
+    /// clock-free determinism and prefix contracts hold per segment.
+    pub fn query_batch_spec(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        scratch: &mut LiveScratch,
+        out: &mut BatchOutput,
+        spec: ProbeSpec,
+        cancel: Option<&ScanCancel>,
+    ) {
+        self.query_batch_inner(engine, qs, scratch, out, spec, cancel);
     }
 
     fn query_batch_inner(
@@ -569,6 +589,7 @@ impl LiveIndex {
         qs: &[f32],
         scratch: &mut LiveScratch,
         out: &mut BatchOutput,
+        spec: ProbeSpec,
         cancel: Option<&ScanCancel>,
     ) {
         let dim = self.params.outer.dim;
@@ -583,27 +604,17 @@ impl LiveIndex {
                 cut = true;
                 break;
             }
-            match cancel {
-                None => seg.index.query_batch(
-                    engine,
-                    qs,
-                    seg.data(),
-                    seg.labels(),
-                    self.id_base + seg.start(),
-                    &mut scratch.seg,
-                    &mut scratch.seg_out,
-                ),
-                Some(c) => seg.index.query_batch_cancel(
-                    engine,
-                    qs,
-                    seg.data(),
-                    seg.labels(),
-                    self.id_base + seg.start(),
-                    &mut scratch.seg,
-                    &mut scratch.seg_out,
-                    c,
-                ),
-            }
+            seg.index.query_batch_spec(
+                engine,
+                qs,
+                seg.data(),
+                seg.labels(),
+                self.id_base + seg.start(),
+                spec,
+                &mut scratch.seg,
+                &mut scratch.seg_out,
+                cancel,
+            );
             fold_segment(&mut scratch.acc, &mut scratch.stats, &scratch.seg_out);
         }
         if let Some(delta) = &snap.delta {
@@ -611,25 +622,16 @@ impl LiveIndex {
                 cut = true;
             }
             if !cut {
-                match cancel {
-                    None => delta.query_batch(
-                        engine,
-                        qs,
-                        k,
-                        self.id_base,
-                        &mut scratch.seg,
-                        &mut scratch.seg_out,
-                    ),
-                    Some(c) => delta.query_batch_cancel(
-                        engine,
-                        qs,
-                        k,
-                        self.id_base,
-                        &mut scratch.seg,
-                        &mut scratch.seg_out,
-                        c,
-                    ),
-                }
+                delta.query_batch_spec(
+                    engine,
+                    qs,
+                    k,
+                    self.id_base,
+                    spec,
+                    &mut scratch.seg,
+                    &mut scratch.seg_out,
+                    cancel,
+                );
                 fold_segment(&mut scratch.acc, &mut scratch.stats, &scratch.seg_out);
             }
         }
@@ -771,6 +773,45 @@ mod tests {
         assert_eq!(s.sealed_now, 1, "insert closes the overdue extent first");
         assert_eq!(live.sealed_segments(), 2);
         assert_eq!(live.delta_len(), 1);
+    }
+
+    #[test]
+    fn spec_baseline_matches_query_batch_and_probes_widen_live_candidates() {
+        let dim = 30;
+        let (data, labels) = clustered(300, dim, 21);
+        let params = lsh_params(dim, 12, 8, 23);
+        // 64-cap ⇒ mixed stack: sealed segments AND a live delta.
+        let live = LiveIndex::new(&params, SealPolicy::by_size(64), mock_clock());
+        for chunk in data.chunks(50 * dim).zip(labels.chunks(50)) {
+            live.insert_batch(chunk.0, chunk.1);
+        }
+        assert!(live.sealed_segments() > 0 && live.delta_len() > 0);
+        let engine = NativeEngine::new();
+        let mut scratch = LiveScratch::new();
+        let (mut plain, mut spec_out) = (BatchOutput::new(), BatchOutput::new());
+        let qs = data[..4 * dim].to_vec();
+        live.query_batch(&engine, &qs, &mut scratch, &mut plain);
+        live.query_batch_spec(&engine, &qs, &mut scratch, &mut spec_out, ProbeSpec::BASELINE, None);
+        for qi in 0..4 {
+            assert_eq!(spec_out.stats(qi), plain.stats(qi));
+            assert_eq!(spec_out.neighbors(qi), plain.neighbors(qi));
+        }
+        // More probes never scan fewer candidates, on sealed AND delta
+        // segments alike; repeated runs are bit-identical.
+        let mut prev = vec![0u64; 4];
+        for probes in [1u32, 2, 4, 8] {
+            let spec = ProbeSpec::new(probes, 0);
+            live.query_batch_spec(&engine, &qs, &mut scratch, &mut spec_out, spec, None);
+            let mut again = BatchOutput::new();
+            live.query_batch_spec(&engine, &qs, &mut scratch, &mut again, spec, None);
+            for qi in 0..4 {
+                let c = spec_out.stats(qi).comparisons;
+                assert!(c >= prev[qi], "P={probes} qi={qi}: {c} < {:?}", prev[qi]);
+                prev[qi] = c;
+                assert_eq!(again.stats(qi), spec_out.stats(qi));
+                assert_eq!(again.neighbors(qi), spec_out.neighbors(qi));
+            }
+        }
     }
 
     #[test]

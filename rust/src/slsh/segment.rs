@@ -39,6 +39,7 @@ use crate::engine::{DistanceEngine, Metric, ScanCancel};
 use crate::lsh::family::{ComposedHash, LayerSpec};
 use crate::lsh::key::PackedKey;
 use crate::lsh::layer::SliceView;
+use crate::lsh::probe::ProbeSpec;
 use crate::slsh::index::{BatchOutput, QueryScratch, QueryStats, SlshIndex};
 use crate::slsh::params::SlshParams;
 use crate::util::stamp::StampSet;
@@ -460,8 +461,23 @@ impl DeltaSegment {
         out: &mut Vec<u32>,
         stats: &mut QueryStats,
     ) {
+        let key = self.tables[pos].hash.hash(q);
+        self.gather_bucket(pos, key, epoch, visited, out, stats);
+    }
+
+    /// Gather the bucket addressed by an explicit `key` — the probe-level
+    /// body multi-probe fans out over (the base key plus its flip-≤2
+    /// perturbations all land here).
+    fn gather_bucket(
+        &self,
+        pos: usize,
+        key: PackedKey,
+        epoch: u32,
+        visited: &mut StampSet,
+        out: &mut Vec<u32>,
+        stats: &mut QueryStats,
+    ) {
         let e = &self.tables[pos];
-        let key = e.hash.hash(q);
         let Some(b) = e.table.find_bucket(&key) else { return };
         let seen = e.table.walk(b, epoch, |id| {
             if visited.insert(id) {
@@ -507,6 +523,127 @@ impl DeltaSegment {
         cancel: &ScanCancel,
     ) {
         self.query_batch_inner(engine, qs, k, id_base, scratch, out, Some(cancel));
+    }
+
+    /// Knob-carrying twin of the batch paths: multi-probe fan-out plus
+    /// the `max_comparisons` candidate budget, optionally
+    /// deadline-bounded. The baseline spec dispatches to the *exact*
+    /// legacy body, mirroring [`SlshIndex::query_batch_spec`]'s contract.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn query_batch_spec(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        k: usize,
+        id_base: u64,
+        spec: ProbeSpec,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+        cancel: Option<&ScanCancel>,
+    ) {
+        if spec.is_baseline() {
+            self.query_batch_inner(engine, qs, k, id_base, scratch, out, cancel);
+        } else {
+            self.query_batch_multi(engine, qs, k, id_base, spec, scratch, out, cancel);
+        }
+    }
+
+    /// Multi-probe / capped resolution body. Identical structure to
+    /// [`query_batch_inner`](DeltaSegment::query_batch_inner), except each
+    /// table gathers the first `spec.probes` buckets of the query's
+    /// margin-ordered probe sequence, and `spec.max_comparisons > 0`
+    /// truncates the candidate walk at exactly that many comparisons
+    /// (clock-free, bit-reproducible — see `SlshIndex::query_batch_spec`).
+    #[allow(clippy::too_many_arguments)]
+    fn query_batch_multi(
+        &self,
+        engine: &dyn DistanceEngine,
+        qs: &[f32],
+        k: usize,
+        id_base: u64,
+        spec: ProbeSpec,
+        scratch: &mut QueryScratch,
+        out: &mut BatchOutput,
+        cancel: Option<&ScanCancel>,
+    ) {
+        let dim = self.extent.dim();
+        assert!(dim > 0 && qs.len() % dim == 0, "query block not a multiple of dim");
+        let nq = qs.len() / dim;
+        let epoch = self.indexed();
+        scratch.ensure(epoch.max(1), nq, k);
+        out.clear();
+        let data = self.extent.data(epoch);
+        let labels = self.extent.labels(epoch);
+        let gid_base = id_base + self.extent.start();
+        let QueryScratch { visited, cand, topks, margins, probe_keys, probe, .. } = scratch;
+        for qi in 0..nq {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            let topk = &mut topks[qi];
+            topk.reset(k);
+            let mut stats = QueryStats::default();
+            visited.clear();
+            cand.clear();
+            for pos in 0..self.tables.len() {
+                if let Some(c) = cancel {
+                    if c.blown() {
+                        stats.partial = true;
+                        break;
+                    }
+                }
+                let start = cand.len();
+                let e = &self.tables[pos];
+                if spec.probes > 1 {
+                    let base = e.hash.hash(q);
+                    e.hash.margins(q, margins);
+                    probe.generate(base, margins, spec.probes, probe_keys);
+                    for &key in probe_keys.iter() {
+                        self.gather_bucket(pos, key, epoch as u32, visited, cand, &mut stats);
+                    }
+                } else {
+                    self.gather_table(pos, q, epoch as u32, visited, cand, &mut stats);
+                }
+                stats.tables += 1;
+                let mut fresh = (cand.len() - start) as u64;
+                let mut capped = false;
+                if spec.max_comparisons > 0 {
+                    let room = spec.max_comparisons.saturating_sub(stats.comparisons);
+                    if fresh > room {
+                        cand.truncate(start + room as usize);
+                        fresh = room;
+                        capped = true;
+                    }
+                }
+                let scanned = match cancel {
+                    None => engine.scan(
+                        Metric::L1,
+                        q,
+                        data,
+                        dim,
+                        &cand[start..],
+                        labels,
+                        gid_base,
+                        topk,
+                    ),
+                    Some(c) => engine.scan_until(
+                        Metric::L1,
+                        q,
+                        data,
+                        dim,
+                        &cand[start..],
+                        labels,
+                        gid_base,
+                        topk,
+                        c,
+                    ),
+                };
+                stats.comparisons += scanned;
+                if scanned < fresh || capped {
+                    stats.partial = true;
+                    break;
+                }
+            }
+            out.push_query(topk, stats);
+        }
     }
 
     #[allow(clippy::too_many_arguments)]

@@ -10,6 +10,11 @@
 //! lane a query waited in — results must not change); all assertions are
 //! value assertions, never timing assertions.
 
+// The positional submit/query entry points are deprecated shims over the
+// QuerySpec API; this file exercises them on purpose (they must keep
+// working bit-identically until removal).
+#![allow(deprecated)]
+
 mod common;
 
 use std::time::Duration;

@@ -25,6 +25,11 @@
 //!   budget), and local and remote (TCP) nodes enforce that same shipped
 //!   value identically.
 
+// The positional submit/query entry points are deprecated shims over the
+// QuerySpec API; this file exercises them on purpose (they must keep
+// working bit-identically until removal).
+#![allow(deprecated)]
+
 mod common;
 
 use std::collections::HashSet;

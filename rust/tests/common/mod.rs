@@ -22,6 +22,7 @@ use dslsh::engine::native::NativeEngine;
 use dslsh::engine::DistanceEngine;
 use dslsh::knn::predict::VoteConfig;
 use dslsh::lsh::family::LayerSpec;
+use dslsh::lsh::probe::ProbeSpec;
 use dslsh::net::{serve_node, RemoteNode};
 use dslsh::node::node::{HeartbeatReply, InsertReply, LocalNode, NodeInfo, NodeReply};
 use dslsh::slsh::{SealPolicy, SlshParams, LIVE_ID_STRIDE};
@@ -103,10 +104,10 @@ pub fn echo_result(qid: u64, share: f64) -> QueryResult {
 pub fn gated_echo(
     evt_tx: Sender<Vec<f32>>,
     gate_rx: Receiver<()>,
-) -> impl FnMut(Vec<f32>, usize, Budget, Class) -> Result<Vec<QueryResult>, ClusterError>
+) -> impl FnMut(Vec<f32>, usize, Budget, Class, ProbeSpec) -> Result<Vec<QueryResult>, ClusterError>
        + Send
        + 'static {
-    move |flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class| {
+    move |flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class, _probe: ProbeSpec| {
         evt_tx.send(flat.clone()).unwrap();
         gate_rx.recv().unwrap();
         Ok((0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect())

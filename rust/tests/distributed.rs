@@ -5,6 +5,11 @@
 //! port to the client side, so the suite is parallel-safe (tier-1 runs
 //! tests concurrently; a fixed port would flake on collision).
 
+// The positional submit/query entry points are deprecated shims over the
+// QuerySpec API; this file exercises them on purpose (they must keep
+// working bit-identically until removal).
+#![allow(deprecated)]
+
 mod common;
 
 use std::sync::Arc;

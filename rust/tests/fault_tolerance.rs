@@ -11,6 +11,11 @@
 //! failover must change availability, never answers — degraded paths are
 //! asserted field by field (`shed_nodes`, `partial`) against it.
 
+// The positional submit/query entry points are deprecated shims over the
+// QuerySpec API; this file exercises them on purpose (they must keep
+// working bit-identically until removal).
+#![allow(deprecated)]
+
 mod common;
 
 use std::net::TcpListener;
@@ -469,16 +474,16 @@ fn replicated_insert_fans_out_and_reports_ack_count() {
     assert!(r.neighbors.is_empty());
 }
 
-/// PR 6 known-gap regression: a *live* (streaming) remote replica that
-/// dies and reconnects comes back EMPTY — the retained `BuildLive` frame
-/// replays the node's configuration, not its data, and nothing re-feeds
-/// the lost inserts. The failure detector declares the replica healthy
-/// again (`replicas_down` returns to 0, `/readyz` would go green) while
-/// its answers silently carry zero neighbors with `shed_nodes == 0`.
-/// This test pins today's degraded behavior; the future anti-entropy /
-/// re-replication pass must flip the final assertions.
+/// The PR 6 known gap, closed: a *live* (streaming) remote replica that
+/// dies and reconnects used to come back EMPTY — the retained
+/// `BuildLive` frame replays the node's configuration, not its data.
+/// The shard dispatcher now keeps the acked insert history and replays
+/// it through the fresh connection before promoting the replica, so the
+/// reconnected node holds the SAME points (and global ids) it held
+/// before the crash, and the detector only reports it healthy once the
+/// replay caught up.
 #[test]
-fn reconnected_live_replica_serves_an_empty_shard() {
+fn reconnected_live_replica_is_repopulated_by_replay() {
     let c = corpus(200, 2, 27);
     let d = &c.data;
     let params = lsh_params(d, 8, 4, 5);
@@ -532,23 +537,34 @@ fn reconnected_live_replica_serves_an_empty_shard() {
     assert_eq!(stats.replicas_down, 1, "the readiness gauge sees the dead replica");
 
     // Honest recovery: the backoff re-dials, the retained BuildLive
-    // replays, the detector declares the replica healthy again.
+    // replays the configuration, and the dispatcher replays the acked
+    // insert history before declaring the replica healthy again. The
+    // reconnect counter only advances once the replay succeeded, so
+    // waiting on it pins the full recovery.
     let server = {
         let listener = Arc::clone(&listener);
         std::thread::spawn(move || serve_node_loop(&listener, None, 1).unwrap())
     };
     clock.advance(Duration::from_millis(20)); // past the 10 ms first backoff
-    wait_until(|| orch.failover_stats().reconnects == 1, "the live reconnect");
+    wait_until(|| orch.failover_stats().reconnects == 1, "the live reconnect + replay");
     assert_eq!(orch.failover_stats().replicas_down, 0, "the gauge recovered");
 
-    // THE GAP: the reconnected live node lost its 200 points and nothing
-    // re-feeds them. The query "succeeds" — zero neighbors, zero shed
-    // nodes — indistinguishable from a legitimately empty shard.
+    // THE GAP, CLOSED: the reconnected live node was re-fed the 200
+    // acked points, so it answers with its pre-crash data — a point it
+    // ingested comes back at distance 0 under its original global id.
     let r = orch.query(c.queries.point(1)).unwrap();
-    assert_eq!(r.shed_nodes, 0, "the replica is up as far as the detector knows");
+    assert_eq!(r.shed_nodes, 0);
     assert!(!r.partial);
-    assert!(r.neighbors.is_empty(), "the live data is gone after the reconnect");
+    assert!(!r.neighbors.is_empty(), "the replayed shard must answer with data");
+    let r = orch.query(d.point(5)).unwrap();
+    assert!(
+        r.neighbors.iter().any(|n| n.id == 5 && n.dist == 0.0),
+        "replayed point 5 must be indexed under its original id: {:?}",
+        r.neighbors
+    );
 
     drop(orch);
-    assert_eq!(server.join().unwrap(), 1, "the revived server carried the post-recovery query");
+    // Two post-recovery queries crossed the fresh connection; the replay
+    // traffic is inserts and does not count toward the served total.
+    assert_eq!(server.join().unwrap(), 2, "the revived server carried the post-recovery queries");
 }

@@ -8,6 +8,11 @@
 //! tracks the failure detector's replica gauge. Every timing-sensitive
 //! assertion runs on an injected `MockClock` — no sleeps anywhere.
 
+// The positional submit/query entry points are deprecated shims over the
+// QuerySpec API; this file exercises them on purpose (they must keep
+// working bit-identically until removal).
+#![allow(deprecated)]
+
 mod common;
 
 use std::io::{Cursor, Read, Write};

@@ -1,0 +1,427 @@
+//! Multi-probe / `QuerySpec` integration suite: the per-request
+//! accuracy/latency control plane end to end.
+//!
+//! What is pinned here, layer by layer:
+//!
+//! * **Baseline identity.** `probes = 1` with no comparison cap is THE
+//!   pre-spec behavior, bit-identical at the node (`query_batch` vs
+//!   `query_batch_spec` with baseline knobs), the orchestrator
+//!   (`query` vs `query_spec(default)`), across the wire (a default
+//!   spec rides the plain `QueryBatch` frame), and over HTTP (a body
+//!   with no knobs equals one with `probes:1, max_comparisons:0`).
+//! * **Monotonicity.** Probe sequences are prefixes of each other
+//!   (see `lsh::probe`), so widening `probes` can only grow the
+//!   candidate set: comparisons and returned-neighbor counts are
+//!   non-decreasing in P at the cluster level.
+//! * **Determinism of the cap.** `max_comparisons` is a clock-free
+//!   per-worker candidate budget: capped runs are reproducible
+//!   bit-for-bit, bounded by the cap, and flagged `partial` when the
+//!   cap binds — unlike a deadline, identical under any scheduler.
+//! * **One spec, every door.** The same `QuerySpec` produces the same
+//!   answer through the direct door, the admission queue (knobs ride
+//!   the cut), a TCP `RemoteNode` (knobs ride the `QueryBatchBudget`
+//!   frame), and the HTTP edge (knobs ride JSON) — and invalid specs
+//!   are rejected with typed errors at the validating edges.
+
+mod common;
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{
+    assert_bit_identical, corpus, http_post, lsh_params, reference_orchestrator, spawn_replica,
+    tcp_cluster,
+};
+use dslsh::coordinator::admission::{Budget, Class};
+use dslsh::coordinator::{AdmissionConfig, BudgetPolicy, QuerySpec};
+use dslsh::data::Corpus;
+use dslsh::lsh::probe::{ProbeSpec, MAX_PROBES};
+use dslsh::net::{EdgeConfig, EdgeServer};
+use dslsh::util::json::Json;
+
+/// Flatten the first `nq` query points into one dispatch payload.
+fn flat_queries(c: &Corpus, nq: usize) -> Arc<Vec<f32>> {
+    let mut flat = Vec::with_capacity(nq * c.queries.dim);
+    for i in 0..nq {
+        flat.extend_from_slice(c.queries.point(i));
+    }
+    Arc::new(flat)
+}
+
+/// Total scan work in a result, across every node and core.
+fn total_comparisons(r: &dslsh::coordinator::QueryResult) -> u64 {
+    r.per_node_comparisons.iter().flatten().sum()
+}
+
+// ---------------------------------------------------------------------------
+// Baseline identity
+// ---------------------------------------------------------------------------
+
+/// Node layer: baseline spec knobs dispatch into the literally-unchanged
+/// plain batch body — replies match field for field.
+#[test]
+fn node_baseline_spec_matches_plain_batch() {
+    let c = corpus(2_000, 6, 11);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let shard = Arc::new(c.data.shard(0..c.data.len()));
+    let mut plain_node = spawn_replica(&shard, 0, 0, &params, 2);
+    let mut spec_node = spawn_replica(&shard, 0, 0, &params, 2);
+    let qs = flat_queries(&c, c.queries.len());
+    let plain = plain_node.query_batch(Arc::clone(&qs), c.queries.len());
+    let spec = spec_node.query_batch_spec(
+        Arc::clone(&qs),
+        c.queries.len(),
+        Budget::none(),
+        Class::Monitor,
+        ProbeSpec::BASELINE,
+    );
+    assert_eq!(plain.len(), spec.len());
+    for (p, s) in plain.iter().zip(&spec) {
+        assert_eq!(p.neighbors, s.neighbors, "qid {}: neighbors", p.qid);
+        assert_eq!(p.comparisons, s.comparisons, "qid {}: comparisons", p.qid);
+        assert_eq!(p.inner_probes, s.inner_probes, "qid {}: inner_probes", p.qid);
+        assert!(!s.partial && !s.shed, "baseline spec must not truncate");
+    }
+}
+
+/// Cluster layer: `QuerySpec::default()` through the spec door equals the
+/// positional `query` path bit for bit.
+#[test]
+fn cluster_default_spec_matches_query() {
+    let c = corpus(3_000, 8, 21);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let orch = reference_orchestrator(&c.data, &params, 2, 2);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let want = orch.query(q).unwrap();
+        let got = orch.query_spec(q, &QuerySpec::default()).unwrap();
+        assert_bit_identical(&got, &want, &format!("default spec, query {i}"));
+        let explicit = orch
+            .query_spec(q, &QuerySpec::new().with_probes(1).with_max_comparisons(0))
+            .unwrap();
+        assert_bit_identical(&explicit, &want, &format!("explicit baseline, query {i}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Monotonicity in P
+// ---------------------------------------------------------------------------
+
+/// Probe sequences are prefixes, so work and recall can only grow with P:
+/// total comparisons and neighbor counts are non-decreasing, and every
+/// run at the same P is reproducible.
+#[test]
+fn candidates_grow_monotonically_with_probes() {
+    let c = corpus(3_000, 6, 31);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let orch = reference_orchestrator(&c.data, &params, 2, 2);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let mut prev_work = 0u64;
+        let mut prev_neighbors = 0usize;
+        for probes in [1u32, 2, 4, 8, 16] {
+            let spec = QuerySpec::new().with_probes(probes);
+            let r = orch.query_spec(q, &spec).unwrap();
+            let again = orch.query_spec(q, &spec).unwrap();
+            assert_bit_identical(&again, &r, &format!("query {i} probes {probes} rerun"));
+            let work = total_comparisons(&r);
+            assert!(
+                work >= prev_work,
+                "query {i}: comparisons shrank at probes={probes} ({work} < {prev_work})"
+            );
+            assert!(
+                r.neighbors.len() >= prev_neighbors,
+                "query {i}: neighbor count shrank at probes={probes}"
+            );
+            assert!(!r.partial, "no cap, no deadline: nothing may truncate");
+            prev_work = work;
+            prev_neighbors = r.neighbors.len();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The deterministic comparison cap
+// ---------------------------------------------------------------------------
+
+/// `max_comparisons` binds per worker, reproducibly: capped runs are
+/// bit-identical to each other, respect the bound, and flag `partial` —
+/// with no clock anywhere in the decision.
+#[test]
+fn comparison_cap_is_deterministic_bounded_and_flagged() {
+    let c = corpus(3_000, 4, 41);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let orch = reference_orchestrator(&c.data, &params, 2, 2);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let full = orch.query_spec(q, &QuerySpec::new().with_probes(8)).unwrap();
+        // A cap well under the uncapped max is guaranteed to bind on the
+        // busiest worker.
+        let cap = (full.max_comparisons / 4).max(1);
+        let spec = QuerySpec::new().with_probes(8).with_max_comparisons(cap);
+        let a = orch.query_spec(q, &spec).unwrap();
+        let b = orch.query_spec(q, &spec).unwrap();
+        assert_bit_identical(&b, &a, &format!("query {i} capped rerun"));
+        assert!(
+            a.max_comparisons <= cap,
+            "query {i}: cap {cap} exceeded ({})",
+            a.max_comparisons
+        );
+        assert!(a.partial, "query {i}: a binding cap must flag partial");
+    }
+}
+
+/// `k` trims the returned list without touching the vote: prediction and
+/// positive share match the untrimmed run exactly.
+#[test]
+fn k_caps_returned_neighbors_but_not_the_vote() {
+    let c = corpus(2_000, 4, 51);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let orch = reference_orchestrator(&c.data, &params, 2, 2);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let full = orch.query_spec(q, &QuerySpec::new().with_probes(4)).unwrap();
+        let trimmed =
+            orch.query_spec(q, &QuerySpec::new().with_probes(4).with_k(3)).unwrap();
+        assert!(trimmed.neighbors.len() <= 3, "query {i}: k=3 not honored");
+        assert_eq!(
+            trimmed.neighbors[..],
+            full.neighbors[..trimmed.neighbors.len()],
+            "query {i}: trimmed list must be a prefix of the full K-NN"
+        );
+        assert_eq!(trimmed.prediction, full.prediction, "query {i}: vote changed by k");
+        assert!(
+            trimmed.positive_share == full.positive_share,
+            "query {i}: positive_share changed by k"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec validation and the recall dial
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recall_hint_maps_to_the_documented_probe_ladder() {
+    assert_eq!(QuerySpec::new().requested_probes(), 0, "unset = auto");
+    assert_eq!(QuerySpec::new().with_recall_hint(0.3).requested_probes(), 1);
+    assert_eq!(QuerySpec::new().with_recall_hint(0.5).requested_probes(), 1);
+    assert_eq!(QuerySpec::new().with_recall_hint(0.75).requested_probes(), 2);
+    assert_eq!(QuerySpec::new().with_recall_hint(0.9).requested_probes(), 4);
+    assert_eq!(QuerySpec::new().with_recall_hint(1.0).requested_probes(), 8);
+    assert_eq!(QuerySpec::new().with_probes(6).requested_probes(), 6);
+}
+
+#[test]
+fn spec_validation_rejects_conflicts_and_out_of_range_knobs() {
+    assert!(QuerySpec::new().validate().is_ok());
+    assert!(QuerySpec::new()
+        .with_probes(8)
+        .with_max_comparisons(100)
+        .with_k(3)
+        .validate()
+        .is_ok());
+    assert!(QuerySpec::new().with_probes(MAX_PROBES).validate().is_ok());
+    // probes and recall_hint are two dials for the same knob.
+    assert!(QuerySpec::new().with_probes(2).with_recall_hint(0.9).validate().is_err());
+    assert!(QuerySpec::new().with_probes(MAX_PROBES + 1).validate().is_err());
+    assert!(QuerySpec::new().with_recall_hint(0.0).validate().is_err());
+    assert!(QuerySpec::new().with_recall_hint(1.5).validate().is_err());
+    assert!(QuerySpec::new().with_recall_hint(f32::NAN).validate().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// The admission door
+// ---------------------------------------------------------------------------
+
+/// The same spec answered through the admission queue equals the direct
+/// door bit for bit: knobs survive the cut resolution (a solo rider's
+/// probes/cap are its own maxima/minima), and `LogOnly` keeps the
+/// deadline observational so timing cannot perturb the comparison.
+#[test]
+fn admission_door_matches_direct_door_for_the_same_spec() {
+    let c = corpus(2_000, 6, 61);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let mut orch = reference_orchestrator(&c.data, &params, 2, 2);
+    let spec = QuerySpec::new()
+        .with_probes(4)
+        .with_max_comparisons(400)
+        .with_budget(Duration::from_millis(2))
+        .with_policy(BudgetPolicy::LogOnly);
+    let direct: Vec<_> = (0..c.queries.len())
+        .map(|i| orch.query_spec(c.queries.point(i), &spec).unwrap())
+        .collect();
+    orch.enable_admission(
+        AdmissionConfig::new(c.data.dim, 8).with_budget_policy(BudgetPolicy::LogOnly),
+    );
+    for i in 0..c.queries.len() {
+        let ticket = orch.submit_spec(c.queries.point(i), &spec).unwrap();
+        let r = ticket.wait().unwrap();
+        assert_bit_identical(&r, &direct[i], &format!("admitted query {i}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The wire
+// ---------------------------------------------------------------------------
+
+/// Spec knobs cross a real TCP hop bit-identically — and a default spec
+/// rides the plain pre-spec frame, so turning no knob changes no byte of
+/// wire traffic.
+#[test]
+fn spec_knobs_cross_the_wire_bit_identically() {
+    let c = corpus(2_000, 4, 71);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let local = reference_orchestrator(&c.data, &params, 2, 2);
+    let (remote, servers) = tcp_cluster(&c.data, &params, 2, 2);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        assert_bit_identical(
+            &remote.query_spec(q, &QuerySpec::default()).unwrap(),
+            &local.query(q).unwrap(),
+            &format!("default spec over TCP, query {i}"),
+        );
+        let spec = QuerySpec::new().with_probes(4).with_max_comparisons(300);
+        assert_bit_identical(
+            &remote.query_spec(q, &spec).unwrap(),
+            &local.query_spec(q, &spec).unwrap(),
+            &format!("probed+capped spec over TCP, query {i}"),
+        );
+    }
+    drop(remote);
+    for s in servers {
+        s.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The HTTP edge
+// ---------------------------------------------------------------------------
+
+/// The workload-determined slice of a query response body (qid and
+/// latency are scheduler/wall-clock and excluded, exactly as
+/// `assert_bit_identical` does in-process).
+fn body_essence(r: &common::HttpResponse) -> Vec<(&'static str, Json)> {
+    let j = r.json();
+    ["prediction", "positive_share", "partial", "shed_nodes", "max_comparisons", "neighbors",
+     "per_node_comparisons"]
+        .iter()
+        .map(|k| (*k, j.get(k).unwrap_or_else(|| panic!("missing {k} in {:?}", r.body)).clone()))
+        .collect()
+}
+
+#[test]
+fn http_spec_fields_round_trip_and_baseline_matches_plain() {
+    let c = corpus(2_000, 2, 81);
+    let params = lsh_params(&c.data, 24, 8, 7);
+    let orch = Arc::new(reference_orchestrator(&c.data, &params, 2, 2));
+    let edge = EdgeServer::start(
+        Arc::clone(&orch),
+        TcpListener::bind("127.0.0.1:0").unwrap(),
+        EdgeConfig::new(c.data.dim),
+    )
+    .unwrap();
+    let addr = edge.addr();
+    let pt = c
+        .queries
+        .point(0)
+        .iter()
+        .map(|v| format!("{v}"))
+        .collect::<Vec<_>>()
+        .join(",");
+
+    // No knobs == explicit baseline knobs, field for field.
+    let plain = http_post(addr, "/v1/query", &format!("{{\"point\":[{pt}]}}"));
+    assert_eq!(plain.status, 200, "{:?}", plain.body);
+    let explicit = http_post(
+        addr,
+        "/v1/query",
+        &format!("{{\"point\":[{pt}],\"probes\":1,\"max_comparisons\":0}}"),
+    );
+    assert_eq!(explicit.status, 200, "{:?}", explicit.body);
+    assert_eq!(body_essence(&plain), body_essence(&explicit));
+    // ... and both equal the in-process answer.
+    let want = orch.query(c.queries.point(0)).unwrap();
+    let got = plain.json();
+    assert_eq!(got.get("max_comparisons").and_then(|v| v.as_u64()), Some(want.max_comparisons));
+    assert_eq!(
+        got.get("neighbors").map(|n| n.as_arr().unwrap().len()),
+        Some(want.neighbors.len())
+    );
+
+    // Widening probes over JSON grows the scan.
+    let p8 = http_post(addr, "/v1/query", &format!("{{\"point\":[{pt}],\"probes\":8}}"));
+    assert_eq!(p8.status, 200, "{:?}", p8.body);
+    let p8_max = p8.json().get("max_comparisons").and_then(|v| v.as_u64()).unwrap();
+    assert!(p8_max >= want.max_comparisons, "probes=8 must not shrink the scan");
+
+    // A binding cap truncates deterministically and surfaces as a 206.
+    let cap = (p8_max / 4).max(1);
+    let capped = http_post(
+        addr,
+        "/v1/query",
+        &format!("{{\"point\":[{pt}],\"probes\":8,\"max_comparisons\":{cap}}}"),
+    );
+    assert_eq!(capped.status, 206, "a binding cap is a flagged partial: {:?}", capped.body);
+    let cj = capped.json();
+    assert_eq!(cj.get("partial"), Some(&Json::Bool(true)));
+    assert!(cj.get("max_comparisons").and_then(|v| v.as_u64()).unwrap() <= cap);
+
+    // k trims the returned list.
+    let k2 = http_post(addr, "/v1/query", &format!("{{\"point\":[{pt}],\"k\":2}}"));
+    assert_eq!(k2.status, 200, "{:?}", k2.body);
+    assert!(k2.json().get("neighbors").unwrap().as_arr().unwrap().len() <= 2);
+
+    // recall_hint is accepted as the declarative dial.
+    let hinted =
+        http_post(addr, "/v1/query", &format!("{{\"point\":[{pt}],\"recall_hint\":0.9}}"));
+    assert_eq!(hinted.status, 200, "{:?}", hinted.body);
+}
+
+#[test]
+fn http_rejects_invalid_specs_with_typed_errors() {
+    let c = corpus(500, 1, 91);
+    let params = lsh_params(&c.data, 24, 4, 7);
+    let orch = Arc::new(reference_orchestrator(&c.data, &params, 1, 1));
+    let edge = EdgeServer::start(
+        Arc::clone(&orch),
+        TcpListener::bind("127.0.0.1:0").unwrap(),
+        EdgeConfig::new(c.data.dim),
+    )
+    .unwrap();
+    let addr = edge.addr();
+    let pt = c
+        .queries
+        .point(0)
+        .iter()
+        .map(|v| format!("{v}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    // (body fragment after "point", expected error code)
+    let cases: &[(&str, &str)] = &[
+        // Cross-field validation: two dials for one knob, range checks.
+        ("\"probes\":2,\"recall_hint\":0.9", "bad-spec"),
+        ("\"probes\":65537", "bad-spec"),
+        ("\"recall_hint\":0.0", "bad-spec"),
+        ("\"recall_hint\":1.5", "bad-spec"),
+        // Field-level type errors.
+        ("\"probes\":true", "bad-probes"),
+        ("\"probes\":1.5", "bad-probes"),
+        ("\"probes\":-1", "bad-probes"),
+        ("\"recall_hint\":\"high\"", "bad-recall-hint"),
+        ("\"max_comparisons\":\"many\"", "bad-max-comparisons"),
+        ("\"k\":-1", "bad-k"),
+        // Unknown knobs stay a hard error — no silent typo acceptance.
+        ("\"probez\":4", "unknown-field"),
+    ];
+    for (frag, code) in cases {
+        let r = http_post(addr, "/v1/query", &format!("{{\"point\":[{pt}],{frag}}}"));
+        assert_eq!(r.status, 400, "{frag}: {:?}", r.body);
+        assert_eq!(r.error_code(), *code, "{frag}");
+    }
+    // A valid spec on the same server still serves — rejection is
+    // per-request, not connection-poisoning.
+    let ok = http_post(addr, "/v1/query", &format!("{{\"point\":[{pt}],\"probes\":2}}"));
+    assert!(ok.status == 200 || ok.status == 206, "{:?}", ok.body);
+}

@@ -47,13 +47,27 @@ cargo test -q --test fault_tolerance
 # readiness suite. The json lib tests pin the hardened parser (depth cap,
 # strict numbers, duplicate-key rejection, round-trip property).
 cargo test -q --test http_edge
+# multiprobe holds the QuerySpec control plane (PR 8): probes=1 + no cap
+# bit-identical to the pre-spec paths at every layer (node, cluster,
+# admission, wire, HTTP), candidate monotonicity in P, the deterministic
+# max_comparisons cap, and typed rejection of invalid specs at the edges.
+cargo test -q --test multiprobe
 cargo test -q --lib util::json
 cargo test -q --lib coordinator::admission
+cargo test -q --lib lsh::probe
 
-# Bench smoke: asserts the admission-latency, ingest and hedging benches
-# produce non-empty CSVs for every scenario (artifact plumbing, not
-# timing quality; hedging additionally asserts the hedged run hedged).
+# The deprecated positional entry points must stay thin shims the crate
+# itself no longer calls: everything (examples and benches included) must
+# compile warning-clean with deprecation warnings denied. Test binaries
+# that exercise the shims on purpose carry #![allow(deprecated)].
+RUSTFLAGS="-D warnings" cargo build --release --all-targets
+
+# Bench smoke: asserts the admission-latency, ingest, hedging and
+# tradeoff benches produce non-empty CSVs for every scenario (artifact
+# plumbing, not timing quality; hedging additionally asserts the hedged
+# run hedged; tradeoff that comparisons strictly increase with probes).
 # CI uploads results/*.csv.
 cargo bench --bench admission_latency -- --smoke
 cargo bench --bench ingest -- --smoke
 cargo bench --bench hedging -- --smoke
+cargo bench --bench tradeoff -- --smoke
