@@ -99,6 +99,10 @@ fn main() -> anyhow::Result<()> {
     println!();
     println!("-- streaming (LiveIndex: insert -> query -> seal -> query) --");
     let live = LiveIndex::new(&params, SealPolicy::by_size(8192), Arc::new(SystemClock::new()));
+    // NativeEngine::new() runtime-dispatches to a 4-lane SIMD scan kernel
+    // that is bit-identical to the scalar path (see engine/native.rs). An
+    // 8-lane AVX2 kernel exists behind `--features wide-simd` but is
+    // tolerance-grade and opt-in only (NativeEngine::with_kernel).
     let engine = NativeEngine::new();
     let (mut scratch, mut out) = (LiveScratch::new(), BatchOutput::new());
     let d = &corpus.data;

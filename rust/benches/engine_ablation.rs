@@ -1,85 +1,216 @@
-//! §Perf ablation: native Rust scan vs the AOT JAX/Pallas (XLA/PJRT)
-//! scan across candidate batch sizes — wall-clock per scan, per-candidate
-//! cost, and PJRT call overhead. This is the data behind the batch-ladder
-//! choice in python/compile/model.py.
+//! §Perf ablation: the scan kernel ladder — scalar vs simd4 (vs simd8
+//! when compiled with `--features wide-simd`) across dims {30, 32, 37}
+//! and candidate batch sizes, plus the AOT JAX/Pallas (XLA/PJRT) engine
+//! when its runtime is available. Per-scan wall clock and ns/comparison;
+//! the data behind the repo's perf trajectory (`BENCH_engine.json`).
+//!
+//! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus, ASSERTS the
+//! simd4 kernel is bit-identical to scalar on every (metric, dim) cell,
+//! and verifies the CSV artifact is written — correctness plumbing, not
+//! timing quality. Full runs additionally refresh `BENCH_engine.json`
+//! at the repo root (scalar-vs-SIMD ns/comparison at query batch sizes
+//! 1, 16 and 64) when run from the workspace.
 //!
 //! Not a paper table; recorded in EXPERIMENTS.md §Perf.
 
 use dslsh::engine::native::NativeEngine;
-use dslsh::engine::{DistanceEngine, Metric};
+use dslsh::engine::{DistanceEngine, Metric, ScanKernel};
 use dslsh::experiments::report::Table;
 use dslsh::knn::TopK;
 use dslsh::runtime::XlaService;
+use dslsh::util::json::{Json, JsonObj};
 use dslsh::util::rng::Xoshiro256;
 use dslsh::util::stats;
 
-fn bench_engine(
+/// Median µs/scan and ns/comparison of `scan` over `ids`.
+fn bench_scan(
     engine: &dyn DistanceEngine,
     data: &[f32],
     labels: &[bool],
     q: &[f32],
+    dim: usize,
     ids: &[u32],
     reps: usize,
 ) -> (f64, f64) {
     // Warmup.
     let mut topk = TopK::new(10);
-    engine.scan(Metric::L1, q, data, 30, ids, labels, 0, &mut topk);
+    engine.scan(Metric::L1, q, data, dim, ids, labels, 0, &mut topk);
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {
         let mut topk = TopK::new(10);
         let t0 = std::time::Instant::now();
-        engine.scan(Metric::L1, q, data, 30, ids, labels, 0, &mut topk);
+        engine.scan(Metric::L1, q, data, dim, ids, labels, 0, &mut topk);
         times.push(t0.elapsed().as_secs_f64() * 1e6); // µs
     }
     let med = stats::median(&times);
-    (med, med / ids.len() as f64 * 1e3) // (µs/scan, ns/candidate)
+    (med, med / ids.len() as f64 * 1e3) // (µs/scan, ns/comparison)
+}
+
+/// ns/comparison of `scan_batch` with `nq` queries over `ids`.
+fn bench_scan_batch(
+    engine: &dyn DistanceEngine,
+    data: &[f32],
+    labels: &[bool],
+    qs: &[f32],
+    dim: usize,
+    nq: usize,
+    ids: &[u32],
+    reps: usize,
+) -> f64 {
+    let mut topks: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+    engine.scan_batch(Metric::L1, qs, data, dim, ids, labels, 0, &mut topks);
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let mut topks: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+        let t0 = std::time::Instant::now();
+        engine.scan_batch(Metric::L1, qs, data, dim, ids, labels, 0, &mut topks);
+        times.push(t0.elapsed().as_secs_f64() * 1e9); // ns
+    }
+    stats::median(&times) / (nq * ids.len()) as f64
+}
+
+/// Assert simd4 == scalar bit-identity on scan + scan_batch results —
+/// the smoke gate that keeps the ablation honest.
+fn assert_kernel_identity(data: &[f32], labels: &[bool], dim: usize, qs: &[f32], ids: &[u32]) {
+    let scalar = NativeEngine::with_kernel(ScanKernel::Scalar);
+    let simd = NativeEngine::with_kernel(ScanKernel::Simd4);
+    let nq = qs.len() / dim;
+    for metric in [Metric::L1, Metric::Cosine] {
+        let mut a = TopK::new(10);
+        let mut b = TopK::new(10);
+        scalar.scan(metric, &qs[..dim], data, dim, ids, labels, 0, &mut a);
+        simd.scan(metric, &qs[..dim], data, dim, ids, labels, 0, &mut b);
+        assert_eq!(
+            a.into_sorted(),
+            b.into_sorted(),
+            "simd4 != scalar on scan (dim={dim}, metric={metric:?})"
+        );
+        let mut aa: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+        let mut bb: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+        scalar.scan_batch(metric, qs, data, dim, ids, labels, 0, &mut aa);
+        simd.scan_batch(metric, qs, data, dim, ids, labels, 0, &mut bb);
+        for (x, y) in aa.into_iter().zip(bb) {
+            assert_eq!(
+                x.into_sorted(),
+                y.into_sorted(),
+                "simd4 != scalar on scan_batch (dim={dim}, metric={metric:?})"
+            );
+        }
+    }
 }
 
 fn main() {
-    let n = 200_000;
-    let mut rng = Xoshiro256::seed_from_u64(7);
-    let data: Vec<f32> = (0..n * 30).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
-    let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.05)).collect();
-    let q: Vec<f32> = (0..30).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n: usize = if smoke { 8_192 } else { 200_000 };
+    println!("== engine ablation bench ({} mode) ==", if smoke { "smoke" } else { "full" });
 
-    let native = NativeEngine::new();
-    let xla_service = match XlaService::start() {
-        Ok(s) => Some(s),
-        Err(e) => {
-            eprintln!("XLA runtime unavailable ({e:#}); benchmarking the native engine only");
-            None
-        }
-    };
-
-    let mut table = Table::new(
-        "Engine ablation — candidate scan cost (median)",
-        &["batch", "native µs", "native ns/cand", "xla µs", "xla ns/cand", "xla/native"],
-    );
-    for &batch in &[64usize, 256, 1024, 2048, 8192, 16384, 50000] {
-        let ids: Vec<u32> = (0..batch).map(|_| rng.gen_below(n as u64) as u32).collect();
-        let reps = (200_000 / batch).clamp(5, 400);
-        let (nat_us, nat_ns) = bench_engine(&native, &data, &labels, &q, &ids, reps);
-        let (xla_cells, ratio) = match &xla_service {
-            Some(svc) => {
-                let xla = svc.engine();
-                let (xla_us, xla_ns) = bench_engine(&xla, &data, &labels, &q, &ids, reps);
-                (
-                    (format!("{xla_us:.1}"), format!("{xla_ns:.2}")),
-                    format!("{:.1}x", xla_us / nat_us),
-                )
-            }
-            None => (("-".into(), "-".into()), "-".into()),
-        };
-        table.row(vec![
-            batch.to_string(),
-            format!("{nat_us:.1}"),
-            format!("{nat_ns:.2}"),
-            xla_cells.0,
-            xla_cells.1,
-            ratio,
-        ]);
+    let mut kernels = vec![("scalar", ScanKernel::Scalar), ("simd4", ScanKernel::Simd4)];
+    if ScanKernel::simd8_available() {
+        kernels.push(("simd8", ScanKernel::Simd8));
+    } else {
+        println!("simd8 unavailable (needs --features wide-simd + AVX2); skipping its rows");
     }
+
+    // Kernel ladder across dims: the paper's 30-wide windows, the padded
+    // 32-wide layout, and a dynamic (non-specialized, tail-carrying) 37.
+    let mut table = Table::new(
+        "Engine ablation — scan kernel ladder (median)",
+        &["kernel", "dim", "batch", "µs/scan", "ns/cmp"],
+    );
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for &dim in &[30usize, 32, 37] {
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.05)).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        let qs: Vec<f32> = (0..4 * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        let batches: &[usize] = if smoke { &[1024, 8192] } else { &[1024, 8192, 50_000] };
+        for &batch in batches {
+            let ids: Vec<u32> = (0..batch).map(|_| rng.gen_below(n as u64) as u32).collect();
+            let reps = (200_000 / batch).clamp(5, 400);
+            for &(name, kernel) in &kernels {
+                let engine = NativeEngine::with_kernel(kernel);
+                let (us, ns) = bench_scan(&engine, &data, &labels, &q, dim, &ids, reps);
+                table.row(vec![
+                    name.to_string(),
+                    dim.to_string(),
+                    batch.to_string(),
+                    format!("{us:.1}"),
+                    format!("{ns:.2}"),
+                ]);
+            }
+        }
+        // The identity gate runs in every mode; --smoke exists to run it
+        // cheaply in CI.
+        let gate_ids: Vec<u32> = (0..n as u32).step_by(3).collect();
+        assert_kernel_identity(&data, &labels, dim, &qs, &gate_ids);
+        println!("identity OK: simd4 == scalar bit-for-bit at dim {dim}");
+    }
+
+    // AOT XLA engine for scale context (dim 30 only, its compiled shape).
+    if let Ok(svc) = XlaService::start() {
+        let dim = 30;
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.05)).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        let ids: Vec<u32> = (0..8192).map(|_| rng.gen_below(n as u64) as u32).collect();
+        let xla = svc.engine();
+        let (us, ns) = bench_scan(&xla, &data, &labels, &q, dim, &ids, 40);
+        table.row(vec![
+            "xla".to_string(),
+            dim.to_string(),
+            "8192".to_string(),
+            format!("{us:.1}"),
+            format!("{ns:.2}"),
+        ]);
+    } else {
+        println!("XLA runtime unavailable; benchmarking native kernels only");
+    }
+
     println!("{}", table.render());
     table.save(std::path::Path::new("results"), "engine_ablation").expect("saving");
     println!("[engine_ablation] -> results/engine_ablation.csv");
+
+    if smoke {
+        let csv = std::fs::read_to_string("results/engine_ablation.csv")
+            .expect("smoke: results/engine_ablation.csv must exist");
+        for needle in ["scalar", "simd4"] {
+            assert!(csv.contains(needle), "smoke: CSV must hold {needle} rows:\n{csv}");
+        }
+        println!("smoke OK: engine_ablation.csv has {} lines", csv.lines().count());
+    }
+
+    // Perf trajectory record: scalar-vs-SIMD ns/comparison at query batch
+    // sizes 1/16/64 (dim 30, 8192 candidates). Written to the repo root's
+    // BENCH_engine.json when run from the workspace (CI and dev runs);
+    // skipped silently elsewhere.
+    let bench_root = std::path::Path::new("..");
+    if bench_root.join("ROADMAP.md").exists() {
+        let dim = 30;
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.05)).collect();
+        let ids: Vec<u32> = (0..8192.min(n)).map(|_| rng.gen_below(n as u64) as u32).collect();
+        let reps = if smoke { 10 } else { 60 };
+        let mut obj = JsonObj::new();
+        obj.insert("bench", Json::Str("engine_scan".into()));
+        obj.insert("metric", Json::Str("ns_per_comparison_l1_dim30".into()));
+        obj.insert("candidates", Json::Num(ids.len() as f64));
+        obj.insert("mode", Json::Str(if smoke { "smoke" } else { "full" }.into()));
+        let mut by_kernel = JsonObj::new();
+        for &(name, kernel) in &kernels {
+            let engine = NativeEngine::with_kernel(kernel);
+            let mut by_batch = JsonObj::new();
+            for nq in [1usize, 16, 64] {
+                let qs: Vec<f32> =
+                    (0..nq * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+                let ns = bench_scan_batch(&engine, &data, &labels, &qs, dim, nq, &ids, reps);
+                by_batch.insert(format!("batch_{nq}"), Json::Num((ns * 1000.0).round() / 1000.0));
+            }
+            by_kernel.insert(name, Json::Obj(by_batch));
+        }
+        obj.insert("ns_per_comparison", Json::Obj(by_kernel));
+        obj.insert("note", Json::Str("recorded by `cargo bench --bench engine_ablation`".into()));
+        std::fs::write(bench_root.join("BENCH_engine.json"), Json::Obj(obj).to_string_pretty())
+            .expect("writing BENCH_engine.json");
+        println!("[engine_ablation] -> BENCH_engine.json (perf trajectory)");
+    }
 }

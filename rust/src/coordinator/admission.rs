@@ -508,7 +508,8 @@ pub struct AdmissionConfig {
 /// auto-probe riders (a [`QuerySpec`] with `probes == 0` and no
 /// `recall_hint`) inherit at cut time. After every dispatched cut the
 /// controller folds the observed comparisons-per-query into a lane EWMA
-/// (`ewma = (7·prev + obs) / 8`) and steps the lane's probe count by ±1:
+/// (`ewma = round((7·prev + obs) / 8)`, saturating — see [`ewma_fold`])
+/// and steps the lane's probe count by ±1:
 /// down when the cut came back stressed (any partial or shed rider on the
 /// lane) or the EWMA exceeds `target_comparisons`, up otherwise — a
 /// classic AIAD walk that converges onto the widest probe count the
@@ -524,6 +525,17 @@ pub struct AutoProbes {
     /// Comparisons-per-query EWMA above which the lane steps down even
     /// without enforcement stress — the operator's cost budget.
     pub target_comparisons: u64,
+}
+
+/// One EWMA step, `round((7·prev + obs) / 8)`, in u128 so `7 · prev`
+/// cannot wrap for any `u64` input, saturating back to `u64::MAX`.
+/// Round-to-nearest (the `+ 4` before the divide) instead of truncation:
+/// truncation biases every step toward zero, which can pin the EWMA at a
+/// stale floor below a constant observation (e.g. prev = 16, obs = 23
+/// truncates to 16 forever; rounding walks up to within 3).
+#[inline]
+fn ewma_fold(prev: u64, obs: u64) -> u64 {
+    ((7u128 * u128::from(prev) + u128::from(obs) + 4) / 8).min(u128::from(u64::MAX)) as u64
 }
 
 impl AdmissionConfig {
@@ -1139,7 +1151,7 @@ impl AdmissionQueue {
                             }
                             let obs = lane_sum[idx] / lane_n[idx];
                             let prev = shared.lane_ewma[idx].load(Ordering::Relaxed);
-                            let ewma = if prev == 0 { obs } else { (7 * prev + obs) / 8 };
+                            let ewma = if prev == 0 { obs } else { ewma_fold(prev, obs) };
                             shared.lane_ewma[idx].store(ewma, Ordering::Relaxed);
                             if let Some(auto) = shared.cfg.auto_probes {
                                 let cur = shared.lane_probes[idx].load(Ordering::Relaxed);
@@ -2024,10 +2036,66 @@ mod tests {
         q.submit(&[-8.0], FAR).unwrap().wait().unwrap();
         let st = q.stats().monitor;
         assert_eq!(st.probes, 2, "a partial answer steps the lane back down");
-        assert_eq!(st.ewma_comparisons, (7 * 16 + 8) / 8);
+        assert_eq!(st.ewma_comparisons, ewma_fold(16, 8)); // round((7·16 + 8)/8) = 15
         // Monitor traffic leaves the analytics lane untouched.
         assert_eq!(q.stats().analytics.probes, 1);
         assert_eq!(q.stats().analytics.ewma_comparisons, 0);
+    }
+
+    #[test]
+    fn ewma_fold_saturates_and_rounds() {
+        // Wrap safety: with the old u64 arithmetic, 7 * prev overflowed
+        // for prev > u64::MAX / 7 and the EWMA wrapped to garbage. The
+        // u128 fold must saturate instead.
+        assert_eq!(ewma_fold(u64::MAX, u64::MAX), u64::MAX);
+        assert_eq!(ewma_fold(u64::MAX, 0), ((7u128 * u128::from(u64::MAX) + 4) / 8) as u64);
+        let big = 1u64 << 63;
+        assert_eq!(ewma_fold(big, big), big, "fixed point at any magnitude");
+        assert!(ewma_fold(big, 0) < big, "huge EWMAs still decay");
+        // Round-to-nearest, not truncation: from 16 with a constant
+        // observation of 23, truncation computes (7·16 + 23)/8 = 16
+        // forever — a stale floor. Rounding must walk up to within 3.
+        let mut e = 16u64;
+        for _ in 0..16 {
+            e = ewma_fold(e, 23);
+        }
+        assert_eq!(e, 20, "rounded EWMA converges to within 3 of obs=23");
+        assert_eq!((7u64 * 16 + 23) / 8, 16, "truncation would have been stuck at 16");
+    }
+
+    #[test]
+    fn huge_observation_cannot_wrap_the_lane_ewma() {
+        // Controller-level version of the wrap test: a plant reporting
+        // absurd comparison counts (f32::MAX casts saturate to u64::MAX)
+        // must leave the lane EWMA huge-but-sane — above target, never
+        // wrapped to a small number that would step probes UP.
+        let dispatch = move |flat: Vec<f32>, nq: usize, _b: Budget, _c: Class, _p: ProbeSpec| {
+            Ok((0..nq)
+                .map(|i| QueryResult {
+                    qid: i as u64,
+                    neighbors: Vec::new(),
+                    positive_share: 0.0,
+                    prediction: false,
+                    max_comparisons: flat[i].abs() as u64,
+                    per_node_comparisons: Vec::new(),
+                    latency_s: 0.0,
+                    partial: false,
+                    shed_nodes: 0,
+                })
+                .collect())
+        };
+        let cfg = AdmissionConfig::new(1, 1)
+            .with_auto_probes(AutoProbes { min: 1, max: 8, target_comparisons: 1000 });
+        let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
+        q.submit(&[f32::MAX], FAR).unwrap().wait().unwrap();
+        let seed = q.stats().monitor.ewma_comparisons;
+        assert_eq!(seed, u64::MAX, "first observation seeds the saturated count");
+        for _ in 0..4 {
+            q.submit(&[f32::MAX], FAR).unwrap().wait().unwrap();
+            let st = q.stats().monitor;
+            assert_eq!(st.ewma_comparisons, u64::MAX, "flood holds the fixed point, no wrap");
+            assert_eq!(st.probes, 1, "over-target flood keeps the lane pinned at min");
+        }
     }
 
     #[test]

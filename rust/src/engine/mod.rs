@@ -4,15 +4,27 @@
 //! bottleneck for large datasets; DSLSH makes that scan a pluggable
 //! [`DistanceEngine`]:
 //!
-//! * [`native::NativeEngine`] — portable Rust scan (unrolled, branch-light);
+//! * [`native::NativeEngine`] — portable Rust scan with runtime kernel
+//!   dispatch ([`ScanKernel`]): explicit 4-lane SIMD (SSE2/NEON) kept
+//!   bit-identical to the scalar reference, plus an opt-in 8-lane AVX2
+//!   kernel behind the `wide-simd` feature (see the kernel contract in
+//!   [`native`]'s module docs);
 //! * [`crate::runtime::XlaEngine`] — the AOT path: a JAX/Pallas kernel
 //!   lowered to HLO at build time and executed through PJRT, proving the
 //!   three-layer composition on the live request path.
 //!
 //! Every engine counts **comparisons** (distance computations) — the
-//! paper's machine-independent speed metric.
+//! paper's machine-independent speed metric. Kernel dispatch lives under
+//! the [`DistanceEngine`] trait surface: the [`ScanCancel`]-aware tiled
+//! entry points (`scan_until`, `scan_batch_range_until`) and the default
+//! `scan_range`/`scan_batch*` methods all funnel into the overridable
+//! `scan`/`scan_batch` core, so a dispatched kernel covers every call
+//! site — single, batched, cancellable, live-delta and multi-probe —
+//! without the callers knowing which ISA ran.
 
 pub mod native;
+
+pub use native::ScanKernel;
 
 use std::cell::Cell;
 use std::sync::Arc;

@@ -1,24 +1,47 @@
-//! Portable Rust distance engine.
+//! Portable Rust distance engine — the kernel contract.
 //!
-//! The scan is memory-bound (30 f32 per row); the implementation keeps the
-//! inner loop branch-light and lets LLVM auto-vectorize the fixed-stride
-//! accumulation. A 4-way unrolled accumulator breaks the fp dependence
-//! chain, which matters on the d=30/32 rows the paper's datasets use.
+//! The scan is memory-bound (30 f32 per row); every kernel here is a
+//! different way of feeding that stream through the same arithmetic. The
+//! engine runtime-dispatches between them via [`ScanKernel`], and the
+//! contract that makes dispatch safe is **reduction order**: a distance is
+//! always accumulated into four lanes (`s0..s3`, element `j` goes to lane
+//! `j % 4`), reduced as `(s0 + s1) + (s2 + s3)`, then the `n % 4` scalar
+//! tail is added. Any two kernels that implement that order produce
+//! bit-identical f32 results, so candidate ranking, top-K contents and
+//! comparison counts are invariant under dispatch.
 //!
-//! Two further levers on top of the scalar scan:
+//! Dispatch table (dim × ISA × guarantee):
 //!
-//! * **Fixed-dim specialization** — d = 30 and d = 32 (the paper's window
-//!   widths, plus the padded variant) dispatch to const-generic bodies
-//!   with compile-time trip counts, so LLVM fully unrolls and vectorizes
-//!   them. The arithmetic order is identical to the dynamic bodies, so
-//!   distances are bit-identical across the dispatch.
-//! * **Register-blocked query tiles** — `scan_batch`/`scan_batch_range`
-//!   process [`Q_TILE`] queries per data-row load: each 30-f32 row is
-//!   fetched from memory once per tile instead of once per query, which
-//!   is where batched throughput comes from on shards that exceed cache.
-//!   Per query, candidates are visited in the same order as the
-//!   single-query scan and distances use the same summation order, so
-//!   batched results are bit-identical to the sequential path.
+//! | kernel   | dims    | ISA (via `std::arch`)        | guarantee vs scalar    |
+//! |----------|---------|------------------------------|------------------------|
+//! | `Scalar` | 30 / 32 | none (const-generic bodies)  | identity (it IS scalar)|
+//! | `Scalar` | dynamic | none (4-accumulator unroll)  | identity               |
+//! | `Simd4`  | any     | SSE2 (x86_64), NEON (aarch64)| **bit-identical**      |
+//! | `Simd4`  | any     | other arches: scalar body    | bit-identical (trivial)|
+//! | `Simd8`  | any     | AVX2, `wide-simd` feature    | tolerance only (~1e-6) |
+//!
+//! * **Scalar** — the reference bodies. d = 30 and d = 32 (the paper's
+//!   window widths, plus the padded variant) dispatch to const-generic
+//!   twins with compile-time trip counts so LLVM fully unrolls them; the
+//!   accumulation order is identical, so the specializations are
+//!   bit-identical to the dynamic bodies.
+//! * **Simd4** — explicit 4-lane f32 kernels. SIMD lane `i` accumulates
+//!   exactly the element stream of scalar accumulator `s_i`, and the
+//!   horizontal reduction re-creates `(s0 + s1) + (s2 + s3)` in scalar
+//!   f32 adds, so results are bit-identical to `Scalar` — every parity
+//!   test in the repo doubles as a SIMD gate. SSE2/NEON are baseline on
+//!   their architectures: no feature detection is needed for `Simd4`.
+//! * **Simd8** — 8-lane AVX2 behind the opt-in `wide-simd` cargo feature.
+//!   Eight accumulators reduce as `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`
+//!   with an `n % 8` tail — a *different* reduction tree, so it is
+//!   tolerance-tested, never bit-gated, and never auto-selected by
+//!   [`ScanKernel::detect`]; opt in per engine with
+//!   [`NativeEngine::with_kernel`].
+//!
+//! Cosine kernels fuse dot and row-norm accumulation; both follow the
+//! same lane order (element `j` → lane `j % 4`), which is also what makes
+//! hoisting a row's norm out of the batched query tile ([`Q_TILE`]-wide
+//! register blocking) bit-identical to the fused single-query path.
 
 use crate::engine::{push_scored, DistanceEngine, Metric};
 use crate::knn::heap::TopK;
@@ -26,16 +49,92 @@ use crate::knn::heap::TopK;
 /// Queries processed per data-row load in the batched kernels.
 pub const Q_TILE: usize = 4;
 
-#[derive(Debug, Default, Clone)]
-pub struct NativeEngine;
+/// Which scan kernel a [`NativeEngine`] runs (see the module docs for the
+/// dim × ISA × guarantee table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanKernel {
+    /// Portable scalar bodies (4-accumulator unroll + fixed-dim
+    /// specializations). The reference everything else is gated against.
+    Scalar,
+    /// Explicit 4-lane f32 SIMD (SSE2 on x86_64, NEON on aarch64; the
+    /// scalar body elsewhere). Bit-identical to [`Scalar`] by
+    /// lane-to-accumulator mapping.
+    ///
+    /// [`Scalar`]: ScanKernel::Scalar
+    Simd4,
+    /// 8-lane AVX2 (opt-in `wide-simd` feature; requires runtime AVX2).
+    /// Different reduction tree — tolerance-grade, never auto-selected.
+    Simd8,
+}
 
-impl NativeEngine {
-    pub fn new() -> Self {
-        Self
+impl ScanKernel {
+    /// The kernel [`NativeEngine::new`] runs: `Simd4` where the 4-lane
+    /// ISA is architectural baseline (x86_64 SSE2, aarch64 NEON), else
+    /// `Scalar`. Never `Simd8` — the wide kernel is not bit-identical, so
+    /// it must be an explicit opt-in, not a detection result.
+    pub fn detect() -> ScanKernel {
+        if cfg!(any(target_arch = "x86_64", target_arch = "aarch64")) {
+            ScanKernel::Simd4
+        } else {
+            ScanKernel::Scalar
+        }
+    }
+
+    /// Can [`ScanKernel::Simd8`] run here? True only when the `wide-simd`
+    /// feature is compiled in AND the host reports AVX2 at runtime.
+    pub fn simd8_available() -> bool {
+        #[cfg(all(feature = "wide-simd", target_arch = "x86_64"))]
+        {
+            return std::arch::is_x86_feature_detected!("avx2");
+        }
+        #[allow(unreachable_code)]
+        false
     }
 }
 
-/// 4-accumulator L1 distance (dynamic length).
+#[derive(Debug, Clone)]
+pub struct NativeEngine {
+    kernel: ScanKernel,
+}
+
+impl NativeEngine {
+    /// Runtime-dispatched engine: [`ScanKernel::detect`] picks the widest
+    /// kernel that is still bit-identical to the scalar reference.
+    pub fn new() -> Self {
+        Self { kernel: ScanKernel::detect() }
+    }
+
+    /// An engine pinned to one kernel (ablation benches, parity tests).
+    ///
+    /// # Panics
+    /// If `kernel` is [`ScanKernel::Simd8`] and
+    /// [`ScanKernel::simd8_available`] is false — the wide kernel cannot
+    /// fall back silently without invalidating what an ablation measures.
+    pub fn with_kernel(kernel: ScanKernel) -> Self {
+        if kernel == ScanKernel::Simd8 {
+            assert!(
+                ScanKernel::simd8_available(),
+                "simd8 needs the wide-simd feature and runtime AVX2"
+            );
+        }
+        Self { kernel }
+    }
+
+    /// The kernel this engine dispatches to.
+    pub fn kernel(&self) -> ScanKernel {
+        self.kernel
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// 4-accumulator L1 distance (dynamic length). Element `j` accumulates
+/// into lane `j % 4`; reduction is `(s0 + s1) + (s2 + s3)` + scalar tail
+/// — the order every other L1 kernel must reproduce.
 #[inline]
 fn l1_unrolled(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
@@ -88,35 +187,99 @@ fn l1_dist_dispatch(a: &[f32], b: &[f32]) -> f32 {
     }
 }
 
-/// Fused dot/norm accumulation for cosine (dynamic length).
-#[inline]
-fn cosine_unrolled(a: &[f32], b: &[f32], a_norm2: f32) -> f32 {
-    let mut dot = 0.0f32;
-    let mut nb = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        dot += x * y;
-        nb += y * y;
-    }
-    if a_norm2 == 0.0 || nb == 0.0 {
+/// Final cosine expression shared by every cosine kernel (fused and
+/// norm-precomputed): identical text ⇒ identical bits once `dot` and the
+/// norms match. Zero vectors are at distance 1 from everything.
+#[inline(always)]
+fn cosine_finish(dot: f32, a_norm2: f32, b_norm2: f32) -> f32 {
+    if a_norm2 == 0.0 || b_norm2 == 0.0 {
         return 1.0;
     }
-    1.0 - dot / (a_norm2.sqrt() * nb.sqrt())
+    1.0 - dot / (a_norm2.sqrt() * b_norm2.sqrt())
+}
+
+/// Fused 4-wide dot + row-norm accumulation (dynamic length): element `j`
+/// feeds dot lane `j % 4` and norm lane `j % 4`; each quad reduces
+/// `(x0 + x1) + (x2 + x3)` + scalar tail. This order defines the SIMD
+/// cosine lane mapping.
+#[inline]
+fn dot_nb_unrolled(a: &[f32], b: &[f32]) -> (f32, f32) {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut d0, mut d1, mut d2, mut d3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut n0, mut n1, mut n2, mut n3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        d0 += a[j] * b[j];
+        n0 += b[j] * b[j];
+        d1 += a[j + 1] * b[j + 1];
+        n1 += b[j + 1] * b[j + 1];
+        d2 += a[j + 2] * b[j + 2];
+        n2 += b[j + 2] * b[j + 2];
+        d3 += a[j + 3] * b[j + 3];
+        n3 += b[j + 3] * b[j + 3];
+    }
+    let (mut dt, mut nt) = (0.0f32, 0.0f32);
+    for j in chunks * 4..n {
+        dt += a[j] * b[j];
+        nt += b[j] * b[j];
+    }
+    ((d0 + d1) + (d2 + d3) + dt, (n0 + n1) + (n2 + n3) + nt)
+}
+
+/// 4-wide dot product only (dynamic length) — the norm-precomputed cosine
+/// path. Same lane order and reduction as [`dot_nb_unrolled`]'s dot.
+#[inline]
+fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut d0, mut d1, mut d2, mut d3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        d0 += a[j] * b[j];
+        d1 += a[j + 1] * b[j + 1];
+        d2 += a[j + 2] * b[j + 2];
+        d3 += a[j + 3] * b[j + 3];
+    }
+    let mut dt = 0.0f32;
+    for j in chunks * 4..n {
+        dt += a[j] * b[j];
+    }
+    (d0 + d1) + (d2 + d3) + dt
+}
+
+/// Fused 4-wide cosine (dynamic length) — [`dot_nb_unrolled`] plus the
+/// shared [`cosine_finish`].
+#[inline]
+fn cosine_unrolled(a: &[f32], b: &[f32], a_norm2: f32) -> f32 {
+    let (dot, nb) = dot_nb_unrolled(a, b);
+    cosine_finish(dot, a_norm2, nb)
 }
 
 /// Const-length twin of [`cosine_unrolled`] — identical accumulation
 /// order, bit-identical result.
 #[inline(always)]
 fn cosine_fixed<const D: usize>(a: &[f32; D], b: &[f32; D], a_norm2: f32) -> f32 {
-    let mut dot = 0.0f32;
-    let mut nb = 0.0f32;
-    for j in 0..D {
-        dot += a[j] * b[j];
-        nb += b[j] * b[j];
+    let chunks = D / 4;
+    let (mut d0, mut d1, mut d2, mut d3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut n0, mut n1, mut n2, mut n3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        d0 += a[j] * b[j];
+        n0 += b[j] * b[j];
+        d1 += a[j + 1] * b[j + 1];
+        n1 += b[j + 1] * b[j + 1];
+        d2 += a[j + 2] * b[j + 2];
+        n2 += b[j + 2] * b[j + 2];
+        d3 += a[j + 3] * b[j + 3];
+        n3 += b[j + 3] * b[j + 3];
     }
-    if a_norm2 == 0.0 || nb == 0.0 {
-        return 1.0;
+    let (mut dt, mut nt) = (0.0f32, 0.0f32);
+    for j in chunks * 4..D {
+        dt += a[j] * b[j];
+        nt += b[j] * b[j];
     }
-    1.0 - dot / (a_norm2.sqrt() * nb.sqrt())
+    cosine_finish((d0 + d1) + (d2 + d3) + dt, a_norm2, (n0 + n1) + (n2 + n3) + nt)
 }
 
 #[inline(always)]
@@ -128,45 +291,40 @@ fn cosine_dist_dispatch(a: &[f32], b: &[f32], a_norm2: f32) -> f32 {
     }
 }
 
-/// Squared norm accumulated in index order — the exact order the fused
-/// kernels accumulate their `nb` term, so hoisting a row's norm out of
-/// the query tile is bit-identical.
+/// Squared norm in the exact lane order the fused kernels accumulate
+/// their `nb` term (it IS [`dot_unrolled`]`(b, b)`), so hoisting a row's
+/// norm out of the query tile is bit-identical.
 #[inline(always)]
 fn norm2(b: &[f32]) -> f32 {
-    let mut nb = 0.0f32;
-    for y in b {
-        nb += y * y;
-    }
-    nb
+    dot_unrolled(b, b)
 }
 
 /// Cosine with BOTH norms precomputed; the dot product uses the same
-/// index-order accumulation as the fused kernels and the final
-/// expression is unchanged, so the result is bit-identical to
+/// lane-order accumulation as the fused kernels and the final expression
+/// is shared ([`cosine_finish`]), so the result is bit-identical to
 /// [`cosine_dist_dispatch`] — while each row's norm is computed once per
 /// row load instead of once per (query, row) pair.
 #[inline(always)]
 fn cosine_pre(a: &[f32], b: &[f32], a_norm2: f32, b_norm2: f32) -> f32 {
-    let mut dot = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        dot += x * y;
-    }
-    if a_norm2 == 0.0 || b_norm2 == 0.0 {
-        return 1.0;
-    }
-    1.0 - dot / (a_norm2.sqrt() * b_norm2.sqrt())
+    cosine_finish(dot_unrolled(a, b), a_norm2, b_norm2)
 }
 
 #[inline(always)]
 fn cosine_pre_fixed<const D: usize>(a: &[f32; D], b: &[f32; D], a_norm2: f32, b_norm2: f32) -> f32 {
-    let mut dot = 0.0f32;
-    for j in 0..D {
-        dot += a[j] * b[j];
+    let chunks = D / 4;
+    let (mut d0, mut d1, mut d2, mut d3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        d0 += a[j] * b[j];
+        d1 += a[j + 1] * b[j + 1];
+        d2 += a[j + 2] * b[j + 2];
+        d3 += a[j + 3] * b[j + 3];
     }
-    if a_norm2 == 0.0 || b_norm2 == 0.0 {
-        return 1.0;
+    let mut dt = 0.0f32;
+    for j in chunks * 4..D {
+        dt += a[j] * b[j];
     }
-    1.0 - dot / (a_norm2.sqrt() * b_norm2.sqrt())
+    cosine_finish((d0 + d1) + (d2 + d3) + dt, a_norm2, b_norm2)
 }
 
 #[inline(always)]
@@ -178,6 +336,383 @@ fn cosine_pre_dispatch(a: &[f32], b: &[f32], a_norm2: f32, b_norm2: f32) -> f32 
     }
 }
 
+/// Explicit 4-lane SSE2 kernels. SSE2 is part of the x86_64 baseline, so
+/// no runtime detection is needed. Lane `i` of the vector accumulator
+/// carries exactly scalar accumulator `s_i` (same elements, same add
+/// sequence — IEEE f32 ops are deterministic per lane), and the
+/// horizontal reduction re-creates `(s0 + s1) + (s2 + s3)` in scalar
+/// adds, so every result is bit-identical to the scalar bodies.
+#[cfg(target_arch = "x86_64")]
+mod simd4 {
+    use std::arch::x86_64::*;
+
+    /// Reduce in the scalar order `(s0 + s1) + (s2 + s3)`.
+    #[inline(always)]
+    fn reduce(v: __m128) -> f32 {
+        let mut s = [0.0f32; 4];
+        // SAFETY: SSE2 is baseline on x86_64; the store fills 4 floats.
+        unsafe { _mm_storeu_ps(s.as_mut_ptr(), v) };
+        (s[0] + s[1]) + (s[2] + s[3])
+    }
+
+    pub fn l1(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        // SAFETY: SSE2 is baseline; unaligned loads stay within
+        // `chunks * 4 <= n` elements of both slices.
+        let quads = unsafe {
+            let sign = _mm_set1_ps(-0.0);
+            let mut acc = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i * 4));
+                // |x| = clear the sign bit — exactly f32::abs.
+                acc = _mm_add_ps(acc, _mm_andnot_ps(sign, _mm_sub_ps(va, vb)));
+            }
+            acc
+        };
+        let mut tail = 0.0f32;
+        for j in chunks * 4..n {
+            tail += (a[j] - b[j]).abs();
+        }
+        reduce(quads) + tail
+    }
+
+    pub fn dot_nb(a: &[f32], b: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        // SAFETY: as in `l1`. Separate mul + add (never FMA) matches the
+        // scalar two-op rounding exactly.
+        let (dq, nq) = unsafe {
+            let mut dot = _mm_setzero_ps();
+            let mut nb = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i * 4));
+                dot = _mm_add_ps(dot, _mm_mul_ps(va, vb));
+                nb = _mm_add_ps(nb, _mm_mul_ps(vb, vb));
+            }
+            (dot, nb)
+        };
+        let (mut dt, mut nt) = (0.0f32, 0.0f32);
+        for j in chunks * 4..n {
+            dt += a[j] * b[j];
+            nt += b[j] * b[j];
+        }
+        (reduce(dq) + dt, reduce(nq) + nt)
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        // SAFETY: as in `l1`.
+        let dq = unsafe {
+            let mut acc = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i * 4));
+                acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+            }
+            acc
+        };
+        let mut dt = 0.0f32;
+        for j in chunks * 4..n {
+            dt += a[j] * b[j];
+        }
+        reduce(dq) + dt
+    }
+
+    pub fn norm2(b: &[f32]) -> f32 {
+        dot(b, b)
+    }
+}
+
+/// Explicit 4-lane NEON kernels (aarch64 baseline). Same lane mapping and
+/// reduction order as the SSE2 module — see its docs.
+#[cfg(target_arch = "aarch64")]
+mod simd4 {
+    use std::arch::aarch64::*;
+
+    /// Reduce in the scalar order `(s0 + s1) + (s2 + s3)`.
+    #[inline(always)]
+    fn reduce(v: float32x4_t) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        let (s0, s1, s2, s3) = unsafe {
+            (
+                vgetq_lane_f32::<0>(v),
+                vgetq_lane_f32::<1>(v),
+                vgetq_lane_f32::<2>(v),
+                vgetq_lane_f32::<3>(v),
+            )
+        };
+        (s0 + s1) + (s2 + s3)
+    }
+
+    pub fn l1(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        // SAFETY: NEON is baseline; loads stay within `chunks * 4 <= n`
+        // elements. FABS after FSUB (not FABD) so per-lane rounding and
+        // NaN handling match the scalar `(x - y).abs()` bit for bit.
+        let quads = unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let va = vld1q_f32(a.as_ptr().add(i * 4));
+                let vb = vld1q_f32(b.as_ptr().add(i * 4));
+                acc = vaddq_f32(acc, vabsq_f32(vsubq_f32(va, vb)));
+            }
+            acc
+        };
+        let mut tail = 0.0f32;
+        for j in chunks * 4..n {
+            tail += (a[j] - b[j]).abs();
+        }
+        reduce(quads) + tail
+    }
+
+    pub fn dot_nb(a: &[f32], b: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        // SAFETY: as in `l1`. Separate FMUL + FADD (never FMLA) matches
+        // the scalar two-op rounding exactly.
+        let (dq, nq) = unsafe {
+            let mut dot = vdupq_n_f32(0.0);
+            let mut nb = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let va = vld1q_f32(a.as_ptr().add(i * 4));
+                let vb = vld1q_f32(b.as_ptr().add(i * 4));
+                dot = vaddq_f32(dot, vmulq_f32(va, vb));
+                nb = vaddq_f32(nb, vmulq_f32(vb, vb));
+            }
+            (dot, nb)
+        };
+        let (mut dt, mut nt) = (0.0f32, 0.0f32);
+        for j in chunks * 4..n {
+            dt += a[j] * b[j];
+            nt += b[j] * b[j];
+        }
+        (reduce(dq) + dt, reduce(nq) + nt)
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        // SAFETY: as in `l1`.
+        let dq = unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let va = vld1q_f32(a.as_ptr().add(i * 4));
+                let vb = vld1q_f32(b.as_ptr().add(i * 4));
+                acc = vaddq_f32(acc, vmulq_f32(va, vb));
+            }
+            acc
+        };
+        let mut dt = 0.0f32;
+        for j in chunks * 4..n {
+            dt += a[j] * b[j];
+        }
+        reduce(dq) + dt
+    }
+
+    pub fn norm2(b: &[f32]) -> f32 {
+        dot(b, b)
+    }
+}
+
+/// Scalar stand-ins for architectures without a 4-lane `std::arch` path.
+/// [`ScanKernel::detect`] returns `Scalar` here, but a pinned `Simd4`
+/// engine still honors the bit-identity contract trivially: the "simd4"
+/// kernel IS the scalar body.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod simd4 {
+    pub fn l1(a: &[f32], b: &[f32]) -> f32 {
+        super::l1_unrolled(a, b)
+    }
+
+    pub fn dot_nb(a: &[f32], b: &[f32]) -> (f32, f32) {
+        super::dot_nb_unrolled(a, b)
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        super::dot_unrolled(a, b)
+    }
+
+    pub fn norm2(b: &[f32]) -> f32 {
+        super::norm2(b)
+    }
+}
+
+/// 8-lane AVX2 kernels (opt-in `wide-simd` feature). Reduction order is
+/// `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))` + an `n % 8` scalar tail — a
+/// different tree than the scalar contract, so these are tolerance-grade.
+///
+/// SAFETY contract for the whole module: callers reach these only through
+/// [`ScanKernel::Simd8`], which [`NativeEngine::with_kernel`] refuses to
+/// construct unless `is_x86_feature_detected!("avx2")` held.
+#[cfg(all(feature = "wide-simd", target_arch = "x86_64"))]
+mod simd8 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce(v: __m256) -> f32 {
+        let mut s = [0.0f32; 8];
+        _mm256_storeu_ps(s.as_mut_ptr(), v);
+        ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn l1_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
+            acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_sub_ps(va, vb)));
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * 8..n {
+            tail += (a[j] - b[j]).abs();
+        }
+        reduce(acc) + tail
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_nb_avx2(a: &[f32], b: &[f32]) -> (f32, f32) {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut dot = _mm256_setzero_ps();
+        let mut nb = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
+            dot = _mm256_add_ps(dot, _mm256_mul_ps(va, vb));
+            nb = _mm256_add_ps(nb, _mm256_mul_ps(vb, vb));
+        }
+        let (mut dt, mut nt) = (0.0f32, 0.0f32);
+        for j in chunks * 8..n {
+            dt += a[j] * b[j];
+            nt += b[j] * b[j];
+        }
+        (reduce(dot) + dt, reduce(nb) + nt)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut dt = 0.0f32;
+        for j in chunks * 8..n {
+            dt += a[j] * b[j];
+        }
+        reduce(acc) + dt
+    }
+
+    pub fn l1(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: module contract — Simd8 implies AVX2 was detected.
+        unsafe { l1_avx2(a, b) }
+    }
+
+    pub fn dot_nb(a: &[f32], b: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: module contract — Simd8 implies AVX2 was detected.
+        unsafe { dot_nb_avx2(a, b) }
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: module contract — Simd8 implies AVX2 was detected.
+        unsafe { dot_avx2(a, b) }
+    }
+
+    pub fn norm2(b: &[f32]) -> f32 {
+        dot(b, b)
+    }
+}
+
+/// Without the `wide-simd` feature (or off x86_64), `ScanKernel::Simd8`
+/// is unconstructible — [`NativeEngine::with_kernel`] panics first — but
+/// the dispatch arms still have to compile, so delegate to simd4.
+#[cfg(not(all(feature = "wide-simd", target_arch = "x86_64")))]
+mod simd8 {
+    pub fn l1(a: &[f32], b: &[f32]) -> f32 {
+        super::simd4::l1(a, b)
+    }
+
+    pub fn dot_nb(a: &[f32], b: &[f32]) -> (f32, f32) {
+        super::simd4::dot_nb(a, b)
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        super::simd4::dot(a, b)
+    }
+
+    pub fn norm2(b: &[f32]) -> f32 {
+        super::simd4::norm2(b)
+    }
+}
+
+/// Kernel-dispatched L1 row distance.
+#[inline(always)]
+fn l1_row(k: ScanKernel, a: &[f32], b: &[f32]) -> f32 {
+    match k {
+        ScanKernel::Scalar => l1_dist_dispatch(a, b),
+        ScanKernel::Simd4 => simd4::l1(a, b),
+        ScanKernel::Simd8 => simd8::l1(a, b),
+    }
+}
+
+/// Kernel-dispatched fused cosine (row norm accumulated in-kernel).
+#[inline(always)]
+fn cosine_row(k: ScanKernel, a: &[f32], b: &[f32], a_norm2: f32) -> f32 {
+    match k {
+        ScanKernel::Scalar => cosine_dist_dispatch(a, b, a_norm2),
+        ScanKernel::Simd4 => {
+            let (dot, nb) = simd4::dot_nb(a, b);
+            cosine_finish(dot, a_norm2, nb)
+        }
+        ScanKernel::Simd8 => {
+            let (dot, nb) = simd8::dot_nb(a, b);
+            cosine_finish(dot, a_norm2, nb)
+        }
+    }
+}
+
+/// Kernel-dispatched cosine with both norms precomputed (batched tiles).
+#[inline(always)]
+fn cosine_pre_row(k: ScanKernel, a: &[f32], b: &[f32], a_norm2: f32, b_norm2: f32) -> f32 {
+    match k {
+        ScanKernel::Scalar => cosine_pre_dispatch(a, b, a_norm2, b_norm2),
+        ScanKernel::Simd4 => cosine_finish(simd4::dot(a, b), a_norm2, b_norm2),
+        ScanKernel::Simd8 => cosine_finish(simd8::dot(a, b), a_norm2, b_norm2),
+    }
+}
+
+/// Kernel-dispatched row norm — MUST accumulate in the same order as the
+/// matching kernel's fused `nb` term (hoisting invariance).
+#[inline(always)]
+fn row_norm2(k: ScanKernel, b: &[f32]) -> f32 {
+    match k {
+        ScanKernel::Scalar => norm2(b),
+        ScanKernel::Simd4 => simd4::norm2(b),
+        ScanKernel::Simd8 => simd8::norm2(b),
+    }
+}
+
 #[inline(always)]
 fn row_of(data: &[f32], id: u32, dim: usize) -> &[f32] {
     &data[id as usize * dim..id as usize * dim + dim]
@@ -186,9 +721,12 @@ fn row_of(data: &[f32], id: u32, dim: usize) -> &[f32] {
 impl NativeEngine {
     /// Shared body of the batched kernels: `next_id` yields candidate row
     /// ids in scan order; every query in the tile scores each row as it
-    /// is loaded.
+    /// is loaded. Distances go through the engine's dispatched kernel —
+    /// same kernel as the sequential path, so batched results stay
+    /// bit-identical to it.
     #[inline(always)]
     fn batch_tiles<I>(
+        &self,
         metric: Metric,
         qs: &[f32],
         data: &[f32],
@@ -202,6 +740,7 @@ impl NativeEngine {
     {
         let nq = topks.len();
         debug_assert_eq!(qs.len(), nq * dim);
+        let k = self.kernel;
         match metric {
             Metric::L1 => {
                 let mut qi = 0usize;
@@ -212,7 +751,7 @@ impl NativeEngine {
                         let row = row_of(data, id, dim);
                         for t in 0..tile {
                             let q = &tile_qs[t * dim..(t + 1) * dim];
-                            let d = l1_dist_dispatch(q, row);
+                            let d = l1_row(k, q, row);
                             push_scored(&mut topks[qi + t], id_base, id, d, labels);
                         }
                     }
@@ -220,7 +759,9 @@ impl NativeEngine {
                 }
             }
             Metric::Cosine => {
-                // Per-query squared norms, computed once per batch.
+                // Per-query squared norms, computed once per batch (plain
+                // sequential sum — the exact expression the sequential
+                // scan uses for its query norm, kernel-independent).
                 let norms: Vec<f32> = (0..nq)
                     .map(|i| qs[i * dim..(i + 1) * dim].iter().map(|x| x * x).sum())
                     .collect();
@@ -231,11 +772,12 @@ impl NativeEngine {
                     for id in ids.clone() {
                         let row = row_of(data, id, dim);
                         // Row norm hoisted out of the tile: computed once
-                        // per row load instead of once per query.
-                        let row_n2 = norm2(row);
+                        // per row load instead of once per query, in the
+                        // kernel's own `nb` accumulation order.
+                        let row_n2 = row_norm2(k, row);
                         for t in 0..tile {
                             let q = &tile_qs[t * dim..(t + 1) * dim];
-                            let d = cosine_pre_dispatch(q, row, norms[qi + t], row_n2);
+                            let d = cosine_pre_row(k, q, row, norms[qi + t], row_n2);
                             push_scored(&mut topks[qi + t], id_base, id, d, labels);
                         }
                     }
@@ -262,17 +804,18 @@ impl DistanceEngine for NativeEngine {
         id_base: u64,
         topk: &mut TopK,
     ) -> u64 {
+        let k = self.kernel;
         match metric {
             Metric::L1 => {
                 for &id in ids {
-                    let d = l1_dist_dispatch(q, row_of(data, id, dim));
+                    let d = l1_row(k, q, row_of(data, id, dim));
                     push_scored(topk, id_base, id, d, labels);
                 }
             }
             Metric::Cosine => {
                 let qn: f32 = q.iter().map(|x| x * x).sum();
                 for &id in ids {
-                    let d = cosine_dist_dispatch(q, row_of(data, id, dim), qn);
+                    let d = cosine_row(k, q, row_of(data, id, dim), qn);
                     push_scored(topk, id_base, id, d, labels);
                 }
             }
@@ -291,18 +834,19 @@ impl DistanceEngine for NativeEngine {
         id_base: u64,
         topk: &mut TopK,
     ) -> u64 {
+        let k = self.kernel;
         let count = (range.end - range.start) as u64;
         match metric {
             Metric::L1 => {
                 for id in range {
-                    let d = l1_dist_dispatch(q, row_of(data, id, dim));
+                    let d = l1_row(k, q, row_of(data, id, dim));
                     push_scored(topk, id_base, id, d, labels);
                 }
             }
             Metric::Cosine => {
                 let qn: f32 = q.iter().map(|x| x * x).sum();
                 for id in range {
-                    let d = cosine_dist_dispatch(q, row_of(data, id, dim), qn);
+                    let d = cosine_row(k, q, row_of(data, id, dim), qn);
                     push_scored(topk, id_base, id, d, labels);
                 }
             }
@@ -321,7 +865,7 @@ impl DistanceEngine for NativeEngine {
         id_base: u64,
         topks: &mut [TopK],
     ) -> u64 {
-        Self::batch_tiles(metric, qs, data, dim, ids.iter().copied(), labels, id_base, topks);
+        self.batch_tiles(metric, qs, data, dim, ids.iter().copied(), labels, id_base, topks);
         (topks.len() * ids.len()) as u64
     }
 
@@ -337,7 +881,7 @@ impl DistanceEngine for NativeEngine {
         topks: &mut [TopK],
     ) -> u64 {
         let count = (range.end - range.start) as u64;
-        Self::batch_tiles(metric, qs, data, dim, range, labels, id_base, topks);
+        self.batch_tiles(metric, qs, data, dim, range, labels, id_base, topks);
         count * topks.len() as u64
     }
 }
@@ -372,6 +916,95 @@ mod tests {
     }
 
     #[test]
+    fn tail_dims_property_against_naive_reference() {
+        // d ∈ {1, 3, 29, 31, 33, 37}: dims that exercise every remainder
+        // class around the paper's widths. The unrolled scalar bodies
+        // (which gate the SIMD remainder loops bit-for-bit) must agree
+        // with the naive sequential oracle within reassociation
+        // tolerance, on many random draws.
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for dim in [1usize, 3, 29, 31, 33, 37] {
+            for _ in 0..300 {
+                let a: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-80.0, 180.0) as f32).collect();
+                let b: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-80.0, 180.0) as f32).collect();
+                let l1 = l1_unrolled(&a, &b);
+                let l1_ref = l1_dist(&a, &b);
+                assert!(
+                    (l1 - l1_ref).abs() <= 1e-4 * (1.0 + l1_ref.abs()),
+                    "l1 dim={dim}: {l1} vs {l1_ref}"
+                );
+                let an: f32 = a.iter().map(|x| x * x).sum();
+                let c = cosine_unrolled(&a, &b, an);
+                let c_ref = cosine_dist(&a, &b);
+                assert!((c - c_ref).abs() < 1e-5, "cosine dim={dim}: {c} vs {c_ref}");
+                // The norm-precomputed split agrees with the fused body
+                // exactly at tail dims too.
+                assert_eq!(cosine_pre(&a, &b, an, norm2(&b)), c, "pre dim={dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd4_kernels_bit_identical_to_scalar_for_every_dim() {
+        // Exhaustive d = 1..=67: covers both fixed-dim specializations,
+        // every remainder class, and sub-quad lengths. On x86_64/aarch64
+        // this gates the real SIMD kernels; elsewhere it is trivially the
+        // scalar body (the fallback delegates).
+        let mut rng = Xoshiro256::seed_from_u64(91);
+        for dim in 1usize..=67 {
+            for _ in 0..20 {
+                let a: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-50.0, 150.0) as f32).collect();
+                let b: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-50.0, 150.0) as f32).collect();
+                assert_eq!(simd4::l1(&a, &b), l1_dist_dispatch(&a, &b), "l1 dim={dim}");
+                let (dot, nb) = simd4::dot_nb(&a, &b);
+                let (sdot, snb) = dot_nb_unrolled(&a, &b);
+                assert_eq!(dot, sdot, "dot dim={dim}");
+                assert_eq!(nb, snb, "nb dim={dim}");
+                assert_eq!(simd4::dot(&a, &b), dot_unrolled(&a, &b), "pre-dot dim={dim}");
+                assert_eq!(simd4::norm2(&b), norm2(&b), "norm2 dim={dim}");
+                let an: f32 = a.iter().map(|x| x * x).sum();
+                assert_eq!(
+                    cosine_row(ScanKernel::Simd4, &a, &b, an),
+                    cosine_dist_dispatch(&a, &b, an),
+                    "cosine dim={dim}"
+                );
+            }
+        }
+        // Zero-vector guards behave identically through the SIMD arms.
+        let z = vec![0.0f32; 31];
+        let x = vec![1.0f32; 31];
+        let xn: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(cosine_row(ScanKernel::Simd4, &x, &z, xn), 1.0);
+        assert_eq!(cosine_row(ScanKernel::Simd4, &z, &x, 0.0), 1.0);
+    }
+
+    #[cfg(feature = "wide-simd")]
+    #[test]
+    fn simd8_within_tolerance_of_scalar() {
+        if !ScanKernel::simd8_available() {
+            eprintln!("skipping simd8 tolerance test: AVX2 not detected on this host");
+            return;
+        }
+        let mut rng = Xoshiro256::seed_from_u64(93);
+        for dim in [8usize, 29, 30, 32, 37, 64, 67] {
+            for _ in 0..50 {
+                let a: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-50.0, 150.0) as f32).collect();
+                let b: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-50.0, 150.0) as f32).collect();
+                let l1s = l1_dist_dispatch(&a, &b);
+                let l1w = simd8::l1(&a, &b);
+                assert!(
+                    (l1w - l1s).abs() <= 1e-5 * (1.0 + l1s.abs()),
+                    "l1 dim={dim}: {l1w} vs {l1s}"
+                );
+                let an: f32 = a.iter().map(|x| x * x).sum();
+                let cs = cosine_dist_dispatch(&a, &b, an);
+                let cw = cosine_row(ScanKernel::Simd8, &a, &b, an);
+                assert!((cw - cs).abs() < 1e-5, "cosine dim={dim}: {cw} vs {cs}");
+            }
+        }
+    }
+
+    #[test]
     fn hoisted_row_norm_cosine_is_bit_identical() {
         // cosine_pre_dispatch(q, row, qn, norm2(row)) must equal the fused
         // cosine_dist_dispatch(q, row, qn) to the last bit, for both the
@@ -386,6 +1019,12 @@ mod tests {
                     cosine_pre_dispatch(&a, &b, an, norm2(&b)),
                     cosine_dist_dispatch(&a, &b, an),
                     "dim={dim}"
+                );
+                // Same invariance through the simd4 dispatch arms.
+                assert_eq!(
+                    cosine_pre_row(ScanKernel::Simd4, &a, &b, an, row_norm2(ScanKernel::Simd4, &b)),
+                    cosine_row(ScanKernel::Simd4, &a, &b, an),
+                    "simd4 dim={dim}"
                 );
             }
         }
@@ -415,6 +1054,48 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn engine_dispatch_is_bit_identical_scalar_vs_simd4() {
+        // The engine-level gate: a default (runtime-dispatched) engine, a
+        // pinned simd4 engine and a pinned scalar engine must agree bit
+        // for bit on scan and scan_batch, both metrics, mixed dims.
+        let scalar = NativeEngine::with_kernel(ScanKernel::Scalar);
+        let simd = NativeEngine::with_kernel(ScanKernel::Simd4);
+        let auto = NativeEngine::new();
+        for dim in [13usize, 30, 31, 32] {
+            let (data, labels, q) = fixture(240, dim, 42);
+            let ids: Vec<u32> = (0..240).step_by(2).map(|i| i as u32).collect();
+            for metric in [Metric::L1, Metric::Cosine] {
+                let mut want = TopK::new(8);
+                scalar.scan(metric, &q, &data, dim, &ids, &labels, 5, &mut want);
+                let want = want.into_sorted();
+                for eng in [&simd, &auto] {
+                    let mut got = TopK::new(8);
+                    eng.scan(metric, &q, &data, dim, &ids, &labels, 5, &mut got);
+                    assert_eq!(got.into_sorted(), want, "dim={dim} metric={metric:?}");
+                }
+                let qs: Vec<f32> = q.iter().chain(q.iter()).chain(q.iter()).copied().collect();
+                let mut want_b: Vec<TopK> = (0..3).map(|_| TopK::new(8)).collect();
+                scalar.scan_batch(metric, &qs, &data, dim, &ids, &labels, 5, &mut want_b);
+                let mut got_b: Vec<TopK> = (0..3).map(|_| TopK::new(8)).collect();
+                simd.scan_batch(metric, &qs, &data, dim, &ids, &labels, 5, &mut got_b);
+                for (w, g) in want_b.into_iter().zip(got_b) {
+                    assert_eq!(g.into_sorted(), w.into_sorted(), "batch dim={dim}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_detection_and_pinning() {
+        assert_eq!(NativeEngine::new().kernel(), ScanKernel::detect());
+        assert_eq!(NativeEngine::default().kernel(), ScanKernel::detect());
+        assert_ne!(ScanKernel::detect(), ScanKernel::Simd8, "wide kernel is opt-in only");
+        assert_eq!(NativeEngine::with_kernel(ScanKernel::Scalar).kernel(), ScanKernel::Scalar);
+        #[cfg(not(feature = "wide-simd"))]
+        assert!(!ScanKernel::simd8_available(), "simd8 requires the wide-simd feature");
     }
 
     #[test]

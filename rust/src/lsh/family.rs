@@ -19,8 +19,16 @@
 //! reconstructs bit-identical instances — the paper's "the same hash
 //! family instances need to be used" requirement without shipping the
 //! function tables.
+//!
+//! Hash evaluation is **bit-packed**: each predicate writes its bit
+//! straight into the key's `u64` words with a branch-free shift/mask
+//! (`words[i >> 6] |= u64::from(pred) << (i & 63)`) — the gaoya-style
+//! simhash packing — instead of walking a per-bit builder. The layout is
+//! exactly [`PackedKey::from_bits`]'s (bit `i` → word `i / 64`, position
+//! `i % 64`), so packed keys are bucket-identical to bit-pushed ones;
+//! [`PackedKey::from_words`] seals words into a digested key.
 
-use crate::lsh::key::{KeyBuilder, PackedKey, MAX_BITS};
+use crate::lsh::key::{PackedKey, MAX_BITS};
 use crate::util::rng::Xoshiro256;
 
 /// Queries hashed per pass of the batched hashers: small enough for the
@@ -94,32 +102,36 @@ impl ComposedHash for BitSamplingL1 {
         self.coords.len()
     }
 
+    /// Packed evaluation: each threshold predicate ORs its bit into the
+    /// key words branch-free — no per-bit builder state, no branches on
+    /// the predicate outcome.
     #[inline]
     fn hash(&self, x: &[f32]) -> PackedKey {
-        let mut kb = KeyBuilder::new();
-        for (&c, &t) in self.coords.iter().zip(&self.thresholds) {
-            kb.push(x[c as usize] >= t);
+        let mut words = [0u64; 4];
+        for (i, (&c, &t)) in self.coords.iter().zip(&self.thresholds).enumerate() {
+            words[i >> 6] |= u64::from(x[c as usize] >= t) << (i & 63);
         }
-        kb.finish()
+        PackedKey::from_words(words)
     }
 
     /// Batched: the (coord, threshold) arrays are walked ONCE per tile of
     /// [`HASH_TILE`] queries instead of once per query, so the bit-sampling
-    /// parameters stay in cache while every query consumes them.
+    /// parameters stay in cache while every query packs its own key words.
     fn hash_batch(&self, xs: &[f32], dim: usize, out: &mut Vec<PackedKey>) {
         debug_assert!(dim > 0 && xs.len() % dim == 0);
         let nq = xs.len() / dim;
         let mut qi = 0usize;
         while qi < nq {
             let tile = (nq - qi).min(HASH_TILE);
-            let mut kbs: [KeyBuilder; HASH_TILE] = std::array::from_fn(|_| KeyBuilder::new());
-            for (&c, &t) in self.coords.iter().zip(&self.thresholds) {
-                for (ti, kb) in kbs[..tile].iter_mut().enumerate() {
-                    kb.push(xs[(qi + ti) * dim + c as usize] >= t);
+            let mut words = [[0u64; 4]; HASH_TILE];
+            for (i, (&c, &t)) in self.coords.iter().zip(&self.thresholds).enumerate() {
+                let (w, s) = (i >> 6, i & 63);
+                for (ti, kw) in words[..tile].iter_mut().enumerate() {
+                    kw[w] |= u64::from(xs[(qi + ti) * dim + c as usize] >= t) << s;
                 }
             }
-            for kb in &kbs[..tile] {
-                out.push(kb.finish());
+            for kw in &words[..tile] {
+                out.push(PackedKey::from_words(*kw));
             }
             qi += tile;
         }
@@ -159,18 +171,21 @@ impl ComposedHash for RandomProjection {
         self.m
     }
 
+    /// Packed evaluation: each sign bit is ORed into the key words
+    /// branch-free (dot accumulation order unchanged, so keys match the
+    /// historical builder path bit for bit).
     #[inline]
     fn hash(&self, x: &[f32]) -> PackedKey {
         debug_assert_eq!(x.len(), self.dim);
-        let mut kb = KeyBuilder::new();
-        for row in self.dirs.chunks_exact(self.dim) {
+        let mut words = [0u64; 4];
+        for (i, row) in self.dirs.chunks_exact(self.dim).enumerate() {
             let mut dot = 0.0f32;
             for (a, b) in row.iter().zip(x) {
                 dot += a * b;
             }
-            kb.push(dot >= 0.0);
+            words[i >> 6] |= u64::from(dot >= 0.0) << (i & 63);
         }
-        kb.finish()
+        PackedKey::from_words(words)
     }
 
     /// Batched: each Gaussian direction row is loaded once per tile of
@@ -186,19 +201,20 @@ impl ComposedHash for RandomProjection {
         let mut qi = 0usize;
         while qi < nq {
             let tile = (nq - qi).min(HASH_TILE);
-            let mut kbs: [KeyBuilder; HASH_TILE] = std::array::from_fn(|_| KeyBuilder::new());
-            for row in self.dirs.chunks_exact(self.dim) {
-                for (ti, kb) in kbs[..tile].iter_mut().enumerate() {
+            let mut words = [[0u64; 4]; HASH_TILE];
+            for (i, row) in self.dirs.chunks_exact(self.dim).enumerate() {
+                let (w, s) = (i >> 6, i & 63);
+                for (ti, kw) in words[..tile].iter_mut().enumerate() {
                     let x = &xs[(qi + ti) * dim..(qi + ti) * dim + dim];
                     let mut dot = 0.0f32;
                     for (a, b) in row.iter().zip(x) {
                         dot += a * b;
                     }
-                    kb.push(dot >= 0.0);
+                    kw[w] |= u64::from(dot >= 0.0) << s;
                 }
             }
-            for kb in &kbs[..tile] {
-                out.push(kb.finish());
+            for kw in &words[..tile] {
+                out.push(PackedKey::from_words(*kw));
             }
             qi += tile;
         }
@@ -408,6 +424,39 @@ mod tests {
                     assert_eq!(*key, single, "nq={nq} qi={qi}");
                     assert_eq!(key.digest(), single.digest());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_hash_equals_bitwise_reference() {
+        // The branch-free packed evaluators must produce exactly the key
+        // PackedKey::from_bits builds from the per-bit predicates — same
+        // words, same digest — for bit counts in every word-boundary
+        // class (< 64, = 64, straddling, > 192).
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let dim = 30;
+        for m in [1usize, 63, 64, 65, 125, 200] {
+            let bs = BitSamplingL1::sample(dim, m, 20.0, 180.0, &mut rng);
+            let rp = RandomProjection::sample(dim, m, &mut rng);
+            for _ in 0..20 {
+                let x = rand_point(&mut rng, dim, 20.0, 180.0);
+                let bs_ref = PackedKey::from_bits(
+                    bs.coords
+                        .iter()
+                        .zip(&bs.thresholds)
+                        .map(|(&c, &t)| x[c as usize] >= t),
+                );
+                assert_eq!(bs.hash(&x), bs_ref, "bit-sampling m={m}");
+                let rp_ref = PackedKey::from_bits(rp.dirs.chunks_exact(dim).map(|row| {
+                    let mut dot = 0.0f32;
+                    for (a, b) in row.iter().zip(&x) {
+                        dot += a * b;
+                    }
+                    dot >= 0.0
+                }));
+                assert_eq!(rp.hash(&x), rp_ref, "random-projection m={m}");
+                assert_eq!(rp.hash(&x).digest(), rp_ref.digest());
             }
         }
     }

@@ -32,6 +32,19 @@ impl PackedKey {
         PackedKey { words, digest: digest(&words) }
     }
 
+    /// Build from pre-packed words — the packed hash evaluators in
+    /// `lsh::family` set bits directly with shifts/masks (bit `i` → word
+    /// `i / 64`, position `i % 64`, the same layout [`from_bits`] and
+    /// [`KeyBuilder`] use), then seal the key here. The digest is
+    /// computed over the words exactly as everywhere else, so keys built
+    /// this way are bucket-equal to bit-pushed ones.
+    ///
+    /// [`from_bits`]: PackedKey::from_bits
+    #[inline]
+    pub fn from_words(words: [u64; 4]) -> PackedKey {
+        PackedKey { words, digest: digest(&words) }
+    }
+
     #[inline]
     pub fn digest(&self) -> u64 {
         self.digest
@@ -66,8 +79,11 @@ impl PackedKey {
     }
 }
 
-/// Incremental key builder used on the hashing hot path — avoids the
-/// iterator overhead of [`PackedKey::from_bits`].
+/// Incremental key builder — avoids the iterator overhead of
+/// [`PackedKey::from_bits`] when bits arrive one at a time. The hashing
+/// hot path in `lsh::family` now packs words directly and seals them
+/// with [`PackedKey::from_words`]; the builder remains for incremental
+/// callers and as the reference the packed layout is tested against.
 #[derive(Debug, Clone)]
 pub struct KeyBuilder {
     words: [u64; 4],
@@ -150,6 +166,21 @@ mod tests {
         }
         assert_eq!(kb.finish(), a);
         assert_eq!(kb.finish().digest(), a.digest());
+    }
+
+    #[test]
+    fn from_words_matches_from_bits() {
+        // Packed evaluation writes words directly; the sealed key must be
+        // indistinguishable (words + digest) from the bit-pushed one.
+        let pattern: Vec<bool> = (0..173).map(|i| (i * 13) % 5 < 2).collect();
+        let a = PackedKey::from_bits(pattern.iter().copied());
+        let mut words = [0u64; 4];
+        for (i, &b) in pattern.iter().enumerate() {
+            words[i >> 6] |= u64::from(b) << (i & 63);
+        }
+        let b = PackedKey::from_words(words);
+        assert_eq!(b, a);
+        assert_eq!(b.digest(), a.digest());
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! subset of tables — the intra-node parallelization unit: core `P_i`
 //! owns tables `{t : t ≡ i (mod p)}`, each built entirely independently
 //! ("no overlap in the computations for any pair of hashes").
+//!
+//! Key computation goes through the families' bit-packed evaluators
+//! (`lsh::family`): per-table keys are assembled as `u64` words with
+//! shifts/masks rather than per-function scalar walks, with the layout
+//! pinned bit-identical to [`PackedKey::from_bits`].
 
 use crate::lsh::family::{ComposedHash, LayerSpec};
 use crate::lsh::key::PackedKey;

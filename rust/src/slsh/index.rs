@@ -1,6 +1,13 @@
 //! The SLSH index owned by one (simulated) core: a subset of the outer
 //! layer's tables plus inner cosine indices inside populous buckets, and
 //! the query-resolution path with comparison counting.
+//!
+//! Distance work is delegated to the injected [`DistanceEngine`]; the
+//! engine's kernel dispatch (scalar vs SIMD, see
+//! [`crate::engine::ScanKernel`]) is transparent here — candidate
+//! gathering, dedup order and comparison counts are identical under
+//! every bit-identical kernel, so the index's bit-identity contracts
+//! hold regardless of which ISA ran the scan.
 
 use std::collections::HashMap;
 

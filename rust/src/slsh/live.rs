@@ -79,6 +79,16 @@ use crate::util::clock::Clock;
 /// local/remote deployments) without a coordinator round trip per insert.
 pub const LIVE_ID_STRIDE: u64 = 1 << 40;
 
+/// Lock a mutex, recovering from poisoning. A panicking inserter must not
+/// turn every subsequent query into a panic (the graceful-degradation
+/// contract): the guarded state here is always an `Arc` swap or a
+/// publish-last [`Extent`] append, neither of which can be observed
+/// half-written, so taking the inner guard after a poison is sound — the
+/// worst case is a snapshot missing the panicked call's unpublished work.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// When the delta seals into an immutable segment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SealPolicy {
@@ -175,7 +185,7 @@ impl LiveStore {
     }
 
     fn snapshot(&self) -> Arc<StoreSnapshot> {
-        Arc::clone(&self.snap.lock().unwrap())
+        Arc::clone(&lock_unpoisoned(&self.snap))
     }
 
     /// Append `labels.len()` points, splitting across extents and closing
@@ -184,7 +194,7 @@ impl LiveStore {
     pub fn append(&self, points: &[f32], labels: &[bool]) -> AppendOutcome {
         let n = labels.len();
         assert_eq!(points.len(), n * self.dim, "insert block not n × dim");
-        let _g = self.write.lock().unwrap();
+        let _g = lock_unpoisoned(&self.write);
         let now = self.clock.now_ns();
         let mut sealed_now = self.close_if_age_due(now);
         let mut off = 0usize;
@@ -211,14 +221,14 @@ impl LiveStore {
     /// is checked, which is what keeps age sealing deterministic under
     /// `MockClock`). Returns the number of extents closed (0 or 1).
     pub fn poll_age(&self) -> u64 {
-        let _g = self.write.lock().unwrap();
+        let _g = lock_unpoisoned(&self.write);
         self.close_if_age_due(self.clock.now_ns())
     }
 
     /// Unconditionally close the open extent (if it holds any points).
     /// Returns the number of extents closed (0 or 1).
     pub fn force_seal(&self) -> u64 {
-        let _g = self.write.lock().unwrap();
+        let _g = lock_unpoisoned(&self.write);
         let snap = self.snapshot();
         match snap.extents.last() {
             Some(ext) if !ext.is_closed() && ext.writer_rows() > 0 => {
@@ -251,7 +261,7 @@ impl LiveStore {
     /// The open extent, creating (and publishing) a fresh one if the
     /// chain is empty or its tail is closed (write lock held).
     fn open_extent(&self, now: u64) -> Arc<Extent> {
-        let mut snap = self.snap.lock().unwrap();
+        let mut snap = lock_unpoisoned(&self.snap);
         if let Some(last) = snap.extents.last() {
             if !last.is_closed() {
                 return Arc::clone(last);
@@ -408,7 +418,7 @@ impl LiveIndex {
     }
 
     fn snapshot(&self) -> Arc<LiveSnap> {
-        Arc::clone(&self.snap.lock().unwrap())
+        Arc::clone(&lock_unpoisoned(&self.snap))
     }
 
     /// Points this index has fully indexed (sealed rows + delta epoch) —
@@ -482,7 +492,7 @@ impl LiveIndex {
     /// Safe to call from the owner thread at any time; queries running
     /// concurrently keep their pinned snapshots.
     pub fn sync(&self) {
-        let _g = self.write.lock().unwrap();
+        let _g = lock_unpoisoned(&self.write);
         let store_snap = self.store.snapshot();
         let cur = self.snapshot();
         let mut sealed = cur.sealed.clone();
@@ -527,7 +537,7 @@ impl LiveIndex {
             break;
         }
         if changed {
-            *self.snap.lock().unwrap() = Arc::new(LiveSnap { sealed, delta });
+            *lock_unpoisoned(&self.snap) = Arc::new(LiveSnap { sealed, delta });
         }
     }
 
@@ -973,5 +983,58 @@ mod tests {
             assert_eq!(enforced.stats(qi).comparisons, 0);
             assert!(enforced.neighbors(qi).is_empty());
         }
+    }
+
+    #[test]
+    fn poisoned_locks_do_not_take_down_readers() {
+        // A panicking inserter poisons every mutex it held; queries and
+        // later inserts must recover the guards and keep serving — the
+        // PR 6 graceful-degradation contract reaches the lock layer.
+        let dim = 30;
+        let (data, labels) = clustered(200, dim, 41);
+        let params = lsh_params(dim, 16, 8, 43);
+        let live = LiveIndex::new(&params, SealPolicy::by_size(80), mock_clock());
+        live.insert_batch(&data[..150 * dim], &labels[..150]);
+        let engine = NativeEngine::new();
+        let mut scratch = LiveScratch::new();
+        let mut before = BatchOutput::new();
+        let qs = data[..2 * dim].to_vec();
+        live.query_batch(&engine, &qs, &mut scratch, &mut before);
+        // Simulate the inserter dying mid-flight while holding every lock
+        // on the index AND its store; the caught panic leaves all four
+        // mutexes poisoned.
+        let crashed = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _iw = live.write.lock().unwrap();
+                let _is = live.snap.lock().unwrap();
+                let _sw = live.store.write.lock().unwrap();
+                let _ss = live.store.snap.lock().unwrap();
+                panic!("inserter died mid-flight");
+            })
+            .join()
+        });
+        assert!(crashed.is_err(), "the panic must have fired");
+        assert!(live.snap.lock().is_err(), "snap mutex is really poisoned");
+        // Readers recover: same snapshot, same answers, no panic.
+        let mut after = BatchOutput::new();
+        live.query_batch(&engine, &qs, &mut scratch, &mut after);
+        for qi in 0..2 {
+            assert_eq!(after.neighbors(qi), before.neighbors(qi));
+            assert_eq!(after.stats(qi), before.stats(qi));
+        }
+        // Writers recover too: inserts and seals keep working past the
+        // poison, and the new points become visible.
+        let s = live.insert_batch(&data[150 * dim..], &labels[150..]);
+        assert_eq!(s.accepted, 50);
+        assert_eq!(live.len(), 200);
+        assert_eq!(live.seal_now(), 1);
+        let probe = 199;
+        let q = &data[probe * dim..(probe + 1) * dim];
+        let mut out = BatchOutput::new();
+        live.query_batch(&engine, q, &mut scratch, &mut out);
+        assert!(
+            out.neighbors(0).iter().any(|n| n.id == probe as u64 && n.dist == 0.0),
+            "post-poison insert must be queryable"
+        );
     }
 }

@@ -29,6 +29,11 @@
 //!   extent that grew from empty yields an index bit-identical to
 //!   [`SlshIndex::build`] over the same points — the seal-equivalence
 //!   contract `rust/tests/streaming_ingest.rs` pins.
+//!
+//! Segment scans run on the caller's [`DistanceEngine`]; because the
+//! engine's SIMD kernels are bit-identical to its scalar path (see
+//! [`crate::engine::ScanKernel`]), the delta's epoch-prefix answers and
+//! the seal-equivalence contract are kernel-independent.
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;

@@ -50,10 +50,15 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Linear-interpolation percentile, `q` in [0, 1].
+/// Linear-interpolation percentile. `q` is clamped to [0, 1] — callers
+/// computing ranks like `alpha / 2` or `1 − alpha / 2` can drift a ULP
+/// past the endpoints, and an out-of-range rank must degrade to the
+/// nearest order statistic, never index out of bounds. NaN `q` is a
+/// caller bug (debug assert); release builds treat it as `q = 0`.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
-    assert!((0.0..=1.0).contains(&q));
+    debug_assert!(!q.is_nan(), "percentile rank is NaN");
+    let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
     let v = sorted(xs);
     if v.len() == 1 {
         return v[0];
@@ -219,6 +224,44 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 1.0), 40.0);
         assert!((percentile(&xs, 0.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Table-driven: (input, q, expected). Out-of-range q clamps to
+        // the nearest order statistic instead of indexing out of bounds.
+        let multi = [10.0, 20.0, 30.0, 40.0];
+        let single = [7.0];
+        let cases: &[(&[f64], f64, f64)] = &[
+            (&single, 0.0, 7.0),
+            (&single, 0.5, 7.0),
+            (&single, 1.0, 7.0),
+            (&single, -3.0, 7.0),
+            (&multi, 0.0, 10.0),
+            (&multi, 1.0, 40.0),
+            (&multi, -0.25, 10.0),          // clamps to q = 0
+            (&multi, 1.25, 40.0),           // clamps to q = 1
+            (&multi, 1.0 + 1e-12, 40.0),    // one-ULP drift past the end
+            (&multi, 0.25, 17.5),
+            (&multi, 1.0 / 3.0, 20.0),
+        ];
+        for &(xs, q, want) in cases {
+            let got = percentile(xs, q);
+            assert!((got - want).abs() < 1e-9, "q={q}: got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile of empty slice")]
+    fn percentile_empty_panics() {
+        percentile(&[], 0.5);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "percentile rank is NaN")]
+    fn percentile_nan_rank_debug_asserts() {
+        percentile(&[1.0, 2.0], f64::NAN);
     }
 
     #[test]

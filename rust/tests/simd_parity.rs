@@ -1,0 +1,354 @@
+//! Cross-kernel parity: the SIMD scan kernels behind [`ScanKernel`]
+//! dispatch must be bit-identical to the scalar reference at EVERY engine
+//! entry point (single, range, batched, cancellable) and through every
+//! index layer above them (SlshIndex, LiveIndex sealed + delta) — for
+//! both metrics, with dims covering the fixed-dim specializations (30,
+//! 32), every tail-remainder class (1, 3, 29, 31, 33, 37) and sub-quad
+//! lengths.
+//!
+//! The default engine is runtime-dispatched, so `NativeEngine::new()`
+//! running the whole existing parity battery already gates the detected
+//! kernel; this suite adds the explicit scalar-vs-simd4 cross checks
+//! (and, under `--features wide-simd`, tolerance checks for the 8-lane
+//! AVX2 kernel, which is deliberately NOT bit-gated).
+
+use dslsh::engine::native::NativeEngine;
+use dslsh::engine::{l1_dist, DistanceEngine, Metric, ScanCancel, ScanKernel};
+use dslsh::knn::TopK;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::slsh::{
+    BatchOutput, LiveIndex, LiveScratch, QueryScratch, SealPolicy, SlshIndex, SlshParams,
+};
+use dslsh::util::clock::MockClock;
+use dslsh::util::rng::Xoshiro256;
+use dslsh::util::stamp::StampSet;
+use std::sync::Arc;
+
+const DIMS: [usize; 8] = [1, 3, 29, 30, 31, 32, 33, 37];
+
+fn fixture(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<bool>, Vec<f32>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.2)).collect();
+    let qs: Vec<f32> = (0..6 * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    (data, labels, qs)
+}
+
+fn scalar() -> NativeEngine {
+    NativeEngine::with_kernel(ScanKernel::Scalar)
+}
+
+fn simd4() -> NativeEngine {
+    NativeEngine::with_kernel(ScanKernel::Simd4)
+}
+
+/// The detected (default) kernel must itself be bit-identical to scalar —
+/// the property that lets every pre-existing parity suite double as a
+/// SIMD gate once dispatch is active.
+#[test]
+fn default_dispatch_is_bit_identical_to_scalar() {
+    let auto = NativeEngine::new();
+    assert_eq!(auto.kernel(), ScanKernel::detect());
+    let reference = scalar();
+    for dim in DIMS {
+        let (data, labels, qs) = fixture(400, dim, 7);
+        let ids: Vec<u32> = (0..400).filter(|i| i % 5 != 0).collect();
+        for metric in [Metric::L1, Metric::Cosine] {
+            let mut a = TopK::new(10);
+            let mut b = TopK::new(10);
+            reference.scan(metric, &qs[..dim], &data, dim, &ids, &labels, 9, &mut a);
+            auto.scan(metric, &qs[..dim], &data, dim, &ids, &labels, 9, &mut b);
+            assert_eq!(a.into_sorted(), b.into_sorted(), "dim={dim} metric={metric:?}");
+        }
+    }
+}
+
+/// scan / scan_range / scan_batch / scan_batch_range: pinned simd4 ==
+/// pinned scalar, bit for bit, across the dim sweep and both metrics.
+#[test]
+fn every_entry_point_is_bit_identical_scalar_vs_simd4() {
+    let (eng_s, eng_v) = (scalar(), simd4());
+    for dim in DIMS {
+        let (data, labels, qs) = fixture(500, dim, 11);
+        let ids: Vec<u32> = (0..500).filter(|i| i % 3 != 0).collect();
+        let nq = 6;
+        for metric in [Metric::L1, Metric::Cosine] {
+            // scan
+            let mut a = TopK::new(8);
+            let mut b = TopK::new(8);
+            let ca = eng_s.scan(metric, &qs[..dim], &data, dim, &ids, &labels, 0, &mut a);
+            let cb = eng_v.scan(metric, &qs[..dim], &data, dim, &ids, &labels, 0, &mut b);
+            assert_eq!(ca, cb);
+            assert_eq!(a.into_sorted(), b.into_sorted(), "scan dim={dim} metric={metric:?}");
+            // scan_range
+            let mut a = TopK::new(8);
+            let mut b = TopK::new(8);
+            eng_s.scan_range(metric, &qs[..dim], &data, dim, 23..471, &labels, 0, &mut a);
+            eng_v.scan_range(metric, &qs[..dim], &data, dim, 23..471, &labels, 0, &mut b);
+            assert_eq!(a.into_sorted(), b.into_sorted(), "range dim={dim} metric={metric:?}");
+            // scan_batch
+            let mut aa: Vec<TopK> = (0..nq).map(|_| TopK::new(8)).collect();
+            let mut bb: Vec<TopK> = (0..nq).map(|_| TopK::new(8)).collect();
+            eng_s.scan_batch(metric, &qs, &data, dim, &ids, &labels, 0, &mut aa);
+            eng_v.scan_batch(metric, &qs, &data, dim, &ids, &labels, 0, &mut bb);
+            for (qi, (x, y)) in aa.into_iter().zip(bb).enumerate() {
+                assert_eq!(
+                    x.into_sorted(),
+                    y.into_sorted(),
+                    "batch dim={dim} metric={metric:?} qi={qi}"
+                );
+            }
+            // scan_batch_range
+            let mut aa: Vec<TopK> = (0..nq).map(|_| TopK::new(8)).collect();
+            let mut bb: Vec<TopK> = (0..nq).map(|_| TopK::new(8)).collect();
+            eng_s.scan_batch_range(metric, &qs, &data, dim, 23..471, &labels, 0, &mut aa);
+            eng_v.scan_batch_range(metric, &qs, &data, dim, 23..471, &labels, 0, &mut bb);
+            for (qi, (x, y)) in aa.into_iter().zip(bb).enumerate() {
+                assert_eq!(
+                    x.into_sorted(),
+                    y.into_sorted(),
+                    "batch_range dim={dim} metric={metric:?} qi={qi}"
+                );
+            }
+        }
+    }
+}
+
+/// The cancellable entry points inherit dispatch through scan/scan_batch:
+/// unbounded tokens give bit-identical full results; a mid-scan deadline
+/// cuts both kernels at the same tile boundary with identical prefixes.
+#[test]
+fn cancellable_scans_are_bit_identical_scalar_vs_simd4() {
+    let (eng_s, eng_v) = (scalar(), simd4());
+    let dim = 30;
+    let (data, labels, qs) = fixture(600, dim, 13);
+    let ids: Vec<u32> = (0..600).collect();
+    for metric in [Metric::L1, Metric::Cosine] {
+        // Unbounded: identical to the plain scan on both engines.
+        let mut a = TopK::new(10);
+        let mut b = TopK::new(10);
+        let ca = eng_s.scan_until(
+            metric,
+            &qs[..dim],
+            &data,
+            dim,
+            &ids,
+            &labels,
+            0,
+            &mut a,
+            &ScanCancel::unbounded(Arc::new(MockClock::new(0))),
+        );
+        let cb = eng_v.scan_until(
+            metric,
+            &qs[..dim],
+            &data,
+            dim,
+            &ids,
+            &labels,
+            0,
+            &mut b,
+            &ScanCancel::unbounded(Arc::new(MockClock::new(0))),
+        );
+        assert_eq!(ca, cb);
+        assert_eq!(ca, ids.len() as u64);
+        assert_eq!(a.into_sorted(), b.into_sorted(), "until metric={metric:?}");
+        // Already-blown deadline: both engines do zero work.
+        let mut a = TopK::new(10);
+        let mut b = TopK::new(10);
+        let blown_a = ScanCancel::until(Arc::new(MockClock::new(5)), 5);
+        let blown_b = ScanCancel::until(Arc::new(MockClock::new(5)), 5);
+        let ca = eng_s
+            .scan_until(metric, &qs[..dim], &data, dim, &ids, &labels, 0, &mut a, &blown_a);
+        let cb = eng_v
+            .scan_until(metric, &qs[..dim], &data, dim, &ids, &labels, 0, &mut b, &blown_b);
+        assert_eq!(ca, 0);
+        assert_eq!(cb, 0);
+        assert!(a.is_empty() && b.is_empty());
+        // Batched cancellable range: unbounded twins are bit-identical
+        // and report completion.
+        let nq = 6;
+        let mut aa: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+        let mut bb: Vec<TopK> = (0..nq).map(|_| TopK::new(10)).collect();
+        let pa = eng_s.scan_batch_range_until(
+            metric,
+            &qs,
+            &data,
+            dim,
+            0..600,
+            &labels,
+            0,
+            &mut aa,
+            &ScanCancel::unbounded(Arc::new(MockClock::new(0))),
+        );
+        let pb = eng_v.scan_batch_range_until(
+            metric,
+            &qs,
+            &data,
+            dim,
+            0..600,
+            &labels,
+            0,
+            &mut bb,
+            &ScanCancel::unbounded(Arc::new(MockClock::new(0))),
+        );
+        assert_eq!(pa, pb);
+        assert!(pa.completed);
+        for (qi, (x, y)) in aa.into_iter().zip(bb).enumerate() {
+            assert_eq!(x.into_sorted(), y.into_sorted(), "until_batch metric={metric:?} qi={qi}");
+        }
+    }
+}
+
+/// Both engines against the naive sequential oracle: SIMD inherits the
+/// scalar tail oracle because simd4 == scalar exactly, and scalar is
+/// within reassociation tolerance of the reference.
+#[test]
+fn kernels_agree_with_naive_oracle_at_tail_dims() {
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    for dim in DIMS {
+        for _ in 0..100 {
+            let a: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-80.0, 180.0) as f32).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.gen_f64(-80.0, 180.0) as f32).collect();
+            let data = b.clone();
+            let labels = [false];
+            let mut t_s = TopK::new(1);
+            let mut t_v = TopK::new(1);
+            scalar().scan(Metric::L1, &a, &data, dim, &[0], &labels, 0, &mut t_s);
+            simd4().scan(Metric::L1, &a, &data, dim, &[0], &labels, 0, &mut t_v);
+            let ds = t_s.into_sorted()[0].dist;
+            let dv = t_v.into_sorted()[0].dist;
+            assert_eq!(ds, dv, "dim={dim}");
+            let reference = l1_dist(&a, &b);
+            assert!(
+                (ds - reference).abs() <= 1e-4 * (1.0 + reference.abs()),
+                "dim={dim}: {ds} vs naive {reference}"
+            );
+        }
+    }
+}
+
+/// Index-level parity: an SlshIndex (LSH-only AND stratified) queried
+/// with the simd4 engine answers bit-identically — same neighbors, same
+/// stats — to the scalar engine, on single and batched paths.
+#[test]
+fn slsh_index_parity_across_kernels() {
+    let dim = 30;
+    let mut rng = Xoshiro256::seed_from_u64(19);
+    let n = 1500;
+    let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels: Vec<bool> = (0..n).map(|i| i % 7 == 0).collect();
+    let view = dslsh::lsh::layer::SliceView { data: &data, dim };
+    let lsh_only = SlshParams::lsh_only(LayerSpec::outer_l1(dim, 24, 10, 20.0, 180.0, 5), 10);
+    let stratified = SlshParams {
+        outer: LayerSpec::outer_l1(dim, 12, 8, 20.0, 180.0, 5),
+        inner: Some(dslsh::slsh::InnerParams { m: 24, l: 8, alpha: 0.05, seed: 0xBEEF }),
+        k: 10,
+    };
+    let (eng_s, eng_v) = (scalar(), simd4());
+    for params in [lsh_only, stratified] {
+        let idx = SlshIndex::build_full(&params, &view);
+        let mut scratch = QueryScratch::new(n);
+        let (mut out_s, mut out_v) = (BatchOutput::new(), BatchOutput::new());
+        let nq = 5;
+        let qs: Vec<f32> = (0..nq * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+        idx.query_batch(&eng_s, &qs, &data, &labels, 0, &mut scratch, &mut out_s);
+        idx.query_batch(&eng_v, &qs, &data, &labels, 0, &mut scratch, &mut out_v);
+        for qi in 0..nq {
+            assert_eq!(out_v.neighbors(qi), out_s.neighbors(qi), "qi={qi}");
+            assert_eq!(out_v.stats(qi), out_s.stats(qi), "qi={qi}");
+        }
+        let mut visited = StampSet::new(n);
+        let mut cand = Vec::new();
+        for qi in 0..nq {
+            let q = &qs[qi * dim..(qi + 1) * dim];
+            let seq_s = idx.query(&eng_s, q, &data, &labels, 0, &mut visited, &mut cand);
+            let seq_v = idx.query(&eng_v, q, &data, &labels, 0, &mut visited, &mut cand);
+            assert_eq!(seq_v.topk.into_sorted(), seq_s.topk.into_sorted(), "qi={qi}");
+            assert_eq!(seq_v.stats, seq_s.stats);
+        }
+    }
+}
+
+/// Live-index parity: a mixed segment stack (sealed segments + an active
+/// delta) answers bit-identically under both kernels — the live-delta
+/// scan call sites inherit dispatch too.
+#[test]
+fn live_index_parity_across_kernels() {
+    let dim = 30;
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    let n = 300;
+    let data: Vec<f32> = (0..n * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    let labels: Vec<bool> = (0..n).map(|i| i % 6 == 0).collect();
+    let params = SlshParams::lsh_only(LayerSpec::outer_l1(dim, 16, 8, 20.0, 180.0, 29), 10);
+    let live = LiveIndex::new(&params, SealPolicy::by_size(90), Arc::new(MockClock::new(0)));
+    live.insert_batch(&data, &labels);
+    assert!(live.sealed_segments() > 0 && live.delta_len() > 0, "need a mixed stack");
+    let (eng_s, eng_v) = (scalar(), simd4());
+    let mut scratch = LiveScratch::new();
+    let (mut out_s, mut out_v) = (BatchOutput::new(), BatchOutput::new());
+    let nq = 4;
+    let qs: Vec<f32> = (0..nq * dim).map(|_| rng.gen_f64(20.0, 180.0) as f32).collect();
+    live.query_batch(&eng_s, &qs, &mut scratch, &mut out_s);
+    live.query_batch(&eng_v, &qs, &mut scratch, &mut out_v);
+    for qi in 0..nq {
+        assert_eq!(out_v.neighbors(qi), out_s.neighbors(qi), "qi={qi}");
+        assert_eq!(out_v.stats(qi), out_s.stats(qi), "qi={qi}");
+    }
+    // Cancellable live path, unbounded: still identical across kernels.
+    live.query_batch_cancel(
+        &eng_s,
+        &qs,
+        &mut scratch,
+        &mut out_s,
+        &ScanCancel::unbounded(Arc::new(MockClock::new(0))),
+    );
+    live.query_batch_cancel(
+        &eng_v,
+        &qs,
+        &mut scratch,
+        &mut out_v,
+        &ScanCancel::unbounded(Arc::new(MockClock::new(0))),
+    );
+    for qi in 0..nq {
+        assert_eq!(out_v.neighbors(qi), out_s.neighbors(qi), "cancel qi={qi}");
+        assert_eq!(out_v.stats(qi), out_s.stats(qi), "cancel qi={qi}");
+    }
+}
+
+/// The wide kernel is tolerance-grade by contract: never auto-selected,
+/// and its distances sit within relative 1e-5 of scalar. Top-K *ordering*
+/// may legitimately differ on near-ties, so the comparison is by id →
+/// distance map, not rank.
+#[cfg(feature = "wide-simd")]
+#[test]
+fn simd8_engine_within_tolerance_of_scalar() {
+    if !ScanKernel::simd8_available() {
+        eprintln!("skipping simd8 engine test: AVX2 not detected on this host");
+        return;
+    }
+    let eng_s = scalar();
+    let eng_w = NativeEngine::with_kernel(ScanKernel::Simd8);
+    for dim in [29usize, 30, 32, 37, 64] {
+        let (data, labels, qs) = fixture(400, dim, 31);
+        let ids: Vec<u32> = (0..400).collect();
+        for metric in [Metric::L1, Metric::Cosine] {
+            let k = 400; // full ranking, so both top-Ks hold every candidate
+            let mut a = TopK::new(k);
+            let mut b = TopK::new(k);
+            eng_s.scan(metric, &qs[..dim], &data, dim, &ids, &labels, 0, &mut a);
+            eng_w.scan(metric, &qs[..dim], &data, dim, &ids, &labels, 0, &mut b);
+            let want: std::collections::HashMap<u64, f32> =
+                a.into_sorted().iter().map(|n| (n.id, n.dist)).collect();
+            for nb in b.into_sorted() {
+                let ds = want[&nb.id];
+                assert!(
+                    (nb.dist - ds).abs() <= 1e-5 * (1.0 + ds.abs()),
+                    "dim={dim} metric={metric:?} id={}: {} vs {}",
+                    nb.id,
+                    nb.dist,
+                    ds
+                );
+            }
+        }
+    }
+}

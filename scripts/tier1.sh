@@ -25,6 +25,9 @@ if [[ "${TIER1_MATRIX:-0}" == "1" ]]; then
   # features too: the `direct_path` tests drive query_batch_flat straight
   # through the HTTP layer (no admission queue installed).
   cargo test -q --no-default-features --test http_edge direct_path
+  # The opt-in AVX2 kernels must stay buildable and parity-clean; on
+  # hosts without AVX2 the simd8 tests skip themselves at runtime.
+  cargo test -q --features wide-simd --test simd_parity
 fi
 
 # Admission layer, explicitly: the scheduling seam every later feature
@@ -52,6 +55,11 @@ cargo test -q --test http_edge
 # admission, wire, HTTP), candidate monotonicity in P, the deterministic
 # max_comparisons cap, and typed rejection of invalid specs at the edges.
 cargo test -q --test multiprobe
+# simd_parity holds the scan-kernel dispatch contract (PR 9): the simd4
+# kernel bit-identical to scalar at every entry point (single, batched,
+# ranged, cancellable) and through SlshIndex/LiveIndex end to end, plus
+# tail-dim property checks against the naive oracle.
+cargo test -q --test simd_parity
 cargo test -q --lib util::json
 cargo test -q --lib coordinator::admission
 cargo test -q --lib lsh::probe
@@ -71,3 +79,7 @@ cargo bench --bench admission_latency -- --smoke
 cargo bench --bench ingest -- --smoke
 cargo bench --bench hedging -- --smoke
 cargo bench --bench tradeoff -- --smoke
+# engine_ablation --smoke additionally asserts the simd4 kernel is
+# bit-identical to scalar on every (metric, dim) cell and refreshes the
+# BENCH_engine.json perf-trajectory record.
+cargo bench --bench engine_ablation -- --smoke
