@@ -477,7 +477,10 @@ fn main() -> anyhow::Result<()> {
         fs.failovers, fs.hedges, fs.hedge_wins, fs.down_transitions, fs.reconnect_attempts
     );
     // Kill the sibling too: shard 0 is now unservable, but the monitor
-    // still gets an in-budget answer with the damage flagged.
+    // still gets an in-budget answer with the damage flagged. Span
+    // collection on first, so the degraded queries land in the slow ring
+    // with per-stage spans and their cause ("shed") attached.
+    replicated.tracer().set_collect(true);
     kill_switches[1].store(true, Ordering::Relaxed);
     let r = replicated.query(corpus.queries.point(0))?;
     assert!(r.partial && r.shed_nodes >= 1, "dead shard must surface as a flagged partial");
@@ -526,5 +529,34 @@ fn main() -> anyhow::Result<()> {
         "degraded query must be a flagged 206 over HTTP"
     );
     println!("the shard outage is visible end to end: 503 readiness + 206 partial answers ✓");
+
+    // The scrape surface: ONE GET exposes every counter family the
+    // cluster keeps — per-endpoint edge traffic, admission queue / cut /
+    // lane counters, ingest, failover, and the tracer's latency
+    // histograms — in Prometheus text exposition; the slow-query ring
+    // rides its own debug endpoint as JSON.
+    println!();
+    println!("== observability endpoints (GET /metrics, GET /v1/debug/slow) ==");
+    let scrape = http(addr, "GET /metrics HTTP/1.1\r\nHost: icu\r\n\r\n")?;
+    let families: Vec<&str> = scrape.lines().filter(|l| l.starts_with("# TYPE")).collect();
+    println!("GET  /metrics       -> {} families, e.g.:", families.len());
+    for f in families.iter().take(5) {
+        println!("                       {f}");
+    }
+    let outage = scrape
+        .lines()
+        .filter(|l| l.starts_with("dslsh_failover_failovers_total")
+            || l.starts_with("dslsh_failover_hedges_total")
+            || l.starts_with("dslsh_replicas_down"));
+    for line in outage {
+        println!("                       {line}");
+    }
+    let reply = http(addr, "GET /v1/debug/slow HTTP/1.1\r\nHost: icu\r\n\r\n")?;
+    let (status, body) = status_and_body(&reply);
+    assert!(body.contains("\"slow\""), "slow-ring endpoint must serve the ring document");
+    let preview: String = body.chars().take(160).collect();
+    println!("GET  /v1/debug/slow -> {status}");
+    println!("                       {preview}…");
+    println!("every family above is also in rust/tests/observability.rs's scrape battery ✓");
     Ok(())
 }

@@ -92,7 +92,50 @@ fn main() -> anyhow::Result<()> {
     println!("  recall_hint 0.9 (= 4 probes/table): {} comparisons", hinted.max_comparisons);
     println!("(the probes/recall/latency frontier: cargo bench --bench tradeoff)");
 
-    // 6. Streaming: the same index as a LIVE structure — start empty,
+    // 6. Reading the telemetry: every query above already fed the
+    //    cluster's always-on histograms — per-lane queue-wait/service/e2e
+    //    and per-shard network/scan distributions, all in microseconds,
+    //    wait-free on the hot path. Span collection is the opt-in debug
+    //    tier: with it on, slow / shed / partial / hedged queries land in
+    //    a bounded ring with named per-stage spans.
+    println!();
+    println!("-- reading the telemetry (Tracer: histograms + slow-query ring) --");
+    let tracer = cluster.tracer();
+    let lane = tracer.lane_hists(0); // lane 0 = "monitor", the default class
+    println!(
+        "  monitor-lane e2e: n={}  p50={}us  p99={}us  mean={:.1}us",
+        lane.e2e_us.count,
+        lane.e2e_us.p50(),
+        lane.e2e_us.p99(),
+        lane.e2e_us.mean()
+    );
+    for shard in 0..tracer.num_shards() {
+        let h = tracer.shard_hists(shard);
+        println!(
+            "  shard {shard} scan: n={}  p50={}us  p99={}us",
+            h.scan_us.count,
+            h.scan_us.p50(),
+            h.scan_us.p99()
+        );
+    }
+    tracer.set_collect(true); // spans on (debug tier: a mutex per stage boundary)
+    tracer.set_slow_threshold_us(0); // every query is ring-worthy, for the demo
+    let _ = cluster.query(corpus.queries.point(1))?;
+    for t in tracer.slow_ring() {
+        println!(
+            "  trace {} [{}] e2e={}us: {} stage span(s), {} node span(s)",
+            t.trace_id,
+            t.cause,
+            t.e2e_us,
+            t.spans.len(),
+            t.nodes.len()
+        );
+    }
+    tracer.set_collect(false);
+    tracer.set_slow_threshold_us(dslsh::runtime::trace::DEFAULT_SLOW_THRESHOLD_US);
+    println!("(served over HTTP the same numbers are one scrape away: GET /metrics)");
+
+    // 7. Streaming: the same index as a LIVE structure — start empty,
     //    insert windows as monitors produce them, query at any point, and
     //    seal the delta into an immutable segment (by an explicit call
     //    here; in serving, by the size-or-age SealPolicy).
@@ -133,7 +176,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("(full streaming cluster: examples/icu_serving.rs; rates: cargo bench --bench ingest)");
 
-    // 7. HTTP front door (zero-dependency; see rust/src/net/edge.rs and
+    // 8. HTTP front door (zero-dependency; see rust/src/net/edge.rs and
     //    the tail of examples/icu_serving.rs for a running server). Any
     //    orchestrator can be served over plain HTTP/1.1 + JSON:
     //
@@ -147,6 +190,8 @@ fn main() -> anyhow::Result<()> {
     //        curl -s localhost:8080/healthz
     //        curl -s localhost:8080/readyz          # 503 while a shard has no live replica
     //        curl -s localhost:8080/v1/stats        # edge/admission/ingest/failover + per-lane probes/EWMA
+    //        curl -s localhost:8080/metrics         # EVERY family, Prometheus text exposition
+    //        curl -s localhost:8080/v1/debug/slow   # the slow-query ring as JSON
     //        curl -s -X POST localhost:8080/v1/query \
     //             -d '{"point":[0.1,0.2, ...], "budget_us":2000, "policy":"partial", "class":"monitor"}'
     //        curl -s -X POST localhost:8080/v1/query \      # the full QuerySpec over JSON

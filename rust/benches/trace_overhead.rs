@@ -1,0 +1,180 @@
+//! §Perf: observability overhead on the serving hot path — what the
+//! always-on tier (per-lane / per-shard histograms, one clock read per
+//! stage boundary) and the opt-in span-collection tier each cost.
+//!
+//! Three measurements:
+//! 1. Primitive costs, ns/op: a single `Histogram::record`, a full
+//!    `Tracer::record_lane` (three records), and the whole traced-query
+//!    span lifecycle (`mint` → `span` → `finish`) with collection ON —
+//!    the mutex tier a debug session pays.
+//! 2. End-to-end µs/query on a real cluster with span collection OFF vs
+//!    ON, and the overhead percentage between them.
+//! 3. The parity gate, every mode: results with collection ON must be
+//!    bit-identical to collection OFF — tracing observes, never steers.
+//!
+//! `--smoke` (CI, via scripts/tier1.sh) shrinks the corpus and reps and
+//! asserts the CSV artifact was written — plumbing, not timing quality.
+//! Runs from the workspace additionally refresh `BENCH_observability.json`
+//! at the repo root; elsewhere that step is skipped silently.
+//!
+//! Not a paper table; recorded in EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dslsh::coordinator::{build_cluster, ClusterConfig, QueryResult, SystemClock};
+use dslsh::data::{build_corpus, CorpusConfig, WindowSpec};
+use dslsh::experiments::report::Table;
+use dslsh::lsh::family::LayerSpec;
+use dslsh::runtime::hist::Histogram;
+use dslsh::runtime::trace::Tracer;
+use dslsh::slsh::SlshParams;
+use dslsh::util::json::{Json, JsonObj};
+use dslsh::util::stats;
+
+fn ns_per_op(n: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    for _ in 0..n.min(1000) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / n as f64
+}
+
+/// Everything workload-determined in a result (latency excluded).
+fn assert_same(a: &QueryResult, b: &QueryResult, ctx: &str) {
+    assert_eq!(a.neighbors, b.neighbors, "{ctx}: neighbors");
+    assert!(a.positive_share == b.positive_share, "{ctx}: positive_share");
+    assert_eq!(a.prediction, b.prediction, "{ctx}: prediction");
+    assert_eq!(a.max_comparisons, b.max_comparisons, "{ctx}: max_comparisons");
+    assert_eq!(a.per_node_comparisons, b.per_node_comparisons, "{ctx}: per_node_comparisons");
+    assert_eq!(a.partial, b.partial, "{ctx}: partial");
+    assert_eq!(a.shed_nodes, b.shed_nodes, "{ctx}: shed_nodes");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n, nq, reps, prim_ops): (usize, usize, usize, usize) =
+        if smoke { (4_000, 8, 3, 50_000) } else { (40_000, 20, 30, 2_000_000) };
+    println!("== trace overhead bench ({} mode) ==", if smoke { "smoke" } else { "full" });
+
+    // --- 1. Primitive costs ---
+    let hist = Histogram::new();
+    let mut v = 0u64;
+    let hist_record_ns = ns_per_op(prim_ops, || {
+        v = v.wrapping_add(17) & 0xFFFF;
+        hist.record(v);
+    });
+    let tracer = Tracer::new(Arc::new(SystemClock::new()), 2);
+    let record_lane_ns = ns_per_op(prim_ops, || {
+        tracer.record_lane(0, 3, 40, 43);
+    });
+    tracer.set_collect(true);
+    let span_ops = prim_ops / 10;
+    let mint_span_finish_ns = ns_per_op(span_ops.max(1), || {
+        let id = tracer.mint(0);
+        tracer.span(id, "service", 0, 1_000);
+        tracer.finish(id, 0, 5, false, false);
+    });
+    let mut table = Table::new(
+        "Observability overhead — primitives and end-to-end",
+        &["measurement", "value", "unit"],
+    );
+    table.row(vec!["hist_record".into(), format!("{hist_record_ns:.1}"), "ns/op".into()]);
+    table.row(vec!["record_lane".into(), format!("{record_lane_ns:.1}"), "ns/op".into()]);
+    table.row(vec![
+        "mint_span_finish".into(),
+        format!("{mint_span_finish_ns:.1}"),
+        "ns/op (collection ON)".into(),
+    ]);
+
+    // --- 2 + 3. End-to-end with the parity gate ---
+    let corpus = build_corpus(&CorpusConfig::new(WindowSpec::ahe_51_5c(), n, nq, 42));
+    let (lo, hi) = corpus.data.value_range();
+    let params =
+        SlshParams::lsh_only(LayerSpec::outer_l1(corpus.data.dim, 60, 24, lo, hi, 7), 10);
+    let cluster =
+        build_cluster(&corpus.data, &params, &ClusterConfig::new(2, 2)).expect("cluster");
+
+    let run = |label: &str| -> (f64, Vec<QueryResult>) {
+        let mut lat_us = Vec::with_capacity(reps * nq);
+        let mut last = Vec::new();
+        for rep in 0..reps {
+            let mut results = Vec::with_capacity(nq);
+            for i in 0..nq {
+                let t0 = Instant::now();
+                let r = cluster.query(corpus.queries.point(i)).expect(label);
+                lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                results.push(r);
+            }
+            if rep == 0 {
+                last = results;
+            }
+        }
+        (stats::median(&lat_us), last)
+    };
+
+    // Collection OFF: the always-on tier only. Park the slow threshold at
+    // the ceiling so the ring mutex is never touched by wall-clock noise.
+    let cluster_tracer = cluster.tracer();
+    cluster_tracer.set_slow_threshold_us(u64::MAX);
+    let (off_us, off_results) = run("collect off");
+    // Collection ON: spans assembled for every query.
+    cluster_tracer.set_collect(true);
+    let (on_us, on_results) = run("collect on");
+    cluster_tracer.set_collect(false);
+
+    for (i, (a, b)) in off_results.iter().zip(&on_results).enumerate() {
+        assert_same(a, b, &format!("query {i} traced vs untraced"));
+    }
+    println!("parity OK: collection ON is bit-identical to OFF over {nq} queries");
+
+    let overhead_pct = (on_us - off_us) / off_us * 100.0;
+    table.row(vec!["query_collect_off".into(), format!("{off_us:.1}"), "µs/query (median)".into()]);
+    table.row(vec!["query_collect_on".into(), format!("{on_us:.1}"), "µs/query (median)".into()]);
+    table.row(vec!["span_overhead".into(), format!("{overhead_pct:.1}"), "%".into()]);
+
+    println!("{}", table.render());
+    table.save(std::path::Path::new("results"), "trace_overhead").expect("saving");
+    println!("[trace_overhead] -> results/trace_overhead.csv");
+
+    if smoke {
+        let csv = std::fs::read_to_string("results/trace_overhead.csv")
+            .expect("smoke: results/trace_overhead.csv must exist");
+        for needle in ["hist_record", "query_collect_on"] {
+            assert!(csv.contains(needle), "smoke: CSV must hold {needle} rows:\n{csv}");
+        }
+        println!("smoke OK: trace_overhead.csv has {} lines", csv.lines().count());
+    }
+
+    // Perf trajectory record, written at the repo root when run from the
+    // workspace (CI and dev runs); skipped silently elsewhere.
+    let bench_root = std::path::Path::new("..");
+    if bench_root.join("ROADMAP.md").exists() {
+        let round = |x: f64| (x * 1000.0).round() / 1000.0;
+        let mut obj = JsonObj::new();
+        obj.insert("bench", Json::Str("trace_overhead".into()));
+        obj.insert("metric", Json::Str("observability_cost".into()));
+        obj.insert("mode", Json::Str(if smoke { "smoke" } else { "full" }.into()));
+        let mut prim = JsonObj::new();
+        prim.insert("hist_record", Json::Num(round(hist_record_ns)));
+        prim.insert("record_lane", Json::Num(round(record_lane_ns)));
+        prim.insert("mint_span_finish", Json::Num(round(mint_span_finish_ns)));
+        obj.insert("primitives_ns", Json::Obj(prim));
+        let mut q = JsonObj::new();
+        q.insert("collect_off", Json::Num(round(off_us)));
+        q.insert("collect_on", Json::Num(round(on_us)));
+        obj.insert("query_us_median", Json::Obj(q));
+        obj.insert("span_overhead_pct", Json::Num(round(overhead_pct)));
+        obj.insert("note", Json::Str("recorded by `cargo bench --bench trace_overhead`".into()));
+        std::fs::write(
+            bench_root.join("BENCH_observability.json"),
+            Json::Obj(obj).to_string_pretty(),
+        )
+        .expect("writing BENCH_observability.json");
+        println!("[trace_overhead] -> BENCH_observability.json (perf trajectory)");
+    }
+}

@@ -146,6 +146,7 @@ use std::time::Duration;
 use crate::coordinator::orchestrator::{ClusterError, QueryResult, QuerySpec};
 use crate::lsh::probe::ProbeSpec;
 use crate::runtime::service::{CutCounters, LaneCounters, QueueStats};
+use crate::runtime::trace::Tracer;
 use crate::util::rng::Xoshiro256;
 
 // ---------------------------------------------------------------------------
@@ -187,7 +188,9 @@ impl Class {
         }
     }
 
-    fn idx(self) -> usize {
+    /// Lane index for per-class arrays (0 = monitor, 1 = analytics);
+    /// mirrors [`trace::LANE_NAMES`](crate::runtime::trace::LANE_NAMES).
+    pub fn idx(self) -> usize {
         self.as_u8() as usize
     }
 }
@@ -734,6 +737,10 @@ struct Pending {
     /// Truncate the rider's returned neighbor list to this length at
     /// fulfillment (0 = cluster default K).
     k: usize,
+    /// Trace id minted at admission (0 = untraced queue). Stamped on the
+    /// rider's queue-wait / service spans at dispatch and carried to the
+    /// cut's wire frame so worker scan spans join the same trace.
+    trace: u64,
     slot: SlotWriter<Result<QueryResult, AdmissionError>>,
 }
 
@@ -774,6 +781,12 @@ struct Shared {
     lane_probes: [AtomicU32; 2],
     /// Per-class EWMA of comparisons-per-query, indexed by `Class::idx()`.
     lane_ewma: [AtomicU64; 2],
+    /// Observability sink ([`AdmissionQueue::start_traced`]): mints a
+    /// trace id per rider and receives per-rider queue-wait / service /
+    /// e2e spans and histograms at dispatch. `None` on the plain
+    /// constructors — the hot path then pays nothing beyond the clock
+    /// reads it already made.
+    tracer: Option<Arc<Tracer>>,
     cfg: AdmissionConfig,
 }
 
@@ -954,6 +967,11 @@ impl AdmissionQueue {
     /// cut's [`ProbeSpec`]: the widest resolved probe count and tightest
     /// nonzero comparison cap across its riders) and returns exactly `nq`
     /// results in order.
+    /// The sixth `dispatch` argument is the cut's wire trace id: the
+    /// first rider's trace when a collecting [`Tracer`] is attached
+    /// (see [`AdmissionQueue::start_traced`]), `0` otherwise — so an
+    /// untraced queue's downstream traffic is byte-identical to one
+    /// built before tracing existed.
     pub fn start<D>(cfg: AdmissionConfig, dispatch: D) -> AdmissionQueue
     where
         D: FnMut(
@@ -962,17 +980,18 @@ impl AdmissionQueue {
                 Budget,
                 Class,
                 ProbeSpec,
+                u64,
             ) -> Result<Vec<QueryResult>, ClusterError>
             + Send
             + 'static,
     {
-        AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(SystemClock::new()))
+        AdmissionQueue::start_inner(cfg, dispatch, Arc::new(SystemClock::new()), None)
     }
 
     /// Start with an injected [`Clock`] (tests use [`MockClock`]).
     pub fn start_with_clock<D>(
         cfg: AdmissionConfig,
-        mut dispatch: D,
+        dispatch: D,
         clock: Arc<dyn Clock>,
     ) -> AdmissionQueue
     where
@@ -982,6 +1001,57 @@ impl AdmissionQueue {
                 Budget,
                 Class,
                 ProbeSpec,
+                u64,
+            ) -> Result<Vec<QueryResult>, ClusterError>
+            + Send
+            + 'static,
+    {
+        AdmissionQueue::start_inner(cfg, dispatch, clock, None)
+    }
+
+    /// Start with an attached [`Tracer`] — the queue runs on the
+    /// tracer's clock (one clock per trace, so queue-wait and service
+    /// spans subtract cleanly), mints a trace id per admitted request,
+    /// and records per-rider queue-wait / service / e2e into the
+    /// tracer's lane histograms at dispatch. When the tracer is
+    /// collecting spans, each rider also gets `queue_wait` and
+    /// `service` spans and the cut's first-rider trace id rides the
+    /// wire to the workers.
+    pub fn start_traced<D>(
+        cfg: AdmissionConfig,
+        dispatch: D,
+        tracer: Arc<Tracer>,
+    ) -> AdmissionQueue
+    where
+        D: FnMut(
+                Vec<f32>,
+                usize,
+                Budget,
+                Class,
+                ProbeSpec,
+                u64,
+            ) -> Result<Vec<QueryResult>, ClusterError>
+            + Send
+            + 'static,
+    {
+        let clock = tracer.clock();
+        AdmissionQueue::start_inner(cfg, dispatch, clock, Some(tracer))
+    }
+
+    fn start_inner<D>(
+        cfg: AdmissionConfig,
+        mut dispatch: D,
+        clock: Arc<dyn Clock>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> AdmissionQueue
+    where
+        D: FnMut(
+                Vec<f32>,
+                usize,
+                Budget,
+                Class,
+                ProbeSpec,
+                u64,
             ) -> Result<Vec<QueryResult>, ClusterError>
             + Send
             + 'static,
@@ -1011,6 +1081,7 @@ impl AdmissionQueue {
             lane_counters: [Arc::new(LaneCounters::new()), Arc::new(LaneCounters::new())],
             lane_probes: [AtomicU32::new(probes0), AtomicU32::new(probes0)],
             lane_ewma: [AtomicU64::new(0), AtomicU64::new(0)],
+            tracer,
             cfg,
         });
 
@@ -1082,7 +1153,15 @@ impl AdmissionQueue {
                     for p in &batch {
                         flat.extend_from_slice(&p.q);
                     }
-                    let outcome = dispatch(flat, nq, budget, class, probe);
+                    // The cut's wire trace: the first rider's id, and
+                    // only while spans are being collected — an idle
+                    // tracer keeps downstream frames byte-identical to
+                    // an untraced queue's.
+                    let cut_trace = match shared.tracer.as_ref() {
+                        Some(t) if t.collecting() => batch.first().map_or(0, |p| p.trace),
+                        _ => 0,
+                    };
+                    let outcome = dispatch(flat, nq, budget, class, probe, cut_trace);
                     // Per-class overrun attribution: every request whose
                     // deadline passed before its batch resolved is a miss
                     // the lane counters must surface.
@@ -1104,7 +1183,16 @@ impl AdmissionQueue {
                             // The cluster failed the whole batch (e.g. it
                             // was dropped mid-flight): every rider learns
                             // why through its ticket; nothing panics,
-                            // nothing hangs.
+                            // nothing hangs. Traces are closed as
+                            // shed+partial — a failed request did no scan
+                            // work, and an open trace must never leak.
+                            if let Some(t) = shared.tracer.as_ref() {
+                                for p in &batch {
+                                    let e2e_us =
+                                        end_ns.saturating_sub(p.enqueue_ns) / 1_000;
+                                    t.finish(p.trace, p.class.idx(), e2e_us, true, true);
+                                }
+                            }
                             for p in batch {
                                 p.slot.fulfill(Err(AdmissionError::Cluster(e)));
                             }
@@ -1164,6 +1252,25 @@ impl AdmissionQueue {
                                 shared.lane_probes[idx].store(next, Ordering::Relaxed);
                             }
                         }
+                        // Per-rider observability: queue-wait is
+                        // enqueue → dispatch-start, service is the shared
+                        // batch resolution, e2e their sum — all on the
+                        // queue's one clock, so MockClock tests pin every
+                        // span exactly. `finish` routes slow / partial /
+                        // shed / hedged requests into the slow ring.
+                        if let Some(t) = shared.tracer.as_ref() {
+                            for (p, r) in batch.iter().zip(&results) {
+                                let lane = p.class.idx();
+                                let queue_wait_us =
+                                    start_ns.saturating_sub(p.enqueue_ns) / 1_000;
+                                let service_us = end_ns.saturating_sub(start_ns) / 1_000;
+                                let e2e_us = end_ns.saturating_sub(p.enqueue_ns) / 1_000;
+                                t.record_lane(lane, queue_wait_us, service_us, e2e_us);
+                                t.span(p.trace, "queue_wait", p.enqueue_ns, start_ns);
+                                t.span(p.trace, "service", start_ns, end_ns);
+                                t.finish(p.trace, lane, e2e_us, r.partial, r.shed_nodes > 0);
+                            }
+                        }
                         for (p, mut r) in batch.into_iter().zip(results) {
                             // A rider's k caps only ITS returned list —
                             // the shared scan (and the vote behind the
@@ -1176,6 +1283,12 @@ impl AdmissionQueue {
                     } else {
                         // Downstream died (cluster teardown): fail the
                         // whole batch rather than misalign replies.
+                        if let Some(t) = shared.tracer.as_ref() {
+                            for p in &batch {
+                                let e2e_us = end_ns.saturating_sub(p.enqueue_ns) / 1_000;
+                                t.finish(p.trace, p.class.idx(), e2e_us, true, true);
+                            }
+                        }
                         for p in batch {
                             p.slot.fulfill(Err(AdmissionError::Canceled));
                         }
@@ -1383,6 +1496,9 @@ impl AdmissionQueue {
             None => u64::MAX,
         };
         let (writer, reader) = completion_slot();
+        // Trace ids are minted at the door (inside the state lock, so
+        // ids are dense in admission order) — 0 on an untraced queue.
+        let trace = self.shared.tracer.as_ref().map_or(0, |t| t.mint(class.idx()));
         let pending = Pending {
             q: q.to_vec(),
             class,
@@ -1392,6 +1508,7 @@ impl AdmissionQueue {
             max_comparisons: spec.max_comparisons,
             policy: spec.policy,
             k: spec.k,
+            trace,
             slot: writer,
         };
         match class {
@@ -1503,7 +1620,14 @@ impl Drop for AdmissionQueue {
 /// [`Orchestrator::enable_admission`]: crate::coordinator::Orchestrator::enable_admission
 pub(crate) fn root_dispatcher(
     root_tx: Sender<crate::coordinator::orchestrator::RootRequest>,
-) -> impl FnMut(Vec<f32>, usize, Budget, Class, ProbeSpec) -> Result<Vec<QueryResult>, ClusterError>
+) -> impl FnMut(
+    Vec<f32>,
+    usize,
+    Budget,
+    Class,
+    ProbeSpec,
+    u64,
+) -> Result<Vec<QueryResult>, ClusterError>
        + Send
        + 'static {
     use crate::coordinator::orchestrator::RootRequest;
@@ -1511,11 +1635,12 @@ pub(crate) fn root_dispatcher(
           nq: usize,
           budget: Budget,
           class: Class,
-          probe: ProbeSpec|
+          probe: ProbeSpec,
+          trace: u64|
           -> Result<Vec<QueryResult>, ClusterError> {
         let (tx, rx) = channel();
         root_tx
-            .send(RootRequest::Batch { qs, nq, budget, class, probe, reply_to: tx })
+            .send(RootRequest::Batch { qs, nq, budget, class, probe, trace, reply_to: tx })
             .map_err(|_| ClusterError::Shutdown)?;
         rx.recv().map_err(|_| ClusterError::Shutdown)
     }
@@ -1541,6 +1666,7 @@ mod tests {
             max_comparisons: 0,
             policy: None,
             k: 0,
+            trace: 0,
             slot: writer,
         }
     }
@@ -1579,6 +1705,7 @@ mod tests {
         _budget: Budget,
         _class: Class,
         _probe: ProbeSpec,
+        _trace: u64,
     ) -> Result<Vec<QueryResult>, ClusterError> {
         let dim = if nq == 0 { 0 } else { flat.len() / nq };
         Ok((0..nq)
@@ -1854,11 +1981,12 @@ mod tests {
         // channel handshakes + counter waits — no sleeps.
         let (evt_tx, evt_rx) = channel::<usize>();
         let (gate_tx, gate_rx) = channel::<()>();
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
-            evt_tx.send(nq).unwrap();
-            gate_rx.recv().unwrap();
-            echo(flat, nq, b, c, p)
-        };
+        let dispatch =
+            move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec, t: u64| {
+                evt_tx.send(nq).unwrap();
+                gate_rx.recv().unwrap();
+                echo(flat, nq, b, c, p, t)
+            };
         let cfg = AdmissionConfig::new(1, 2).with_queue_cap(2).with_pipeline(1);
         let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
 
@@ -1930,13 +2058,14 @@ mod tests {
         // A dispatch that fails (dead cluster) must fulfill every rider
         // of the batch with a typed error — no panic, no hang, and the
         // queue keeps serving later batches.
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
-            if flat[0] < 0.0 {
-                Err(ClusterError::Shutdown)
-            } else {
-                echo(flat, nq, b, c, p)
-            }
-        };
+        let dispatch =
+            move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec, t: u64| {
+                if flat[0] < 0.0 {
+                    Err(ClusterError::Shutdown)
+                } else {
+                    echo(flat, nq, b, c, p, t)
+                }
+            };
         let cfg = AdmissionConfig::new(1, 2);
         let q = AdmissionQueue::start_with_clock(cfg, dispatch, Arc::new(MockClock::new(0)));
         let bad1 = q.submit(&[-1.0], FAR).unwrap();
@@ -1955,10 +2084,11 @@ mod tests {
         // probe count, the TIGHTEST nonzero comparison cap, and the
         // STRICTEST policy named by any rider.
         let (cap_tx, cap_rx) = channel::<(Budget, ProbeSpec)>();
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
-            cap_tx.send((b, p)).unwrap();
-            echo(flat, nq, b, c, p)
-        };
+        let dispatch =
+            move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec, t: u64| {
+                cap_tx.send((b, p)).unwrap();
+                echo(flat, nq, b, c, p, t)
+            };
         let q = AdmissionQueue::start_with_clock(
             AdmissionConfig::new(1, 2),
             dispatch,
@@ -1985,10 +2115,11 @@ mod tests {
     #[test]
     fn budgetless_spec_ships_the_no_deadline_sentinel() {
         let (cap_tx, cap_rx) = channel::<(Budget, ProbeSpec)>();
-        let dispatch = move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec| {
-            cap_tx.send((b, p)).unwrap();
-            echo(flat, nq, b, c, p)
-        };
+        let dispatch =
+            move |flat: Vec<f32>, nq: usize, b: Budget, c: Class, p: ProbeSpec, t: u64| {
+                cap_tx.send((b, p)).unwrap();
+                echo(flat, nq, b, c, p, t)
+            };
         let q = AdmissionQueue::start_with_clock(
             AdmissionConfig::new(1, 1),
             dispatch,
@@ -2007,7 +2138,8 @@ mod tests {
     fn auto_probes_controller_steps_on_feedback() {
         // Feedback plant: comparisons = |x|, partial iff x < 0. Target
         // 1000: cheap clean cuts step the lane up; a partial steps down.
-        let dispatch = move |flat: Vec<f32>, nq: usize, _b: Budget, _c: Class, _p: ProbeSpec| {
+        let dispatch =
+            move |flat: Vec<f32>, nq: usize, _b: Budget, _c: Class, _p: ProbeSpec, _t: u64| {
             Ok((0..nq)
                 .map(|i| QueryResult {
                     qid: i as u64,
@@ -2069,7 +2201,8 @@ mod tests {
         // absurd comparison counts (f32::MAX casts saturate to u64::MAX)
         // must leave the lane EWMA huge-but-sane — above target, never
         // wrapped to a small number that would step probes UP.
-        let dispatch = move |flat: Vec<f32>, nq: usize, _b: Budget, _c: Class, _p: ProbeSpec| {
+        let dispatch =
+            move |flat: Vec<f32>, nq: usize, _b: Budget, _c: Class, _p: ProbeSpec, _t: u64| {
             Ok((0..nq)
                 .map(|i| QueryResult {
                     qid: i as u64,

@@ -87,6 +87,7 @@ use crate::lsh::probe::{ProbeSpec, MAX_PROBES};
 use crate::knn::predict::{positive_share, VoteConfig};
 use crate::node::node::{HeartbeatReply, InsertReply, NodeInfo, NodeReply};
 use crate::runtime::service::{FailoverCounters, FailoverStats, IngestCounters, IngestStats};
+use crate::runtime::trace::{NodeSpan, Tracer};
 use crate::util::clock::{Clock, SystemClock};
 
 /// Sentinel budget for batches that carry no latency deadline (direct
@@ -368,6 +369,23 @@ pub trait NodeHandle: Send {
         self.query_batch_budget(qs, nq, budget, class)
     }
 
+    /// [`query_batch_spec`](NodeHandle::query_batch_spec) plus the
+    /// request's trace id (`0` = untraced). The default ignores the id —
+    /// correct for handles that cannot carry it (the replies' own
+    /// `scan_ns`/`tables` spans are still real). `RemoteNode` overrides
+    /// to ship the id with the frame and verify the reply echoes it.
+    fn query_batch_traced(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        probe: ProbeSpec,
+        _trace: u64,
+    ) -> Result<Vec<NodeReply>, NodeError> {
+        self.query_batch_spec(qs, nq, budget, class, probe)
+    }
+
     /// Append a batch of labeled points to this node's live index
     /// (`points` row-major `labels.len() × dim`), returning once every
     /// core has indexed them. Only live nodes
@@ -540,6 +558,10 @@ enum Job {
         budget: Budget,
         class: Class,
         probe: ProbeSpec,
+        /// Trace id of the request (or the cut's lead rider); `0` =
+        /// untraced. Travels with the job to every shard so node spans
+        /// and the `QueryBatchBudget` frame carry it.
+        trace: u64,
     },
     /// Online insert, ROUTED to shard `target` (never broadcast — each
     /// point lives on exactly one shard); the dispatcher acks straight
@@ -561,6 +583,8 @@ pub(crate) enum RootRequest {
         budget: Budget,
         class: Class,
         probe: ProbeSpec,
+        /// Trace id (`0` = untraced), forwarded into [`Job::Batch`].
+        trace: u64,
         reply_to: Sender<Vec<QueryResult>>,
     },
 }
@@ -611,6 +635,9 @@ pub struct Orchestrator {
     /// Hedge / failover / reconnect telemetry, shared with the shard
     /// dispatchers.
     failover: Arc<FailoverCounters>,
+    /// End-to-end tracing + latency histograms, shared with the shard
+    /// dispatchers and (once installed) the admission queue and edge.
+    tracer: Arc<Tracer>,
 }
 
 /// Cap on a dispatcher's blocking wait while a request is in flight: the
@@ -668,6 +695,7 @@ impl Orchestrator {
         let node_infos: Vec<NodeInfo> = sets.iter().map(|s| s.replicas[0].info()).collect();
         let counters = Arc::new(FailoverCounters::new());
         let ingest = Arc::new(IngestCounters::new());
+        let tracer = Arc::new(Tracer::new(Arc::clone(&clock), nu));
         let mut threads = Vec::new();
 
         // Channels. The reduce channel carries the shard id so the
@@ -708,6 +736,7 @@ impl Orchestrator {
             let cfg = failover.clone();
             let counters = Arc::clone(&counters);
             let ingest = Arc::clone(&ingest);
+            let tracer_d = Arc::clone(&tracer);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("shard-dispatch-{shard}"))
@@ -720,6 +749,7 @@ impl Orchestrator {
                             cfg,
                             counters,
                             ingest,
+                            tracer: tracer_d,
                             health: vec![Health::Up; n_rep],
                             busy: vec![false; n_rep],
                             reconnect: vec![None; n_rep],
@@ -844,7 +874,8 @@ impl Orchestrator {
                     };
                     let mut qid = 0u64;
                     while let Ok(req) = root_rx.recv() {
-                        let RootRequest::Batch { qs, nq, budget, class, probe, reply_to } = req;
+                        let RootRequest::Batch { qs, nq, budget, class, probe, trace, reply_to } =
+                            req;
                         let n = nq;
                         if n == 0 {
                             let _ = reply_to.send(Vec::new());
@@ -859,6 +890,7 @@ impl Orchestrator {
                                 budget,
                                 class,
                                 probe,
+                                trace,
                             })
                             .is_err()
                         {
@@ -891,6 +923,7 @@ impl Orchestrator {
             next_ingest: AtomicUsize::new(0),
             ingest,
             failover: counters,
+            tracer,
         }
     }
 
@@ -966,6 +999,16 @@ impl Orchestrator {
             return Ok(Vec::new());
         }
         assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
+        // Direct-path tracing: mint here (the admission path mints per
+        // rider instead), time the round trip on the tracer's clock, and
+        // feed the lane histograms. Queue wait is zero by construction —
+        // there is no queue on this door. The id only rides the job (and
+        // hence the wire, where a nonzero id forces the budget frame)
+        // while span collection is on — with it off, wire traffic stays
+        // byte-identical to an untraced cluster.
+        let lane = spec.class.idx();
+        let trace = self.tracer.mint(lane);
+        let start_ns = self.tracer.now_ns();
         let (tx, rx) = channel();
         self.root_tx
             .send(RootRequest::Batch {
@@ -974,6 +1017,7 @@ impl Orchestrator {
                 budget: spec.direct_budget(),
                 class: spec.class,
                 probe: spec.probe_spec(),
+                trace: if self.tracer.collecting() { trace } else { 0 },
                 reply_to: tx,
             })
             .map_err(|_| ClusterError::Shutdown)?;
@@ -983,6 +1027,13 @@ impl Orchestrator {
                 r.neighbors.truncate(spec.k);
             }
         }
+        let end_ns = self.tracer.now_ns();
+        let e2e_us = end_ns.saturating_sub(start_ns) / 1_000;
+        self.tracer.span(trace, "service", start_ns, end_ns);
+        self.tracer.record_lane(lane, 0, e2e_us, e2e_us);
+        let partial = results.iter().any(|r| r.partial);
+        let shed = results.iter().any(|r| r.shed_nodes > 0);
+        self.tracer.finish(trace, lane, e2e_us, partial, shed);
         Ok(results)
     }
 
@@ -1009,6 +1060,7 @@ impl Orchestrator {
                 budget,
                 class,
                 probe: ProbeSpec::BASELINE,
+                trace: 0,
                 reply_to: tx,
             })
             .map_err(|_| ClusterError::Shutdown)?;
@@ -1108,7 +1160,18 @@ impl Orchestrator {
         // the root channel.
         self.admission = None;
         let dispatch = root_dispatcher(self.root_tx.clone());
-        self.admission = Some(AdmissionQueue::start(cfg, dispatch));
+        // The queue shares the orchestrator's tracer (and hence its
+        // clock): per-rider queue-wait / service spans land in the same
+        // histograms as direct-path queries.
+        self.admission = Some(AdmissionQueue::start_traced(cfg, dispatch, self.tracer()));
+    }
+
+    /// The cluster's [`Tracer`]: per-lane and per-shard latency
+    /// histograms (always on), opt-in span collection, and the
+    /// slow-query ring. The serving edge exposes it at `GET /metrics`
+    /// and `GET /v1/debug/slow`.
+    pub fn tracer(&self) -> Arc<Tracer> {
+        Arc::clone(&self.tracer)
     }
 
     /// Admit one [`Class::Monitor`] query with a latency budget; returns
@@ -1216,8 +1279,8 @@ fn run_replica(
         let (seq, outcome) = match rj {
             ReplicaJob::Run { seq, job } => {
                 let out = match job {
-                    Job::Batch { qid0, qs, nq, budget, class, probe } => {
-                        node.query_batch_spec(qs, nq, budget, class, probe).map(|rs| {
+                    Job::Batch { qid0, qs, nq, budget, class, probe, trace } => {
+                        node.query_batch_traced(qs, nq, budget, class, probe, trace).map(|rs| {
                             rs.into_iter()
                                 .enumerate()
                                 .map(|(i, r)| (qid0 + i as u64, r))
@@ -1265,6 +1328,7 @@ struct ShardDispatcher {
     cfg: FailoverConfig,
     counters: Arc<FailoverCounters>,
     ingest: Arc<IngestCounters>,
+    tracer: Arc<Tracer>,
     health: Vec<Health>,
     /// Replica has an unanswered job in its inbox (stale or current).
     busy: Vec<bool>,
@@ -1291,9 +1355,11 @@ impl ShardDispatcher {
             self.drain_stale();
             self.fire_duties();
             match inbox.recv_timeout(self.idle_wait()) {
-                Ok(Job::Batch { qid0, qs, nq, budget, class, probe }) => {
-                    self.resolve(qid0, nq, Job::Batch { qid0, qs, nq, budget, class, probe })
-                }
+                Ok(Job::Batch { qid0, qs, nq, budget, class, probe, trace }) => self.resolve(
+                    qid0,
+                    nq,
+                    Job::Batch { qid0, qs, nq, budget, class, probe, trace },
+                ),
                 Ok(Job::Insert { points, labels, reply, .. }) => {
                     self.insert(points, labels, reply)
                 }
@@ -1340,6 +1406,10 @@ impl ShardDispatcher {
     /// total loss or `cfg.request_timeout` — exactly one reply per qid
     /// reaches the Reducer.
     fn resolve(&mut self, qid0: u64, nq: usize, job: Job) {
+        let trace = match &job {
+            Job::Batch { trace, .. } => *trace,
+            Job::Insert { .. } => 0,
+        };
         let seq = self.take_seq();
         let mut remaining = self.candidates();
         let mut inflight: Vec<usize> = Vec::new();
@@ -1383,6 +1453,29 @@ impl ShardDispatcher {
                             if hedge_replica == Some(idx) {
                                 self.counters.record_hedge_win();
                             }
+                            // Shard distributions, once per batch: the
+                            // network round trip (runner wall time) and
+                            // the node's own scan span (batch-wide, so
+                            // every reply of the batch carries the same
+                            // value — record the first).
+                            self.tracer.record_shard_net(self.shard, (dt * 1e6) as u64);
+                            if let Some((_, first)) = replies.first() {
+                                self.tracer.record_shard_scan(self.shard, first.scan_ns / 1_000);
+                                if trace != 0 {
+                                    let span = NodeSpan {
+                                        shard: self.shard,
+                                        scan_ns: first.scan_ns,
+                                        comparisons: replies
+                                            .iter()
+                                            .flat_map(|(_, r)| r.comparisons.iter().copied())
+                                            .sum(),
+                                        tables: first.tables,
+                                        partial: replies.iter().any(|(_, r)| r.partial),
+                                        shed: replies.iter().any(|(_, r)| r.shed),
+                                    };
+                                    self.tracer.node_span(trace, span);
+                                }
+                            }
                             for (qid, reply) in replies {
                                 let _ = self.reduce_tx.send((qid, self.shard, reply, dt));
                             }
@@ -1410,6 +1503,7 @@ impl ShardDispatcher {
                         hedged = true;
                         if let Some(h) = self.try_dispatch(&mut remaining, seq, &job) {
                             self.counters.record_hedge();
+                            self.tracer.note_hedge(trace);
                             hedge_replica = Some(h);
                             if let Some(&p) = inflight.first() {
                                 if self.health[p] == Health::Up {
@@ -1517,6 +1611,8 @@ impl ShardDispatcher {
                 neighbors: Vec::new(),
                 comparisons: vec![0u64; self.cores],
                 inner_probes: 0,
+                scan_ns: 0,
+                tables: 0,
                 partial: true,
                 shed: true,
             };

@@ -38,6 +38,15 @@
 //!   failure detector reports every replica reachable
 //!   (`FailoverStats::replicas_down == 0`), else `503` — so a load
 //!   balancer stops routing to an edge whose cluster is degraded.
+//! * `GET /metrics` — the same counters (plus the tracing subsystem's
+//!   per-lane queue-wait / service / e2e and per-shard network / scan
+//!   histograms, and the per-cause dropped-input counters) in Prometheus
+//!   text exposition format: one scrape covers every stats family the
+//!   edge knows about.
+//! * `GET /v1/debug/slow` — the tracer's bounded slow-query ring as
+//!   JSON: per-stage spans and per-shard scan summaries of recent
+//!   slow / partial / shed / hedged requests (requires span collection,
+//!   [`Tracer::set_collect`]).
 //!
 //! Time is injected: the read deadline (slowloris cut-off) and the
 //! per-request latency counters run on the [`Clock`] handed to
@@ -57,9 +66,12 @@ use crate::coordinator::{
     QueryResult, QuerySpec,
 };
 use crate::net::http::{parse_request, HttpError, Limits, Request, Response};
+use crate::runtime::hist::{bucket_upper_bound, HistSnapshot, NUM_BUCKETS};
 use crate::runtime::service::{
-    EdgeCounters, EdgeEndpoint, EdgeStats, FailoverStats, IngestStats,
+    decode_reject_counts, EdgeCounters, EdgeEndpoint, EdgeStats, EndpointStats, FailoverStats,
+    IngestStats,
 };
+use crate::runtime::trace::{Tracer, LANE_NAMES, NUM_LANES};
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::json::{Json, JsonObj};
 
@@ -228,7 +240,13 @@ fn handle_conn(sh: &Shared, mut stream: TcpStream) {
     let (endpoint, resp) =
         match parse_request(&mut stream, sh.clock.as_ref(), deadline_ns, &sh.cfg.limits) {
             Ok(req) => route(sh, &req),
-            Err(e) => (EdgeEndpoint::Other, Response::from_err(&e)),
+            Err(e) => {
+                // A parser 4xx used to vanish into `other.errors` with no
+                // cause: count it by the typed error code so `/metrics`
+                // can say WHY inputs are being turned away.
+                sh.counters.record_http_reject(e.code);
+                (EdgeEndpoint::Other, Response::from_err(&e))
+            }
         };
     let status = resp.status;
     let _ = resp.write_to(&mut stream);
@@ -256,10 +274,13 @@ fn route(sh: &Shared, req: &Request) -> (EdgeEndpoint, Response) {
         ("GET", "/v1/stats") => (EdgeEndpoint::Stats, handle_stats(sh)),
         ("GET", "/healthz") => (EdgeEndpoint::Health, handle_healthz()),
         ("GET", "/readyz") => (EdgeEndpoint::Health, handle_readyz(sh)),
+        ("GET", "/metrics") => (EdgeEndpoint::Metrics, handle_metrics(sh)),
+        ("GET", "/v1/debug/slow") => (EdgeEndpoint::Metrics, handle_slow(sh)),
         (_, "/v1/query") => (EdgeEndpoint::Query, method_not_allowed("POST")),
         (_, "/v1/insert") => (EdgeEndpoint::Insert, method_not_allowed("POST")),
         (_, "/v1/stats") => (EdgeEndpoint::Stats, method_not_allowed("GET")),
         (_, "/healthz" | "/readyz") => (EdgeEndpoint::Health, method_not_allowed("GET")),
+        (_, "/metrics" | "/v1/debug/slow") => (EdgeEndpoint::Metrics, method_not_allowed("GET")),
         _ => (EdgeEndpoint::Other, Response::error(404, "not-found", "unknown path")),
     }
 }
@@ -514,6 +535,237 @@ fn handle_readyz(sh: &Shared) -> Response {
 }
 
 // ---------------------------------------------------------------------------
+// GET /metrics, /v1/debug/slow
+// ---------------------------------------------------------------------------
+
+fn handle_metrics(sh: &Shared) -> Response {
+    Response::metrics_text(200, prometheus_metrics(sh))
+}
+
+fn handle_slow(sh: &Shared) -> Response {
+    Response::json(200, sh.orch.tracer().slow_json().to_string_compact())
+}
+
+/// One histogram family in text exposition format: cumulative
+/// `_bucket{le=...}` rows up to the last non-empty bucket (sparse
+/// cumulative buckets are legal and keep 64-bucket histograms readable),
+/// then `+Inf`, `_sum` and `_count`. `labels` must be non-empty.
+fn prom_histogram(out: &mut String, name: &str, labels: &str, h: &HistSnapshot) {
+    use std::fmt::Write as _;
+    let last = (0..NUM_BUCKETS).rev().find(|&i| h.buckets[i] > 0);
+    let mut cum = 0u64;
+    if let Some(last) = last {
+        for i in 0..=last {
+            cum += h.buckets[i];
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{{labels},le=\"{}\"}} {cum}",
+                bucket_upper_bound(i)
+            );
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.count);
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum);
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count);
+}
+
+fn prom_type(out: &mut String, name: &str, kind: &str) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn prom_val(out: &mut String, name: &str, labels: &str, v: u64) {
+    use std::fmt::Write as _;
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {v}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {v}");
+    }
+}
+
+/// Render EVERY stats family the edge knows about — per-endpoint edge
+/// counters + latency histograms, admission queue/cut/lane counters,
+/// ingest, failover, the tracer's per-lane and per-shard histograms, and
+/// the per-cause dropped-input counters — as one Prometheus scrape.
+fn prometheus_metrics(sh: &Shared) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    // --- serving edge, per endpoint ---
+    let es = sh.counters.snapshot();
+    let endpoints: [(&str, &EndpointStats); 6] = [
+        ("query", &es.query),
+        ("insert", &es.insert),
+        ("stats", &es.stats),
+        ("health", &es.health),
+        ("metrics", &es.metrics),
+        ("other", &es.other),
+    ];
+    prom_type(&mut out, "dslsh_edge_requests_total", "counter");
+    for (name, e) in endpoints {
+        prom_val(&mut out, "dslsh_edge_requests_total", &format!("endpoint=\"{name}\""), e.requests);
+    }
+    prom_type(&mut out, "dslsh_edge_errors_total", "counter");
+    for (name, e) in endpoints {
+        prom_val(&mut out, "dslsh_edge_errors_total", &format!("endpoint=\"{name}\""), e.errors);
+    }
+    prom_type(&mut out, "dslsh_edge_latency_us", "histogram");
+    for (name, e) in endpoints {
+        prom_histogram(
+            &mut out,
+            "dslsh_edge_latency_us",
+            &format!("endpoint=\"{name}\""),
+            &e.latency_us,
+        );
+    }
+
+    // --- admission queue + cuts + lanes (when installed) ---
+    if let Some(q) = sh.orch.admission() {
+        let s = q.stats();
+        prom_type(&mut out, "dslsh_admission_depth", "gauge");
+        prom_val(&mut out, "dslsh_admission_depth", "", s.depth as u64);
+        prom_type(&mut out, "dslsh_admission_high_water", "gauge");
+        prom_val(&mut out, "dslsh_admission_high_water", "", s.high_water as u64);
+        prom_type(&mut out, "dslsh_admission_submitted_total", "counter");
+        prom_val(&mut out, "dslsh_admission_submitted_total", "", s.submitted);
+        prom_type(&mut out, "dslsh_admission_completed_total", "counter");
+        prom_val(&mut out, "dslsh_admission_completed_total", "", s.completed);
+        prom_type(&mut out, "dslsh_admission_rejected_full_total", "counter");
+        prom_val(&mut out, "dslsh_admission_rejected_full_total", "", s.rejected_full);
+        prom_type(&mut out, "dslsh_admission_cuts_total", "counter");
+        for (reason, v) in [
+            ("fill", s.cuts_fill),
+            ("deadline", s.cuts_deadline),
+            ("aged", s.cuts_aged),
+            ("drain", s.cuts_drain),
+        ] {
+            prom_val(&mut out, "dslsh_admission_cuts_total", &format!("reason=\"{reason}\""), v);
+        }
+        let lanes = [("monitor", &s.monitor), ("analytics", &s.analytics)];
+        prom_type(&mut out, "dslsh_lane_depth", "gauge");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_depth", &format!("lane=\"{lane}\""), l.depth as u64);
+        }
+        prom_type(&mut out, "dslsh_lane_submitted_total", "counter");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_submitted_total", &format!("lane=\"{lane}\""), l.submitted);
+        }
+        prom_type(&mut out, "dslsh_lane_dispatched_total", "counter");
+        for (lane, l) in lanes {
+            for (reason, v) in [
+                ("fill", l.dispatched_fill),
+                ("deadline", l.dispatched_deadline),
+                ("aged", l.dispatched_aged),
+                ("drain", l.dispatched_drain),
+            ] {
+                prom_val(
+                    &mut out,
+                    "dslsh_lane_dispatched_total",
+                    &format!("lane=\"{lane}\",reason=\"{reason}\""),
+                    v,
+                );
+            }
+        }
+        prom_type(&mut out, "dslsh_lane_overruns_total", "counter");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_overruns_total", &format!("lane=\"{lane}\""), l.overruns);
+        }
+        prom_type(&mut out, "dslsh_lane_partials_total", "counter");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_partials_total", &format!("lane=\"{lane}\""), l.partials);
+        }
+        prom_type(&mut out, "dslsh_lane_sheds_total", "counter");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_sheds_total", &format!("lane=\"{lane}\""), l.sheds);
+        }
+        prom_type(&mut out, "dslsh_lane_inserted_total", "counter");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_inserted_total", &format!("lane=\"{lane}\""), l.inserted);
+        }
+        prom_type(&mut out, "dslsh_lane_rejected_full_total", "counter");
+        for (lane, l) in lanes {
+            prom_val(
+                &mut out,
+                "dslsh_lane_rejected_full_total",
+                &format!("lane=\"{lane}\""),
+                l.rejected_full,
+            );
+        }
+        prom_type(&mut out, "dslsh_lane_probes", "gauge");
+        for (lane, l) in lanes {
+            prom_val(&mut out, "dslsh_lane_probes", &format!("lane=\"{lane}\""), u64::from(l.probes));
+        }
+        prom_type(&mut out, "dslsh_lane_ewma_comparisons", "gauge");
+        for (lane, l) in lanes {
+            prom_val(
+                &mut out,
+                "dslsh_lane_ewma_comparisons",
+                &format!("lane=\"{lane}\""),
+                l.ewma_comparisons,
+            );
+        }
+    }
+
+    // --- ingest ---
+    let ing = sh.orch.ingest_stats();
+    prom_type(&mut out, "dslsh_ingest_batches_total", "counter");
+    prom_val(&mut out, "dslsh_ingest_batches_total", "", ing.batches);
+    prom_type(&mut out, "dslsh_ingest_points_total", "counter");
+    prom_val(&mut out, "dslsh_ingest_points_total", "", ing.points);
+    prom_type(&mut out, "dslsh_ingest_sealed_segments", "gauge");
+    prom_val(&mut out, "dslsh_ingest_sealed_segments", "", ing.sealed_segments);
+
+    // --- failover ---
+    let f = sh.orch.failover_stats();
+    for (name, v) in [
+        ("dslsh_failover_hedges_total", f.hedges),
+        ("dslsh_failover_hedge_wins_total", f.hedge_wins),
+        ("dslsh_failover_failovers_total", f.failovers),
+        ("dslsh_failover_synthesized_sheds_total", f.synthesized_sheds),
+        ("dslsh_failover_heartbeats_total", f.heartbeats),
+        ("dslsh_failover_reconnect_attempts_total", f.reconnect_attempts),
+        ("dslsh_failover_reconnects_total", f.reconnects),
+        ("dslsh_failover_down_transitions_total", f.down_transitions),
+    ] {
+        prom_type(&mut out, name, "counter");
+        prom_val(&mut out, name, "", v);
+    }
+    prom_type(&mut out, "dslsh_replicas_down", "gauge");
+    prom_val(&mut out, "dslsh_replicas_down", "", f.replicas_down);
+
+    // --- tracing: per-lane stage + per-shard network/scan histograms ---
+    let tracer: Arc<Tracer> = sh.orch.tracer();
+    prom_type(&mut out, "dslsh_lane_queue_wait_us", "histogram");
+    prom_type(&mut out, "dslsh_lane_service_us", "histogram");
+    prom_type(&mut out, "dslsh_lane_e2e_us", "histogram");
+    for lane in 0..NUM_LANES {
+        let h = tracer.lane_hists(lane);
+        let labels = format!("lane=\"{}\"", LANE_NAMES[lane]);
+        prom_histogram(&mut out, "dslsh_lane_queue_wait_us", &labels, &h.queue_wait_us);
+        prom_histogram(&mut out, "dslsh_lane_service_us", &labels, &h.service_us);
+        prom_histogram(&mut out, "dslsh_lane_e2e_us", &labels, &h.e2e_us);
+    }
+    prom_type(&mut out, "dslsh_shard_net_us", "histogram");
+    prom_type(&mut out, "dslsh_shard_scan_us", "histogram");
+    for shard in 0..tracer.num_shards() {
+        let h = tracer.shard_hists(shard);
+        let labels = format!("shard=\"{shard}\"");
+        prom_histogram(&mut out, "dslsh_shard_net_us", &labels, &h.net_us);
+        prom_histogram(&mut out, "dslsh_shard_scan_us", &labels, &h.scan_us);
+    }
+
+    // --- silently-dropped input accounting, by cause ---
+    prom_type(&mut out, "dslsh_tcp_decode_rejects_total", "counter");
+    for (kind, v) in decode_reject_counts() {
+        prom_val(&mut out, "dslsh_tcp_decode_rejects_total", &format!("kind=\"{kind}\""), v);
+    }
+    prom_type(&mut out, "dslsh_http_rejects_total", "counter");
+    for (code, v) in sh.counters.http_reject_counts() {
+        prom_val(&mut out, "dslsh_http_rejects_total", &format!("code=\"{code}\""), v);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // JSON helpers
 // ---------------------------------------------------------------------------
 
@@ -644,12 +896,19 @@ fn edge_json(s: &EdgeStats) -> Json {
         ("insert", s.insert),
         ("stats", s.stats),
         ("health", s.health),
+        ("metrics", s.metrics),
         ("other", s.other),
     ] {
         let mut row = JsonObj::new();
         row.insert("requests", num(e.requests));
         row.insert("errors", num(e.errors));
         row.insert("latency_us_sum", num(e.latency_us_sum));
+        // Distribution summary from the per-endpoint histogram: the mean
+        // alone hides tails, which is the whole reason the histogram
+        // exists. Percentiles report each bucket's inclusive upper bound.
+        row.insert("latency_us_mean", Json::Num(e.latency_us.mean()));
+        row.insert("latency_us_p50", num(e.latency_us.p50()));
+        row.insert("latency_us_p99", num(e.latency_us.p99()));
         o.insert(name, Json::Obj(row));
     }
     Json::Obj(o)

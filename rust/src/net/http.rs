@@ -437,20 +437,39 @@ fn parse_content_length(v: &str, limits: &Limits) -> Result<usize, HttpError> {
 }
 
 /// One HTTP response. The writer always emits `Content-Length`,
-/// `Content-Type: application/json` and `Connection: close` — the edge
-/// speaks one request per connection, so clients frame on close and a
-/// desynchronized parse cannot leak into a second request.
+/// `Content-Type` and `Connection: close` — the edge speaks one request
+/// per connection, so clients frame on close and a desynchronized parse
+/// cannot leak into a second request. Bodies are JSON everywhere except
+/// `GET /metrics`, which speaks the Prometheus text exposition format.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: String,
+    pub content_type: &'static str,
 }
 
 impl Response {
     /// A JSON response with the given status.
     pub fn json(status: u16, body: impl Into<String>) -> Response {
-        Response { status, headers: Vec::new(), body: body.into() }
+        Response {
+            status,
+            headers: Vec::new(),
+            body: body.into(),
+            content_type: "application/json",
+        }
+    }
+
+    /// A Prometheus text-exposition response (`GET /metrics`). The
+    /// `version=0.0.4` parameter is the scrape format version Prometheus
+    /// content-negotiates on, not this crate's version.
+    pub fn metrics_text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: body.into(),
+            content_type: "text/plain; version=0.0.4",
+        }
     }
 
     /// The canonical typed error response.
@@ -470,7 +489,7 @@ impl Response {
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
-        write!(w, "Content-Type: application/json\r\n")?;
+        write!(w, "Content-Type: {}\r\n", self.content_type)?;
         write!(w, "Content-Length: {}\r\n", self.body.len())?;
         write!(w, "Connection: close\r\n")?;
         for (k, v) in &self.headers {

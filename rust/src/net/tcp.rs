@@ -39,6 +39,7 @@ use crate::engine::native::NativeEngine;
 use crate::engine::DistanceEngine;
 use crate::node::node::{HeartbeatReply, InsertReply, LocalNode, NodeInfo, NodeReply};
 use crate::net::wire::{validate_batch_geometry, BatchReplyItem, Message};
+use crate::runtime::service::note_decode_reject;
 use crate::slsh::{SealPolicy, SlshParams};
 use crate::util::clock::SystemClock;
 
@@ -50,10 +51,13 @@ fn native_factory(p: usize) -> Vec<Box<dyn DistanceEngine>> {
     (0..p).map(|_| Box::new(NativeEngine::new()) as Box<dyn DistanceEngine>).collect()
 }
 
-/// Ship a node's batch answers back as one `ReplyBatch` frame.
+/// Ship a node's batch answers back as one `ReplyBatch` frame, echoing
+/// the request's trace id so the orchestrator can attribute the per-node
+/// scan spans (`scan_ns`, `tables`) that ride each item.
 fn reply_batch<W: std::io::Write>(
     writer: &mut W,
     qid0: u64,
+    trace: u64,
     replies: Vec<NodeReply>,
 ) -> Result<()> {
     let items: Vec<BatchReplyItem> = replies
@@ -62,11 +66,13 @@ fn reply_batch<W: std::io::Write>(
             neighbors: r.neighbors,
             comparisons: r.comparisons,
             inner_probes: r.inner_probes,
+            scan_ns: r.scan_ns,
+            tables: r.tables,
             partial: r.partial,
             shed: r.shed,
         })
         .collect();
-    Message::ReplyBatch { qid0, replies: items }.write_frame(writer)?;
+    Message::ReplyBatch { qid0, trace, replies: items }.write_frame(writer)?;
     Ok(())
 }
 
@@ -107,7 +113,13 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
     // Phase 1: Build (batch over a shipped shard) or BuildLive (empty
     // streaming node).
     let build = Message::read_frame(&mut reader)
-        .map_err(|e| anyhow!("reading build frame: {e}"))?
+        .map_err(|e| {
+            // A frame that fails to decode is otherwise silently dropped
+            // with the connection — attribute it by cause so the scrape
+            // surface (`dslsh_decode_rejects_total`) makes it visible.
+            note_decode_reject(e.kind());
+            anyhow!("reading build frame: {e}")
+        })?
         .ok_or_else(|| anyhow!("peer closed before Build"))?;
     let (mut node, dim, shard_len) = match build {
         Message::Build { node_id, id_base, p, params, shard } => {
@@ -157,7 +169,10 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
     // Phase 2: queries, heartbeats and (live) inserts, freely interleaved.
     let mut served = 0u64;
     loop {
-        match Message::read_frame(&mut reader).map_err(|e| anyhow!("reading frame: {e}"))? {
+        match Message::read_frame(&mut reader).map_err(|e| {
+            note_decode_reject(e.kind());
+            anyhow!("reading frame: {e}")
+        })? {
             None | Some(Message::Shutdown) => break,
             Some(Message::Query { qid, q }) => {
                 // Same hostile-input hardening as the batch arm: a
@@ -182,7 +197,7 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 let nq = validate_batch_geometry(nq, qs.len(), dim)
                     .map_err(|e| anyhow!("{e}"))?;
                 let replies = node.query_batch(Arc::new(qs), nq);
-                reply_batch(&mut writer, qid0, replies)?;
+                reply_batch(&mut writer, qid0, 0, replies)?;
                 served += nq as u64;
             }
             Some(Message::QueryBatchBudget {
@@ -193,6 +208,7 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 policy,
                 probes,
                 max_comparisons,
+                trace,
                 qs,
             }) => {
                 let nq = validate_batch_geometry(nq, qs.len(), dim)
@@ -209,7 +225,7 @@ pub fn serve_connection(stream: TcpStream, engines: Option<&EngineFactory>) -> R
                 let budget = Budget::enforced(budget_us, policy);
                 let spec = ProbeSpec::new(probes, max_comparisons);
                 let replies = node.query_batch_spec(Arc::new(qs), nq, budget, class, spec);
-                reply_batch(&mut writer, qid0, replies)?;
+                reply_batch(&mut writer, qid0, trace, replies)?;
                 served += nq as u64;
             }
             Some(Message::InsertBatch { seq, n, points, labels }) => {
@@ -420,6 +436,7 @@ impl RemoteNode {
         budget: Budget,
         class: Class,
         probe: ProbeSpec,
+        trace: u64,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
         if nq == 0 {
             return Ok(Vec::new());
@@ -429,10 +446,11 @@ impl RemoteNode {
         self.next_qid += nq as u64;
         // Baseline-knob budgetless batches stay on the plain `QueryBatch`
         // frame — byte-identical wire traffic to a pre-spec client.
-        // Anything carrying a knob (a budget, extra probes, or a cap)
-        // rides `QueryBatchBudget`, with `u64::MAX` as the no-deadline
-        // budget when only probe knobs are set.
-        let frame = if budget.is_none() && probe.is_baseline() {
+        // Anything carrying a knob (a budget, extra probes, a cap, or a
+        // trace id — the plain frame has no trace field) rides
+        // `QueryBatchBudget`, with `u64::MAX` as the no-deadline budget
+        // when only probe knobs are set.
+        let frame = if budget.is_none() && probe.is_baseline() && trace == 0 {
             Message::QueryBatch { qid0, nq: nq as u64, qs: qs.as_ref().clone() }
         } else {
             Message::QueryBatchBudget {
@@ -443,15 +461,23 @@ impl RemoteNode {
                 policy: budget.policy,
                 probes: probe.probes,
                 max_comparisons: probe.max_comparisons,
+                trace,
                 qs: qs.as_ref().clone(),
             }
         };
         let reply = self.exchange(&frame)?;
-        let Message::ReplyBatch { qid0: rqid0, replies } = reply else {
+        let Message::ReplyBatch { qid0: rqid0, trace: rtrace, replies } = reply else {
             return Err(self.fault(format!("expected ReplyBatch, got {reply:?}")));
         };
         if rqid0 != qid0 {
             return Err(self.fault(format!("out-of-order batch reply: {rqid0} != {qid0}")));
+        }
+        // The plain `QueryBatch` frame carries no trace, so its replies
+        // legitimately echo 0; a budget-frame reply must echo the request's
+        // id exactly — a mismatch means the peer crossed two requests.
+        let expected_trace = if matches!(frame, Message::QueryBatch { .. }) { 0 } else { trace };
+        if rtrace != expected_trace {
+            return Err(self.fault(format!("trace mismatch: {rtrace} != {expected_trace}")));
         }
         if replies.len() != nq {
             return Err(self.fault(format!("batch reply arity {} != {nq}", replies.len())));
@@ -464,6 +490,8 @@ impl RemoteNode {
                 neighbors: item.neighbors,
                 comparisons: item.comparisons,
                 inner_probes: item.inner_probes,
+                scan_ns: item.scan_ns,
+                tables: item.tables,
                 partial: item.partial,
                 shed: item.shed,
             })
@@ -490,7 +518,18 @@ impl NodeHandle for RemoteNode {
         if rqid != qid {
             return Err(self.fault(format!("out-of-order reply: {rqid} != {qid}")));
         }
-        Ok(NodeReply { qid, neighbors, comparisons, inner_probes, partial: false, shed: false })
+        // The single-query `Reply` frame predates scan spans and carries
+        // none — zeros here, the batch path is the observable one.
+        Ok(NodeReply {
+            qid,
+            neighbors,
+            comparisons,
+            inner_probes,
+            scan_ns: 0,
+            tables: 0,
+            partial: false,
+            shed: false,
+        })
     }
 
     /// One frame per batch instead of one round trip per query — the
@@ -501,7 +540,7 @@ impl NodeHandle for RemoteNode {
         qs: Arc<Vec<f32>>,
         nq: usize,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
-        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics, ProbeSpec::BASELINE)
+        self.batch_roundtrip(qs, nq, Budget::none(), Class::Analytics, ProbeSpec::BASELINE, 0)
     }
 
     /// Admission cuts ship their remaining budget, enforcement policy and
@@ -517,7 +556,7 @@ impl NodeHandle for RemoteNode {
         budget: Budget,
         class: Class,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
-        self.batch_roundtrip(qs, nq, budget, class, ProbeSpec::BASELINE)
+        self.batch_roundtrip(qs, nq, budget, class, ProbeSpec::BASELINE, 0)
     }
 
     /// The spec-carrying batch path: probe knobs travel in the
@@ -532,7 +571,23 @@ impl NodeHandle for RemoteNode {
         class: Class,
         probe: ProbeSpec,
     ) -> std::result::Result<Vec<NodeReply>, NodeError> {
-        self.batch_roundtrip(qs, nq, budget, class, probe)
+        self.batch_roundtrip(qs, nq, budget, class, probe, 0)
+    }
+
+    /// Traced batch: the trace id rides the `QueryBatchBudget` frame (a
+    /// non-zero id forces the budget frame even for baseline budgetless
+    /// requests — the plain frame cannot carry it) and must be echoed in
+    /// the reply, which brings back the node's per-query scan spans.
+    fn query_batch_traced(
+        &mut self,
+        qs: Arc<Vec<f32>>,
+        nq: usize,
+        budget: Budget,
+        class: Class,
+        probe: ProbeSpec,
+        trace: u64,
+    ) -> std::result::Result<Vec<NodeReply>, NodeError> {
+        self.batch_roundtrip(qs, nq, budget, class, probe, trace)
     }
 
     /// One `InsertBatch` frame per append; the remote live node appends

@@ -55,7 +55,12 @@ pub enum Message {
     /// count is a hostile/corrupt peer) and the per-query candidate cap
     /// `max_comparisons` (0 = unlimited). `budget_us = u64::MAX` keeps
     /// meaning "no deadline", so a spec-carrying request without a budget
-    /// still rides this frame with its probe knobs intact.
+    /// still rides this frame with its probe knobs intact. `trace` is the
+    /// orchestrator-minted trace id (0 = untraced); it travels as a
+    /// validated flag byte + id so spans survive the TCP hop — an
+    /// incoherent pair (flag set with id 0, flag clear with a nonzero id,
+    /// or unknown flag bits) is a hostile/corrupt peer, rejected as
+    /// `BadTag`.
     QueryBatchBudget {
         qid0: u64,
         nq: u64,
@@ -64,10 +69,14 @@ pub enum Message {
         policy: BudgetPolicy,
         probes: u32,
         max_comparisons: u64,
+        trace: u64,
         qs: Vec<f32>,
     },
     /// Node → root: per-query answers for one batch, in qid order.
-    ReplyBatch { qid0: u64, replies: Vec<BatchReplyItem> },
+    /// Echoes the request's trace id (0 = untraced) with the same
+    /// validated flag-byte + id encoding as the request frame, so the
+    /// client can pin replies to the trace that asked for them.
+    ReplyBatch { qid0: u64, trace: u64, replies: Vec<BatchReplyItem> },
     /// Root → node: spawn an EMPTY live (streaming) node instead of
     /// building over a shipped shard. `seal_points`/`seal_age_ns` are the
     /// node's [`SealPolicy`](crate::slsh::SealPolicy) (`u64::MAX` age =
@@ -113,13 +122,35 @@ pub enum Message {
 /// cut short by the budget), bit 1 = `shed` (the node rejected the batch
 /// before any scan work; implies `partial`). Any other byte — including
 /// the inconsistent `shed`-without-`partial` — is rejected as `BadTag`.
+/// `scan_ns`/`tables` are the node's per-query scan span (wall time on
+/// the node's clock and outer tables consulted), flowing back so the
+/// tracer can attribute where a slow query spent its time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchReplyItem {
     pub neighbors: Vec<Neighbor>,
     pub comparisons: Vec<u64>,
     pub inner_probes: u64,
+    pub scan_ns: u64,
+    pub tables: u32,
     pub partial: bool,
     pub shed: bool,
+}
+
+/// Encode a trace id as the validated flag byte + id pair.
+fn write_trace(out: &mut Vec<u8>, trace: u64) {
+    bytes::write_u8(out, (trace != 0) as u8).unwrap();
+    bytes::write_u64(out, trace).unwrap();
+}
+
+/// Decode and validate a trace flag byte + id pair: the flag must be 0/1
+/// and must mirror `id != 0` — anything else is a hostile/corrupt peer.
+fn read_trace(r: &mut std::io::Cursor<&[u8]>) -> Result<u64, CodecError> {
+    let flags = bytes::read_u8(r)?;
+    let trace = bytes::read_u64(r)?;
+    if flags > 1 || (flags == 1) != (trace != 0) {
+        return Err(CodecError::BadTag(flags as u32, "TraceFlags"));
+    }
+    Ok(trace)
 }
 
 const TAG_BUILD: u8 = 1;
@@ -238,6 +269,7 @@ impl Message {
                 policy,
                 probes,
                 max_comparisons,
+                trace,
                 qs,
             } => {
                 bytes::write_u8(&mut out, TAG_QUERY_BATCH_BUDGET).unwrap();
@@ -248,16 +280,20 @@ impl Message {
                 bytes::write_u8(&mut out, policy.as_u8()).unwrap();
                 bytes::write_u32(&mut out, *probes).unwrap();
                 bytes::write_u64(&mut out, *max_comparisons).unwrap();
+                write_trace(&mut out, *trace);
                 bytes::write_f32_vec(&mut out, qs).unwrap();
             }
-            Message::ReplyBatch { qid0, replies } => {
+            Message::ReplyBatch { qid0, trace, replies } => {
                 bytes::write_u8(&mut out, TAG_REPLY_BATCH).unwrap();
                 bytes::write_u64(&mut out, *qid0).unwrap();
+                write_trace(&mut out, *trace);
                 bytes::write_u64(&mut out, replies.len() as u64).unwrap();
                 for item in replies {
                     write_neighbors(&mut out, &item.neighbors);
                     bytes::write_u64_vec(&mut out, &item.comparisons).unwrap();
                     bytes::write_u64(&mut out, item.inner_probes).unwrap();
+                    bytes::write_u64(&mut out, item.scan_ns).unwrap();
+                    bytes::write_u32(&mut out, item.tables).unwrap();
                     let flags = item.partial as u8 | ((item.shed as u8) << 1);
                     bytes::write_u8(&mut out, flags).unwrap();
                 }
@@ -367,6 +403,7 @@ impl Message {
                     return Err(CodecError::BadTag(probes, "Probes"));
                 }
                 let max_comparisons = bytes::read_u64(&mut r)?;
+                let trace = read_trace(&mut r)?;
                 let qs = bytes::read_f32_vec(&mut r)?;
                 Ok(Message::QueryBatchBudget {
                     qid0,
@@ -376,11 +413,13 @@ impl Message {
                     policy,
                     probes,
                     max_comparisons,
+                    trace,
                     qs,
                 })
             }
             TAG_REPLY_BATCH => {
                 let qid0 = bytes::read_u64(&mut r)?;
+                let trace = read_trace(&mut r)?;
                 let count = bytes::read_u64(&mut r)? as usize;
                 if count > MAX_ITEMS {
                     return Err(CodecError::TooLong(count as u64, MAX_ITEMS as u64));
@@ -390,6 +429,8 @@ impl Message {
                     let neighbors = read_neighbors(&mut r)?;
                     let comparisons = bytes::read_u64_vec(&mut r)?;
                     let inner_probes = bytes::read_u64(&mut r)?;
+                    let scan_ns = bytes::read_u64(&mut r)?;
+                    let tables = bytes::read_u32(&mut r)?;
                     // Flags byte: only {none, partial, partial|shed} are
                     // coherent states; everything else (including shed
                     // without partial) is a hostile/corrupt peer.
@@ -404,11 +445,13 @@ impl Message {
                         neighbors,
                         comparisons,
                         inner_probes,
+                        scan_ns,
+                        tables,
                         partial,
                         shed,
                     });
                 }
-                Ok(Message::ReplyBatch { qid0, replies })
+                Ok(Message::ReplyBatch { qid0, trace, replies })
             }
             TAG_BUILD_LIVE => {
                 let node_id = bytes::read_u32(&mut r)?;
@@ -578,6 +621,9 @@ mod tests {
                         .enumerate()
                 {
                     let (probes, max_comparisons) = probe_knobs[(i + j) % probe_knobs.len()];
+                    // Alternate traced / untraced so the sweep covers
+                    // both trace-flag states on every geometry.
+                    let trace = if (i + j) % 2 == 0 { 0 } else { (i * 100 + j + 1) as u64 };
                     frames.push(Message::QueryBatchBudget {
                         qid0: 77,
                         nq,
@@ -586,6 +632,7 @@ mod tests {
                         policy,
                         probes,
                         max_comparisons,
+                        trace,
                         qs: (0..nq as usize * dim).map(|i| i as f32 * 0.5).collect(),
                     });
                 }
@@ -601,18 +648,23 @@ mod tests {
             policy: BudgetPolicy::LogOnly,
             probes: 4,
             max_comparisons: 2048,
+            trace: u64::MAX,
             qs: vec![9.0, 8.0, 7.0],
         });
         // Reply batches across every coherent flag state, empty and
-        // non-empty neighbor sets, empty batch included.
-        frames.push(Message::ReplyBatch { qid0: 9, replies: vec![] });
+        // non-empty neighbor sets, empty batch included; traced and
+        // untraced echoes.
+        frames.push(Message::ReplyBatch { qid0: 9, trace: 0, replies: vec![] });
         frames.push(Message::ReplyBatch {
             qid0: 40,
+            trace: 12345,
             replies: vec![
                 BatchReplyItem {
                     neighbors: vec![Neighbor { id: 5, dist: 1.25, label: true }],
                     comparisons: vec![10, 20],
                     inner_probes: 1,
+                    scan_ns: 42_000,
+                    tables: 8,
                     partial: false,
                     shed: false,
                 },
@@ -620,6 +672,8 @@ mod tests {
                     neighbors: vec![Neighbor { id: 6, dist: 2.5, label: false }],
                     comparisons: vec![4, 0],
                     inner_probes: 0,
+                    scan_ns: u64::MAX,
+                    tables: 3,
                     partial: true,
                     shed: false,
                 },
@@ -627,6 +681,8 @@ mod tests {
                     neighbors: vec![],
                     comparisons: vec![0, 0],
                     inner_probes: 0,
+                    scan_ns: 0,
+                    tables: 0,
                     partial: true,
                     shed: true,
                 },
@@ -784,6 +840,7 @@ mod tests {
             policy: BudgetPolicy::LogOnly,
             probes: 1,
             max_comparisons: 0,
+            trace: 0,
             qs: vec![1.0, 2.0],
         };
         let mut payload = m.encode();
@@ -811,6 +868,7 @@ mod tests {
             policy: BudgetPolicy::Shed,
             probes: 1,
             max_comparisons: 0,
+            trace: 0,
             qs: vec![1.0, 2.0],
         };
         let mut payload = m.encode();
@@ -842,6 +900,7 @@ mod tests {
             policy: BudgetPolicy::PartialResults,
             probes: 3,
             max_comparisons: 64,
+            trace: 9,
             qs: vec![1.0, 2.0],
         };
         let mut payload = m.encode();
@@ -871,10 +930,13 @@ mod tests {
     fn bad_reply_flags_byte_is_rejected() {
         let m = Message::ReplyBatch {
             qid0: 4,
+            trace: 0,
             replies: vec![BatchReplyItem {
                 neighbors: vec![],
                 comparisons: vec![1],
                 inner_probes: 0,
+                scan_ns: 77,
+                tables: 2,
                 partial: false,
                 shed: false,
             }],
@@ -891,6 +953,63 @@ mod tests {
                 "flags byte {bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn bad_trace_flags_are_rejected_on_both_frames() {
+        // Request frame: tag(1) + qid0(8) + nq(8) + budget_us(8) +
+        // class(1) + policy(1) + probes(4) + max_comparisons(8) puts the
+        // trace flag byte at offset 39 and the id at 40..48.
+        let traced = Message::QueryBatchBudget {
+            qid0: 1,
+            nq: 1,
+            budget_us: 100,
+            class: Class::Monitor,
+            policy: BudgetPolicy::LogOnly,
+            probes: 1,
+            max_comparisons: 0,
+            trace: 0xABCD,
+            qs: vec![1.0, 2.0],
+        };
+        let payload = traced.encode();
+        assert_eq!(payload[39], 1);
+        assert_eq!(u64::from_le_bytes(payload[40..48].try_into().unwrap()), 0xABCD);
+        // Unknown flag bits.
+        for bad in [2u8, 5, 255] {
+            let mut p = payload.clone();
+            p[39] = bad;
+            assert!(
+                matches!(
+                    Message::decode(&p),
+                    Err(CodecError::BadTag(b, "TraceFlags")) if b == bad as u32
+                ),
+                "trace flag byte {bad} must be rejected"
+            );
+        }
+        // Incoherent: flag set, id zero.
+        let mut p = payload.clone();
+        p[40..48].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(Message::decode(&p), Err(CodecError::BadTag(1, "TraceFlags"))));
+        // Incoherent: flag clear, id nonzero.
+        let mut p = payload.clone();
+        p[39] = 0;
+        assert!(matches!(Message::decode(&p), Err(CodecError::BadTag(0, "TraceFlags"))));
+
+        // Reply frame: tag(1) + qid0(8) puts the trace flag byte at
+        // offset 9 and the id at 10..18.
+        let reply = Message::ReplyBatch { qid0: 4, trace: 99, replies: vec![] };
+        let payload = reply.encode();
+        assert_eq!(payload[9], 1);
+        assert_eq!(u64::from_le_bytes(payload[10..18].try_into().unwrap()), 99);
+        let mut p = payload.clone();
+        p[9] = 3;
+        assert!(matches!(Message::decode(&p), Err(CodecError::BadTag(3, "TraceFlags"))));
+        let mut p = payload.clone();
+        p[10..18].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(Message::decode(&p), Err(CodecError::BadTag(1, "TraceFlags"))));
+        let mut p = payload;
+        p[9] = 0;
+        assert!(matches!(Message::decode(&p), Err(CodecError::BadTag(0, "TraceFlags"))));
     }
 
     #[test]

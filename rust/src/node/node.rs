@@ -40,6 +40,14 @@ pub struct NodeReply {
     pub comparisons: Vec<u64>,
     /// Inner-layer probes per core (diagnostics).
     pub inner_probes: u64,
+    /// Wall time the node spent resolving the batch this reply rode in
+    /// (fan-out to last core gathered, on the node's injected clock).
+    /// Every reply of one batch shares the batch's value — the node
+    /// answers per batch, not per query. Zero on shed replies.
+    pub scan_ns: u64,
+    /// Outer tables consulted for this query, summed across cores —
+    /// under budget enforcement less than the node's table count.
+    pub tables: u32,
     /// True when budget enforcement stopped at least one core before it
     /// covered all its tables. `neighbors` is then the union of
     /// *per-core table prefixes* (each core stops on a prefix of its OWN
@@ -345,6 +353,7 @@ impl LocalNode {
     pub fn query(&mut self, q: &[f32]) -> NodeReply {
         let qid = self.next_qid;
         self.next_qid += 1;
+        let start_ns = self.clock.now_ns();
         let q = Arc::new(q.to_vec());
         for tx in &self.worker_tx {
             tx.send(WorkerMsg::Query { qid, q: Arc::clone(&q) })
@@ -353,6 +362,7 @@ impl LocalNode {
         let mut topk = TopK::new(self.k);
         let mut comparisons = vec![0u64; self.p];
         let mut inner_probes = 0u64;
+        let mut tables = 0u32;
         let mut received = 0;
         while received < self.p {
             let WorkerReplyMsg::Single(reply) = self.reply_rx.recv().expect("worker died")
@@ -364,6 +374,7 @@ impl LocalNode {
             debug_assert_eq!(reply.qid, qid);
             comparisons[reply.core] = reply.stats.comparisons;
             inner_probes += reply.stats.inner_probes;
+            tables = tables.saturating_add(reply.stats.tables);
             for n in reply.partial {
                 topk.push_unique(n);
             }
@@ -374,6 +385,8 @@ impl LocalNode {
             neighbors: topk.into_sorted(),
             comparisons,
             inner_probes,
+            scan_ns: self.clock.now_ns().saturating_sub(start_ns),
+            tables,
             partial: false,
             shed: false,
         }
@@ -409,21 +422,23 @@ impl LocalNode {
         assert_eq!(qs.len() % nq, 0, "query block not a multiple of nq");
         let qid0 = self.next_qid;
         self.next_qid += nq as u64;
+        let start_ns = self.clock.now_ns();
         for tx in &self.worker_tx {
             tx.send(WorkerMsg::QueryBatch { qid0, qs: Arc::clone(&qs), nq, spec: probe })
                 .expect("worker channel closed");
         }
-        self.gather_batch(qid0, nq)
+        self.gather_batch(qid0, nq, start_ns)
     }
 
     /// Gather + reduce the `p` flat batch replies of one in-flight batch
     /// (plain or budget-enforced — the per-query `partial` flags ride the
     /// workers' [`QueryStats`](crate::slsh::QueryStats) either way and
     /// are always false on the plain path).
-    fn gather_batch(&mut self, qid0: u64, nq: usize) -> Vec<NodeReply> {
+    fn gather_batch(&mut self, qid0: u64, nq: usize, start_ns: u64) -> Vec<NodeReply> {
         let mut topks: Vec<TopK> = (0..nq).map(|_| TopK::new(self.k)).collect();
         let mut comparisons: Vec<Vec<u64>> = (0..nq).map(|_| vec![0u64; self.p]).collect();
         let mut inner_probes = vec![0u64; nq];
+        let mut tables = vec![0u32; nq];
         let mut partial = vec![false; nq];
         let mut received = 0;
         while received < self.p {
@@ -441,21 +456,29 @@ impl LocalNode {
                 }
                 comparisons[qi][reply.core] = reply.stats[qi].comparisons;
                 inner_probes[qi] += reply.stats[qi].inner_probes;
+                tables[qi] = tables[qi].saturating_add(reply.stats[qi].tables);
                 partial[qi] |= reply.stats[qi].partial;
             }
             received += 1;
         }
+        // One wall-time span for the whole batch (the node resolves it as
+        // one unit); every reply carries it so any single reply can stand
+        // in for the batch's scan span.
+        let scan_ns = self.clock.now_ns().saturating_sub(start_ns);
         topks
             .into_iter()
             .zip(comparisons)
             .zip(inner_probes)
+            .zip(tables)
             .zip(partial)
             .enumerate()
-            .map(|(qi, (((topk, comps), probes), part))| NodeReply {
+            .map(|(qi, ((((topk, comps), probes), tbls), part))| NodeReply {
                 qid: qid0 + qi as u64,
                 neighbors: topk.into_sorted(),
                 comparisons: comps,
                 inner_probes: probes,
+                scan_ns,
+                tables: tbls,
                 partial: part,
                 shed: false,
             })
@@ -536,6 +559,8 @@ impl LocalNode {
                         neighbors: Vec::new(),
                         comparisons: vec![0u64; self.p],
                         inner_probes: 0,
+                        scan_ns: 0,
+                        tables: 0,
                         partial: true,
                         shed: true,
                     })
@@ -549,9 +574,11 @@ impl LocalNode {
                 let t0 = std::time::Instant::now();
                 // Anchor at arrival: remaining was computed once at
                 // dispatch, so every node (this one or a TCP-remote one)
-                // enforces the same wall-clock deadline.
+                // enforces the same wall-clock deadline. The arrival
+                // stamp doubles as the batch's scan-span start.
+                let arrival_ns = self.clock.now_ns();
                 let deadline_ns =
-                    self.clock.now_ns().saturating_add(budget.remaining_us.saturating_mul(1_000));
+                    arrival_ns.saturating_add(budget.remaining_us.saturating_mul(1_000));
                 let qid0 = self.next_qid;
                 self.next_qid += nq as u64;
                 for tx in &self.worker_tx {
@@ -564,7 +591,7 @@ impl LocalNode {
                     })
                     .expect("worker channel closed");
                 }
-                let replies = self.gather_batch(qid0, nq);
+                let replies = self.gather_batch(qid0, nq, arrival_ns);
                 note_batch_overrun(self.node_id, class, budget.remaining_us, t0.elapsed(), nq);
                 replies
             }

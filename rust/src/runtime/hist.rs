@@ -1,0 +1,303 @@
+//! Lock-free power-of-two-bucket latency histograms.
+//!
+//! The serving path records latencies from many threads at once (edge
+//! connection handlers, admission dispatchers, shard replica runners), so
+//! the recorder must be wait-free: [`Histogram::record`] is three relaxed
+//! `fetch_add`s and nothing else — no locks, no allocation, no branches
+//! beyond computing the bucket index. Reads happen rarely (a `/metrics`
+//! scrape, a stats snapshot) and tolerate being torn across concurrent
+//! writers; every counter is monotone so a snapshot is always a valid
+//! "some moment at or before now" view.
+//!
+//! Buckets are powers of two: bucket 0 holds the value 0, bucket `i >= 1`
+//! holds values `v` with `2^(i-1) <= v < 2^i`, and the last bucket
+//! saturates (everything from `2^62` up, including `u64::MAX`). That
+//! gives ~5% worst-case relative error on percentile *upper bounds* over
+//! the full `u64` range with a fixed 64-slot table — the classic HdrHistogram
+//! tradeoff collapsed to its cheapest form. Percentiles extracted from a
+//! [`HistSnapshot`] report the *upper bound* of the bucket holding the
+//! ranked observation, so they never under-report a tail.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: one for zero plus one per possible leading-bit
+/// position of a nonzero `u64` (63 of them, with the top one saturating).
+pub const NUM_BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value. 0 maps to bucket 0; a nonzero `v`
+/// maps to `min(64 - leading_zeros(v), 63)` so bucket `i` covers
+/// `[2^(i-1), 2^i)` and bucket 63 saturates from `2^62` upward.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of a bucket, used when reporting percentiles.
+/// Bucket 0 is exactly zero; bucket `i` covers up to `2^i - 1`; the
+/// saturating last bucket reports `u64::MAX`.
+#[inline]
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= NUM_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A wait-free histogram of `u64` observations (typically microseconds or
+/// nanoseconds). All methods take `&self`; share it via `Arc` or embed it
+/// in an already-shared stats block.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation. Three relaxed `fetch_add`s; safe from any
+    /// thread. The running sum wraps on overflow rather than saturating —
+    /// at nanosecond scale that takes centuries of recorded time.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the current counters out. Not atomic across buckets — fine
+    /// for monitoring, where every counter is monotone.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; NUM_BUCKETS];
+        for (slot, b) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain-data copy of a [`Histogram`] at some moment: mergeable,
+/// comparable, and the unit the `/metrics` exposition and stats JSON are
+/// built from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; NUM_BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; NUM_BUCKETS], sum: 0, count: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold another snapshot into this one (bucket-wise addition). Used to
+    /// aggregate per-shard or per-lane histograms into a cluster view.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Upper bound of the bucket holding the `q`-ranked observation
+    /// (`0.0 < q <= 1.0`). Returns 0 for an empty histogram. Never
+    /// under-reports: the true percentile is `<=` the returned value.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        // Rank of the target observation, 1-based, clamped into range.
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(NUM_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(0.999)
+    }
+
+    /// Exact mean of recorded values (from the running sum, not buckets).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_boundaries_at_powers_of_two() {
+        // Zero is its own bucket.
+        assert_eq!(bucket_index(0), 0);
+        // 1 = 2^0 opens bucket 1; each power of two opens the next.
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        for i in 1..62 {
+            let lo = 1u64 << (i - 1);
+            let hi = (1u64 << i) - 1;
+            assert_eq!(bucket_index(lo), i, "low edge of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "high edge of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn top_bucket_saturates_at_u64_max() {
+        assert_eq!(bucket_index(1u64 << 62), NUM_BUCKETS - 1);
+        assert_eq!(bucket_index(1u64 << 63), NUM_BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_upper_bound(NUM_BUCKETS - 1), u64::MAX);
+
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.buckets[NUM_BUCKETS - 1], 2);
+        // Sum wraps (documented); count and buckets stay exact.
+        assert_eq!(s.p50(), u64::MAX);
+        assert_eq!(s.p999(), u64::MAX);
+    }
+
+    #[test]
+    fn upper_bounds_cover_their_buckets() {
+        for i in 0..NUM_BUCKETS {
+            let ub = bucket_upper_bound(i);
+            assert_eq!(bucket_index(ub), i, "upper bound of bucket {i} lands in it");
+        }
+    }
+
+    #[test]
+    fn percentiles_on_known_distribution() {
+        let h = Histogram::new();
+        // 100 observations: 50 at 10 (bucket 4, ub 15), 40 at 100
+        // (bucket 7, ub 127), 9 at 1000 (bucket 10, ub 1023), 1 at
+        // 100_000 (bucket 17, ub 131071).
+        for _ in 0..50 {
+            h.record(10);
+        }
+        for _ in 0..40 {
+            h.record(100);
+        }
+        for _ in 0..9 {
+            h.record(1000);
+        }
+        h.record(100_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 50 * 10 + 40 * 100 + 9 * 1000 + 100_000);
+        assert_eq!(s.p50(), 15);
+        assert_eq!(s.p90(), 127);
+        assert_eq!(s.p99(), 1023);
+        assert_eq!(s.p999(), 131_071);
+        assert!((s.mean() - 1135.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        let empty = HistSnapshot::default();
+        assert_eq!(empty.percentile(0.5), 0);
+        assert_eq!(empty.mean(), 0.0);
+
+        let h = Histogram::new();
+        h.record(7);
+        let s = h.snapshot();
+        // A single observation is every percentile.
+        assert_eq!(s.percentile(0.001), 7);
+        assert_eq!(s.percentile(1.0), 7);
+    }
+
+    #[test]
+    fn merge_is_bucketwise_addition() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [0u64, 1, 5, 1000] {
+            a.record(v);
+        }
+        for v in [3u64, 5, u64::MAX] {
+            b.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+
+        let seq = Histogram::new();
+        for v in [0u64, 1, 5, 1000, 3, 5, u64::MAX] {
+            seq.record(v);
+        }
+        assert_eq!(merged, seq.snapshot());
+    }
+
+    #[test]
+    fn concurrent_merge_equals_sequential() {
+        let per_thread: Vec<Vec<u64>> = (0..4)
+            .map(|t| (0..500).map(|i| (t * 1000 + i * 37) as u64 % 5000).collect())
+            .collect();
+
+        // Concurrent: 4 threads hammer one shared histogram.
+        let shared = Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for vals in per_thread.clone() {
+            let h = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                for v in vals {
+                    h.record(v);
+                }
+            }));
+        }
+        for jh in handles {
+            jh.join().unwrap();
+        }
+
+        // Sequential reference over the same multiset.
+        let seq = Histogram::new();
+        for vals in &per_thread {
+            for &v in vals {
+                seq.record(v);
+            }
+        }
+        assert_eq!(shared.snapshot(), seq.snapshot());
+    }
+}

@@ -1,14 +1,44 @@
-//! AOT runtime: artifact catalog, PJRT execution, and the thread-safe
-//! XLA distance-engine service. Python authors + lowers the kernels once
-//! (`make artifacts`); this module is everything the request path needs.
+//! Runtime services and the serving-path observability contract.
+//!
+//! Besides the AOT/XLA execution pieces (artifact catalog, PJRT runtime,
+//! thread-safe distance-engine service), this module defines **every
+//! counter the cluster exports** and what each costs on the hot path:
+//!
+//! - [`service`] — lock-free relaxed-atomic counter blocks, one per
+//!   subsystem: [`QueueStats`] (admission + service channel depth /
+//!   throughput / rejections), [`CutCounters`] (why each batch was cut),
+//!   [`LaneCounters`] (per-class dispatches, overruns, partials, sheds,
+//!   inserts), [`IngestCounters`] (live-index growth and seals),
+//!   [`FailoverCounters`] (hedges, failovers, synthesized sheds, replica
+//!   health), and [`EdgeCounters`] (per-HTTP-endpoint requests / errors /
+//!   latency histogram). Cost: a handful of relaxed `fetch_add`s per
+//!   event; never a lock.
+//! - [`hist`] — wait-free power-of-two-bucket [`Histogram`]s with
+//!   mergeable [`HistSnapshot`]s and p50/p90/p99/p999 extraction. Cost:
+//!   three relaxed `fetch_add`s per recorded value.
+//! - [`trace`] — the end-to-end [`Tracer`]: per-lane queue-wait /
+//!   service / e2e and per-shard network / scan histograms (always on),
+//!   plus opt-in per-request span collection and the slow-query ring
+//!   buffer. Cost when not collecting spans: the clock reads the stages
+//!   already take plus histogram records; span collection adds a mutex
+//!   per stage boundary and is a debugging tier.
+//!
+//! Everything above is scraped in one place: the serving edge's
+//! `GET /metrics` (Prometheus text exposition) renders every family, and
+//! `GET /v1/debug/slow` dumps the slow-query ring as JSON.
 
 pub mod artifacts;
+pub mod hist;
 pub mod pjrt;
 pub mod service;
+pub mod trace;
 
 pub use artifacts::{locate, ArtifactError, Manifest};
+pub use hist::{HistSnapshot, Histogram};
 pub use pjrt::{XlaRuntime, PAD_DIST};
 pub use service::{
-    CutCounters, EdgeCounters, EdgeEndpoint, EdgeStats, EndpointStats, FailoverCounters,
-    FailoverStats, IngestCounters, IngestStats, LaneCounters, QueueStats, XlaEngine, XlaService,
+    decode_reject_counts, note_decode_reject, CauseCounters, CutCounters, EdgeCounters,
+    EdgeEndpoint, EdgeStats, EndpointStats, FailoverCounters, FailoverStats, IngestCounters,
+    IngestStats, LaneCounters, QueueStats, XlaEngine, XlaService,
 };
+pub use trace::{LaneHistStats, NodeSpan, QueryTrace, ShardHistStats, Span, Tracer};

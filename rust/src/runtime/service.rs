@@ -19,6 +19,7 @@
 //! latency-over-throughput stance makes that mix the primary health
 //! signal for a serving cluster.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -27,6 +28,7 @@ use anyhow::Result;
 
 use crate::engine::{push_scored, DistanceEngine, Metric};
 use crate::knn::heap::TopK;
+use crate::runtime::hist::{HistSnapshot, Histogram};
 use crate::runtime::pjrt::XlaRuntime;
 
 /// Lock-free gauges + counters for one bounded serving queue. All fields
@@ -460,16 +462,19 @@ pub enum EdgeEndpoint {
     Stats,
     /// `GET /healthz` and `GET /readyz`
     Health,
+    /// `GET /metrics` and `GET /v1/debug/slow` (the scrape surface).
+    Metrics,
     /// Everything else (404s, parse failures).
     Other,
 }
 
 impl EdgeEndpoint {
-    pub const ALL: [EdgeEndpoint; 5] = [
+    pub const ALL: [EdgeEndpoint; 6] = [
         EdgeEndpoint::Query,
         EdgeEndpoint::Insert,
         EdgeEndpoint::Stats,
         EdgeEndpoint::Health,
+        EdgeEndpoint::Metrics,
         EdgeEndpoint::Other,
     ];
 
@@ -479,7 +484,8 @@ impl EdgeEndpoint {
             EdgeEndpoint::Insert => 1,
             EdgeEndpoint::Stats => 2,
             EdgeEndpoint::Health => 3,
-            EdgeEndpoint::Other => 4,
+            EdgeEndpoint::Metrics => 4,
+            EdgeEndpoint::Other => 5,
         }
     }
 
@@ -490,6 +496,7 @@ impl EdgeEndpoint {
             EdgeEndpoint::Insert => "insert",
             EdgeEndpoint::Stats => "stats",
             EdgeEndpoint::Health => "health",
+            EdgeEndpoint::Metrics => "metrics",
             EdgeEndpoint::Other => "other",
         }
     }
@@ -499,15 +506,21 @@ impl EdgeEndpoint {
 struct EndpointCounters {
     requests: AtomicU64,
     errors: AtomicU64,
-    latency_us_sum: AtomicU64,
+    latency_us: Histogram,
 }
 
 /// Per-endpoint request/error/latency accounting for the HTTP serving
 /// edge ([`crate::net::edge`]) — one row per [`EdgeEndpoint`], all
 /// relaxed atomics, same discipline as every other counter block here.
+/// Latency is a full [`Histogram`] per endpoint (not just a sum), so the
+/// edge can report p50/p99 and `/metrics` can expose the distribution.
 #[derive(Debug, Default)]
 pub struct EdgeCounters {
-    endpoints: [EndpointCounters; 5],
+    endpoints: [EndpointCounters; 6],
+    /// HTTP requests rejected before routing, by parser error code
+    /// (satellite of the silently-dropped accounting: 4xxs used to
+    /// vanish into `other.errors` with no cause attached).
+    http_rejects: CauseCounters,
 }
 
 /// Snapshot of one endpoint's counters.
@@ -518,8 +531,12 @@ pub struct EndpointStats {
     /// Responses with a 4xx/5xx status.
     pub errors: u64,
     /// Sum of request latencies in µs (divide by `requests` for the
-    /// mean; the edge measures on its injected clock).
+    /// mean; the edge measures on its injected clock). Kept for
+    /// compatibility — equals `latency_us.sum`.
     pub latency_us_sum: u64,
+    /// Full latency distribution (µs): p50/p99 etc. via
+    /// [`HistSnapshot::percentile`].
+    pub latency_us: HistSnapshot,
 }
 
 /// Snapshot of [`EdgeCounters`], one row per endpoint.
@@ -529,6 +546,7 @@ pub struct EdgeStats {
     pub insert: EndpointStats,
     pub stats: EndpointStats,
     pub health: EndpointStats,
+    pub metrics: EndpointStats,
     pub other: EndpointStats,
 }
 
@@ -545,15 +563,29 @@ impl EdgeCounters {
         if status >= 400 {
             c.errors.fetch_add(1, Ordering::Relaxed);
         }
-        c.latency_us_sum.fetch_add(latency_us, Ordering::Relaxed);
+        c.latency_us.record(latency_us);
+    }
+
+    /// One request the HTTP parser rejected with a typed 4xx before it
+    /// could be routed, attributed to the parser's stable error `code`
+    /// (`"bad-request-line"`, `"body-too-large"`, ...).
+    pub fn record_http_reject(&self, code: &'static str) {
+        self.http_rejects.note(code);
+    }
+
+    /// Per-cause counts of parser-rejected requests, sorted by cause.
+    pub fn http_reject_counts(&self) -> Vec<(&'static str, u64)> {
+        self.http_rejects.counts()
     }
 
     fn endpoint(&self, e: EdgeEndpoint) -> EndpointStats {
         let c = &self.endpoints[e.idx()];
+        let latency_us = c.latency_us.snapshot();
         EndpointStats {
             requests: c.requests.load(Ordering::Relaxed),
             errors: c.errors.load(Ordering::Relaxed),
-            latency_us_sum: c.latency_us_sum.load(Ordering::Relaxed),
+            latency_us_sum: latency_us.sum,
+            latency_us,
         }
     }
 
@@ -563,9 +595,56 @@ impl EdgeCounters {
             insert: self.endpoint(EdgeEndpoint::Insert),
             stats: self.endpoint(EdgeEndpoint::Stats),
             health: self.endpoint(EdgeEndpoint::Health),
+            metrics: self.endpoint(EdgeEndpoint::Metrics),
             other: self.endpoint(EdgeEndpoint::Other),
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Per-cause drop accounting
+// ---------------------------------------------------------------------------
+
+/// Counters keyed by a small set of static cause strings. Error paths
+/// only (a decode rejection, a parser 4xx) — a mutexed map is fine there
+/// and keeps `/metrics` output deterministically ordered.
+#[derive(Debug, Default)]
+pub struct CauseCounters {
+    counts: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+impl CauseCounters {
+    pub fn new() -> CauseCounters {
+        CauseCounters::default()
+    }
+
+    /// Count one event attributed to `cause`.
+    pub fn note(&self, cause: &'static str) {
+        *self.counts.lock().unwrap().entry(cause).or_insert(0) += 1;
+    }
+
+    /// All causes seen so far with their counts, sorted by cause name.
+    pub fn counts(&self) -> Vec<(&'static str, u64)> {
+        self.counts.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
+    }
+}
+
+/// TCP server-side decode rejections by [`CodecError`] kind
+/// (`crate::util::bytes::CodecError::kind`). Process-global because the
+/// TCP server loop (`net::tcp::serve_connection`) is a free function with
+/// no stats handle — same pattern as the node-side overrun accounting.
+static DECODE_REJECTS: Mutex<BTreeMap<&'static str, u64>> = Mutex::new(BTreeMap::new());
+
+/// Count one TCP frame the server rejected at decode, by cause kind.
+/// Frames that fail to decode are otherwise invisible: the connection is
+/// dropped and no counter anywhere says why.
+pub fn note_decode_reject(kind: &'static str) {
+    *DECODE_REJECTS.lock().unwrap().entry(kind).or_insert(0) += 1;
+}
+
+/// Per-kind counts of TCP decode rejections, sorted by kind.
+pub fn decode_reject_counts() -> Vec<(&'static str, u64)> {
+    DECODE_REJECTS.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
 }
 
 enum Request {

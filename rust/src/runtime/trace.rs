@@ -1,0 +1,538 @@
+//! End-to-end request tracing: trace IDs, per-stage spans, per-lane and
+//! per-shard latency histograms, and the slow-query ring buffer.
+//!
+//! A [`Tracer`] is owned by the orchestrator and shared (via `Arc`) with
+//! the admission queue, the per-shard dispatchers, and the serving edge.
+//! It has two tiers with very different costs:
+//!
+//! - **Histograms — always on.** Every query records its queue-wait /
+//!   service / end-to-end time into per-lane [`Histogram`]s, and every
+//!   shard reply records network and node-scan time into per-shard
+//!   histograms. Each record is three relaxed `fetch_add`s; the only
+//!   other hot-path cost is the clock reads the stages already take.
+//! - **Span collection — opt-in.** When [`Tracer::set_collect`] turns
+//!   collection on, each minted trace gets a pending entry that
+//!   accumulates named spans ("queue_wait", "service", "shard_net") and
+//!   per-node scan spans as the query moves through the cluster. This
+//!   tier takes a mutex per stage boundary and is meant for debugging,
+//!   not steady-state serving.
+//!
+//! Completed traces that were slow (e2e over the configurable threshold)
+//! or abnormal (partial, shed, or hedged) are moved into a bounded ring
+//! buffer dumpable as JSON — the edge serves it at `GET /v1/debug/slow`.
+//!
+//! All timestamps come from the injectable [`Clock`] the tracer was built
+//! with, so span durations are exact (and tests need no sleeps) under
+//! [`MockClock`](crate::util::clock::MockClock). Span start offsets are
+//! in the recording layer's clock domain; durations are the meaningful
+//! quantity when layers run on different clocks.
+//!
+//! Trace ID 0 is the "untraced" sentinel everywhere (wire frames, node
+//! replies, dispatch plumbing); [`Tracer::mint`] never returns it.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::hist::{HistSnapshot, Histogram};
+use crate::util::clock::Clock;
+use crate::util::json::{Json, JsonObj};
+
+/// Scheduling lanes the per-lane histograms are indexed by. Mirrors
+/// [`Class::idx`](crate::coordinator::admission::Class): 0 = monitor,
+/// 1 = analytics.
+pub const NUM_LANES: usize = 2;
+
+/// Stable lane labels for metrics and JSON, indexed like `Class::idx`.
+pub const LANE_NAMES: [&str; NUM_LANES] = ["monitor", "analytics"];
+
+/// One named stage of a trace: where a query spent `dur_ns` starting at
+/// `start_ns` (on the recording layer's clock).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub stage: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// One node's contribution to a trace: how long the shard's scan took and
+/// what it covered, straight from the reply that crossed the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSpan {
+    pub shard: usize,
+    pub scan_ns: u64,
+    pub comparisons: u64,
+    pub tables: u32,
+    pub partial: bool,
+    pub shed: bool,
+}
+
+/// A completed (or in-flight, while pending) trace of one query.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueryTrace {
+    pub trace_id: u64,
+    /// Lane index (0 = monitor, 1 = analytics), see [`LANE_NAMES`].
+    pub lane: usize,
+    pub spans: Vec<Span>,
+    pub nodes: Vec<NodeSpan>,
+    pub partial: bool,
+    pub shed: bool,
+    pub hedged: bool,
+    /// Why this trace landed in the slow ring ("slow", "partial",
+    /// "shed", "hedged" — first cause wins).
+    pub cause: &'static str,
+    pub e2e_us: u64,
+}
+
+impl Default for Span {
+    fn default() -> Self {
+        Span { stage: "", start_ns: 0, dur_ns: 0 }
+    }
+}
+
+impl QueryTrace {
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("trace_id", Json::Num(self.trace_id as f64));
+        o.insert("lane", Json::Str(LANE_NAMES[self.lane.min(NUM_LANES - 1)].to_string()));
+        o.insert("e2e_us", Json::Num(self.e2e_us as f64));
+        o.insert("cause", Json::Str(self.cause.to_string()));
+        o.insert("partial", Json::Bool(self.partial));
+        o.insert("shed", Json::Bool(self.shed));
+        o.insert("hedged", Json::Bool(self.hedged));
+        o.insert(
+            "spans",
+            Json::Arr(
+                self.spans
+                    .iter()
+                    .map(|s| {
+                        let mut so = JsonObj::new();
+                        so.insert("stage", Json::Str(s.stage.to_string()));
+                        so.insert("start_ns", Json::Num(s.start_ns as f64));
+                        so.insert("dur_ns", Json::Num(s.dur_ns as f64));
+                        Json::Obj(so)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "nodes",
+            Json::Arr(
+                self.nodes
+                    .iter()
+                    .map(|n| {
+                        let mut no = JsonObj::new();
+                        no.insert("shard", Json::Num(n.shard as f64));
+                        no.insert("scan_ns", Json::Num(n.scan_ns as f64));
+                        no.insert("comparisons", Json::Num(n.comparisons as f64));
+                        no.insert("tables", Json::Num(n.tables as f64));
+                        no.insert("partial", Json::Bool(n.partial));
+                        no.insert("shed", Json::Bool(n.shed));
+                        Json::Obj(no)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Per-lane latency histograms (µs), always recorded.
+#[derive(Debug, Default)]
+struct LaneHists {
+    queue_wait_us: Histogram,
+    service_us: Histogram,
+    e2e_us: Histogram,
+}
+
+/// Per-shard latency histograms (µs), always recorded.
+#[derive(Debug, Default)]
+struct ShardHists {
+    net_us: Histogram,
+    scan_us: Histogram,
+}
+
+/// Snapshot of one lane's distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LaneHistStats {
+    pub queue_wait_us: HistSnapshot,
+    pub service_us: HistSnapshot,
+    pub e2e_us: HistSnapshot,
+}
+
+/// Snapshot of one shard's distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardHistStats {
+    pub net_us: HistSnapshot,
+    pub scan_us: HistSnapshot,
+}
+
+/// See the module docs. Construct with [`Tracer::new`]; share via `Arc`.
+pub struct Tracer {
+    clock: Arc<dyn Clock>,
+    next_id: AtomicU64,
+    collect: AtomicBool,
+    slow_threshold_us: AtomicU64,
+    lanes: [LaneHists; NUM_LANES],
+    shards: Vec<ShardHists>,
+    pending: Mutex<HashMap<u64, QueryTrace>>,
+    ring: Mutex<VecDeque<QueryTrace>>,
+    ring_cap: usize,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("next_id", &self.next_id.load(Ordering::Relaxed))
+            .field("collect", &self.collect.load(Ordering::Relaxed))
+            .field("shards", &self.shards.len())
+            .finish()
+    }
+}
+
+/// Default slow-query threshold: 10 ms end-to-end.
+pub const DEFAULT_SLOW_THRESHOLD_US: u64 = 10_000;
+
+/// Default slow-ring capacity.
+pub const DEFAULT_RING_CAP: usize = 64;
+
+impl Tracer {
+    /// A tracer for a cluster of `num_shards` shards, timestamping on
+    /// `clock`. Span collection starts disabled (histograms are always
+    /// on).
+    pub fn new(clock: Arc<dyn Clock>, num_shards: usize) -> Tracer {
+        Tracer {
+            clock,
+            next_id: AtomicU64::new(1),
+            collect: AtomicBool::new(false),
+            slow_threshold_us: AtomicU64::new(DEFAULT_SLOW_THRESHOLD_US),
+            lanes: Default::default(),
+            shards: (0..num_shards.max(1)).map(|_| ShardHists::default()).collect(),
+            pending: Mutex::new(HashMap::new()),
+            ring: Mutex::new(VecDeque::new()),
+            ring_cap: DEFAULT_RING_CAP,
+        }
+    }
+
+    /// Read the tracer's clock (ns). Stage boundaries use this so spans
+    /// and histograms share one time base.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// The clock this tracer timestamps on.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.clock)
+    }
+
+    /// Mint a fresh nonzero trace ID. When span collection is on, also
+    /// opens a pending trace that spans will accumulate into.
+    pub fn mint(&self, lane: usize) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if self.collect.load(Ordering::Relaxed) {
+            let mut p = self.pending.lock().unwrap();
+            p.insert(
+                id,
+                QueryTrace { trace_id: id, lane: lane.min(NUM_LANES - 1), ..QueryTrace::default() },
+            );
+        }
+        id
+    }
+
+    /// Turn span collection on or off. Histograms are unaffected.
+    pub fn set_collect(&self, on: bool) {
+        self.collect.store(on, Ordering::Relaxed);
+        if !on {
+            self.pending.lock().unwrap().clear();
+        }
+    }
+
+    /// Whether span collection is currently on.
+    pub fn collecting(&self) -> bool {
+        self.collect.load(Ordering::Relaxed)
+    }
+
+    /// Set the e2e threshold (µs) above which a finished trace enters the
+    /// slow ring even without partial/shed/hedge flags.
+    pub fn set_slow_threshold_us(&self, us: u64) {
+        self.slow_threshold_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Record one query's lane distributions (µs). Always-on tier.
+    pub fn record_lane(&self, lane: usize, queue_wait_us: u64, service_us: u64, e2e_us: u64) {
+        let l = &self.lanes[lane.min(NUM_LANES - 1)];
+        l.queue_wait_us.record(queue_wait_us);
+        l.service_us.record(service_us);
+        l.e2e_us.record(e2e_us);
+    }
+
+    /// Record one shard reply's network round-trip time (µs).
+    pub fn record_shard_net(&self, shard: usize, us: u64) {
+        if let Some(s) = self.shards.get(shard) {
+            s.net_us.record(us);
+        }
+    }
+
+    /// Record one shard reply's node-side scan time (µs).
+    pub fn record_shard_scan(&self, shard: usize, us: u64) {
+        if let Some(s) = self.shards.get(shard) {
+            s.scan_us.record(us);
+        }
+    }
+
+    /// Append a named span to a pending trace. No-op when `trace_id` is 0
+    /// or collection is off (or the trace already finished).
+    pub fn span(&self, trace_id: u64, stage: &'static str, start_ns: u64, end_ns: u64) {
+        if trace_id == 0 || !self.collect.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut p = self.pending.lock().unwrap();
+        if let Some(t) = p.get_mut(&trace_id) {
+            t.spans.push(Span { stage, start_ns, dur_ns: end_ns.saturating_sub(start_ns) });
+        }
+    }
+
+    /// Attach one node's scan span to a pending trace.
+    pub fn node_span(&self, trace_id: u64, span: NodeSpan) {
+        if trace_id == 0 || !self.collect.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut p = self.pending.lock().unwrap();
+        if let Some(t) = p.get_mut(&trace_id) {
+            t.nodes.push(span);
+        }
+    }
+
+    /// Mark a pending trace as hedged (the shard dispatcher fired a
+    /// second replica because the first was late).
+    pub fn note_hedge(&self, trace_id: u64) {
+        if trace_id == 0 || !self.collect.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut p = self.pending.lock().unwrap();
+        if let Some(t) = p.get_mut(&trace_id) {
+            t.hedged = true;
+        }
+    }
+
+    /// Finish a trace: record its flags and end-to-end time, and move it
+    /// into the slow ring when it was slow, partial, shed, or hedged.
+    /// Safe to call with `trace_id == 0` (untraced) — only the caller's
+    /// histograms (recorded separately) see that query.
+    pub fn finish(&self, trace_id: u64, lane: usize, e2e_us: u64, partial: bool, shed: bool) {
+        if trace_id == 0 {
+            return;
+        }
+        // Take the pending entry if collection assembled one; otherwise
+        // synthesize a span-less record so the ring still names the query.
+        let mut t = if self.collect.load(Ordering::Relaxed) {
+            self.pending.lock().unwrap().remove(&trace_id)
+        } else {
+            None
+        }
+        .unwrap_or(QueryTrace {
+            trace_id,
+            lane: lane.min(NUM_LANES - 1),
+            ..QueryTrace::default()
+        });
+        t.partial |= partial;
+        t.shed |= shed;
+        t.e2e_us = e2e_us;
+        let slow = e2e_us >= self.slow_threshold_us.load(Ordering::Relaxed);
+        t.cause = if slow {
+            "slow"
+        } else if t.shed {
+            "shed"
+        } else if t.partial {
+            "partial"
+        } else if t.hedged {
+            "hedged"
+        } else {
+            return; // Normal fast query: nothing to keep.
+        };
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.ring_cap {
+            ring.pop_front();
+        }
+        ring.push_back(t);
+    }
+
+    /// Snapshot one lane's distributions (µs).
+    pub fn lane_hists(&self, lane: usize) -> LaneHistStats {
+        let l = &self.lanes[lane.min(NUM_LANES - 1)];
+        LaneHistStats {
+            queue_wait_us: l.queue_wait_us.snapshot(),
+            service_us: l.service_us.snapshot(),
+            e2e_us: l.e2e_us.snapshot(),
+        }
+    }
+
+    /// Snapshot one shard's distributions (µs).
+    pub fn shard_hists(&self, shard: usize) -> ShardHistStats {
+        match self.shards.get(shard) {
+            Some(s) => {
+                ShardHistStats { net_us: s.net_us.snapshot(), scan_us: s.scan_us.snapshot() }
+            }
+            None => ShardHistStats::default(),
+        }
+    }
+
+    /// Number of shards the per-shard histograms cover.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Copy the slow-query ring, oldest first.
+    pub fn slow_ring(&self) -> Vec<QueryTrace> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The slow-query ring as a JSON document (`{"slow": [...]}`).
+    pub fn slow_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("slow", Json::Arr(self.slow_ring().iter().map(|t| t.to_json()).collect()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::MockClock;
+
+    fn tracer() -> (Arc<MockClock>, Tracer) {
+        let clock = Arc::new(MockClock::new(0));
+        let t = Tracer::new(Arc::clone(&clock) as Arc<dyn Clock>, 2);
+        (clock, t)
+    }
+
+    #[test]
+    fn mint_is_sequential_and_nonzero() {
+        let (_c, t) = tracer();
+        assert_eq!(t.mint(0), 1);
+        assert_eq!(t.mint(1), 2);
+        assert_eq!(t.mint(0), 3);
+    }
+
+    #[test]
+    fn spans_collect_only_when_enabled() {
+        let (_c, t) = tracer();
+        let id = t.mint(0);
+        t.span(id, "service", 0, 500);
+        t.set_slow_threshold_us(0); // everything is "slow"
+        t.finish(id, 0, 1, false, false);
+        let ring = t.slow_ring();
+        assert_eq!(ring.len(), 1);
+        assert!(ring[0].spans.is_empty(), "collection off: no spans kept");
+
+        t.set_collect(true);
+        let id2 = t.mint(1);
+        t.span(id2, "queue_wait", 100, 350);
+        t.span(id2, "service", 350, 1_350);
+        t.node_span(
+            id2,
+            NodeSpan { shard: 1, scan_ns: 900, comparisons: 42, tables: 3, partial: false, shed: false },
+        );
+        t.finish(id2, 1, 2, false, false);
+        let ring = t.slow_ring();
+        assert_eq!(ring.len(), 2);
+        let tr = &ring[1];
+        assert_eq!(tr.trace_id, id2);
+        assert_eq!(tr.lane, 1);
+        assert_eq!(
+            tr.spans,
+            vec![
+                Span { stage: "queue_wait", start_ns: 100, dur_ns: 250 },
+                Span { stage: "service", start_ns: 350, dur_ns: 1_000 },
+            ]
+        );
+        assert_eq!(tr.nodes.len(), 1);
+        assert_eq!(tr.nodes[0].comparisons, 42);
+    }
+
+    #[test]
+    fn ring_keeps_only_flagged_or_slow_traces_and_is_bounded() {
+        let (_c, t) = tracer();
+        t.set_slow_threshold_us(1_000);
+        // Fast and clean: dropped.
+        let a = t.mint(0);
+        t.finish(a, 0, 10, false, false);
+        assert!(t.slow_ring().is_empty());
+        // Partial: kept with cause.
+        let b = t.mint(0);
+        t.finish(b, 0, 10, true, false);
+        // Shed outranks partial.
+        let c = t.mint(0);
+        t.finish(c, 0, 10, true, true);
+        // Slow outranks everything.
+        let d = t.mint(0);
+        t.finish(d, 0, 5_000, false, false);
+        let causes: Vec<&str> = t.slow_ring().iter().map(|q| q.cause).collect();
+        assert_eq!(causes, vec!["partial", "shed", "slow"]);
+
+        // Bounded: old entries fall off the front.
+        for _ in 0..(DEFAULT_RING_CAP + 5) {
+            let id = t.mint(1);
+            t.finish(id, 1, 10, true, false);
+        }
+        let ring = t.slow_ring();
+        assert_eq!(ring.len(), DEFAULT_RING_CAP);
+        assert_eq!(ring.last().unwrap().lane, 1);
+    }
+
+    #[test]
+    fn hedge_cause_survives_to_the_ring() {
+        let (_c, t) = tracer();
+        t.set_collect(true);
+        let id = t.mint(0);
+        t.note_hedge(id);
+        t.finish(id, 0, 10, false, false);
+        let ring = t.slow_ring();
+        assert_eq!(ring.len(), 1);
+        assert!(ring[0].hedged);
+        assert_eq!(ring[0].cause, "hedged");
+    }
+
+    #[test]
+    fn lane_and_shard_hists_accumulate() {
+        let (_c, t) = tracer();
+        t.record_lane(0, 5, 100, 105);
+        t.record_lane(0, 7, 200, 207);
+        t.record_lane(1, 1000, 1, 1001);
+        t.record_shard_net(1, 250);
+        t.record_shard_scan(1, 90);
+        // Out-of-range shard indices are ignored, not a panic.
+        t.record_shard_net(99, 1);
+
+        let l0 = t.lane_hists(0);
+        assert_eq!(l0.queue_wait_us.count, 2);
+        assert_eq!(l0.queue_wait_us.sum, 12);
+        assert_eq!(l0.e2e_us.count, 2);
+        let l1 = t.lane_hists(1);
+        assert_eq!(l1.queue_wait_us.sum, 1000);
+        let s1 = t.shard_hists(1);
+        assert_eq!(s1.net_us.count, 1);
+        assert_eq!(s1.scan_us.sum, 90);
+        assert_eq!(t.shard_hists(0).net_us.count, 0);
+        assert_eq!(t.shard_hists(99), ShardHistStats::default());
+    }
+
+    #[test]
+    fn slow_json_shape() {
+        let (_c, t) = tracer();
+        t.set_collect(true);
+        let id = t.mint(0);
+        t.span(id, "service", 10, 20);
+        t.finish(id, 0, 10, true, false);
+        let j = t.slow_json();
+        let arr = j.get("slow").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("cause").and_then(|c| c.as_str()), Some("partial"));
+        assert_eq!(arr[0].get("lane").and_then(|c| c.as_str()), Some("monitor"));
+        let spans = arr[0].get("spans").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(spans[0].get("stage").and_then(|s| s.as_str()), Some("service"));
+        assert_eq!(spans[0].get("dur_ns").and_then(|d| d.as_u64()), Some(10));
+    }
+}

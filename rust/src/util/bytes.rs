@@ -17,6 +17,23 @@ pub enum CodecError {
     BadGeometry { items: u64, len: u64, dim: u64 },
 }
 
+impl CodecError {
+    /// Stable cause label for per-kind drop counters (the TCP server
+    /// attributes decode rejections by this, see
+    /// `runtime::service::note_decode_reject`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CodecError::Io(_) => "io",
+            CodecError::BadMagic { .. } => "bad_magic",
+            CodecError::BadVersion(_) => "bad_version",
+            CodecError::TooLong(..) => "too_long",
+            CodecError::BadUtf8 => "bad_utf8",
+            CodecError::BadTag(..) => "bad_tag",
+            CodecError::BadGeometry { .. } => "bad_geometry",
+        }
+    }
+}
+
 impl std::fmt::Display for CodecError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

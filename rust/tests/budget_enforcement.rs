@@ -330,7 +330,12 @@ fn remaining_budget_is_computed_at_dispatch_not_at_cut() {
     let clock = Arc::new(MockClock::new(0));
     let (evt_tx, evt_rx) = channel::<(Vec<f32>, Budget)>();
     let (gate_tx, gate_rx) = channel::<()>();
-    let dispatch = move |flat: Vec<f32>, nq: usize, budget: Budget, _class: Class| {
+    let dispatch = move |flat: Vec<f32>,
+                         nq: usize,
+                         budget: Budget,
+                         _class: Class,
+                         _probe: dslsh::lsh::probe::ProbeSpec,
+                         _trace: u64| {
         evt_tx.send((flat.clone(), budget)).unwrap();
         gate_rx.recv().unwrap();
         Ok((0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect())

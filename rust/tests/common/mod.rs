@@ -104,10 +104,22 @@ pub fn echo_result(qid: u64, share: f64) -> QueryResult {
 pub fn gated_echo(
     evt_tx: Sender<Vec<f32>>,
     gate_rx: Receiver<()>,
-) -> impl FnMut(Vec<f32>, usize, Budget, Class, ProbeSpec) -> Result<Vec<QueryResult>, ClusterError>
+) -> impl FnMut(
+    Vec<f32>,
+    usize,
+    Budget,
+    Class,
+    ProbeSpec,
+    u64,
+) -> Result<Vec<QueryResult>, ClusterError>
        + Send
        + 'static {
-    move |flat: Vec<f32>, nq: usize, _budget: Budget, _class: Class, _probe: ProbeSpec| {
+    move |flat: Vec<f32>,
+          nq: usize,
+          _budget: Budget,
+          _class: Class,
+          _probe: ProbeSpec,
+          _trace: u64| {
         evt_tx.send(flat.clone()).unwrap();
         gate_rx.recv().unwrap();
         Ok((0..nq).map(|i| echo_result(i as u64, flat[i] as f64)).collect())

@@ -1,0 +1,421 @@
+//! The observability subsystem under test: exact per-stage span durations
+//! on a frozen `MockClock` (no sleeps, no tolerances — span arithmetic is
+//! pinned to the nanosecond), bit-identity of traced vs untraced results
+//! over a real TCP cluster, slow-ring cause attribution (slow / shed /
+//! partial / hedged priority), the always-on per-shard histograms, the
+//! Prometheus scrape surface (`GET /metrics` must expose EVERY stats
+//! family), the slow-query debug endpoint, and the per-cause counters for
+//! requests the cluster would otherwise drop silently (TCP decode
+//! rejects, HTTP 4xxs).
+
+mod common;
+
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use common::*;
+use dslsh::coordinator::admission::{AdmissionConfig, AdmissionQueue, Class};
+use dslsh::coordinator::{Clock, MockClock, ReplicaSet};
+use dslsh::net::{serve_node, EdgeConfig, EdgeServer};
+use dslsh::runtime::service::decode_reject_counts;
+use dslsh::runtime::trace::{Span, Tracer};
+
+// ---------------------------------------------------------------------------
+// Exact span durations through admission (MockClock, zero tolerance)
+// ---------------------------------------------------------------------------
+
+/// Two queries through a traced admission queue on a frozen `MockClock`,
+/// the in-flight batch gated by the test: every span boundary is a clock
+/// value the test set explicitly, so queue-wait, service and e2e are
+/// asserted EXACTLY — to the nanosecond on spans, to the microsecond on
+/// histograms. The choreography is race-free because the clock only
+/// moves while the dispatcher is provably parked at the gate.
+#[test]
+fn admission_spans_are_exact_under_mock_clock() {
+    let clock = Arc::new(MockClock::new(0));
+    let tracer = Arc::new(Tracer::new(Arc::clone(&clock) as Arc<dyn Clock>, 1));
+    tracer.set_collect(true);
+    tracer.set_slow_threshold_us(1); // Everything lands in the ring.
+
+    let (evt_tx, evt_rx) = channel();
+    let (gate_tx, gate_rx) = channel();
+    let cfg = AdmissionConfig::new(1, 1).with_pipeline(1);
+    let q = AdmissionQueue::start_traced(cfg, gated_echo(evt_tx, gate_rx), Arc::clone(&tracer));
+
+    // A enqueues at t=0 and its cut starts dispatch at t=0 (the clock
+    // does not move until the dispatcher has reported the batch).
+    let ta = q.submit(&[0.5], FAR).unwrap();
+    assert_eq!(evt_rx.recv().unwrap(), vec![0.5]);
+
+    // B enqueues at t=7µs while A is in flight; its cut can only start
+    // once A resolves.
+    clock.set_ns(7_000);
+    let tb = q.submit(&[0.25], FAR).unwrap();
+
+    // A resolves at t=10µs: queue-wait 0, service 10µs, e2e 10µs. B's
+    // dispatch then starts at the same instant (the clock next moves
+    // only after B's batch is reported): queue-wait exactly 3µs.
+    clock.set_ns(10_000);
+    gate_tx.send(()).unwrap();
+    let ra = ta.wait().unwrap();
+    assert!(ra.positive_share == 0.5);
+    assert_eq!(evt_rx.recv().unwrap(), vec![0.25]);
+
+    // B resolves at t=25µs: service 15µs, e2e 18µs.
+    clock.set_ns(25_000);
+    gate_tx.send(()).unwrap();
+    let rb = tb.wait().unwrap();
+    assert!(rb.positive_share == 0.25);
+
+    // Lane histograms: exact sums and counts, in microseconds.
+    let h = tracer.lane_hists(Class::Monitor.idx());
+    assert_eq!((h.e2e_us.count, h.e2e_us.sum), (2, 28), "e2e 10 + 18");
+    assert_eq!((h.queue_wait_us.count, h.queue_wait_us.sum), (2, 3), "waits 0 + 3");
+    assert_eq!((h.service_us.count, h.service_us.sum), (2, 25), "service 10 + 15");
+
+    // The slow ring holds both traces, oldest first, with exact spans.
+    let ring = tracer.slow_ring();
+    assert_eq!(ring.len(), 2, "{ring:?}");
+    let a = &ring[0];
+    assert_eq!((a.trace_id, a.cause, a.e2e_us), (1, "slow", 10));
+    assert_eq!(
+        a.spans,
+        vec![
+            Span { stage: "queue_wait", start_ns: 0, dur_ns: 0 },
+            Span { stage: "service", start_ns: 0, dur_ns: 10_000 },
+        ]
+    );
+    let b = &ring[1];
+    assert_eq!((b.trace_id, b.cause, b.e2e_us), (2, "slow", 18));
+    assert_eq!(
+        b.spans,
+        vec![
+            Span { stage: "queue_wait", start_ns: 7_000, dur_ns: 3_000 },
+            Span { stage: "service", start_ns: 10_000, dur_ns: 15_000 },
+        ]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Traced == untraced over a real TCP cluster; shard histograms always on
+// ---------------------------------------------------------------------------
+
+/// Turning span collection on changes the wire frames (the trace id
+/// forces the budget frame) but must not change a single result bit.
+/// Shard-level scan/network histograms populate either way — they are
+/// the always-on tier and never depend on `set_collect`.
+#[test]
+fn traced_results_are_bit_identical_over_tcp() {
+    let c = corpus(160, 4, 23);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let baseline = reference_orchestrator(&c.data, &params, 2, 1);
+    let (orch, servers) = tcp_cluster(&c.data, &params, 2, 1);
+
+    // Phase 1: collection OFF (the default). Park the slow threshold at
+    // the ceiling so wall-clock hiccups cannot seed the ring.
+    let tracer = orch.tracer();
+    tracer.set_slow_threshold_us(u64::MAX);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let want = baseline.query(q).unwrap();
+        let got = orch.query(q).unwrap();
+        assert_bit_identical(&got, &want, &format!("untraced query {i}"));
+    }
+    assert!(tracer.slow_ring().is_empty(), "nothing slow, shed or partial yet");
+
+    // Phase 2: collection ON, threshold 0 — every query is ring-worthy,
+    // and every result is still bit-identical to the baseline.
+    tracer.set_collect(true);
+    tracer.set_slow_threshold_us(0);
+    for i in 0..c.queries.len() {
+        let q = c.queries.point(i);
+        let want = baseline.query(q).unwrap();
+        let got = orch.query(q).unwrap();
+        assert_bit_identical(&got, &want, &format!("traced query {i}"));
+    }
+
+    // Every traced query produced a full trace: one NodeSpan per shard,
+    // tables from the actual scan, nonzero dense trace ids.
+    let ring = tracer.slow_ring();
+    assert_eq!(ring.len(), c.queries.len(), "{ring:?}");
+    for t in &ring {
+        assert!(t.trace_id > 0);
+        assert_eq!(t.cause, "slow");
+        assert!(t.spans.iter().any(|s| s.stage == "service"), "{t:?}");
+        let mut shards: Vec<usize> = t.nodes.iter().map(|n| n.shard).collect();
+        shards.sort_unstable();
+        assert_eq!(shards, vec![0, 1], "one node span per shard: {t:?}");
+        for n in &t.nodes {
+            assert!(n.tables >= 1, "scan covered at least one table: {n:?}");
+            assert!(!n.shed, "healthy cluster sheds nothing");
+        }
+    }
+
+    // Always-on tier: both phases recorded into the shard histograms —
+    // single-replica shards cannot hedge or fail over, so exactly one
+    // record per query per shard per phase.
+    let per_shard = 2 * c.queries.len() as u64;
+    for shard in 0..tracer.num_shards() {
+        let h = tracer.shard_hists(shard);
+        assert_eq!(h.scan_us.count, per_shard, "shard {shard} scan records");
+        assert_eq!(h.net_us.count, per_shard, "shard {shard} net records");
+    }
+
+    drop(orch);
+    for s in servers {
+        s.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cause attribution: shed through a dead shard, hedged via the tracer API
+// ---------------------------------------------------------------------------
+
+/// A query against a cluster whose second shard is dead lands in the
+/// slow ring attributed to "shed" (the synthesized shed reply), with the
+/// healthy shard's node span attached and the dead shard's absent.
+#[test]
+fn dead_shard_traces_are_attributed_to_shed() {
+    let c = corpus(96, 1, 31);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let parts = shard_parts(&c.data, 2);
+    let clock = Arc::new(MockClock::new(0));
+    let switch = FaultSwitch::new();
+    switch.set(|p| p.fail_requests = true);
+
+    let sets = vec![
+        ReplicaSet::new(0, vec![boxed(spawn_replica(&parts[0].1, 0, parts[0].0, &params, 1))]),
+        ReplicaSet::new(
+            1,
+            vec![boxed(FaultyNode::new(
+                spawn_replica(&parts[1].1, 1, parts[1].0, &params, 1),
+                Arc::clone(&switch),
+            ))],
+        ),
+    ];
+    let orch = replicated_orch(sets, params.k, quiet_failover(), &clock);
+    let tracer = orch.tracer();
+    tracer.set_collect(true);
+
+    let r = orch.query(c.queries.point(0)).unwrap();
+    assert!(r.shed_nodes >= 1, "dead shard must be shed: {r:?}");
+
+    // Frozen clock → e2e is 0µs, far under the slow threshold: the ring
+    // entry is there because of the shed, and says so.
+    let ring = tracer.slow_ring();
+    assert_eq!(ring.len(), 1, "{ring:?}");
+    let t = &ring[0];
+    assert_eq!((t.cause, t.shed, t.e2e_us), ("shed", true, 0));
+    assert_eq!(t.nodes.len(), 1, "only the healthy shard replied: {t:?}");
+    assert_eq!(t.nodes[0].shard, 0);
+    assert!(!t.nodes[0].shed);
+}
+
+/// `finish` ranks causes slow > shed > partial > hedged, and an
+/// unremarkable fast query never enters the ring at all.
+#[test]
+fn finish_ranks_causes_and_drops_clean_queries() {
+    let clock = Arc::new(MockClock::new(0));
+    let tracer = Tracer::new(clock as Arc<dyn Clock>, 1);
+    tracer.set_collect(true);
+
+    // Clean and fast: no ring entry.
+    let id = tracer.mint(0);
+    tracer.finish(id, 0, 5, false, false);
+    assert!(tracer.slow_ring().is_empty());
+
+    // Hedged only.
+    let id = tracer.mint(0);
+    tracer.note_hedge(id);
+    tracer.finish(id, 0, 5, false, false);
+    // Partial beats hedged.
+    let id = tracer.mint(1);
+    tracer.note_hedge(id);
+    tracer.finish(id, 1, 5, true, false);
+    // Shed beats partial.
+    let id = tracer.mint(0);
+    tracer.finish(id, 0, 5, true, true);
+    // Slow beats everything.
+    tracer.set_slow_threshold_us(1);
+    let id = tracer.mint(0);
+    tracer.finish(id, 0, 5, true, true);
+
+    let ring = tracer.slow_ring();
+    let causes: Vec<&str> = ring.iter().map(|t| t.cause).collect();
+    assert_eq!(causes, vec!["hedged", "partial", "shed", "slow"]);
+    assert!(ring[0].hedged && !ring[0].partial && !ring[0].shed);
+}
+
+// ---------------------------------------------------------------------------
+// The scrape surface: /metrics, /v1/debug/slow, /v1/stats percentiles
+// ---------------------------------------------------------------------------
+
+/// Value of the first exposition line starting with `prefix`.
+fn metric_value(body: &str, prefix: &str) -> u64 {
+    let line = body
+        .lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no metric line starts with {prefix:?}"));
+    let v = line.rsplit(' ').next().unwrap();
+    v.parse::<f64>().unwrap_or_else(|e| panic!("bad value in {line:?}: {e}")) as u64
+}
+
+/// One scrape of `GET /metrics` exposes every family the cluster keeps:
+/// edge, admission queue, cuts, lanes, ingest, failover, the tracer's
+/// per-lane and per-shard histograms, and both dropped-input counters —
+/// with non-empty histogram buckets after a served workload. The stats
+/// document grows percentiles, and `/v1/debug/slow` dumps the ring.
+#[test]
+fn metrics_scrape_exposes_every_family() {
+    let c = corpus(160, 4, 37);
+    let params = lsh_params(&c.data, 8, 4, 5);
+    let mut orch = reference_orchestrator(&c.data, &params, 2, 1);
+    orch.enable_admission(AdmissionConfig::new(c.data.dim, 1));
+    let orch = Arc::new(orch);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let edge = EdgeServer::start(Arc::clone(&orch), listener, EdgeConfig::new(c.data.dim)).unwrap();
+    let a = edge.addr();
+
+    // Ring-worthy traffic: collect spans and call everything slow.
+    let tracer = orch.tracer();
+    tracer.set_collect(true);
+    tracer.set_slow_threshold_us(0);
+
+    let query_body = |q: &[f32]| {
+        let coords: Vec<String> = q.iter().map(|v| format!("{v}")).collect();
+        format!("{{\"point\":[{}]}}", coords.join(","))
+    };
+    for i in 0..c.queries.len() {
+        let r = http_post(a, "/v1/query", &query_body(c.queries.point(i)));
+        assert_eq!(r.status, 200, "query {i}: {}", r.body);
+    }
+    // One hostile request the edge rejects — it must be COUNTED, not
+    // silently dropped: a POST the edge cannot frame (no Content-Length).
+    let r = http_send_raw(a, b"POST /v1/query HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(r.status, 411);
+    // The edge records its counters after the response is on the wire;
+    // wait for them (the outcome is deterministic, the instant is not).
+    wait_until(|| edge.stats().query.requests == c.queries.len() as u64, "edge query counters");
+
+    // The stats document now carries distribution summaries per endpoint.
+    let s = http_get(a, "/v1/stats");
+    assert_eq!(s.status, 200);
+    let eq = s.json().get("edge").unwrap().get("query").unwrap().clone();
+    assert_eq!(eq.get("requests").unwrap().as_u64(), Some(c.queries.len() as u64));
+    for key in ["latency_us_mean", "latency_us_p50", "latency_us_p99"] {
+        assert!(eq.get(key).is_some(), "stats edge.query missing {key}: {}", s.body);
+    }
+
+    // The scrape itself.
+    let m = http_get(a, "/metrics");
+    assert_eq!(m.status, 200);
+    assert_eq!(m.header("content-type"), Some("text/plain; version=0.0.4"));
+    let body = &m.body;
+    for family in [
+        "dslsh_edge_requests_total",
+        "dslsh_edge_errors_total",
+        "dslsh_edge_latency_us",
+        "dslsh_admission_depth",
+        "dslsh_admission_high_water",
+        "dslsh_admission_submitted_total",
+        "dslsh_admission_completed_total",
+        "dslsh_admission_rejected_full_total",
+        "dslsh_admission_cuts_total",
+        "dslsh_lane_depth",
+        "dslsh_lane_submitted_total",
+        "dslsh_lane_dispatched_total",
+        "dslsh_lane_overruns_total",
+        "dslsh_lane_partials_total",
+        "dslsh_lane_sheds_total",
+        "dslsh_lane_inserted_total",
+        "dslsh_lane_rejected_full_total",
+        "dslsh_lane_probes",
+        "dslsh_lane_ewma_comparisons",
+        "dslsh_ingest_batches_total",
+        "dslsh_ingest_points_total",
+        "dslsh_ingest_sealed_segments",
+        "dslsh_failover_hedges_total",
+        "dslsh_failover_hedge_wins_total",
+        "dslsh_failover_failovers_total",
+        "dslsh_failover_synthesized_sheds_total",
+        "dslsh_failover_heartbeats_total",
+        "dslsh_failover_reconnect_attempts_total",
+        "dslsh_failover_reconnects_total",
+        "dslsh_failover_down_transitions_total",
+        "dslsh_replicas_down",
+        "dslsh_lane_queue_wait_us",
+        "dslsh_lane_service_us",
+        "dslsh_lane_e2e_us",
+        "dslsh_shard_net_us",
+        "dslsh_shard_scan_us",
+        "dslsh_tcp_decode_rejects_total",
+        "dslsh_http_rejects_total",
+    ] {
+        assert!(body.contains(&format!("# TYPE {family} ")), "missing family {family}");
+    }
+
+    // Non-empty buckets where the workload guarantees them.
+    let nq = c.queries.len() as u64;
+    assert_eq!(metric_value(body, "dslsh_edge_requests_total{endpoint=\"query\"}"), nq);
+    assert_eq!(metric_value(body, "dslsh_lane_e2e_us_count{lane=\"monitor\"}"), nq);
+    assert!(body.contains("dslsh_lane_e2e_us_bucket{lane=\"monitor\",le=\"+Inf\"}"));
+    assert_eq!(metric_value(body, "dslsh_shard_scan_us_count{shard=\"0\"}"), nq);
+    assert_eq!(metric_value(body, "dslsh_shard_scan_us_count{shard=\"1\"}"), nq);
+    assert!(
+        metric_value(body, "dslsh_http_rejects_total{code=\"length-required\"}") >= 1,
+        "the rejected POST must be counted"
+    );
+
+    // The slow ring over HTTP: every served query is in it.
+    let slow = http_get(a, "/v1/debug/slow");
+    assert_eq!(slow.status, 200);
+    let entries = slow.json().get("slow").unwrap().as_arr().unwrap().len();
+    assert_eq!(entries, c.queries.len(), "{}", slow.body);
+
+    // Wrong method on the scrape surfaces is a 405, and the scrape
+    // endpoint's own traffic shows up in the next scrape.
+    assert_eq!(http_post(a, "/metrics", "{}").status, 405);
+    wait_until(|| edge.stats().metrics.requests >= 3, "metrics endpoint counters");
+    let m2 = http_get(a, "/metrics");
+    assert!(metric_value(&m2.body, "dslsh_edge_requests_total{endpoint=\"metrics\"}") >= 3);
+}
+
+// ---------------------------------------------------------------------------
+// Silently-dropped inputs are counted: TCP decode rejects
+// ---------------------------------------------------------------------------
+
+/// Garbage on a node port tears the connection down (that contract is
+/// tcp.rs's), but the drop is attributed: the ASCII length prefix decodes
+/// to ~1.7 GB, past `MAX_FRAME`, so the process-wide decode-reject counter
+/// gains a `too_long` entry the scrape can render.
+#[test]
+fn tcp_decode_rejects_are_counted_by_kind() {
+    let before: u64 = decode_reject_counts()
+        .iter()
+        .filter(|(k, _)| *k == "too_long")
+        .map(|&(_, v)| v)
+        .sum();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // serve_node propagates the decode failure as Err — expected here.
+    let server = std::thread::spawn(move || serve_node(&listener, None).is_err());
+
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(b"definitely not a dslsh frame").unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    assert!(server.join().unwrap(), "garbage build frame must error out");
+
+    let after: u64 = decode_reject_counts()
+        .iter()
+        .filter(|(k, _)| *k == "too_long")
+        .map(|&(_, v)| v)
+        .sum();
+    assert!(after > before, "decode reject must be counted ({before} -> {after})");
+}

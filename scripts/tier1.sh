@@ -60,6 +60,18 @@ cargo test -q --test multiprobe
 # ranged, cancellable) and through SlshIndex/LiveIndex end to end, plus
 # tail-dim property checks against the naive oracle.
 cargo test -q --test simd_parity
+# observability holds the tracing/metrics contract (PR 10): exact span
+# durations under MockClock (no tolerances), traced-vs-untraced result
+# bit-identity over a live TCP cluster, slow-ring cause attribution
+# (slow/shed/partial/hedged priority), the `/metrics` scrape battery
+# (every stats family present, histograms populated), and the per-cause
+# counters for otherwise silently-dropped inputs (TCP decode rejects,
+# HTTP parser 4xxs). The runtime::hist/runtime::trace lib tests pin the
+# power-of-two bucket math, snapshot merge/percentiles, and the tracer's
+# ring/pending lifecycle.
+cargo test -q --test observability
+cargo test -q --lib runtime::hist
+cargo test -q --lib runtime::trace
 cargo test -q --lib util::json
 cargo test -q --lib coordinator::admission
 cargo test -q --lib lsh::probe
@@ -83,3 +95,7 @@ cargo bench --bench tradeoff -- --smoke
 # bit-identical to scalar on every (metric, dim) cell and refreshes the
 # BENCH_engine.json perf-trajectory record.
 cargo bench --bench engine_ablation -- --smoke
+# trace_overhead --smoke asserts span collection is bit-identical to the
+# untraced path on a live cluster, measures the observability primitives,
+# and refreshes the BENCH_observability.json perf-trajectory record.
+cargo bench --bench trace_overhead -- --smoke
